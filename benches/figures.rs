@@ -1,0 +1,18 @@
+// Bench: wall-clock of regenerating every paper table/figure at the quick
+// profile — the "one bench per table/figure" harness. Run with defaults via
+// `lpgd reproduce <id>` for full fidelity.
+
+include!("harness.rs");
+
+use lpgd::coordinator::experiments::{run_experiment, ExpCtx, EXPERIMENTS};
+
+fn main() {
+    let mut ctx = ExpCtx::quick();
+    ctx.out_dir = std::env::temp_dir().join("lpgd_bench_figures").to_string_lossy().into_owned();
+    println!("-- per-figure regeneration cost (quick profile) --");
+    for (id, _) in EXPERIMENTS {
+        bench(&format!("reproduce {id}"), 0, || {
+            run_experiment(id, &ctx).expect("experiment failed");
+        });
+    }
+}

@@ -1,0 +1,95 @@
+// Bench: full GD-step cost per problem class, plus the sigma1-model
+// ablation (chop-style round-after-op vs strict per-op rounding).
+
+include!("harness.rs");
+
+use lpgd::data::synth;
+use lpgd::fp::{FpFormat, LpCtx, Rng, Rounding};
+use lpgd::gd::engine::{GdConfig, GdEngine, GradModel, StepSchemes};
+use lpgd::problems::{Mlr, Problem, Quadratic, TwoLayerNn};
+
+fn main() {
+    let schemes = StepSchemes::uniform(Rounding::Sr);
+
+    println!("-- quadratic Setting I (diag, n=1000): one GD step --");
+    {
+        let (p, x0, t) = Quadratic::setting1(1000);
+        let mut cfg = GdConfig::new(FpFormat::BFLOAT16, schemes, t, 1);
+        cfg.seed = 0;
+        let mut e = GdEngine::new(cfg, &p, &x0);
+        bench("gd_step quad diag n=1000", 1000, || {
+            e.step();
+        });
+    }
+
+    println!("-- quadratic Setting II (dense, n=500): one GD step --");
+    {
+        let (p, x0, t) = Quadratic::setting2(500, 0);
+        let mut cfg = GdConfig::new(FpFormat::BFLOAT16, schemes, t, 1);
+        cfg.seed = 0;
+        let mut e = GdEngine::new(cfg, &p, &x0);
+        bench("gd_step quad dense n=500", 500 * 500, || {
+            e.step();
+        });
+    }
+
+    println!("-- MLR full-batch epoch (4000x196, C=10) --");
+    {
+        let data = synth::generate(4000, 14, 0);
+        let p = Mlr::new(data, 10);
+        let x0 = vec![0.0; p.dim()];
+        let mut cfg = GdConfig::new(FpFormat::BINARY8, schemes, 0.5, 1);
+        cfg.seed = 0;
+        let mut e = GdEngine::new(cfg, &p, &x0);
+        bench("gd_step mlr 4000x196", 4000 * 196 * 10, || {
+            e.step();
+        });
+    }
+
+    println!("-- NN epoch (1200x196, H=100) --");
+    {
+        let data = synth::generate(6000, 14, 1).filter_classes(&[3, 8]);
+        let p = TwoLayerNn::new(data, 100);
+        let x0 = p.init_params(0);
+        let mut cfg = GdConfig::new(FpFormat::BINARY8, schemes, 0.09375, 1);
+        cfg.seed = 0;
+        let mut e = GdEngine::new(cfg, &p, &x0);
+        bench("gd_step nn 1200x196 h=100", 1200 * 196 * 100, || {
+            e.step();
+        });
+    }
+
+    println!("-- ablation: sigma1 model (dense quad n=300) --");
+    {
+        let (p, x0, _) = Quadratic::setting2(300, 0);
+        let mut g = vec![0.0; 300];
+        let mut ctx = LpCtx::new(FpFormat::BFLOAT16, Rounding::Sr, Rng::new(0));
+        bench("gradient round-after-op (chop-style)", 300 * 300, || {
+            p.gradient_rounded(&x0, &mut ctx, &mut g);
+        });
+        bench("gradient strict per-op", 300 * 300, || {
+            p.gradient_per_op(&x0, &mut ctx, &mut g);
+        });
+        bench("gradient exact (f64)", 300 * 300, || {
+            p.gradient_exact(&x0, &mut g);
+        });
+    }
+
+    println!("-- ablation: GradModel end-to-end (MLR 1000x196, 1 epoch) --");
+    {
+        let data = synth::generate(1000, 14, 2);
+        let p = Mlr::new(data, 10);
+        let x0 = vec![0.0; p.dim()];
+        for (name, gm) in [
+            ("RoundAfterOp", GradModel::RoundAfterOp),
+            ("Exact", GradModel::Exact),
+        ] {
+            let mut cfg = GdConfig::new(FpFormat::BINARY8, schemes, 0.5, 1);
+            cfg.grad_model = gm;
+            let mut e = GdEngine::new(cfg, &p, &x0);
+            bench(&format!("mlr epoch grad_model={name}"), 1000 * 196 * 10, || {
+                e.step();
+            });
+        }
+    }
+}

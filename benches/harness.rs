@@ -1,0 +1,42 @@
+// Minimal bench harness (criterion is not vendored in this offline image):
+// warmup + timed iterations, reporting mean/min ns per op and throughput.
+// Used by every bench target via `include!`.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+}
+
+/// Time `f` (which should perform `elems` logical elements of work) until
+/// ~0.5 s of samples or `max_iters`, whichever first.
+pub fn bench<F: FnMut()>(name: &str, elems: u64, mut f: F) -> BenchResult {
+    // Warmup.
+    for _ in 0..3 {
+        f();
+    }
+    let mut times = Vec::new();
+    let budget = std::time::Duration::from_millis(500);
+    let started = Instant::now();
+    while started.elapsed() < budget && times.len() < 1000 {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult { name: name.to_string(), iters: times.len() as u32, mean_ns: mean, min_ns: min };
+    let throughput = if elems > 0 {
+        format!("  {:>9.2} Melem/s", elems as f64 / (mean / 1e9) / 1e6)
+    } else {
+        String::new()
+    };
+    println!(
+        "{:<44} {:>12.0} ns/iter (min {:>12.0}) x{:<4}{}",
+        r.name, r.mean_ns, r.min_ns, r.iters, throughput
+    );
+    r
+}

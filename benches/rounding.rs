@@ -1,0 +1,72 @@
+//! Bench: the rounding hot path (Layer-3 side of the paper's kernel).
+//! Regenerates the per-scheme cost table in EXPERIMENTS.md §Perf.
+
+include!("harness.rs");
+
+use lpgd::fp::{round, round_slice, round_slice_with, FpFormat, Rng, Rounding};
+
+fn main() {
+    let fmt = FpFormat::BINARY8;
+    let n = 1 << 16;
+    let mut rng = Rng::new(0);
+    let xs: Vec<f64> = (0..n).map(|_| rng.normal() * 3.0).collect();
+    let vs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+    println!("-- scalar rounding, binary8, {n} elements per iter --");
+    for mode in [
+        Rounding::RoundNearestEven,
+        Rounding::RoundDown,
+        Rounding::Sr,
+        Rounding::SrEps(0.25),
+        Rounding::SignedSrEps(0.25),
+    ] {
+        let mut r = Rng::new(1);
+        let mut buf = xs.clone();
+        bench(&format!("round_slice {}", mode.label()), n as u64, || {
+            buf.copy_from_slice(&xs);
+            round_slice(&fmt, mode, &mut buf, &mut r);
+        });
+    }
+
+    println!("-- steered signed-SR_eps (per-element v) --");
+    {
+        let mut r = Rng::new(2);
+        let mut buf = xs.clone();
+        bench("round_slice_with signed-SR_eps(0.25)", n as u64, || {
+            buf.copy_from_slice(&xs);
+            round_slice_with(&fmt, Rounding::SignedSrEps(0.25), &mut buf, &vs, &mut r);
+        });
+    }
+
+    println!("-- bfloat16 vs binary8 (same scheme) --");
+    for fmt2 in [FpFormat::BINARY8, FpFormat::BFLOAT16, FpFormat::BINARY16] {
+        let mut r = Rng::new(3);
+        let mut buf = xs.clone();
+        bench(&format!("round_slice SR {}", fmt2.name()), n as u64, || {
+            buf.copy_from_slice(&xs);
+            round_slice(&fmt2, Rounding::Sr, &mut buf, &mut r);
+        });
+    }
+
+    println!("-- ablation: representable fast-path (values already in F) --");
+    {
+        let mut r = Rng::new(4);
+        let mut inf_vals = xs.clone();
+        round_slice(&fmt, Rounding::RoundNearestEven, &mut inf_vals, &mut r);
+        let mut buf = inf_vals.clone();
+        bench("round_slice SR on representable input", n as u64, || {
+            buf.copy_from_slice(&inf_vals);
+            round_slice(&fmt, Rounding::Sr, &mut buf, &mut r);
+        });
+    }
+
+    println!("-- single value micro (ns/round) --");
+    {
+        let mut r = Rng::new(5);
+        let mut acc = 0.0;
+        bench("round scalar SR", 1, || {
+            acc += round(&fmt, Rounding::Sr, 1.1, &mut r);
+        });
+        std::hint::black_box(acc);
+    }
+}

@@ -1,0 +1,96 @@
+// Bench: PJRT-artifact hot path vs the Rust-native engine — the
+// rust-native-vs-artifact ablation called out in DESIGN.md §7.
+
+include!("harness.rs");
+
+use lpgd::data::synth;
+use lpgd::fp::{round_slice, FpFormat, Rng, Rounding};
+use lpgd::problems::{Mlr, Problem};
+use lpgd::runtime::{Arg, Runtime, MLR_SPEC, QUANTIZE_SPEC};
+
+fn main() {
+    let mut rt = match Runtime::cpu("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping PJRT benches (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    println!("platform: {}", rt.platform());
+
+    println!("-- quantizer: PJRT artifact vs Rust substrate ({} elems) --", QUANTIZE_SPEC.params);
+    {
+        let n = QUANTIZE_SPEC.params;
+        let mut rng = Rng::new(0);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal() * 2.0).collect();
+        let u: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        {
+            let exe = rt.load(QUANTIZE_SPEC.file).unwrap();
+            bench("quantize via PJRT (incl. marshal)", n as u64, || {
+                let out = exe
+                    .run_f32(&[
+                        Arg::f32_from_f64(&x, &[n as i64]),
+                        Arg::f32_from_f64(&u, &[n as i64]),
+                        Arg::f32_from_f64(&x, &[n as i64]),
+                        Arg::ScalarI32(1),
+                        Arg::ScalarF32(0.0),
+                    ])
+                    .unwrap();
+                std::hint::black_box(&out[0]);
+            });
+        }
+        let mut buf = x.clone();
+        let mut r2 = Rng::new(1);
+        bench("quantize via Rust substrate", n as u64, || {
+            buf.copy_from_slice(&x);
+            round_slice(&FpFormat::BINARY8, Rounding::Sr, &mut buf, &mut r2);
+        });
+    }
+
+    println!("-- MLR train step: PJRT artifact vs Rust engine (batch 256) --");
+    {
+        let spec = MLR_SPEC;
+        let n = spec.batch;
+        let data = synth::generate(n, 14, 3);
+        let mut xb = Vec::with_capacity(n * spec.features);
+        let mut yb = vec![0.0f64; n * spec.classes];
+        for i in 0..n {
+            xb.extend_from_slice(data.row(i));
+            yb[i * spec.classes + data.labels[i] as usize] = 1.0;
+        }
+        let params = vec![0.0f64; spec.params];
+        let mut rng = Rng::new(4);
+        let uni: Vec<f64> = (0..3 * spec.params).map(|_| rng.uniform()).collect();
+        {
+            let exe = rt.load(spec.file).unwrap();
+            bench("mlr_step via PJRT (incl. marshal)", (n * spec.features * spec.classes) as u64, || {
+                let out = exe
+                    .run_f32(&[
+                        Arg::f32_from_f64(&params, &[spec.params as i64]),
+                        Arg::f32_from_f64(&xb, &[n as i64, spec.features as i64]),
+                        Arg::f32_from_f64(&yb, &[n as i64, spec.classes as i64]),
+                        Arg::f32_from_f64(&uni, &[3, spec.params as i64]),
+                        Arg::ScalarF32(0.5),
+                        Arg::ScalarF32(0.0),
+                        Arg::I32(vec![1, 1, 1], vec![3]),
+                    ])
+                    .unwrap();
+                std::hint::black_box(&out[0]);
+            });
+        }
+        // Rust-native equivalent: one full-batch gradient + rounded update.
+        let p = Mlr::new(data, spec.classes);
+        let x0 = vec![0.0; p.dim()];
+        let mut cfg = lpgd::gd::engine::GdConfig::new(
+            FpFormat::BINARY8,
+            lpgd::gd::engine::StepSchemes::uniform(Rounding::Sr),
+            0.5,
+            1,
+        );
+        cfg.seed = 0;
+        let mut e = lpgd::gd::engine::GdEngine::new(cfg, &p, &x0);
+        bench("mlr_step via Rust engine", (n * spec.features * spec.classes) as u64, || {
+            e.step();
+        });
+    }
+}

@@ -1,0 +1,65 @@
+//! Figure-3 style study on the quadratic Setting II: binary32 baseline vs
+//! bfloat16 with SR and with signed-SR_eps(0.4), against the Theorem-2 bound.
+//!
+//! Run: `cargo run --release --example quadratic_convergence -- [n] [steps]`
+
+use lpgd::fp::{FpFormat, Rounding};
+use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::gd::theory;
+use lpgd::problems::{Problem, Quadratic};
+use lpgd::util::table::sparkline;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let steps: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(1500);
+    let (p, x0, t) = Quadratic::setting2(n, 0);
+    let lip = p.lipschitz().unwrap();
+    println!("Setting II: dense A in R^{n}x{n}, spectrum 1..{n}, t = 1/L = {t}");
+
+    let run = |fmt: FpFormat, schemes: StepSchemes, seed: u64| {
+        let mut cfg = GdConfig::new(fmt, schemes, t, steps);
+        cfg.seed = seed;
+        let mut e = GdEngine::new(cfg, &p, &x0);
+        let tr = e.run(None);
+        (tr, e.x)
+    };
+
+    let (base, _) = run(
+        FpFormat::BINARY32,
+        StepSchemes::uniform(Rounding::RoundNearestEven),
+        0,
+    );
+    let (sr, x_sr) = run(FpFormat::BFLOAT16, StepSchemes::uniform(Rounding::Sr), 1);
+    let (sg, x_sg) = run(
+        FpFormat::BFLOAT16,
+        StepSchemes { grad: Rounding::Sr, mul: Rounding::Sr, sub: Rounding::SignedSrEps(0.4) },
+        1,
+    );
+
+    let dist0 = {
+        let d = lpgd::fp::linalg::exact::sub(&x0, p.optimum().unwrap());
+        lpgd::fp::linalg::exact::norm2(&d)
+    };
+    let logs = |v: &[f64]| -> Vec<f64> { v.iter().map(|x| x.max(1e-30).log10()).collect() };
+    println!("\nlog10 f(x_k) over {steps} iterations:");
+    println!("  thm2 bound    {}", sparkline(&logs(&(0..steps).map(|k| theory::theorem2_bound(lip, t, k, dist0)).collect::<Vec<_>>()), 60));
+    println!("  binary32 RN   {}", sparkline(&logs(&base.objective_series()), 60));
+    println!("  bf16 SR       {}", sparkline(&logs(&sr.objective_series()), 60));
+    println!("  bf16 signed   {}", sparkline(&logs(&sg.objective_series()), 60));
+    println!(
+        "\nfinal f: binary32={:.3e}  SR={:.3e}  signed-SR_eps(0.4)={:.3e}",
+        base.final_f(),
+        sr.final_f(),
+        sg.final_f()
+    );
+    let rel = |x: &[f64]| {
+        let d = lpgd::fp::linalg::exact::sub(x, p.optimum().unwrap());
+        lpgd::fp::linalg::exact::norm2(&d) / lpgd::fp::linalg::exact::norm2(p.optimum().unwrap())
+    };
+    println!(
+        "relative error ||x-x*||/||x*||: SR={:.3}  signed={:.3}   (paper fig3b: 1.50 vs 0.12)",
+        rel(&x_sr),
+        rel(&x_sg)
+    );
+}

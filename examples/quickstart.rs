@@ -1,0 +1,64 @@
+//! Quickstart: the library in 60 lines.
+//!
+//! 1. Round values into binary8 with each scheme and see the bias.
+//! 2. Run low-precision GD on a tiny quadratic and watch RN stagnate while
+//!    SR and signed-SRε keep converging (the paper's core story).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use lpgd::fp::{expected_round, FpFormat, Rng, Rounding};
+use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::problems::Quadratic;
+
+fn main() {
+    let fmt = FpFormat::BINARY8; // E5M2: u = 2^-3
+    println!("binary8: u={}, x_max={}", fmt.unit_roundoff(), fmt.x_max());
+
+    // --- 1. rounding one value -------------------------------------------
+    let x = 1.1; // sits between 1.0 and 1.25 in binary8
+    let (lo, hi) = fmt.floor_ceil(x);
+    println!("\nx = {x} has binary8 neighbors [{lo}, {hi}]");
+    for mode in [
+        Rounding::RoundNearestEven,
+        Rounding::Sr,
+        Rounding::SrEps(0.25),
+        Rounding::SignedSrEps(0.25), // steered by v = x here
+    ] {
+        let e = expected_round(&fmt, mode, x, x);
+        println!("  {:<22} E[fl(x)] = {e:<8} bias = {:+.4}", mode.label(), e - x);
+    }
+
+    // --- 2. GD in binary8: RN stagnates, stochastic schemes do not -------
+    // f(x) = (x - 1024)^2, start far away at x0 = 1, t = 0.05 (paper 3.2).
+    let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+    println!("\nGD on f(x)=(x-1024)^2 in binary8, 120 steps from x0=1:");
+    for (name, schemes) in [
+        ("RN", StepSchemes::uniform(Rounding::RoundNearestEven)),
+        ("SR", StepSchemes::uniform(Rounding::Sr)),
+        (
+            "SR + signed-SR_eps(0.25) for (8c)",
+            StepSchemes { grad: Rounding::Sr, mul: Rounding::Sr, sub: Rounding::SignedSrEps(0.25) },
+        ),
+    ] {
+        let mut cfg = GdConfig::new(fmt, schemes, 0.05, 120);
+        cfg.seed = 7;
+        let mut engine = GdEngine::new(cfg, &p, &[1.0]);
+        let trace = engine.run(None);
+        let onset = trace
+            .stagnation_onset()
+            .map(|k| format!("stagnated at k={k}"))
+            .unwrap_or_else(|| "no stagnation".into());
+        println!(
+            "  {name:<34} final x = {:<8} f = {:<12.4} {onset}",
+            engine.x[0],
+            trace.final_f()
+        );
+    }
+
+    // --- 3. a taste of the RNG-stream discipline -------------------------
+    let root = Rng::new(42);
+    let mut s1 = root.fork("demo", 0);
+    let mut s2 = root.fork("demo", 1);
+    println!("\nindependent streams: {:.4} vs {:.4}", s1.uniform(), s2.uniform());
+    println!("\nNext: `cargo run --release --example quadratic_convergence`");
+}

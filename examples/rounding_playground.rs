@@ -1,0 +1,43 @@
+//! Rounding playground: print Figure-1-style expectation curves and verify
+//! the paper's Lemma 1 bound numerically for any format from the CLI.
+//!
+//! Run: `cargo run --release --example rounding_playground -- [bfloat16]`
+
+use lpgd::fp::{expected_round, FpFormat, Rounding};
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "binary8".into());
+    let fmt = FpFormat::by_name(&name).expect("unknown format");
+    let u = fmt.unit_roundoff();
+    println!("format {name}: u = {u}");
+
+    // E[fl(y)] across the gap (1, su(1)) — the paper's Figure 1 content.
+    let lo = 1.0;
+    let hi = fmt.successor(1.0);
+    println!("\n y (in ({lo}, {hi}))   RN        SR        SR_eps(.25) signed(.25, v=+1)");
+    for i in 1..10 {
+        let y = lo + (hi - lo) * i as f64 / 10.0;
+        println!(
+            " {y:<18.6} {:<9.5} {:<9.5} {:<11.5} {:<9.5}",
+            expected_round(&fmt, Rounding::RoundNearestEven, y, y),
+            expected_round(&fmt, Rounding::Sr, y, y),
+            expected_round(&fmt, Rounding::SrEps(0.25), y, y),
+            expected_round(&fmt, Rounding::SignedSrEps(0.25), y, 1.0),
+        );
+    }
+
+    // Lemma 1: 0 <= E[delta^{SR_eps}] <= 2*eps*u over a wide magnitude sweep.
+    let eps = 0.3;
+    let mut worst: f64 = 0.0;
+    let mut x = 1.7e-3;
+    while x < 1e3 {
+        for s in [x, -x] {
+            let e = expected_round(&fmt, Rounding::SrEps(eps), s, s);
+            let rel: f64 = (e - s) / s;
+            assert!(rel >= -1e-14, "negative relative bias at {s}");
+            worst = worst.max(rel);
+        }
+        x *= 1.37;
+    }
+    println!("\nLemma 1 check: max E[delta] = {worst:.5e} <= 2*eps*u = {:.5e}  OK", 2.0 * eps * u);
+}

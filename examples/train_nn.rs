@@ -1,0 +1,55 @@
+//! Two-layer NN on the 3-vs-8 task (paper §5.3), pure-Rust engine path:
+//! compares RN / SR / SR_eps / signed-SR_eps at binary8 in one run and
+//! prints the epochs-to-target speedup (the paper's ~2x claim).
+//!
+//! Run: `cargo run --release --example train_nn -- [epochs]`
+
+use lpgd::data::load_or_synth;
+use lpgd::fp::{FpFormat, Rounding};
+use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::problems::TwoLayerNn;
+use lpgd::util::stats::first_at_or_below;
+use lpgd::util::table::sparkline;
+
+fn main() {
+    let epochs: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(50);
+    let splits = load_or_synth(None, 3000, 1000, 14, 77);
+    let train = splits.train.filter_classes(&[3, 8]);
+    let test = splits.test.filter_classes(&[3, 8]);
+    println!("3-vs-8: {} train / {} test", train.len(), test.len());
+    let nn = TwoLayerNn::new(train, 100);
+    let x0 = nn.init_params(0);
+    let t = 0.09375; // paper §5.3
+
+    let curve = |fmt: FpFormat, schemes: StepSchemes| -> Vec<f64> {
+        let mut cfg = GdConfig::new(fmt, schemes, t, epochs);
+        cfg.seed = 3;
+        let mut e = GdEngine::new(cfg, &nn, &x0);
+        let metric = |x: &[f64]| nn.test_error(x, &test);
+        e.run(Some(&metric)).metric_series()
+    };
+
+    let sr = Rounding::Sr;
+    let runs = [
+        ("binary32 (baseline)", FpFormat::BINARY32, StepSchemes::uniform(Rounding::RoundNearestEven)),
+        ("binary8 RN", FpFormat::BINARY8, StepSchemes::uniform(Rounding::RoundNearestEven)),
+        ("binary8 SR", FpFormat::BINARY8, StepSchemes::uniform(sr)),
+        ("binary8 SR|signed(0.1)", FpFormat::BINARY8,
+         StepSchemes { grad: sr, mul: sr, sub: Rounding::SignedSrEps(0.1) }),
+    ];
+    let mut curves = Vec::new();
+    for (name, fmt, sch) in runs {
+        let c = curve(fmt, sch);
+        println!("{name:<24} final err {:.3}  {}", c.last().unwrap(), sparkline(&c, 50));
+        curves.push((name, c));
+    }
+    let target = *curves[0].1.last().unwrap();
+    println!("\nepochs to reach the baseline {epochs}-epoch error ({target:.3}):");
+    for (name, c) in &curves[1..] {
+        match first_at_or_below(c, target) {
+            Some(k) => println!("  {name:<24} {k}"),
+            None => println!("  {name:<24} never (stagnated or too slow)"),
+        }
+    }
+}

@@ -1,0 +1,119 @@
+"""AOT pipeline: lower the Layer-2 graphs to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+xla_extension 0.5.1 used by the Rust `xla` crate rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (shapes are static; the Rust runtime marshals accordingly):
+
+  quantize.hlo.txt   standalone Layer-1 quantizer, n = 8192 f32
+                       args: x(8192) u(8192) v(8192) mode(i32[]) eps(f32[])
+                       fmt: binary8
+  mlr_step.hlo.txt   MLR rounded train step, N=256 D=196 C=10, binary8
+                       args: params(1970) x(256,196) y(256,10)
+                             uniforms(3,1970) t(f32[]) eps(f32[]) modes(i32[3])
+                       out: (params'(1970), loss(f32[]))
+  nn_step.hlo.txt    NN rounded train step, N=256 D=196 H=100, binary8
+                       args: params(19801) x(256,196) y(256)
+                             uniforms(3,19801) t(f32[]) eps(f32[]) modes(i32[3])
+                       out: (params'(19801), loss(f32[]))
+
+Run `make artifacts` (no-op when artifacts are newer than their inputs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.rounding import quantize_flat
+
+MLR_N, MLR_D, MLR_C = 256, 196, 10
+NN_N, NN_D, NN_H = 256, 196, 100
+QUANT_N = 8192
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_quantize():
+    fn = functools.partial(quantize_flat, sig_bits=3, e_min=-14, e_max=15)
+
+    def wrapped(x, u, v, mode, eps):
+        return (fn(x, u, v, mode, eps),)
+
+    return jax.jit(wrapped).lower(
+        f32(QUANT_N), f32(QUANT_N), f32(QUANT_N), i32(), f32()
+    )
+
+
+def lower_mlr():
+    p = MLR_C * (MLR_D + 1)
+    fn = functools.partial(
+        model.mlr_train_step, n_classes=MLR_C, fmt=model.FMT_BINARY8
+    )
+
+    def wrapped(params, x, y, uniforms, t, eps, modes):
+        new_p, loss = fn(params, x, y, uniforms, t, eps, modes)
+        return (new_p, loss)
+
+    return jax.jit(wrapped).lower(
+        f32(p), f32(MLR_N, MLR_D), f32(MLR_N, MLR_C), f32(3, p), f32(), f32(), i32(3)
+    )
+
+
+def lower_nn():
+    p = NN_H * (NN_D + 2) + 1
+    fn = functools.partial(model.nn_train_step, hidden=NN_H, fmt=model.FMT_BINARY8)
+
+    def wrapped(params, x, y, uniforms, t, eps, modes):
+        new_p, loss = fn(params, x, y, uniforms, t, eps, modes)
+        return (new_p, loss)
+
+    return jax.jit(wrapped).lower(
+        f32(p), f32(NN_N, NN_D), f32(NN_N), f32(3, p), f32(), f32(), i32(3)
+    )
+
+
+ARTIFACTS = {
+    "quantize.hlo.txt": lower_quantize,
+    "mlr_step.hlo.txt": lower_mlr,
+    "nn_step.hlo.txt": lower_nn,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, lower in ARTIFACTS.items():
+        path = os.path.join(args.out_dir, name)
+        text = to_hlo_text(lower())
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Pure-jnp oracle for the stochastic-rounding quantizer (Layer 1 reference).
+
+Semantics mirror the Rust substrate (`rust/src/fp/`): round a float32 carrier
+value into the format F(sig_bits, e_min, e_max) using one of
+
+    mode 0: RN  (round to nearest, ties to even)
+    mode 1: SR  (Definition 1 -- unbiased stochastic rounding)
+    mode 2: SReps (Definition 2 -- bias away from zero, magnitude eps)
+    mode 3: signed-SReps (Definition 3 -- bias sign(-v), v an auxiliary input)
+
+Stochastic modes consume one uniform sample per element. Out-of-range
+magnitudes saturate to +/-x_max (chop-style; artifacts never exercise the
+IEEE overflow-to-inf path). Representable inputs are fixed points of every
+mode.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def format_params(sig_bits: int, e_min: int, e_max: int):
+    """(u, x_min_sub, x_max) of the simulated format, as python floats."""
+    u = 2.0 ** (-sig_bits)
+    x_min_sub = 2.0 ** (e_min - sig_bits + 1)
+    x_max = (2.0 - 2.0 ** (1 - sig_bits)) * 2.0**e_max
+    return u, x_min_sub, x_max
+
+
+def _exponent_of(ax):
+    """floor(log2(ax)) for positive finite float32 ax, via bit extraction.
+
+    float32 subnormals report -127, which is <= any target e_min we simulate,
+    so the subsequent clamp handles them correctly.
+    """
+    bits = lax.bitcast_convert_type(ax.astype(jnp.float32), jnp.int32)
+    raw = (bits >> 23) & 0xFF
+    return raw - 127
+
+
+
+def _pow2_f32(k):
+    """Exact 2**k as float32 for integer k in [-149, 127], via bit patterns.
+    jnp.exp2 is NOT exact in f32 (exp2(13) -> 8192.004 on this backend)."""
+    k = k.astype(jnp.int32)
+    normal = lax.bitcast_convert_type(
+        jnp.clip(k + 127, 1, 254).astype(jnp.int32) << 23, jnp.float32
+    )
+    sub = lax.bitcast_convert_type(
+        (jnp.int32(1) << jnp.clip(k + 149, 0, 22)).astype(jnp.int32), jnp.float32
+    )
+    return jnp.where(k >= -126, normal, sub)
+
+
+def floor_ceil(x, sig_bits: int, e_min: int, e_max: int):
+    """(lo, hi, q) neighbors of x in F, with saturation to +/-x_max."""
+    _, _, x_max = format_params(sig_bits, e_min, e_max)
+    x = jnp.clip(x, -x_max, x_max)
+    ax = jnp.abs(x)
+    e = jnp.maximum(_exponent_of(ax), e_min)
+    q = _pow2_f32(e - sig_bits + 1)
+    m = x / q
+    lo = jnp.floor(m) * q
+    hi = jnp.ceil(m) * q
+    # x == 0 -> both neighbors 0 (q from the e_min binade keeps this exact).
+    return lo, hi, q
+
+
+def quantize_ref(x, uniforms, v, mode, eps, sig_bits: int, e_min: int, e_max: int):
+    """Round `x` elementwise into F. `uniforms` in [0,1), `v` steers mode 3.
+
+    `mode` is a traced int32 scalar (one compiled executable serves all
+    schemes); `eps` is a traced float32 scalar.
+    """
+    x = x.astype(jnp.float32)
+    lo, hi, q = floor_ceil(x, sig_bits, e_min, e_max)
+    gap = hi - lo
+    inexact = gap > 0
+    frac = jnp.where(inexact, (x - lo) / jnp.where(inexact, gap, 1.0), 0.0)
+
+    # --- RN, ties to even ---
+    m_lo = jnp.abs(lo / q)
+    lo_even = jnp.mod(m_lo, 2.0) < 0.5
+    rn = jnp.where(
+        frac < 0.5, lo, jnp.where(frac > 0.5, hi, jnp.where(lo_even, lo, hi))
+    )
+
+    # --- stochastic p(round down) per scheme ---
+    sx = jnp.sign(x)
+    sv = jnp.sign(v)
+    p_sr = 1.0 - frac
+    p_eps = jnp.clip(1.0 - frac - sx * eps, 0.0, 1.0)
+    p_sgn = jnp.clip(1.0 - frac + sv * eps, 0.0, 1.0)
+    p_down = jnp.where(mode == 1, p_sr, jnp.where(mode == 2, p_eps, p_sgn))
+    st = jnp.where(uniforms < p_down, lo, hi)
+
+    out = jnp.where(mode == 0, rn, st)
+    return jnp.where(inexact, out, lo)

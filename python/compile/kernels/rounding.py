@@ -1,0 +1,125 @@
+"""Layer-1 Pallas kernel: the stochastic-rounding quantizer.
+
+The paper's compute hot-spot is the rounding applied at every GD step to
+every parameter -- an elementwise map over (parameters, uniforms, steering
+values). On TPU this is a pure-VPU kernel: the parameter vector is tiled
+into (BLOCK_ROWS, 128) VMEM blocks via BlockSpec; each block runs the
+mantissa-scale / floor / ceil / select arithmetic entirely in vector
+registers, with the uniform randomness streamed in as an input field (no
+in-kernel RNG, so the same HLO runs on CPU-interpret and TPU).
+
+Hardware adaptation (DESIGN.md section 3): the paper targets no specific
+accelerator; we tile for VMEM rather than porting CUDA idioms. VMEM per
+block at (8, 128) f32 = 3 inputs + 1 output = 16 KiB -- far below the
+~16 MiB budget, leaving room to widen blocks for bandwidth (see
+EXPERIMENTS.md section Perf).
+
+MUST be lowered with interpret=True for CPU PJRT execution; real-TPU
+lowering emits a Mosaic custom-call the CPU plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Default VMEM block: one (8, 128) f32 tile per operand.
+BLOCK_ROWS = 8
+LANES = 128
+
+
+
+def _pow2_f32(k):
+    """Exact 2**k as float32 for integer k in [-149, 127], via bit patterns.
+    jnp.exp2 is NOT exact in f32 (exp2(13) -> 8192.004 on this backend)."""
+    k = k.astype(jnp.int32)
+    normal = lax.bitcast_convert_type(
+        jnp.clip(k + 127, 1, 254).astype(jnp.int32) << 23, jnp.float32
+    )
+    sub = lax.bitcast_convert_type(
+        (jnp.int32(1) << jnp.clip(k + 149, 0, 22)).astype(jnp.int32), jnp.float32
+    )
+    return jnp.where(k >= -126, normal, sub)
+
+
+def _quantize_block(x, u, v, mode, eps, sig_bits: int, e_min: int, e_max: int):
+    """The in-register rounding math (shared with the standalone kernel)."""
+    x_max = (2.0 - 2.0 ** (1 - sig_bits)) * 2.0**e_max
+    x = jnp.clip(x, -x_max, x_max)
+    bits = lax.bitcast_convert_type(x, jnp.int32)
+    raw_e = ((bits >> 23) & 0xFF) - 127
+    e = jnp.maximum(raw_e, e_min)
+    q = _pow2_f32(e - sig_bits + 1)
+    m = x / q
+    lo = jnp.floor(m) * q
+    hi = jnp.ceil(m) * q
+    gap = hi - lo
+    inexact = gap > 0
+    frac = jnp.where(inexact, (x - lo) / jnp.where(inexact, gap, 1.0), 0.0)
+
+    m_lo = jnp.abs(lo / q)
+    lo_even = jnp.mod(m_lo, 2.0) < 0.5
+    rn = jnp.where(frac < 0.5, lo, jnp.where(frac > 0.5, hi, jnp.where(lo_even, lo, hi)))
+
+    sx = jnp.sign(x)
+    sv = jnp.sign(v)
+    p_sr = 1.0 - frac
+    p_eps = jnp.clip(1.0 - frac - sx * eps, 0.0, 1.0)
+    p_sgn = jnp.clip(1.0 - frac + sv * eps, 0.0, 1.0)
+    p_down = jnp.where(mode == 1, p_sr, jnp.where(mode == 2, p_eps, p_sgn))
+    st = jnp.where(u < p_down, lo, hi)
+
+    out = jnp.where(mode == 0, rn, st)
+    return jnp.where(inexact, out, lo)
+
+
+def _kernel(x_ref, u_ref, v_ref, mode_ref, eps_ref, o_ref, *, sig_bits, e_min, e_max):
+    mode = mode_ref[0]
+    eps = eps_ref[0]
+    o_ref[...] = _quantize_block(
+        x_ref[...], u_ref[...], v_ref[...], mode, eps, sig_bits, e_min, e_max
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("sig_bits", "e_min", "e_max", "block_rows"))
+def quantize(x, uniforms, v, mode, eps, *, sig_bits: int, e_min: int, e_max: int,
+             block_rows: int = BLOCK_ROWS):
+    """Pallas quantizer over a 2-D (rows, 128·k) array.
+
+    x, uniforms, v: same shape, float32. mode: int32 scalar. eps: f32 scalar.
+    """
+    assert x.ndim == 2 and x.shape == uniforms.shape == v.shape
+    rows, cols = x.shape
+    assert rows % block_rows == 0 and cols % LANES == 0, (rows, cols)
+    grid = (rows // block_rows, cols // LANES)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i, j: (i, j))
+    # Scalars are broadcast to every block (whole-array spec).
+    sspec = pl.BlockSpec((1,), lambda i, j: (0,))
+    return pl.pallas_call(
+        functools.partial(_kernel, sig_bits=sig_bits, e_min=e_min, e_max=e_max),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        grid=grid,
+        in_specs=[spec, spec, spec, sspec, sspec],
+        out_specs=spec,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, uniforms, v, mode.reshape(1), eps.reshape(1))
+
+
+def quantize_flat(x, uniforms, v, mode, eps, *, sig_bits: int, e_min: int, e_max: int):
+    """Convenience wrapper for 1-D inputs whose length is a multiple of
+    BLOCK_ROWS*LANES (pads otherwise)."""
+    n = x.shape[0]
+    width = BLOCK_ROWS * LANES
+    pad = (-n) % width
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        uniforms = jnp.pad(uniforms, (0, pad), constant_values=0.5)
+        v = jnp.pad(v, (0, pad))
+    shaped = lambda a: a.reshape(-1, LANES)
+    out = quantize(shaped(x), shaped(uniforms), shaped(v), mode, eps,
+                   sig_bits=sig_bits, e_min=e_min, e_max=e_max)
+    return out.reshape(-1)[:n]

@@ -1,0 +1,67 @@
+"""AOT pipeline: every artifact lowers, emits parseable HLO text, and the
+quantizer artifact's semantics survive the stablehlo->HLO round trip."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("name", list(aot.ARTIFACTS))
+def test_lowering_produces_hlo_text(name):
+    text = aot.to_hlo_text(aot.ARTIFACTS[name]())
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # No Mosaic custom-calls: interpret=True must have lowered pallas away.
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()
+
+
+def test_artifact_files_match_registry():
+    """`make artifacts` output exists and is fresh enough to load."""
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(art_dir):
+        pytest.skip("artifacts/ not built yet")
+    for name in aot.ARTIFACTS:
+        path = os.path.join(art_dir, name)
+        assert os.path.exists(path), f"run `make artifacts` ({name} missing)"
+        head = open(path).read(200)
+        assert "HloModule" in head
+
+
+def test_quantize_artifact_numerics_roundtrip():
+    """Executing the lowered computation (via jax CPU) == oracle."""
+    lowered = aot.lower_quantize()
+    compiled = lowered.compile()
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal(aot.QUANT_N) * 2).astype(np.float32)
+    u = rng.random(aot.QUANT_N).astype(np.float32)
+    v = rng.standard_normal(aot.QUANT_N).astype(np.float32)
+    (out,) = compiled(jnp.array(x), jnp.array(u), jnp.array(v),
+                      jnp.int32(2), jnp.float32(0.25))
+    want = ref.quantize_ref(jnp.array(x), jnp.array(u), jnp.array(v),
+                            jnp.int32(2), jnp.float32(0.25), 3, -14, 15)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_mlr_artifact_step_executes():
+    lowered = aot.lower_mlr()
+    compiled = lowered.compile()
+    p = aot.MLR_C * (aot.MLR_D + 1)
+    rng = np.random.default_rng(1)
+    params = jnp.zeros(p, dtype=jnp.float32)
+    x = jnp.array(rng.random((aot.MLR_N, aot.MLR_D)).astype(np.float32))
+    y = jnp.array(np.eye(aot.MLR_C, dtype=np.float32)[
+        rng.integers(0, aot.MLR_C, aot.MLR_N)])
+    uni = jnp.array(rng.random((3, p)).astype(np.float32))
+    modes = jnp.array([1, 1, 3], dtype=jnp.int32)
+    new_p, loss = compiled(params, x, y, uni, jnp.float32(0.5),
+                           jnp.float32(0.1), modes)
+    assert np.isfinite(float(loss))
+    assert abs(float(loss) - np.log(10)) < 1e-3  # loss at zero params
+    assert new_p.shape == (p,)

@@ -1,0 +1,170 @@
+"""Layer-1 correctness: Pallas kernel vs pure-jnp oracle, plus the paper's
+rounding-scheme properties (Definitions 1-3, Lemma 1, Table 2)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.rounding import quantize, quantize_flat, BLOCK_ROWS, LANES
+
+B8 = (3, -14, 15)
+BF16 = (8, -126, 127)
+
+
+def _rand(n, seed=0, scale=3.0):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(n) * scale).astype(np.float32)
+    u = rng.random(n).astype(np.float32)
+    v = rng.standard_normal(n).astype(np.float32)
+    return jnp.array(x), jnp.array(u), jnp.array(v)
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2, 3])
+@pytest.mark.parametrize("fmt", [B8, BF16])
+def test_kernel_matches_oracle_bitexact(mode, fmt):
+    x, u, v = _rand(4096, seed=mode)
+    s, lo, hi = fmt
+    r = ref.quantize_ref(x, u, v, jnp.int32(mode), jnp.float32(0.25), s, lo, hi)
+    k = quantize_flat(x, u, v, jnp.int32(mode), jnp.float32(0.25),
+                      sig_bits=s, e_min=lo, e_max=hi)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(k))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    mode=st.integers(0, 3),
+    eps=st.floats(0.0, 0.9),
+    scale=st.sampled_from([1e-4, 1e-2, 1.0, 1e2, 1e4]),
+    rows=st.sampled_from([8, 16, 32]),
+)
+def test_kernel_oracle_property_sweep(seed, mode, eps, scale, rows):
+    n = rows * LANES
+    x, u, v = _rand(n, seed=seed, scale=scale)
+    s, lo, hi = B8
+    r = ref.quantize_ref(x, u, v, jnp.int32(mode), jnp.float32(eps), s, lo, hi)
+    k = quantize_flat(x, u, v, jnp.int32(mode), jnp.float32(eps),
+                      sig_bits=s, e_min=lo, e_max=hi)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(k))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), mode=st.integers(0, 3))
+def test_output_is_floor_or_ceil(seed, mode):
+    """fl(x) in {floor(x), ceil(x)} for every scheme (paper section 2.2)."""
+    x, u, v = _rand(1024, seed=seed)
+    s, emin, emax = B8
+    lo, hi, _ = ref.floor_ceil(x, s, emin, emax)
+    out = ref.quantize_ref(x, u, v, jnp.int32(mode), jnp.float32(0.3), s, emin, emax)
+    out, lo, hi = map(np.asarray, (out, lo, hi))
+    assert np.all((out == lo) | (out == hi))
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2, 3])
+def test_representable_values_are_fixed_points(mode):
+    s, emin, emax = B8
+    # All binary8 values in a couple of binades, exactly representable.
+    vals = []
+    for e in [-2, 0, 5, 10]:
+        q = 2.0 ** (e - s + 1)
+        for m in range(2 ** (s - 1), 2**s):
+            vals.extend([m * q, -m * q])
+    x = jnp.array(vals, dtype=jnp.float32)
+    u = jnp.full_like(x, 0.99)
+    out = ref.quantize_ref(x, u, x, jnp.int32(mode), jnp.float32(0.4), s, emin, emax)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_sr_unbiased():
+    """Definition 1: E[SR(x)] = x."""
+    s, emin, emax = B8
+    x = jnp.full((200_000,), 1.1, dtype=jnp.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(0), x.shape, dtype=jnp.float32)
+    out = ref.quantize_ref(x, u, x, jnp.int32(1), jnp.float32(0.0), s, emin, emax)
+    mean = float(jnp.mean(out))
+    assert abs(mean - 1.1) < 1e-3, mean
+
+
+@pytest.mark.parametrize("xval,sign", [(1.1, 1.0), (-1.1, -1.0)])
+def test_sreps_bias_away_from_zero(xval, sign):
+    """Eq. (3) middle case: bias = sign(x) * eps * gap."""
+    s, emin, emax = B8
+    eps = 0.25
+    x = jnp.full((200_000,), xval, dtype=jnp.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(1), x.shape, dtype=jnp.float32)
+    out = ref.quantize_ref(x, u, x, jnp.int32(2), jnp.float32(eps), s, emin, emax)
+    bias = float(jnp.mean(out)) - xval
+    assert bias * sign > 0
+    assert abs(bias - sign * eps * 0.25) < 2e-3  # gap = 0.25 in [1,2)
+
+
+@pytest.mark.parametrize("vsign", [1.0, -1.0])
+def test_signed_sreps_bias_opposes_v(vsign):
+    """Eq. (4) middle case: bias = sign(-v) * eps * gap."""
+    s, emin, emax = B8
+    eps = 0.25
+    x = jnp.full((200_000,), 1.1, dtype=jnp.float32)
+    v = jnp.full_like(x, vsign)
+    u = jax.random.uniform(jax.random.PRNGKey(2), x.shape, dtype=jnp.float32)
+    out = ref.quantize_ref(x, u, v, jnp.int32(3), jnp.float32(eps), s, emin, emax)
+    bias = float(jnp.mean(out)) - 1.1
+    assert bias * (-vsign) > 0, bias
+
+
+def test_lemma1_relative_bias_bound():
+    """0 <= E[delta^{SReps}(x)] <= 2*eps*u for nonzero x."""
+    s, emin, emax = B8
+    eps = 0.3
+    uu = 2.0**-s
+    rng = np.random.default_rng(3)
+    xs = np.concatenate([rng.uniform(0.01, 100, 50), -rng.uniform(0.01, 100, 50)])
+    for xval in xs.astype(np.float32):
+        x = jnp.full((20_000,), xval, dtype=jnp.float32)
+        u = jax.random.uniform(jax.random.PRNGKey(int(abs(xval) * 997)), x.shape)
+        out = ref.quantize_ref(x, u, x, jnp.int32(2), jnp.float32(eps), s, emin, emax)
+        rel = (float(jnp.mean(out)) - float(xval)) / float(xval)
+        assert rel >= -6e-3
+        assert rel <= 2 * eps * uu + 6e-3
+
+
+def test_table2_format_params():
+    u, xmin_sub, xmax = ref.format_params(*B8)
+    assert u == 0.125
+    assert xmax == 57344.0
+    u, _, xmax = ref.format_params(*BF16)
+    assert u == 2.0**-8
+    assert abs(xmax - 3.39e38) / 3.39e38 < 1e-2
+
+
+def test_saturation_no_inf():
+    s, emin, emax = B8
+    x = jnp.array([1e6, -1e6, 6e4], dtype=jnp.float32)
+    u = jnp.array([0.9, 0.1, 0.5], dtype=jnp.float32)
+    out = np.asarray(ref.quantize_ref(x, u, x, jnp.int32(1), jnp.float32(0.0), s, emin, emax))
+    assert np.all(np.isfinite(out))
+    assert np.all(np.abs(out) <= 57344.0)
+
+
+def test_zero_maps_to_zero():
+    s, emin, emax = B8
+    x = jnp.zeros((LANES,), dtype=jnp.float32)
+    u = jnp.full_like(x, 0.2)
+    for mode in range(4):
+        out = ref.quantize_ref(x, u, x, jnp.int32(mode), jnp.float32(0.4), s, emin, emax)
+        assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+def test_block_shape_invariance():
+    """Different BlockSpec tilings must not change results (pure map)."""
+    x, u, v = _rand(32 * LANES, seed=9)
+    s, emin, emax = B8
+    base = quantize(x.reshape(-1, LANES), u.reshape(-1, LANES), v.reshape(-1, LANES),
+                    jnp.int32(1), jnp.float32(0.0),
+                    sig_bits=s, e_min=emin, e_max=emax, block_rows=8)
+    wide = quantize(x.reshape(-1, LANES), u.reshape(-1, LANES), v.reshape(-1, LANES),
+                    jnp.int32(1), jnp.float32(0.0),
+                    sig_bits=s, e_min=emin, e_max=emax, block_rows=16)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(wide))

@@ -1,0 +1,126 @@
+"""Layer-2 correctness: loss/gradient checks and rounded-update semantics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+C, D, N, H = 10, 196, 64, 20
+P_MLR = C * (D + 1)
+P_NN = H * (D + 2) + 1
+
+
+def _data(seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.random((N, D)).astype(np.float32)
+    labels = rng.integers(0, C, N)
+    y = np.eye(C, dtype=np.float32)[labels]
+    return jnp.array(x), jnp.array(y), labels
+
+
+def test_mlr_loss_at_zero_is_log_c():
+    x, y, _ = _data()
+    loss, grad = model.mlr_loss_and_grad(jnp.zeros(P_MLR), x, y, C)
+    assert abs(float(loss) - np.log(C)) < 1e-5
+    assert grad.shape == (P_MLR,)
+
+
+def test_mlr_grad_matches_autodiff():
+    x, y, _ = _data(1)
+    rng = np.random.default_rng(2)
+    params = jnp.array(rng.standard_normal(P_MLR).astype(np.float32) * 0.1)
+    _, g_manual = model.mlr_loss_and_grad(params, x, y, C)
+    g_auto = jax.grad(lambda p: model.mlr_loss_and_grad(p, x, y, C)[0])(params)
+    np.testing.assert_allclose(np.asarray(g_manual), np.asarray(g_auto),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_nn_grad_finite_diff_spotcheck():
+    rng = np.random.default_rng(3)
+    x = jnp.array(rng.random((N, D)).astype(np.float32))
+    y = jnp.array(rng.integers(0, 2, N).astype(np.float32))
+    params = jnp.array(rng.standard_normal(P_NN).astype(np.float32) * 0.05)
+    loss, grad = model.nn_loss_and_grad(params, x, y, H)
+    assert np.isfinite(float(loss))
+    f = lambda p: float(model.nn_loss_and_grad(p, x, y, H)[0])
+    h = 1e-3
+    for i in [0, P_NN // 2, P_NN - 1]:
+        e = np.zeros(P_NN, dtype=np.float32)
+        e[i] = h
+        fd = (f(params + e) - f(params - e)) / (2 * h)
+        assert abs(fd - float(grad[i])) < 5e-3, (i, fd, float(grad[i]))
+
+
+def _uniforms(p, seed):
+    return jnp.array(np.random.default_rng(seed).random((3, p)).astype(np.float32))
+
+
+def test_rounded_update_output_in_format():
+    """After (8c) every parameter is exactly representable in binary8."""
+    x, y, _ = _data(4)
+    rng = np.random.default_rng(5)
+    params = jnp.array((rng.standard_normal(P_MLR) * 0.1).astype(np.float32))
+    modes = jnp.array([1, 1, 1], dtype=jnp.int32)
+    new_p, _ = model.mlr_train_step(
+        params, x, y, _uniforms(P_MLR, 6), jnp.float32(0.5), jnp.float32(0.1),
+        modes, n_classes=C, fmt=model.FMT_BINARY8)
+    s, emin, emax = model.FMT_BINARY8
+    lo, hi, _ = ref.floor_ceil(jnp.array(new_p), s, emin, emax)
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(new_p))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(new_p))
+
+
+def test_mlr_training_reduces_loss_sr():
+    x, y, _ = _data(7)
+    params = jnp.zeros(P_MLR, dtype=jnp.float32)
+    modes = jnp.array([1, 1, 1], dtype=jnp.int32)
+    losses = []
+    for k in range(30):
+        params, loss = model.mlr_train_step(
+            params, x, y, _uniforms(P_MLR, 100 + k), jnp.float32(0.5),
+            jnp.float32(0.0), modes, n_classes=C, fmt=model.FMT_BINARY8)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.2, losses[::10]
+
+
+def test_rn_vs_sr_stagnation_contrast():
+    """Under RN at binary8 updates far below half an ulp of the iterate are
+    lost entirely; under SR parameters keep moving with probability
+    proportional to the update (the Gupta et al. effect, paper section 3.2).
+    Starting at 1.0 (ulp = 2^-2), updates of order t*g ~ 2e-4 vanish under
+    RN but not under SR."""
+    x, y, _ = _data(8)
+    params0 = jnp.ones(P_MLR, dtype=jnp.float32)
+
+    def run(mode, steps=25, t=0.01):
+        p = params0
+        modes = jnp.array([mode] * 3, dtype=jnp.int32)
+        for k in range(steps):
+            p, _ = model.mlr_train_step(
+                p, x, y, _uniforms(P_MLR, 200 + k), jnp.float32(t),
+                jnp.float32(0.0), modes, n_classes=C, fmt=model.FMT_BINARY8)
+        return np.asarray(p)
+
+    p_rn = run(0)
+    p_sr = run(1)
+    moved_rn = np.count_nonzero(p_rn != np.asarray(params0))
+    moved_sr = np.count_nonzero(p_sr != np.asarray(params0))
+    assert moved_rn == 0, moved_rn           # full stagnation under RN
+    assert moved_sr >= 10, moved_sr  # SR keeps parameters moving (E~40 here)
+
+
+def test_nn_train_step_runs_and_loss_finite():
+    rng = np.random.default_rng(9)
+    x = jnp.array(rng.random((N, D)).astype(np.float32))
+    y = jnp.array(rng.integers(0, 2, N).astype(np.float32))
+    params = jnp.array((rng.standard_normal(P_NN) * 0.05).astype(np.float32))
+    modes = jnp.array([1, 1, 3], dtype=jnp.int32)
+    new_p, loss = model.nn_train_step(
+        params, x, y, _uniforms(P_NN, 10), jnp.float32(0.1), jnp.float32(0.1),
+        modes, hidden=H, fmt=model.FMT_BINARY8)
+    assert np.isfinite(float(loss))
+    assert new_p.shape == (P_NN,)
+    assert not np.array_equal(np.asarray(new_p), np.asarray(params))

@@ -1,0 +1,63 @@
+//! Multi-seed expectation estimation: the paper reports E[·] and population
+//! variance over 20 independent simulations (§5). Deterministic runs
+//! (RN / binary32 baselines) are executed once.
+
+use crate::gd::trace::{mean_series, variance_series, Trace};
+
+/// Aggregated series over seeds.
+#[derive(Debug, Clone)]
+pub struct ExpectationResult {
+    pub mean: Vec<f64>,
+    pub variance: Vec<f64>,
+    pub seeds: usize,
+}
+
+impl ExpectationResult {
+    pub fn max_variance(&self) -> f64 {
+        self.variance.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Run `runner(seed)` for `seeds` seeds and aggregate the series selected by
+/// `select` (objective, metric, …) pointwise.
+pub fn expectation(
+    seeds: usize,
+    runner: &dyn Fn(u64) -> Trace,
+    select: &dyn Fn(&Trace) -> Vec<f64>,
+) -> ExpectationResult {
+    let all: Vec<Vec<f64>> = (0..seeds as u64).map(|s| select(&runner(s))).collect();
+    ExpectationResult { mean: mean_series(&all), variance: variance_series(&all), seeds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gd::trace::IterRecord;
+
+    fn toy_trace(seed: u64) -> Trace {
+        let mut t = Trace::default();
+        for k in 0..5 {
+            t.push(IterRecord {
+                k,
+                f: (seed as f64) + k as f64,
+                grad_norm: 0.0,
+                dist_to_opt: f64::NAN,
+                tau: f64::NAN,
+                stalled: false,
+                metric: f64::NAN,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn expectation_over_seeds() {
+        let r = expectation(4, &toy_trace, &|t| t.objective_series());
+        // mean over seeds {0,1,2,3} at k: 1.5 + k
+        assert_eq!(r.mean, vec![1.5, 2.5, 3.5, 4.5, 5.5]);
+        assert_eq!(r.seeds, 4);
+        // variance of {0,1,2,3} = 1.25 at every k
+        assert!(r.variance.iter().all(|&v| (v - 1.25).abs() < 1e-12));
+        assert_eq!(r.max_variance(), 1.25);
+    }
+}

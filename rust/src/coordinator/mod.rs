@@ -1,0 +1,9 @@
+//! Layer-3 coordinator (system S13): the experiment registry that
+//! regenerates every table and figure of the paper, the multi-seed
+//! expectation aggregator, and the report writers.
+
+pub mod aggregate;
+pub mod experiments;
+
+pub use aggregate::{expectation, ExpectationResult};
+pub use experiments::{list_experiments, run_experiment, ExpCtx};

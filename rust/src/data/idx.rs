@@ -1,0 +1,113 @@
+//! IDX (MNIST) file loader — used automatically when real MNIST files are
+//! present on disk (`train-images-idx3-ubyte` etc.), so the reproduction can
+//! run on the paper's exact data where available.
+
+use super::{Dataset, Splits};
+use anyhow::{bail, Context, Result};
+use std::fs;
+use std::path::Path;
+
+/// Parse an IDX3 image file into row-major [0,1] floats.
+pub fn parse_idx_images(bytes: &[u8]) -> Result<(Vec<f64>, usize)> {
+    if bytes.len() < 16 {
+        bail!("idx3 header truncated");
+    }
+    let magic = u32::from_be_bytes(bytes[0..4].try_into().unwrap());
+    if magic != 0x0000_0803 {
+        bail!("bad idx3 magic {magic:#x}");
+    }
+    let n = u32::from_be_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let rows = u32::from_be_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let cols = u32::from_be_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    let nf = rows * cols;
+    let data = &bytes[16..];
+    if data.len() != n * nf {
+        bail!("idx3 payload size mismatch: {} != {}", data.len(), n * nf);
+    }
+    Ok((data.iter().map(|&b| b as f64 / 255.0).collect(), nf))
+}
+
+/// Parse an IDX1 label file.
+pub fn parse_idx_labels(bytes: &[u8]) -> Result<Vec<u8>> {
+    if bytes.len() < 8 {
+        bail!("idx1 header truncated");
+    }
+    let magic = u32::from_be_bytes(bytes[0..4].try_into().unwrap());
+    if magic != 0x0000_0801 {
+        bail!("bad idx1 magic {magic:#x}");
+    }
+    let n = u32::from_be_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let data = &bytes[8..];
+    if data.len() != n {
+        bail!("idx1 payload size mismatch");
+    }
+    Ok(data.to_vec())
+}
+
+fn load_pair(dir: &Path, img: &str, lbl: &str) -> Result<Dataset> {
+    let ib = fs::read(dir.join(img)).with_context(|| format!("reading {img}"))?;
+    let lb = fs::read(dir.join(lbl)).with_context(|| format!("reading {lbl}"))?;
+    let (x, nf) = parse_idx_images(&ib)?;
+    let labels = parse_idx_labels(&lb)?;
+    if x.len() / nf != labels.len() {
+        bail!("image/label count mismatch");
+    }
+    Ok(Dataset { x, labels, n_features: nf })
+}
+
+/// Load the four standard MNIST files from `dir`.
+pub fn load_mnist(dir: &str) -> Result<Splits> {
+    let d = Path::new(dir);
+    Ok(Splits {
+        train: load_pair(d, "train-images-idx3-ubyte", "train-labels-idx1-ubyte")?,
+        test: load_pair(d, "t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_idx3(n: usize, r: usize, c: usize) -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend_from_slice(&0x0803u32.to_be_bytes());
+        v.extend_from_slice(&(n as u32).to_be_bytes());
+        v.extend_from_slice(&(r as u32).to_be_bytes());
+        v.extend_from_slice(&(c as u32).to_be_bytes());
+        v.extend((0..n * r * c).map(|i| (i % 256) as u8));
+        v
+    }
+
+    fn fake_idx1(n: usize) -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend_from_slice(&0x0801u32.to_be_bytes());
+        v.extend_from_slice(&(n as u32).to_be_bytes());
+        v.extend((0..n).map(|i| (i % 10) as u8));
+        v
+    }
+
+    #[test]
+    fn parses_well_formed_idx() {
+        let (x, nf) = parse_idx_images(&fake_idx3(3, 4, 4)).unwrap();
+        assert_eq!(nf, 16);
+        assert_eq!(x.len(), 48);
+        assert_eq!(x[0], 0.0);
+        assert!((x[1] - 1.0 / 255.0).abs() < 1e-12);
+        let l = parse_idx_labels(&fake_idx1(5)).unwrap();
+        assert_eq!(l, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(parse_idx_images(&[0, 0, 8, 1, 0, 0, 0, 0]).is_err());
+        let mut bad = fake_idx3(2, 2, 2);
+        bad.truncate(bad.len() - 1);
+        assert!(parse_idx_images(&bad).is_err());
+        assert!(parse_idx_labels(&[0u8; 4]).is_err());
+    }
+
+    #[test]
+    fn load_mnist_missing_dir_errors() {
+        assert!(load_mnist("/definitely/not/here").is_err());
+    }
+}

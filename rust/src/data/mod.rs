@@ -1,0 +1,102 @@
+//! Dataset substrate (system S11).
+//!
+//! The paper trains on MNIST [9]; this environment has no network access, so
+//! we generate a *procedural digit dataset* with the same interface: 28×28
+//! (or any side) grayscale digits 0–9, pixel values in [0, 1], with a
+//! 10-class split (MLR, §5.2) and a 3-vs-8 binary split (NN, §5.3). The
+//! substitution is behaviour-preserving for this paper because every studied
+//! phenomenon depends only on gradient magnitudes relative to `u·|x̂|`
+//! (stagnation, rounding-bias direction), not on the image distribution —
+//! see DESIGN.md §2. An IDX loader is provided so real MNIST is used
+//! automatically when the files exist.
+
+pub mod idx;
+pub mod synth;
+
+/// A dense classification dataset: row-major images, one label per row.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// n_samples × n_features, values in [0, 1].
+    pub x: Vec<f64>,
+    pub labels: Vec<u8>,
+    pub n_features: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.x[i * self.n_features..(i + 1) * self.n_features]
+    }
+
+    /// Keep only samples whose label is in `keep`, remapping labels to
+    /// 0..keep.len() (paper §5.3: digits {3, 8} → {0, 1}).
+    pub fn filter_classes(&self, keep: &[u8]) -> Dataset {
+        let mut x = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..self.len() {
+            if let Some(pos) = keep.iter().position(|&k| k == self.labels[i]) {
+                x.extend_from_slice(self.row(i));
+                labels.push(pos as u8);
+            }
+        }
+        Dataset { x, labels, n_features: self.n_features }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.labels.iter().map(|&l| l as usize).max().map_or(0, |m| m + 1)
+    }
+}
+
+/// Train/test pair.
+#[derive(Debug, Clone)]
+pub struct Splits {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Load MNIST from `dir` if the IDX files are present, otherwise generate
+/// the procedural dataset with `train_n`/`test_n` samples and `side`² pixels.
+pub fn load_or_synth(dir: Option<&str>, train_n: usize, test_n: usize, side: usize, seed: u64) -> Splits {
+    if let Some(d) = dir {
+        if let Ok(s) = idx::load_mnist(d) {
+            return s;
+        }
+    }
+    Splits {
+        train: synth::generate(train_n, side, seed),
+        test: synth::generate(test_n, side, seed ^ 0x7e57_da7a),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filter_classes_remaps() {
+        let d = Dataset {
+            x: vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6],
+            labels: vec![3, 5, 8],
+            n_features: 2,
+        };
+        let f = d.filter_classes(&[3, 8]);
+        assert_eq!(f.labels, vec![0, 1]);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.row(1), &[0.5, 0.6]);
+    }
+
+    #[test]
+    fn load_or_synth_falls_back() {
+        let s = load_or_synth(Some("/nonexistent"), 50, 20, 14, 0);
+        assert_eq!(s.train.len(), 50);
+        assert_eq!(s.test.len(), 20);
+        assert_eq!(s.train.n_features, 196);
+    }
+}

@@ -1,0 +1,133 @@
+//! Procedural digit dataset: 7×5 glyph prototypes rasterized to `side`×`side`
+//! with random translation, intensity jitter and pixel noise. Deterministic
+//! per (n, side, seed).
+
+use super::Dataset;
+use crate::fp::rng::Rng;
+
+/// 7-row × 5-column bitmap fonts for digits 0–9.
+const GLYPHS: [[u8; 7]; 10] = [
+    // Each row is 5 bits, msb = leftmost column.
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00010, 0b00100, 0b01000, 0b11111], // 2
+    [0b11111, 0b00010, 0b00100, 0b00010, 0b00001, 0b10001, 0b01110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+];
+
+/// Rasterize one digit into an `side×side` image with jitter.
+fn rasterize(digit: usize, side: usize, rng: &mut Rng, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), side * side);
+    out.fill(0.0);
+    let g = &GLYPHS[digit];
+    // Scale the 7×5 glyph into roughly 70% of the canvas.
+    let gh = (side as f64 * 0.68).max(7.0);
+    let gw = gh * 5.0 / 7.0;
+    let max_shift = ((side as f64 - gh) / 2.0).max(0.0);
+    let dy = (side as f64 - gh) / 2.0 + rng.uniform_in(-1.0, 1.0) * max_shift * 0.8;
+    let dx = (side as f64 - gw) / 2.0 + rng.uniform_in(-1.0, 1.0) * max_shift * 0.8;
+    let intensity = rng.uniform_in(0.72, 1.0);
+    for py in 0..side {
+        for px in 0..side {
+            // Map pixel center back into glyph coordinates.
+            let gy = (py as f64 + 0.5 - dy) / gh * 7.0;
+            let gx = (px as f64 + 0.5 - dx) / gw * 5.0;
+            if gy >= 0.0 && gy < 7.0 && gx >= 0.0 && gx < 5.0 {
+                let (r, c) = (gy as usize, gx as usize);
+                if (g[r] >> (4 - c)) & 1 == 1 {
+                    out[py * side + px] = intensity;
+                }
+            }
+        }
+    }
+    // Additive pixel noise, clamped to [0, 1] (paper: values normalized to [0,1]).
+    for v in out.iter_mut() {
+        let noisy = *v + 0.08 * rng.normal();
+        *v = noisy.clamp(0.0, 1.0);
+    }
+}
+
+/// Generate `n` samples of `side`×`side` digits with balanced classes.
+pub fn generate(n: usize, side: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed).fork("synth-digits", side as u64);
+    let nf = side * side;
+    let mut x = vec![0.0; n * nf];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let digit = (i % 10) as u8; // balanced classes
+        rasterize(digit as usize, side, &mut rng, &mut x[i * nf..(i + 1) * nf]);
+        labels.push(digit);
+    }
+    // Shuffle rows so mini-batch order is class-mixed.
+    let perm = rng.permutation(n);
+    let mut xs = vec![0.0; n * nf];
+    let mut ls = vec![0u8; n];
+    for (dst, &src) in perm.iter().enumerate() {
+        xs[dst * nf..(dst + 1) * nf].copy_from_slice(&x[src * nf..(src + 1) * nf]);
+        ls[dst] = labels[src];
+    }
+    Dataset { x: xs, labels: ls, n_features: nf }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(30, 14, 7);
+        let b = generate(30, 14, 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.labels, b.labels);
+        let c = generate(30, 14, 8);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn values_in_unit_interval() {
+        let d = generate(100, 14, 1);
+        assert!(d.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn classes_balanced() {
+        let d = generate(200, 14, 2);
+        let mut counts = [0usize; 10];
+        for &l in &d.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Mean images of different digits should differ substantially more
+        // than noise: a sanity floor for learnability.
+        let d = generate(400, 14, 3);
+        let nf = d.n_features;
+        let mean_img = |digit: u8| -> Vec<f64> {
+            let rows: Vec<usize> =
+                (0..d.len()).filter(|&i| d.labels[i] == digit).collect();
+            let mut m = vec![0.0; nf];
+            for &i in &rows {
+                for (mj, xj) in m.iter_mut().zip(d.row(i)) {
+                    *mj += xj;
+                }
+            }
+            for mj in m.iter_mut() {
+                *mj /= rows.len() as f64;
+            }
+            m
+        };
+        let m3 = mean_img(3);
+        let m8 = mean_img(8);
+        let dist: f64 =
+            m3.iter().zip(&m8).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        assert!(dist > 0.5, "class means too close: {dist}");
+    }
+}

@@ -1,0 +1,374 @@
+//! Floating-point *format* descriptions and exact neighbor arithmetic.
+//!
+//! A format `F(s, e_min, e_max)` is the set of reals `± μ · 2^(e−s+1)` with
+//! `μ ∈ [2^(s−1), 2^s)` (normal numbers, exponent `e ∈ [e_min, e_max]`) plus
+//! `± μ · 2^(e_min−s+1)` with `μ ∈ [0, 2^(s−1))` (subnormals) — i.e. the
+//! classical IEEE-754-style number line with `s` significand bits *including*
+//! the implicit bit, exactly the convention of the paper (§2.1, Table 2).
+//!
+//! Every simulated value is carried as an `f64` that is *exactly* an element
+//! of the target format. This works because all formats we simulate have
+//! `s ≤ 24 < 53` and exponent ranges inside binary64's, so the embedding
+//! 𝔽 ⊂ binary64 is exact (the same trick as Higham & Pranesh's `chop`).
+
+
+/// A binary floating-point format with `s` significand bits (implicit bit
+/// included), exponent range `[e_min, e_max]`, and optional subnormals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FpFormat {
+    /// Significand precision in bits, including the implicit leading bit.
+    pub sig_bits: u32,
+    /// Minimum normalized exponent (value of `e` for the smallest normal).
+    pub e_min: i32,
+    /// Maximum exponent.
+    pub e_max: i32,
+    /// Whether subnormal numbers are representable (chop's `subnormal=1`).
+    pub subnormals: bool,
+}
+
+impl FpFormat {
+    pub const fn new(sig_bits: u32, e_min: i32, e_max: i32) -> Self {
+        Self { sig_bits, e_min, e_max, subnormals: true }
+    }
+
+    /// binary8 in the E5M2 layout (NVIDIA H100 / OCP FP8): 2 stored mantissa
+    /// bits, 5 exponent bits. `u = 2^{-3}`, `x_min = 2^{-14} ≈ 6.10e-5`,
+    /// `x_max = 1.75 · 2^{15} = 57344 ≈ 5.73e4` — the paper's Table 2 row.
+    pub const BINARY8: Self = Self::new(3, -14, 15);
+    /// bfloat16: 7 stored mantissa bits, 8 exponent bits. `u = 2^{-8}`.
+    pub const BFLOAT16: Self = Self::new(8, -126, 127);
+    /// IEEE binary16 (half): `u = 2^{-11}`.
+    pub const BINARY16: Self = Self::new(11, -14, 15);
+    /// IEEE binary32 (single): `u = 2^{-24}`.
+    pub const BINARY32: Self = Self::new(24, -126, 127);
+    /// IEEE binary64 (double): `u = 2^{-53}`. Identity for our f64 carrier.
+    pub const BINARY64: Self = Self::new(53, -1022, 1023);
+
+    /// Look a preset up by name (CLI / config front-end).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "binary8" | "fp8" | "e5m2" | "b8" => Some(Self::BINARY8),
+            "bfloat16" | "bf16" => Some(Self::BFLOAT16),
+            "binary16" | "fp16" | "half" | "b16" => Some(Self::BINARY16),
+            "binary32" | "fp32" | "single" | "b32" => Some(Self::BINARY32),
+            "binary64" | "fp64" | "double" | "b64" => Some(Self::BINARY64),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match *self {
+            Self::BINARY8 => "binary8",
+            Self::BFLOAT16 => "bfloat16",
+            Self::BINARY16 => "binary16",
+            Self::BINARY32 => "binary32",
+            Self::BINARY64 => "binary64",
+            _ => "custom",
+        }
+    }
+
+    /// Unit roundoff `u = 2^{-s}` (max relative error of RN on normals).
+    #[inline]
+    pub fn unit_roundoff(&self) -> f64 {
+        pow2(-(self.sig_bits as i32))
+    }
+
+    /// Machine epsilon `2u = 2^{1-s}` (spacing of the binade `[1,2)`).
+    #[inline]
+    pub fn eps(&self) -> f64 {
+        2.0 * self.unit_roundoff()
+    }
+
+    /// Smallest positive *normalized* number `2^{e_min}`.
+    #[inline]
+    pub fn x_min(&self) -> f64 {
+        pow2(self.e_min)
+    }
+
+    /// Smallest positive *subnormal* number `2^{e_min - s + 1}`
+    /// (equals `x_min` when subnormals are disabled).
+    #[inline]
+    pub fn x_min_sub(&self) -> f64 {
+        if self.subnormals {
+            pow2(self.e_min - self.sig_bits as i32 + 1)
+        } else {
+            self.x_min()
+        }
+    }
+
+    /// Largest finite number `(2 - 2^{1-s}) · 2^{e_max}`.
+    #[inline]
+    pub fn x_max(&self) -> f64 {
+        (2.0 - self.eps()) * pow2(self.e_max)
+    }
+
+    /// The spacing (ulp) of the format in the binade that contains `x`
+    /// (for nonzero finite `x`; the subnormal region has the `e_min` spacing).
+    #[inline]
+    pub fn spacing_at(&self, x: f64) -> f64 {
+        debug_assert!(x.is_finite());
+        let e = exponent_of(x.abs()).max(self.e_min);
+        pow2(e - self.sig_bits as i32 + 1)
+    }
+
+    /// Is `x` exactly an element of this format (finite values only)?
+    pub fn contains(&self, x: f64) -> bool {
+        if x == 0.0 {
+            return true;
+        }
+        if !x.is_finite() || x.abs() > self.x_max() {
+            return false;
+        }
+        let q = self.spacing_at(x);
+        let m = x / q; // exact: division by a power of two
+        if m != m.trunc() {
+            return false;
+        }
+        if !self.subnormals && x.abs() < self.x_min() {
+            return false;
+        }
+        true
+    }
+
+    /// `⌊x⌋_F = max{ y ∈ F : y ≤ x }` and `⌈x⌉_F = min{ y ∈ F : y ≥ x }`,
+    /// computed exactly. Magnitudes beyond `x_max` clamp to `±x_max` on the
+    /// inward side and `±∞` on the outward side (chop-style saturation is
+    /// applied by the rounding layer, which never returns ±∞ for the
+    /// stochastic schemes — see `round.rs`).
+    pub fn floor_ceil(&self, x: f64) -> (f64, f64) {
+        if x == 0.0 {
+            return (0.0, 0.0);
+        }
+        if x.is_nan() {
+            return (f64::NAN, f64::NAN);
+        }
+        let xmax = self.x_max();
+        if x.is_infinite() {
+            return if x > 0.0 { (xmax, f64::INFINITY) } else { (f64::NEG_INFINITY, -xmax) };
+        }
+        if x > xmax {
+            return (xmax, f64::INFINITY);
+        }
+        if x < -xmax {
+            return (f64::NEG_INFINITY, -xmax);
+        }
+        let q = self.spacing_at(x);
+        // Exact: x/q has magnitude < 2^s ≤ 2^24, and x is a binary64 value.
+        let m = x / q;
+        let (lo, hi) = (m.floor() * q, m.ceil() * q);
+        if self.subnormals {
+            (lo, hi)
+        } else {
+            // Flush the open subnormal interval (−x_min, x_min) \ {0} to its
+            // representable endpoints {−x_min, 0, x_min}.
+            let xmin = self.x_min();
+            let fix = |v: f64| -> f64 {
+                if v != 0.0 && v.abs() < xmin {
+                    if v > 0.0 { 0.0 } else { -0.0 }
+                } else {
+                    v
+                }
+            };
+            let (mut lo2, mut hi2) = (fix(lo), fix(hi));
+            // Flushing can collapse both sides to 0 even when x ≠ 0; widen to
+            // the true neighbors in that case.
+            if lo2 == 0.0 && x < 0.0 && lo != 0.0 {
+                lo2 = -xmin;
+            }
+            if hi2 == 0.0 && x > 0.0 && hi != 0.0 {
+                hi2 = xmin;
+            }
+            (lo2, hi2)
+        }
+    }
+
+    /// Successor `su(x̂) = min{ ŷ ∈ F : ŷ > x̂ }` for a value already in `F`
+    /// (paper eq. (10); strict, unlike `⌈·⌉`).
+    pub fn successor(&self, x: f64) -> f64 {
+        debug_assert!(self.contains(x), "successor() requires x ∈ F (got {x})");
+        if x >= self.x_max() {
+            return f64::INFINITY;
+        }
+        if x == 0.0 {
+            return self.x_min_sub();
+        }
+        let q = self.spacing_at(x);
+        if x < 0.0 {
+            // Moving toward zero: crossing −2^e into the finer binade.
+            let m = x / q;
+            if m == -(1i64 << (self.sig_bits - 1)) as f64 && x.abs() > self.x_min() {
+                x + q / 2.0
+            } else {
+                x + q
+            }
+        } else {
+            x + q // may land exactly on 2^{e+1}, which is representable
+        }
+    }
+
+    /// Predecessor `pr(x̂) = max{ ŷ ∈ F : ŷ < x̂ }` for a value already in `F`.
+    pub fn predecessor(&self, x: f64) -> f64 {
+        -self.successor(-x)
+    }
+}
+
+/// Exact `2^e` for any `e ∈ [-1074, 1023]`, built from the binary64 bit
+/// pattern. `f64::powi` is *not* exact here: it can evaluate `2^{-1048}` as
+/// `1 / 2^{1048} = 1/∞ = 0`, which poisons neighbor arithmetic with NaNs.
+#[inline]
+pub fn pow2(e: i32) -> f64 {
+    if e > 1023 {
+        f64::INFINITY
+    } else if e >= -1022 {
+        f64::from_bits(((e + 1023) as u64) << 52)
+    } else if e >= -1074 {
+        f64::from_bits(1u64 << (e + 1074))
+    } else {
+        0.0
+    }
+}
+
+/// Exponent `e` such that `2^e ≤ |x| < 2^{e+1}`, for finite positive `x`,
+/// extracted from the binary64 bit pattern (exact; no `log2` rounding).
+#[inline]
+pub fn exponent_of(x: f64) -> i32 {
+    debug_assert!(x > 0.0 && x.is_finite());
+    let bits = x.to_bits();
+    let raw = ((bits >> 52) & 0x7ff) as i32;
+    if raw == 0 {
+        // binary64 subnormal: normalize via the mantissa's leading zero count.
+        let mant = bits & ((1u64 << 52) - 1);
+        -1022 - (52 - (63 - mant.leading_zeros() as i32))
+    } else {
+        raw - 1023
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_parameters() {
+        // Paper Table 2, reproduced bit-exactly.
+        let b8 = FpFormat::BINARY8;
+        assert_eq!(b8.unit_roundoff(), 0.125);
+        assert!((b8.x_min() - 6.10e-5).abs() / 6.10e-5 < 1e-2);
+        assert_eq!(b8.x_max(), 57344.0); // 5.73e4
+
+        let bf16 = FpFormat::BFLOAT16;
+        assert_eq!(bf16.unit_roundoff(), (2.0f64).powi(-8));
+        assert!((bf16.x_min() - 1.18e-38).abs() / 1.18e-38 < 1e-2);
+        assert!((bf16.x_max() - 3.39e38).abs() / 3.39e38 < 1e-2);
+
+        let b16 = FpFormat::BINARY16;
+        assert_eq!(b16.unit_roundoff(), (2.0f64).powi(-11));
+        assert_eq!(b16.x_max(), 65504.0); // 6.55e4
+
+        let b32 = FpFormat::BINARY32;
+        assert_eq!(b32.unit_roundoff(), (2.0f64).powi(-24));
+        assert!((b32.x_max() - 3.40e38).abs() / 3.40e38 < 1e-2);
+
+        let b64 = FpFormat::BINARY64;
+        assert_eq!(b64.unit_roundoff(), (2.0f64).powi(-53));
+        assert!((b64.x_min() - 2.22e-308).abs() / 2.22e-308 < 1e-2);
+        assert_eq!(b64.x_max(), f64::MAX); // 1.80e308
+    }
+
+    #[test]
+    fn exponent_extraction() {
+        assert_eq!(exponent_of(1.0), 0);
+        assert_eq!(exponent_of(1.5), 0);
+        assert_eq!(exponent_of(2.0), 1);
+        assert_eq!(exponent_of(0.5), -1);
+        assert_eq!(exponent_of(1024.0), 10);
+        assert_eq!(exponent_of(1023.9), 9);
+        assert_eq!(exponent_of(f64::MIN_POSITIVE), -1022);
+        assert_eq!(exponent_of(f64::MIN_POSITIVE / 2.0), -1023);
+    }
+
+    #[test]
+    fn floor_ceil_basic_binary8() {
+        let f = FpFormat::BINARY8;
+        // In [1, 2) the spacing is 2^{-2} = 0.25.
+        assert_eq!(f.floor_ceil(1.1), (1.0, 1.25));
+        assert_eq!(f.floor_ceil(1.25), (1.25, 1.25));
+        assert_eq!(f.floor_ceil(-1.1), (-1.25, -1.0));
+        // In [1024, 2048) the spacing is 2^{10-2} = 256.
+        assert_eq!(f.floor_ceil(1030.0), (1024.0, 1280.0));
+        assert_eq!(f.floor_ceil(1024.0), (1024.0, 1024.0));
+    }
+
+    #[test]
+    fn floor_ceil_subnormals() {
+        let f = FpFormat::BINARY8;
+        let q = f.x_min_sub(); // 2^{-16}
+        assert_eq!(q, (2.0f64).powi(-16));
+        let x = q * 0.4;
+        assert_eq!(f.floor_ceil(x), (0.0, q));
+        assert_eq!(f.floor_ceil(-x), (-q, 0.0));
+        assert!(f.contains(q));
+        assert!(f.contains(3.0 * q));
+        assert!(!f.contains(0.5 * q));
+    }
+
+    #[test]
+    fn floor_ceil_no_subnormals_flushes() {
+        let mut f = FpFormat::BINARY8;
+        f.subnormals = false;
+        let xmin = f.x_min();
+        let x = xmin * 0.3;
+        assert_eq!(f.floor_ceil(x), (0.0, xmin));
+        assert_eq!(f.floor_ceil(-x), (-xmin, 0.0));
+        assert!(!f.contains(f.x_min_sub() / 2.0));
+    }
+
+    #[test]
+    fn floor_ceil_overflow() {
+        let f = FpFormat::BINARY8;
+        let (lo, hi) = f.floor_ceil(60000.0);
+        assert_eq!(lo, 57344.0);
+        assert_eq!(hi, f64::INFINITY);
+        let (lo, hi) = f.floor_ceil(-60000.0);
+        assert_eq!(lo, f64::NEG_INFINITY);
+        assert_eq!(hi, -57344.0);
+    }
+
+    #[test]
+    fn successor_predecessor() {
+        let f = FpFormat::BINARY8;
+        assert_eq!(f.successor(1.0), 1.25);
+        assert_eq!(f.predecessor(1.0), 1.0 - 0.125); // finer binade below 2^0
+        assert_eq!(f.predecessor(1.25), 1.0);
+        assert_eq!(f.successor(0.0), f.x_min_sub());
+        assert_eq!(f.predecessor(0.0), -f.x_min_sub());
+        assert_eq!(f.successor(f.x_max()), f64::INFINITY);
+        assert_eq!(f.predecessor(-f.x_max()), f64::NEG_INFINITY);
+        // su/pr are strict inverses away from the extremes.
+        for &x in &[0.25, 1.0, 1.25, 1024.0, -3.5, f.x_min(), -f.x_min(), f.x_min_sub()] {
+            assert_eq!(f.predecessor(f.successor(x)), x, "x={x}");
+            assert_eq!(f.successor(f.predecessor(x)), x, "x={x}");
+        }
+    }
+
+    #[test]
+    fn contains_agrees_with_floor_ceil() {
+        let f = FpFormat::BFLOAT16;
+        for &x in &[1.0, 1.0 + f.eps(), 3.14159, -2.5e-3, 1e30, -7.0] {
+            let (lo, hi) = f.floor_ceil(x);
+            assert!(f.contains(lo) || lo.is_infinite());
+            assert!(f.contains(hi) || hi.is_infinite());
+            assert_eq!(lo == hi, f.contains(x), "x={x}");
+            assert!(lo <= x && x <= hi);
+        }
+    }
+
+    #[test]
+    fn spacing_matches_eps_scaling() {
+        let f = FpFormat::BFLOAT16;
+        assert_eq!(f.spacing_at(1.0), f.eps());
+        assert_eq!(f.spacing_at(1.5), f.eps());
+        assert_eq!(f.spacing_at(2.0), 2.0 * f.eps());
+        assert_eq!(f.spacing_at(0.75), 0.5 * f.eps());
+    }
+}

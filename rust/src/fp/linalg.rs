@@ -1,0 +1,260 @@
+//! Rounded linear algebra: every elementary operation is rounded into the
+//! target format, following the standard model (5)/(6) of the paper —
+//! `fl(x op y) = (x op y)(1 + δ)`.
+//!
+//! This is how the *gradient evaluation* (step (8a)) accumulates its error
+//! σ₁: inner products and matrix–vector products lose high relative accuracy
+//! when cancellation occurs ([13, §3.1/3.5]), which eq. (9) models with the
+//! mixed absolute/relative bound `|σ₁,ᵢ| ≤ c·u·(|∇f(x)ᵢ| + 1)`.
+//!
+//! [`LpCtx`] bundles (format, rounding mode, RNG stream) and is threaded
+//! through every op so a whole gradient evaluation can be switched between
+//! RN / SR / SRε / signed-SRε with one configuration knob.
+
+use super::format::FpFormat;
+use super::round::{round, round_with, Rounding};
+use super::rng::Rng;
+
+/// A low-precision computation context: all ops round into `fmt` with `mode`.
+#[derive(Debug, Clone)]
+pub struct LpCtx {
+    pub fmt: FpFormat,
+    pub mode: Rounding,
+    pub rng: Rng,
+    /// Number of rounding operations performed (profiling / op counting).
+    pub rounding_ops: u64,
+}
+
+impl LpCtx {
+    pub fn new(fmt: FpFormat, mode: Rounding, rng: Rng) -> Self {
+        Self { fmt, mode, rng, rounding_ops: 0 }
+    }
+
+    /// An exact (binary64) context — the "exact arithmetic" baseline.
+    pub fn exact() -> Self {
+        Self::new(FpFormat::BINARY64, Rounding::RoundNearestEven, Rng::new(0))
+    }
+
+    /// Round a scalar into the context's format.
+    #[inline]
+    pub fn fl(&mut self, x: f64) -> f64 {
+        self.rounding_ops += 1;
+        round(&self.fmt, self.mode, x, &mut self.rng)
+    }
+
+    /// Round with an explicit steering value for `SignedSrEps`.
+    #[inline]
+    pub fn fl_with(&mut self, x: f64, v: f64) -> f64 {
+        self.rounding_ops += 1;
+        round_with(&self.fmt, self.mode, x, v, &mut self.rng)
+    }
+
+    // ---- rounded elementary ops: fl(x op y) ----
+
+    #[inline]
+    pub fn add(&mut self, x: f64, y: f64) -> f64 {
+        self.fl(x + y)
+    }
+    #[inline]
+    pub fn sub(&mut self, x: f64, y: f64) -> f64 {
+        self.fl(x - y)
+    }
+    #[inline]
+    pub fn mul(&mut self, x: f64, y: f64) -> f64 {
+        self.fl(x * y)
+    }
+    #[inline]
+    pub fn div(&mut self, x: f64, y: f64) -> f64 {
+        self.fl(x / y)
+    }
+    #[inline]
+    pub fn exp(&mut self, x: f64) -> f64 {
+        self.fl(x.exp())
+    }
+    #[inline]
+    pub fn ln(&mut self, x: f64) -> f64 {
+        self.fl(x.ln())
+    }
+    #[inline]
+    pub fn sqrt(&mut self, x: f64) -> f64 {
+        self.fl(x.sqrt())
+    }
+
+    /// Rounded inner product `fl(xᵀy)`: sequential accumulation, each
+    /// multiply and each add rounded (the [13, §3.1] error model).
+    pub fn dot(&mut self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut acc = 0.0;
+        for (&a, &b) in x.iter().zip(y.iter()) {
+            let p = self.mul(a, b);
+            acc = self.add(acc, p);
+        }
+        acc
+    }
+
+    /// Rounded matrix–vector product `fl(A·x)`, `A` row-major `m × n`.
+    pub fn gemv(&mut self, a: &[f64], m: usize, n: usize, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(a.len(), m * n);
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(out.len(), m);
+        for i in 0..m {
+            out[i] = self.dot(&a[i * n..(i + 1) * n], x);
+        }
+    }
+
+    /// Rounded transposed matrix–vector product `fl(Aᵀ·x)` (`A` `m × n`).
+    /// Accumulates column-wise with rounded ops.
+    pub fn gemv_t(&mut self, a: &[f64], m: usize, n: usize, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(a.len(), m * n);
+        debug_assert_eq!(x.len(), m);
+        debug_assert_eq!(out.len(), n);
+        out.fill(0.0);
+        for i in 0..m {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &a[i * n..(i + 1) * n];
+            for j in 0..n {
+                let p = self.mul(row[j], xi);
+                out[j] = self.add(out[j], p);
+            }
+        }
+    }
+
+    /// Rounded `y ← fl(fl(α·x) + y)` (axpy with per-op rounding).
+    pub fn axpy(&mut self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+            let p = self.mul(alpha, xi);
+            *yi = self.add(*yi, p);
+        }
+    }
+
+    /// Round a whole slice into the format (entrywise storage rounding).
+    pub fn fl_slice(&mut self, xs: &mut [f64]) {
+        for x in xs.iter_mut() {
+            *x = self.fl(*x);
+        }
+    }
+}
+
+/// Exact (f64) helpers used by the "exact arithmetic" reference paths and by
+/// tests — kept here so problem code can share one vocabulary.
+pub mod exact {
+    pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+        x.iter().zip(y).map(|(a, b)| a * b).sum()
+    }
+    pub fn norm2(x: &[f64]) -> f64 {
+        dot(x, x).sqrt()
+    }
+    pub fn gemv(a: &[f64], m: usize, n: usize, x: &[f64], out: &mut [f64]) {
+        for i in 0..m {
+            out[i] = dot(&a[i * n..(i + 1) * n], x);
+        }
+    }
+    pub fn gemv_t(a: &[f64], m: usize, n: usize, x: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+        for i in 0..m {
+            let xi = x[i];
+            for j in 0..n {
+                out[j] += a[i * n + j] * xi;
+            }
+        }
+    }
+    pub fn sub(x: &[f64], y: &[f64]) -> Vec<f64> {
+        x.iter().zip(y).map(|(a, b)| a - b).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(fmt: FpFormat, mode: Rounding) -> LpCtx {
+        LpCtx::new(fmt, mode, Rng::new(123))
+    }
+
+    #[test]
+    fn exact_ctx_is_identity_on_f64() {
+        let mut c = LpCtx::exact();
+        for &x in &[1.0, 3.14159265358979, -2.5e-300, 1e300] {
+            assert_eq!(c.fl(x), x);
+        }
+        assert_eq!(c.dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn rounded_add_standard_model() {
+        // binary8, u = 1/8: fl(x+y) = (x+y)(1+δ), |δ| ≤ u for RN.
+        let mut c = ctx(FpFormat::BINARY8, Rounding::RoundNearestEven);
+        let u = FpFormat::BINARY8.unit_roundoff();
+        for &(x, y) in &[(1.0, 0.1), (3.3, 4.7), (-1.9, 0.33), (100.0, 3.0)] {
+            let z = c.add(x, y);
+            let delta = (z - (x + y)) / (x + y);
+            assert!(delta.abs() <= u + 1e-15, "x={x} y={y} δ={delta}");
+        }
+    }
+
+    #[test]
+    fn rounded_ops_sr_model_2u() {
+        // For SR the standard model holds with 2u (paper after eq. (5)).
+        let mut c = ctx(FpFormat::BINARY8, Rounding::Sr);
+        let u = FpFormat::BINARY8.unit_roundoff();
+        for i in 0..500 {
+            let x = 0.3 + 0.01 * i as f64;
+            let z = c.mul(x, 1.7);
+            let delta = (z - x * 1.7) / (x * 1.7);
+            assert!(delta.abs() <= 2.0 * u + 1e-15, "x={x} δ={delta}");
+        }
+    }
+
+    #[test]
+    fn dot_error_bound_sequential() {
+        // |fl(xᵀy) − xᵀy| ≤ γ_n |x|ᵀ|y| with γ_n = n·2u/(1−n·2u) for SR
+        // (probabilistic bounds are tighter; the deterministic one must hold
+        // surely for RN).
+        let n = 16;
+        let x: Vec<f64> = (0..n).map(|i| 0.07 * (i as f64 + 1.0)).collect();
+        let y: Vec<f64> = (0..n).map(|i| 0.11 * (n - i) as f64).collect();
+        let exact: f64 = exact::dot(&x, &y);
+        let abs_sum: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+        let u = FpFormat::BFLOAT16.unit_roundoff();
+        let gamma = (n as f64) * u / (1.0 - n as f64 * u);
+        let mut c = ctx(FpFormat::BFLOAT16, Rounding::RoundNearestEven);
+        let z = c.dot(&x, &y);
+        assert!((z - exact).abs() <= 1.1 * gamma * abs_sum, "z={z} exact={exact}");
+    }
+
+    #[test]
+    fn gemv_matches_exact_in_binary64_ctx() {
+        let mut c = LpCtx::exact();
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2×3
+        let x = vec![1.0, 0.5, -1.0];
+        let mut out = vec![0.0; 2];
+        c.gemv(&a, 2, 3, &x, &mut out);
+        assert_eq!(out, vec![1.0 + 1.0 - 3.0, 4.0 + 2.5 - 6.0]);
+        let mut out_t = vec![0.0; 3];
+        c.gemv_t(&a, 2, 3, &[1.0, 2.0], &mut out_t);
+        assert_eq!(out_t, vec![1.0 + 8.0, 2.0 + 10.0, 3.0 + 12.0]);
+    }
+
+    #[test]
+    fn rounding_op_counter() {
+        let mut c = ctx(FpFormat::BINARY8, Rounding::Sr);
+        let before = c.rounding_ops;
+        let _ = c.dot(&[1.0, 2.0], &[3.0, 4.0]); // 2 muls + 2 adds
+        assert_eq!(c.rounding_ops - before, 4);
+    }
+
+    #[test]
+    fn axpy_rounds_into_format() {
+        let mut c = ctx(FpFormat::BINARY8, Rounding::RoundNearestEven);
+        let x = vec![0.313, 0.771];
+        let mut y = vec![1.0, -2.0];
+        c.axpy(0.5, &x, &mut y);
+        for &v in &y {
+            assert!(FpFormat::BINARY8.contains(v), "v={v}");
+        }
+    }
+}

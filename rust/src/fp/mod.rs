@@ -1,0 +1,13 @@
+//! Low-precision floating-point substrate (systems S1–S4 of DESIGN.md):
+//! formats, rounding schemes (RN / directed / SR / SRε / signed-SRε),
+//! deterministic RNG streams, and rounded linear algebra.
+
+pub mod format;
+pub mod linalg;
+pub mod rng;
+pub mod round;
+
+pub use format::FpFormat;
+pub use linalg::LpCtx;
+pub use rng::Rng;
+pub use round::{expected_round, phi, round, round_slice, round_slice_with, round_with, Rounding};

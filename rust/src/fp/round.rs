@@ -1,0 +1,573 @@
+//! Rounding schemes: the paper's Definitions 1–3 plus the IEEE deterministic
+//! modes, implemented over [`FpFormat`].
+//!
+//! * `RoundNearestEven` — IEEE-754 default (RN, ties to even);
+//! * `RoundDown` / `RoundUp` / `RoundTowardZero` — directed modes;
+//! * `Sr` — unbiased stochastic rounding (Definition 1): `P(⌈x⌉) ∝ x − ⌊x⌋`;
+//! * `SrEps(ε)` — ε-biased stochastic rounding (Definition 2): rounds *away
+//!   from zero* with probability at least ε, so the expected absolute error
+//!   has the sign of `x` (eq. (3));
+//! * `SignedSrEps(ε)` — signed ε-biased stochastic rounding (Definition 3):
+//!   the bias direction is steered by an auxiliary value `v` so the expected
+//!   absolute error has the sign of `−v` (eq. (4)). In GD, `v` is the
+//!   computed gradient entry, forcing the bias into a descent direction.
+//!
+//! All stochastic schemes consume exactly one uniform sample per inexact
+//! rounding and none when `x ∈ F` (so representable values are fixed points
+//! of every scheme, as in `chop`/`roundit`).
+
+use super::format::FpFormat;
+use super::rng::Rng;
+
+/// A rounding scheme. `SignedSrEps` requires a steering value `v` supplied
+/// per-element through [`round_with`]; the plain [`round`] entry point uses
+/// `v = x`, which makes `SignedSrEps(ε)` degenerate to `SrEps(ε)` — exactly
+/// the relationship noted under the paper's Algorithm 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Rounding {
+    /// Round to nearest, ties to even (IEEE default). The paper's "RN".
+    RoundNearestEven,
+    /// Round toward −∞.
+    RoundDown,
+    /// Round toward +∞.
+    RoundUp,
+    /// Round toward zero.
+    RoundTowardZero,
+    /// Unbiased stochastic rounding (Definition 1). The paper's "SR".
+    Sr,
+    /// ε-biased stochastic rounding (Definition 2), bias away from zero.
+    SrEps(f64),
+    /// Signed ε-biased stochastic rounding (Definition 3), bias `sign(−v)`.
+    SignedSrEps(f64),
+}
+
+impl Rounding {
+    pub fn is_stochastic(&self) -> bool {
+        matches!(self, Rounding::Sr | Rounding::SrEps(_) | Rounding::SignedSrEps(_))
+    }
+
+    /// Short name for reports ("RN", "SR", "SR_eps(0.1)", "signed-SR_eps(0.1)").
+    pub fn label(&self) -> String {
+        match self {
+            Rounding::RoundNearestEven => "RN".into(),
+            Rounding::RoundDown => "RD".into(),
+            Rounding::RoundUp => "RU".into(),
+            Rounding::RoundTowardZero => "RZ".into(),
+            Rounding::Sr => "SR".into(),
+            Rounding::SrEps(e) => format!("SR_eps({e})"),
+            Rounding::SignedSrEps(e) => format!("signed-SR_eps({e})"),
+        }
+    }
+
+    /// Parse "rn" | "rd" | "ru" | "rz" | "sr" | "sr_eps:0.1" | "signed:0.1".
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "rn" => return Some(Rounding::RoundNearestEven),
+            "rd" => return Some(Rounding::RoundDown),
+            "ru" => return Some(Rounding::RoundUp),
+            "rz" => return Some(Rounding::RoundTowardZero),
+            "sr" => return Some(Rounding::Sr),
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("sr_eps:").or_else(|| s.strip_prefix("sreps:")) {
+            return rest.parse().ok().map(Rounding::SrEps);
+        }
+        if let Some(rest) = s.strip_prefix("signed:").or_else(|| s.strip_prefix("signed-sr_eps:")) {
+            return rest.parse().ok().map(Rounding::SignedSrEps);
+        }
+        None
+    }
+}
+
+/// The clipping function φ of Definition 2: clamp to `[0, 1]`.
+#[inline]
+pub fn phi(y: f64) -> f64 {
+    y.clamp(0.0, 1.0)
+}
+
+/// Saturate an out-of-range magnitude to `±x_max` (chop-style: the
+/// stochastic schemes never produce ±∞; deterministic RN overflows to ±∞
+/// past the IEEE overflow threshold, handled in `round_det`).
+#[inline]
+fn saturate(fmt: &FpFormat, x: f64) -> f64 {
+    x.clamp(-fmt.x_max(), fmt.x_max())
+}
+
+/// Hot path: rounding a value whose magnitude is *target-normal* and in
+/// range reduces to rounding the binary64 mantissa tail — pure integer
+/// bit-twiddling, no divisions and no `pow2` reconstruction. This covers
+/// essentially every rounding in a GD run; subnormal/overflow/NaN inputs
+/// fall back to the general path. Returns `None` when ineligible.
+///
+/// Correctness notes: with `shift = 53 − s`, the f64 bits of |x| split as
+/// `lo_mag = bits & !mask` (the magnitude-floor, exactly `⌊|x|⌋_F`) and
+/// `hi_mag = lo_mag + 2^shift` (magnitude-ceil; carries into the exponent
+/// field exactly when the mantissa overflows to the next binade, which is
+/// still a representable value). `tail/2^shift` is exactly
+/// `(|x| − ⌊|x|⌋)/(⌈|x|⌉ − ⌊|x|⌋)` because the gap is one target-ulp.
+#[inline(always)]
+fn round_fast(fmt: &FpFormat, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> Option<f64> {
+    let bits = x.to_bits();
+    let mag = bits & 0x7fff_ffff_ffff_ffff;
+    let raw_e = (mag >> 52) as i32;
+    let e = raw_e - 1023;
+    // Eligibility: finite, f64-normal, target-normal, strictly inside the
+    // target's largest binade (so the magnitude-ceil cannot overflow past
+    // x_max: for e < e_max, ceil ≤ 2^{e+1} ≤ 2^{e_max} ≤ x_max).
+    if raw_e == 0 || raw_e == 0x7ff || e < fmt.e_min || e >= fmt.e_max {
+        return None;
+    }
+    let shift = 53 - fmt.sig_bits; // ≥ 29 for every simulated format
+    let mask = (1u64 << shift) - 1;
+    let tail = mag & mask;
+    if tail == 0 {
+        return Some(x); // representable
+    }
+    let neg = bits >> 63 == 1;
+    let lo_mag = mag & !mask;
+    let hi_mag = lo_mag + (1u64 << shift);
+    // Value-scale neighbors.
+    let (lo_bits, hi_bits) = if neg {
+        (hi_mag | (1u64 << 63), lo_mag | (1u64 << 63))
+    } else {
+        (lo_mag, hi_mag)
+    };
+    // frac on the VALUE scale: distance from the value-floor, in gaps.
+    let frac_mag = tail as f64 * inv_pow2(shift);
+    let frac = if neg { 1.0 - frac_mag } else { frac_mag };
+    let down = match mode {
+        Rounding::RoundDown => true,
+        Rounding::RoundUp => false,
+        Rounding::RoundTowardZero => !neg,
+        Rounding::RoundNearestEven => {
+            let half = 1u64 << (shift - 1);
+            if tail != half {
+                // Nearest in magnitude == nearest in value.
+                (tail < half) ^ neg
+            } else {
+                // Tie: keep the endpoint with even target significand.
+                let lo_even = (lo_mag >> shift) & 1 == 0;
+                lo_even ^ neg // value-floor is the magnitude-floor iff !neg
+            }
+        }
+        Rounding::Sr => rng.uniform() < 1.0 - frac,
+        Rounding::SrEps(eps) => {
+            let sx = if neg { -1.0 } else { 1.0 };
+            rng.uniform() < phi(1.0 - frac - sx * eps)
+        }
+        Rounding::SignedSrEps(eps) => {
+            let sv = if v == 0.0 { 0.0 } else { v.signum() };
+            rng.uniform() < phi(1.0 - frac + sv * eps)
+        }
+    };
+    Some(f64::from_bits(if down { lo_bits } else { hi_bits }))
+}
+
+/// `2^{-k}` for `k ∈ [0, 63]`, exact (table-free bit construction).
+#[inline(always)]
+fn inv_pow2(k: u32) -> f64 {
+    f64::from_bits(((1023 - k as u64) & 0x7ff) << 52)
+}
+
+/// Round `x` into `fmt` using scheme `mode`, steering `SignedSrEps` by `v`.
+/// One uniform is drawn from `rng` iff the scheme is stochastic and `x ∉ F`.
+#[inline]
+pub fn round_with(fmt: &FpFormat, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> f64 {
+    if x == 0.0 || x.is_nan() {
+        return x;
+    }
+    if let Some(y) = round_fast(fmt, mode, x, v, rng) {
+        return y;
+    }
+    let (lo, hi) = fmt.floor_ceil(x);
+    if lo == hi {
+        return lo; // x ∈ F (includes ±∞ inputs)
+    }
+    match mode {
+        Rounding::RoundDown => lo,
+        Rounding::RoundUp => hi,
+        Rounding::RoundTowardZero => {
+            if x > 0.0 {
+                lo
+            } else {
+                hi
+            }
+        }
+        Rounding::RoundNearestEven => round_nearest_even(fmt, x, lo, hi),
+        Rounding::Sr | Rounding::SrEps(_) | Rounding::SignedSrEps(_) => {
+            // Stochastic schemes: saturating endpoints keeps them finite.
+            let (lo, hi) = (saturate(fmt, lo), saturate(fmt, hi));
+            if lo == hi {
+                return lo;
+            }
+            let frac = (x - lo) / (hi - lo); // ∈ (0,1), exact denominators
+            let p_down = match mode {
+                // Definition 1: P(⌊x⌋) = 1 − (x−⌊x⌋)/(⌈x⌉−⌊x⌋).
+                Rounding::Sr => 1.0 - frac,
+                // Definition 2: p_ε(x) = φ(1 − frac − sign(x)·ε).
+                Rounding::SrEps(eps) => phi(1.0 - frac - x.signum() * eps),
+                // Definition 3: p̂_ε(x) = φ(1 − frac + sign(v)·ε).
+                Rounding::SignedSrEps(eps) => {
+                    let sv = if v == 0.0 { 0.0 } else { v.signum() };
+                    phi(1.0 - frac + sv * eps)
+                }
+                _ => unreachable!(),
+            };
+            if rng.uniform() < p_down {
+                lo
+            } else {
+                hi
+            }
+        }
+    }
+}
+
+/// Round `x` with `v = x` (see type-level docs).
+#[inline]
+pub fn round(fmt: &FpFormat, mode: Rounding, x: f64, rng: &mut Rng) -> f64 {
+    round_with(fmt, mode, x, x, rng)
+}
+
+/// IEEE round-to-nearest, ties to even, with the standard overflow rule
+/// (|x| ≥ x_max + ulp/2 → ±∞).
+fn round_nearest_even(fmt: &FpFormat, x: f64, lo: f64, hi: f64) -> f64 {
+    if hi.is_infinite() {
+        // Binade above x_max: overflow threshold is x_max + ulp(x_max)/2.
+        let thr = fmt.x_max() + fmt.spacing_at(fmt.x_max()) / 2.0;
+        return if x >= thr { f64::INFINITY } else { fmt.x_max() };
+    }
+    if lo.is_infinite() {
+        let thr = -(fmt.x_max() + fmt.spacing_at(fmt.x_max()) / 2.0);
+        return if x <= thr { f64::NEG_INFINITY } else { -fmt.x_max() };
+    }
+    let dlo = x - lo;
+    let dhi = hi - x;
+    if dlo < dhi {
+        lo
+    } else if dhi < dlo {
+        hi
+    } else {
+        // Tie: pick the endpoint with even significand.
+        let q = hi - lo;
+        let m_lo = (lo / q).abs();
+        if (m_lo as i64) % 2 == 0 {
+            lo
+        } else {
+            hi
+        }
+    }
+}
+
+/// Expected rounded value `E[fl(x)]` under a scheme — closed form, no
+/// sampling (used for Figure 1 and for property tests against the empirical
+/// mean). For deterministic schemes this is just the rounded value.
+pub fn expected_round(fmt: &FpFormat, mode: Rounding, x: f64, v: f64) -> f64 {
+    if x == 0.0 || x.is_nan() {
+        return x;
+    }
+    let (lo, hi) = fmt.floor_ceil(x);
+    if lo == hi {
+        return lo;
+    }
+    match mode {
+        Rounding::Sr | Rounding::SrEps(_) | Rounding::SignedSrEps(_) => {
+            let (lo, hi) = (saturate(fmt, lo), saturate(fmt, hi));
+            if lo == hi {
+                return lo;
+            }
+            let frac = (x - lo) / (hi - lo);
+            let p_down = match mode {
+                Rounding::Sr => 1.0 - frac,
+                Rounding::SrEps(eps) => phi(1.0 - frac - x.signum() * eps),
+                Rounding::SignedSrEps(eps) => {
+                    let sv = if v == 0.0 { 0.0 } else { v.signum() };
+                    phi(1.0 - frac + sv * eps)
+                }
+                _ => unreachable!(),
+            };
+            p_down * lo + (1.0 - p_down) * hi
+        }
+        _ => {
+            let mut rng = Rng::new(0); // unused by deterministic modes
+            round_with(fmt, mode, x, v, &mut rng)
+        }
+    }
+}
+
+/// Round every entry of a slice in place (plain `v = x` steering).
+/// Specialized per scheme so the mode dispatch and the format constants are
+/// hoisted out of the element loop (≈2× over calling [`round`] per element
+/// for the stochastic schemes; see EXPERIMENTS.md §Perf).
+pub fn round_slice(fmt: &FpFormat, mode: Rounding, xs: &mut [f64], rng: &mut Rng) {
+    let shift = 53 - fmt.sig_bits;
+    let mask = (1u64 << shift) - 1;
+    let inv = inv_pow2(shift);
+    let (e_min, e_max) = (fmt.e_min, fmt.e_max);
+    macro_rules! specialized {
+        (|$tail:ident, $frac:ident, $neg:ident, $lo_mag:ident| $p_down:expr) => {
+            for x in xs.iter_mut() {
+                let bits = x.to_bits();
+                let mag = bits & 0x7fff_ffff_ffff_ffff;
+                let raw_e = (mag >> 52) as i32;
+                let e = raw_e - 1023;
+                if raw_e == 0 || raw_e == 0x7ff || e < e_min || e >= e_max {
+                    if *x != 0.0 {
+                        *x = round(fmt, mode, *x, rng); // rare slow path
+                    }
+                    continue;
+                }
+                let $tail = mag & mask;
+                if $tail == 0 {
+                    continue; // representable
+                }
+                let $neg = bits >> 63 == 1;
+                let $lo_mag = mag & !mask;
+                let hi_mag = $lo_mag + (1u64 << shift);
+                let frac_mag = $tail as f64 * inv;
+                let $frac = if $neg { 1.0 - frac_mag } else { frac_mag };
+                let down: bool = $p_down;
+                // down on the VALUE scale: pick magnitude-ceil when negative.
+                let out_mag = if down != $neg { $lo_mag } else { hi_mag };
+                *x = f64::from_bits(out_mag | (bits & (1u64 << 63)));
+            }
+        };
+    }
+    match mode {
+        Rounding::Sr => {
+            specialized!(|tail, frac, neg, lo_mag| rng.uniform() < 1.0 - frac)
+        }
+        Rounding::SrEps(eps) => specialized!(|tail, frac, neg, lo_mag| {
+            let sx = if neg { -1.0 } else { 1.0 };
+            rng.uniform() < phi(1.0 - frac - sx * eps)
+        }),
+        Rounding::RoundNearestEven => specialized!(|tail, frac, neg, lo_mag| {
+            let half = 1u64 << (shift - 1);
+            let _ = frac;
+            if tail != half {
+                (tail < half) ^ neg
+            } else {
+                ((lo_mag >> shift) & 1 == 0) ^ neg
+            }
+        }),
+        _ => {
+            for x in xs.iter_mut() {
+                *x = round(fmt, mode, *x, rng);
+            }
+        }
+    }
+}
+
+/// Round every entry, steering `SignedSrEps` per element by `vs`.
+pub fn round_slice_with(fmt: &FpFormat, mode: Rounding, xs: &mut [f64], vs: &[f64], rng: &mut Rng) {
+    debug_assert_eq!(xs.len(), vs.len());
+    for (x, &v) in xs.iter_mut().zip(vs.iter()) {
+        *x = round_with(fmt, mode, *x, v, rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B8: FpFormat = FpFormat::BINARY8;
+
+    #[test]
+    fn representable_values_are_fixed_points() {
+        let mut rng = Rng::new(0);
+        for mode in [
+            Rounding::RoundNearestEven,
+            Rounding::RoundDown,
+            Rounding::RoundUp,
+            Rounding::RoundTowardZero,
+            Rounding::Sr,
+            Rounding::SrEps(0.3),
+            Rounding::SignedSrEps(0.3),
+        ] {
+            for &x in &[0.0, 1.0, -1.25, 1024.0, B8.x_min(), B8.x_min_sub(), -B8.x_max()] {
+                assert_eq!(round(&B8, mode, x, &mut rng), x, "{mode:?} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_modes() {
+        let mut rng = Rng::new(0);
+        // x = 1.1 ∈ (1.0, 1.25) in binary8.
+        assert_eq!(round(&B8, Rounding::RoundDown, 1.1, &mut rng), 1.0);
+        assert_eq!(round(&B8, Rounding::RoundUp, 1.1, &mut rng), 1.25);
+        assert_eq!(round(&B8, Rounding::RoundTowardZero, 1.1, &mut rng), 1.0);
+        assert_eq!(round(&B8, Rounding::RoundTowardZero, -1.1, &mut rng), -1.0);
+        assert_eq!(round(&B8, Rounding::RoundNearestEven, 1.1, &mut rng), 1.0);
+        assert_eq!(round(&B8, Rounding::RoundNearestEven, 1.2, &mut rng), 1.25);
+    }
+
+    #[test]
+    fn rn_ties_to_even() {
+        let mut rng = Rng::new(0);
+        // Midpoint of (1.0, 1.25): 1.125. Significands: 1.0 → m=4 (even),
+        // 1.25 → m=5 (odd) at spacing 0.25 ⇒ tie goes to 1.0.
+        assert_eq!(round(&B8, Rounding::RoundNearestEven, 1.125, &mut rng), 1.0);
+        // Midpoint of (1.25, 1.5): 1.375 → 1.5 (m=6 even).
+        assert_eq!(round(&B8, Rounding::RoundNearestEven, 1.375, &mut rng), 1.5);
+        // Negative mirror.
+        assert_eq!(round(&B8, Rounding::RoundNearestEven, -1.125, &mut rng), -1.0);
+    }
+
+    #[test]
+    fn rn_overflow_to_infinity() {
+        let mut rng = Rng::new(0);
+        let xmax = B8.x_max(); // 57344, ulp = 2^13 = 8192
+        assert_eq!(round(&B8, Rounding::RoundNearestEven, xmax + 4095.0, &mut rng), xmax);
+        assert_eq!(round(&B8, Rounding::RoundNearestEven, xmax + 4096.0, &mut rng), f64::INFINITY);
+        assert_eq!(round(&B8, Rounding::RoundNearestEven, -(xmax + 5000.0), &mut rng), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn stochastic_saturates_no_infinity() {
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            let y = round(&B8, Rounding::Sr, 60000.0, &mut rng);
+            assert_eq!(y, B8.x_max());
+        }
+    }
+
+    /// SR empirical mean ≈ x (zero bias, Definition 1).
+    #[test]
+    fn sr_is_unbiased() {
+        let mut rng = Rng::new(42);
+        for &x in &[1.1, 1.24, -2.6, 0.001, 1030.0] {
+            let n = 40_000;
+            let mean: f64 = (0..n).map(|_| round(&B8, Rounding::Sr, x, &mut rng)).sum::<f64>() / n as f64;
+            let (lo, hi) = B8.floor_ceil(x);
+            let tol = 4.0 * (hi - lo) / (n as f64).sqrt();
+            assert!((mean - x).abs() < tol, "x={x} mean={mean} tol={tol}");
+        }
+    }
+
+    /// SRε bias has the sign of x and magnitude ε·(⌈x⌉−⌊x⌋) in the interior
+    /// regime (eq. (3) middle case).
+    #[test]
+    fn sr_eps_bias_matches_eq3() {
+        let mut rng = Rng::new(7);
+        let eps = 0.25;
+        for &x in &[1.1, -1.1, 3.3, -900.0] {
+            let (lo, hi) = B8.floor_ceil(x);
+            let frac = (x - lo) / (hi - lo);
+            let eta = 1.0 - frac - x.signum() * eps;
+            if !(0.0..=1.0).contains(&eta) {
+                continue; // pick interior cases only
+            }
+            let n = 60_000;
+            let mean: f64 =
+                (0..n).map(|_| round(&B8, Rounding::SrEps(eps), x, &mut rng)).sum::<f64>() / n as f64;
+            let expected_bias = x.signum() * eps * (hi - lo);
+            let tol = 4.0 * (hi - lo) / (n as f64).sqrt();
+            assert!(
+                ((mean - x) - expected_bias).abs() < tol,
+                "x={x} bias={} expected={expected_bias}",
+                mean - x
+            );
+        }
+    }
+
+    /// signed-SRε bias has the sign of −v (eq. (4) middle case).
+    #[test]
+    fn signed_sr_eps_bias_opposes_v() {
+        let mut rng = Rng::new(9);
+        let eps = 0.25;
+        for &(x, v) in &[(1.1, 1.0), (1.1, -1.0), (-1.1, 1.0), (-1.1, -1.0)] {
+            let (lo, hi) = B8.floor_ceil(x);
+            let n = 60_000;
+            let mean: f64 = (0..n)
+                .map(|_| round_with(&B8, Rounding::SignedSrEps(eps), x, v, &mut rng))
+                .sum::<f64>()
+                / n as f64;
+            let expected_bias = -v.signum() * eps * (hi - lo);
+            let tol = 4.0 * (hi - lo) / (n as f64).sqrt();
+            assert!(
+                ((mean - x) - expected_bias).abs() < tol,
+                "x={x} v={v} bias={} expected={expected_bias}",
+                mean - x
+            );
+        }
+    }
+
+    /// Closed-form expectation matches the empirical mean for all schemes.
+    #[test]
+    fn expected_round_matches_empirical() {
+        let mut rng = Rng::new(3);
+        for mode in [Rounding::Sr, Rounding::SrEps(0.4), Rounding::SignedSrEps(0.15)] {
+            for &(x, v) in &[(1.07, -2.0), (-5.3, 1.0), (0.011, 0.5)] {
+                let n = 60_000;
+                let mean: f64 =
+                    (0..n).map(|_| round_with(&B8, mode, x, v, &mut rng)).sum::<f64>() / n as f64;
+                let exp = expected_round(&B8, mode, x, v);
+                let (lo, hi) = B8.floor_ceil(x);
+                let tol = 4.0 * (hi - lo) / (n as f64).sqrt();
+                assert!((mean - exp).abs() < tol, "{mode:?} x={x}: {mean} vs {exp}");
+            }
+        }
+    }
+
+    /// Lemma 1: 0 ≤ E[δ^{SRε}(x)] ≤ 2εu for all nonzero x.
+    #[test]
+    fn lemma1_relative_bias_bound() {
+        let eps = 0.3;
+        let u = B8.unit_roundoff();
+        let mut vals = vec![];
+        let mut t = 0.013;
+        while t < 2.0e4 {
+            vals.push(t);
+            vals.push(-t);
+            t *= 1.7;
+        }
+        for &x in &vals {
+            let e = expected_round(&B8, Rounding::SrEps(eps), x, x);
+            let rel = (e - x) / x;
+            assert!(rel >= -1e-15, "x={x} rel={rel}");
+            assert!(rel <= 2.0 * eps * u + 1e-15, "x={x} rel={rel} bound={}", 2.0 * eps * u);
+        }
+    }
+
+    /// With ε = 0 both new schemes coincide with SR in expectation.
+    #[test]
+    fn eps_zero_degenerates_to_sr() {
+        for &x in &[1.1, -2.6, 100.3] {
+            let e_sr = expected_round(&B8, Rounding::Sr, x, x);
+            let e_eps = expected_round(&B8, Rounding::SrEps(0.0), x, x);
+            let e_sgn = expected_round(&B8, Rounding::SignedSrEps(0.0), x, -x);
+            assert!((e_sr - e_eps).abs() < 1e-15);
+            assert!((e_sr - e_sgn).abs() < 1e-15);
+        }
+    }
+
+    /// With v = x, signed-SRε(x) has the same law as SRε mirrored: per
+    /// Definition 3, sign(v)=sign(x) gives p̂ = φ(1 − frac + sign(x)ε) — the
+    /// bias *toward zero* variant; check the closed forms are consistent.
+    #[test]
+    fn signed_with_v_eq_x_biases_toward_zero() {
+        let eps = 0.25;
+        for &x in &[1.1, -1.1] {
+            let e = expected_round(&B8, Rounding::SignedSrEps(eps), x, x);
+            // bias sign must be −sign(x): toward zero
+            assert!((e - x) * x.signum() < 0.0, "x={x} e={e}");
+        }
+    }
+
+    #[test]
+    fn parse_labels_roundtrip() {
+        for (s, m) in [
+            ("rn", Rounding::RoundNearestEven),
+            ("sr", Rounding::Sr),
+            ("sr_eps:0.1", Rounding::SrEps(0.1)),
+            ("signed:0.4", Rounding::SignedSrEps(0.4)),
+            ("rd", Rounding::RoundDown),
+            ("ru", Rounding::RoundUp),
+            ("rz", Rounding::RoundTowardZero),
+        ] {
+            assert_eq!(Rounding::parse(s), Some(m));
+        }
+        assert_eq!(Rounding::parse("bogus"), None);
+    }
+}

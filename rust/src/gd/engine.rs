@@ -1,0 +1,312 @@
+//! The GD iteration under floating-point rounding — paper eq. (8):
+//!
+//! ```text
+//! (8a)  ĝ = ∇f(x̂) + σ₁          gradient evaluated in low precision
+//! (8b)  m = fl₂(t · ĝ)           stepsize multiplication, error δ₂
+//! (8c)  x̂⁺ = fl₃(x̂ − m)          subtraction, error δ₃
+//! ```
+//!
+//! Each step's rounding scheme is chosen independently ([`StepSchemes`]),
+//! which is exactly the paper's experimental protocol (e.g. Fig. 4b: SRε for
+//! (8a)+(8b), signed-SRε for (8c)). For `SignedSrEps` the steering value is
+//!
+//! * `(8b)`: `v = −ĝᵢ` — bias `−sign(v) = +sign(ĝᵢ)` *enlarges* the step in
+//!   the gradient direction (the descent choice; with this steering the law
+//!   coincides with `SRε(t·ĝᵢ)` since `sign(t·ĝᵢ) = sign(ĝᵢ)`);
+//! * `(8c)`: `v = +ĝᵢ` — bias `−sign(ĝᵢ)` on the new iterate, i.e. a descent
+//!   direction, exactly as §4.2.2 prescribes ("replacing v with the
+//!   components of the gradient vector").
+
+use crate::fp::format::FpFormat;
+use crate::fp::linalg::{exact, LpCtx};
+use crate::fp::rng::Rng;
+use crate::fp::round::Rounding;
+use crate::gd::stagnation::tau_k;
+use crate::gd::trace::{IterRecord, Trace};
+use crate::problems::Problem;
+
+/// Rounding scheme per GD step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepSchemes {
+    /// Scheme used *inside* the gradient evaluation (8a).
+    pub grad: Rounding,
+    /// Scheme for the stepsize multiplication (8b).
+    pub mul: Rounding,
+    /// Scheme for the final subtraction (8c).
+    pub sub: Rounding,
+}
+
+impl StepSchemes {
+    /// All three steps with the same scheme.
+    pub fn uniform(mode: Rounding) -> Self {
+        Self { grad: mode, mul: mode, sub: mode }
+    }
+
+    pub fn label(&self) -> String {
+        format!("8a={} 8b={} 8c={}", self.grad.label(), self.mul.label(), self.sub.label())
+    }
+}
+
+/// How the gradient (8a) is evaluated in low precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradModel {
+    /// Exact (binary64) gradient: σ₁ = 0, the `c = 0` case of eq. (9).
+    Exact,
+    /// chop-style: each matrix/vector *operation result* is rounded
+    /// entrywise into the working format (the paper's own §2.4 methodology).
+    RoundAfterOp,
+    /// Strict model: every scalar elementary operation is rounded (the
+    /// [13, §3.1] accumulation; slower, larger effective `c`).
+    PerOp,
+}
+
+/// Configuration of one GD run.
+#[derive(Debug, Clone)]
+pub struct GdConfig {
+    pub fmt: FpFormat,
+    pub schemes: StepSchemes,
+    pub grad_model: GradModel,
+    /// Fixed stepsize t.
+    pub t: f64,
+    /// Number of iterations (epochs for the learning problems).
+    pub steps: usize,
+    pub seed: u64,
+    /// Record τ_k each iteration (costs one RN pass over the gradient).
+    pub record_tau: bool,
+}
+
+impl GdConfig {
+    pub fn new(fmt: FpFormat, schemes: StepSchemes, t: f64, steps: usize) -> Self {
+        Self { fmt, schemes, grad_model: GradModel::RoundAfterOp, t, steps, seed: 0, record_tau: false }
+    }
+}
+
+/// The GD engine. Owns the iterate and the per-step rounding streams.
+pub struct GdEngine<'p, P: Problem + ?Sized> {
+    pub cfg: GdConfig,
+    pub problem: &'p P,
+    /// Current iterate x̂ (always exactly representable in `cfg.fmt`).
+    pub x: Vec<f64>,
+    ctx_grad: LpCtx,
+    rng_mul: Rng,
+    rng_sub: Rng,
+    ghat: Vec<f64>,
+    gexact: Vec<f64>,
+}
+
+impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
+    pub fn new(cfg: GdConfig, problem: &'p P, x0: &[f64]) -> Self {
+        assert_eq!(x0.len(), problem.dim());
+        let root = Rng::new(cfg.seed);
+        let mut ctx_grad = LpCtx::new(cfg.fmt, cfg.schemes.grad, root.fork("sigma1", 0));
+        if cfg.grad_model == GradModel::Exact {
+            ctx_grad = LpCtx::exact();
+        }
+        // The starting point is stored in the working format.
+        let mut x = x0.to_vec();
+        let mut rng0 = root.fork("x0", 0);
+        for xi in x.iter_mut() {
+            *xi = crate::fp::round::round(&cfg.fmt, Rounding::RoundNearestEven, *xi, &mut rng0);
+        }
+        let n = x.len();
+        Self {
+            problem,
+            x,
+            ctx_grad,
+            rng_mul: root.fork("delta2", 0),
+            rng_sub: root.fork("delta3", 0),
+            ghat: vec![0.0; n],
+            gexact: vec![0.0; n],
+            cfg,
+        }
+    }
+
+    /// Evaluate step (8a): the low-precision gradient ĝ = ∇f(x̂) + σ₁.
+    fn eval_gradient(&mut self) {
+        match self.cfg.grad_model {
+            GradModel::Exact => self.problem.gradient_exact(&self.x, &mut self.ghat),
+            GradModel::RoundAfterOp => {
+                self.problem.gradient_rounded(&self.x, &mut self.ctx_grad, &mut self.ghat)
+            }
+            GradModel::PerOp => {
+                self.problem.gradient_per_op(&self.x, &mut self.ctx_grad, &mut self.ghat)
+            }
+        }
+    }
+
+    /// One full GD iteration (8a)+(8b)+(8c). Returns true if the iterate moved.
+    pub fn step(&mut self) -> bool {
+        self.eval_gradient();
+        let fmt = self.cfg.fmt;
+        let t = self.cfg.t;
+        let mut moved = false;
+        for i in 0..self.x.len() {
+            let g = self.ghat[i];
+            // (8b): m = fl₂(t·ĝᵢ), steering v = −ĝᵢ (descent bias).
+            let m = crate::fp::round::round_with(&fmt, self.cfg.schemes.mul, t * g, -g, &mut self.rng_mul);
+            // (8c): x̂ᵢ⁺ = fl₃(x̂ᵢ − m), steering v = +ĝᵢ (descent bias).
+            let z = self.x[i] - m;
+            let xi1 = crate::fp::round::round_with(&fmt, self.cfg.schemes.sub, z, g, &mut self.rng_sub);
+            if xi1 != self.x[i] {
+                moved = true;
+            }
+            self.x[i] = xi1;
+        }
+        moved
+    }
+
+    /// Run the configured number of steps, recording a [`Trace`].
+    /// `metric` (optional) computes a task-level number per iteration, e.g.
+    /// test error for the MLR/NN figures.
+    pub fn run(&mut self, metric: Option<&dyn Fn(&[f64]) -> f64>) -> Trace {
+        let mut trace = Trace::default();
+        for k in 0..self.cfg.steps {
+            // Diagnostics on the *current* iterate.
+            self.problem.gradient_exact(&self.x, &mut self.gexact);
+            let f = self.problem.objective(&self.x);
+            let grad_norm = exact::norm2(&self.gexact);
+            let dist = match self.problem.optimum() {
+                Some(xs) => exact::norm2(&exact::sub(&self.x, xs)),
+                None => f64::NAN,
+            };
+            let tau = if self.cfg.record_tau {
+                // τ_k is defined w.r.t. the computed gradient ĝ.
+                self.eval_gradient();
+                tau_k(&self.cfg.fmt, &self.x, &self.ghat, self.cfg.t).tau
+            } else {
+                f64::NAN
+            };
+            let m = metric.map(|f| f(&self.x)).unwrap_or(f64::NAN);
+            let moved = self.step();
+            trace.push(IterRecord {
+                k,
+                f,
+                grad_norm,
+                dist_to_opt: dist,
+                tau,
+                stalled: !moved,
+                metric: m,
+            });
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::quadratic::Quadratic;
+
+    fn schemes_rn() -> StepSchemes {
+        StepSchemes::uniform(Rounding::RoundNearestEven)
+    }
+
+    /// In exact arithmetic (binary64 + RN ≈ exact for these magnitudes) GD on
+    /// a quadratic contracts linearly: x⁺ − x* = (1−2tλ)(x − x*) per coord.
+    #[test]
+    fn exact_gd_contracts_on_quadratic() {
+        let p = Quadratic::diagonal(vec![1.0, 0.5], vec![0.0, 0.0]);
+        let mut cfg = GdConfig::new(FpFormat::BINARY64, schemes_rn(), 0.1, 200);
+        cfg.grad_model = GradModel::Exact;
+        let mut e = GdEngine::new(cfg, &p, &[1.0, -1.0]);
+        let tr = e.run(None);
+        assert!(tr.final_f() < 1e-4 * tr.records[0].f);
+        // Monotone decrease.
+        for w in tr.records.windows(2) {
+            assert!(w[1].f <= w[0].f + 1e-15);
+        }
+    }
+
+    /// The Figure-2 phenomenon: binary8 + RN on f(x) = (x−1024)² stagnates
+    /// at a point strictly away from the optimum, with τ_k ≤ u/2 from the
+    /// stagnation onset onwards.
+    #[test]
+    fn rn_binary8_stagnates_figure2() {
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]); // f = (x−1024)²
+        let mut cfg = GdConfig::new(FpFormat::BINARY8, schemes_rn(), 0.05, 40);
+        cfg.record_tau = true;
+        let mut e = GdEngine::new(cfg, &p, &[1.0]);
+        let tr = e.run(None);
+        let onset = tr.stagnation_onset().expect("GD should stagnate under RN");
+        assert!(onset < 20, "onset={onset}");
+        let xk = e.x[0];
+        assert!(xk != 1024.0, "stagnated iterate should be off-optimum, got {xk}");
+        // τ_k below threshold at the stalled iterations.
+        let u = FpFormat::BINARY8.unit_roundoff();
+        for r in tr.records.iter().filter(|r| r.k > onset) {
+            assert!(r.tau <= u / 2.0 + 1e-15, "k={} tau={}", r.k, r.tau);
+        }
+    }
+
+    /// SR rescues the same run: the expected objective keeps decreasing and
+    /// ends far below the RN stagnation level (Gupta et al. phenomenon the
+    /// paper analyses).
+    #[test]
+    fn sr_escapes_stagnation() {
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+        // RN run.
+        let mut cfg = GdConfig::new(FpFormat::BINARY8, schemes_rn(), 0.05, 200);
+        cfg.seed = 1;
+        let mut ern = GdEngine::new(cfg.clone(), &p, &[1.0]);
+        let f_rn = ern.run(None).final_f();
+        // SR runs (average of a few seeds).
+        let mut acc = 0.0;
+        let nseed = 8;
+        for s in 0..nseed {
+            let mut c = GdConfig::new(FpFormat::BINARY8, StepSchemes::uniform(Rounding::Sr), 0.05, 200);
+            c.seed = 100 + s;
+            let mut esr = GdEngine::new(c, &p, &[1.0]);
+            acc += esr.run(None).final_f();
+        }
+        let f_sr = acc / nseed as f64;
+        assert!(
+            f_sr < 0.25 * f_rn,
+            "SR should end much lower than stagnated RN: f_sr={f_sr} f_rn={f_rn}"
+        );
+    }
+
+    /// signed-SRε converges faster than SR on the stagnation-prone run
+    /// (the paper's headline claim, ≈2× in §5). Speed is measured as the
+    /// cumulative objective along the trajectory (area under the loss curve):
+    /// both runs eventually reach the representable optimum, so the *final*
+    /// value does not discriminate, but the faster method accumulates less.
+    #[test]
+    fn signed_sr_eps_beats_sr() {
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+        let steps = 120;
+        let avg_auc = |sub: Rounding| -> f64 {
+            let mut acc = 0.0;
+            let nseed = 10;
+            for s in 0..nseed {
+                let schemes = StepSchemes { grad: Rounding::Sr, mul: Rounding::Sr, sub };
+                let mut c = GdConfig::new(FpFormat::BINARY8, schemes, 0.05, steps);
+                c.seed = 10 + s;
+                let mut e = GdEngine::new(c, &p, &[1.0]);
+                acc += e.run(None).objective_series().iter().sum::<f64>();
+            }
+            acc / nseed as f64
+        };
+        let auc_sr = avg_auc(Rounding::Sr);
+        let auc_signed = avg_auc(Rounding::SignedSrEps(0.25));
+        assert!(
+            auc_signed < auc_sr,
+            "signed-SRε should beat SR: signed={auc_signed} sr={auc_sr}"
+        );
+    }
+
+    /// The iterate always remains exactly representable in the working format.
+    #[test]
+    fn iterate_stays_in_format() {
+        let p = Quadratic::diagonal(vec![1.0, 3.0, 0.2], vec![0.3, -2.0, 5.0]);
+        let mut cfg =
+            GdConfig::new(FpFormat::BINARY8, StepSchemes::uniform(Rounding::Sr), 0.07, 60);
+        cfg.seed = 5;
+        let mut e = GdEngine::new(cfg, &p, &[2.0, 2.0, 2.0]);
+        for _ in 0..60 {
+            e.step();
+            for &xi in &e.x {
+                assert!(FpFormat::BINARY8.contains(xi), "xi={xi}");
+            }
+        }
+    }
+}

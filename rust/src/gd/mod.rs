@@ -1,0 +1,12 @@
+//! The gradient-descent engine under floating-point rounding (systems
+//! S5–S7): the three-step iteration (8a)/(8b)/(8c), stagnation analysis
+//! (§3.2), and the paper's convergence-theory calculators (§4).
+
+pub mod engine;
+pub mod stagnation;
+pub mod theory;
+pub mod trace;
+
+pub use engine::{GdConfig, GdEngine, GradModel, StepSchemes};
+pub use stagnation::{lsb_is_even, tau_k, StagnationReport};
+pub use trace::{IterRecord, Trace};

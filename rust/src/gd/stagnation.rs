@@ -1,0 +1,142 @@
+//! Stagnation analysis of GD under RN (paper §3.2).
+//!
+//! Write `z_i^{(k+1)} = x̂_i^{(k)} − RN(t·RN(∇f(x̂^{(k)})_i)) = μ_i 2^{e_i − s}`
+//! with `μ_i ∈ [2^{s−1}, 2^s)`. The paper defines
+//!
+//! `τ_k := max_i 2^{−e_i} RN(t · RN(∇f(x̂^{(k)})_i))`
+//!
+//! and shows GD stagnates under RN when `τ_k ≤ u/2` and the least significant
+//! bit of `x̂_{i_k}` is 0: the scaled update falls below half an ulp of the
+//! landing binade, so RN maps `z` back to `x̂`.
+
+use crate::fp::format::{exponent_of, FpFormat};
+use crate::fp::round::{round, Rounding};
+use crate::fp::rng::Rng;
+
+/// Result of the τ_k computation for one iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct StagnationReport {
+    /// τ_k as defined above (0 when the update is identically zero).
+    pub tau: f64,
+    /// The arg-max coordinate i_k.
+    pub argmax: usize,
+    /// τ_k ≤ u/2, the paper's stagnation threshold.
+    pub below_threshold: bool,
+    /// Is the least significant bit of x̂_{i_k} zero (even significand)?
+    pub lsb_even: bool,
+}
+
+/// Least-significant-bit parity of a representable value `x ∈ F`:
+/// true iff the significand is even (lsb = 0).
+pub fn lsb_is_even(fmt: &FpFormat, x: f64) -> bool {
+    if x == 0.0 {
+        return true;
+    }
+    let q = fmt.spacing_at(x);
+    let m = (x / q).abs();
+    debug_assert_eq!(m, m.trunc(), "lsb_is_even requires x ∈ F");
+    (m as u64) % 2 == 0
+}
+
+/// Compute τ_k for the current iterate `x` and *computed* (already rounded,
+/// step-(8a)) gradient `ghat`, with stepsize `t`, under RN in `fmt`.
+///
+/// `2^{e_i - s}`-scaling: with `μ ∈ [2^{s−1}, 2^s)` we have
+/// `e_i = exponent_of(|z_i|) + 1`, so `2^{−e_i} = 2^{−(⌊log₂|z_i|⌋+1)}`.
+pub fn tau_k(fmt: &FpFormat, x: &[f64], ghat: &[f64], t: f64) -> StagnationReport {
+    debug_assert_eq!(x.len(), ghat.len());
+    let mut rng = Rng::new(0); // RN consumes no randomness
+    let mut tau = 0.0f64;
+    let mut argmax = 0usize;
+    for i in 0..x.len() {
+        // RN(t · RN(ĝ_i)): ĝ is already in F (RN(ĝ)=ĝ); round the product.
+        let upd = round(fmt, Rounding::RoundNearestEven, t * ghat[i], &mut rng).abs();
+        let z = x[i] - upd * ghat[i].signum(); // landing point (exact probe)
+        if z == 0.0 {
+            continue; // landing exactly on zero cannot stagnate via binade scaling
+        }
+        let e = exponent_of(z.abs()) + 1;
+        let scaled = upd * crate::fp::format::pow2(-e);
+        if scaled > tau {
+            tau = scaled;
+            argmax = i;
+        }
+    }
+    let below = tau <= fmt.unit_roundoff() / 2.0;
+    StagnationReport {
+        tau,
+        argmax,
+        below_threshold: below,
+        lsb_even: lsb_is_even(fmt, x[argmax]),
+    }
+}
+
+/// Scenario classification per coordinate (conditions (11)/(12)): does the
+/// scaled update exceed half the gap to the strict neighbors of x̂_i?
+/// Returns the fraction of coordinates in Scenario 1 (no stagnation).
+pub fn scenario1_fraction(fmt: &FpFormat, x: &[f64], update: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), update.len());
+    if x.is_empty() {
+        return 1.0;
+    }
+    let mut n1 = 0usize;
+    for i in 0..x.len() {
+        let su = fmt.successor(x[i]);
+        let pr = fmt.predecessor(x[i]);
+        let up = update[i].abs();
+        let gap_up = su - x[i];
+        let gap_dn = x[i] - pr;
+        // Condition (11): the update is large relative to either gap.
+        if (gap_up.is_finite() && up / gap_up > 0.5) || (gap_dn.is_finite() && up / gap_dn > 0.5) {
+            n1 += 1;
+        }
+    }
+    n1 as f64 / x.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B8: FpFormat = FpFormat::BINARY8;
+
+    #[test]
+    fn lsb_parity() {
+        // At binade [1024, 2048), spacing 256: 1024 → m=4 even; 1280 → m=5 odd.
+        assert!(lsb_is_even(&B8, 1024.0));
+        assert!(!lsb_is_even(&B8, 1280.0));
+        assert!(lsb_is_even(&B8, 1536.0));
+        assert!(lsb_is_even(&B8, 0.0));
+        assert!(lsb_is_even(&B8, -1024.0));
+    }
+
+    /// The paper's Figure 2 example: f(x) = (x−1024)², binary8 + RN. Once the
+    /// update is small relative to ulp(x̂)≈256, τ_k ≤ u/2 and GD stalls.
+    #[test]
+    fn tau_detects_stagnation_near_1024() {
+        // x̂ = 1280, gradient 2(x−1024) = 512, t small ⇒ t·g = 5.12 ≪ 128.
+        let x = [1280.0];
+        let g = [512.0];
+        let rep = tau_k(&B8, &x, &g, 0.01);
+        assert!(rep.below_threshold, "tau={}", rep.tau);
+        // Large update ⇒ no stagnation flag.
+        let rep2 = tau_k(&B8, &x, &g, 0.5);
+        assert!(!rep2.below_threshold, "tau={}", rep2.tau);
+    }
+
+    #[test]
+    fn tau_zero_update() {
+        let rep = tau_k(&B8, &[1.0, 2.0], &[0.0, 0.0], 0.1);
+        assert_eq!(rep.tau, 0.0);
+        assert!(rep.below_threshold);
+    }
+
+    #[test]
+    fn scenario_fraction() {
+        // x=1.0 in binary8: su−x = 0.25, x−pr = 0.125.
+        // update 0.2 > 0.5·0.125 ⇒ scenario 1; update 0.01 ⇒ scenario 2.
+        assert_eq!(scenario1_fraction(&B8, &[1.0], &[0.2]), 1.0);
+        assert_eq!(scenario1_fraction(&B8, &[1.0], &[0.01]), 0.0);
+        assert_eq!(scenario1_fraction(&B8, &[1.0, 1.0], &[0.2, 0.01]), 0.5);
+    }
+}

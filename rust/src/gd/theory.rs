@@ -1,0 +1,173 @@
+//! Convergence-theory calculators (paper §4): the bounds and precondition
+//! checkers behind Table 1. Each function mirrors one numbered result so the
+//! `table1` experiment can verify, on a live run, that (i) the preconditions
+//! hold and (ii) the claimed conclusion holds.
+
+use crate::fp::format::FpFormat;
+
+/// Theorem 2 (exact arithmetic): `f(x^{(k)}) − f(x*) ≤ 2L‖x⁰−x*‖² / (4+Ltk)`.
+pub fn theorem2_bound(lip: f64, t: f64, k: usize, dist0: f64) -> f64 {
+    2.0 * lip * dist0 * dist0 / (4.0 + lip * t * k as f64)
+}
+
+/// Theorem 6(i) (SR, condition (14)): `E[f−f*] ≤ 2Lχ² / (4+Ltk(1−2a))`.
+pub fn theorem6_bound(lip: f64, t: f64, k: usize, chi: f64, a: f64) -> f64 {
+    2.0 * lip * chi * chi / (4.0 + lip * t * k as f64 * (1.0 - 2.0 * a))
+}
+
+/// Theorem 6(ii) (SR, condition (15)): denominator uses `1 − 2a²`.
+pub fn theorem6_bound_ii(lip: f64, t: f64, k: usize, chi: f64, a: f64) -> f64 {
+    2.0 * lip * chi * chi / (4.0 + lip * t * k as f64 * (1.0 - 2.0 * a * a))
+}
+
+/// Corollary 7(i) (SRε for (8b)): `E[f−f*] ≤ 2Lχ² / (4+Ltk(1+2b−2a))`
+/// for some `0 < b ≤ 2εu`.
+pub fn corollary7_bound(lip: f64, t: f64, k: usize, chi: f64, a: f64, b: f64) -> f64 {
+    2.0 * lip * chi * chi / (4.0 + lip * t * k as f64 * (1.0 + 2.0 * b - 2.0 * a))
+}
+
+/// The paper's precision gate: `u ≤ a / (c + 4a + 4)` (Prop. 3 / Lemma 4 /
+/// Thms. 5–6). Returns the max admissible `u` for a given `(a, c)`.
+pub fn u_upper_bound(a: f64, c: f64) -> f64 {
+    a / (c + 4.0 * a + 4.0)
+}
+
+/// Stepsize gate used throughout §4: `t ≤ 1 / (L(1+2u)²)`.
+pub fn t_upper_bound(lip: f64, u: f64) -> f64 {
+    1.0 / (lip * (1.0 + 2.0 * u) * (1.0 + 2.0 * u))
+}
+
+/// Proposition 3 gradient-norm gate (17):
+/// `‖∇f‖ ≥ (1−a)⁻¹ (2+4u+√(1−a)) √n c u`.
+pub fn prop3_grad_gate(a: f64, u: f64, n: usize, c: f64) -> f64 {
+    (2.0 + 4.0 * u + (1.0 - a).sqrt()) / (1.0 - a) * (n as f64).sqrt() * c * u
+}
+
+/// Lemma 4 gradient-norm gate (24): `‖∇f‖ ≥ a⁻¹ (2+4u+√a) √n c u`.
+pub fn lemma4_grad_gate(a: f64, u: f64, n: usize, c: f64) -> f64 {
+    (2.0 + 4.0 * u + a.sqrt()) / a * (n as f64).sqrt() * c * u
+}
+
+/// Theorem 6(i) gate (33): `E‖∇f‖ ≥ a⁻¹ (2+√a) √n c u`.
+pub fn theorem6_grad_gate(a: f64, u: f64, n: usize, c: f64) -> f64 {
+    (2.0 + a.sqrt()) / a * (n as f64).sqrt() * c * u
+}
+
+/// Theorem 6(ii) gate (35): `E‖∇f‖ ≥ 3 a⁻¹ √n c u`.
+pub fn theorem6_grad_gate_ii(a: f64, u: f64, n: usize, c: f64) -> f64 {
+    3.0 / a * (n as f64).sqrt() * c * u
+}
+
+/// Corollary 7(i) gate (44): `E‖∇f‖ ≥ a⁻¹ (2+√a+4εu) √n c u`.
+pub fn corollary7_grad_gate(a: f64, u: f64, n: usize, c: f64, eps: f64) -> f64 {
+    (2.0 + a.sqrt() + 4.0 * eps * u) / a * (n as f64).sqrt() * c * u
+}
+
+/// Proposition 9(i) gate (51), the stagnation-scenario SR monotonicity:
+/// `E‖∇f‖ ≥ cu√n/(1−cu) + (u/t)·√(1/(1−cu))·√E‖x̂‖²`.
+pub fn prop9_grad_gate(u: f64, t: f64, n: usize, c: f64, x_norm2: f64) -> f64 {
+    let cu = c * u;
+    cu * (n as f64).sqrt() / (1.0 - cu) + u / t * (1.0 / (1.0 - cu)).sqrt() * x_norm2.sqrt()
+}
+
+/// Proposition 9(ii) gate (52): `E‖∇f‖ ≥ (u/t)·√E‖x̂‖²`.
+pub fn prop9_grad_gate_ii(u: f64, t: f64, x_norm2: f64) -> f64 {
+    u / t * x_norm2.sqrt()
+}
+
+/// Proposition 11(i) gate (62), signed-SRε version of (51): extra `(1+2ε)`.
+pub fn prop11_grad_gate(u: f64, t: f64, n: usize, c: f64, eps: f64, x_norm2: f64) -> f64 {
+    let cu = c * u;
+    cu * (n as f64).sqrt() / (1.0 - cu)
+        + u / t * ((1.0 + 2.0 * eps) / (1.0 - cu)).sqrt() * x_norm2.sqrt()
+}
+
+/// Proposition 11(ii) gate (63): `E‖∇f‖ ≥ (u/t)·√(1+2ε)·√E‖x̂‖²`.
+pub fn prop11_grad_gate_ii(u: f64, t: f64, eps: f64, x_norm2: f64) -> f64 {
+    u / t * (1.0 + 2.0 * eps).sqrt() * x_norm2.sqrt()
+}
+
+/// Condition (25) of Lemma 4 viewed as an upper bound on u:
+/// `u ≤ ¼(1−2a) t ‖∇f(x̂^{(k−1)})‖² / (‖∇f(x̂^{(k)})‖ ‖z^{(k)}‖)`.
+pub fn lemma4_u_gate(a: f64, t: f64, g_prev: f64, g_cur: f64, z_norm: f64) -> f64 {
+    0.25 * (1.0 - 2.0 * a) * t * g_prev * g_prev / (g_cur * z_norm)
+}
+
+/// Does a format pass the `u ≤ a/(c+4a+4)` gate for given (a, c)?
+pub fn format_admissible(fmt: &FpFormat, a: f64, c: f64) -> bool {
+    fmt.unit_roundoff() <= u_upper_bound(a, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theorem2_decreases_in_k() {
+        let b0 = theorem2_bound(1.0, 0.1, 0, 2.0);
+        let b10 = theorem2_bound(1.0, 0.1, 10, 2.0);
+        let b100 = theorem2_bound(1.0, 0.1, 100, 2.0);
+        assert_eq!(b0, 2.0); // 2L d²/4 = d²/2·L... 2·1·4/4
+        assert!(b10 < b0 && b100 < b10);
+        // O(1/k) tail: k·bound approaches a constant.
+        let t1 = 1e6 as usize;
+        let r = theorem2_bound(1.0, 0.1, t1, 2.0) * t1 as f64;
+        assert!((r - 2.0 * 4.0 / 0.1).abs() / r < 1e-3);
+    }
+
+    #[test]
+    fn corollary7_tighter_than_theorem6() {
+        // Any b > 0 strictly improves the denominator.
+        let (l, t, k, chi, a) = (1.0, 0.1, 100, 2.0, 0.1);
+        let t6 = theorem6_bound(l, t, k, chi, a);
+        let c7 = corollary7_bound(l, t, k, chi, a, 1e-3);
+        assert!(c7 < t6);
+        // And both are looser than exact-arithmetic Theorem 2.
+        assert!(theorem2_bound(l, t, k, chi) < t6);
+    }
+
+    #[test]
+    fn precision_gates_table() {
+        // With c = 2 and a = 0.45: u ≤ 0.45/(2+1.8+4) = 0.0577 — binary8's
+        // u = 0.125 FAILS, bfloat16's u = 2⁻⁸ passes. This is exactly why the
+        // paper runs the quadratic study in bfloat16.
+        let a = 0.45;
+        let c = 2.0;
+        assert!(!format_admissible(&FpFormat::BINARY8, a, c));
+        assert!(format_admissible(&FpFormat::BFLOAT16, a, c));
+        assert!(format_admissible(&FpFormat::BINARY32, a, c));
+    }
+
+    #[test]
+    fn stepsize_gate_slightly_below_one_over_l() {
+        let u = FpFormat::BFLOAT16.unit_roundoff();
+        let t = t_upper_bound(1000.0, u);
+        assert!(t < 1e-3);
+        assert!(t > 0.98e-3);
+    }
+
+    #[test]
+    fn gates_scale_with_dimension_and_u() {
+        let (a, c) = (0.25, 2.0);
+        let u8 = FpFormat::BINARY8.unit_roundoff();
+        let u16 = FpFormat::BFLOAT16.unit_roundoff();
+        assert!(lemma4_grad_gate(a, u8, 1000, c) > lemma4_grad_gate(a, u16, 1000, c));
+        assert!(lemma4_grad_gate(a, u16, 4000, c) > lemma4_grad_gate(a, u16, 1000, c));
+        // Theorem 6(ii) gate is stricter than (i) for small a (paper remark).
+        let small_a = 0.05;
+        assert!(
+            theorem6_grad_gate_ii(small_a, u16, 1000, c)
+                > theorem6_grad_gate(small_a, u16, 1000, c) * 0.9
+        );
+    }
+
+    #[test]
+    fn prop11_gate_exceeds_prop9_gate() {
+        // signed-SRε pays a (1+2ε) factor on the ‖x̂‖ term (Prop 11 vs 9).
+        let u = FpFormat::BINARY8.unit_roundoff();
+        let g9 = prop9_grad_gate(u, 0.5, 100, 2.0, 50.0);
+        let g11 = prop11_grad_gate(u, 0.5, 100, 2.0, 0.5, 50.0);
+        assert!(g11 > g9);
+        assert!(prop11_grad_gate_ii(u, 0.5, 0.5, 50.0) > prop9_grad_gate_ii(u, 0.5, 50.0));
+    }
+}

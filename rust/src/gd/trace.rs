@@ -1,0 +1,133 @@
+//! Iteration traces: everything the figures need, recorded per GD step.
+
+/// One GD iteration's worth of diagnostics (exact-arithmetic monitoring of a
+/// low-precision run; the monitored quantities never feed back into the run).
+#[derive(Debug, Clone)]
+pub struct IterRecord {
+    pub k: usize,
+    /// Objective f(x̂^(k)), evaluated exactly.
+    pub f: f64,
+    /// ‖∇f(x̂^(k))‖ (exact gradient).
+    pub grad_norm: f64,
+    /// ‖x̂^(k) − x*‖ when the optimum is known, else NaN.
+    pub dist_to_opt: f64,
+    /// τ_k from §3.2 (NaN when not recorded).
+    pub tau: f64,
+    /// Did the iterate fail to move this step (x̂^(k+1) == x̂^(k))?
+    pub stalled: bool,
+    /// Task-level metric (test error for MLR/NN figures; NaN otherwise).
+    pub metric: f64,
+}
+
+/// A full GD run trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub records: Vec<IterRecord>,
+}
+
+impl Trace {
+    pub fn push(&mut self, r: IterRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn objective_series(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.f).collect()
+    }
+
+    pub fn metric_series(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.metric).collect()
+    }
+
+    pub fn tau_series(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.tau).collect()
+    }
+
+    pub fn final_f(&self) -> f64 {
+        self.records.last().map(|r| r.f).unwrap_or(f64::NAN)
+    }
+
+    /// First iteration index from which the iterate never moves again
+    /// (`None` if the run keeps moving). This is the paper's "stagnation
+    /// from step k" notion used in Figure 2.
+    pub fn stagnation_onset(&self) -> Option<usize> {
+        let mut onset = None;
+        for r in &self.records {
+            if r.stalled {
+                if onset.is_none() {
+                    onset = Some(r.k);
+                }
+            } else {
+                onset = None;
+            }
+        }
+        onset
+    }
+}
+
+/// Pointwise mean of many traces' series — the paper's E[·] over 20 runs.
+pub fn mean_series(series: &[Vec<f64>]) -> Vec<f64> {
+    if series.is_empty() {
+        return vec![];
+    }
+    let n = series.iter().map(|s| s.len()).min().unwrap_or(0);
+    (0..n).map(|k| series.iter().map(|s| s[k]).sum::<f64>() / series.len() as f64).collect()
+}
+
+/// Pointwise population variance of many traces' series (paper §5.2 reports
+/// population variance over the 20 simulations).
+pub fn variance_series(series: &[Vec<f64>]) -> Vec<f64> {
+    if series.is_empty() {
+        return vec![];
+    }
+    let n = series.iter().map(|s| s.len()).min().unwrap_or(0);
+    let m = mean_series(series);
+    (0..n)
+        .map(|k| {
+            series.iter().map(|s| (s[k] - m[k]) * (s[k] - m[k])).sum::<f64>() / series.len() as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(k: usize, f: f64, stalled: bool) -> IterRecord {
+        IterRecord { k, f, grad_norm: 0.0, dist_to_opt: f64::NAN, tau: f64::NAN, stalled, metric: f64::NAN }
+    }
+
+    #[test]
+    fn stagnation_onset_finds_terminal_stall() {
+        let mut t = Trace::default();
+        for (k, st) in [(0, false), (1, true), (2, false), (3, true), (4, true)] {
+            t.push(rec(k, 1.0, st));
+        }
+        assert_eq!(t.stagnation_onset(), Some(3));
+    }
+
+    #[test]
+    fn stagnation_onset_none_when_moving() {
+        let mut t = Trace::default();
+        t.push(rec(0, 1.0, false));
+        t.push(rec(1, 0.5, false));
+        assert_eq!(t.stagnation_onset(), None);
+    }
+
+    #[test]
+    fn mean_and_variance() {
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![3.0, 2.0, 1.0];
+        let m = mean_series(&[a.clone(), b.clone()]);
+        assert_eq!(m, vec![2.0, 2.0, 2.0]);
+        let v = variance_series(&[a, b]);
+        assert_eq!(v, vec![1.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,30 @@
+//! # lpgd — Low-Precision Gradient Descent with Stochastic Rounding
+//!
+//! A production-grade reproduction of *"On the influence of stochastic
+//! roundoff errors and their bias on the convergence of the gradient descent
+//! method with low-precision floating-point computation"* (Xia, Massei,
+//! Hochstenbach, Koren; 2022).
+//!
+//! The crate provides:
+//! * [`fp`] — a bit-exact software simulator of low-precision floating-point
+//!   formats (binary8/E5M2, bfloat16, …) with every rounding scheme in the
+//!   paper: RN, directed modes, SR, SRε and signed-SRε;
+//! * [`gd`] — the three-step GD iteration (8a)/(8b)/(8c) with per-step
+//!   rounding control, stagnation analysis (τ_k) and the paper's convergence
+//!   bounds;
+//! * [`problems`] — quadratics (Settings I/II), multinomial logistic
+//!   regression and a two-layer NN;
+//! * [`data`] — dataset substrate (procedural digits + IDX loader);
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas train steps;
+//! * [`coordinator`] — the experiment registry that regenerates every table
+//!   and figure of the paper, plus sweep running and report writing;
+//! * [`util`] — the in-repo CLI/config/CSV/bench plumbing (this image is
+//!   offline, so no external crates beyond `xla` and `anyhow`).
+
+pub mod coordinator;
+pub mod data;
+pub mod fp;
+pub mod gd;
+pub mod problems;
+pub mod runtime;
+pub mod util;

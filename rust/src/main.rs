@@ -1,0 +1,207 @@
+//! `lpgd` — the Layer-3 coordinator CLI.
+//!
+//! ```text
+//! lpgd list                             list reproducible experiments
+//! lpgd reproduce <id|all> [opts]        regenerate a paper table/figure
+//!     --seeds N      (default 5; paper uses 20)
+//!     --out-dir D    (default results/)
+//!     --quick        smoke-scale profile
+//!     --side N --mlr-train N --mlr-epochs N ... (see ExpCtx)
+//! lpgd train <mlr|nn> [opts]            one training run with any schemes
+//!     --fmt binary8  --t 0.5 --epochs 50 --seed 0
+//!     --s8a sr --s8b sr --s8c signed:0.1   per-step rounding schemes
+//! lpgd round <value> [opts]             inspect rounding of one value
+//!     --fmt binary8 --mode sr_eps:0.25 --samples 10000
+//! lpgd pjrt-info                        PJRT platform + artifact check
+//! ```
+
+use anyhow::{bail, Result};
+use lpgd::coordinator::experiments::{list_experiments, run_experiment, ExpCtx};
+use lpgd::data::load_or_synth;
+use lpgd::fp::{FpFormat, Rng, Rounding};
+use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::problems::{Mlr, TwoLayerNn};
+use lpgd::util::cli::Args;
+use lpgd::util::table::sparkline;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn ctx_from_args(a: &Args) -> ExpCtx {
+    let mut ctx = if a.has_flag("quick") { ExpCtx::quick() } else { ExpCtx::default() };
+    ctx.seeds = a.get_usize("seeds", ctx.seeds);
+    ctx.out_dir = a.get("out-dir").unwrap_or(&ctx.out_dir).to_string();
+    ctx.side = a.get_usize("side", ctx.side);
+    ctx.mlr_train = a.get_usize("mlr-train", ctx.mlr_train);
+    ctx.mlr_test = a.get_usize("mlr-test", ctx.mlr_test);
+    ctx.nn_train = a.get_usize("nn-train", ctx.nn_train);
+    ctx.nn_test = a.get_usize("nn-test", ctx.nn_test);
+    ctx.mlr_epochs = a.get_usize("mlr-epochs", ctx.mlr_epochs);
+    ctx.nn_epochs = a.get_usize("nn-epochs", ctx.nn_epochs);
+    ctx.quad_steps = a.get_usize("quad-steps", ctx.quad_steps);
+    ctx.quad_n = a.get_usize("quad-n", ctx.quad_n);
+    ctx.mnist_dir = a.get("mnist-dir").map(String::from);
+    ctx
+}
+
+fn scheme_arg(a: &Args, key: &str, default: Rounding) -> Result<Rounding> {
+    match a.get(key) {
+        None => Ok(default),
+        Some(s) => {
+            Rounding::parse(s).ok_or_else(|| anyhow::anyhow!("bad scheme '{s}' for --{key}"))
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let a = Args::from_env();
+    let cmd = a.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "list" => {
+            println!("{:<8}  {}", "id", "description");
+            for (id, desc) in list_experiments() {
+                println!("{id:<8}  {desc}");
+            }
+            println!("\nusage: lpgd reproduce <id|all> [--seeds N] [--quick] [--out-dir D]");
+        }
+        "reproduce" => {
+            let id = a.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let ctx = ctx_from_args(&a);
+            let t0 = std::time::Instant::now();
+            let tables = run_experiment(id, &ctx)?;
+            for t in &tables {
+                println!("{}", t.to_text());
+            }
+            println!(
+                "wrote {} CSV file(s) to {}/ in {:.1}s",
+                tables.len(),
+                ctx.out_dir,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        "train" => {
+            let which = a.positional.get(1).map(|s| s.as_str()).unwrap_or("mlr");
+            let ctx = ctx_from_args(&a);
+            let fmt = FpFormat::by_name(a.get("fmt").unwrap_or("binary8"))
+                .ok_or_else(|| anyhow::anyhow!("unknown --fmt"))?;
+            let schemes = StepSchemes {
+                grad: scheme_arg(&a, "s8a", Rounding::Sr)?,
+                mul: scheme_arg(&a, "s8b", Rounding::Sr)?,
+                sub: scheme_arg(&a, "s8c", Rounding::Sr)?,
+            };
+            let seed = a.get_u64("seed", 0);
+            match which {
+                "mlr" => {
+                    let splits = load_or_synth(
+                        ctx.mnist_dir.as_deref(),
+                        ctx.mlr_train,
+                        ctx.mlr_test,
+                        ctx.side,
+                        42,
+                    );
+                    let p = Mlr::new(splits.train, 10);
+                    let t_step = a.get_f64("t", 0.5);
+                    let epochs = a.get_usize("epochs", ctx.mlr_epochs);
+                    let mut cfg = GdConfig::new(fmt, schemes, t_step, epochs);
+                    cfg.seed = seed;
+                    let x0 = vec![0.0; lpgd::problems::Problem::dim(&p)];
+                    let mut e = GdEngine::new(cfg, &p, &x0);
+                    let metric = |x: &[f64]| p.test_error(x, &splits.test);
+                    let tr = e.run(Some(&metric));
+                    print_training("MLR", fmt, &schemes, t_step, &tr.metric_series());
+                }
+                "nn" => {
+                    let splits = load_or_synth(
+                        ctx.mnist_dir.as_deref(),
+                        ctx.nn_train * 5,
+                        ctx.nn_test * 5,
+                        ctx.side,
+                        77,
+                    );
+                    let train = splits.train.filter_classes(&[3, 8]);
+                    let test = splits.test.filter_classes(&[3, 8]);
+                    let p = TwoLayerNn::new(train, 100);
+                    let t_step = a.get_f64("t", 0.09375);
+                    let epochs = a.get_usize("epochs", ctx.nn_epochs);
+                    let mut cfg = GdConfig::new(fmt, schemes, t_step, epochs);
+                    cfg.seed = seed;
+                    let x0 = p.init_params(seed);
+                    let mut e = GdEngine::new(cfg, &p, &x0);
+                    let metric = |x: &[f64]| p.test_error(x, &test);
+                    let tr = e.run(Some(&metric));
+                    print_training("NN(3v8)", fmt, &schemes, t_step, &tr.metric_series());
+                }
+                other => bail!("unknown model '{other}' (mlr|nn)"),
+            }
+        }
+        "round" => {
+            let val: f64 = a
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: lpgd round <value>"))?
+                .parse()?;
+            let fmt = FpFormat::by_name(a.get("fmt").unwrap_or("binary8"))
+                .ok_or_else(|| anyhow::anyhow!("unknown --fmt"))?;
+            let mode = Rounding::parse(a.get("mode").unwrap_or("sr")).unwrap();
+            let samples = a.get_usize("samples", 10000);
+            let (lo, hi) = fmt.floor_ceil(val);
+            println!("format {}  u={}  neighbors: [{lo}, {hi}]", fmt.name(), fmt.unit_roundoff());
+            let mut rng = Rng::new(a.get_u64("seed", 0));
+            let mut mean = 0.0;
+            let mut n_up = 0usize;
+            for _ in 0..samples {
+                let y = lpgd::fp::round(&fmt, mode, val, &mut rng);
+                mean += y;
+                if y == hi && hi != lo {
+                    n_up += 1;
+                }
+            }
+            mean /= samples as f64;
+            println!(
+                "{}({val}) over {samples} samples: mean={mean}  bias={:+.3e}  P(up)={:.4}",
+                mode.label(),
+                mean - val,
+                n_up as f64 / samples as f64
+            );
+            println!(
+                "closed-form E[fl(x)]={}",
+                lpgd::fp::expected_round(&fmt, mode, val, val)
+            );
+        }
+        "pjrt-info" => {
+            let dir = a.get("artifacts").unwrap_or("artifacts");
+            let mut rt = lpgd::runtime::Runtime::cpu(dir)?;
+            println!("platform: {}", rt.platform());
+            for spec in [
+                lpgd::runtime::QUANTIZE_SPEC,
+                lpgd::runtime::MLR_SPEC,
+                lpgd::runtime::NN_SPEC,
+            ] {
+                match rt.load(spec.file) {
+                    Ok(e) => println!("  {} .. compiled OK ({} params)", e.name, spec.params),
+                    Err(err) => println!("  {} .. FAILED: {err}", spec.file),
+                }
+            }
+        }
+        _ => {
+            println!("lpgd — low-precision GD with stochastic rounding (paper reproduction)");
+            println!("commands: list | reproduce <id|all> | train <mlr|nn> | round <value> | pjrt-info");
+            println!("see `lpgd list` and README.md");
+        }
+    }
+    Ok(())
+}
+
+fn print_training(name: &str, fmt: FpFormat, schemes: &StepSchemes, t: f64, err: &[f64]) {
+    println!(
+        "{name} fmt={} {} t={t}: final test error {:.4}",
+        fmt.name(),
+        schemes.label(),
+        err.last().unwrap_or(&f64::NAN)
+    );
+    println!("test-error curve: {}", sparkline(err, 60));
+}

@@ -1,0 +1,53 @@
+//! Optimization problems (systems S8–S10): the paper's three case studies.
+//!
+//! A [`Problem`] exposes the objective and *three* gradient evaluators,
+//! matching the σ₁ models of [`crate::gd::GradModel`]:
+//! exact (binary64), chop-style round-after-op, and strict per-op rounding.
+
+use crate::fp::linalg::LpCtx;
+
+pub mod mlr;
+pub mod nn;
+pub mod quadratic;
+
+pub use mlr::Mlr;
+pub use nn::TwoLayerNn;
+pub use quadratic::Quadratic;
+
+/// A differentiable objective f: ℝⁿ → ℝ, with gradient evaluation under
+/// configurable low-precision arithmetic.
+pub trait Problem {
+    /// Dimension n of the parameter vector.
+    fn dim(&self) -> usize;
+
+    /// Objective value, in exact (binary64) arithmetic (monitoring only).
+    fn objective(&self, x: &[f64]) -> f64;
+
+    /// Exact gradient (σ₁ = 0).
+    fn gradient_exact(&self, x: &[f64], out: &mut [f64]);
+
+    /// chop-style gradient: operations run in binary64, every operation
+    /// *result* is rounded entrywise into `ctx` (the paper's §2.4 protocol).
+    fn gradient_rounded(&self, x: &[f64], ctx: &mut LpCtx, out: &mut [f64]);
+
+    /// Strict per-elementary-op rounded gradient ([13, §3.1] accumulation).
+    /// Default: fall back to the round-after-op model.
+    fn gradient_per_op(&self, x: &[f64], ctx: &mut LpCtx, out: &mut [f64]) {
+        self.gradient_rounded(x, ctx, out);
+    }
+
+    /// Lipschitz constant L of ∇f, when known analytically.
+    fn lipschitz(&self) -> Option<f64> {
+        None
+    }
+
+    /// The minimizer x*, when known analytically.
+    fn optimum(&self) -> Option<&[f64]> {
+        None
+    }
+
+    /// The constant `c` of the σ₁ bound (9), when known analytically.
+    fn sigma1_constant(&self) -> Option<f64> {
+        None
+    }
+}

@@ -1,0 +1,282 @@
+//! Two-layer neural network for binary classification (paper §5.3):
+//! ReLU hidden layer (100 units), sigmoid output, binary cross-entropy,
+//! Xavier weight init, zero bias init, decision threshold 0.5.
+//!
+//! Parameters flattened as `x = [W1 (H×D) ; b1 (H) ; w2 (H) ; b2 (1)]`,
+//! n = H·(D+2) + 1. Non-convex — the paper uses it to show the rounding
+//! phenomenology extends beyond the convex theory.
+
+use super::Problem;
+use crate::data::Dataset;
+use crate::fp::linalg::LpCtx;
+use crate::fp::rng::Rng;
+
+pub struct TwoLayerNn {
+    pub data: Dataset,
+    pub hidden: usize,
+    d: usize,
+}
+
+fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+impl TwoLayerNn {
+    pub fn new(data: Dataset, hidden: usize) -> Self {
+        let d = data.n_features;
+        Self { data, hidden, d }
+    }
+
+    /// Xavier/Glorot uniform initialization [10]; biases zero (paper §5.3).
+    pub fn init_params(&self, seed: u64) -> Vec<f64> {
+        let (h, d) = (self.hidden, self.d);
+        let mut rng = Rng::new(seed).fork("xavier", 0);
+        let mut x = vec![0.0; self.dim()];
+        let lim1 = (6.0 / (d + h) as f64).sqrt();
+        for v in x[..h * d].iter_mut() {
+            *v = rng.uniform_in(-lim1, lim1);
+        }
+        // b1 zero.
+        let lim2 = (6.0 / (h + 1) as f64).sqrt();
+        let off = h * d + h;
+        for v in x[off..off + h].iter_mut() {
+            *v = rng.uniform_in(-lim2, lim2);
+        }
+        // b2 zero.
+        x
+    }
+
+    fn split<'a>(&self, x: &'a [f64]) -> (&'a [f64], &'a [f64], &'a [f64], f64) {
+        let (h, d) = (self.hidden, self.d);
+        let w1 = &x[..h * d];
+        let b1 = &x[h * d..h * d + h];
+        let w2 = &x[h * d + h..h * d + 2 * h];
+        let b2 = x[h * d + 2 * h];
+        (w1, b1, w2, b2)
+    }
+
+    /// Forward pass, exact arithmetic. Returns the sigmoid output.
+    fn forward_exact(&self, x: &[f64], row: &[f64], hid: &mut [f64]) -> f64 {
+        let (w1, b1, w2, b2) = self.split(x);
+        let (h, d) = (self.hidden, self.d);
+        for j in 0..h {
+            let z = crate::fp::linalg::exact::dot(&w1[j * d..(j + 1) * d], row) + b1[j];
+            hid[j] = z.max(0.0);
+        }
+        sigmoid(crate::fp::linalg::exact::dot(w2, hid) + b2)
+    }
+
+    /// Misclassification rate at threshold 0.5 — the metric of Figure 6.
+    pub fn test_error(&self, x: &[f64], test: &Dataset) -> f64 {
+        let mut hid = vec![0.0; self.hidden];
+        let mut wrong = 0usize;
+        for i in 0..test.len() {
+            let p = self.forward_exact(x, test.row(i), &mut hid);
+            let pred = if p >= 0.5 { 1 } else { 0 };
+            if pred != test.labels[i] {
+                wrong += 1;
+            }
+        }
+        wrong as f64 / test.len() as f64
+    }
+
+    /// Gradient with optional low-precision arithmetic. As in [`super::Mlr`],
+    /// dot products and gradient sums use *blocked low-precision
+    /// accumulation* (block [`ACC_BLOCK`]) when a context is given — this is
+    /// the absorption mechanism behind the paper's RN stagnation (§5.3);
+    /// see DESIGN.md §8.
+    fn gradient_impl(&self, x: &[f64], out: &mut [f64], mut ctx: Option<&mut LpCtx>, lp_acc: bool) {
+        const ACC_BLOCK: usize = 32;
+        let (w1, b1, w2, b2) = self.split(x);
+        let (h, d, n) = (self.hidden, self.d, self.data.len());
+        out.fill(0.0);
+        let (gw1, rest) = out.split_at_mut(h * d);
+        let (gb1, rest) = rest.split_at_mut(h);
+        let (gw2, gb2) = rest.split_at_mut(h);
+        let mut hid = vec![0.0; h];
+        let mut act = vec![false; h];
+        let inv_n = 1.0 / n as f64;
+        // Blocked low-precision dot product (absorption-faithful).
+        let mut lp_dot = |a: &[f64], bvec: &[f64], bias: f64, cx: &mut Option<&mut LpCtx>| -> f64 {
+            match cx.as_deref_mut() {
+                Some(c) if lp_acc => {
+                    let mut acc = 0.0;
+                    let mut j = 0;
+                    while j < a.len() {
+                        let hi = (j + ACC_BLOCK).min(a.len());
+                        let part: f64 = (j..hi).map(|t| a[t] * bvec[t]).sum();
+                        acc = c.add(acc, part);
+                        j = hi;
+                    }
+                    c.add(acc, bias)
+                }
+                Some(c) => c.fl(crate::fp::linalg::exact::dot(a, bvec) + bias),
+                None => crate::fp::linalg::exact::dot(a, bvec) + bias,
+            }
+        };
+        for i in 0..n {
+            let row = self.data.row(i);
+            for j in 0..h {
+                let z = lp_dot(&w1[j * d..(j + 1) * d], row, b1[j], &mut ctx);
+                act[j] = z > 0.0;
+                hid[j] = z.max(0.0);
+            }
+            let zo = lp_dot(w2, &hid, b2, &mut ctx);
+            let mut p = sigmoid(zo);
+            if let Some(cx) = ctx.as_deref_mut() {
+                p = cx.fl(p);
+            }
+            let y = self.data.labels[i] as f64;
+            let delta = (p - y) * inv_n; // dL/dz_out for BCE+sigmoid, pre-averaged
+            // Output layer grads.
+            for j in 0..h {
+                gw2[j] += delta * hid[j];
+            }
+            gb2[0] += delta;
+            // Hidden layer grads through ReLU mask.
+            for j in 0..h {
+                if act[j] {
+                    let dj = delta * w2[j];
+                    let grow = &mut gw1[j * d..(j + 1) * d];
+                    for (g, &xv) in grow.iter_mut().zip(row) {
+                        *g += dj * xv;
+                    }
+                    gb1[j] += dj;
+                }
+            }
+            // Round the gradient accumulators every ACC_BLOCK samples
+            // (absorption model) or once at the end (chop protocol).
+            if (lp_acc && (i + 1) % ACC_BLOCK == 0) || i + 1 == n {
+                if let Some(cx) = ctx.as_deref_mut() {
+                    cx.fl_slice(gw1);
+                    cx.fl_slice(gb1);
+                    cx.fl_slice(gw2);
+                    cx.fl_slice(gb2);
+                }
+            }
+        }
+    }
+}
+
+impl Problem for TwoLayerNn {
+    fn dim(&self) -> usize {
+        self.hidden * (self.d + 2) + 1
+    }
+
+    /// Mean binary cross-entropy on the training set (exact).
+    fn objective(&self, x: &[f64]) -> f64 {
+        let mut hid = vec![0.0; self.hidden];
+        let mut loss = 0.0;
+        for i in 0..self.data.len() {
+            let p = self.forward_exact(x, self.data.row(i), &mut hid).clamp(1e-12, 1.0 - 1e-12);
+            let y = self.data.labels[i] as f64;
+            loss -= y * p.ln() + (1.0 - y) * (1.0 - p).ln();
+        }
+        loss / self.data.len() as f64
+    }
+
+    fn gradient_exact(&self, x: &[f64], out: &mut [f64]) {
+        self.gradient_impl(x, out, None, false);
+    }
+
+    /// chop protocol (paper §2.4): operation results rounded entrywise.
+    fn gradient_rounded(&self, x: &[f64], ctx: &mut LpCtx, out: &mut [f64]) {
+        self.gradient_impl(x, out, Some(ctx), false);
+    }
+
+    /// Absorption model (see [`super::Mlr::gradient_per_op`]).
+    fn gradient_per_op(&self, x: &[f64], ctx: &mut LpCtx, out: &mut [f64]) {
+        self.gradient_impl(x, out, Some(ctx), true);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::fp::format::FpFormat;
+    use crate::fp::round::Rounding;
+
+    fn binary38() -> (Dataset, Dataset) {
+        let tr = synth::generate(200, 8, 11).filter_classes(&[3, 8]);
+        let te = synth::generate(100, 8, 12).filter_classes(&[3, 8]);
+        (tr, te)
+    }
+
+    #[test]
+    fn dim_and_init_shapes() {
+        let (tr, _) = binary38();
+        let nn = TwoLayerNn::new(tr, 16);
+        assert_eq!(nn.dim(), 16 * (64 + 2) + 1);
+        let x = nn.init_params(0);
+        // Biases start at zero.
+        let h = 16;
+        let d = 64;
+        assert!(x[h * d..h * d + h].iter().all(|&v| v == 0.0));
+        assert_eq!(x[nn.dim() - 1], 0.0);
+        // Weights within Xavier limits.
+        let lim1 = (6.0 / (d + h) as f64).sqrt();
+        assert!(x[..h * d].iter().all(|&v| v.abs() <= lim1));
+        assert!(x[..h * d].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (tr, _) = binary38();
+        let nn = TwoLayerNn::new(tr, 8);
+        let x = nn.init_params(3);
+        let mut g = vec![0.0; nn.dim()];
+        nn.gradient_exact(&x, &mut g);
+        let h = 1e-6;
+        let probe = [0usize, 5, nn.dim() / 2, nn.dim() - 9, nn.dim() - 1];
+        for &i in &probe {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let fd = (nn.objective(&xp) - nn.objective(&xm)) / (2.0 * h);
+            // ReLU kinks can perturb FD slightly; tolerance accordingly.
+            assert!((fd - g[i]).abs() < 1e-4, "i={i} fd={fd} g={}", g[i]);
+        }
+    }
+
+    #[test]
+    fn training_learns_3_vs_8() {
+        let (tr, te) = binary38();
+        let nn = TwoLayerNn::new(tr, 16);
+        let mut x = nn.init_params(1);
+        let mut g = vec![0.0; nn.dim()];
+        for _ in 0..80 {
+            nn.gradient_exact(&x, &mut g);
+            for (xi, gi) in x.iter_mut().zip(&g) {
+                *xi -= 0.5 * gi;
+            }
+        }
+        let err = nn.test_error(&x, &te);
+        assert!(err < 0.25, "test error {err} (chance = 0.5)");
+    }
+
+    #[test]
+    fn rounded_gradient_is_format_resident() {
+        let (tr, _) = binary38();
+        let nn = TwoLayerNn::new(tr, 8);
+        let x = nn.init_params(2);
+        let mut g = vec![0.0; nn.dim()];
+        let mut ctx = LpCtx::new(FpFormat::BINARY8, Rounding::Sr, crate::fp::rng::Rng::new(0));
+        nn.gradient_rounded(&x, &mut ctx, &mut g);
+        assert!(g.iter().all(|&v| FpFormat::BINARY8.contains(v)));
+    }
+
+    #[test]
+    fn sigmoid_stable_extremes() {
+        assert!(sigmoid(800.0) <= 1.0);
+        assert!(sigmoid(-800.0) >= 0.0);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!(sigmoid(-800.0).is_finite() && sigmoid(800.0).is_finite());
+    }
+}

@@ -1,0 +1,269 @@
+//! Quadratic objectives f(x) = ½ (x − x*)ᵀ A (x − x*) — paper §5.1.
+//!
+//! Two constructors mirror the paper's settings:
+//! * [`Quadratic::setting1`]: A = diag(10⁻³, …, 10⁻³, 1) ∈ ℝ¹⁰⁰⁰ˣ¹⁰⁰⁰,
+//!   x⁰ = [10⁻³, …, 10⁻³, 1]ᵀ, x* = 0, t = 10⁻⁵;
+//! * [`Quadratic::setting2`]: dense symmetric A with eigenvalues 1…n
+//!   (all entries nonzero), x⁰ = [n, n−1, …, 1]ᵀ, x* = 2⁻⁴·1, t = 1/L.
+
+use super::Problem;
+use crate::fp::linalg::{exact, LpCtx};
+use crate::fp::rng::Rng;
+
+/// Quadratic problem with either a diagonal or a dense symmetric matrix.
+pub struct Quadratic {
+    /// Diagonal (length n) when dense is None.
+    diag: Vec<f64>,
+    /// Row-major dense n×n symmetric matrix (takes precedence when set).
+    dense: Option<Vec<f64>>,
+    /// The minimizer x*.
+    xstar: Vec<f64>,
+    /// Largest eigenvalue = Lipschitz constant of ∇f.
+    lip: f64,
+    /// Scratch for (x − x*).
+    n: usize,
+}
+
+impl Quadratic {
+    pub fn diagonal(diag: Vec<f64>, xstar: Vec<f64>) -> Self {
+        assert_eq!(diag.len(), xstar.len());
+        let lip = diag.iter().cloned().fold(0.0f64, f64::max);
+        let n = diag.len();
+        Self { diag, dense: None, xstar, lip, n }
+    }
+
+    pub fn dense(a: Vec<f64>, xstar: Vec<f64>, lip: f64) -> Self {
+        let n = xstar.len();
+        assert_eq!(a.len(), n * n);
+        Self { diag: vec![], dense: Some(a), xstar, lip, n }
+    }
+
+    /// Paper Setting I (§5.1).
+    pub fn setting1(n: usize) -> (Self, Vec<f64>, f64) {
+        let mut diag = vec![1e-3; n];
+        diag[n - 1] = 1.0;
+        let mut x0 = vec![1e-3; n];
+        x0[n - 1] = 1.0;
+        let xstar = vec![0.0; n];
+        (Self::diagonal(diag, xstar), x0, 1e-5)
+    }
+
+    /// Paper Setting II (§5.1): symmetric A with spectrum {1, …, n} and no
+    /// zero entries, built as A = Q D Qᵀ for a random orthogonal Q
+    /// (Householder-based). x⁰ = [n, …, 1]ᵀ, x* = 2⁻⁴·1, t = 1/L = 1/n.
+    pub fn setting2(n: usize, seed: u64) -> (Self, Vec<f64>, f64) {
+        let mut rng = Rng::new(seed ^ 0x5e771462);
+        // Householder reflector H = I − 2vvᵀ applied to D: A = H D H is
+        // symmetric with the same spectrum, and dense for generic v.
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let nv = exact::norm2(&v);
+        for vi in v.iter_mut() {
+            *vi /= nv;
+        }
+        // A = (I − 2vvᵀ) D (I − 2vvᵀ) = D − 2vwᵀ − 2wvᵀ + 4(vᵀw) vvᵀ,
+        // where w = Dv.
+        let d: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        let w: Vec<f64> = (0..n).map(|i| d[i] * v[i]).collect();
+        let vtw = exact::dot(&v, &w);
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut val = -2.0 * v[i] * w[j] - 2.0 * w[i] * v[j] + 4.0 * vtw * v[i] * v[j];
+                if i == j {
+                    val += d[i];
+                }
+                a[i * n + j] = val;
+            }
+        }
+        let x0: Vec<f64> = (0..n).map(|i| (n - i) as f64).collect();
+        let xstar = vec![0.0625; n]; // 2⁻⁴
+        let lip = n as f64;
+        (Self::dense(a, xstar, lip), x0, 1.0 / n as f64)
+    }
+
+    fn residual(&self, x: &[f64]) -> Vec<f64> {
+        exact::sub(x, &self.xstar)
+    }
+}
+
+impl Problem for Quadratic {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn objective(&self, x: &[f64]) -> f64 {
+        let r = self.residual(x);
+        match &self.dense {
+            None => 0.5 * r.iter().zip(&self.diag).map(|(ri, di)| di * ri * ri).sum::<f64>(),
+            Some(a) => {
+                let mut ar = vec![0.0; self.n];
+                exact::gemv(a, self.n, self.n, &r, &mut ar);
+                0.5 * exact::dot(&r, &ar)
+            }
+        }
+    }
+
+    fn gradient_exact(&self, x: &[f64], out: &mut [f64]) {
+        let r = self.residual(x);
+        match &self.dense {
+            None => {
+                for i in 0..self.n {
+                    out[i] = self.diag[i] * r[i];
+                }
+            }
+            Some(a) => exact::gemv(a, self.n, self.n, &r, out),
+        }
+    }
+
+    /// chop-style: r = fl(x − x*), then g = fl(A·r) rounded entrywise
+    /// (diagonal: g = fl(dᵢ·rᵢ); dense: binary64 gemv then entrywise round —
+    /// the matrix entries themselves are stored rounded once).
+    fn gradient_rounded(&self, x: &[f64], ctx: &mut LpCtx, out: &mut [f64]) {
+        let mut r = vec![0.0; self.n];
+        for i in 0..self.n {
+            r[i] = ctx.sub(x[i], self.xstar[i]);
+        }
+        match &self.dense {
+            None => {
+                for i in 0..self.n {
+                    out[i] = ctx.mul(self.diag[i], r[i]);
+                }
+            }
+            Some(a) => {
+                exact::gemv(a, self.n, self.n, &r, out);
+                ctx.fl_slice(out);
+            }
+        }
+    }
+
+    /// Strict per-op model: every multiply and add of the gemv is rounded.
+    fn gradient_per_op(&self, x: &[f64], ctx: &mut LpCtx, out: &mut [f64]) {
+        let mut r = vec![0.0; self.n];
+        for i in 0..self.n {
+            r[i] = ctx.sub(x[i], self.xstar[i]);
+        }
+        match &self.dense {
+            None => {
+                for i in 0..self.n {
+                    out[i] = ctx.mul(self.diag[i], r[i]);
+                }
+            }
+            Some(a) => ctx.gemv(a, self.n, self.n, &r, out),
+        }
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        Some(self.lip)
+    }
+
+    fn optimum(&self) -> Option<&[f64]> {
+        Some(&self.xstar)
+    }
+
+    fn sigma1_constant(&self) -> Option<f64> {
+        // Paper §3.1: c = 2 for diagonal A.
+        if self.dense.is_none() {
+            Some(2.0)
+        } else {
+            // c = 2nu‖A‖_∞ M / (1−2nu) with M an iterate bound; report the
+            // diagnostic value for M = ‖x⁰‖_∞ upper estimate (n).
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::format::FpFormat;
+    use crate::fp::rng::Rng;
+    use crate::fp::round::Rounding;
+
+    #[test]
+    fn setting1_shapes() {
+        let (p, x0, t) = Quadratic::setting1(1000);
+        assert_eq!(p.dim(), 1000);
+        assert_eq!(t, 1e-5);
+        assert_eq!(x0[999], 1.0);
+        assert_eq!(x0[0], 1e-3);
+        assert_eq!(p.lipschitz(), Some(1.0));
+        // f(x0) = ½(999·10⁻³·10⁻⁶ + 1) ≈ ½·1.000999.
+        let f0 = p.objective(&x0);
+        assert!((f0 - 0.5 * (999.0 * 1e-9 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn setting2_spectrum_and_symmetry() {
+        let n = 50;
+        let (p, x0, t) = Quadratic::setting2(n, 0);
+        let a = p.dense.as_ref().unwrap();
+        // Symmetry.
+        for i in 0..n {
+            for j in 0..n {
+                assert!((a[i * n + j] - a[j * n + i]).abs() < 1e-12);
+            }
+        }
+        // trace(A) = Σ eigenvalues = n(n+1)/2.
+        let tr: f64 = (0..n).map(|i| a[i * n + i]).sum();
+        assert!((tr - (n * (n + 1)) as f64 / 2.0).abs() < 1e-8, "tr={tr}");
+        // Dense: essentially no zero entries.
+        let zeros = a.iter().filter(|&&v| v == 0.0).count();
+        assert_eq!(zeros, 0);
+        assert_eq!(t, 1.0 / n as f64);
+        assert_eq!(x0[0], n as f64);
+        assert_eq!(x0[n - 1], 1.0);
+    }
+
+    #[test]
+    fn gradient_exact_matches_finite_differences() {
+        let (p, _, _) = Quadratic::setting2(10, 3);
+        let x: Vec<f64> = (0..10).map(|i| 0.3 * i as f64 - 1.0).collect();
+        let mut g = vec![0.0; 10];
+        p.gradient_exact(&x, &mut g);
+        let h = 1e-6;
+        for i in 0..10 {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let fd = (p.objective(&xp) - p.objective(&xm)) / (2.0 * h);
+            assert!((fd - g[i]).abs() < 1e-4, "i={i} fd={fd} g={}", g[i]);
+        }
+    }
+
+    #[test]
+    fn rounded_gradient_satisfies_eq9_bound() {
+        // Diagonal case: |σ₁ᵢ| ≤ c·u·(|∇fᵢ| + 1) with c = 2 (paper §3.1).
+        let (p, x0, _) = Quadratic::setting1(100);
+        let fmt = FpFormat::BFLOAT16;
+        let u = fmt.unit_roundoff();
+        let mut ctx = LpCtx::new(fmt, Rounding::Sr, Rng::new(4));
+        let mut g = vec![0.0; 100];
+        let mut ge = vec![0.0; 100];
+        p.gradient_rounded(&x0, &mut ctx, &mut g);
+        p.gradient_exact(&x0, &mut ge);
+        // SR has per-op bound 2u, two ops ⇒ c_eff ≈ 2·2 = 4; allow c = 5.
+        for i in 0..100 {
+            let sigma = (g[i] - ge[i]).abs();
+            assert!(sigma <= 5.0 * u * (ge[i].abs() + 1.0), "i={i} σ={sigma}");
+        }
+    }
+
+    #[test]
+    fn per_op_vs_after_op_gradients_close() {
+        let (p, x0, _) = Quadratic::setting2(30, 1);
+        let fmt = FpFormat::BFLOAT16;
+        let mut c1 = LpCtx::new(fmt, Rounding::Sr, Rng::new(9));
+        let mut c2 = LpCtx::new(fmt, Rounding::Sr, Rng::new(9));
+        let mut g1 = vec![0.0; 30];
+        let mut g2 = vec![0.0; 30];
+        let mut ge = vec![0.0; 30];
+        p.gradient_rounded(&x0, &mut c1, &mut g1);
+        p.gradient_per_op(&x0, &mut c2, &mut g2);
+        p.gradient_exact(&x0, &mut ge);
+        let n2 = exact::norm2(&ge);
+        assert!(exact::norm2(&exact::sub(&g1, &ge)) / n2 < 0.05);
+        // Per-op accumulates more error but must stay within the γ_n regime.
+        assert!(exact::norm2(&exact::sub(&g2, &ge)) / n2 < 0.3);
+    }
+}

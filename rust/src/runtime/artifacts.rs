@@ -1,0 +1,88 @@
+//! Artifact registry: static shape metadata mirroring `python/compile/aot.py`.
+//! A mismatch here would surface as a PJRT shape error at call time; keeping
+//! the specs in one place gives Rust callers compile-time constants and a
+//! single point of truth to update alongside the Python side.
+
+/// Static description of one AOT artifact.
+#[derive(Debug, Clone, Copy)]
+pub struct ArtifactSpec {
+    pub file: &'static str,
+    /// Flat parameter count (quantizer: element count).
+    pub params: usize,
+    /// Batch rows consumed per step (0 for the standalone quantizer).
+    pub batch: usize,
+    /// Feature dimension.
+    pub features: usize,
+    /// Classes (MLR) / 0 (binary-label NN, quantizer).
+    pub classes: usize,
+}
+
+/// Standalone Layer-1 quantizer over 8192 f32 elements (binary8 target).
+pub const QUANTIZE_SPEC: ArtifactSpec = ArtifactSpec {
+    file: "quantize.hlo.txt",
+    params: 8192,
+    batch: 0,
+    features: 0,
+    classes: 0,
+};
+
+/// MLR rounded train step: N=256, D=196, C=10, P = C·(D+1) = 1970.
+pub const MLR_SPEC: ArtifactSpec = ArtifactSpec {
+    file: "mlr_step.hlo.txt",
+    params: 10 * (196 + 1),
+    batch: 256,
+    features: 196,
+    classes: 10,
+};
+
+/// NN rounded train step: N=256, D=196, H=100, P = H·(D+2)+1 = 19801.
+pub const NN_SPEC: ArtifactSpec = ArtifactSpec {
+    file: "nn_step.hlo.txt",
+    params: 100 * (196 + 2) + 1,
+    batch: 256,
+    features: 196,
+    classes: 0,
+};
+
+/// Scheme ids shared with the Python side (mode operand of the artifacts).
+pub mod mode {
+    pub const RN: i32 = 0;
+    pub const SR: i32 = 1;
+    pub const SR_EPS: i32 = 2;
+    pub const SIGNED_SR_EPS: i32 = 3;
+
+    /// Map a coordinator [`crate::fp::Rounding`] onto an artifact mode id.
+    pub fn from_rounding(r: crate::fp::Rounding) -> (i32, f32) {
+        use crate::fp::Rounding::*;
+        match r {
+            RoundNearestEven => (RN, 0.0),
+            Sr => (SR, 0.0),
+            SrEps(e) => (SR_EPS, e as f32),
+            SignedSrEps(e) => (SIGNED_SR_EPS, e as f32),
+            // Directed modes are not part of the artifact ABI (the paper's
+            // experiments never use them on the update path); degrade to RN.
+            RoundDown | RoundUp | RoundTowardZero => (RN, 0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_param_counts() {
+        assert_eq!(MLR_SPEC.params, 1970);
+        assert_eq!(NN_SPEC.params, 19801);
+        assert_eq!(QUANTIZE_SPEC.params, 8192);
+    }
+
+    #[test]
+    fn mode_mapping() {
+        use crate::fp::Rounding;
+        assert_eq!(mode::from_rounding(Rounding::Sr), (1, 0.0));
+        assert_eq!(mode::from_rounding(Rounding::SrEps(0.25)), (2, 0.25));
+        assert_eq!(mode::from_rounding(Rounding::SignedSrEps(0.1)), (3, 0.1));
+        assert_eq!(mode::from_rounding(Rounding::RoundNearestEven), (0, 0.0));
+    }
+}

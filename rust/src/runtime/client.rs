@@ -1,0 +1,176 @@
+//! Thin, safe wrapper over the `xla` crate's PJRT CPU client: compile once,
+//! execute many times, marshal `f64` coordinator data ↔ `f32` device buffers.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled PJRT executable plus its entry metadata.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// Argument value for an executable call (f32/i32 tensors cover every
+/// artifact this project ships).
+pub enum Arg {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl Arg {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Arg::F32(v, shape) => xla::Literal::vec1(v).reshape(shape)?,
+            Arg::I32(v, shape) => xla::Literal::vec1(v).reshape(shape)?,
+            Arg::ScalarF32(v) => xla::Literal::from(*v),
+            Arg::ScalarI32(v) => xla::Literal::from(*v),
+        })
+    }
+
+    /// Convenience: f64 slice → f32 tensor arg.
+    pub fn f32_from_f64(v: &[f64], shape: &[i64]) -> Arg {
+        Arg::F32(v.iter().map(|&x| x as f32).collect(), shape.to_vec())
+    }
+}
+
+impl Executable {
+    /// Execute with the given args; returns every tuple element as a f32 vec
+    /// (scalars come back as length-1 vecs; integer outputs unsupported —
+    /// none of our artifacts emit them).
+    pub fn run_f32(&self, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elems = result.to_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// The runtime: one PJRT CPU client + a compile cache keyed by artifact path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, usize>,
+    exes: Vec<Executable>,
+    /// Directory containing `*.hlo.txt` artifacts.
+    pub artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime rooted at `artifact_dir`.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            cache: HashMap::new(),
+            exes: Vec::new(),
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&mut self, file_name: &str) -> Result<&Executable> {
+        let path = self.artifact_dir.join(file_name);
+        if let Some(&idx) = self.cache.get(&path) {
+            return Ok(&self.exes[idx]);
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))
+        .with_context(|| "did you run `make artifacts`?")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let idx = self.exes.len();
+        self.exes.push(Executable { exe, name: file_name.to_string() });
+        self.cache.insert(path, idx);
+        Ok(&self.exes[idx])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/quantize.hlo.txt").exists()
+    }
+
+    fn rt() -> Runtime {
+        Runtime::cpu(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap()
+    }
+
+    #[test]
+    fn client_comes_up() {
+        let r = rt();
+        assert!(!r.platform().is_empty());
+    }
+
+    #[test]
+    fn quantize_artifact_matches_rust_substrate_rn() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut r = rt();
+        let exe = r.load("quantize.hlo.txt").unwrap();
+        let n = 8192usize;
+        // Deterministic RN (mode 0) lets us compare bit-for-bit with the
+        // Rust substrate without sharing an RNG stream.
+        let mut rng = crate::fp::Rng::new(11);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal() * 2.0).collect();
+        let x32: Vec<f64> = x.iter().map(|&v| v as f32 as f64).collect();
+        let u: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let out = exe
+            .run_f32(&[
+                Arg::f32_from_f64(&x, &[n as i64]),
+                Arg::f32_from_f64(&u, &[n as i64]),
+                Arg::f32_from_f64(&x, &[n as i64]),
+                Arg::ScalarI32(0),
+                Arg::ScalarF32(0.0),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let fmt = crate::fp::FpFormat::BINARY8;
+        let mut r2 = crate::fp::Rng::new(0);
+        for i in 0..n {
+            let want = crate::fp::round(&fmt, crate::fp::Rounding::RoundNearestEven, x32[i], &mut r2);
+            assert_eq!(out[0][i] as f64, want, "i={i} x={}", x32[i]);
+        }
+    }
+
+    #[test]
+    fn load_caches_by_path() {
+        if !artifacts_ready() {
+            return;
+        }
+        let mut r = rt();
+        r.load("quantize.hlo.txt").unwrap();
+        r.load("quantize.hlo.txt").unwrap();
+        assert_eq!(r.exes.len(), 1);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let mut r = rt();
+        let err = match r.load("nope.hlo.txt") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("loading a missing artifact should fail"),
+        };
+        assert!(err.contains("artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime (system S12): load AOT-compiled HLO-text artifacts and run
+//! them from the Rust hot path. Python never executes at experiment time.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py`): jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids and round-trips cleanly.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactSpec, MLR_SPEC, NN_SPEC, QUANTIZE_SPEC};
+pub use client::{Arg, Executable, Runtime};

@@ -1,0 +1,98 @@
+//! Minimal CLI parser: positionals + `--key value` / `--flag` options.
+
+use std::collections::HashMap;
+
+/// Boolean flags (never consume a value). Everything else written as
+/// `--key value` takes the next token as its value.
+const BOOL_FLAGS: &[&str] = &["quick", "full", "verbose", "help", "pjrt", "json"];
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if !BOOL_FLAGS.contains(&key)
+                    && it.peek().map_or(false, |n| !n.starts_with("--"))
+                {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positionals_options_flags() {
+        let a = parse("reproduce fig3a --seeds 20 --out-dir results --quick");
+        assert_eq!(a.positional, vec!["reproduce", "fig3a"]);
+        assert_eq!(a.get("seeds"), Some("20"));
+        assert_eq!(a.get_usize("seeds", 5), 20);
+        assert_eq!(a.get("out-dir"), Some("results"));
+        assert!(a.has_flag("quick"));
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = parse("run --t=0.5 --steps=100");
+        assert_eq!(a.get_f64("t", 1.0), 0.5);
+        assert_eq!(a.get_usize("steps", 10), 100);
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse("--quick fig2");
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.positional, vec!["fig2"]);
+    }
+}

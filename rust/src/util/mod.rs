@@ -1,0 +1,10 @@
+//! In-repo plumbing: CLI argument parsing, CSV/markdown table writing and
+//! summary statistics. (The image is offline; `clap`/`serde`/`csv` are not
+//! vendored, so these ~200 lines replace them.)
+
+pub mod cli;
+pub mod stats;
+pub mod table;
+
+pub use cli::Args;
+pub use table::Table;

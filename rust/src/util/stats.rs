@@ -1,0 +1,62 @@
+//! Summary statistics used by the aggregator and the bench harness.
+
+/// Mean of a slice (NaN for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance (the paper's §5.2 metric over 20 simulations).
+pub fn population_variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Percentile (nearest-rank) on a copy of the data.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Index of the first element ≤ `threshold`, i.e. "epochs to reach the
+/// baseline error" (the paper's headline speedup metric in §5.2/§5.3).
+pub fn first_at_or_below(series: &[f64], threshold: f64) -> Option<usize> {
+    series.iter().position(|&v| v <= threshold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basics() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(population_variance(&[1.0, 3.0]), 1.0);
+        assert!(mean(&[]).is_nan());
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn epochs_to_threshold() {
+        let s = [0.9, 0.5, 0.3, 0.09, 0.05];
+        assert_eq!(first_at_or_below(&s, 0.1), Some(3));
+        assert_eq!(first_at_or_below(&s, 0.01), None);
+    }
+}

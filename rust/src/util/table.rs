@@ -1,0 +1,239 @@
+//! Result tables: one per experiment, rendered as CSV (for plotting),
+//! markdown (for EXPERIMENTS.md) and aligned text (for the terminal).
+
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+/// A cell is either text or a number (numbers get compact formatting).
+#[derive(Debug, Clone)]
+pub enum Cell {
+    Text(String),
+    Num(f64),
+    Int(i64),
+}
+
+impl From<&str> for Cell {
+    fn from(s: &str) -> Self {
+        Cell::Text(s.to_string())
+    }
+}
+impl From<String> for Cell {
+    fn from(s: String) -> Self {
+        Cell::Text(s)
+    }
+}
+impl From<f64> for Cell {
+    fn from(v: f64) -> Self {
+        Cell::Num(v)
+    }
+}
+impl From<usize> for Cell {
+    fn from(v: usize) -> Self {
+        Cell::Int(v as i64)
+    }
+}
+impl From<i64> for Cell {
+    fn from(v: i64) -> Self {
+        Cell::Int(v)
+    }
+}
+
+impl Cell {
+    fn render(&self) -> String {
+        match self {
+            Cell::Text(s) => s.clone(),
+            Cell::Int(v) => v.to_string(),
+            Cell::Num(v) => {
+                if v.is_nan() {
+                    "-".into()
+                } else if *v == 0.0 {
+                    "0".into()
+                } else if v.abs() >= 1e5 || v.abs() < 1e-4 {
+                    format!("{v:.4e}")
+                } else {
+                    format!("{v:.6}")
+                }
+            }
+        }
+    }
+}
+
+/// An experiment result table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Self {
+        Self {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+            notes: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<Cell>) {
+        debug_assert_eq!(cells.len(), self.columns.len());
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|c| esc(&c.render())).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {} — {}\n", self.id, self.title);
+        let _ = writeln!(out, "| {} |", self.columns.join(" | "));
+        let _ = writeln!(out, "|{}|", self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ =
+                writeln!(out, "| {} |", r.iter().map(|c| c.render()).collect::<Vec<_>>().join(" | "));
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "\n> {n}");
+        }
+        out
+    }
+
+    /// Aligned plain-text rendering for the terminal.
+    pub fn to_text(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        let rendered: Vec<Vec<String>> =
+            self.rows.iter().map(|r| r.iter().map(|c| c.render()).collect()).collect();
+        for r in &rendered {
+            for (i, cell) in r.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        let hdr: Vec<String> =
+            self.columns.iter().enumerate().map(|(i, c)| format!("{:>w$}", c, w = widths[i])).collect();
+        let _ = writeln!(out, "{}", hdr.join("  "));
+        for r in &rendered {
+            let line: Vec<String> =
+                r.iter().enumerate().map(|(i, c)| format!("{:>w$}", c, w = widths[i])).collect();
+            let _ = writeln!(out, "{}", line.join("  "));
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+
+    /// Write `<dir>/<id>.csv` (and return the path).
+    pub fn write_csv(&self, dir: impl AsRef<Path>) -> Result<std::path::PathBuf> {
+        fs::create_dir_all(&dir)?;
+        let path = dir.as_ref().join(format!("{}.csv", self.id));
+        fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// Terminal sparkline of a series (log-scale friendly: pass pre-logged data).
+pub fn sparkline(series: &[f64], width: usize) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if series.is_empty() {
+        return String::new();
+    }
+    let step = (series.len() as f64 / width as f64).max(1.0);
+    let vals: Vec<f64> = (0..series.len().min(width))
+        .map(|i| series[((i as f64 * step) as usize).min(series.len() - 1)])
+        .collect();
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in &vals {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if !lo.is_finite() || hi == lo {
+        return "▄".repeat(vals.len());
+    }
+    vals.iter()
+        .map(|&v| {
+            if !v.is_finite() {
+                ' '
+            } else {
+                BARS[(((v - lo) / (hi - lo)) * 7.0).round() as usize]
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("t1", "demo", &["k", "f", "who"]);
+        t.row(vec![0usize.into(), 1.5.into(), "a,b".into()]);
+        t.row(vec![1usize.into(), f64::NAN.into(), "x".into()]);
+        t.note("a note");
+        t
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let csv = sample().to_csv();
+        assert!(csv.starts_with("k,f,who\n"));
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("-")); // NaN rendered as dash
+    }
+
+    #[test]
+    fn markdown_has_header_separator() {
+        let md = sample().to_markdown();
+        assert!(md.contains("|---|---|---|"));
+        assert!(md.contains("> a note"));
+    }
+
+    #[test]
+    fn text_is_aligned() {
+        let txt = sample().to_text();
+        assert!(txt.contains("demo"));
+        let lines: Vec<&str> = txt.lines().collect();
+        assert!(lines.len() >= 4);
+    }
+
+    #[test]
+    fn write_csv_roundtrip() {
+        let dir = std::env::temp_dir().join("lpgd_table_test");
+        let p = sample().write_csv(&dir).unwrap();
+        let content = std::fs::read_to_string(p).unwrap();
+        assert!(content.contains("a,b"));
+    }
+
+    #[test]
+    fn sparkline_basic() {
+        let s = sparkline(&[0.0, 1.0, 2.0, 3.0], 4);
+        assert_eq!(s.chars().count(), 4);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+    }
+}

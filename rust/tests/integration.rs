@@ -1,0 +1,148 @@
+//! Cross-module integration tests: the full experiment pipeline, the paper's
+//! qualitative "shape" claims at smoke scale, and engine determinism.
+
+use lpgd::coordinator::experiments::{run_experiment, ExpCtx};
+use lpgd::data::load_or_synth;
+use lpgd::fp::{FpFormat, Rounding};
+use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::problems::{Mlr, Problem, Quadratic};
+
+fn quick_ctx(tag: &str) -> ExpCtx {
+    let mut ctx = ExpCtx::quick();
+    ctx.out_dir = std::env::temp_dir()
+        .join(format!("lpgd_itest_{tag}"))
+        .to_string_lossy()
+        .into_owned();
+    ctx
+}
+
+#[test]
+fn all_experiments_run_and_write_csvs() {
+    let ctx = quick_ctx("all");
+    let tables = run_experiment("all", &ctx).expect("pipeline failed");
+    assert_eq!(tables.len(), 13, "12 paper artifacts + the fig4a-acc ablation");
+    for t in &tables {
+        let p = std::path::Path::new(&ctx.out_dir).join(format!("{}.csv", t.id));
+        assert!(p.exists(), "missing {}", p.display());
+        assert!(!t.rows.is_empty(), "{} produced no rows", t.id);
+    }
+}
+
+#[test]
+fn engine_is_deterministic_per_seed() {
+    // Use a stepsize large enough that SR's randomness is actually exercised
+    // (Setting I's paper stepsize t=1e-5 freezes every coordinate at this
+    // scale, making all seeds trivially identical).
+    let (p, x0, _) = Quadratic::setting1(50);
+    let t = 0.3;
+    let mk = |seed| {
+        let mut cfg =
+            GdConfig::new(FpFormat::BFLOAT16, StepSchemes::uniform(Rounding::Sr), t, 40);
+        cfg.seed = seed;
+        let mut e = GdEngine::new(cfg, &p, &x0);
+        let tr = e.run(None);
+        (tr.objective_series(), e.x)
+    };
+    let (f1, x1) = mk(7);
+    let (f2, x2) = mk(7);
+    let (f3, x3) = mk(8);
+    assert_eq!(f1, f2);
+    assert_eq!(x1, x2);
+    assert!(f1 != f3 || x1 != x3, "different seeds should differ");
+}
+
+/// The paper's core qualitative claims at smoke scale, across the whole
+/// stack (data -> problem -> engine -> schemes):
+/// RN stagnates above the optimum; SR converges; signed-SReps converges at
+/// least as fast as SR in cumulative objective.
+#[test]
+fn paper_shape_claims_hold_end_to_end() {
+    let splits = load_or_synth(None, 300, 100, 8, 1);
+    let mlr = Mlr::new(splits.train, 10);
+    let x0 = vec![0.0; mlr.dim()];
+    let epochs = 15;
+
+    let run = |schemes: StepSchemes, fmt: FpFormat, seed: u64| -> Vec<f64> {
+        let mut cfg = GdConfig::new(fmt, schemes, 0.5, epochs);
+        cfg.seed = seed;
+        let mut e = GdEngine::new(cfg, &mlr, &x0);
+        let metric = |x: &[f64]| mlr.test_error(x, &splits.test);
+        e.run(Some(&metric)).metric_series()
+    };
+
+    let sr = Rounding::Sr;
+    let baseline = run(StepSchemes::uniform(Rounding::RoundNearestEven), FpFormat::BINARY32, 0);
+    let rn8 = run(
+        StepSchemes { grad: Rounding::RoundNearestEven, mul: Rounding::RoundNearestEven, sub: sr },
+        FpFormat::BINARY8,
+        0,
+    );
+    let sr8 = run(StepSchemes::uniform(sr), FpFormat::BINARY8, 1);
+    let sg8 = run(
+        StepSchemes { grad: sr, mul: sr, sub: Rounding::SignedSrEps(0.1) },
+        FpFormat::BINARY8,
+        1,
+    );
+
+    let last = |v: &Vec<f64>| *v.last().unwrap();
+    // The baseline learns.
+    assert!(last(&baseline) < 0.6, "baseline error {}", last(&baseline));
+    // SR at binary8 is competitive with the baseline (within 0.25 abs).
+    assert!(last(&sr8) < last(&baseline) + 0.25, "sr={} base={}", last(&sr8), last(&baseline));
+    // signed-SReps is not slower than SR in final error (paper: faster).
+    assert!(last(&sg8) <= last(&sr8) + 0.05, "signed={} sr={}", last(&sg8), last(&sr8));
+    // RN at binary8 must not beat the baseline by more than noise — at this
+    // smoke scale RN has not fully stagnated yet (that claim is asserted at
+    // full scale by `lpgd reproduce fig4a`; see EXPERIMENTS.md), but it must
+    // already trail the stochastic schemes' trend.
+    assert!(last(&rn8) >= last(&baseline) - 0.1, "rn={} base={}", last(&rn8), last(&baseline));
+}
+
+#[test]
+fn tau_threshold_is_necessary_and_sufficient_on_fig2() {
+    // On the scalar Figure-2 problem, once tau_k <= u/2 and the lsb is even,
+    // the very next RN step must not move — and conversely while tau > u/2
+    // the iterate must move.
+    use lpgd::gd::stagnation::tau_k;
+    let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+    let fmt = FpFormat::BINARY8;
+    let mut cfg = GdConfig::new(fmt, StepSchemes::uniform(Rounding::RoundNearestEven), 0.05, 1);
+    cfg.seed = 0;
+    let mut e = GdEngine::new(cfg, &p, &[1.0]);
+    for _ in 0..40 {
+        let mut g = vec![0.0];
+        p.gradient_exact(&e.x, &mut g);
+        // chop-style (8a): in binary8 the stored gradient.
+        let mut rng = lpgd::fp::Rng::new(0);
+        g[0] = lpgd::fp::round(&fmt, Rounding::RoundNearestEven, g[0], &mut rng);
+        let rep = tau_k(&fmt, &e.x, &g, 0.05);
+        let x_before = e.x[0];
+        let moved = e.step();
+        if rep.below_threshold && rep.lsb_even {
+            assert!(!moved, "tau={} <= u/2 but iterate moved from {x_before}", rep.tau);
+        }
+        if !rep.below_threshold {
+            assert!(moved, "tau={} > u/2 but iterate stuck at {x_before}", rep.tau);
+        }
+    }
+}
+
+#[test]
+fn dataset_to_problem_wiring() {
+    // filter_classes -> NN problem -> dims consistent; MLR dims consistent.
+    let splits = load_or_synth(None, 200, 50, 8, 3);
+    assert_eq!(splits.train.n_features, 64);
+    let mlr = Mlr::new(splits.train.clone(), 10);
+    assert_eq!(mlr.dim(), 10 * 65);
+    let bin = splits.train.filter_classes(&[3, 8]);
+    assert!(bin.len() > 0 && bin.n_classes() == 2);
+    let nn = lpgd::problems::TwoLayerNn::new(bin, 7);
+    assert_eq!(nn.dim(), 7 * 66 + 1);
+}
+
+#[test]
+fn unknown_ids_and_empty_dirs_fail_cleanly() {
+    let ctx = quick_ctx("err");
+    assert!(run_experiment("fig99", &ctx).is_err());
+    assert!(lpgd::data::idx::load_mnist("/nope").is_err());
+}

@@ -1,0 +1,246 @@
+//! Property-based tests over the fp substrate (proptest is not vendored in
+//! this offline image, so this is a seeded-sweep driver with the same
+//! spirit: thousands of random inputs per invariant, failures print the
+//! offending input).
+
+use lpgd::fp::{expected_round, round, round_with, FpFormat, Rng, Rounding};
+
+const FORMATS: [FpFormat; 4] =
+    [FpFormat::BINARY8, FpFormat::BFLOAT16, FpFormat::BINARY16, FpFormat::BINARY32];
+
+const MODES: [Rounding; 7] = [
+    Rounding::RoundNearestEven,
+    Rounding::RoundDown,
+    Rounding::RoundUp,
+    Rounding::RoundTowardZero,
+    Rounding::Sr,
+    Rounding::SrEps(0.3),
+    Rounding::SignedSrEps(0.3),
+];
+
+/// Random values spanning many binades, both signs, including format
+/// boundary magnitudes and subnormal ranges.
+fn gen_values(fmt: &FpFormat, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut vals = Vec::with_capacity(n + 16);
+    for _ in 0..n {
+        let e = rng.uniform_in(fmt.e_min as f64 - 4.0, fmt.e_max as f64 + 1.0);
+        let m = rng.uniform_in(1.0, 2.0);
+        let s = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        vals.push(s * m * (2.0f64).powf(e.min(300.0).max(-300.0)));
+    }
+    vals.extend([
+        fmt.x_min(),
+        -fmt.x_min(),
+        fmt.x_min_sub(),
+        fmt.x_max(),
+        -fmt.x_max(),
+        fmt.x_max() * 1.5,
+        0.0,
+        1.0,
+        -1.0,
+    ]);
+    vals
+}
+
+#[test]
+fn prop_floor_ceil_sandwich_and_membership() {
+    for fmt in FORMATS {
+        for x in gen_values(&fmt, 3000, 1) {
+            let (lo, hi) = fmt.floor_ceil(x);
+            assert!(lo <= x && x <= hi, "{}: sandwich fails at {x}: [{lo},{hi}]", fmt.name());
+            for v in [lo, hi] {
+                assert!(
+                    v.is_infinite() || fmt.contains(v),
+                    "{}: neighbor {v} of {x} not in format",
+                    fmt.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_round_returns_a_neighbor() {
+    let mut rng = Rng::new(2);
+    for fmt in FORMATS {
+        for mode in MODES {
+            for x in gen_values(&fmt, 600, 3) {
+                let y = round(&fmt, mode, x, &mut rng);
+                let (lo, hi) = fmt.floor_ceil(x);
+                let sat_lo = lo.max(-fmt.x_max());
+                let sat_hi = hi.min(fmt.x_max());
+                let ok = y == lo || y == hi || y == sat_lo || y == sat_hi;
+                assert!(ok, "{} {:?}: round({x}) = {y}, neighbors [{lo},{hi}]", fmt.name(), mode);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_deterministic_modes_are_monotone() {
+    // x <= y  =>  fl(x) <= fl(y) for all deterministic modes.
+    for fmt in FORMATS {
+        let mut vals = gen_values(&fmt, 2000, 4);
+        vals.retain(|v| v.is_finite());
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut rng = Rng::new(0);
+        for mode in [
+            Rounding::RoundNearestEven,
+            Rounding::RoundDown,
+            Rounding::RoundUp,
+            Rounding::RoundTowardZero,
+        ] {
+            let rounded: Vec<f64> = vals.iter().map(|&v| round(&fmt, mode, v, &mut rng)).collect();
+            for w in rounded.windows(2) {
+                assert!(w[0] <= w[1], "{} {:?}: monotonicity violated", fmt.name(), mode);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rounding_preserves_sign_and_zero() {
+    let mut rng = Rng::new(5);
+    for fmt in FORMATS {
+        for mode in MODES {
+            for x in gen_values(&fmt, 500, 6) {
+                let y = round(&fmt, mode, x, &mut rng);
+                if x > 0.0 {
+                    assert!(y >= 0.0, "{:?}: sign flip at {x} -> {y}", mode);
+                } else if x < 0.0 {
+                    assert!(y <= 0.0, "{:?}: sign flip at {x} -> {y}", mode);
+                } else {
+                    assert_eq!(y, 0.0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_idempotence_on_representables() {
+    let mut rng = Rng::new(7);
+    for fmt in FORMATS {
+        for mode in MODES {
+            for x in gen_values(&fmt, 400, 8) {
+                let y = round(&fmt, mode, x, &mut rng);
+                if y.is_finite() {
+                    let z = round(&fmt, mode, y, &mut rng);
+                    assert_eq!(y, z, "{} {:?}: not idempotent at {x}", fmt.name(), mode);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_su_pr_are_strict_inverses() {
+    for fmt in FORMATS {
+        let mut rng = Rng::new(9);
+        for x in gen_values(&fmt, 1500, 10) {
+            let y = round(&fmt, Rounding::RoundNearestEven, x, &mut rng);
+            if !y.is_finite() || y.abs() >= fmt.x_max() {
+                continue;
+            }
+            let su = fmt.successor(y);
+            assert!(su > y);
+            if su.is_finite() {
+                assert_eq!(fmt.predecessor(su), y, "{}: pr(su({y})) != {y}", fmt.name());
+            }
+            let pr = fmt.predecessor(y);
+            assert!(pr < y);
+            if pr.is_finite() {
+                assert_eq!(fmt.successor(pr), y, "{}: su(pr({y})) != {y}", fmt.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sr_empirical_mean_matches_closed_form() {
+    // Statistical: for random x, the sample mean over 4000 draws is within
+    // 5 sigma of the closed-form expectation for every stochastic scheme.
+    let fmt = FpFormat::BINARY8;
+    let mut seed_rng = Rng::new(11);
+    for mode in [Rounding::Sr, Rounding::SrEps(0.2), Rounding::SignedSrEps(0.2)] {
+        for _ in 0..25 {
+            let x = seed_rng.uniform_in(-30.0, 30.0);
+            let v = seed_rng.uniform_in(-1.0, 1.0);
+            let (lo, hi) = fmt.floor_ceil(x);
+            if lo == hi {
+                continue;
+            }
+            let n = 4000;
+            let mut rng = Rng::new(12);
+            let mean: f64 =
+                (0..n).map(|_| round_with(&fmt, mode, x, v, &mut rng)).sum::<f64>() / n as f64;
+            let want = expected_round(&fmt, mode, x, v);
+            let sigma = (hi - lo) / (n as f64).sqrt();
+            assert!(
+                (mean - want).abs() < 5.0 * sigma,
+                "{:?} x={x}: mean {mean} vs E {want}",
+                mode
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_expected_error_bounds() {
+    // |E[fl(x)] - x| <= gap for all schemes; for SR it is 0; for SR_eps it
+    // is <= eps*gap + (RN part); always finite.
+    let fmt = FpFormat::BFLOAT16;
+    let mut rng = Rng::new(13);
+    for _ in 0..4000 {
+        let x = rng.normal() * 100.0;
+        let (lo, hi) = fmt.floor_ceil(x);
+        let gap = hi - lo;
+        for mode in [Rounding::Sr, Rounding::SrEps(0.4), Rounding::SignedSrEps(0.4)] {
+            let e = expected_round(&fmt, mode, x, -x);
+            assert!((e - x).abs() <= gap + 1e-18, "{:?}: |bias| > gap at {x}", mode);
+        }
+        assert!((expected_round(&fmt, Rounding::Sr, x, x) - x).abs() < 1e-12 * x.abs().max(1e-30));
+    }
+}
+
+#[test]
+fn prop_nan_and_inf_handling() {
+    let mut rng = Rng::new(14);
+    for fmt in FORMATS {
+        for mode in MODES {
+            assert!(round(&fmt, mode, f64::NAN, &mut rng).is_nan());
+            let pi = round(&fmt, mode, f64::INFINITY, &mut rng);
+            assert!(pi == f64::INFINITY || pi == fmt.x_max());
+            let ni = round(&fmt, mode, f64::NEG_INFINITY, &mut rng);
+            assert!(ni == f64::NEG_INFINITY || ni == -fmt.x_max());
+        }
+    }
+}
+
+#[test]
+fn prop_gd_iterate_always_in_format() {
+    // Random diagonal quadratics, random schemes: the engine's iterate is
+    // exactly representable after every step.
+    use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+    use lpgd::problems::Quadratic;
+    let mut rng = Rng::new(15);
+    for trial in 0..12 {
+        let n = 1 + (trial % 5);
+        let diag: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.1, 3.0)).collect();
+        let xstar: Vec<f64> = (0..n).map(|_| rng.uniform_in(-100.0, 100.0)).collect();
+        let x0: Vec<f64> = (0..n).map(|_| rng.uniform_in(-100.0, 100.0)).collect();
+        let p = Quadratic::diagonal(diag, xstar);
+        let mode = MODES[trial % MODES.len()];
+        let fmt = FORMATS[trial % 3];
+        let mut cfg = GdConfig::new(fmt, StepSchemes::uniform(mode), 0.05, 25);
+        cfg.seed = trial as u64;
+        let mut e = GdEngine::new(cfg, &p, &x0);
+        for _ in 0..25 {
+            e.step();
+            for &xi in &e.x {
+                assert!(fmt.contains(xi) || xi.is_infinite(), "{:?} {}: {xi}", mode, fmt.name());
+            }
+        }
+    }
+}
