@@ -1,16 +1,19 @@
 // Bench: wall-clock of regenerating every paper table/figure at the quick
 // profile — the "one bench per table/figure" harness. Run with defaults via
-// `lpgd reproduce <id>` for full fidelity.
+// `lpgd reproduce <id>` for full fidelity. Measured serially (jobs = 1) so
+// per-figure costs are comparable; the multi-core sweep speedup is measured
+// by `benches/sweep.rs`.
 
 include!("harness.rs");
 
-use lpgd::coordinator::experiments::{run_experiment, ExpCtx, EXPERIMENTS};
+use lpgd::coordinator::experiments::{list_experiments, run_experiment, ExpCtx};
 
 fn main() {
     let mut ctx = ExpCtx::quick();
+    ctx.jobs = 1;
     ctx.out_dir = std::env::temp_dir().join("lpgd_bench_figures").to_string_lossy().into_owned();
-    println!("-- per-figure regeneration cost (quick profile) --");
-    for (id, _) in EXPERIMENTS {
+    println!("-- per-figure regeneration cost (quick profile, serial) --");
+    for (id, _) in list_experiments() {
         bench(&format!("reproduce {id}"), 0, || {
             run_experiment(id, &ctx).expect("experiment failed");
         });

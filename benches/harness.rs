@@ -4,10 +4,15 @@
 
 use std::time::Instant;
 
+/// One benchmark's timing summary.
 pub struct BenchResult {
+    /// Label printed next to the numbers.
     pub name: String,
+    /// How many timed iterations ran.
     pub iters: u32,
+    /// Mean wall-clock nanoseconds per iteration.
     pub mean_ns: f64,
+    /// Fastest iteration in nanoseconds (least noisy on a busy machine).
     pub min_ns: f64,
 }
 
@@ -39,4 +44,14 @@ pub fn bench<F: FnMut()>(name: &str, elems: u64, mut f: F) -> BenchResult {
         r.name, r.mean_ns, r.min_ns, r.iters, throughput
     );
     r
+}
+
+/// Wall-clock speedup of `fast` relative to `base`, on best-iteration
+/// times, and a one-line report. Used by `benches/sweep.rs` to show the
+/// multi-core gain of the sharded coordinator over the serial path.
+#[allow(dead_code)]
+pub fn report_speedup(base: &BenchResult, fast: &BenchResult) -> f64 {
+    let s = base.min_ns / fast.min_ns;
+    println!("speedup: {} -> {}: {s:.2}x", base.name, fast.name);
+    s
 }

@@ -1,0 +1,61 @@
+// Bench: the sharded experiment sweep — the coordinator's scheduler fanning
+// (rounding-mode × repetition) GD cells across the worker pool. Reports the
+// serial (jobs=1) and multi-core (jobs=0 → all cores) wall clock for the
+// same cell grid, verifies the merged results are bit-identical, and prints
+// the speedup (the acceptance metric for the sharded coordinator).
+//
+// Run: `cargo bench --bench sweep`
+
+include!("harness.rs");
+
+use lpgd::coordinator::scheduler::{available_jobs, cell_stream, run_indexed};
+use lpgd::fp::{FpFormat, Rng, Rounding};
+use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::problems::Quadratic;
+
+fn main() {
+    let n = 200;
+    let steps = 300;
+    let reps = 8u64;
+    let (p, x0, _) = Quadratic::setting2(n, 0);
+    let modes = [
+        Rounding::Sr,
+        Rounding::SrEps(0.1),
+        Rounding::SrEps(0.4),
+        Rounding::SignedSrEps(0.1),
+    ];
+    let cells: Vec<(usize, u64)> =
+        (0..modes.len()).flat_map(|m| (0..reps).map(move |r| (m, r))).collect();
+    let root_seed = 7u64;
+
+    let sweep = |jobs: usize| -> Vec<f64> {
+        run_indexed(jobs, cells.len(), |k| {
+            let (m, r) = cells[k];
+            let mode = modes[m];
+            let schemes = StepSchemes { grad: Rounding::Sr, mul: Rounding::Sr, sub: mode };
+            let mut cfg = GdConfig::new(FpFormat::BFLOAT16, schemes, 1.0 / n as f64, steps);
+            cfg.rng = Some(Rng::new(root_seed).split(cell_stream("sweep", &mode.label(), r)));
+            let mut e = GdEngine::new(cfg, &p, &x0);
+            e.run(None).final_f()
+        })
+    };
+
+    println!(
+        "-- sharded sweep: {} cells (dense quad n={n}, {steps} steps), {} cores --",
+        cells.len(),
+        available_jobs()
+    );
+    let serial = bench("sweep jobs=1 (serial)", cells.len() as u64, || {
+        std::hint::black_box(sweep(1));
+    });
+    let parallel = bench("sweep jobs=0 (all cores)", cells.len() as u64, || {
+        std::hint::black_box(sweep(0));
+    });
+    report_speedup(&serial, &parallel);
+
+    // Determinism spot-check on the real results (not just the bench body).
+    let a = sweep(1);
+    let b = sweep(0);
+    assert_eq!(a, b, "jobs=1 and jobs=0 merged results must be bit-identical");
+    println!("determinism OK: {} cells bit-identical across job counts", a.len());
+}

@@ -1,31 +1,54 @@
 //! Multi-seed expectation estimation: the paper reports E[·] and population
 //! variance over 20 independent simulations (§5). Deterministic runs
 //! (RN / binary32 baselines) are executed once.
+//!
+//! [`expectation_jobs`] is the scheduler-backed variant: the repetitions
+//! fan out across the worker pool as independent cells and are merged in
+//! seed order, so the aggregate is bit-identical for every `--jobs` value
+//! (floating-point summation order is fixed by the ordered merge).
 
+use crate::coordinator::scheduler::run_indexed;
 use crate::gd::trace::{mean_series, variance_series, Trace};
 
 /// Aggregated series over seeds.
 #[derive(Debug, Clone)]
 pub struct ExpectationResult {
+    /// Pointwise mean over the seeds.
     pub mean: Vec<f64>,
+    /// Pointwise population variance over the seeds.
     pub variance: Vec<f64>,
+    /// How many seeds were aggregated.
     pub seeds: usize,
 }
 
 impl ExpectationResult {
+    /// Largest pointwise variance along the series.
     pub fn max_variance(&self) -> f64 {
         self.variance.iter().cloned().fold(0.0, f64::max)
     }
 }
 
 /// Run `runner(seed)` for `seeds` seeds and aggregate the series selected by
-/// `select` (objective, metric, …) pointwise.
+/// `select` (objective, metric, …) pointwise. Serial; equivalent to
+/// [`expectation_jobs`] with `jobs = 1`.
 pub fn expectation(
     seeds: usize,
-    runner: &dyn Fn(u64) -> Trace,
-    select: &dyn Fn(&Trace) -> Vec<f64>,
+    runner: &(dyn Fn(u64) -> Trace + Sync),
+    select: &(dyn Fn(&Trace) -> Vec<f64> + Sync),
 ) -> ExpectationResult {
-    let all: Vec<Vec<f64>> = (0..seeds as u64).map(|s| select(&runner(s))).collect();
+    expectation_jobs(1, seeds, runner, select)
+}
+
+/// Scheduler-backed [`expectation`]: the `seeds` repetitions run as
+/// independent cells on a pool of `jobs` workers (`0` = auto, `1` = inline)
+/// and are merged in seed order — bit-identical to the serial path.
+pub fn expectation_jobs(
+    jobs: usize,
+    seeds: usize,
+    runner: &(dyn Fn(u64) -> Trace + Sync),
+    select: &(dyn Fn(&Trace) -> Vec<f64> + Sync),
+) -> ExpectationResult {
+    let all: Vec<Vec<f64>> = run_indexed(jobs, seeds, |s| select(&runner(s as u64)));
     ExpectationResult { mean: mean_series(&all), variance: variance_series(&all), seeds }
 }
 
@@ -48,6 +71,14 @@ mod tests {
             });
         }
         t
+    }
+
+    #[test]
+    fn jobs_count_does_not_change_the_aggregate() {
+        let serial = expectation_jobs(1, 8, &toy_trace, &|t| t.objective_series());
+        let pooled = expectation_jobs(8, 8, &toy_trace, &|t| t.objective_series());
+        assert_eq!(serial.mean, pooled.mean);
+        assert_eq!(serial.variance, pooled.variance);
     }
 
     #[test]

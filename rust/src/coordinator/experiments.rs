@@ -1,13 +1,18 @@
-//! The experiment registry: one entry per table/figure of the paper
-//! (DESIGN.md §5). Every experiment returns one or more [`Table`]s and
-//! writes them as CSV under the output directory.
+//! The experiment builders: one function per table/figure of the paper
+//! (DESIGN.md §5), plus the shared [`ExpCtx`] knobs and the
+//! [`run_experiment`] entry point. The id → builder mapping lives in
+//! [`crate::coordinator::registry`]; the multi-threaded fan-out of
+//! (experiment × rounding-mode × repetition) cells goes through
+//! [`crate::coordinator::scheduler`] (`ExpCtx::jobs`, CLI `--jobs`).
 //!
 //! Scale notes (documented substitutions, DESIGN.md §2): the learning
 //! experiments use the procedural digit dataset at 14×14 by default
 //! (`--side 28` for full size) and `--seeds` controls the expectation
 //! estimate (paper: 20; default here: 5 for a single-core laptop budget).
 
-use crate::coordinator::aggregate::expectation;
+use crate::coordinator::aggregate::expectation_jobs;
+use crate::coordinator::registry;
+use crate::coordinator::scheduler::run_indexed;
 use crate::data::{load_or_synth, Dataset};
 use crate::fp::{expected_round, FpFormat, Rounding};
 use crate::gd::engine::{GdConfig, GdEngine, GradModel, StepSchemes};
@@ -23,21 +28,29 @@ use anyhow::{bail, Result};
 pub struct ExpCtx {
     /// Seeds for stochastic-rounding expectations (paper: 20).
     pub seeds: usize,
+    /// Worker threads for the cell scheduler (`0` = all cores, `1` =
+    /// serial). Any value produces bit-identical results; see
+    /// [`crate::coordinator::scheduler`].
+    pub jobs: usize,
     /// Output directory for CSVs.
     pub out_dir: String,
     /// Image side for the synthetic digit data (paper MNIST: 28).
     pub side: usize,
-    /// Training/test sizes for MLR (paper: 60000/10000).
+    /// Training-set size for MLR (paper: 60000).
     pub mlr_train: usize,
+    /// Test-set size for MLR (paper: 10000).
     pub mlr_test: usize,
-    /// Training/test sizes for the NN 3-vs-8 task (paper: 11982/1984).
+    /// Training-set size for the NN 3-vs-8 task (paper: 11982).
     pub nn_train: usize,
+    /// Test-set size for the NN 3-vs-8 task (paper: 1984).
     pub nn_test: usize,
-    /// Epochs for MLR (paper: 150) and the NN (paper: 50).
+    /// Epochs for MLR (paper: 150).
     pub mlr_epochs: usize,
+    /// Epochs for the NN (paper: 50).
     pub nn_epochs: usize,
-    /// Quadratic iteration budget (paper fig3: 4000) and dimension (1000).
+    /// Quadratic iteration budget (paper fig3: 4000).
     pub quad_steps: usize,
+    /// Quadratic dimension (paper: 1000).
     pub quad_n: usize,
     /// Optional real-MNIST directory.
     pub mnist_dir: Option<String>,
@@ -47,6 +60,7 @@ impl Default for ExpCtx {
     fn default() -> Self {
         Self {
             seeds: 5,
+            jobs: 0,
             out_dir: "results".into(),
             side: 14,
             mlr_train: 4000,
@@ -81,51 +95,27 @@ impl ExpCtx {
     }
 }
 
-pub const EXPERIMENTS: &[(&str, &str)] = &[
-    ("table2", "Number-format parameters (u, x_min, x_max)"),
-    ("fig1", "E[fl(y)] across one rounding gap for RN/SR/SReps"),
-    ("fig2", "Stagnation of GD with RN on (x-1024)^2 in binary8"),
-    ("fig3a", "Quadratic Setting I: SR vs signed-SReps vs binary32 + Thm2 bound"),
-    ("fig3b", "Quadratic Setting II (dense A): same comparison"),
-    ("fig4a", "MLR test error: RN/SR/SReps for (8a)+(8b), SR for (8c)"),
-    ("fig4b", "MLR test error: signed-SReps combinations for (8c)"),
-    ("fig4a-acc", "ABLATION: fig4a under low-precision accumulation (absorption)"),
-    ("fig5a", "MLR: stepsize sweep under SR"),
-    ("fig5b", "MLR: stepsize sweep under SReps+signed-SReps"),
-    ("fig6a", "NN (3 vs 8) test error: RN/SR/SReps for (8a)+(8b)"),
-    ("fig6b", "NN test error: signed-SReps combinations for (8c)"),
-    ("table1", "Numerical verification of the theory (Table 1 rows)"),
-];
-
+/// List every reproducible experiment as `(id, description)` pairs
+/// (compatibility view over [`registry::REGISTRY`]).
 pub fn list_experiments() -> Vec<(&'static str, &'static str)> {
-    EXPERIMENTS.to_vec()
+    registry::REGISTRY.iter().map(|s| (s.id, s.description)).collect()
 }
 
-/// Run one experiment by id (or "all"); returns the produced tables.
+/// Run one experiment by id (or "all"); returns the produced tables after
+/// writing each as CSV under `ctx.out_dir`.
 pub fn run_experiment(id: &str, ctx: &ExpCtx) -> Result<Vec<Table>> {
-    let tables = match id {
-        "table2" => vec![table2()],
-        "fig1" => vec![fig1()],
-        "fig2" => vec![fig2()],
-        "fig3a" => vec![fig3(ctx, false)],
-        "fig3b" => vec![fig3(ctx, true)],
-        "fig4a" => vec![fig4a(ctx)],
-        "fig4b" => vec![fig4b(ctx)],
-        "fig4a-acc" => vec![fig4a_acc(ctx)],
-        "fig5a" => vec![fig5(ctx, false)],
-        "fig5b" => vec![fig5(ctx, true)],
-        "fig6a" => vec![fig6a(ctx)],
-        "fig6b" => vec![fig6b(ctx)],
-        "table1" => vec![table1(ctx)],
-        "all" => {
-            let mut all = vec![];
-            for (name, _) in EXPERIMENTS {
-                all.extend(run_experiment(name, ctx)?);
-            }
-            return Ok(all);
+    if id == "all" {
+        let mut all = vec![];
+        for spec in registry::REGISTRY {
+            all.extend(run_experiment(spec.id, ctx)?);
         }
-        other => bail!("unknown experiment '{other}' (see `lpgd list`)"),
+        return Ok(all);
+    }
+    let spec = match registry::find(id) {
+        Some(s) => s,
+        None => bail!("unknown experiment '{id}' (see `lpgd list`)"),
     };
+    let tables = (spec.run)(ctx);
     for t in &tables {
         t.write_csv(&ctx.out_dir)?;
     }
@@ -134,7 +124,8 @@ pub fn run_experiment(id: &str, ctx: &ExpCtx) -> Result<Vec<Table>> {
 
 // ---------------------------------------------------------------- table2 --
 
-fn table2() -> Table {
+/// Paper Table 2: number-format parameters.
+pub(crate) fn table2() -> Table {
     let mut t = Table::new(
         "table2",
         "Number-format parameters (paper Table 2)",
@@ -159,7 +150,8 @@ fn table2() -> Table {
 
 // ------------------------------------------------------------------ fig1 --
 
-fn fig1() -> Table {
+/// Paper Figure 1: closed-form E[fl(y)] across one rounding gap.
+pub(crate) fn fig1() -> Table {
     // E[fl(y)] for y spanning one gap of binary8: positive gap (1, 1.25)
     // and negative gap (−1.25, −1), under RN / SR / SRε(0.25) / SRε(0.5).
     let fmt = FpFormat::BINARY8;
@@ -188,7 +180,8 @@ fn fig1() -> Table {
 
 // ------------------------------------------------------------------ fig2 --
 
-fn fig2() -> Table {
+/// Paper Figure 2: GD stagnation under RN in binary8, with τ_k.
+pub(crate) fn fig2() -> Table {
     // f(x) = (x−1024)², binary8, RN; x0 = 1, t = 0.05 (§3.2 / Figure 2).
     let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
     let mut cfg = GdConfig::new(
@@ -254,7 +247,9 @@ fn fig2() -> Table {
 
 // ------------------------------------------------------------------ fig3 --
 
-fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
+/// Paper Figure 3 (a: Setting I diagonal, b: Setting II dense): SR vs
+/// signed-SRε against the binary32 baseline and the Theorem-2 bound.
+pub(crate) fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
     let n = ctx.quad_n;
     let steps = ctx.quad_steps;
     let (p, x0, t_step) =
@@ -273,16 +268,19 @@ fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
 
     // binary32 + RN baseline ("exact" reference), deterministic.
     let base = run(FpFormat::BINARY32, StepSchemes::uniform(Rounding::RoundNearestEven), 0);
-    // bfloat16: (8a)+(8b) SR with (8c) ∈ {SR, signed-SRε(0.4)}.
+    // bfloat16: (8a)+(8b) SR with (8c) ∈ {SR, signed-SRε(0.4)}; the seed
+    // repetitions fan out across the worker pool.
     let sr_schemes = StepSchemes::uniform(Rounding::Sr);
-    let sr = expectation(ctx.seeds, &|s| run(FpFormat::BFLOAT16, sr_schemes, s), &|t| {
-        t.objective_series()
-    });
+    let sr =
+        expectation_jobs(ctx.jobs, ctx.seeds, &|s| run(FpFormat::BFLOAT16, sr_schemes, s), &|t| {
+            t.objective_series()
+        });
     let sg_schemes =
         StepSchemes { grad: Rounding::Sr, mul: Rounding::Sr, sub: Rounding::SignedSrEps(0.4) };
-    let signed = expectation(ctx.seeds, &|s| run(FpFormat::BFLOAT16, sg_schemes, s), &|t| {
-        t.objective_series()
-    });
+    let signed =
+        expectation_jobs(ctx.jobs, ctx.seeds, &|s| run(FpFormat::BFLOAT16, sg_schemes, s), &|t| {
+            t.objective_series()
+        });
 
     let id = if dense { "fig3b" } else { "fig3a" };
     let setting = if dense { "Setting II" } else { "Setting I" };
@@ -302,18 +300,19 @@ fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
         ]);
     }
     // Paper's §5.1 closing metric for Setting II: relative error at k=4000.
+    // One cell per seed; the ordered merge fixes the summation order so the
+    // average is identical for every jobs count.
     let rel_err = |schemes: StepSchemes| -> f64 {
-        let mut acc = 0.0;
-        for s in 0..ctx.seeds as u64 {
+        let errs = run_indexed(ctx.jobs, ctx.seeds, |s| {
             let mut cfg = GdConfig::new(FpFormat::BFLOAT16, schemes, t_step, steps);
-            cfg.seed = s;
+            cfg.seed = s as u64;
             let mut e = GdEngine::new(cfg, &p, &x0);
             e.run(None);
             let d = crate::fp::linalg::exact::sub(&e.x, p.optimum().unwrap());
-            acc += crate::fp::linalg::exact::norm2(&d)
-                / crate::fp::linalg::exact::norm2(p.optimum().unwrap());
-        }
-        acc / ctx.seeds as f64
+            crate::fp::linalg::exact::norm2(&d)
+                / crate::fp::linalg::exact::norm2(p.optimum().unwrap())
+        });
+        errs.iter().sum::<f64>() / ctx.seeds as f64
     };
     if dense {
         t.note(format!(
@@ -347,32 +346,78 @@ fn mlr_setup(ctx: &ExpCtx) -> LearnSetup {
     LearnSetup { mlr, test: splits.test, x0 }
 }
 
-/// Run one MLR training config, returning the mean test-error series.
-fn mlr_curve(
-    setup: &LearnSetup,
-    fmt: FpFormat,
-    schemes: StepSchemes,
-    t_step: f64,
-    epochs: usize,
-    seeds: usize,
-) -> Vec<f64> {
+/// How many expectation seeds a scheme combination needs: stochastic
+/// schemes average over `seeds`, fully deterministic ones run once.
+fn seeds_for(schemes: &StepSchemes, seeds: usize) -> usize {
     let stochastic = schemes.grad.is_stochastic()
         || schemes.mul.is_stochastic()
         || schemes.sub.is_stochastic();
-    let n_seeds = if stochastic { seeds } else { 1 };
-    let run = |s: u64| -> Trace {
-        let mut cfg = GdConfig::new(fmt, schemes, t_step, epochs);
-        cfg.seed = s;
-        let mut e = GdEngine::new(cfg, &setup.mlr, &setup.x0);
-        let metric = |x: &[f64]| setup.mlr.test_error(x, &setup.test);
-        e.run(Some(&metric))
-    };
-    expectation(n_seeds, &run, &|t| t.metric_series()).mean
+    if stochastic {
+        seeds
+    } else {
+        1
+    }
+}
+
+/// Fan a (config × repetition) grid out as **one** batch of scheduler
+/// cells and return the per-config mean series.
+///
+/// This is the coordinator's main fan-out shape: flattening the whole grid
+/// keeps every worker busy even when some configs are deterministic single
+/// runs. `seeds_per_cfg[ci]` repetitions are enumerated per config;
+/// `run(ci, seed)` produces one cell's series. Results are grouped back
+/// per config in cell order, making the means — and the CSVs — bit-
+/// identical for any `jobs` value.
+fn curves_flat(
+    seeds_per_cfg: &[usize],
+    jobs: usize,
+    run: &(dyn Fn(usize, u64) -> Vec<f64> + Sync),
+) -> Vec<Vec<f64>> {
+    let mut cells: Vec<(usize, u64)> = Vec::new();
+    for (ci, &n) in seeds_per_cfg.iter().enumerate() {
+        for s in 0..n as u64 {
+            cells.push((ci, s));
+        }
+    }
+    let series: Vec<Vec<f64>> = run_indexed(jobs, cells.len(), |k| {
+        let (ci, s) = cells[k];
+        run(ci, s)
+    });
+    let mut curves = Vec::with_capacity(seeds_per_cfg.len());
+    let mut offset = 0;
+    for &n in seeds_per_cfg {
+        curves.push(crate::gd::trace::mean_series(&series[offset..offset + n]));
+        offset += n;
+    }
+    curves
+}
+
+/// One MLR training cell: train `(fmt, schemes, grad_model)` at `seed` for
+/// `epochs` and return the test-error series. Every MLR fan-out
+/// (`learning_table`, `fig4a_acc`, `fig5`) runs this one body, so a change
+/// to how a cell is configured happens in exactly one place.
+#[allow(clippy::too_many_arguments)]
+fn mlr_cell(
+    setup: &LearnSetup,
+    fmt: FpFormat,
+    schemes: StepSchemes,
+    gm: GradModel,
+    t_step: f64,
+    epochs: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let mut cfg = GdConfig::new(fmt, schemes, t_step, epochs);
+    cfg.seed = seed;
+    cfg.grad_model = gm;
+    let mut e = GdEngine::new(cfg, &setup.mlr, &setup.x0);
+    let metric = |x: &[f64]| setup.mlr.test_error(x, &setup.test);
+    e.run(Some(&metric)).metric_series()
 }
 
 // ------------------------------------------------------------------ fig4 --
 
-fn fig4a(ctx: &ExpCtx) -> Table {
+/// Paper Figure 4a: MLR scheme sweep for (8a)+(8b) with (8c)=SR.
+pub(crate) fn fig4a(ctx: &ExpCtx) -> Table {
     let setup = mlr_setup(ctx);
     let t_step = 0.5;
     let b8 = FpFormat::BINARY8;
@@ -392,10 +437,12 @@ fn fig4a(ctx: &ExpCtx) -> Table {
         t_step,
         ctx.mlr_epochs,
         ctx.seeds,
+        ctx.jobs,
     )
 }
 
-fn fig4b(ctx: &ExpCtx) -> Table {
+/// Paper Figure 4b: MLR with signed-SRε variants on step (8c).
+pub(crate) fn fig4b(ctx: &ExpCtx) -> Table {
     let setup = mlr_setup(ctx);
     let t_step = 0.5;
     let b8 = FpFormat::BINARY8;
@@ -415,6 +462,7 @@ fn fig4b(ctx: &ExpCtx) -> Table {
         t_step,
         ctx.mlr_epochs,
         ctx.seeds,
+        ctx.jobs,
     );
     t.note("paper: signed-SReps(0.1) reaches the binary32-150-epoch error in ~82-84 epochs");
     t
@@ -426,7 +474,7 @@ fn fig4b(ctx: &ExpCtx) -> Table {
 /// the absorption mechanism directly: under RN the per-sample gradient
 /// contributions vanish against the running sum and training stalls at a
 /// high error, while SR preserves them in expectation (Gupta et al. 2015).
-fn fig4a_acc(ctx: &ExpCtx) -> Table {
+pub(crate) fn fig4a_acc(ctx: &ExpCtx) -> Table {
     let setup = mlr_setup(ctx);
     let t_step = 0.5;
     let b8 = FpFormat::BINARY8;
@@ -446,22 +494,12 @@ fn fig4a_acc(ctx: &ExpCtx) -> Table {
         "MLR: absorption ablation (low-precision accumulation vs chop result-rounding)",
         &col_refs,
     );
-    let curves: Vec<Vec<f64>> = cfgs
-        .iter()
-        .map(|(_, fmt, sch, gm)| {
-            let stochastic = sch.grad.is_stochastic() || sch.sub.is_stochastic();
-            let n_seeds = if stochastic { ctx.seeds } else { 1 };
-            let run = |s: u64| -> Trace {
-                let mut cfg = GdConfig::new(*fmt, *sch, t_step, epochs);
-                cfg.seed = s;
-                cfg.grad_model = *gm;
-                let mut e = GdEngine::new(cfg, &setup.mlr, &setup.x0);
-                let metric = |x: &[f64]| setup.mlr.test_error(x, &setup.test);
-                e.run(Some(&metric))
-            };
-            expectation(n_seeds, &run, &|t| t.metric_series()).mean
-        })
-        .collect();
+    let seeds_per: Vec<usize> =
+        cfgs.iter().map(|(_, _, sch, _)| seeds_for(sch, ctx.seeds)).collect();
+    let curves = curves_flat(&seeds_per, ctx.jobs, &|ci, s| {
+        let (_, fmt, sch, gm) = &cfgs[ci];
+        mlr_cell(&setup, *fmt, *sch, *gm, t_step, epochs, s)
+    });
     for k in 0..epochs {
         let mut row: Vec<Cell> = vec![k.into()];
         for cv in &curves {
@@ -475,7 +513,8 @@ fn fig4a_acc(ctx: &ExpCtx) -> Table {
 
 // ------------------------------------------------------------------ fig5 --
 
-fn fig5(ctx: &ExpCtx, biased: bool) -> Table {
+/// Paper Figure 5 (a: SR, b: SRε+signed-SRε): MLR stepsize sweep.
+pub(crate) fn fig5(ctx: &ExpCtx, biased: bool) -> Table {
     let setup = mlr_setup(ctx);
     let b8 = FpFormat::BINARY8;
     let schemes = if biased {
@@ -502,18 +541,22 @@ fn fig5(ctx: &ExpCtx, biased: bool) -> Table {
     let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(id, title, &col_refs);
 
-    let baseline = mlr_curve(
-        &setup,
-        FpFormat::BINARY32,
-        StepSchemes::uniform(Rounding::RoundNearestEven),
-        1.25,
-        ctx.mlr_epochs,
-        1,
-    );
-    let curves: Vec<Vec<f64>> = ts
-        .iter()
-        .map(|&t_| mlr_curve(&setup, b8, schemes, t_, ctx.mlr_epochs, ctx.seeds))
-        .collect();
+    // One flattened batch: the binary32 baseline (t = 1.25) followed by the
+    // (stepsize × seed) grid — so the deterministic baseline doesn't hold a
+    // core alone while the rest of the pool idles.
+    let mut grid: Vec<(FpFormat, StepSchemes, f64)> =
+        vec![(FpFormat::BINARY32, StepSchemes::uniform(Rounding::RoundNearestEven), 1.25)];
+    for &t_ in &ts {
+        grid.push((b8, schemes, t_));
+    }
+    let seeds_per: Vec<usize> =
+        grid.iter().map(|(_, sch, _)| seeds_for(sch, ctx.seeds)).collect();
+    let mut all = curves_flat(&seeds_per, ctx.jobs, &|ci, s| {
+        let (fmt, sch, t_) = grid[ci];
+        mlr_cell(&setup, fmt, sch, GradModel::RoundAfterOp, t_, ctx.mlr_epochs, s)
+    });
+    let baseline = all.remove(0);
+    let curves = all;
     for k in 0..ctx.mlr_epochs {
         let mut row: Vec<Cell> = vec![k.into(), baseline[k].into()];
         for c in &curves {
@@ -557,29 +600,29 @@ fn nn_setup(ctx: &ExpCtx) -> NnSetup {
     NnSetup { nn, test, x0 }
 }
 
-fn nn_curve(
+/// Fan an NN (config × seed) grid out through [`curves_flat`], returning
+/// the per-config mean test-error series.
+fn nn_curves(
     setup: &NnSetup,
-    fmt: FpFormat,
-    schemes: StepSchemes,
+    cfgs: &[(String, FpFormat, StepSchemes)],
     t_step: f64,
     epochs: usize,
     seeds: usize,
-) -> Vec<f64> {
-    let stochastic = schemes.grad.is_stochastic()
-        || schemes.mul.is_stochastic()
-        || schemes.sub.is_stochastic();
-    let n_seeds = if stochastic { seeds } else { 1 };
-    let run = |s: u64| -> Trace {
-        let mut cfg = GdConfig::new(fmt, schemes, t_step, epochs);
+    jobs: usize,
+) -> Vec<Vec<f64>> {
+    let seeds_per: Vec<usize> = cfgs.iter().map(|(_, _, sch)| seeds_for(sch, seeds)).collect();
+    curves_flat(&seeds_per, jobs, &|ci, s| {
+        let (_, fmt, sch) = &cfgs[ci];
+        let mut cfg = GdConfig::new(*fmt, *sch, t_step, epochs);
         cfg.seed = s;
         let mut e = GdEngine::new(cfg, &setup.nn, &setup.x0);
         let metric = |x: &[f64]| setup.nn.test_error(x, &setup.test);
-        e.run(Some(&metric))
-    };
-    expectation(n_seeds, &run, &|t| t.metric_series()).mean
+        e.run(Some(&metric)).metric_series()
+    })
 }
 
-fn fig6a(ctx: &ExpCtx) -> Table {
+/// Paper Figure 6a: NN scheme sweep for (8a)+(8b).
+pub(crate) fn fig6a(ctx: &ExpCtx) -> Table {
     let setup = nn_setup(ctx);
     let t_step = 0.09375;
     let b8 = FpFormat::BINARY8;
@@ -596,10 +639,7 @@ fn fig6a(ctx: &ExpCtx) -> Table {
         "NN (3 vs 8) test error, binary8, t=0.09375 (paper Fig. 6a)",
         &["epoch", "binary32", "RN", "SR", "SR_eps(0.2)", "SR_eps(0.4)"],
     );
-    let curves: Vec<Vec<f64>> = cfgs
-        .iter()
-        .map(|(_, fmt, sch)| nn_curve(&setup, *fmt, *sch, t_step, ctx.nn_epochs, ctx.seeds))
-        .collect();
+    let curves = nn_curves(&setup, &cfgs, t_step, ctx.nn_epochs, ctx.seeds, ctx.jobs);
     for k in 0..ctx.nn_epochs {
         let mut row: Vec<Cell> = vec![k.into()];
         for c in &curves {
@@ -611,7 +651,8 @@ fn fig6a(ctx: &ExpCtx) -> Table {
     t
 }
 
-fn fig6b(ctx: &ExpCtx) -> Table {
+/// Paper Figure 6b: NN with signed-SRε variants on step (8c).
+pub(crate) fn fig6b(ctx: &ExpCtx) -> Table {
     let setup = nn_setup(ctx);
     let t_step = 0.09375;
     let b8 = FpFormat::BINARY8;
@@ -629,10 +670,7 @@ fn fig6b(ctx: &ExpCtx) -> Table {
         "NN (3 vs 8): signed-SReps for (8c) (paper Fig. 6b)",
         &names,
     );
-    let curves: Vec<Vec<f64>> = cfgs
-        .iter()
-        .map(|(_, fmt, sch)| nn_curve(&setup, *fmt, *sch, t_step, ctx.nn_epochs, ctx.seeds))
-        .collect();
+    let curves = nn_curves(&setup, &cfgs, t_step, ctx.nn_epochs, ctx.seeds, ctx.jobs);
     for k in 0..ctx.nn_epochs {
         let mut row: Vec<Cell> = vec![k.into()];
         for c in &curves {
@@ -655,7 +693,7 @@ fn fig6b(ctx: &ExpCtx) -> Table {
 
 /// Numerically verify each row of the paper's Table 1 on a live Setting-I
 /// run: check the precondition gates and the claimed conclusion.
-fn table1(ctx: &ExpCtx) -> Table {
+pub(crate) fn table1(ctx: &ExpCtx) -> Table {
     let n = ctx.quad_n.min(200);
     let steps = ctx.quad_steps.min(500);
     let (p, x0, t_step) = Quadratic::setting1(n);
@@ -720,7 +758,7 @@ fn table1(ctx: &ExpCtx) -> Table {
             cfg.seed = s;
             GdEngine::new(cfg, &p, &x0).run(None)
         };
-        let traces: Vec<Trace> = (0..ctx.seeds as u64).map(runner).collect();
+        let traces: Vec<Trace> = run_indexed(ctx.jobs, ctx.seeds, |s| runner(s as u64));
         // χ over ALL traces (paper: max_j ‖x̂⁽ʲ⁾−x*‖ on the compared runs).
         let chi = traces
             .iter()
@@ -768,15 +806,14 @@ fn table1(ctx: &ExpCtx) -> Table {
     {
         let p2 = Quadratic::diagonal(vec![2.0], vec![1024.0]);
         let avg_drop = |sub: Rounding| -> f64 {
-            let mut acc = 0.0;
-            for s in 0..ctx.seeds as u64 {
+            let drops = run_indexed(ctx.jobs, ctx.seeds, |s| {
                 let sch = StepSchemes { grad: Rounding::Sr, mul: Rounding::Sr, sub };
                 let mut cfg = GdConfig::new(FpFormat::BINARY8, sch, 0.05, 100);
-                cfg.seed = s;
+                cfg.seed = s as u64;
                 let tr = GdEngine::new(cfg, &p2, &[1.0]).run(None);
-                acc += tr.records[0].f - tr.final_f();
-            }
-            acc / ctx.seeds as f64
+                tr.records[0].f - tr.final_f()
+            });
+            drops.iter().sum::<f64>() / ctx.seeds as f64
         };
         let d_sr = avg_drop(Rounding::Sr);
         let d_sg = avg_drop(Rounding::SignedSrEps(0.25));
@@ -793,7 +830,9 @@ fn table1(ctx: &ExpCtx) -> Table {
     t
 }
 
-/// Shared learning-figure table builder (named-config × epochs grid).
+/// Shared learning-figure table builder (named-config × epochs grid),
+/// fanned out through [`curves_flat`].
+#[allow(clippy::too_many_arguments)]
 fn learning_table(
     id: &str,
     title: &str,
@@ -802,15 +841,17 @@ fn learning_table(
     t_step: f64,
     epochs: usize,
     seeds: usize,
+    jobs: usize,
 ) -> Table {
     let mut cols = vec!["epoch".to_string()];
     cols.extend(cfgs.iter().map(|(n, _, _)| n.clone()));
     let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new(id, title, &col_refs);
-    let curves: Vec<Vec<f64>> = cfgs
-        .iter()
-        .map(|(_, fmt, sch)| mlr_curve(setup, *fmt, *sch, t_step, epochs, seeds))
-        .collect();
+    let seeds_per: Vec<usize> = cfgs.iter().map(|(_, _, sch)| seeds_for(sch, seeds)).collect();
+    let curves = curves_flat(&seeds_per, jobs, &|ci, s| {
+        let (_, fmt, sch) = &cfgs[ci];
+        mlr_cell(setup, *fmt, *sch, GradModel::RoundAfterOp, t_step, epochs, s)
+    });
     for k in 0..epochs {
         let mut row: Vec<Cell> = vec![k.into()];
         for c in &curves {
@@ -827,13 +868,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_covers_every_paper_artifact() {
-        let ids: Vec<&str> = EXPERIMENTS.iter().map(|(i, _)| *i).collect();
-        for required in
-            ["table1", "table2", "fig1", "fig2", "fig3a", "fig3b", "fig4a", "fig4b", "fig5a", "fig5b", "fig6a", "fig6b"]
-        {
-            assert!(ids.contains(&required), "missing {required}");
-        }
+    fn list_experiments_mirrors_registry() {
+        let listed = list_experiments();
+        assert_eq!(listed.len(), registry::REGISTRY.len());
+        assert!(listed.iter().any(|(id, _)| *id == "fig3a"));
     }
 
     #[test]

@@ -1,9 +1,26 @@
-//! Layer-3 coordinator (system S13): the experiment registry that
-//! regenerates every table and figure of the paper, the multi-seed
-//! expectation aggregator, and the report writers.
+//! Layer-3 coordinator (system S13): regenerates every table and figure of
+//! the paper, at scale.
+//!
+//! The layer is split into four pieces (see `docs/architecture.md` for the
+//! full data flow):
+//!
+//! * [`registry`] — the self-describing [`registry::ExperimentSpec`] list:
+//!   one entry per paper artifact, mapping a stable id to its builder;
+//! * [`scheduler`] — the sharded worker pool that fans independent
+//!   (experiment × rounding-mode × repetition) cells across cores with a
+//!   deterministic, order-preserving merge (`--jobs N` ≡ `--jobs 1`,
+//!   bit for bit);
+//! * [`experiments`] — the builder functions themselves plus the shared
+//!   [`experiments::ExpCtx`] knobs;
+//! * [`aggregate`] — the multi-seed expectation/variance estimator the
+//!   cells merge through.
 
 pub mod aggregate;
 pub mod experiments;
+pub mod registry;
+pub mod scheduler;
 
-pub use aggregate::{expectation, ExpectationResult};
+pub use aggregate::{expectation, expectation_jobs, ExpectationResult};
 pub use experiments::{list_experiments, run_experiment, ExpCtx};
+pub use registry::{ExperimentSpec, REGISTRY};
+pub use scheduler::{cell_stream, resolve_jobs, run_indexed};

@@ -1,0 +1,145 @@
+//! Self-describing experiment registry: one [`ExperimentSpec`] per table or
+//! figure of the paper (plus in-repo ablations), mapping a stable id to a
+//! description, the paper artifact it reproduces, and the builder function
+//! that regenerates it.
+//!
+//! The registry is the single source of truth consumed by the CLI
+//! (`lpgd list` / `lpgd reproduce`), the figure-regeneration bench
+//! (`benches/figures.rs`) and the integration tests — adding an experiment
+//! means adding exactly one entry here.
+
+use crate::coordinator::experiments::{self, ExpCtx};
+use crate::util::table::Table;
+
+/// One reproducible experiment: id, human description, paper reference and
+/// the builder that produces its result tables.
+#[derive(Clone, Copy)]
+pub struct ExperimentSpec {
+    /// Stable id used on the CLI (`lpgd reproduce <id>`) and as the CSV
+    /// file stem.
+    pub id: &'static str,
+    /// One-line description shown by `lpgd list`.
+    pub description: &'static str,
+    /// The artifact of the source paper this reproduces (or "ablation").
+    pub paper_ref: &'static str,
+    /// Builder: regenerates the experiment's tables for a given context.
+    /// Must be a pure function of `ctx` (the scheduler relies on it).
+    pub run: fn(&ExpCtx) -> Vec<Table>,
+}
+
+/// Every reproducible experiment, in presentation order.
+pub const REGISTRY: &[ExperimentSpec] = &[
+    ExperimentSpec {
+        id: "table2",
+        description: "Number-format parameters (u, x_min, x_max)",
+        paper_ref: "Table 2",
+        run: |_| vec![experiments::table2()],
+    },
+    ExperimentSpec {
+        id: "fig1",
+        description: "E[fl(y)] across one rounding gap for RN/SR/SReps",
+        paper_ref: "Figure 1",
+        run: |_| vec![experiments::fig1()],
+    },
+    ExperimentSpec {
+        id: "fig2",
+        description: "Stagnation of GD with RN on (x-1024)^2 in binary8",
+        paper_ref: "Figure 2",
+        run: |_| vec![experiments::fig2()],
+    },
+    ExperimentSpec {
+        id: "fig3a",
+        description: "Quadratic Setting I: SR vs signed-SReps vs binary32 + Thm2 bound",
+        paper_ref: "Figure 3a",
+        run: |ctx| vec![experiments::fig3(ctx, false)],
+    },
+    ExperimentSpec {
+        id: "fig3b",
+        description: "Quadratic Setting II (dense A): same comparison",
+        paper_ref: "Figure 3b",
+        run: |ctx| vec![experiments::fig3(ctx, true)],
+    },
+    ExperimentSpec {
+        id: "fig4a",
+        description: "MLR test error: RN/SR/SReps for (8a)+(8b), SR for (8c)",
+        paper_ref: "Figure 4a",
+        run: |ctx| vec![experiments::fig4a(ctx)],
+    },
+    ExperimentSpec {
+        id: "fig4b",
+        description: "MLR test error: signed-SReps combinations for (8c)",
+        paper_ref: "Figure 4b",
+        run: |ctx| vec![experiments::fig4b(ctx)],
+    },
+    ExperimentSpec {
+        id: "fig4a-acc",
+        description: "ABLATION: fig4a under low-precision accumulation (absorption)",
+        paper_ref: "ablation",
+        run: |ctx| vec![experiments::fig4a_acc(ctx)],
+    },
+    ExperimentSpec {
+        id: "fig5a",
+        description: "MLR: stepsize sweep under SR",
+        paper_ref: "Figure 5a",
+        run: |ctx| vec![experiments::fig5(ctx, false)],
+    },
+    ExperimentSpec {
+        id: "fig5b",
+        description: "MLR: stepsize sweep under SReps+signed-SReps",
+        paper_ref: "Figure 5b",
+        run: |ctx| vec![experiments::fig5(ctx, true)],
+    },
+    ExperimentSpec {
+        id: "fig6a",
+        description: "NN (3 vs 8) test error: RN/SR/SReps for (8a)+(8b)",
+        paper_ref: "Figure 6a",
+        run: |ctx| vec![experiments::fig6a(ctx)],
+    },
+    ExperimentSpec {
+        id: "fig6b",
+        description: "NN test error: signed-SReps combinations for (8c)",
+        paper_ref: "Figure 6b",
+        run: |ctx| vec![experiments::fig6b(ctx)],
+    },
+    ExperimentSpec {
+        id: "table1",
+        description: "Numerical verification of the theory (Table 1 rows)",
+        paper_ref: "Table 1",
+        run: |ctx| vec![experiments::table1(ctx)],
+    },
+];
+
+/// Look an experiment up by id.
+pub fn find(id: &str) -> Option<&'static ExperimentSpec> {
+    REGISTRY.iter().find(|s| s.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_paper_artifact() {
+        let ids: Vec<&str> = REGISTRY.iter().map(|s| s.id).collect();
+        for required in [
+            "table1", "table2", "fig1", "fig2", "fig3a", "fig3b", "fig4a", "fig4b", "fig5a",
+            "fig5b", "fig6a", "fig6b",
+        ] {
+            assert!(ids.contains(&required), "missing {required}");
+        }
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let mut ids: Vec<&str> = REGISTRY.iter().map(|s| s.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), REGISTRY.len());
+    }
+
+    #[test]
+    fn find_hits_and_misses() {
+        assert_eq!(find("fig2").map(|s| s.paper_ref), Some("Figure 2"));
+        assert!(find("fig99").is_none());
+    }
+}

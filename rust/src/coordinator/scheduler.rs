@@ -1,0 +1,172 @@
+//! Sharded experiment scheduler: a `std::thread` worker pool that fans
+//! independent (experiment × rounding-mode × repetition) cells out across
+//! cores and merges their results deterministically.
+//!
+//! # Determinism contract
+//!
+//! Every cell is a *pure function of its index* (and, for stochastic runs,
+//! of a [`crate::fp::Rng::split`] stream keyed by a stable cell id): no
+//! cell reads another cell's output, a mutable global, or the identity of
+//! the worker thread that happens to execute it. Workers pull indices from
+//! a shared atomic counter, tag each result with its index, and the merge
+//! sorts by index — so the returned vector is *bit-identical* for any
+//! worker count and any execution interleaving (`--jobs 1` ≡ `--jobs N`).
+//! `rust/tests/integration.rs` asserts this end-to-end on whole
+//! experiment CSVs.
+//!
+//! # Why a bespoke pool
+//!
+//! The image is offline (no `rayon`/`crossbeam`); scoped threads
+//! (`std::thread::scope`, stable since 1.63) borrow the cell closure and
+//! the result buffer directly, so the pool is ~40 lines with no `Arc`
+//! plumbing. Cells are coarse (one GD run: 10³–10⁶ rounded operations), so
+//! a single atomic fetch-add per cell is negligible scheduling overhead.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads the machine can usefully run (≥ 1).
+pub fn available_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a user-facing `--jobs` value: `0` means "auto" (all cores).
+pub fn resolve_jobs(requested: usize) -> usize {
+    if requested == 0 {
+        available_jobs()
+    } else {
+        requested
+    }
+}
+
+/// Stable stream id for an (experiment, config, repetition) cell: FNV-1a
+/// over the two labels, mixed with the repetition index. Purely a function
+/// of the cell's *identity*, never of scheduling state, so the id — and
+/// through [`crate::fp::Rng::split`] the cell's whole random trajectory —
+/// survives reordering, re-sharding and resumption.
+///
+/// The in-repo figure builders keep the paper's legacy seed-keyed streams
+/// (`GdConfig::seed = repetition`) for bit-compatibility with earlier
+/// releases; `cell_stream` + `Rng::split` is the injection path for
+/// fully-independent per-cell streams, exercised by `benches/sweep.rs`,
+/// the tests below, and intended for cross-process sharding.
+pub fn cell_stream(experiment: &str, config: &str, rep: u64) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in experiment.bytes().chain([0xff]).chain(config.bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ rep.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// Run `f(0), f(1), …, f(n-1)` on a pool of `jobs` worker threads and
+/// return the results **in index order** (see the module docs for the
+/// determinism contract). `jobs == 0` means auto; `jobs <= 1` (or `n <= 1`)
+/// runs inline on the caller's thread with zero pool overhead.
+pub fn run_indexed<T, F>(jobs: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let jobs = resolve_jobs(jobs).min(n.max(1));
+    if jobs <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| {
+                let mut local = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                done.lock().unwrap().append(&mut local);
+            });
+        }
+    });
+    let mut pairs = done.into_inner().unwrap();
+    debug_assert_eq!(pairs.len(), n);
+    pairs.sort_unstable_by_key(|&(i, _)| i);
+    pairs.into_iter().map(|(_, t)| t).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::{FpFormat, Rng, Rounding};
+    use crate::gd::engine::{GdConfig, GdEngine, StepSchemes};
+    use crate::problems::Quadratic;
+
+    #[test]
+    fn results_arrive_in_index_order() {
+        for jobs in [1, 2, 8] {
+            let out = run_indexed(jobs, 100, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>(), "jobs={jobs}");
+        }
+        assert!(run_indexed(4, 0, |i| i).is_empty());
+        assert_eq!(run_indexed(0, 3, |i| i), vec![0, 1, 2]); // jobs=0 → auto
+    }
+
+    #[test]
+    fn uneven_work_still_merges_deterministically() {
+        // Cells with wildly different costs exercise out-of-order completion.
+        let slow = |i: usize| {
+            let mut acc = 0u64;
+            let iters = if i % 7 == 0 { 200_000 } else { 10 };
+            for k in 0..iters {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            (i, acc)
+        };
+        let serial = run_indexed(1, 64, slow);
+        let parallel = run_indexed(8, 64, slow);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn cell_stream_is_stable_and_injective_in_practice() {
+        let a = cell_stream("fig4a", "SR", 0);
+        assert_eq!(a, cell_stream("fig4a", "SR", 0));
+        assert_ne!(a, cell_stream("fig4a", "SR", 1));
+        assert_ne!(a, cell_stream("fig4a", "RN", 0));
+        assert_ne!(a, cell_stream("fig4b", "SR", 0));
+        // The separator byte keeps ("ab","c") and ("a","bc") distinct.
+        assert_ne!(cell_stream("ab", "c", 0), cell_stream("a", "bc", 0));
+    }
+
+    /// The headline guarantee: a sweep of stochastic GD cells produces
+    /// bit-identical trajectories at jobs=1 and jobs=8, with each cell's
+    /// stream derived via `Rng::split` from the root seed.
+    #[test]
+    fn gd_sweep_is_bit_identical_across_job_counts() {
+        let (p, x0, _) = Quadratic::setting1(40);
+        let modes = [Rounding::Sr, Rounding::SrEps(0.2), Rounding::SignedSrEps(0.2)];
+        let reps = 6u64;
+        let root_seed = 42u64;
+        let cells: Vec<(usize, u64)> = (0..modes.len())
+            .flat_map(|m| (0..reps).map(move |r| (m, r)))
+            .collect();
+        let run_sweep = |jobs: usize| -> Vec<Vec<f64>> {
+            run_indexed(jobs, cells.len(), |k| {
+                let (m, r) = cells[k];
+                let mode = modes[m];
+                let mut cfg =
+                    GdConfig::new(FpFormat::BFLOAT16, StepSchemes::uniform(mode), 0.3, 30);
+                cfg.rng =
+                    Some(Rng::new(root_seed).split(cell_stream("sweep", &mode.label(), r)));
+                let mut e = GdEngine::new(cfg, &p, &x0);
+                e.run(None).objective_series()
+            })
+        };
+        let serial = run_sweep(1);
+        let parallel = run_sweep(8);
+        assert_eq!(serial, parallel);
+        // Distinct cells genuinely follow distinct trajectories.
+        assert_ne!(serial[0], serial[1]);
+    }
+}

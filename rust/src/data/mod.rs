@@ -18,19 +18,24 @@ pub mod synth;
 pub struct Dataset {
     /// n_samples × n_features, values in [0, 1].
     pub x: Vec<f64>,
+    /// One class label per sample row.
     pub labels: Vec<u8>,
+    /// Feature count per row (side² for square images).
     pub n_features: usize,
 }
 
 impl Dataset {
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// True when the dataset holds no samples.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
+    /// The i-th sample's feature row.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.x[i * self.n_features..(i + 1) * self.n_features]
     }
@@ -49,6 +54,7 @@ impl Dataset {
         Dataset { x, labels, n_features: self.n_features }
     }
 
+    /// Number of classes (1 + the largest label; 0 when empty).
     pub fn n_classes(&self) -> usize {
         self.labels.iter().map(|&l| l as usize).max().map_or(0, |m| m + 1)
     }
@@ -57,7 +63,9 @@ impl Dataset {
 /// Train/test pair.
 #[derive(Debug, Clone)]
 pub struct Splits {
+    /// Training split.
     pub train: Dataset,
+    /// Held-out test split.
     pub test: Dataset,
 }
 

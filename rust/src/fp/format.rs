@@ -27,6 +27,8 @@ pub struct FpFormat {
 }
 
 impl FpFormat {
+    /// A format with `sig_bits` significand bits (implicit bit included),
+    /// exponent range `[e_min, e_max]` and subnormals enabled.
     pub const fn new(sig_bits: u32, e_min: i32, e_max: i32) -> Self {
         Self { sig_bits, e_min, e_max, subnormals: true }
     }
@@ -56,6 +58,7 @@ impl FpFormat {
         }
     }
 
+    /// Canonical name of a preset format ("custom" for anything else).
     pub fn name(&self) -> &'static str {
         match *self {
             Self::BINARY8 => "binary8",

@@ -12,22 +12,33 @@
 //! RN / SR / SRε / signed-SRε with one configuration knob.
 
 use super::format::FpFormat;
-use super::round::{round, round_with, Rounding};
+use super::round::{RoundPlan, Rounding};
 use super::rng::Rng;
 
-/// A low-precision computation context: all ops round into `fmt` with `mode`.
+/// A low-precision computation context: all ops round into a fixed
+/// `(format, mode)` pair chosen at construction.
+///
+/// The rounding constants are precomputed once ([`RoundPlan`]) — this is
+/// the (8a) gradient hot path, where a single evaluation performs
+/// `samples × features` scalar roundings. Format and mode are private so
+/// the cached plan can never desynchronize; build a fresh context to
+/// switch either.
 #[derive(Debug, Clone)]
 pub struct LpCtx {
-    pub fmt: FpFormat,
-    pub mode: Rounding,
+    fmt: FpFormat,
+    mode: Rounding,
+    /// Randomness stream for the stochastic schemes.
     pub rng: Rng,
     /// Number of rounding operations performed (profiling / op counting).
     pub rounding_ops: u64,
+    /// Constants precomputed from `fmt` at construction.
+    plan: RoundPlan,
 }
 
 impl LpCtx {
+    /// A context rounding into `fmt` with `mode`, drawing from `rng`.
     pub fn new(fmt: FpFormat, mode: Rounding, rng: Rng) -> Self {
-        Self { fmt, mode, rng, rounding_ops: 0 }
+        Self { fmt, mode, rng, rounding_ops: 0, plan: RoundPlan::new(fmt) }
     }
 
     /// An exact (binary64) context — the "exact arithmetic" baseline.
@@ -35,46 +46,63 @@ impl LpCtx {
         Self::new(FpFormat::BINARY64, Rounding::RoundNearestEven, Rng::new(0))
     }
 
+    /// Target format every operation result is rounded into.
+    pub fn fmt(&self) -> FpFormat {
+        self.fmt
+    }
+
+    /// Rounding scheme applied to every operation result.
+    pub fn mode(&self) -> Rounding {
+        self.mode
+    }
+
     /// Round a scalar into the context's format.
     #[inline]
     pub fn fl(&mut self, x: f64) -> f64 {
         self.rounding_ops += 1;
-        round(&self.fmt, self.mode, x, &mut self.rng)
+        self.plan.round(self.mode, x, &mut self.rng)
     }
 
     /// Round with an explicit steering value for `SignedSrEps`.
     #[inline]
     pub fn fl_with(&mut self, x: f64, v: f64) -> f64 {
         self.rounding_ops += 1;
-        round_with(&self.fmt, self.mode, x, v, &mut self.rng)
+        self.plan.round_with(self.mode, x, v, &mut self.rng)
     }
 
     // ---- rounded elementary ops: fl(x op y) ----
 
+    /// Rounded addition `fl(x + y)`.
     #[inline]
     pub fn add(&mut self, x: f64, y: f64) -> f64 {
         self.fl(x + y)
     }
+    /// Rounded subtraction `fl(x − y)`.
     #[inline]
     pub fn sub(&mut self, x: f64, y: f64) -> f64 {
         self.fl(x - y)
     }
+    /// Rounded multiplication `fl(x · y)`.
     #[inline]
     pub fn mul(&mut self, x: f64, y: f64) -> f64 {
         self.fl(x * y)
     }
+    /// Rounded division `fl(x / y)`.
     #[inline]
     pub fn div(&mut self, x: f64, y: f64) -> f64 {
         self.fl(x / y)
     }
+    /// Rounded exponential `fl(eˣ)`.
     #[inline]
     pub fn exp(&mut self, x: f64) -> f64 {
         self.fl(x.exp())
     }
+    /// Rounded natural log `fl(ln x)`.
     #[inline]
     pub fn ln(&mut self, x: f64) -> f64 {
         self.fl(x.ln())
     }
+    /// Rounded square root `fl(√x)`.
     #[inline]
     pub fn sqrt(&mut self, x: f64) -> f64 {
         self.fl(x.sqrt())
@@ -142,17 +170,21 @@ impl LpCtx {
 /// Exact (f64) helpers used by the "exact arithmetic" reference paths and by
 /// tests — kept here so problem code can share one vocabulary.
 pub mod exact {
+    /// Exact inner product `xᵀy`.
     pub fn dot(x: &[f64], y: &[f64]) -> f64 {
         x.iter().zip(y).map(|(a, b)| a * b).sum()
     }
+    /// Exact Euclidean norm `‖x‖₂`.
     pub fn norm2(x: &[f64]) -> f64 {
         dot(x, x).sqrt()
     }
+    /// Exact matrix–vector product `A·x` (`A` row-major `m × n`).
     pub fn gemv(a: &[f64], m: usize, n: usize, x: &[f64], out: &mut [f64]) {
         for i in 0..m {
             out[i] = dot(&a[i * n..(i + 1) * n], x);
         }
     }
+    /// Exact transposed matrix–vector product `Aᵀ·x` (`A` `m × n`).
     pub fn gemv_t(a: &[f64], m: usize, n: usize, x: &[f64], out: &mut [f64]) {
         out.fill(0.0);
         for i in 0..m {
@@ -162,6 +194,7 @@ pub mod exact {
             }
         }
     }
+    /// Elementwise difference `x − y` as a new vector.
     pub fn sub(x: &[f64], y: &[f64]) -> Vec<f64> {
         x.iter().zip(y).map(|(a, b)| a - b).collect()
     }

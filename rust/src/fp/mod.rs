@@ -10,4 +10,6 @@ pub mod round;
 pub use format::FpFormat;
 pub use linalg::LpCtx;
 pub use rng::Rng;
-pub use round::{expected_round, phi, round, round_slice, round_slice_with, round_with, Rounding};
+pub use round::{
+    expected_round, phi, round, round_slice, round_slice_with, round_with, RoundPlan, Rounding,
+};

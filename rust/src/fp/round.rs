@@ -42,6 +42,7 @@ pub enum Rounding {
 }
 
 impl Rounding {
+    /// Does this scheme consume randomness (SR / SRε / signed-SRε)?
     pub fn is_stochastic(&self) -> bool {
         matches!(self, Rounding::Sr | Rounding::SrEps(_) | Rounding::SignedSrEps(_))
     }
@@ -94,74 +95,129 @@ fn saturate(fmt: &FpFormat, x: f64) -> f64 {
     x.clamp(-fmt.x_max(), fmt.x_max())
 }
 
-/// Hot path: rounding a value whose magnitude is *target-normal* and in
-/// range reduces to rounding the binary64 mantissa tail — pure integer
-/// bit-twiddling, no divisions and no `pow2` reconstruction. This covers
-/// essentially every rounding in a GD run; subnormal/overflow/NaN inputs
-/// fall back to the general path. Returns `None` when ineligible.
+/// Precomputed per-[`FpFormat`] rounding constants — the "format table".
 ///
-/// Correctness notes: with `shift = 53 − s`, the f64 bits of |x| split as
-/// `lo_mag = bits & !mask` (the magnitude-floor, exactly `⌊|x|⌋_F`) and
-/// `hi_mag = lo_mag + 2^shift` (magnitude-ceil; carries into the exponent
-/// field exactly when the mantissa overflows to the next binade, which is
-/// still a representable value). `tail/2^shift` is exactly
+/// The scalar entry points recompute five integers (`shift`, `mask`, the
+/// tie point, the gap scale, the exponent gates) from the format on every
+/// call. One GD step rounds three full vectors (paper eq. (8a)/(8b)/(8c)),
+/// so the engine and the slice kernels build a plan once and reuse it,
+/// hoisting both the constant derivation and the mode dispatch out of the
+/// per-element loop (≈2× for the stochastic schemes; see `benches/rounding.rs`).
+///
+/// Correctness notes for the fast path: with `shift = 53 − s`, the f64 bits
+/// of |x| split as `lo_mag = bits & !mask` (the magnitude-floor, exactly
+/// `⌊|x|⌋_F`) and `hi_mag = lo_mag + 2^shift` (magnitude-ceil; carries into
+/// the exponent field exactly when the mantissa overflows to the next
+/// binade, which is still a representable value). `tail/2^shift` is exactly
 /// `(|x| − ⌊|x|⌋)/(⌈|x|⌉ − ⌊|x|⌋)` because the gap is one target-ulp.
-#[inline(always)]
-fn round_fast(fmt: &FpFormat, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> Option<f64> {
-    let bits = x.to_bits();
-    let mag = bits & 0x7fff_ffff_ffff_ffff;
-    let raw_e = (mag >> 52) as i32;
-    let e = raw_e - 1023;
-    // Eligibility: finite, f64-normal, target-normal, strictly inside the
-    // target's largest binade (so the magnitude-ceil cannot overflow past
-    // x_max: for e < e_max, ceil ≤ 2^{e+1} ≤ 2^{e_max} ≤ x_max).
-    if raw_e == 0 || raw_e == 0x7ff || e < fmt.e_min || e >= fmt.e_max {
-        return None;
+#[derive(Debug, Clone, Copy)]
+pub struct RoundPlan {
+    /// The format this plan was precomputed for.
+    pub fmt: FpFormat,
+    /// `53 − s`: binary64 mantissa bits below the target ulp.
+    shift: u32,
+    /// `2^shift − 1`: mask selecting the discarded tail bits.
+    mask: u64,
+    /// `2^{shift−1}`: the RN tie point (0 when `shift = 0`, i.e. binary64,
+    /// where the tail is always 0 and the tie point is never consulted).
+    half: u64,
+    /// `2^{−shift}` exactly: converts the tail to a fraction of the gap.
+    inv_gap: f64,
+}
+
+impl RoundPlan {
+    /// Precompute the rounding constants for `fmt`.
+    #[inline]
+    pub fn new(fmt: FpFormat) -> Self {
+        let shift = 53 - fmt.sig_bits;
+        Self {
+            fmt,
+            shift,
+            mask: (1u64 << shift) - 1,
+            half: if shift == 0 { 0 } else { 1u64 << (shift - 1) },
+            inv_gap: inv_pow2(shift),
+        }
     }
-    let shift = 53 - fmt.sig_bits; // ≥ 29 for every simulated format
-    let mask = (1u64 << shift) - 1;
-    let tail = mag & mask;
-    if tail == 0 {
-        return Some(x); // representable
-    }
-    let neg = bits >> 63 == 1;
-    let lo_mag = mag & !mask;
-    let hi_mag = lo_mag + (1u64 << shift);
-    // Value-scale neighbors.
-    let (lo_bits, hi_bits) = if neg {
-        (hi_mag | (1u64 << 63), lo_mag | (1u64 << 63))
-    } else {
-        (lo_mag, hi_mag)
-    };
-    // frac on the VALUE scale: distance from the value-floor, in gaps.
-    let frac_mag = tail as f64 * inv_pow2(shift);
-    let frac = if neg { 1.0 - frac_mag } else { frac_mag };
-    let down = match mode {
-        Rounding::RoundDown => true,
-        Rounding::RoundUp => false,
-        Rounding::RoundTowardZero => !neg,
-        Rounding::RoundNearestEven => {
-            let half = 1u64 << (shift - 1);
-            if tail != half {
-                // Nearest in magnitude == nearest in value.
-                (tail < half) ^ neg
-            } else {
-                // Tie: keep the endpoint with even target significand.
-                let lo_even = (lo_mag >> shift) & 1 == 0;
-                lo_even ^ neg // value-floor is the magnitude-floor iff !neg
+
+    /// Hot path: rounding a value whose magnitude is *target-normal* and in
+    /// range reduces to rounding the binary64 mantissa tail — pure integer
+    /// bit-twiddling, no divisions and no `pow2` reconstruction. This covers
+    /// essentially every rounding in a GD run; subnormal/overflow/NaN inputs
+    /// fall back to the general path. Returns `None` when ineligible.
+    #[inline(always)]
+    fn fast(&self, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> Option<f64> {
+        let bits = x.to_bits();
+        let mag = bits & 0x7fff_ffff_ffff_ffff;
+        let raw_e = (mag >> 52) as i32;
+        let e = raw_e - 1023;
+        // Eligibility: finite, f64-normal, target-normal, strictly inside the
+        // target's largest binade (so the magnitude-ceil cannot overflow past
+        // x_max: for e < e_max, ceil ≤ 2^{e+1} ≤ 2^{e_max} ≤ x_max).
+        if raw_e == 0 || raw_e == 0x7ff || e < self.fmt.e_min || e >= self.fmt.e_max {
+            return None;
+        }
+        let tail = mag & self.mask;
+        if tail == 0 {
+            return Some(x); // representable
+        }
+        let neg = bits >> 63 == 1;
+        let lo_mag = mag & !self.mask;
+        let hi_mag = lo_mag + (self.mask + 1);
+        // Value-scale neighbors.
+        let (lo_bits, hi_bits) = if neg {
+            (hi_mag | (1u64 << 63), lo_mag | (1u64 << 63))
+        } else {
+            (lo_mag, hi_mag)
+        };
+        // frac on the VALUE scale: distance from the value-floor, in gaps.
+        let frac_mag = tail as f64 * self.inv_gap;
+        let frac = if neg { 1.0 - frac_mag } else { frac_mag };
+        let down = match mode {
+            Rounding::RoundDown => true,
+            Rounding::RoundUp => false,
+            Rounding::RoundTowardZero => !neg,
+            Rounding::RoundNearestEven => {
+                if tail != self.half {
+                    // Nearest in magnitude == nearest in value.
+                    (tail < self.half) ^ neg
+                } else {
+                    // Tie: keep the endpoint with even target significand.
+                    let lo_even = (lo_mag >> self.shift) & 1 == 0;
+                    lo_even ^ neg // value-floor is the magnitude-floor iff !neg
+                }
             }
+            Rounding::Sr => rng.uniform() < 1.0 - frac,
+            Rounding::SrEps(eps) => {
+                let sx = if neg { -1.0 } else { 1.0 };
+                rng.uniform() < phi(1.0 - frac - sx * eps)
+            }
+            Rounding::SignedSrEps(eps) => {
+                let sv = if v == 0.0 { 0.0 } else { v.signum() };
+                rng.uniform() < phi(1.0 - frac + sv * eps)
+            }
+        };
+        Some(f64::from_bits(if down { lo_bits } else { hi_bits }))
+    }
+
+    /// Round `x` using scheme `mode`, steering `SignedSrEps` by `v`. Same
+    /// contract as the free [`round_with`], without re-deriving the format
+    /// constants per call.
+    #[inline]
+    pub fn round_with(&self, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> f64 {
+        if x == 0.0 || x.is_nan() {
+            return x;
         }
-        Rounding::Sr => rng.uniform() < 1.0 - frac,
-        Rounding::SrEps(eps) => {
-            let sx = if neg { -1.0 } else { 1.0 };
-            rng.uniform() < phi(1.0 - frac - sx * eps)
+        if let Some(y) = self.fast(mode, x, v, rng) {
+            return y;
         }
-        Rounding::SignedSrEps(eps) => {
-            let sv = if v == 0.0 { 0.0 } else { v.signum() };
-            rng.uniform() < phi(1.0 - frac + sv * eps)
-        }
-    };
-    Some(f64::from_bits(if down { lo_bits } else { hi_bits }))
+        round_slow(&self.fmt, mode, x, v, rng)
+    }
+
+    /// Round `x` with `v = x` (see the [`Rounding`] type-level docs).
+    #[inline]
+    pub fn round(&self, mode: Rounding, x: f64, rng: &mut Rng) -> f64 {
+        self.round_with(mode, x, x, rng)
+    }
 }
 
 /// `2^{-k}` for `k ∈ [0, 63]`, exact (table-free bit construction).
@@ -174,12 +230,14 @@ fn inv_pow2(k: u32) -> f64 {
 /// One uniform is drawn from `rng` iff the scheme is stochastic and `x ∉ F`.
 #[inline]
 pub fn round_with(fmt: &FpFormat, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> f64 {
-    if x == 0.0 || x.is_nan() {
-        return x;
-    }
-    if let Some(y) = round_fast(fmt, mode, x, v, rng) {
-        return y;
-    }
+    RoundPlan::new(*fmt).round_with(mode, x, v, rng)
+}
+
+/// General (slow) path shared by the scalar and slice kernels: exact
+/// neighbor arithmetic through [`FpFormat::floor_ceil`]. Handles
+/// subnormals, overflow saturation and the deterministic overflow-to-∞
+/// rule. Requires `x != 0` and `x` not NaN (the callers guard).
+fn round_slow(fmt: &FpFormat, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> f64 {
     let (lo, hi) = fmt.floor_ceil(x);
     if lo == hi {
         return lo; // x ∈ F (includes ±∞ inputs)
@@ -295,75 +353,123 @@ pub fn expected_round(fmt: &FpFormat, mode: Rounding, x: f64, v: f64) -> f64 {
     }
 }
 
-/// Round every entry of a slice in place (plain `v = x` steering).
-/// Specialized per scheme so the mode dispatch and the format constants are
-/// hoisted out of the element loop (≈2× over calling [`round`] per element
-/// for the stochastic schemes; see EXPERIMENTS.md §Perf).
-pub fn round_slice(fmt: &FpFormat, mode: Rounding, xs: &mut [f64], rng: &mut Rng) {
-    let shift = 53 - fmt.sig_bits;
-    let mask = (1u64 << shift) - 1;
-    let inv = inv_pow2(shift);
-    let (e_min, e_max) = (fmt.e_min, fmt.e_max);
-    macro_rules! specialized {
-        (|$tail:ident, $frac:ident, $neg:ident, $lo_mag:ident| $p_down:expr) => {
-            for x in xs.iter_mut() {
-                let bits = x.to_bits();
-                let mag = bits & 0x7fff_ffff_ffff_ffff;
-                let raw_e = (mag >> 52) as i32;
-                let e = raw_e - 1023;
-                if raw_e == 0 || raw_e == 0x7ff || e < e_min || e >= e_max {
-                    if *x != 0.0 {
-                        *x = round(fmt, mode, *x, rng); // rare slow path
+impl RoundPlan {
+    /// Round every entry of a slice in place (plain `v = x` steering).
+    /// Specialized per scheme so the mode dispatch and the format constants
+    /// are hoisted out of the element loop (≈2× over calling [`round`] per
+    /// element for the stochastic schemes; see `benches/rounding.rs`).
+    pub fn round_slice(&self, mode: Rounding, xs: &mut [f64], rng: &mut Rng) {
+        let (mask, inv, shift) = (self.mask, self.inv_gap, self.shift);
+        let (e_min, e_max) = (self.fmt.e_min, self.fmt.e_max);
+        macro_rules! specialized {
+            (|$tail:ident, $frac:ident, $neg:ident, $lo_mag:ident| $p_down:expr) => {
+                for x in xs.iter_mut() {
+                    let bits = x.to_bits();
+                    let mag = bits & 0x7fff_ffff_ffff_ffff;
+                    let raw_e = (mag >> 52) as i32;
+                    let e = raw_e - 1023;
+                    if raw_e == 0 || raw_e == 0x7ff || e < e_min || e >= e_max {
+                        if *x != 0.0 && !x.is_nan() {
+                            *x = round_slow(&self.fmt, mode, *x, *x, rng); // rare slow path
+                        }
+                        continue;
                     }
-                    continue;
+                    let $tail = mag & mask;
+                    if $tail == 0 {
+                        continue; // representable
+                    }
+                    let $neg = bits >> 63 == 1;
+                    let $lo_mag = mag & !mask;
+                    let hi_mag = $lo_mag + (mask + 1);
+                    let frac_mag = $tail as f64 * inv;
+                    let $frac = if $neg { 1.0 - frac_mag } else { frac_mag };
+                    let down: bool = $p_down;
+                    // down on the VALUE scale: pick magnitude-ceil when negative.
+                    let out_mag = if down != $neg { $lo_mag } else { hi_mag };
+                    *x = f64::from_bits(out_mag | (bits & (1u64 << 63)));
                 }
-                let $tail = mag & mask;
-                if $tail == 0 {
-                    continue; // representable
-                }
-                let $neg = bits >> 63 == 1;
-                let $lo_mag = mag & !mask;
-                let hi_mag = $lo_mag + (1u64 << shift);
-                let frac_mag = $tail as f64 * inv;
-                let $frac = if $neg { 1.0 - frac_mag } else { frac_mag };
-                let down: bool = $p_down;
-                // down on the VALUE scale: pick magnitude-ceil when negative.
-                let out_mag = if down != $neg { $lo_mag } else { hi_mag };
-                *x = f64::from_bits(out_mag | (bits & (1u64 << 63)));
-            }
-        };
-    }
-    match mode {
-        Rounding::Sr => {
-            specialized!(|tail, frac, neg, lo_mag| rng.uniform() < 1.0 - frac)
+            };
         }
-        Rounding::SrEps(eps) => specialized!(|tail, frac, neg, lo_mag| {
-            let sx = if neg { -1.0 } else { 1.0 };
-            rng.uniform() < phi(1.0 - frac - sx * eps)
-        }),
-        Rounding::RoundNearestEven => specialized!(|tail, frac, neg, lo_mag| {
-            let half = 1u64 << (shift - 1);
-            let _ = frac;
-            if tail != half {
-                (tail < half) ^ neg
-            } else {
-                ((lo_mag >> shift) & 1 == 0) ^ neg
+        match mode {
+            Rounding::Sr => {
+                specialized!(|tail, frac, neg, lo_mag| rng.uniform() < 1.0 - frac)
             }
-        }),
-        _ => {
-            for x in xs.iter_mut() {
-                *x = round(fmt, mode, *x, rng);
+            Rounding::SrEps(eps) => specialized!(|tail, frac, neg, lo_mag| {
+                let sx = if neg { -1.0 } else { 1.0 };
+                rng.uniform() < phi(1.0 - frac - sx * eps)
+            }),
+            Rounding::RoundNearestEven => specialized!(|tail, frac, neg, lo_mag| {
+                let half = self.half;
+                let _ = frac;
+                if tail != half {
+                    (tail < half) ^ neg
+                } else {
+                    ((lo_mag >> shift) & 1 == 0) ^ neg
+                }
+            }),
+            _ => {
+                for x in xs.iter_mut() {
+                    *x = self.round(mode, *x, rng);
+                }
             }
+        }
+    }
+
+    /// Round every entry, steering `SignedSrEps` per element by `vs`.
+    ///
+    /// Only `SignedSrEps` reads the steering value; every other mode
+    /// delegates to the unsteered [`RoundPlan::round_slice`] kernel, which
+    /// is exactly equivalent for them. The `SignedSrEps` loop is fused the
+    /// same way (constants and dispatch hoisted out of the element loop) —
+    /// this is the (8b)/(8c) hot path of the GD engine, where the steering
+    /// vector is the computed gradient.
+    pub fn round_slice_with(&self, mode: Rounding, xs: &mut [f64], vs: &[f64], rng: &mut Rng) {
+        debug_assert_eq!(xs.len(), vs.len());
+        let eps = match mode {
+            Rounding::SignedSrEps(e) => e,
+            _ => return self.round_slice(mode, xs, rng),
+        };
+        let (mask, inv) = (self.mask, self.inv_gap);
+        let (e_min, e_max) = (self.fmt.e_min, self.fmt.e_max);
+        for (x, &v) in xs.iter_mut().zip(vs.iter()) {
+            let bits = x.to_bits();
+            let mag = bits & 0x7fff_ffff_ffff_ffff;
+            let raw_e = (mag >> 52) as i32;
+            let e = raw_e - 1023;
+            if raw_e == 0 || raw_e == 0x7ff || e < e_min || e >= e_max {
+                if *x != 0.0 && !x.is_nan() {
+                    *x = round_slow(&self.fmt, mode, *x, v, rng); // rare slow path
+                }
+                continue;
+            }
+            let tail = mag & mask;
+            if tail == 0 {
+                continue; // representable
+            }
+            let neg = bits >> 63 == 1;
+            let lo_mag = mag & !mask;
+            let hi_mag = lo_mag + (mask + 1);
+            let frac_mag = tail as f64 * inv;
+            let frac = if neg { 1.0 - frac_mag } else { frac_mag };
+            let sv = if v == 0.0 { 0.0 } else { v.signum() };
+            let down = rng.uniform() < phi(1.0 - frac + sv * eps);
+            let out_mag = if down != neg { lo_mag } else { hi_mag };
+            *x = f64::from_bits(out_mag | (bits & (1u64 << 63)));
         }
     }
 }
 
-/// Round every entry, steering `SignedSrEps` per element by `vs`.
+/// Round every entry of a slice in place (plain `v = x` steering) — free
+/// wrapper building a [`RoundPlan`] per call; prefer the plan method when
+/// rounding repeatedly into the same format.
+pub fn round_slice(fmt: &FpFormat, mode: Rounding, xs: &mut [f64], rng: &mut Rng) {
+    RoundPlan::new(*fmt).round_slice(mode, xs, rng);
+}
+
+/// Round every entry, steering `SignedSrEps` per element by `vs` — free
+/// wrapper over [`RoundPlan::round_slice_with`].
 pub fn round_slice_with(fmt: &FpFormat, mode: Rounding, xs: &mut [f64], vs: &[f64], rng: &mut Rng) {
-    debug_assert_eq!(xs.len(), vs.len());
-    for (x, &v) in xs.iter_mut().zip(vs.iter()) {
-        *x = round_with(fmt, mode, *x, v, rng);
-    }
+    RoundPlan::new(*fmt).round_slice_with(mode, xs, vs, rng);
 }
 
 #[cfg(test)]
@@ -552,6 +658,69 @@ mod tests {
             let e = expected_round(&B8, Rounding::SignedSrEps(eps), x, x);
             // bias sign must be −sign(x): toward zero
             assert!((e - x) * x.signum() < 0.0, "x={x} e={e}");
+        }
+    }
+
+    /// The plan-based scalar and fused slice kernels are bit-identical to
+    /// the scalar reference path, drawing the same number of uniforms in
+    /// the same order (the engine's determinism contract rests on this).
+    #[test]
+    fn round_plan_matches_scalar_reference() {
+        let modes = [
+            Rounding::RoundNearestEven,
+            Rounding::RoundDown,
+            Rounding::RoundUp,
+            Rounding::RoundTowardZero,
+            Rounding::Sr,
+            Rounding::SrEps(0.3),
+            Rounding::SignedSrEps(0.3),
+        ];
+        for fmt in [FpFormat::BINARY8, FpFormat::BFLOAT16, FpFormat::BINARY64] {
+            let plan = RoundPlan::new(fmt);
+            let mut gen = Rng::new(77);
+            // Mix of normals, subnormals, representables, overflow, specials.
+            let mut xs: Vec<f64> = (0..200).map(|_| gen.normal() * 1e3).collect();
+            xs.extend([
+                0.0,
+                1.0,
+                -1.25,
+                fmt.x_min() * 0.3,
+                -fmt.x_min_sub() * 0.5,
+                fmt.x_max() * 1.5,
+                f64::NAN,
+                f64::INFINITY,
+            ]);
+            let vs: Vec<f64> = (0..xs.len()).map(|_| gen.normal()).collect();
+            for mode in modes {
+                // Scalar reference vs plan scalar, lock-stepped RNG clones.
+                let mut ra = Rng::new(5);
+                let mut rb = Rng::new(5);
+                for (&x, &v) in xs.iter().zip(&vs) {
+                    let want = round_with(&fmt, mode, x, v, &mut ra);
+                    let got = plan.round_with(mode, x, v, &mut rb);
+                    assert!(
+                        want == got || (want.is_nan() && got.is_nan()),
+                        "{mode:?} {} x={x}: {want} vs {got}",
+                        fmt.name()
+                    );
+                }
+                assert_eq!(ra.next_u64(), rb.next_u64(), "RNG streams diverged");
+                // Fused steered slice vs per-element reference.
+                let mut buf = xs.clone();
+                let mut rc = Rng::new(9);
+                plan.round_slice_with(mode, &mut buf, &vs, &mut rc);
+                let mut rd = Rng::new(9);
+                for (i, (&x, &v)) in xs.iter().zip(&vs).enumerate() {
+                    let want = round_with(&fmt, mode, x, v, &mut rd);
+                    assert!(
+                        want == buf[i] || (want.is_nan() && buf[i].is_nan()),
+                        "slice {mode:?} {} i={i} x={x}: {want} vs {}",
+                        fmt.name(),
+                        buf[i]
+                    );
+                }
+                assert_eq!(rc.next_u64(), rd.next_u64(), "slice RNG diverged");
+            }
         }
     }
 

@@ -42,6 +42,7 @@ impl StepSchemes {
         Self { grad: mode, mul: mode, sub: mode }
     }
 
+    /// Short per-step label, e.g. `8a=SR 8b=SR 8c=signed-SR_eps(0.1)`.
     pub fn label(&self) -> String {
         format!("8a={} 8b={} 8c={}", self.grad.label(), self.mul.label(), self.sub.label())
     }
@@ -63,27 +64,55 @@ pub enum GradModel {
 /// Configuration of one GD run.
 #[derive(Debug, Clone)]
 pub struct GdConfig {
+    /// Working floating-point format for the iterate and every rounding.
     pub fmt: FpFormat,
+    /// Rounding scheme per GD step (8a)/(8b)/(8c).
     pub schemes: StepSchemes,
+    /// σ₁ model for the gradient evaluation (8a).
     pub grad_model: GradModel,
     /// Fixed stepsize t.
     pub t: f64,
     /// Number of iterations (epochs for the learning problems).
     pub steps: usize,
+    /// Root seed for the run's RNG streams (ignored when [`GdConfig::rng`]
+    /// is set).
     pub seed: u64,
+    /// Pre-split root RNG for this run, overriding `seed` when set. The
+    /// in-repo experiment builders keep the legacy seed-keyed derivation
+    /// (`None` → `Rng::new(seed)`, bit-compatible with earlier releases,
+    /// where repetitions of *different* configs reuse the same seed
+    /// streams); stream injection — `Some(Rng::new(root).split(cell_id))`
+    /// with a [`crate::coordinator::scheduler::cell_stream`] id — gives a
+    /// cell a stream independent of every other cell's, regardless of
+    /// thread placement or execution order (see `benches/sweep.rs` and the
+    /// scheduler tests).
+    pub rng: Option<Rng>,
     /// Record τ_k each iteration (costs one RN pass over the gradient).
     pub record_tau: bool,
 }
 
 impl GdConfig {
+    /// A config with the default σ₁ model (`RoundAfterOp`), seed 0, derived
+    /// RNG root and no τ_k recording.
     pub fn new(fmt: FpFormat, schemes: StepSchemes, t: f64, steps: usize) -> Self {
-        Self { fmt, schemes, grad_model: GradModel::RoundAfterOp, t, steps, seed: 0, record_tau: false }
+        Self {
+            fmt,
+            schemes,
+            grad_model: GradModel::RoundAfterOp,
+            t,
+            steps,
+            seed: 0,
+            rng: None,
+            record_tau: false,
+        }
     }
 }
 
 /// The GD engine. Owns the iterate and the per-step rounding streams.
 pub struct GdEngine<'p, P: Problem + ?Sized> {
+    /// The run configuration.
     pub cfg: GdConfig,
+    /// The objective being minimized.
     pub problem: &'p P,
     /// Current iterate x̂ (always exactly representable in `cfg.fmt`).
     pub x: Vec<f64>,
@@ -92,12 +121,24 @@ pub struct GdEngine<'p, P: Problem + ?Sized> {
     rng_sub: Rng,
     ghat: Vec<f64>,
     gexact: Vec<f64>,
+    /// Scratch for the rounded update m = fl₂(t·ĝ) of step (8b).
+    mbuf: Vec<f64>,
+    /// Scratch for the steering vector −ĝ of step (8b).
+    vneg: Vec<f64>,
+    /// Scratch for the landing point z = x̂ − m of step (8c).
+    zbuf: Vec<f64>,
 }
 
 impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
+    /// Build an engine at `x0` (rounded into the working format with RN).
+    ///
+    /// The root RNG is `cfg.rng` when set (scheduler-split stream), else
+    /// `Rng::new(cfg.seed)`; the three per-step streams (σ₁ / δ₂ / δ₃) are
+    /// forked off it exactly as before, so legacy `seed`-keyed runs are
+    /// bit-identical to earlier releases.
     pub fn new(cfg: GdConfig, problem: &'p P, x0: &[f64]) -> Self {
         assert_eq!(x0.len(), problem.dim());
-        let root = Rng::new(cfg.seed);
+        let root = cfg.rng.clone().unwrap_or_else(|| Rng::new(cfg.seed));
         let mut ctx_grad = LpCtx::new(cfg.fmt, cfg.schemes.grad, root.fork("sigma1", 0));
         if cfg.grad_model == GradModel::Exact {
             ctx_grad = LpCtx::exact();
@@ -105,9 +146,8 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
         // The starting point is stored in the working format.
         let mut x = x0.to_vec();
         let mut rng0 = root.fork("x0", 0);
-        for xi in x.iter_mut() {
-            *xi = crate::fp::round::round(&cfg.fmt, Rounding::RoundNearestEven, *xi, &mut rng0);
-        }
+        crate::fp::round::RoundPlan::new(cfg.fmt)
+            .round_slice(Rounding::RoundNearestEven, &mut x, &mut rng0);
         let n = x.len();
         Self {
             problem,
@@ -117,6 +157,9 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
             rng_sub: root.fork("delta3", 0),
             ghat: vec![0.0; n],
             gexact: vec![0.0; n],
+            mbuf: vec![0.0; n],
+            vneg: vec![0.0; n],
+            zbuf: vec![0.0; n],
             cfg,
         }
     }
@@ -135,22 +178,44 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
     }
 
     /// One full GD iteration (8a)+(8b)+(8c). Returns true if the iterate moved.
+    ///
+    /// Steps (8b) and (8c) run as *fused slice roundings* through the
+    /// precomputed [`crate::fp::round::RoundPlan`], hoisting the mode and
+    /// format dispatch out of the per-element loop. Because δ₂ and δ₃ draw
+    /// from separate forked streams, rounding all of (8b) before all of
+    /// (8c) consumes each stream in exactly the element order the
+    /// historical per-element loop did — trajectories are bit-identical.
     pub fn step(&mut self) -> bool {
         self.eval_gradient();
-        let fmt = self.cfg.fmt;
         let t = self.cfg.t;
+        // One plan derivation per step (not per element); reading `cfg.fmt`
+        // here keeps the pre-refactor semantics where a caller may adjust
+        // the config between steps.
+        let plan = crate::fp::round::RoundPlan::new(self.cfg.fmt);
+        let n = self.x.len();
+        // (8b): m = fl₂(t·ĝᵢ), steering v = −ĝᵢ (descent bias). The
+        // steering buffer is only consulted by SignedSrEps; skip the
+        // negation pass for every other scheme.
+        for i in 0..n {
+            self.mbuf[i] = t * self.ghat[i];
+        }
+        if matches!(self.cfg.schemes.mul, Rounding::SignedSrEps(_)) {
+            for i in 0..n {
+                self.vneg[i] = -self.ghat[i];
+            }
+        }
+        plan.round_slice_with(self.cfg.schemes.mul, &mut self.mbuf, &self.vneg, &mut self.rng_mul);
+        // (8c): x̂ᵢ⁺ = fl₃(x̂ᵢ − m), steering v = +ĝᵢ (descent bias).
+        for i in 0..n {
+            self.zbuf[i] = self.x[i] - self.mbuf[i];
+        }
+        plan.round_slice_with(self.cfg.schemes.sub, &mut self.zbuf, &self.ghat, &mut self.rng_sub);
         let mut moved = false;
-        for i in 0..self.x.len() {
-            let g = self.ghat[i];
-            // (8b): m = fl₂(t·ĝᵢ), steering v = −ĝᵢ (descent bias).
-            let m = crate::fp::round::round_with(&fmt, self.cfg.schemes.mul, t * g, -g, &mut self.rng_mul);
-            // (8c): x̂ᵢ⁺ = fl₃(x̂ᵢ − m), steering v = +ĝᵢ (descent bias).
-            let z = self.x[i] - m;
-            let xi1 = crate::fp::round::round_with(&fmt, self.cfg.schemes.sub, z, g, &mut self.rng_sub);
-            if xi1 != self.x[i] {
+        for i in 0..n {
+            if self.zbuf[i] != self.x[i] {
                 moved = true;
             }
-            self.x[i] = xi1;
+            self.x[i] = self.zbuf[i];
         }
         moved
     }
@@ -292,6 +357,27 @@ mod tests {
             auc_signed < auc_sr,
             "signed-SRε should beat SR: signed={auc_signed} sr={auc_sr}"
         );
+    }
+
+    /// A pre-split RNG stream (`cfg.rng`) fully determines the trajectory
+    /// and overrides `cfg.seed` — the scheduler's determinism contract.
+    #[test]
+    fn explicit_rng_stream_overrides_seed() {
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+        let mk = |rng: Option<Rng>, seed: u64| {
+            let mut cfg =
+                GdConfig::new(FpFormat::BINARY8, StepSchemes::uniform(Rounding::Sr), 0.05, 60);
+            cfg.seed = seed;
+            cfg.rng = rng;
+            let mut e = GdEngine::new(cfg, &p, &[1.0]);
+            e.run(None).objective_series()
+        };
+        let root = Rng::new(3);
+        let a = mk(Some(root.split(5)), 0);
+        let b = mk(Some(root.split(5)), 99); // seed must be ignored
+        let c = mk(Some(root.split(6)), 0);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
     }
 
     /// The iterate always remains exactly representable in the working format.

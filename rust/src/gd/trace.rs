@@ -4,6 +4,7 @@
 /// low-precision run; the monitored quantities never feed back into the run).
 #[derive(Debug, Clone)]
 pub struct IterRecord {
+    /// Iteration index k.
     pub k: usize,
     /// Objective f(x̂^(k)), evaluated exactly.
     pub f: f64,
@@ -22,34 +23,42 @@ pub struct IterRecord {
 /// A full GD run trace.
 #[derive(Debug, Clone, Default)]
 pub struct Trace {
+    /// One record per completed iteration, in order.
     pub records: Vec<IterRecord>,
 }
 
 impl Trace {
+    /// Append one iteration's record.
     pub fn push(&mut self, r: IterRecord) {
         self.records.push(r);
     }
 
+    /// Number of recorded iterations.
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
+    /// True when nothing has been recorded yet.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
 
+    /// The objective values f(x̂^(k)), in iteration order.
     pub fn objective_series(&self) -> Vec<f64> {
         self.records.iter().map(|r| r.f).collect()
     }
 
+    /// The task-level metric values (NaN when no metric was supplied).
     pub fn metric_series(&self) -> Vec<f64> {
         self.records.iter().map(|r| r.metric).collect()
     }
 
+    /// The τ_k values (NaN unless `record_tau` was set).
     pub fn tau_series(&self) -> Vec<f64> {
         self.records.iter().map(|r| r.tau).collect()
     }
 
+    /// Final recorded objective (NaN for an empty trace).
     pub fn final_f(&self) -> f64 {
         self.records.last().map(|r| r.f).unwrap_or(f64::NAN)
     }

@@ -16,10 +16,18 @@
 //!   regression and a two-layer NN;
 //! * [`data`] — dataset substrate (procedural digits + IDX loader);
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas train steps;
-//! * [`coordinator`] — the experiment registry that regenerates every table
-//!   and figure of the paper, plus sweep running and report writing;
+//! * [`coordinator`] — the experiment registry, the sharded multi-threaded
+//!   scheduler (deterministic for every `--jobs` value) and the aggregation
+//!   path that regenerate every table and figure of the paper;
 //! * [`util`] — the in-repo CLI/config/CSV/bench plumbing (this image is
-//!   offline, so no external crates beyond `xla` and `anyhow`).
+//!   offline: the only dependency is the vendored `anyhow` shim under
+//!   `vendor/`, and the PJRT `xla` binding is gated behind the optional
+//!   `pjrt` feature).
+//!
+//! See the top-level `README.md` for a quickstart and `docs/` for the
+//! rounding-scheme ↔ paper mapping and the coordinator architecture.
+
+#![warn(missing_docs)]
 
 pub mod coordinator;
 pub mod data;

@@ -4,6 +4,8 @@
 //! lpgd list                             list reproducible experiments
 //! lpgd reproduce <id|all> [opts]        regenerate a paper table/figure
 //!     --seeds N      (default 5; paper uses 20)
+//!     --jobs N       worker threads (default 0 = all cores; results are
+//!                    bit-identical for every N — see docs/architecture.md)
 //!     --out-dir D    (default results/)
 //!     --quick        smoke-scale profile
 //!     --side N --mlr-train N --mlr-epochs N ... (see ExpCtx)
@@ -34,6 +36,7 @@ fn main() {
 fn ctx_from_args(a: &Args) -> ExpCtx {
     let mut ctx = if a.has_flag("quick") { ExpCtx::quick() } else { ExpCtx::default() };
     ctx.seeds = a.get_usize("seeds", ctx.seeds);
+    ctx.jobs = a.get_usize("jobs", ctx.jobs);
     ctx.out_dir = a.get("out-dir").unwrap_or(&ctx.out_dir).to_string();
     ctx.side = a.get_usize("side", ctx.side);
     ctx.mlr_train = a.get_usize("mlr-train", ctx.mlr_train);
@@ -66,18 +69,19 @@ fn run() -> Result<()> {
             for (id, desc) in list_experiments() {
                 println!("{id:<8}  {desc}");
             }
-            println!("\nusage: lpgd reproduce <id|all> [--seeds N] [--quick] [--out-dir D]");
+            println!("\nusage: lpgd reproduce <id|all> [--seeds N] [--jobs N] [--quick] [--out-dir D]");
         }
         "reproduce" => {
             let id = a.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
             let ctx = ctx_from_args(&a);
+            let jobs = if ctx.jobs == 0 { "auto".to_string() } else { ctx.jobs.to_string() };
             let t0 = std::time::Instant::now();
             let tables = run_experiment(id, &ctx)?;
             for t in &tables {
                 println!("{}", t.to_text());
             }
             println!(
-                "wrote {} CSV file(s) to {}/ in {:.1}s",
+                "wrote {} CSV file(s) to {}/ in {:.1}s (--jobs {jobs})",
                 tables.len(),
                 ctx.out_dir,
                 t0.elapsed().as_secs_f64()

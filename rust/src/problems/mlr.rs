@@ -9,13 +9,17 @@ use super::Problem;
 use crate::data::Dataset;
 use crate::fp::linalg::LpCtx;
 
+/// Multinomial logistic regression over a dense dataset (paper §5.2).
 pub struct Mlr {
+    /// Training data (the full batch of every GD step).
     pub data: Dataset,
+    /// Number of classes C.
     pub n_classes: usize,
     d: usize,
 }
 
 impl Mlr {
+    /// An MLR problem over `data` with `n_classes` output classes.
     pub fn new(data: Dataset, n_classes: usize) -> Self {
         let d = data.n_features;
         Self { data, n_classes, d }

@@ -11,8 +11,12 @@ use crate::data::Dataset;
 use crate::fp::linalg::LpCtx;
 use crate::fp::rng::Rng;
 
+/// Two-layer ReLU network with sigmoid output for binary classification
+/// (paper §5.3).
 pub struct TwoLayerNn {
+    /// Training data (binary labels 0/1).
     pub data: Dataset,
+    /// Hidden-layer width H (paper: 100).
     pub hidden: usize,
     d: usize,
 }
@@ -27,6 +31,7 @@ fn sigmoid(z: f64) -> f64 {
 }
 
 impl TwoLayerNn {
+    /// A network over `data` with `hidden` ReLU units.
     pub fn new(data: Dataset, hidden: usize) -> Self {
         let d = data.n_features;
         Self { data, hidden, d }

@@ -25,6 +25,7 @@ pub struct Quadratic {
 }
 
 impl Quadratic {
+    /// Diagonal quadratic `½ Σ dᵢ (xᵢ − x*ᵢ)²`.
     pub fn diagonal(diag: Vec<f64>, xstar: Vec<f64>) -> Self {
         assert_eq!(diag.len(), xstar.len());
         let lip = diag.iter().cloned().fold(0.0f64, f64::max);
@@ -32,6 +33,8 @@ impl Quadratic {
         Self { diag, dense: None, xstar, lip, n }
     }
 
+    /// Dense symmetric quadratic with matrix `a` (row-major n×n) and
+    /// largest eigenvalue `lip`.
     pub fn dense(a: Vec<f64>, xstar: Vec<f64>, lip: f64) -> Self {
         let n = xstar.len();
         assert_eq!(a.len(), n * n);

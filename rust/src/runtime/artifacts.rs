@@ -6,6 +6,7 @@
 /// Static description of one AOT artifact.
 #[derive(Debug, Clone, Copy)]
 pub struct ArtifactSpec {
+    /// Artifact file name under the artifacts directory.
     pub file: &'static str,
     /// Flat parameter count (quantizer: element count).
     pub params: usize,
@@ -46,9 +47,13 @@ pub const NN_SPEC: ArtifactSpec = ArtifactSpec {
 
 /// Scheme ids shared with the Python side (mode operand of the artifacts).
 pub mod mode {
+    /// Round-to-nearest (deterministic).
     pub const RN: i32 = 0;
+    /// Unbiased stochastic rounding.
     pub const SR: i32 = 1;
+    /// ε-biased stochastic rounding (away from zero).
     pub const SR_EPS: i32 = 2;
+    /// Signed ε-biased stochastic rounding (steered).
     pub const SIGNED_SR_EPS: i32 = 3;
 
     /// Map a coordinator [`crate::fp::Rounding`] onto an artifact mode id.

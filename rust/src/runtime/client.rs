@@ -8,15 +8,20 @@ use std::path::{Path, PathBuf};
 /// A compiled PJRT executable plus its entry metadata.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Artifact file name this executable was loaded from.
     pub name: String,
 }
 
 /// Argument value for an executable call (f32/i32 tensors cover every
 /// artifact this project ships).
 pub enum Arg {
+    /// Dense f32 tensor with its shape.
     F32(Vec<f32>, Vec<i64>),
+    /// Dense i32 tensor with its shape.
     I32(Vec<i32>, Vec<i64>),
+    /// Scalar f32 operand.
     ScalarF32(f32),
+    /// Scalar i32 operand.
     ScalarI32(i32),
 }
 
@@ -75,6 +80,7 @@ impl Runtime {
         })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

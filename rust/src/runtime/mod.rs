@@ -6,6 +6,16 @@
 //! text parser reassigns ids and round-trips cleanly.
 
 pub mod artifacts;
+
+/// Real PJRT client, only when the `pjrt` feature (and its `xla`
+/// dependency) is enabled.
+#[cfg(feature = "pjrt")]
+pub mod client;
+
+/// API-compatible stub compiled without `pjrt`: `Runtime::cpu` returns a
+/// descriptive error so callers degrade gracefully (see `stub.rs`).
+#[cfg(not(feature = "pjrt"))]
+#[path = "stub.rs"]
 pub mod client;
 
 pub use artifacts::{ArtifactSpec, MLR_SPEC, NN_SPEC, QUANTIZE_SPEC};

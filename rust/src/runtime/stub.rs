@@ -1,0 +1,96 @@
+//! Stub PJRT runtime, compiled when the `pjrt` cargo feature is off.
+//!
+//! The real client (`client.rs`) wraps the external `xla` crate, which is
+//! not vendored in this offline image. This stub mirrors its public API
+//! exactly — same types, same signatures — so every caller (the CLI's
+//! `pjrt-info` command, the `runtime_pjrt` bench, the `train_mlr_e2e`
+//! example) type-checks unconditionally; at run time [`Runtime::cpu`]
+//! returns a descriptive error and the callers degrade gracefully.
+
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+const UNAVAILABLE: &str =
+    "lpgd was built without the `pjrt` feature (the external `xla` crate is \
+     not vendored in this offline image); rebuild with `--features pjrt` \
+     after adding the xla dependency to Cargo.toml";
+
+/// A compiled PJRT executable (stub: never constructed).
+pub struct Executable {
+    /// Artifact file name this executable was loaded from.
+    pub name: String,
+}
+
+/// Argument value for an executable call (f32/i32 tensors cover every
+/// artifact this project ships).
+pub enum Arg {
+    /// Dense f32 tensor with its shape.
+    F32(Vec<f32>, Vec<i64>),
+    /// Dense i32 tensor with its shape.
+    I32(Vec<i32>, Vec<i64>),
+    /// Scalar f32 operand.
+    ScalarF32(f32),
+    /// Scalar i32 operand.
+    ScalarI32(i32),
+}
+
+impl Arg {
+    /// Convenience: f64 slice → f32 tensor arg.
+    pub fn f32_from_f64(v: &[f64], shape: &[i64]) -> Arg {
+        Arg::F32(v.iter().map(|&x| x as f32).collect(), shape.to_vec())
+    }
+}
+
+impl Executable {
+    /// Execute with the given args (stub: always errors).
+    pub fn run_f32(&self, _args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        bail!("{}", UNAVAILABLE)
+    }
+}
+
+/// The runtime handle (stub: cannot be constructed; `cpu` always errors).
+pub struct Runtime {
+    /// Directory containing `*.hlo.txt` artifacts.
+    pub artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime rooted at `artifact_dir` (stub: errors).
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = artifact_dir.as_ref();
+        bail!("{}", UNAVAILABLE)
+    }
+
+    /// PJRT platform name (stub: placeholder).
+    pub fn platform(&self) -> String {
+        "unavailable (built without `pjrt`)".to_string()
+    }
+
+    /// Load + compile an HLO-text artifact (stub: always errors).
+    pub fn load(&mut self, _file_name: &str) -> Result<&Executable> {
+        bail!("{}", UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = Runtime::cpu("artifacts").err().expect("stub must error");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn arg_marshalling_still_works() {
+        let a = Arg::f32_from_f64(&[1.0, 2.5], &[2]);
+        match a {
+            Arg::F32(v, shape) => {
+                assert_eq!(v, vec![1.0f32, 2.5]);
+                assert_eq!(shape, vec![2]);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+}

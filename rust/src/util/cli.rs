@@ -6,10 +6,14 @@ use std::collections::HashMap;
 /// `--key value` takes the next token as its value.
 const BOOL_FLAGS: &[&str] = &["quick", "full", "verbose", "help", "pjrt", "json"];
 
+/// Parsed command line: positionals, `--key value` options, bare flags.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Non-option arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: HashMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -37,26 +41,32 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env() -> Self {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// `--key` parsed as usize, or `default`.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key` parsed as u64, or `default`.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key` parsed as f64, or `default`.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Was the bare `--name` flag given?
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }

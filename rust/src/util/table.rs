@@ -9,8 +9,11 @@ use std::path::Path;
 /// A cell is either text or a number (numbers get compact formatting).
 #[derive(Debug, Clone)]
 pub enum Cell {
+    /// Free-form text.
     Text(String),
+    /// A float, rendered compactly (NaN as "-").
     Num(f64),
+    /// An integer, rendered as-is.
     Int(i64),
 }
 
@@ -63,14 +66,20 @@ impl Cell {
 /// An experiment result table.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Stable id; also the CSV file stem.
     pub id: String,
+    /// Human-readable title.
     pub title: String,
+    /// Column headers.
     pub columns: Vec<String>,
+    /// Data rows (each the width of `columns`).
     pub rows: Vec<Vec<Cell>>,
+    /// Free-form footnotes (rendered in text/markdown, not CSV).
     pub notes: Vec<String>,
 }
 
 impl Table {
+    /// An empty table with the given id, title and column headers.
     pub fn new(id: &str, title: &str, columns: &[&str]) -> Self {
         Self {
             id: id.to_string(),
@@ -81,15 +90,18 @@ impl Table {
         }
     }
 
+    /// Append one data row (must match the column count).
     pub fn row(&mut self, cells: Vec<Cell>) {
         debug_assert_eq!(cells.len(), self.columns.len());
         self.rows.push(cells);
     }
 
+    /// Append a footnote.
     pub fn note(&mut self, s: impl Into<String>) {
         self.notes.push(s.into());
     }
 
+    /// Render as CSV (header + rows; notes omitted).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         let esc = |s: &str| {
@@ -106,6 +118,7 @@ impl Table {
         out
     }
 
+    /// Render as a GitHub-style markdown table with blockquoted notes.
     pub fn to_markdown(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(out, "### {} — {}\n", self.id, self.title);

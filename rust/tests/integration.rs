@@ -28,6 +28,27 @@ fn all_experiments_run_and_write_csvs() {
     }
 }
 
+/// The sharded scheduler's acceptance guarantee: running an experiment
+/// through the worker pool produces *bit-identical* CSVs at `--jobs 1` and
+/// `--jobs 8`, for both the quadratic (expectation over seeds) and the
+/// learning (flattened config × seed grid) fan-out paths.
+#[test]
+fn experiments_are_bit_identical_across_job_counts() {
+    for id in ["fig3a", "fig4b"] {
+        let mut c1 = quick_ctx(&format!("{id}_jobs1"));
+        c1.jobs = 1;
+        let mut c8 = quick_ctx(&format!("{id}_jobs8"));
+        c8.jobs = 8;
+        let t1 = run_experiment(id, &c1).expect("serial run failed");
+        let t8 = run_experiment(id, &c8).expect("parallel run failed");
+        assert_eq!(t1.len(), t8.len());
+        for (a, b) in t1.iter().zip(&t8) {
+            assert_eq!(a.to_csv(), b.to_csv(), "{id}: jobs=1 vs jobs=8 diverged");
+            assert_eq!(a.notes, b.notes, "{id}: notes diverged across job counts");
+        }
+    }
+}
+
 #[test]
 fn engine_is_deterministic_per_seed() {
     // Use a stepsize large enough that SR's randomness is actually exercised

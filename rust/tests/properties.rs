@@ -204,6 +204,63 @@ fn prop_expected_error_bounds() {
     }
 }
 
+/// Bias satellite: `expected_round` must match a Monte-Carlo estimate of
+/// `round` for SR and SRε *on the boundary cases* where the closed form is
+/// easiest to get wrong — subnormals, exact grid points, and halfway points
+/// of both the subnormal and a coarse normal binade.
+#[test]
+fn prop_expected_round_matches_monte_carlo_on_boundaries() {
+    let fmt = FpFormat::BINARY8;
+    let q = fmt.x_min_sub(); // smallest subnormal = subnormal spacing, 2^-16
+    let cases: Vec<f64> = vec![
+        // Subnormal interior and halfway points (both signs).
+        0.4 * q,
+        0.5 * q,
+        -0.5 * q,
+        2.5 * q,
+        -3.75 * q,
+        // Just below the normal threshold and just above it.
+        fmt.x_min() - 0.25 * q,
+        fmt.x_min() + 0.3 * fmt.spacing_at(fmt.x_min()),
+        // Exact grid points: every scheme must be the identity, surely.
+        q,
+        -2.0 * q,
+        fmt.x_min(),
+        1.0,
+        -1.25,
+        1024.0,
+        fmt.x_max(),
+        // Halfway points of normal binades, fine and coarse.
+        1.125,
+        -1.125,
+        1024.0 + 128.0,
+    ];
+    let n = 60_000;
+    for mode in [Rounding::Sr, Rounding::SrEps(0.25), Rounding::SrEps(0.5)] {
+        let mut rng = Rng::new(2024);
+        for &x in &cases {
+            let want = expected_round(&fmt, mode, x, x);
+            let (lo, hi) = fmt.floor_ceil(x);
+            if lo == hi {
+                // x ∈ F: fixed point of the scheme, in expectation and surely.
+                assert_eq!(want, x, "{mode:?}: E[fl(x)] must be x at grid point {x}");
+                for _ in 0..16 {
+                    assert_eq!(round(&fmt, mode, x, &mut rng), x);
+                }
+                continue;
+            }
+            let mean: f64 =
+                (0..n).map(|_| round(&fmt, mode, x, &mut rng)).sum::<f64>() / n as f64;
+            // 5-sigma band for a two-point distribution on [lo, hi].
+            let tol = 5.0 * (hi - lo) / (n as f64).sqrt();
+            assert!(
+                (mean - want).abs() < tol,
+                "{mode:?} x={x:e}: Monte-Carlo {mean:e} vs closed form {want:e} (tol {tol:e})"
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_nan_and_inf_handling() {
     let mut rng = Rng::new(14);

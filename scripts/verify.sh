@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 verification plus the documentation gate.
+#
+#   ./scripts/verify.sh
+#
+# 1. release build          (tier-1)
+# 2. full test suite        (tier-1)
+# 3. cargo doc with the crate's #![warn(missing_docs)] escalated to an
+#    error, so any undocumented public API — notably the new scheduler
+#    surface — fails loudly instead of rotting silently.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo doc --no-deps (missing_docs -> error) =="
+RUSTDOCFLAGS="-D missing_docs" cargo doc --no-deps --quiet
+
+echo "verify OK"

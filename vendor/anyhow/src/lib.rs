@@ -1,0 +1,213 @@
+//! Offline shim for the [`anyhow`](https://docs.rs/anyhow) crate.
+//!
+//! This image has no network access and no vendored registry, so the real
+//! crate cannot be fetched. lpgd only uses a small surface — `Result`,
+//! `Error`, `anyhow!` / `bail!` / `ensure!`, and the `Context` extension
+//! trait — which this ~150-line shim reimplements with the same semantics:
+//!
+//! * `Error` wraps a message chain (outermost context first, root cause
+//!   last) and converts from any `std::error::Error`;
+//! * `{e}` displays the outermost message, `{e:#}` the full chain joined
+//!   with `": "` (matching anyhow's alternate formatting);
+//! * like the real crate, `Error` deliberately does **not** implement
+//!   `std::error::Error`, which is what makes the blanket
+//!   `From<E: std::error::Error>` impl coherent.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error carrying a human-readable cause chain.
+pub struct Error {
+    /// Message chain: `chain[0]` is the outermost context, the last entry
+    /// is the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap the error in one more layer of context (outermost).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+#[doc(hidden)]
+pub trait ToError {
+    /// Convert into an [`Error`] (identity for `Error` itself).
+    fn to_anyhow(self) -> Error;
+}
+
+impl ToError for Error {
+    fn to_anyhow(self) -> Error {
+        self
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> ToError for E {
+    fn to_anyhow(self) -> Error {
+        Error::from(self)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`.
+pub trait Context<T> {
+    /// Attach a context message to the error, if any.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Attach a lazily-built context message to the error, if any.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ToError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.to_anyhow().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.to_anyhow().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_and_display() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "gone");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading file").unwrap_err();
+        assert_eq!(e.to_string(), "reading file");
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero");
+        assert_eq!(f(-2).unwrap_err().to_string(), "negative: -2");
+        let named = anyhow!("v={}", 7);
+        assert_eq!(named.to_string(), "v=7");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+}
