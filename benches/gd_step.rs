@@ -1,5 +1,8 @@
-// Bench: full GD-step cost per problem class, plus the sigma1-model
-// ablation (chop-style round-after-op vs strict per-op rounding).
+// Bench: full GD-step cost per problem class, the sigma1-model ablation
+// (chop-style round-after-op vs strict per-op rounding), and the PR-3
+// acceptance metric — the binary8 MLR rounded gradient step through the
+// fused kernel layer vs the retained pre-kernel scalar path (target ≥3×).
+// Emits BENCH_gd_step.json (schema v1; refresh with scripts/bench.sh).
 
 include!("harness.rs");
 
@@ -10,6 +13,8 @@ use lpgd::problems::{Mlr, Problem, Quadratic, TwoLayerNn};
 
 fn main() {
     let schemes = StepSchemes::uniform(Rounding::Sr);
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut speedups: Vec<(String, f64)> = Vec::new();
 
     println!("-- quadratic Setting I (diag, n=1000): one GD step --");
     {
@@ -17,9 +22,9 @@ fn main() {
         let mut cfg = GdConfig::new(FpFormat::BFLOAT16, schemes, t, 1);
         cfg.seed = 0;
         let mut e = GdEngine::new(cfg, &p, &x0);
-        bench("gd_step quad diag n=1000", 1000, || {
+        results.push(bench("gd_step quad diag n=1000", 1000, || {
             e.step();
-        });
+        }));
     }
 
     println!("-- quadratic Setting II (dense, n=500): one GD step --");
@@ -28,9 +33,9 @@ fn main() {
         let mut cfg = GdConfig::new(FpFormat::BFLOAT16, schemes, t, 1);
         cfg.seed = 0;
         let mut e = GdEngine::new(cfg, &p, &x0);
-        bench("gd_step quad dense n=500", 500 * 500, || {
+        results.push(bench("gd_step quad dense n=500", 500 * 500, || {
             e.step();
-        });
+        }));
     }
 
     println!("-- MLR full-batch epoch (4000x196, C=10) --");
@@ -41,9 +46,9 @@ fn main() {
         let mut cfg = GdConfig::new(FpFormat::BINARY8, schemes, 0.5, 1);
         cfg.seed = 0;
         let mut e = GdEngine::new(cfg, &p, &x0);
-        bench("gd_step mlr 4000x196", 4000 * 196 * 10, || {
+        results.push(bench("gd_step mlr 4000x196", 4000 * 196 * 10, || {
             e.step();
-        });
+        }));
     }
 
     println!("-- NN epoch (1200x196, H=100) --");
@@ -54,9 +59,41 @@ fn main() {
         let mut cfg = GdConfig::new(FpFormat::BINARY8, schemes, 0.09375, 1);
         cfg.seed = 0;
         let mut e = GdEngine::new(cfg, &p, &x0);
-        bench("gd_step nn 1200x196 h=100", 1200 * 196 * 100, || {
+        results.push(bench("gd_step nn 1200x196 h=100", 1200 * 196 * 100, || {
             e.step();
-        });
+        }));
+    }
+
+    println!("-- ACCEPTANCE: binary8 MLR rounded gradient, scalar-ref vs kernels --");
+    {
+        let data = synth::generate(1000, 14, 3);
+        let p = Mlr::new(data, 10);
+        let mut rngx = Rng::new(9);
+        let x0: Vec<f64> = (0..p.dim()).map(|_| 0.05 * rngx.normal()).collect();
+        let mut g = vec![0.0; p.dim()];
+        let elems = (1000 * 196 * 10) as u64;
+        for (label, lp_acc) in [("chop", false), ("absorption", true)] {
+            let mut c_ref = LpCtx::new(FpFormat::BINARY8, Rounding::Sr, Rng::new(0));
+            let r_ref = bench(&format!("mlr grad b8 SR scalar-ref ({label})"), elems, || {
+                p.gradient_reference(&x0, &mut c_ref, &mut g, lp_acc);
+            });
+            let mut c_new = LpCtx::new(FpFormat::BINARY8, Rounding::Sr, Rng::new(0));
+            let r_new = bench(&format!("mlr grad b8 SR kernels    ({label})"), elems, || {
+                if lp_acc {
+                    p.gradient_per_op(&x0, &mut c_new, &mut g);
+                } else {
+                    p.gradient_rounded(&x0, &mut c_new, &mut g);
+                }
+            });
+            let s = report_speedup(&r_ref, &r_new);
+            println!(
+                "acceptance ({label}): {s:.2}x vs pre-PR scalar path (target >= 3.0x) -> {}",
+                if s >= 3.0 { "PASS" } else { "BELOW TARGET" }
+            );
+            speedups.push((format!("mlr_b8_sr_{label}_scalar_vs_kernel"), s));
+            results.push(r_ref);
+            results.push(r_new);
+        }
     }
 
     println!("-- ablation: sigma1 model (dense quad n=300) --");
@@ -64,15 +101,15 @@ fn main() {
         let (p, x0, _) = Quadratic::setting2(300, 0);
         let mut g = vec![0.0; 300];
         let mut ctx = LpCtx::new(FpFormat::BFLOAT16, Rounding::Sr, Rng::new(0));
-        bench("gradient round-after-op (chop-style)", 300 * 300, || {
+        results.push(bench("gradient round-after-op (chop-style)", 300 * 300, || {
             p.gradient_rounded(&x0, &mut ctx, &mut g);
-        });
-        bench("gradient strict per-op", 300 * 300, || {
+        }));
+        results.push(bench("gradient strict per-op", 300 * 300, || {
             p.gradient_per_op(&x0, &mut ctx, &mut g);
-        });
-        bench("gradient exact (f64)", 300 * 300, || {
+        }));
+        results.push(bench("gradient exact (f64)", 300 * 300, || {
             p.gradient_exact(&x0, &mut g);
-        });
+        }));
     }
 
     println!("-- ablation: GradModel end-to-end (MLR 1000x196, 1 epoch) --");
@@ -87,9 +124,11 @@ fn main() {
             let mut cfg = GdConfig::new(FpFormat::BINARY8, schemes, 0.5, 1);
             cfg.grad_model = gm;
             let mut e = GdEngine::new(cfg, &p, &x0);
-            bench(&format!("mlr epoch grad_model={name}"), 1000 * 196 * 10, || {
+            results.push(bench(&format!("mlr epoch grad_model={name}"), 1000 * 196 * 10, || {
                 e.step();
-            });
+            }));
         }
     }
+
+    write_bench_json("gd_step", &results, &speedups).expect("writing BENCH_gd_step.json");
 }

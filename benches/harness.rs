@@ -1,5 +1,7 @@
 // Minimal bench harness (criterion is not vendored in this offline image):
-// warmup + timed iterations, reporting mean/min ns per op and throughput.
+// warmup + timed iterations, reporting mean/median/p10/p90/min ns per op and
+// throughput, plus a machine-readable `BENCH_<name>.json` emitter so the
+// perf trajectory is tracked across PRs (refreshed by `scripts/bench.sh`).
 // Used by every bench target via `include!`.
 
 use std::time::Instant;
@@ -12,8 +14,35 @@ pub struct BenchResult {
     pub iters: u32,
     /// Mean wall-clock nanoseconds per iteration.
     pub mean_ns: f64,
+    /// Median nanoseconds per iteration (robust central tendency).
+    pub median_ns: f64,
+    /// 10th-percentile nanoseconds per iteration.
+    pub p10_ns: f64,
+    /// 90th-percentile nanoseconds per iteration.
+    pub p90_ns: f64,
     /// Fastest iteration in nanoseconds (least noisy on a busy machine).
     pub min_ns: f64,
+    /// Logical elements of work performed per iteration (0 = unscaled).
+    pub elems: u64,
+}
+
+impl BenchResult {
+    /// Elements per second at the median iteration time (0 when unscaled).
+    pub fn elems_per_sec(&self) -> f64 {
+        if self.elems > 0 && self.median_ns > 0.0 {
+            self.elems as f64 / (self.median_ns / 1e9)
+        } else {
+            0.0
+        }
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// Time `f` (which should perform `elems` logical elements of work) until
@@ -33,25 +62,94 @@ pub fn bench<F: FnMut()>(name: &str, elems: u64, mut f: F) -> BenchResult {
     }
     let mean = times.iter().sum::<f64>() / times.len() as f64;
     let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
-    let r = BenchResult { name: name.to_string(), iters: times.len() as u32, mean_ns: mean, min_ns: min };
+    let mut sorted = times.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: times.len() as u32,
+        mean_ns: mean,
+        median_ns: percentile(&sorted, 0.5),
+        p10_ns: percentile(&sorted, 0.1),
+        p90_ns: percentile(&sorted, 0.9),
+        min_ns: min,
+        elems,
+    };
     let throughput = if elems > 0 {
-        format!("  {:>9.2} Melem/s", elems as f64 / (mean / 1e9) / 1e6)
+        format!("  {:>9.2} Melem/s", r.elems_per_sec() / 1e6)
     } else {
         String::new()
     };
     println!(
-        "{:<44} {:>12.0} ns/iter (min {:>12.0}) x{:<4}{}",
-        r.name, r.mean_ns, r.min_ns, r.iters, throughput
+        "{:<44} {:>12.0} ns/iter (med {:>12.0}, min {:>12.0}) x{:<4}{}",
+        r.name, r.mean_ns, r.median_ns, r.min_ns, r.iters, throughput
     );
     r
 }
 
 /// Wall-clock speedup of `fast` relative to `base`, on best-iteration
-/// times, and a one-line report. Used by `benches/sweep.rs` to show the
-/// multi-core gain of the sharded coordinator over the serial path.
+/// times, and a one-line report. Used by the sweep and gd_step benches to
+/// report their acceptance metrics.
 #[allow(dead_code)]
 pub fn report_speedup(base: &BenchResult, fast: &BenchResult) -> f64 {
     let s = base.min_ns / fast.min_ns;
     println!("speedup: {} -> {}: {s:.2}x", base.name, fast.name);
     s
+}
+
+#[allow(dead_code)]
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Write `BENCH_<bench>.json` in the current directory (the workspace root
+/// under `cargo bench`): schema v1 with per-result median/p10/p90 ns and
+/// elements/sec, plus named derived speedup ratios. Returns the path.
+#[allow(dead_code)]
+pub fn write_bench_json(
+    bench: &str,
+    results: &[BenchResult],
+    speedups: &[(String, f64)],
+) -> std::io::Result<String> {
+    let path = format!("BENCH_{bench}.json");
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench)));
+    s.push_str("  \"schema\": 1,\n");
+    s.push_str("  \"unit\": \"ns_per_iter\",\n");
+    s.push_str(&format!(
+        "  \"generated_by\": \"benches/{}.rs via scripts/bench.sh\",\n",
+        json_escape(bench)
+    ));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \"median_ns\": {:.1}, \
+             \"p10_ns\": {:.1}, \"p90_ns\": {:.1}, \"min_ns\": {:.1}, \"elems\": {}, \
+             \"elems_per_sec\": {:.1}}}{}\n",
+            json_escape(&r.name),
+            r.iters,
+            r.mean_ns,
+            r.median_ns,
+            r.p10_ns,
+            r.p90_ns,
+            r.min_ns,
+            r.elems,
+            r.elems_per_sec(),
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"speedups\": [\n");
+    for (i, (name, x)) in speedups.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"x\": {:.2}}}{}\n",
+            json_escape(name),
+            x,
+            if i + 1 == speedups.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(&path, &s)?;
+    println!("wrote {path}");
+    Ok(path)
 }

@@ -1,9 +1,10 @@
-//! Bench: the rounding hot path (Layer-3 side of the paper's kernel).
-//! Regenerates the per-scheme cost table in EXPERIMENTS.md §Perf.
+// Bench: the rounding hot path (Layer-3 side of the paper's kernel):
+// fused slice kernels vs the scalar reference path, per scheme and format,
+// plus the few-random-bits knob ablation. Emits BENCH_rounding.json.
 
 include!("harness.rs");
 
-use lpgd::fp::{round, round_slice, round_slice_with, FpFormat, Rng, Rounding};
+use lpgd::fp::{round, round_slice, round_slice_with, FpFormat, Rng, RoundPlan, Rounding};
 
 fn main() {
     let fmt = FpFormat::BINARY8;
@@ -11,8 +12,10 @@ fn main() {
     let mut rng = Rng::new(0);
     let xs: Vec<f64> = (0..n).map(|_| rng.normal() * 3.0).collect();
     let vs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut speedups: Vec<(String, f64)> = Vec::new();
 
-    println!("-- scalar rounding, binary8, {n} elements per iter --");
+    println!("-- fused slice rounding, binary8, {n} elements per iter --");
     for mode in [
         Rounding::RoundNearestEven,
         Rounding::RoundDown,
@@ -22,30 +25,64 @@ fn main() {
     ] {
         let mut r = Rng::new(1);
         let mut buf = xs.clone();
-        bench(&format!("round_slice {}", mode.label()), n as u64, || {
+        results.push(bench(&format!("round_slice {}", mode.label()), n as u64, || {
             buf.copy_from_slice(&xs);
             round_slice(&fmt, mode, &mut buf, &mut r);
+        }));
+    }
+
+    println!("-- scalar reference vs fused slice (SR) --");
+    {
+        let mut r = Rng::new(6);
+        let mut buf = xs.clone();
+        let plan = RoundPlan::new(fmt);
+        let scalar = bench("scalar round loop SR", n as u64, || {
+            buf.copy_from_slice(&xs);
+            for v in buf.iter_mut() {
+                *v = plan.round(Rounding::Sr, *v, &mut r);
+            }
         });
+        let mut r2 = Rng::new(6);
+        let mut buf2 = xs.clone();
+        let fused = bench("fused round_slice SR", n as u64, || {
+            buf2.copy_from_slice(&xs);
+            plan.round_slice(Rounding::Sr, &mut buf2, &mut r2);
+        });
+        let s = report_speedup(&scalar, &fused);
+        speedups.push(("sr_scalar_vs_slice".into(), s));
+        results.push(scalar);
+        results.push(fused);
+    }
+
+    println!("-- few-random-bits knob (SR slice, bits per rounding) --");
+    for bits in [8u32, 16, 32, 53] {
+        let plan = RoundPlan::new(fmt).with_sr_bits(bits);
+        let mut r = Rng::new(7);
+        let mut buf = xs.clone();
+        results.push(bench(&format!("round_slice SR sr_bits={bits}"), n as u64, || {
+            buf.copy_from_slice(&xs);
+            plan.round_slice(Rounding::Sr, &mut buf, &mut r);
+        }));
     }
 
     println!("-- steered signed-SR_eps (per-element v) --");
     {
         let mut r = Rng::new(2);
         let mut buf = xs.clone();
-        bench("round_slice_with signed-SR_eps(0.25)", n as u64, || {
+        results.push(bench("round_slice_with signed-SR_eps(0.25)", n as u64, || {
             buf.copy_from_slice(&xs);
             round_slice_with(&fmt, Rounding::SignedSrEps(0.25), &mut buf, &vs, &mut r);
-        });
+        }));
     }
 
     println!("-- bfloat16 vs binary8 (same scheme) --");
     for fmt2 in [FpFormat::BINARY8, FpFormat::BFLOAT16, FpFormat::BINARY16] {
         let mut r = Rng::new(3);
         let mut buf = xs.clone();
-        bench(&format!("round_slice SR {}", fmt2.name()), n as u64, || {
+        results.push(bench(&format!("round_slice SR {}", fmt2.name()), n as u64, || {
             buf.copy_from_slice(&xs);
             round_slice(&fmt2, Rounding::Sr, &mut buf, &mut r);
-        });
+        }));
     }
 
     println!("-- ablation: representable fast-path (values already in F) --");
@@ -54,19 +91,21 @@ fn main() {
         let mut inf_vals = xs.clone();
         round_slice(&fmt, Rounding::RoundNearestEven, &mut inf_vals, &mut r);
         let mut buf = inf_vals.clone();
-        bench("round_slice SR on representable input", n as u64, || {
+        results.push(bench("round_slice SR on representable input", n as u64, || {
             buf.copy_from_slice(&inf_vals);
             round_slice(&fmt, Rounding::Sr, &mut buf, &mut r);
-        });
+        }));
     }
 
     println!("-- single value micro (ns/round) --");
     {
         let mut r = Rng::new(5);
         let mut acc = 0.0;
-        bench("round scalar SR", 1, || {
+        results.push(bench("round scalar SR", 1, || {
             acc += round(&fmt, Rounding::Sr, 1.1, &mut r);
-        });
+        }));
         std::hint::black_box(acc);
     }
+
+    write_bench_json("rounding", &results, &speedups).expect("writing BENCH_rounding.json");
 }

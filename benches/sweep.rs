@@ -51,11 +51,18 @@ fn main() {
     let parallel = bench("sweep jobs=0 (all cores)", cells.len() as u64, || {
         std::hint::black_box(sweep(0));
     });
-    report_speedup(&serial, &parallel);
+    let s = report_speedup(&serial, &parallel);
 
     // Determinism spot-check on the real results (not just the bench body).
     let a = sweep(1);
     let b = sweep(0);
     assert_eq!(a, b, "jobs=1 and jobs=0 merged results must be bit-identical");
     println!("determinism OK: {} cells bit-identical across job counts", a.len());
+
+    write_bench_json(
+        "sweep",
+        &[serial, parallel],
+        &[("sweep_serial_vs_all_cores".into(), s)],
+    )
+    .expect("writing BENCH_sweep.json");
 }

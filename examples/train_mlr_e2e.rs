@@ -1,85 +1,64 @@
-//! END-TO-END DRIVER (deliverable (b)/EXPERIMENTS.md): trains the paper's
-//! multinomial logistic regression with binary8 rounded GD **through the
-//! full three-layer stack**:
-//!
-//!   Layer 3 (this binary, Rust): data pipeline, uniform-field generation
-//!     from PCG streams, epoch loop, metrics;
-//!   Layer 2 (AOT JAX): `artifacts/mlr_step.hlo.txt` — forward, backward,
-//!     and the (8a)/(8b)/(8c) rounded update in one compiled graph;
-//!   Layer 1 (Pallas): the stochastic-rounding quantizer lowered inside it.
-//!
-//! Python does NOT run here; build artifacts first with `make artifacts`.
+//! END-TO-END DRIVER: trains the paper's multinomial logistic regression
+//! with binary8 rounded GD **through the fused kernel layer** — the rounded
+//! GEMM logits, the fused softmax-row kernel, the slice-rounded gradient
+//! accumulators (`fp::kernels`), and the batched few-random-bits SR stream.
+//! Doubles as a smoke benchmark: it reports end-to-end training throughput
+//! (epochs/sec) and the (8a) rounding throughput (rounding ops/sec).
 //!
 //! Run: `cargo run --release --example train_mlr_e2e -- [epochs] [scheme]`
-//!   scheme ∈ rn | sr | sr_eps:0.2 | signed:0.1   (default sr)
+//!   scheme ∈ rn | rd | ru | rz | sr | sr_eps:0.2 | signed:0.1   (default sr)
+//!
+//! (The AOT-compiled PJRT variant of this driver lives behind the
+//! non-default `pjrt` feature — see `benches/runtime_pjrt.rs` and
+//! `rust/src/runtime/`; this example exercises the native Rust hot path
+//! that the perf work of docs/performance.md targets.)
 
 use lpgd::data::load_or_synth;
-use lpgd::fp::{Rng, Rounding};
-use lpgd::problems::Mlr;
-use lpgd::runtime::{artifacts::mode, Arg, Runtime, MLR_SPEC};
+use lpgd::fp::{FpFormat, Rounding};
+use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::problems::{Mlr, Problem};
 use lpgd::util::table::sparkline;
 
 fn main() -> anyhow::Result<()> {
     let mut args = std::env::args().skip(1);
     let epochs: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(30);
     let scheme = Rounding::parse(&args.next().unwrap_or_else(|| "sr".into()))
-        .expect("bad scheme (rn|sr|sr_eps:E|signed:E)");
-    let (mode_id, eps) = mode::from_rounding(scheme);
+        .expect("bad scheme (rn|rd|ru|rz|sr|sr_eps:E|signed:E)");
 
-    let spec = MLR_SPEC;
-    let n = spec.batch; // 256-sample batches, D=196, C=10 (artifact ABI)
     let splits = load_or_synth(None, 2048, 512, 14, 42);
-    let mlr = Mlr::new(splits.train, spec.classes); // exact-eval mirror for metrics
+    let mlr = Mlr::new(splits.train, 10);
     println!(
-        "e2e MLR: {} train / {} test, artifact {} ({} params), scheme {}",
-        2048, 512, spec.file, spec.params, scheme.label()
+        "e2e MLR: {} train / {} test, D={}, C=10, binary8, scheme {}, {} params",
+        mlr.data.len(),
+        splits.test.len(),
+        mlr.data.n_features,
+        scheme.label(),
+        mlr.dim()
     );
 
-    let mut rt = Runtime::cpu("artifacts")?;
-    println!("PJRT platform: {}", rt.platform());
+    let mut cfg = GdConfig::new(FpFormat::BINARY8, StepSchemes::uniform(scheme), 0.5, epochs);
+    cfg.seed = 0; // default grad model: chop-style RoundAfterOp (paper §2.4)
+    let x0 = vec![0.0f64; mlr.dim()];
+    let mut engine = GdEngine::new(cfg, &mlr, &x0);
 
-    let mut params = vec![0.0f64; spec.params];
-    let root = Rng::new(0);
-    let mut uni_rng = root.fork("uniforms", 0);
     let mut errs = Vec::with_capacity(epochs);
-    let t_step = 0.5f32;
-    let batches = 2048 / n;
-    let started = std::time::Instant::now();
-    let mut steps = 0u32;
-
-    for _epoch in 0..epochs {
-        for b in 0..batches {
-            // Marshal the batch (row-major f32) + one-hot labels.
-            let mut xb = Vec::with_capacity(n * spec.features);
-            let mut yb = vec![0.0f64; n * spec.classes];
-            for i in 0..n {
-                let row = mlr.data.row(b * n + i);
-                xb.extend_from_slice(row);
-                yb[i * spec.classes + mlr.data.labels[b * n + i] as usize] = 1.0;
-            }
-            // Fresh uniform field for the three rounding applications.
-            let uni: Vec<f64> = (0..3 * spec.params).map(|_| uni_rng.uniform()).collect();
-            let exe = rt.load(spec.file)?;
-            let out = exe.run_f32(&[
-                Arg::f32_from_f64(&params, &[spec.params as i64]),
-                Arg::f32_from_f64(&xb, &[n as i64, spec.features as i64]),
-                Arg::f32_from_f64(&yb, &[n as i64, spec.classes as i64]),
-                Arg::f32_from_f64(&uni, &[3, spec.params as i64]),
-                Arg::ScalarF32(t_step),
-                Arg::ScalarF32(eps),
-                Arg::I32(vec![mode_id; 3], vec![3]),
-            ])?;
-            params = out[0].iter().map(|&v| v as f64).collect();
-            steps += 1;
-        }
-        let err = mlr.test_error(&params, &splits.test);
-        errs.push(err);
+    let mut train_secs = 0.0f64;
+    for _ in 0..epochs {
+        let t0 = std::time::Instant::now();
+        engine.step(); // full-batch epoch: (8a) kernel gradient + (8b)/(8c)
+        train_secs += t0.elapsed().as_secs_f64();
+        errs.push(mlr.test_error(&engine.x, &splits.test));
     }
-    let dt = started.elapsed().as_secs_f64();
+
+    let rounds = engine.grad_rounding_ops();
     println!(
-        "ran {steps} PJRT train steps in {dt:.2}s ({:.1} steps/s, {:.2} ms/step)",
-        steps as f64 / dt,
-        1e3 * dt / steps as f64
+        "ran {epochs} rounded epochs in {train_secs:.2}s ({:.2} epochs/s, {:.1} ms/epoch)",
+        epochs as f64 / train_secs,
+        1e3 * train_secs / epochs as f64
+    );
+    println!(
+        "(8a) rounding ops: {rounds} total -> {:.1} Mrounds/s through the kernel layer",
+        rounds as f64 / train_secs / 1e6
     );
     println!("test-error curve: {}", sparkline(&errs, 60));
     println!(
@@ -91,6 +70,6 @@ fn main() -> anyhow::Result<()> {
         *errs.last().unwrap() < 0.5,
         "end-to-end training failed to beat chance"
     );
-    println!("E2E OK: all three layers composed");
+    println!("E2E OK: kernel-layer training pipeline composed");
     Ok(())
 }

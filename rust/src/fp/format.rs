@@ -10,7 +10,15 @@
 //! of the target format. This works because all formats we simulate have
 //! `s ≤ 24 < 53` and exponent ranges inside binary64's, so the embedding
 //! 𝔽 ⊂ binary64 is exact (the same trick as Higham & Pranesh's `chop`).
-
+//!
+//! Neighbor arithmetic (`floor_ceil`, `successor`, `predecessor`, `contains`)
+//! operates **directly on the binary64 bit pattern**: the target floor of a
+//! magnitude is its f64 encoding with the sub-ulp tail masked off, and the
+//! target ceiling is one integer increment of the target ulp above it (the
+//! carry into the exponent field is exactly the binade crossing). The
+//! original float-arithmetic implementations are retained verbatim in
+//! [`reference`] as the oracle the bit kernels are tested against — see the
+//! exhaustive sweep in `rust/tests/properties.rs` and `docs/performance.md`.
 
 /// A binary floating-point format with `s` significand bits (implicit bit
 /// included), exponent range `[e_min, e_max]`, and optional subnormals.
@@ -114,30 +122,53 @@ impl FpFormat {
         pow2(e - self.sig_bits as i32 + 1)
     }
 
+    /// Number of binary64 mantissa bits of `|x|` that lie *below* the target
+    /// ulp, i.e. the width of the discarded tail, together with the raw f64
+    /// exponent field. `shift ≤ 0` means the format is at least as fine as
+    /// binary64 at `|x|` (always representable); `shift ≥ 53` means the
+    /// entire significand sits below the subnormal spacing (`0 < |x| < q`).
+    /// For `shift ∈ [1, 52]` the target floor of the magnitude is
+    /// `bits & !((1 << shift) − 1)` and the ceiling is one `2^shift`
+    /// increment above it (the mantissa carry into the exponent field is
+    /// exactly the binade crossing, which is itself a grid point).
+    #[inline]
+    fn tail_shift(&self, mag: f64) -> i32 {
+        let bits = mag.to_bits();
+        let raw_e = ((bits >> 52) & 0x7ff) as i32;
+        let (e, e_lsb) = if raw_e == 0 {
+            (exponent_of(mag), -1074)
+        } else {
+            (raw_e - 1023, raw_e - 1023 - 52)
+        };
+        (e.max(self.e_min) - self.sig_bits as i32 + 1) - e_lsb
+    }
+
     /// Is `x` exactly an element of this format (finite values only)?
+    /// Bit-level: `x ∈ F` iff the sub-ulp tail of its magnitude is zero.
     pub fn contains(&self, x: f64) -> bool {
         if x == 0.0 {
             return true;
         }
-        if !x.is_finite() || x.abs() > self.x_max() {
+        if !x.is_finite() {
             return false;
         }
-        let q = self.spacing_at(x);
-        let m = x / q; // exact: division by a power of two
-        if m != m.trunc() {
+        let a = x.abs();
+        if a > self.x_max() {
             return false;
         }
-        if !self.subnormals && x.abs() < self.x_min() {
+        if !self.subnormals && a < self.x_min() {
             return false;
         }
-        true
+        let shift = self.tail_shift(a);
+        shift <= 0 || (shift < 53 && a.to_bits() & ((1u64 << shift) - 1) == 0)
     }
 
     /// `⌊x⌋_F = max{ y ∈ F : y ≤ x }` and `⌈x⌉_F = min{ y ∈ F : y ≥ x }`,
-    /// computed exactly. Magnitudes beyond `x_max` clamp to `±x_max` on the
-    /// inward side and `±∞` on the outward side (chop-style saturation is
-    /// applied by the rounding layer, which never returns ±∞ for the
-    /// stochastic schemes — see `round.rs`).
+    /// computed exactly on the binary64 bit pattern (mantissa masking plus
+    /// one integer increment; see [`FpFormat::tail_shift`]). Magnitudes
+    /// beyond `x_max` clamp to `±x_max` on the inward side and `±∞` on the
+    /// outward side (chop-style saturation is applied by the rounding layer,
+    /// which never returns ±∞ for the stochastic schemes — see `round.rs`).
     pub fn floor_ceil(&self, x: f64) -> (f64, f64) {
         if x == 0.0 {
             return (0.0, 0.0);
@@ -155,10 +186,8 @@ impl FpFormat {
         if x < -xmax {
             return (f64::NEG_INFINITY, -xmax);
         }
-        let q = self.spacing_at(x);
-        // Exact: x/q has magnitude < 2^s ≤ 2^24, and x is a binary64 value.
-        let m = x / q;
-        let (lo, hi) = (m.floor() * q, m.ceil() * q);
+        let (lo_mag, hi_mag) = self.floor_ceil_mag(x.abs());
+        let (lo, hi) = if x < 0.0 { (-hi_mag, -lo_mag) } else { (lo_mag, hi_mag) };
         if self.subnormals {
             (lo, hi)
         } else {
@@ -185,8 +214,32 @@ impl FpFormat {
         }
     }
 
+    /// Neighbor pair of a magnitude `0 < m ≤ x_max` on the *subnormal-enabled*
+    /// grid (the caller applies sign and the flush-to-zero policy).
+    #[inline]
+    fn floor_ceil_mag(&self, m: f64) -> (f64, f64) {
+        let shift = self.tail_shift(m);
+        if shift <= 0 {
+            return (m, m); // binary64 is not finer than the target here
+        }
+        if shift >= 53 {
+            // The whole significand sits below the subnormal spacing q:
+            // 0 < m < q, so the neighbors are 0 and q.
+            return (0.0, pow2(self.e_min - self.sig_bits as i32 + 1));
+        }
+        let bits = m.to_bits();
+        let mask = (1u64 << shift) - 1;
+        if bits & mask == 0 {
+            return (m, m);
+        }
+        let lo = bits & !mask;
+        (f64::from_bits(lo), f64::from_bits(lo + mask + 1))
+    }
+
     /// Successor `su(x̂) = min{ ŷ ∈ F : ŷ > x̂ }` for a value already in `F`
-    /// (paper eq. (10); strict, unlike `⌈·⌉`).
+    /// (paper eq. (10); strict, unlike `⌈·⌉`). Bit-level: the format-ceiling
+    /// of the binary64 value one ulp₆₄ above `x̂` — strictness is inherited
+    /// from the strict monotonicity of the f64 bit pattern.
     pub fn successor(&self, x: f64) -> f64 {
         debug_assert!(self.contains(x), "successor() requires x ∈ F (got {x})");
         if x >= self.x_max() {
@@ -195,18 +248,7 @@ impl FpFormat {
         if x == 0.0 {
             return self.x_min_sub();
         }
-        let q = self.spacing_at(x);
-        if x < 0.0 {
-            // Moving toward zero: crossing −2^e into the finer binade.
-            let m = x / q;
-            if m == -(1i64 << (self.sig_bits - 1)) as f64 && x.abs() > self.x_min() {
-                x + q / 2.0
-            } else {
-                x + q
-            }
-        } else {
-            x + q // may land exactly on 2^{e+1}, which is representable
-        }
+        self.floor_ceil(next_up(x)).1
     }
 
     /// Predecessor `pr(x̂) = max{ ŷ ∈ F : ŷ < x̂ }` for a value already in `F`.
@@ -215,9 +257,31 @@ impl FpFormat {
     }
 }
 
+/// Smallest binary64 value strictly greater than finite `x` (both ±0 map to
+/// the smallest positive subnormal — the standard `nextUp` bit increment).
+#[inline]
+fn next_up(x: f64) -> f64 {
+    debug_assert!(x.is_finite());
+    let bits = x.to_bits();
+    if x == 0.0 {
+        f64::from_bits(1)
+    } else if bits >> 63 == 0 {
+        f64::from_bits(bits + 1)
+    } else {
+        f64::from_bits(bits - 1)
+    }
+}
+
 /// Exact `2^e` for any `e ∈ [-1074, 1023]`, built from the binary64 bit
 /// pattern. `f64::powi` is *not* exact here: it can evaluate `2^{-1048}` as
 /// `1 / 2^{1048} = 1/∞ = 0`, which poisons neighbor arithmetic with NaNs.
+///
+/// Saturation at the edges is part of the contract: `e > 1023` overflows to
+/// `+∞` and `e < -1074` (below the binary64 subnormal range, e.g. the
+/// `e_min − sig_bits` halfway exponent of a binary64-wide format) underflows
+/// to `+0.0`. Callers that need the round-trip `exponent_of(pow2(e)) == e`
+/// must therefore stay inside `[-1074, 1023]` — see
+/// `tests::pow2_exponent_roundtrip_subnormal_edge`.
 #[inline]
 pub fn pow2(e: i32) -> f64 {
     if e > 1023 {
@@ -233,6 +297,9 @@ pub fn pow2(e: i32) -> f64 {
 
 /// Exponent `e` such that `2^e ≤ |x| < 2^{e+1}`, for finite positive `x`,
 /// extracted from the binary64 bit pattern (exact; no `log2` rounding).
+/// Total on the whole binary64 subnormal range down to `2^{-1074}`
+/// (the `e_min − sig_bits + 1` edge of a binary64-wide format); `x = 0`
+/// is rejected by the debug assertion and has no meaningful exponent.
 #[inline]
 pub fn exponent_of(x: f64) -> i32 {
     debug_assert!(x > 0.0 && x.is_finite());
@@ -244,6 +311,119 @@ pub fn exponent_of(x: f64) -> i32 {
         -1022 - (52 - (63 - mant.leading_zeros() as i32))
     } else {
         raw - 1023
+    }
+}
+
+/// The original float-arithmetic neighbor kernels, retained **verbatim** as
+/// the oracle for the bit-level implementations on [`FpFormat`]. These walk
+/// exponents with `pow2`/division (exact, but several times slower than the
+/// mask-and-increment fast path); every bit kernel is tested against them —
+/// exhaustively over all representable binary8 values plus halfway points,
+/// subnormals, ±overflow and ±0 in `rust/tests/properties.rs`.
+pub mod reference {
+    use super::{exponent_of, pow2, FpFormat};
+
+    /// Reference ulp: `2^{max(e, e_min) − s + 1}` via exponent walking.
+    #[inline]
+    pub fn spacing_at(fmt: &FpFormat, x: f64) -> f64 {
+        debug_assert!(x.is_finite());
+        let e = exponent_of(x.abs()).max(fmt.e_min);
+        pow2(e - fmt.sig_bits as i32 + 1)
+    }
+
+    /// Reference membership test via exact division by the spacing.
+    pub fn contains(fmt: &FpFormat, x: f64) -> bool {
+        if x == 0.0 {
+            return true;
+        }
+        if !x.is_finite() || x.abs() > fmt.x_max() {
+            return false;
+        }
+        let q = spacing_at(fmt, x);
+        let m = x / q; // exact: division by a power of two
+        if m != m.trunc() {
+            return false;
+        }
+        if !fmt.subnormals && x.abs() < fmt.x_min() {
+            return false;
+        }
+        true
+    }
+
+    /// Reference `(⌊x⌋_F, ⌈x⌉_F)` via exact float division / floor / ceil.
+    pub fn floor_ceil(fmt: &FpFormat, x: f64) -> (f64, f64) {
+        if x == 0.0 {
+            return (0.0, 0.0);
+        }
+        if x.is_nan() {
+            return (f64::NAN, f64::NAN);
+        }
+        let xmax = fmt.x_max();
+        if x.is_infinite() {
+            return if x > 0.0 { (xmax, f64::INFINITY) } else { (f64::NEG_INFINITY, -xmax) };
+        }
+        if x > xmax {
+            return (xmax, f64::INFINITY);
+        }
+        if x < -xmax {
+            return (f64::NEG_INFINITY, -xmax);
+        }
+        let q = spacing_at(fmt, x);
+        // Exact: x/q has magnitude < 2^s ≤ 2^24, and x is a binary64 value.
+        let m = x / q;
+        let (lo, hi) = (m.floor() * q, m.ceil() * q);
+        if fmt.subnormals {
+            (lo, hi)
+        } else {
+            // Flush the open subnormal interval (−x_min, x_min) \ {0} to its
+            // representable endpoints {−x_min, 0, x_min}.
+            let xmin = fmt.x_min();
+            let fix = |v: f64| -> f64 {
+                if v != 0.0 && v.abs() < xmin {
+                    if v > 0.0 { 0.0 } else { -0.0 }
+                } else {
+                    v
+                }
+            };
+            let (mut lo2, mut hi2) = (fix(lo), fix(hi));
+            // Flushing can collapse both sides to 0 even when x ≠ 0; widen to
+            // the true neighbors in that case.
+            if lo2 == 0.0 && x < 0.0 && lo != 0.0 {
+                lo2 = -xmin;
+            }
+            if hi2 == 0.0 && x > 0.0 && hi != 0.0 {
+                hi2 = xmin;
+            }
+            (lo2, hi2)
+        }
+    }
+
+    /// Reference strict successor via spacing arithmetic.
+    pub fn successor(fmt: &FpFormat, x: f64) -> f64 {
+        debug_assert!(contains(fmt, x), "successor() requires x ∈ F (got {x})");
+        if x >= fmt.x_max() {
+            return f64::INFINITY;
+        }
+        if x == 0.0 {
+            return fmt.x_min_sub();
+        }
+        let q = spacing_at(fmt, x);
+        if x < 0.0 {
+            // Moving toward zero: crossing −2^e into the finer binade.
+            let m = x / q;
+            if m == -(1i64 << (fmt.sig_bits - 1)) as f64 && x.abs() > fmt.x_min() {
+                x + q / 2.0
+            } else {
+                x + q
+            }
+        } else {
+            x + q // may land exactly on 2^{e+1}, which is representable
+        }
+    }
+
+    /// Reference strict predecessor (mirror of [`successor`]).
+    pub fn predecessor(fmt: &FpFormat, x: f64) -> f64 {
+        -successor(fmt, -x)
     }
 }
 
@@ -288,6 +468,58 @@ mod tests {
         assert_eq!(exponent_of(1023.9), 9);
         assert_eq!(exponent_of(f64::MIN_POSITIVE), -1022);
         assert_eq!(exponent_of(f64::MIN_POSITIVE / 2.0), -1023);
+    }
+
+    /// `pow2` / `exponent_of` must round-trip across the *entire* binary64
+    /// subnormal range, including the `e_min − sig_bits + 1` edge of every
+    /// preset; below `2^{-1074}` `pow2` saturates to `+0.0` by contract.
+    #[test]
+    fn pow2_exponent_roundtrip_subnormal_edge() {
+        for e in [-1074, -1073, -1060, -1023, -1022, -1021, -160, -1, 0, 1, 1023] {
+            let p = pow2(e);
+            assert!(p > 0.0 && p.is_finite(), "pow2({e}) = {p}");
+            assert_eq!(exponent_of(p), e, "round-trip failed at e={e}");
+            assert_eq!(pow2(exponent_of(p)), p, "pow2∘exponent_of not identity at e={e}");
+        }
+        // Saturation contract at both edges.
+        assert_eq!(pow2(-1075), 0.0);
+        assert_eq!(pow2(i32::MIN), 0.0);
+        assert_eq!(pow2(1024), f64::INFINITY);
+        assert_eq!(pow2(i32::MAX), f64::INFINITY);
+        // Every preset's extreme subnormal boundary: x_min_sub round-trips,
+        // and its exponent is exactly e_min − s + 1.
+        for fmt in [
+            FpFormat::BINARY8,
+            FpFormat::BFLOAT16,
+            FpFormat::BINARY16,
+            FpFormat::BINARY32,
+            FpFormat::BINARY64,
+        ] {
+            let q = fmt.x_min_sub();
+            let eq = fmt.e_min - fmt.sig_bits as i32 + 1;
+            assert_eq!(exponent_of(q), eq, "{}", fmt.name());
+            assert_eq!(pow2(eq), q, "{}", fmt.name());
+        }
+    }
+
+    /// The halfway magnitude `2^{e_min − s}` (one exponent below the smallest
+    /// subnormal) must round-trip through the neighbor kernels as the open
+    /// interval `(0, x_min_sub)` for every preset where it is a binary64
+    /// value (all but binary64 itself, whose halfway point underflows f64).
+    #[test]
+    fn floor_ceil_at_extreme_subnormal_boundary() {
+        for fmt in
+            [FpFormat::BINARY8, FpFormat::BFLOAT16, FpFormat::BINARY16, FpFormat::BINARY32]
+        {
+            let half = pow2(fmt.e_min - fmt.sig_bits as i32);
+            let q = fmt.x_min_sub();
+            assert_eq!(fmt.floor_ceil(half), (0.0, q), "{}", fmt.name());
+            assert_eq!(fmt.floor_ceil(-half), (-q, 0.0), "{}", fmt.name());
+            assert!(!fmt.contains(half), "{}", fmt.name());
+            assert_eq!(fmt.successor(0.0), q, "{}", fmt.name());
+            assert_eq!(fmt.predecessor(q), 0.0, "{}", fmt.name());
+            assert_eq!(fmt.successor(-q), 0.0, "{}", fmt.name());
+        }
     }
 
     #[test]
@@ -373,5 +605,61 @@ mod tests {
         assert_eq!(f.spacing_at(1.5), f.eps());
         assert_eq!(f.spacing_at(2.0), 2.0 * f.eps());
         assert_eq!(f.spacing_at(0.75), 0.5 * f.eps());
+    }
+
+    /// Quick randomized bit-vs-reference equivalence spot check (the
+    /// exhaustive binary8 grid sweep lives in `rust/tests/properties.rs`).
+    #[test]
+    fn bit_kernels_match_reference_random() {
+        use crate::fp::rng::Rng;
+        let mut rng = Rng::new(2024);
+        for fmt in [
+            FpFormat::BINARY8,
+            FpFormat::BFLOAT16,
+            FpFormat::BINARY16,
+            FpFormat::BINARY32,
+            FpFormat::BINARY64,
+            FpFormat { subnormals: false, ..FpFormat::BINARY8 },
+        ] {
+            for _ in 0..4000 {
+                let e = rng.uniform_in(fmt.e_min as f64 - 6.0, fmt.e_max as f64 + 2.0);
+                let m = rng.uniform_in(1.0, 2.0);
+                let s = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+                let x = s * m * pow2(e.clamp(-1070.0, 1020.0) as i32);
+                let want = reference::floor_ceil(&fmt, x);
+                let got = fmt.floor_ceil(x);
+                assert_eq!(want, got, "{} floor_ceil({x:e})", fmt.name());
+                assert_eq!(
+                    reference::contains(&fmt, x),
+                    fmt.contains(x),
+                    "{} contains({x:e})",
+                    fmt.name()
+                );
+                // Neighbors are format members; successor/predecessor agree
+                // with the reference on them. (Skipped for subnormals=false:
+                // the reference walks `x + q` out of the flushed zone and can
+                // return a non-representable value there — the bit kernel
+                // flushes correctly; covered by `floor_ceil_no_subnormals_flushes`.)
+                if !fmt.subnormals {
+                    continue;
+                }
+                for v in [got.0, got.1] {
+                    if v.is_finite() && v != 0.0 && v.abs() < fmt.x_max() {
+                        assert_eq!(
+                            reference::successor(&fmt, v),
+                            fmt.successor(v),
+                            "{} successor({v:e})",
+                            fmt.name()
+                        );
+                        assert_eq!(
+                            reference::predecessor(&fmt, v),
+                            fmt.predecessor(v),
+                            "{} predecessor({v:e})",
+                            fmt.name()
+                        );
+                    }
+                }
+            }
+        }
     }
 }

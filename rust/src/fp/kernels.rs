@@ -1,0 +1,448 @@
+//! Blocked, rounding-aware linear-algebra kernels — the per-cell hot path.
+//!
+//! The paper's learning experiments (binary8/bfloat16 MLR and NN training,
+//! §5.2–5.3) spend nearly all of their time evaluating rounded gradients.
+//! Before this layer existed, every elementary result went through a scalar
+//! [`crate::fp::linalg::LpCtx::fl`] call — per-call mode dispatch, per-call
+//! format constants, and one full-width uniform per stochastic rounding.
+//! These kernels restructure the same computations around the fused slice
+//! rounders of [`RoundPlan`] (which batch the randomness through the
+//! few-random-bits block source), so rounding cost is paid per *slice*, not
+//! per scalar. `benches/gd_step.rs` measures the resulting ≥3× speedup on
+//! the binary8 MLR gradient step and writes `BENCH_gd_step.json`.
+//!
+//! # Determinism contract (mode-scoped)
+//!
+//! * **Deterministic modes (RN/RD/RU/RZ)** round elementwise — a value's
+//!   rounding never depends on its neighbors — and consume no randomness,
+//!   so the kernels only need to feed the *same f64 intermediates* through
+//!   the same rounding steps to be bit-identical to the historic scalar
+//!   path. Exact summations therefore run in the seed's sequential order
+//!   ([`dot_seq`]) under these modes: trajectories are **bit-identical** to
+//!   the pre-kernel implementation.
+//! * **Stochastic modes (SR/SRε/signed-SRε)** are free to re-stream
+//!   randomness (see `round.rs`), so the kernels also use the faster
+//!   multi-accumulator summation ([`dot_fast`]) — same law, different
+//!   stream and O(u) different f64 intermediates. The distributional tests
+//!   and the paper's figures are invariant to both.
+//!
+//! [`dot_auto`] encodes this contract; `docs/performance.md` spells it out.
+
+use super::round::{RoundPlan, Rounding};
+use super::rng::Rng;
+
+/// Accumulator-rounding granularity of the *absorption* (low-precision
+/// accumulation) model: the running sum is rounded into the working format
+/// every `ACC_BLOCK` accumulated terms. For N ≫ ACC_BLOCK/u the absorption
+/// threshold is identical to per-op accumulation while costing ACC_BLOCK×
+/// fewer roundings — see DESIGN.md §8 and the problem implementations.
+pub const ACC_BLOCK: usize = 32;
+
+/// Exact inner product in the seed's sequential order (one running
+/// accumulator) — the order the deterministic-mode contract preserves.
+/// Delegates to [`crate::fp::linalg::exact::dot`] so the load-bearing
+/// summation order is defined in exactly one place.
+#[inline]
+pub fn dot_seq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    crate::fp::linalg::exact::dot(a, b)
+}
+
+/// Exact inner product with four independent accumulators (breaks the
+/// serial FMA dependency chain so the compiler can vectorize). Same value
+/// up to f64 reassociation — only used under stochastic modes.
+#[inline]
+pub fn dot_fast(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for (pa, pb) in (&mut ca).zip(&mut cb) {
+        s0 += pa[0] * pb[0];
+        s1 += pa[1] * pb[1];
+        s2 += pa[2] * pb[2];
+        s3 += pa[3] * pb[3];
+    }
+    let mut acc = (s0 + s2) + (s1 + s3);
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Mode-scoped exact dot: sequential (seed order) for deterministic modes,
+/// multi-accumulator for stochastic modes — the determinism contract.
+#[inline]
+pub fn dot_auto(mode: Rounding, a: &[f64], b: &[f64]) -> f64 {
+    if mode.is_stochastic() {
+        dot_fast(a, b)
+    } else {
+        dot_seq(a, b)
+    }
+}
+
+/// Rounded GEMM against a transposed weight matrix, with bias:
+/// `out[r·c + k] = fl-model(x_r · w_k + bias[k])` for `rows` input rows of
+/// width `d` and `c` output channels (both matrices row-major).
+///
+/// * `acc_rounded = false` (chop protocol, §2.4): the dot products run
+///   exactly in f64 and the *results* are rounded — one fused
+///   [`RoundPlan::round_slice`] over the whole output.
+/// * `acc_rounded = true` (absorption model): the accumulator is rounded
+///   into the working format every [`ACC_BLOCK`] features, batched across
+///   the `c` channels of a row so each rounding is slice-granular, then
+///   `fl(acc + bias)` as the final rounding — the outputs are already
+///   representable when the row is copied out, so no trailing whole-output
+///   pass runs on this path (the scalar reference's extra identity `fl`
+///   per logit rounds a representable value and changes nothing).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_bias_rounded(
+    plan: &RoundPlan,
+    mode: Rounding,
+    x: &[f64],
+    rows: usize,
+    d: usize,
+    w: &[f64],
+    c: usize,
+    bias: &[f64],
+    out: &mut [f64],
+    acc_rounded: bool,
+    rng: &mut Rng,
+) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(w.len(), c * d);
+    debug_assert_eq!(bias.len(), c);
+    debug_assert_eq!(out.len(), rows * c);
+    if !acc_rounded {
+        for r in 0..rows {
+            let xr = &x[r * d..(r + 1) * d];
+            let orow = &mut out[r * c..(r + 1) * c];
+            for (k, o) in orow.iter_mut().enumerate() {
+                *o = dot_auto(mode, xr, &w[k * d..(k + 1) * d]) + bias[k];
+            }
+        }
+        plan.round_slice(mode, out, rng);
+        return;
+    }
+    let mut acc = vec![0.0f64; c];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        acc.fill(0.0);
+        let mut j = 0;
+        while j < d {
+            let hi = (j + ACC_BLOCK).min(d);
+            for (k, a) in acc.iter_mut().enumerate() {
+                *a += dot_auto(mode, &xr[j..hi], &w[k * d + j..k * d + hi]);
+            }
+            // acc ← fl(acc + block-sum), batched across the c channels.
+            plan.round_slice(mode, &mut acc, rng);
+            j = hi;
+        }
+        for (a, &bk) in acc.iter_mut().zip(bias) {
+            *a += bk;
+        }
+        plan.round_slice(mode, &mut acc, rng);
+        out[r * c..(r + 1) * c].copy_from_slice(&acc);
+    }
+}
+
+/// In-place rounded softmax over `rows` rows of width `c`: takes *rounded*
+/// logits, leaves rounded probabilities. Mirrors the scalar sequence of the
+/// historic gradient path elementwise — `e = fl(exp(z − rowmax))`,
+/// `s = fl(Σe)` (the Σ itself exact in f64, seed order), `p = fl(e/s)` —
+/// with each rounding pass fused across the whole matrix. `sums` is caller
+/// scratch, resized to `rows`.
+pub fn softmax_rows_rounded(
+    plan: &RoundPlan,
+    mode: Rounding,
+    z: &mut [f64],
+    rows: usize,
+    c: usize,
+    sums: &mut Vec<f64>,
+    rng: &mut Rng,
+) {
+    debug_assert_eq!(z.len(), rows * c);
+    for r in 0..rows {
+        let row = &mut z[r * c..(r + 1) * c];
+        let maxz = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        for v in row.iter_mut() {
+            *v = (*v - maxz).exp();
+        }
+    }
+    plan.round_slice(mode, z, rng);
+    sums.clear();
+    for r in 0..rows {
+        let mut s = 0.0;
+        for &e in &z[r * c..(r + 1) * c] {
+            s += e;
+        }
+        sums.push(s);
+    }
+    plan.round_slice(mode, sums, rng);
+    for r in 0..rows {
+        let s = sums[r];
+        for v in z[r * c..(r + 1) * c].iter_mut() {
+            *v /= s;
+        }
+    }
+    plan.round_slice(mode, z, rng);
+}
+
+/// Fused rounded axpy with per-op semantics: `y ← fl(y + fl(α·x))`,
+/// elementwise identical to the scalar `mul`-then-`add` sequence but with
+/// both rounding passes fused slice-wise. `tmp` is caller scratch.
+pub fn axpy_rounded(
+    plan: &RoundPlan,
+    mode: Rounding,
+    alpha: f64,
+    x: &[f64],
+    y: &mut [f64],
+    tmp: &mut Vec<f64>,
+    rng: &mut Rng,
+) {
+    debug_assert_eq!(x.len(), y.len());
+    tmp.clear();
+    tmp.extend(x.iter().map(|&v| alpha * v));
+    plan.round_slice(mode, tmp, rng);
+    for (yi, &t) in y.iter_mut().zip(tmp.iter()) {
+        *yi += t;
+    }
+    plan.round_slice(mode, y, rng);
+}
+
+/// The fused (8b)+(8c) tail of one GD iteration (the engine's step after
+/// the gradient): `m = fl₂(t·ĝ)` steered by `−ĝ`, then `x⁺ = fl₃(x̂ − m)`
+/// steered by `+ĝ` (the §4.2.2 descent steering). Scratch buffers `mbuf`,
+/// `vneg`, `zbuf` are caller-owned (the engine reuses them across steps).
+/// Returns `true` when any coordinate moved. δ₂ and δ₃ draw from their own
+/// streams, preserving the engine's per-step stream separation.
+#[allow(clippy::too_many_arguments)]
+pub fn gd_update(
+    plan: &RoundPlan,
+    mul_mode: Rounding,
+    sub_mode: Rounding,
+    t: f64,
+    x: &mut [f64],
+    ghat: &[f64],
+    mbuf: &mut [f64],
+    vneg: &mut [f64],
+    zbuf: &mut [f64],
+    rng_mul: &mut Rng,
+    rng_sub: &mut Rng,
+) -> bool {
+    debug_assert!(
+        x.len() == ghat.len()
+            && x.len() == mbuf.len()
+            && x.len() == vneg.len()
+            && x.len() == zbuf.len()
+    );
+    // (8b): m = fl₂(t·ĝᵢ). The steering buffer is only consulted by
+    // SignedSrEps; skip the negation pass for every other scheme.
+    for (m, &g) in mbuf.iter_mut().zip(ghat) {
+        *m = t * g;
+    }
+    if matches!(mul_mode, Rounding::SignedSrEps(_)) {
+        for (v, &g) in vneg.iter_mut().zip(ghat) {
+            *v = -g;
+        }
+    }
+    plan.round_slice_with(mul_mode, mbuf, vneg, rng_mul);
+    // (8c): x̂ᵢ⁺ = fl₃(x̂ᵢ − mᵢ), steering v = +ĝᵢ.
+    for ((z, &xi), &m) in zbuf.iter_mut().zip(x.iter()).zip(mbuf.iter()) {
+        *z = xi - m;
+    }
+    plan.round_slice_with(sub_mode, zbuf, ghat, rng_sub);
+    let mut moved = false;
+    for (xi, &z) in x.iter_mut().zip(zbuf.iter()) {
+        if z != *xi {
+            moved = true;
+        }
+        *xi = z;
+    }
+    moved
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::format::FpFormat;
+    use crate::fp::linalg::LpCtx;
+
+    const B8: FpFormat = FpFormat::BINARY8;
+
+    fn rand_vec(n: usize, seed: u64, scale: f64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    #[test]
+    fn dot_variants_agree_to_roundoff() {
+        let a = rand_vec(203, 1, 1.0);
+        let b = rand_vec(203, 2, 1.0);
+        let s = dot_seq(&a, &b);
+        let f = dot_fast(&a, &b);
+        assert!((s - f).abs() <= 1e-12 * s.abs().max(1.0), "{s} vs {f}");
+        assert_eq!(dot_auto(Rounding::RoundNearestEven, &a, &b), s);
+        assert_eq!(dot_auto(Rounding::Sr, &a, &b), f);
+    }
+
+    /// Chop-model GEMM under a deterministic mode is bit-identical to the
+    /// scalar reference sequence `fl(dot_seq + bias)` per output.
+    #[test]
+    fn gemm_chop_deterministic_matches_scalar_reference() {
+        let (rows, d, c) = (13, 37, 5);
+        let x = rand_vec(rows * d, 3, 0.5);
+        let w = rand_vec(c * d, 4, 0.5);
+        let bias = rand_vec(c, 5, 0.1);
+        for mode in [Rounding::RoundNearestEven, Rounding::RoundTowardZero] {
+            for fmt in [B8, FpFormat::BFLOAT16] {
+                let plan = RoundPlan::new(fmt);
+                let mut out = vec![0.0; rows * c];
+                let mut rng = Rng::new(0);
+                gemm_nt_bias_rounded(&plan, mode, &x, rows, d, &w, c, &bias, &mut out, false, &mut rng);
+                let mut ctx = LpCtx::new(fmt, mode, Rng::new(0));
+                for r in 0..rows {
+                    for k in 0..c {
+                        let want =
+                            ctx.fl(dot_seq(&x[r * d..(r + 1) * d], &w[k * d..(k + 1) * d]) + bias[k]);
+                        assert_eq!(out[r * c + k], want, "{mode:?} r={r} k={k}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Absorption-model GEMM under a deterministic mode matches the seed's
+    /// blocked scalar accumulation exactly.
+    #[test]
+    fn gemm_absorption_deterministic_matches_scalar_reference() {
+        let (rows, d, c) = (7, 70, 4);
+        let x = rand_vec(rows * d, 6, 0.5);
+        let w = rand_vec(c * d, 7, 0.5);
+        let bias = rand_vec(c, 8, 0.1);
+        let mode = Rounding::RoundNearestEven;
+        let plan = RoundPlan::new(B8);
+        let mut out = vec![0.0; rows * c];
+        let mut rng = Rng::new(0);
+        gemm_nt_bias_rounded(&plan, mode, &x, rows, d, &w, c, &bias, &mut out, true, &mut rng);
+        let mut ctx = LpCtx::new(B8, mode, Rng::new(0));
+        for r in 0..rows {
+            for k in 0..c {
+                let xr = &x[r * d..(r + 1) * d];
+                let wk = &w[k * d..(k + 1) * d];
+                let mut acc = 0.0;
+                let mut j = 0;
+                while j < d {
+                    let hi = (j + ACC_BLOCK).min(d);
+                    acc = ctx.add(acc, dot_seq(&xr[j..hi], &wk[j..hi]));
+                    j = hi;
+                }
+                let want = ctx.add(acc, bias[k]);
+                assert_eq!(out[r * c + k], want, "r={r} k={k}");
+            }
+        }
+    }
+
+    /// Rounded softmax matches the scalar per-element sequence under RN and
+    /// produces valid, format-resident probability rows under SR.
+    #[test]
+    fn softmax_rows_matches_scalar_and_is_resident() {
+        let (rows, c) = (11, 10);
+        let plan = RoundPlan::new(B8);
+        // Rounded logits as input (the kernel contract).
+        let mut z = rand_vec(rows * c, 9, 2.0);
+        let mut rng = Rng::new(1);
+        plan.round_slice(Rounding::RoundNearestEven, &mut z, &mut rng);
+        // RN: scalar reference comparison.
+        let mut got = z.clone();
+        let mut sums = Vec::new();
+        softmax_rows_rounded(&plan, Rounding::RoundNearestEven, &mut got, rows, c, &mut sums, &mut rng);
+        let mut ctx = LpCtx::new(B8, Rounding::RoundNearestEven, Rng::new(2));
+        for r in 0..rows {
+            let row = &z[r * c..(r + 1) * c];
+            let maxz = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let es: Vec<f64> = row.iter().map(|&v| ctx.fl((v - maxz).exp())).collect();
+            let s = ctx.fl(es.iter().sum::<f64>());
+            for k in 0..c {
+                let want = ctx.fl(es[k] / s);
+                assert_eq!(got[r * c + k], want, "r={r} k={k}");
+            }
+        }
+        // SR: probabilities are representable and rows roughly normalize.
+        let mut sr = z.clone();
+        softmax_rows_rounded(&plan, Rounding::Sr, &mut sr, rows, c, &mut sums, &mut Rng::new(3));
+        for r in 0..rows {
+            let row = &sr[r * c..(r + 1) * c];
+            assert!(row.iter().all(|&p| B8.contains(p) && (0.0..=2.0).contains(&p)));
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 0.8, "row {r} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_reference() {
+        let n = 57;
+        let x = rand_vec(n, 10, 1.0);
+        let y0 = rand_vec(n, 11, 1.0);
+        let plan = RoundPlan::new(B8);
+        let mut y = y0.clone();
+        let mut tmp = Vec::new();
+        axpy_rounded(&plan, Rounding::RoundNearestEven, 0.37, &x, &mut y, &mut tmp, &mut Rng::new(0));
+        let mut ctx = LpCtx::new(B8, Rounding::RoundNearestEven, Rng::new(0));
+        let mut want = y0.clone();
+        ctx.axpy(0.37, &x, &mut want);
+        assert_eq!(y, want);
+        // Stochastic: result stays format-resident.
+        let mut ys = y0.clone();
+        axpy_rounded(&plan, Rounding::Sr, 0.37, &x, &mut ys, &mut tmp, &mut Rng::new(4));
+        assert!(ys.iter().all(|&v| B8.contains(v)));
+    }
+
+    /// `gd_update` under deterministic modes reproduces the unfused
+    /// two-pass update exactly; under stochastic modes the iterate stays
+    /// format-resident and the two streams remain separate.
+    #[test]
+    fn gd_update_matches_unfused_reference() {
+        let n = 41;
+        let plan = RoundPlan::new(B8);
+        let ghat = rand_vec(n, 12, 1.0);
+        let x0: Vec<f64> = {
+            let mut v = rand_vec(n, 13, 1.0);
+            plan.round_slice(Rounding::RoundNearestEven, &mut v, &mut Rng::new(0));
+            v
+        };
+        let t = 0.5;
+        // Deterministic reference.
+        let mode = Rounding::RoundTowardZero;
+        let mut x = x0.clone();
+        let (mut m, mut vneg, mut z) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        gd_update(
+            &plan, mode, mode, t, &mut x, &ghat, &mut m, &mut vneg, &mut z,
+            &mut Rng::new(1), &mut Rng::new(2),
+        );
+        let mut want = x0.clone();
+        let mut rng = Rng::new(9);
+        for (wi, &g) in want.iter_mut().zip(&ghat) {
+            let mi = plan.round(mode, t * g, &mut rng);
+            *wi = plan.round(mode, *wi - mi, &mut rng);
+        }
+        assert_eq!(x, want);
+        // Stochastic: residency.
+        let mut xs = x0.clone();
+        let moved = gd_update(
+            &plan,
+            Rounding::Sr,
+            Rounding::SignedSrEps(0.25),
+            t,
+            &mut xs,
+            &ghat,
+            &mut m,
+            &mut vneg,
+            &mut z,
+            &mut Rng::new(5),
+            &mut Rng::new(6),
+        );
+        assert!(moved);
+        assert!(xs.iter().all(|&v| B8.contains(v)));
+    }
+}

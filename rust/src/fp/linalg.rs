@@ -56,6 +56,24 @@ impl LpCtx {
         self.mode
     }
 
+    /// Split the context into the pieces the fused kernels
+    /// ([`crate::fp::kernels`]) need: the precomputed plan (a `Copy`), the
+    /// scheme, and a mutable borrow of the randomness stream. The plan can
+    /// never desynchronize from the format because both are private and
+    /// fixed at construction.
+    #[inline]
+    pub fn kernel_parts(&mut self) -> (RoundPlan, Rounding, &mut Rng) {
+        (self.plan, self.mode, &mut self.rng)
+    }
+
+    /// Account `n` rounding operations performed on this context's behalf by
+    /// an external fused kernel (keeps [`LpCtx::rounding_ops`] meaningful
+    /// for profiling when the per-scalar entry points are bypassed).
+    #[inline]
+    pub fn add_rounding_ops(&mut self, n: u64) {
+        self.rounding_ops += n;
+    }
+
     /// Round a scalar into the context's format.
     #[inline]
     pub fn fl(&mut self, x: f64) -> f64 {
@@ -159,7 +177,13 @@ impl LpCtx {
         }
     }
 
-    /// Round a whole slice into the format (entrywise storage rounding).
+    /// Round a whole slice into the format (entrywise storage rounding),
+    /// **scalar reference semantics**: one [`LpCtx::fl`] call — and thus one
+    /// full-width uniform per inexact element — in element order. This is
+    /// the historic per-scalar path, retained for the reference gradient
+    /// implementations and the speedup benches; the hot paths use the fused
+    /// [`RoundPlan::round_slice`] kernels (batched few-random-bits stream)
+    /// via [`LpCtx::kernel_parts`] instead.
     pub fn fl_slice(&mut self, xs: &mut [f64]) {
         for x in xs.iter_mut() {
             *x = self.fl(*x);

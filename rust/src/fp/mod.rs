@@ -1,15 +1,19 @@
 //! Low-precision floating-point substrate (systems S1–S4 of DESIGN.md):
 //! formats, rounding schemes (RN / directed / SR / SRε / signed-SRε),
-//! deterministic RNG streams, and rounded linear algebra.
+//! deterministic RNG streams with a bulk/few-random-bits API, rounded
+//! linear algebra, and the blocked rounding-aware kernels that drive the
+//! per-cell hot path (see `docs/performance.md`).
 
 pub mod format;
+pub mod kernels;
 pub mod linalg;
 pub mod rng;
 pub mod round;
 
 pub use format::FpFormat;
 pub use linalg::LpCtx;
-pub use rng::Rng;
+pub use rng::{BitBlock, Rng};
 pub use round::{
     expected_round, phi, round, round_slice, round_slice_with, round_with, RoundPlan, Rounding,
+    DEFAULT_SR_BITS,
 };

@@ -134,6 +134,93 @@ impl Rng {
         }
         p
     }
+
+    // ---- bulk (block-counter) API ----------------------------------------
+    //
+    // The slice rounding kernels consume randomness a *block* at a time: one
+    // `fill_u64s` call refills a word buffer that then serves many elements
+    // (see [`BitBlock`]), instead of one generator step per element. The
+    // block index acts as the counter; within a block the words are the
+    // consecutive raw outputs of the stream, so a filled buffer is a pure
+    // function of `(state, block-counter)` and bulk consumers remain exactly
+    // reproducible.
+
+    /// Fill `out` with consecutive raw 64-bit outputs — the bulk counterpart
+    /// of [`Rng::next_u64`]. Equivalent to calling `next_u64` `out.len()`
+    /// times; kernels call this once per block rather than once per element.
+    #[inline]
+    pub fn fill_u64s(&mut self, out: &mut [u64]) {
+        for w in out.iter_mut() {
+            *w = self.next_u64();
+        }
+    }
+
+    /// Fill `out` with uniforms in `[0, 1)` (53 random bits each) — the bulk
+    /// counterpart of [`Rng::uniform`].
+    #[inline]
+    pub fn fill_uniform(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.uniform();
+        }
+    }
+}
+
+/// Block-buffered random-bit dispenser — the *few-random-bits* stochastic
+/// rounding path (Fitzgibbon & Felix 2025; Xia et al. 2020). One stochastic
+/// rounding decision needs only `k` random bits (the slice kernels default
+/// to `k = 32`), so the dispenser draws up to [`BitBlock::WORDS`] words at a
+/// time through [`Rng::fill_u64s`] and slices them into `k`-bit chunks:
+/// one bulk RNG call amortizes over `WORDS · ⌊64/k⌋` roundings.
+///
+/// Chunks never straddle words — a word's unusable remainder (`64 mod k`
+/// bits) is discarded — so the `i`-th chunk served is a pure function of the
+/// generator state at construction plus `(i, k)`, independent of interleaved
+/// direct draws from the same `Rng` between refills.
+#[derive(Debug)]
+pub struct BitBlock {
+    buf: [u64; Self::WORDS],
+    /// Words drawn per refill (sized to the expected element count).
+    refill: usize,
+    /// Valid words currently in `buf`.
+    len: usize,
+    /// Index of the word being served.
+    word: usize,
+    /// Bits already consumed from the current word.
+    used: u32,
+}
+
+impl BitBlock {
+    /// Maximum words drawn per refill.
+    pub const WORDS: usize = 32;
+
+    /// An empty dispenser sized for about `elems` upcoming `bits`-wide
+    /// chunks: the refill size is the number of words those chunks need,
+    /// clamped to `[1, WORDS]`, so short slices do not over-draw from the
+    /// stream and long slices amortize maximally.
+    pub fn for_elems(elems: usize, bits: u32) -> Self {
+        let per_word = (64 / bits.clamp(1, 64)) as usize;
+        let need = elems.max(1).div_ceil(per_word);
+        Self { buf: [0; Self::WORDS], refill: need.clamp(1, Self::WORDS), len: 0, word: 0, used: 0 }
+    }
+
+    /// Serve `bits` (1..=64) random bits as the low bits of the returned
+    /// word, refilling from `rng` when the buffer runs dry.
+    #[inline]
+    pub fn take(&mut self, bits: u32, rng: &mut Rng) -> u64 {
+        debug_assert!((1..=64).contains(&bits));
+        if self.word >= self.len || self.used + bits > 64 {
+            self.word += 1;
+            self.used = 0;
+            if self.word >= self.len {
+                rng.fill_u64s(&mut self.buf[..self.refill]);
+                self.len = self.refill;
+                self.word = 0;
+            }
+        }
+        let chunk = (self.buf[self.word] >> self.used) & (u64::MAX >> (64 - bits));
+        self.used += bits;
+        chunk
+    }
 }
 
 #[cfg(test)]
@@ -231,6 +318,79 @@ mod tests {
         let var = s2 / n as f64 - mean * mean;
         assert!(mean.abs() < 0.01, "mean={mean}");
         assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn fill_matches_scalar_draws() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let mut words = [0u64; 17];
+        a.fill_u64s(&mut words);
+        for (i, &w) in words.iter().enumerate() {
+            assert_eq!(w, b.next_u64(), "word {i}");
+        }
+        let mut us = [0.0f64; 9];
+        a.fill_uniform(&mut us);
+        for (i, &u) in us.iter().enumerate() {
+            assert_eq!(u, b.uniform(), "uniform {i}");
+        }
+    }
+
+    #[test]
+    fn bit_block_chunks_are_stream_bits() {
+        // 32-bit chunks: chunk 2i is the low half and chunk 2i+1 the high
+        // half of the stream's i-th word.
+        let mut rng = Rng::new(4);
+        let mut blk = BitBlock::for_elems(64, 32);
+        let mut mirror = Rng::new(4);
+        for _ in 0..64 / 2 {
+            let w = mirror.next_u64();
+            assert_eq!(blk.take(32, &mut rng), w & 0xffff_ffff);
+            assert_eq!(blk.take(32, &mut rng), w >> 32);
+        }
+        // Odd widths discard the word remainder but stay reproducible.
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let mut b1 = BitBlock::for_elems(100, 20);
+        let mut b2 = BitBlock::for_elems(100, 20);
+        for i in 0..100 {
+            let c1 = b1.take(20, &mut r1);
+            assert!(c1 < 1 << 20);
+            assert_eq!(c1, b2.take(20, &mut r2), "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn bit_block_short_slices_draw_few_words() {
+        // A 2-element 32-bit consumer must draw exactly one word.
+        let mut rng = Rng::new(6);
+        let mut blk = BitBlock::for_elems(2, 32);
+        let _ = blk.take(32, &mut rng);
+        let _ = blk.take(32, &mut rng);
+        let mut mirror = Rng::new(6);
+        let _ = mirror.next_u64();
+        // The parent streams are now aligned: next outputs agree.
+        assert_eq!(rng.next_u64(), mirror.next_u64());
+        // Full-width chunks occupy one word each.
+        let mut rng = Rng::new(7);
+        let mut blk = BitBlock::for_elems(3, 64);
+        let mut mirror = Rng::new(7);
+        for _ in 0..3 {
+            assert_eq!(blk.take(64, &mut rng), mirror.next_u64());
+        }
+    }
+
+    #[test]
+    fn bit_block_mean_is_uniform() {
+        let mut rng = Rng::new(8);
+        let mut blk = BitBlock::for_elems(1 << 16, 16);
+        let n = 1 << 16;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += blk.take(16, &mut rng) as f64 / (1u64 << 16) as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
     }
 
     #[test]

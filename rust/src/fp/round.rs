@@ -12,12 +12,36 @@
 //!   absolute error has the sign of `−v` (eq. (4)). In GD, `v` is the
 //!   computed gradient entry, forcing the bias into a descent direction.
 //!
-//! All stochastic schemes consume exactly one uniform sample per inexact
-//! rounding and none when `x ∈ F` (so representable values are fixed points
-//! of every scheme, as in `chop`/`roundit`).
+//! # Randomness contract (per entry point)
+//!
+//! The **scalar** entry points ([`round`], [`round_with`],
+//! [`RoundPlan::round`], [`RoundPlan::round_with`]) consume exactly one
+//! 53-bit uniform per inexact rounding and none when `x ∈ F` — the historic
+//! reference semantics (as in `chop`/`roundit`), kept bit-stable for
+//! reproducibility of seeded experiments.
+//!
+//! The **slice** kernels ([`RoundPlan::round_slice`],
+//! [`RoundPlan::round_slice_with`]) instead drive the stochastic schemes
+//! from a block-buffered *few-random-bits* source ([`BitBlock`]):
+//! [`RoundPlan::sr_bits`] random bits per inexact element (default
+//! [`DEFAULT_SR_BITS`] = 32), drawn in bulk one block at a time. This makes
+//! one RNG call per chunk instead of per element and quantizes the rounding
+//! probability to multiples of `2^{-sr_bits}` — an expected-value
+//! perturbation below `2^{-32}` of one gap at the default, far inside the
+//! tolerance of every distributional test and invisible next to the Monte
+//! Carlo noise of the experiments. Consequences:
+//!
+//! * deterministic modes (RN/RD/RU/RZ) consume no randomness anywhere, so
+//!   scalar and slice kernels are **bit-identical** — the engine's
+//!   deterministic trajectories are unchanged by kernel choice;
+//! * stochastic modes produce the *same law* but a **different stream** than
+//!   the scalar path (and re-seeding `sr_bits` re-streams again); slice
+//!   results remain a pure function of `(plan, inputs, rng state)`.
+//!
+//! See `docs/performance.md` for the full determinism contract.
 
 use super::format::FpFormat;
-use super::rng::Rng;
+use super::rng::{BitBlock, Rng};
 
 /// A rounding scheme. `SignedSrEps` requires a steering value `v` supplied
 /// per-element through [`round_with`]; the plain [`round`] entry point uses
@@ -87,13 +111,24 @@ pub fn phi(y: f64) -> f64 {
     y.clamp(0.0, 1.0)
 }
 
-/// Saturate an out-of-range magnitude to `±x_max` (chop-style: the
-/// stochastic schemes never produce ±∞; deterministic RN overflows to ±∞
-/// past the IEEE overflow threshold, handled in `round_det`).
+/// Saturate an out-of-range magnitude to `±x_max` (chop-style). Covers every
+/// out-of-range shape the stochastic schemes can meet: finite `|x| > x_max`
+/// clamps to `±x_max`, ±∞ inputs clamp to `±x_max` as well (the stochastic
+/// schemes never produce ±∞), and NaN passes through (`f64::clamp` keeps
+/// NaN). Deterministic RN instead overflows to ±∞ past the IEEE overflow
+/// threshold `x_max + ulp/2`, handled in [`round_nearest_even`] — saturation
+/// is *not* applied there.
 #[inline]
 fn saturate(fmt: &FpFormat, x: f64) -> f64 {
     x.clamp(-fmt.x_max(), fmt.x_max())
 }
+
+/// Default random bits consumed per stochastic slice rounding (the
+/// "few-random-bits" knob; see [`RoundPlan::with_sr_bits`]). 32 bits packs
+/// two roundings per RNG word while keeping the probability quantization
+/// (`2^{-32}` of one gap) far below every statistical tolerance in the
+/// test-suite and the paper's figures.
+pub const DEFAULT_SR_BITS: u32 = 32;
 
 /// Precomputed per-[`FpFormat`] rounding constants — the "format table".
 ///
@@ -123,10 +158,15 @@ pub struct RoundPlan {
     half: u64,
     /// `2^{−shift}` exactly: converts the tail to a fraction of the gap.
     inv_gap: f64,
+    /// Random bits per stochastic slice rounding (the few-random-bits knob).
+    sr_bits: u32,
+    /// `2^{−sr_bits}` exactly: converts a bit chunk to a uniform in `[0,1)`.
+    inv_sr: f64,
 }
 
 impl RoundPlan {
-    /// Precompute the rounding constants for `fmt`.
+    /// Precompute the rounding constants for `fmt` with the default
+    /// [`DEFAULT_SR_BITS`] few-random-bits setting.
     #[inline]
     pub fn new(fmt: FpFormat) -> Self {
         let shift = 53 - fmt.sig_bits;
@@ -136,7 +176,30 @@ impl RoundPlan {
             mask: (1u64 << shift) - 1,
             half: if shift == 0 { 0 } else { 1u64 << (shift - 1) },
             inv_gap: inv_pow2(shift),
+            sr_bits: DEFAULT_SR_BITS,
+            inv_sr: inv_pow2(DEFAULT_SR_BITS),
         }
+    }
+
+    /// The same plan with `bits` random bits per stochastic slice rounding
+    /// (clamped to `[1, 53]` so the chunk-to-uniform conversion stays exact).
+    /// Lower settings stretch the random stream further at the price of a
+    /// coarser rounding probability (quantized to multiples of `2^{-bits}`,
+    /// i.e. an expected-value perturbation of at most `2^{-bits}` of one
+    /// gap). Deterministic modes are unaffected. The scalar entry points
+    /// always use the full-width reference draw regardless of this knob.
+    #[inline]
+    pub fn with_sr_bits(mut self, bits: u32) -> Self {
+        let b = bits.clamp(1, 53);
+        self.sr_bits = b;
+        self.inv_sr = inv_pow2(b);
+        self
+    }
+
+    /// Random bits consumed per stochastic slice rounding.
+    #[inline]
+    pub fn sr_bits(&self) -> u32 {
+        self.sr_bits
     }
 
     /// Hot path: rounding a value whose magnitude is *target-normal* and in
@@ -355,62 +418,46 @@ pub fn expected_round(fmt: &FpFormat, mode: Rounding, x: f64, v: f64) -> f64 {
 
 impl RoundPlan {
     /// Round every entry of a slice in place (plain `v = x` steering).
-    /// Specialized per scheme so the mode dispatch and the format constants
-    /// are hoisted out of the element loop (≈2× over calling [`round`] per
-    /// element for the stochastic schemes; see `benches/rounding.rs`).
+    ///
+    /// Deterministic modes run a fused bit-twiddled loop that is
+    /// **bit-identical** to the scalar path; stochastic modes run the fused
+    /// loop on the block-buffered few-random-bits source (see the module
+    /// docs for the randomness contract). Either way the mode dispatch and
+    /// format constants are hoisted out of the element loop.
     pub fn round_slice(&self, mode: Rounding, xs: &mut [f64], rng: &mut Rng) {
-        let (mask, inv, shift) = (self.mask, self.inv_gap, self.shift);
-        let (e_min, e_max) = (self.fmt.e_min, self.fmt.e_max);
-        macro_rules! specialized {
-            (|$tail:ident, $frac:ident, $neg:ident, $lo_mag:ident| $p_down:expr) => {
-                for x in xs.iter_mut() {
-                    let bits = x.to_bits();
-                    let mag = bits & 0x7fff_ffff_ffff_ffff;
-                    let raw_e = (mag >> 52) as i32;
-                    let e = raw_e - 1023;
-                    if raw_e == 0 || raw_e == 0x7ff || e < e_min || e >= e_max {
-                        if *x != 0.0 && !x.is_nan() {
-                            *x = round_slow(&self.fmt, mode, *x, *x, rng); // rare slow path
-                        }
-                        continue;
-                    }
-                    let $tail = mag & mask;
-                    if $tail == 0 {
-                        continue; // representable
-                    }
-                    let $neg = bits >> 63 == 1;
-                    let $lo_mag = mag & !mask;
-                    let hi_mag = $lo_mag + (mask + 1);
-                    let frac_mag = $tail as f64 * inv;
-                    let $frac = if $neg { 1.0 - frac_mag } else { frac_mag };
-                    let down: bool = $p_down;
-                    // down on the VALUE scale: pick magnitude-ceil when negative.
-                    let out_mag = if down != $neg { $lo_mag } else { hi_mag };
-                    *x = f64::from_bits(out_mag | (bits & (1u64 << 63)));
-                }
-            };
-        }
         match mode {
+            Rounding::RoundNearestEven
+            | Rounding::RoundDown
+            | Rounding::RoundUp
+            | Rounding::RoundTowardZero => self.round_slice_det(mode, xs, rng),
             Rounding::Sr => {
-                specialized!(|tail, frac, neg, lo_mag| rng.uniform() < 1.0 - frac)
+                self.round_slice_stoch(mode, xs, None, |_, _, _| 0.0, rng);
             }
-            Rounding::SrEps(eps) => specialized!(|tail, frac, neg, lo_mag| {
-                let sx = if neg { -1.0 } else { 1.0 };
-                rng.uniform() < phi(1.0 - frac - sx * eps)
-            }),
-            Rounding::RoundNearestEven => specialized!(|tail, frac, neg, lo_mag| {
-                let half = self.half;
-                let _ = frac;
-                if tail != half {
-                    (tail < half) ^ neg
-                } else {
-                    ((lo_mag >> shift) & 1 == 0) ^ neg
-                }
-            }),
-            _ => {
-                for x in xs.iter_mut() {
-                    *x = self.round(mode, *x, rng);
-                }
+            Rounding::SrEps(eps) => {
+                self.round_slice_stoch(
+                    mode,
+                    xs,
+                    None,
+                    |frac, neg, _| {
+                        let sx = if neg { -1.0 } else { 1.0 };
+                        phi(1.0 - frac - sx * eps)
+                    },
+                    rng,
+                );
+            }
+            Rounding::SignedSrEps(eps) => {
+                // Unsteered: v = x, so sign(v) = sign(x) (x ≠ 0 on the fused
+                // path — a zero entry is representable and never rounds).
+                self.round_slice_stoch(
+                    mode,
+                    xs,
+                    None,
+                    |frac, neg, _| {
+                        let sv = if neg { -1.0 } else { 1.0 };
+                        phi(1.0 - frac + sv * eps)
+                    },
+                    rng,
+                );
             }
         }
     }
@@ -419,26 +466,47 @@ impl RoundPlan {
     ///
     /// Only `SignedSrEps` reads the steering value; every other mode
     /// delegates to the unsteered [`RoundPlan::round_slice`] kernel, which
-    /// is exactly equivalent for them. The `SignedSrEps` loop is fused the
-    /// same way (constants and dispatch hoisted out of the element loop) —
-    /// this is the (8b)/(8c) hot path of the GD engine, where the steering
-    /// vector is the computed gradient.
+    /// is exactly equivalent for them. This is the (8b)/(8c) hot path of
+    /// the GD engine, where the steering vector is the computed gradient.
     pub fn round_slice_with(&self, mode: Rounding, xs: &mut [f64], vs: &[f64], rng: &mut Rng) {
         debug_assert_eq!(xs.len(), vs.len());
         let eps = match mode {
             Rounding::SignedSrEps(e) => e,
             _ => return self.round_slice(mode, xs, rng),
         };
-        let (mask, inv) = (self.mask, self.inv_gap);
+        self.round_slice_stoch(
+            mode,
+            xs,
+            Some(vs),
+            |frac, _, v| {
+                let sv = if v == 0.0 { 0.0 } else { v.signum() };
+                phi(1.0 - frac + sv * eps)
+            },
+            rng,
+        );
+    }
+
+    /// Fused deterministic slice kernel (no randomness): bit-identical to
+    /// the scalar path element-by-element.
+    fn round_slice_det(&self, mode: Rounding, xs: &mut [f64], rng: &mut Rng) {
+        let (mask, shift, half) = (self.mask, self.shift, self.half);
         let (e_min, e_max) = (self.fmt.e_min, self.fmt.e_max);
-        for (x, &v) in xs.iter_mut().zip(vs.iter()) {
+        // Value-scale floor decision per sign for the directed modes (RN
+        // overrides per element below).
+        let (down_pos, down_neg) = match mode {
+            Rounding::RoundDown => (true, true),
+            Rounding::RoundUp => (false, false),
+            _ => (true, false), // RZ: toward zero
+        };
+        let rn = mode == Rounding::RoundNearestEven;
+        for x in xs.iter_mut() {
             let bits = x.to_bits();
             let mag = bits & 0x7fff_ffff_ffff_ffff;
             let raw_e = (mag >> 52) as i32;
             let e = raw_e - 1023;
             if raw_e == 0 || raw_e == 0x7ff || e < e_min || e >= e_max {
                 if *x != 0.0 && !x.is_nan() {
-                    *x = round_slow(&self.fmt, mode, *x, v, rng); // rare slow path
+                    *x = round_slow(&self.fmt, mode, *x, *x, rng); // rare slow path
                 }
                 continue;
             }
@@ -448,12 +516,72 @@ impl RoundPlan {
             }
             let neg = bits >> 63 == 1;
             let lo_mag = mag & !mask;
-            let hi_mag = lo_mag + (mask + 1);
+            let down = if rn {
+                if tail != half {
+                    (tail < half) ^ neg
+                } else {
+                    ((lo_mag >> shift) & 1 == 0) ^ neg
+                }
+            } else if neg {
+                down_neg
+            } else {
+                down_pos
+            };
+            // down on the VALUE scale: pick magnitude-ceil when negative.
+            let out_mag = if down != neg { lo_mag } else { lo_mag + (mask + 1) };
+            *x = f64::from_bits(out_mag | (bits & (1u64 << 63)));
+        }
+    }
+
+    /// Fused stochastic slice kernel over the few-random-bits source.
+    /// `p_down(frac, neg, v)` returns the value-scale round-down
+    /// probability; for `Sr` the caller passes a dummy closure and the
+    /// kernel uses `1 − frac` directly (avoids re-deriving it). Slow-path
+    /// elements (subnormal / overflow / non-finite) fall back to
+    /// [`round_slow`], which draws its own full-width uniform from `rng`;
+    /// the result remains a pure function of the stream state.
+    fn round_slice_stoch<F: Fn(f64, bool, f64) -> f64>(
+        &self,
+        mode: Rounding,
+        xs: &mut [f64],
+        vs: Option<&[f64]>,
+        p_down: F,
+        rng: &mut Rng,
+    ) {
+        debug_assert!(mode.is_stochastic());
+        let (mask, inv) = (self.mask, self.inv_gap);
+        let (e_min, e_max) = (self.fmt.e_min, self.fmt.e_max);
+        let (k, inv_sr) = (self.sr_bits, self.inv_sr);
+        let plain_sr = matches!(mode, Rounding::Sr);
+        let mut bsrc = BitBlock::for_elems(xs.len(), k);
+        for (i, x) in xs.iter_mut().enumerate() {
+            let bits = x.to_bits();
+            let mag = bits & 0x7fff_ffff_ffff_ffff;
+            let raw_e = (mag >> 52) as i32;
+            let e = raw_e - 1023;
+            if raw_e == 0 || raw_e == 0x7ff || e < e_min || e >= e_max {
+                if *x != 0.0 && !x.is_nan() {
+                    let v = vs.map_or(*x, |vs| vs[i]);
+                    *x = round_slow(&self.fmt, mode, *x, v, rng); // rare slow path
+                }
+                continue;
+            }
+            let tail = mag & mask;
+            if tail == 0 {
+                continue; // representable
+            }
+            let neg = bits >> 63 == 1;
             let frac_mag = tail as f64 * inv;
             let frac = if neg { 1.0 - frac_mag } else { frac_mag };
-            let sv = if v == 0.0 { 0.0 } else { v.signum() };
-            let down = rng.uniform() < phi(1.0 - frac + sv * eps);
-            let out_mag = if down != neg { lo_mag } else { hi_mag };
+            let p = if plain_sr {
+                1.0 - frac
+            } else {
+                p_down(frac, neg, vs.map_or(*x, |vs| vs[i]))
+            };
+            let r = bsrc.take(k, rng) as f64 * inv_sr;
+            let down = r < p;
+            let lo_mag = mag & !mask;
+            let out_mag = if down != neg { lo_mag } else { lo_mag + (mask + 1) };
             *x = f64::from_bits(out_mag | (bits & (1u64 << 63)));
         }
     }
@@ -661,11 +789,29 @@ mod tests {
         }
     }
 
-    /// The plan-based scalar and fused slice kernels are bit-identical to
-    /// the scalar reference path, drawing the same number of uniforms in
-    /// the same order (the engine's determinism contract rests on this).
+    fn test_inputs(fmt: &FpFormat, n: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut gen = Rng::new(77);
+        // Mix of normals, subnormals, representables, overflow, specials.
+        let mut xs: Vec<f64> = (0..n).map(|_| gen.normal() * 1e3).collect();
+        xs.extend([
+            0.0,
+            1.0,
+            -1.25,
+            fmt.x_min() * 0.3,
+            -fmt.x_min_sub() * 0.5,
+            fmt.x_max() * 1.5,
+            f64::NAN,
+            f64::INFINITY,
+        ]);
+        let vs: Vec<f64> = (0..xs.len()).map(|_| gen.normal()).collect();
+        (xs, vs)
+    }
+
+    /// The plan-based scalar path is bit-identical to the scalar reference
+    /// path for *every* mode, drawing the same number of uniforms in the
+    /// same order (the historic reference semantics).
     #[test]
-    fn round_plan_matches_scalar_reference() {
+    fn round_plan_scalar_matches_reference() {
         let modes = [
             Rounding::RoundNearestEven,
             Rounding::RoundDown,
@@ -677,22 +823,8 @@ mod tests {
         ];
         for fmt in [FpFormat::BINARY8, FpFormat::BFLOAT16, FpFormat::BINARY64] {
             let plan = RoundPlan::new(fmt);
-            let mut gen = Rng::new(77);
-            // Mix of normals, subnormals, representables, overflow, specials.
-            let mut xs: Vec<f64> = (0..200).map(|_| gen.normal() * 1e3).collect();
-            xs.extend([
-                0.0,
-                1.0,
-                -1.25,
-                fmt.x_min() * 0.3,
-                -fmt.x_min_sub() * 0.5,
-                fmt.x_max() * 1.5,
-                f64::NAN,
-                f64::INFINITY,
-            ]);
-            let vs: Vec<f64> = (0..xs.len()).map(|_| gen.normal()).collect();
+            let (xs, vs) = test_inputs(&fmt, 200);
             for mode in modes {
-                // Scalar reference vs plan scalar, lock-stepped RNG clones.
                 let mut ra = Rng::new(5);
                 let mut rb = Rng::new(5);
                 for (&x, &v) in xs.iter().zip(&vs) {
@@ -705,13 +837,30 @@ mod tests {
                     );
                 }
                 assert_eq!(ra.next_u64(), rb.next_u64(), "RNG streams diverged");
-                // Fused steered slice vs per-element reference.
+            }
+        }
+    }
+
+    /// Deterministic-mode slice kernels are bit-identical to the scalar path
+    /// (the engine's deterministic trajectory contract rests on this).
+    #[test]
+    fn slice_deterministic_matches_scalar() {
+        let modes = [
+            Rounding::RoundNearestEven,
+            Rounding::RoundDown,
+            Rounding::RoundUp,
+            Rounding::RoundTowardZero,
+        ];
+        for fmt in [FpFormat::BINARY8, FpFormat::BFLOAT16, FpFormat::BINARY64] {
+            let plan = RoundPlan::new(fmt);
+            let (xs, vs) = test_inputs(&fmt, 300);
+            for mode in modes {
+                let mut rng = Rng::new(9);
                 let mut buf = xs.clone();
-                let mut rc = Rng::new(9);
-                plan.round_slice_with(mode, &mut buf, &vs, &mut rc);
+                plan.round_slice_with(mode, &mut buf, &vs, &mut rng);
                 let mut rd = Rng::new(9);
-                for (i, (&x, &v)) in xs.iter().zip(&vs).enumerate() {
-                    let want = round_with(&fmt, mode, x, v, &mut rd);
+                for (i, &x) in xs.iter().enumerate() {
+                    let want = round_with(&fmt, mode, x, vs[i], &mut rd);
                     assert!(
                         want == buf[i] || (want.is_nan() && buf[i].is_nan()),
                         "slice {mode:?} {} i={i} x={x}: {want} vs {}",
@@ -719,8 +868,97 @@ mod tests {
                         buf[i]
                     );
                 }
-                assert_eq!(rc.next_u64(), rd.next_u64(), "slice RNG diverged");
+                // Deterministic modes consume no randomness at all.
+                assert_eq!(rng.next_u64(), rd.next_u64(), "det mode consumed randomness");
+                // And the unsteered kernel agrees.
+                let mut buf2 = xs.clone();
+                plan.round_slice(mode, &mut buf2, &mut Rng::new(1));
+                for (a, b) in buf.iter().zip(&buf2) {
+                    assert!(a == b || (a.is_nan() && b.is_nan()));
+                }
             }
+        }
+    }
+
+    /// Stochastic slice kernels: outputs are always saturated neighbors of
+    /// the input, the kernel is a pure function of the RNG state
+    /// (reproducible), and distinct seeds give distinct streams.
+    #[test]
+    fn slice_stochastic_neighbors_and_reproducible() {
+        let modes = [Rounding::Sr, Rounding::SrEps(0.3), Rounding::SignedSrEps(0.3)];
+        for fmt in [FpFormat::BINARY8, FpFormat::BFLOAT16] {
+            let plan = RoundPlan::new(fmt);
+            let (xs, vs) = test_inputs(&fmt, 400);
+            for mode in modes {
+                let mut out1 = xs.clone();
+                plan.round_slice_with(mode, &mut out1, &vs, &mut Rng::new(3));
+                let mut out2 = xs.clone();
+                plan.round_slice_with(mode, &mut out2, &vs, &mut Rng::new(3));
+                let mut out3 = xs.clone();
+                plan.round_slice_with(mode, &mut out3, &vs, &mut Rng::new(4));
+                let mut any_diff = false;
+                for i in 0..xs.len() {
+                    let (a, b) = (out1[i], out2[i]);
+                    assert!(a == b || (a.is_nan() && b.is_nan()), "{mode:?} not reproducible");
+                    any_diff |= out1[i] != out3[i];
+                    let x = xs[i];
+                    if x.is_nan() {
+                        assert!(a.is_nan());
+                        continue;
+                    }
+                    let (lo, hi) = fmt.floor_ceil(x);
+                    let (slo, shi) = (saturate(&fmt, lo), saturate(&fmt, hi));
+                    assert!(
+                        a == lo || a == hi || a == slo || a == shi,
+                        "{mode:?} {}: {a} not a neighbor of {x}",
+                        fmt.name()
+                    );
+                }
+                assert!(any_diff, "{mode:?}: distinct seeds produced identical streams");
+            }
+        }
+    }
+
+    /// The few-random-bits slice kernel stays unbiased for SR (and keeps the
+    /// eq. (3) bias for SRε) at both the default and an aggressively small
+    /// bit width — the probability quantization of `2^{-bits}` gaps is far
+    /// below the statistical tolerance.
+    #[test]
+    fn slice_few_bits_sr_unbiased() {
+        for bits in [DEFAULT_SR_BITS, 8] {
+            let plan = RoundPlan::new(B8).with_sr_bits(bits);
+            let mut rng = Rng::new(11);
+            for &x in &[1.1, -2.6, 0.3] {
+                let n = 40_000usize;
+                let mut buf = vec![x; n];
+                plan.round_slice(Rounding::Sr, &mut buf, &mut rng);
+                let mean = buf.iter().sum::<f64>() / n as f64;
+                let (lo, hi) = B8.floor_ceil(x);
+                let gap = hi - lo;
+                // Statistical tolerance plus the quantization allowance.
+                let tol = 4.0 * gap / (n as f64).sqrt() + gap * inv_pow2(bits);
+                assert!((mean - x).abs() < tol, "bits={bits} x={x} mean={mean} tol={tol}");
+            }
+        }
+    }
+
+    /// Steered signed-SRε via the slice kernel keeps the Definition-3 law:
+    /// the empirical mean matches the closed form per steering sign.
+    #[test]
+    fn slice_signed_sr_eps_matches_expectation() {
+        let eps = 0.25;
+        let plan = RoundPlan::new(B8);
+        let mut rng = Rng::new(21);
+        for &(x, v) in &[(1.1, 1.0), (1.1, -1.0), (-1.1, 1.0), (-1.1, -1.0)] {
+            let n = 40_000usize;
+            let mut buf = vec![x; n];
+            let vs = vec![v; n];
+            plan.round_slice_with(Rounding::SignedSrEps(eps), &mut buf, &vs, &mut rng);
+            let mean = buf.iter().sum::<f64>() / n as f64;
+            let want = expected_round(&B8, Rounding::SignedSrEps(eps), x, v);
+            let (lo, hi) = B8.floor_ceil(x);
+            let tol = 4.0 * (hi - lo) / (n as f64).sqrt();
+            assert!((mean - want).abs() < tol, "x={x} v={v}: {mean} vs {want}");
         }
     }
 

@@ -179,45 +179,39 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
 
     /// One full GD iteration (8a)+(8b)+(8c). Returns true if the iterate moved.
     ///
-    /// Steps (8b) and (8c) run as *fused slice roundings* through the
-    /// precomputed [`crate::fp::round::RoundPlan`], hoisting the mode and
-    /// format dispatch out of the per-element loop. Because δ₂ and δ₃ draw
-    /// from separate forked streams, rounding all of (8b) before all of
-    /// (8c) consumes each stream in exactly the element order the
-    /// historical per-element loop did — trajectories are bit-identical.
+    /// Steps (8b) and (8c) run through the fused
+    /// [`crate::fp::kernels::gd_update`] kernel: slice roundings over a
+    /// precomputed [`crate::fp::round::RoundPlan`] with mode/format dispatch
+    /// hoisted out of the element loop, and the stochastic draws batched
+    /// through the few-random-bits block source. δ₂ and δ₃ draw from their
+    /// own forked streams as before; deterministic modes consume no
+    /// randomness, so their trajectories are bit-identical to the historic
+    /// per-element path (see `docs/performance.md`).
     pub fn step(&mut self) -> bool {
         self.eval_gradient();
-        let t = self.cfg.t;
         // One plan derivation per step (not per element); reading `cfg.fmt`
         // here keeps the pre-refactor semantics where a caller may adjust
         // the config between steps.
         let plan = crate::fp::round::RoundPlan::new(self.cfg.fmt);
-        let n = self.x.len();
-        // (8b): m = fl₂(t·ĝᵢ), steering v = −ĝᵢ (descent bias). The
-        // steering buffer is only consulted by SignedSrEps; skip the
-        // negation pass for every other scheme.
-        for i in 0..n {
-            self.mbuf[i] = t * self.ghat[i];
-        }
-        if matches!(self.cfg.schemes.mul, Rounding::SignedSrEps(_)) {
-            for i in 0..n {
-                self.vneg[i] = -self.ghat[i];
-            }
-        }
-        plan.round_slice_with(self.cfg.schemes.mul, &mut self.mbuf, &self.vneg, &mut self.rng_mul);
-        // (8c): x̂ᵢ⁺ = fl₃(x̂ᵢ − m), steering v = +ĝᵢ (descent bias).
-        for i in 0..n {
-            self.zbuf[i] = self.x[i] - self.mbuf[i];
-        }
-        plan.round_slice_with(self.cfg.schemes.sub, &mut self.zbuf, &self.ghat, &mut self.rng_sub);
-        let mut moved = false;
-        for i in 0..n {
-            if self.zbuf[i] != self.x[i] {
-                moved = true;
-            }
-            self.x[i] = self.zbuf[i];
-        }
-        moved
+        crate::fp::kernels::gd_update(
+            &plan,
+            self.cfg.schemes.mul,
+            self.cfg.schemes.sub,
+            self.cfg.t,
+            &mut self.x,
+            &self.ghat,
+            &mut self.mbuf,
+            &mut self.vneg,
+            &mut self.zbuf,
+            &mut self.rng_mul,
+            &mut self.rng_sub,
+        )
+    }
+
+    /// Rounding operations performed so far inside the (8a) gradient context
+    /// (profiling; powers the rounds/sec report of `train_mlr_e2e`).
+    pub fn grad_rounding_ops(&self) -> u64 {
+        self.ctx_grad.rounding_ops
     }
 
     /// Run the configured number of steps, recording a [`Trace`].

@@ -28,6 +28,11 @@
 //! rounding-scheme ↔ paper mapping and the coordinator architecture.
 
 #![warn(missing_docs)]
+// Numeric-kernel style allowances for the clippy gate in scripts/verify.sh:
+// index-based loops over several parallel buffers are the clearest way to
+// write the paper's blocked linear algebra, and the fused kernel entry
+// points legitimately take many scalars. Correctness lints stay enforced.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod coordinator;
 pub mod data;

@@ -4,9 +4,19 @@
 //! Parameters are the flattened `x = [W (C×D row-major) ; b (C)]`,
 //! n = C·(D+1). The objective is convex [2], making this the paper's main
 //! convex learning benchmark.
+//!
+//! The rounded gradient evaluators run on the fused kernel layer
+//! ([`crate::fp::kernels`]): logits through the rounded GEMM, softmax
+//! through the fused row kernel, and the gradient accumulators through the
+//! fused slice rounders — identical values to the historic per-scalar path
+//! under deterministic modes, same law (re-streamed randomness) under the
+//! stochastic ones. The per-scalar implementation is retained as
+//! [`Mlr::gradient_reference`] for the equivalence tests and the speedup
+//! bench (`benches/gd_step.rs`).
 
 use super::Problem;
 use crate::data::Dataset;
+use crate::fp::kernels::{self, ACC_BLOCK};
 use crate::fp::linalg::LpCtx;
 
 /// Multinomial logistic regression over a dense dataset (paper §5.2).
@@ -76,19 +86,31 @@ impl Mlr {
         wrong as f64 / test.len() as f64
     }
 
-    /// Shared gradient kernel. With a rounding context, this models the
+    /// The retained **scalar-reference** gradient kernel — the pre-kernel
+    /// per-scalar implementation, byte-for-byte the historic rounding
+    /// sequence (one [`LpCtx::fl`] per inexact result, one uniform per
+    /// stochastic rounding). With a rounding context this models the
     /// paper's low-precision gradient evaluation (8a): forward logits,
     /// softmax ops, and — crucially — the *accumulations* are performed in
     /// the working format. Accumulating the per-sample contributions in
     /// binary8 is what loses gradient information under RN ("absorption":
     /// once the running sum S satisfies `term < u·S/2` the term vanishes;
     /// Gupta et al. 2015, paper §1/§5.2); SR preserves the terms in
-    /// expectation. We simulate the accumulation at block granularity
+    /// expectation. The accumulation is simulated at block granularity
     /// [`ACC_BLOCK`] (round the accumulator every B adds): for N ≫ B/u the
     /// absorption threshold is identical to per-op accumulation while
     /// costing B× fewer rounding calls — see DESIGN.md §8.
-    fn gradient_impl(&self, x: &[f64], out: &mut [f64], ctx: Option<&mut LpCtx>, lp_acc: bool) {
-        const ACC_BLOCK: usize = 32;
+    ///
+    /// Deterministic modes produce bit-identical gradients through this and
+    /// the kernel path (asserted by the tests); the benches measure the
+    /// kernel speedup against this method.
+    pub fn gradient_reference(&self, x: &[f64], ctx: &mut LpCtx, out: &mut [f64], lp_acc: bool) {
+        self.gradient_scalar(x, out, Some(ctx), lp_acc);
+    }
+
+    /// Scalar path shared by the exact evaluator (`ctx = None`) and
+    /// [`Mlr::gradient_reference`].
+    fn gradient_scalar(&self, x: &[f64], out: &mut [f64], ctx: Option<&mut LpCtx>, lp_acc: bool) {
         let (c, d, n) = (self.n_classes, self.d, self.data.len());
         let w = self.w(x);
         let b = self.b(x);
@@ -114,8 +136,7 @@ impl Mlr {
                         let mut j = 0;
                         while j < d {
                             let hi = (j + ACC_BLOCK).min(d);
-                            let part: f64 =
-                                (j..hi).map(|t| wrow[t] * row[t]).sum();
+                            let part: f64 = (j..hi).map(|t| wrow[t] * row[t]).sum();
                             acc = cx.add(acc, part);
                             j = hi;
                         }
@@ -167,6 +188,65 @@ impl Mlr {
             }
         }
     }
+
+    /// The fused **kernel** gradient path: logits through the rounded GEMM,
+    /// softmax through the fused row kernel, gradient accumulators through
+    /// the fused slice rounders, processed in [`ACC_BLOCK`]-sample blocks
+    /// (the absorption rounding boundary of the scalar path). Same f64
+    /// intermediates and rounding steps as [`Mlr::gradient_scalar`]
+    /// elementwise — bit-identical under deterministic modes, same law with
+    /// batched randomness under the stochastic ones.
+    fn gradient_kernel(&self, x: &[f64], out: &mut [f64], cx: &mut LpCtx, lp_acc: bool) {
+        let (c, d, n) = (self.n_classes, self.d, self.data.len());
+        let w = self.w(x);
+        let b = self.b(x);
+        out.fill(0.0);
+        let (gw, gb) = out.split_at_mut(c * d);
+        let inv_n = 1.0 / n as f64;
+        let mut probs = vec![0.0; ACC_BLOCK * c];
+        let mut sums: Vec<f64> = Vec::with_capacity(ACC_BLOCK);
+        {
+            let (plan, mode, rng) = cx.kernel_parts();
+            let mut i0 = 0;
+            while i0 < n {
+                let i1 = (i0 + ACC_BLOCK).min(n);
+                let rows = i1 - i0;
+                let xblk = &self.data.x[i0 * d..i1 * d];
+                let z = &mut probs[..rows * c];
+                kernels::gemm_nt_bias_rounded(&plan, mode, xblk, rows, d, w, c, b, z, lp_acc, rng);
+                kernels::softmax_rows_rounded(&plan, mode, z, rows, c, &mut sums, rng);
+                // Gradient accumulation in exact f64, sample order preserved.
+                for r in 0..rows {
+                    let i = i0 + r;
+                    let row = self.data.row(i);
+                    let y = self.data.labels[i] as usize;
+                    for k in 0..c {
+                        let diff = (z[r * c + k] - if k == y { 1.0 } else { 0.0 }) * inv_n;
+                        let grow = &mut gw[k * d..(k + 1) * d];
+                        for (gj, &xj) in grow.iter_mut().zip(row) {
+                            *gj += diff * xj;
+                        }
+                        gb[k] += diff;
+                    }
+                }
+                // Absorption: round the accumulators at every block
+                // boundary; chop: once at the end.
+                if lp_acc || i1 == n {
+                    plan.round_slice(mode, gw, rng);
+                    plan.round_slice(mode, gb, rng);
+                }
+                i0 = i1;
+            }
+        }
+        // Rounding-op accounting for profiling parity with the scalar path
+        // (which, under lp_acc, counts ceil(d/B) block adds + the bias add +
+        // one identity fl per logit).
+        let forward = if lp_acc { (d.div_ceil(ACC_BLOCK) + 2) * c } else { c };
+        let acc_events = if lp_acc { n.div_ceil(ACC_BLOCK) } else { 1 };
+        cx.add_rounding_ops(
+            (n * (forward + 2 * c + 1) + acc_events * (c * d + c)) as u64,
+        );
+    }
 }
 
 impl Problem for Mlr {
@@ -187,20 +267,22 @@ impl Problem for Mlr {
     }
 
     fn gradient_exact(&self, x: &[f64], out: &mut [f64]) {
-        self.gradient_impl(x, out, None, false);
+        self.gradient_scalar(x, out, None, false);
     }
 
-    /// chop protocol (paper §2.4): operation *results* rounded entrywise.
+    /// chop protocol (paper §2.4): operation *results* rounded entrywise —
+    /// evaluated through the fused kernel layer.
     fn gradient_rounded(&self, x: &[f64], ctx: &mut LpCtx, out: &mut [f64]) {
-        self.gradient_impl(x, out, Some(ctx), false);
+        self.gradient_kernel(x, out, ctx, false);
     }
 
     /// Absorption model: dot products and gradient sums accumulate in the
     /// working format (blocked, block 32) — the low-precision-accumulation
     /// mechanism behind Gupta et al.'s RN stagnation. Exposed through
     /// `GradModel::PerOp` and the `fig4a-acc` ablation experiment.
+    /// Evaluated through the fused kernel layer.
     fn gradient_per_op(&self, x: &[f64], ctx: &mut LpCtx, out: &mut [f64]) {
-        self.gradient_impl(x, out, Some(ctx), true);
+        self.gradient_kernel(x, out, ctx, true);
     }
 
     /// L ≤ ‖X‖² / (2N) · const; we report the standard bound λ_max(XᵀX)/(4N)
@@ -290,6 +372,53 @@ mod tests {
         assert!(rel < 0.05, "rel={rel}");
         // All entries format-resident.
         assert!(gr.iter().all(|&v| FpFormat::BFLOAT16.contains(v)));
+    }
+
+    /// The kernel gradient path is bit-identical to the retained scalar
+    /// reference under deterministic modes, for both the chop and the
+    /// absorption σ₁ models — the per-mode determinism contract.
+    #[test]
+    fn kernel_gradient_matches_reference_deterministic() {
+        let p = small_mlr();
+        let n = p.dim();
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = (0..n).map(|_| 0.3 * rng.normal()).collect();
+        for mode in [Rounding::RoundNearestEven, Rounding::RoundTowardZero, Rounding::RoundUp] {
+            for (lp_acc, label) in [(false, "chop"), (true, "absorption")] {
+                let mut gk = vec![0.0; n];
+                let mut ck = LpCtx::new(FpFormat::BINARY8, mode, Rng::new(7));
+                if lp_acc {
+                    p.gradient_per_op(&x, &mut ck, &mut gk);
+                } else {
+                    p.gradient_rounded(&x, &mut ck, &mut gk);
+                }
+                let mut gr = vec![0.0; n];
+                let mut cr = LpCtx::new(FpFormat::BINARY8, mode, Rng::new(7));
+                p.gradient_reference(&x, &mut cr, &mut gr, lp_acc);
+                assert_eq!(gk, gr, "{mode:?} {label}");
+            }
+        }
+    }
+
+    /// Stochastic kernel gradients stay format-resident and statistically
+    /// close to the exact gradient (the law is unchanged by the fused path).
+    #[test]
+    fn kernel_gradient_stochastic_resident_and_close() {
+        let p = small_mlr();
+        let n = p.dim();
+        let mut rng = Rng::new(6);
+        let x: Vec<f64> = (0..n).map(|_| 0.1 * rng.normal()).collect();
+        let mut ge = vec![0.0; n];
+        p.gradient_exact(&x, &mut ge);
+        for mode in [Rounding::Sr, Rounding::SrEps(0.2), Rounding::SignedSrEps(0.2)] {
+            let mut g = vec![0.0; n];
+            let mut cx = LpCtx::new(FpFormat::BFLOAT16, mode, Rng::new(8));
+            p.gradient_per_op(&x, &mut cx, &mut g);
+            assert!(g.iter().all(|&v| FpFormat::BFLOAT16.contains(v)), "{mode:?}");
+            let rel = crate::fp::linalg::exact::norm2(&crate::fp::linalg::exact::sub(&g, &ge))
+                / crate::fp::linalg::exact::norm2(&ge);
+            assert!(rel < 0.2, "{mode:?} rel={rel}");
+        }
     }
 
     #[test]

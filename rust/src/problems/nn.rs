@@ -5,9 +5,14 @@
 //! Parameters flattened as `x = [W1 (H×D) ; b1 (H) ; w2 (H) ; b2 (1)]`,
 //! n = H·(D+2) + 1. Non-convex — the paper uses it to show the rounding
 //! phenomenology extends beyond the convex theory.
+//!
+//! As in [`super::Mlr`], the rounded gradient runs on the fused kernel
+//! layer ([`crate::fp::kernels`]); the historic per-scalar path is retained
+//! as [`TwoLayerNn::gradient_reference`] for equivalence tests and benches.
 
 use super::Problem;
 use crate::data::Dataset;
+use crate::fp::kernels::{self, ACC_BLOCK};
 use crate::fp::linalg::LpCtx;
 use crate::fp::rng::Rng;
 
@@ -90,13 +95,18 @@ impl TwoLayerNn {
         wrong as f64 / test.len() as f64
     }
 
-    /// Gradient with optional low-precision arithmetic. As in [`super::Mlr`],
-    /// dot products and gradient sums use *blocked low-precision
-    /// accumulation* (block [`ACC_BLOCK`]) when a context is given — this is
+    /// The retained **scalar-reference** gradient (pre-kernel per-scalar
+    /// rounding sequence). Dot products and gradient sums use *blocked
+    /// low-precision accumulation* (block [`ACC_BLOCK`]) when `lp_acc` —
     /// the absorption mechanism behind the paper's RN stagnation (§5.3);
-    /// see DESIGN.md §8.
-    fn gradient_impl(&self, x: &[f64], out: &mut [f64], mut ctx: Option<&mut LpCtx>, lp_acc: bool) {
-        const ACC_BLOCK: usize = 32;
+    /// see DESIGN.md §8. Kept for equivalence tests and the speedup bench.
+    pub fn gradient_reference(&self, x: &[f64], ctx: &mut LpCtx, out: &mut [f64], lp_acc: bool) {
+        self.gradient_scalar(x, out, Some(ctx), lp_acc);
+    }
+
+    /// Scalar path shared by the exact evaluator (`ctx = None`) and
+    /// [`TwoLayerNn::gradient_reference`].
+    fn gradient_scalar(&self, x: &[f64], out: &mut [f64], mut ctx: Option<&mut LpCtx>, lp_acc: bool) {
         let (w1, b1, w2, b2) = self.split(x);
         let (h, d, n) = (self.hidden, self.d, self.data.len());
         out.fill(0.0);
@@ -166,6 +176,88 @@ impl TwoLayerNn {
             }
         }
     }
+
+    /// The fused **kernel** gradient path, processed in [`ACC_BLOCK`]-sample
+    /// blocks: hidden pre-activations through the rounded GEMM, output
+    /// pre-activations through the same kernel with one channel, the
+    /// sigmoid outputs through one fused slice rounding, and the gradient
+    /// accumulators through the fused slice rounders. Elementwise the same
+    /// f64 values and rounding steps as the scalar path — bit-identical
+    /// under deterministic modes.
+    fn gradient_kernel(&self, x: &[f64], out: &mut [f64], cx: &mut LpCtx, lp_acc: bool) {
+        let (w1, b1, w2, b2) = self.split(x);
+        let (h, d, n) = (self.hidden, self.d, self.data.len());
+        out.fill(0.0);
+        let (gw1, rest) = out.split_at_mut(h * d);
+        let (gb1, rest) = rest.split_at_mut(h);
+        let (gw2, gb2) = rest.split_at_mut(h);
+        let inv_n = 1.0 / n as f64;
+        let mut hid = vec![0.0; ACC_BLOCK * h];
+        let mut po = vec![0.0; ACC_BLOCK];
+        let b2s = [b2];
+        {
+            let (plan, mode, rng) = cx.kernel_parts();
+            let mut i0 = 0;
+            while i0 < n {
+                let i1 = (i0 + ACC_BLOCK).min(n);
+                let rows = i1 - i0;
+                let xblk = &self.data.x[i0 * d..i1 * d];
+                let z1 = &mut hid[..rows * h];
+                kernels::gemm_nt_bias_rounded(
+                    &plan, mode, xblk, rows, d, w1, h, b1, z1, lp_acc, rng,
+                );
+                // ReLU on the rounded pre-activations (exact, as the scalar
+                // path's `z.max(0.0)`).
+                for v in z1.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                // Output pre-activation per sample: fl-model(w2·hid + b2).
+                let zo = &mut po[..rows];
+                kernels::gemm_nt_bias_rounded(&plan, mode, z1, rows, h, w2, 1, &b2s, zo, lp_acc, rng);
+                // p = fl(sigmoid(z_out)), fused across the block.
+                for v in zo.iter_mut() {
+                    *v = sigmoid(*v);
+                }
+                plan.round_slice(mode, zo, rng);
+                // Backward in exact f64, sample order preserved.
+                for r in 0..rows {
+                    let i = i0 + r;
+                    let row = self.data.row(i);
+                    let y = self.data.labels[i] as f64;
+                    let delta = (zo[r] - y) * inv_n;
+                    let hrow = &hid[r * h..(r + 1) * h];
+                    for (g2, &hj) in gw2.iter_mut().zip(hrow) {
+                        *g2 += delta * hj;
+                    }
+                    gb2[0] += delta;
+                    for (j, &hj) in hrow.iter().enumerate() {
+                        if hj > 0.0 {
+                            let dj = delta * w2[j];
+                            let grow = &mut gw1[j * d..(j + 1) * d];
+                            for (g, &xv) in grow.iter_mut().zip(row) {
+                                *g += dj * xv;
+                            }
+                            gb1[j] += dj;
+                        }
+                    }
+                }
+                if lp_acc || i1 == n {
+                    plan.round_slice(mode, gw1, rng);
+                    plan.round_slice(mode, gb1, rng);
+                    plan.round_slice(mode, gw2, rng);
+                    plan.round_slice(mode, gb2, rng);
+                }
+                i0 = i1;
+            }
+        }
+        let forward = if lp_acc {
+            (d.div_ceil(ACC_BLOCK) + 1) * h + h.div_ceil(ACC_BLOCK) + 1
+        } else {
+            h + 1
+        };
+        let acc_events = if lp_acc { n.div_ceil(ACC_BLOCK) } else { 1 };
+        cx.add_rounding_ops((n * (forward + 1) + acc_events * (h * d + 2 * h + 1)) as u64);
+    }
 }
 
 impl Problem for TwoLayerNn {
@@ -186,17 +278,19 @@ impl Problem for TwoLayerNn {
     }
 
     fn gradient_exact(&self, x: &[f64], out: &mut [f64]) {
-        self.gradient_impl(x, out, None, false);
+        self.gradient_scalar(x, out, None, false);
     }
 
-    /// chop protocol (paper §2.4): operation results rounded entrywise.
+    /// chop protocol (paper §2.4): operation results rounded entrywise —
+    /// evaluated through the fused kernel layer.
     fn gradient_rounded(&self, x: &[f64], ctx: &mut LpCtx, out: &mut [f64]) {
-        self.gradient_impl(x, out, Some(ctx), false);
+        self.gradient_kernel(x, out, ctx, false);
     }
 
-    /// Absorption model (see [`super::Mlr::gradient_per_op`]).
+    /// Absorption model (see [`super::Mlr::gradient_per_op`]), through the
+    /// fused kernel layer.
     fn gradient_per_op(&self, x: &[f64], ctx: &mut LpCtx, out: &mut [f64]) {
-        self.gradient_impl(x, out, Some(ctx), true);
+        self.gradient_kernel(x, out, ctx, true);
     }
 }
 
@@ -275,6 +369,31 @@ mod tests {
         let mut ctx = LpCtx::new(FpFormat::BINARY8, Rounding::Sr, crate::fp::rng::Rng::new(0));
         nn.gradient_rounded(&x, &mut ctx, &mut g);
         assert!(g.iter().all(|&v| FpFormat::BINARY8.contains(v)));
+    }
+
+    /// Kernel path vs retained scalar reference: bit-identical under
+    /// deterministic modes for both σ₁ models.
+    #[test]
+    fn kernel_gradient_matches_reference_deterministic() {
+        let (tr, _) = binary38();
+        let nn = TwoLayerNn::new(tr, 9);
+        let x = nn.init_params(4);
+        let n = nn.dim();
+        for mode in [Rounding::RoundNearestEven, Rounding::RoundDown] {
+            for (lp_acc, label) in [(false, "chop"), (true, "absorption")] {
+                let mut gk = vec![0.0; n];
+                let mut ck = LpCtx::new(FpFormat::BFLOAT16, mode, Rng::new(3));
+                if lp_acc {
+                    nn.gradient_per_op(&x, &mut ck, &mut gk);
+                } else {
+                    nn.gradient_rounded(&x, &mut ck, &mut gk);
+                }
+                let mut gr = vec![0.0; n];
+                let mut cr = LpCtx::new(FpFormat::BFLOAT16, mode, Rng::new(3));
+                nn.gradient_reference(&x, &mut cr, &mut gr, lp_acc);
+                assert_eq!(gk, gr, "{mode:?} {label}");
+            }
+        }
     }
 
     #[test]

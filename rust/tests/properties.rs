@@ -261,6 +261,73 @@ fn prop_expected_round_matches_monte_carlo_on_boundaries() {
     }
 }
 
+/// Bit-kernel satellite: exhaustive equivalence sweep of the bit-level
+/// `floor_ceil` / `contains` / `successor` / `predecessor` against the
+/// retained float-arithmetic oracle (`fp::format::reference`) over **every
+/// representable binary8 value** — plus every halfway point between
+/// neighbors, the subnormal grid, ±overflow magnitudes, ±∞ and ±0 — rounded
+/// into all four narrow formats.
+#[test]
+fn prop_bit_kernels_match_reference_exhaustive() {
+    use lpgd::fp::format::{pow2, reference};
+
+    // All nonnegative binary8 grid points (subnormals + normals), sorted.
+    let b8 = FpFormat::BINARY8;
+    let mut grid: Vec<f64> = vec![0.0];
+    let q = b8.x_min_sub();
+    for m in 1..(1u64 << (b8.sig_bits - 1)) {
+        grid.push(m as f64 * q);
+    }
+    for e in b8.e_min..=b8.e_max {
+        let ulp = pow2(e - b8.sig_bits as i32 + 1);
+        for m in (1u64 << (b8.sig_bits - 1))..(1u64 << b8.sig_bits) {
+            grid.push(m as f64 * ulp); // exact: m < 2^s, ulp a power of two
+        }
+    }
+    // Inputs: the grid, every halfway point, overflow, specials; both signs.
+    let mut inputs: Vec<f64> = grid.clone();
+    for w in grid.windows(2) {
+        inputs.push((w[0] + w[1]) / 2.0); // exact midpoint
+    }
+    inputs.extend([b8.x_max() * 1.25, b8.x_max() * 64.0, f64::INFINITY]);
+    let negs: Vec<f64> = inputs.iter().map(|&v| -v).collect();
+    inputs.extend(negs);
+
+    for fmt in FORMATS {
+        for &x in &inputs {
+            let want = fmt.floor_ceil(x);
+            let got = reference::floor_ceil(&fmt, x);
+            assert_eq!(want, got, "{} floor_ceil({x:e})", fmt.name());
+            assert_eq!(
+                fmt.contains(x),
+                reference::contains(&fmt, x),
+                "{} contains({x:e})",
+                fmt.name()
+            );
+        }
+        // Strict neighbors on every in-format grid point (both signs).
+        for &g in &grid {
+            for &x in &[g, -g] {
+                if !fmt.contains(x) || x.abs() >= fmt.x_max() {
+                    continue;
+                }
+                assert_eq!(
+                    fmt.successor(x),
+                    reference::successor(&fmt, x),
+                    "{} successor({x:e})",
+                    fmt.name()
+                );
+                assert_eq!(
+                    fmt.predecessor(x),
+                    reference::predecessor(&fmt, x),
+                    "{} predecessor({x:e})",
+                    fmt.name()
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn prop_nan_and_inf_handling() {
     let mut rng = Rng::new(14);

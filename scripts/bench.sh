@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Run the bench suite and refresh the machine-readable perf artifacts
+# (BENCH_<name>.json in the repo root — the cross-PR perf trajectory).
+#
+#   ./scripts/bench.sh            # all benches with JSON emitters
+#   ./scripts/bench.sh gd_step    # just one
+#
+# The figures/runtime benches are excluded: `figures` regenerates paper
+# CSVs (minutes), `runtime_pjrt` needs the non-default pjrt feature.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+benches=("$@")
+if [ ${#benches[@]} -eq 0 ]; then
+    benches=(rounding gd_step sweep)
+fi
+
+for b in "${benches[@]}"; do
+    echo "== cargo bench --bench $b =="
+    cargo bench --bench "$b"
+done
+
+echo "== refreshed artifacts =="
+ls -l BENCH_*.json

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 verification plus the documentation gate.
+# Tier-1 verification plus the documentation and lint gates.
 #
 #   ./scripts/verify.sh
 #
@@ -7,7 +7,12 @@
 # 2. full test suite        (tier-1)
 # 3. cargo doc with the crate's #![warn(missing_docs)] escalated to an
 #    error, so any undocumented public API — notably the new scheduler
-#    surface — fails loudly instead of rotting silently.
+#    and kernel surfaces — fails loudly instead of rotting silently.
+# 4. cargo clippy over every target with warnings denied. Two style lint
+#    families with systematic false positives on numeric kernel code
+#    (index loops over parallel buffers, many-scalar kernel signatures)
+#    are allowed crate-wide at the top of rust/src/lib.rs; everything
+#    else — including the correctness lints — is enforced.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,5 +24,8 @@ cargo test -q
 
 echo "== cargo doc --no-deps (missing_docs -> error) =="
 RUSTDOCFLAGS="-D missing_docs" cargo doc --no-deps --quiet
+
+echo "== cargo clippy --all-targets (-D warnings) =="
+cargo clippy --all-targets -- -D warnings
 
 echo "verify OK"
