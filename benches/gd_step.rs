@@ -7,12 +7,13 @@
 include!("harness.rs");
 
 use lpgd::data::synth;
-use lpgd::fp::{FpFormat, LpCtx, Rng, Rounding};
-use lpgd::gd::engine::{GdConfig, GdEngine, GradModel, StepSchemes};
+use lpgd::fp::{FpFormat, LpCtx, Rng, Scheme};
+use lpgd::gd::engine::{GdConfig, GdEngine, GradModel, SchemePolicy};
 use lpgd::problems::{Mlr, Problem, Quadratic, TwoLayerNn};
 
 fn main() {
-    let schemes = StepSchemes::uniform(Rounding::Sr);
+    warn_if_hand_projected("gd_step");
+    let schemes = SchemePolicy::uniform(Scheme::sr());
     let mut results: Vec<BenchResult> = Vec::new();
     let mut speedups: Vec<(String, f64)> = Vec::new();
 
@@ -73,11 +74,11 @@ fn main() {
         let mut g = vec![0.0; p.dim()];
         let elems = (1000 * 196 * 10) as u64;
         for (label, lp_acc) in [("chop", false), ("absorption", true)] {
-            let mut c_ref = LpCtx::new(FpFormat::BINARY8, Rounding::Sr, Rng::new(0));
+            let mut c_ref = LpCtx::new(FpFormat::BINARY8, Scheme::sr(), Rng::new(0));
             let r_ref = bench(&format!("mlr grad b8 SR scalar-ref ({label})"), elems, || {
                 p.gradient_reference(&x0, &mut c_ref, &mut g, lp_acc);
             });
-            let mut c_new = LpCtx::new(FpFormat::BINARY8, Rounding::Sr, Rng::new(0));
+            let mut c_new = LpCtx::new(FpFormat::BINARY8, Scheme::sr(), Rng::new(0));
             let r_new = bench(&format!("mlr grad b8 SR kernels    ({label})"), elems, || {
                 if lp_acc {
                     p.gradient_per_op(&x0, &mut c_new, &mut g);
@@ -100,7 +101,7 @@ fn main() {
     {
         let (p, x0, _) = Quadratic::setting2(300, 0);
         let mut g = vec![0.0; 300];
-        let mut ctx = LpCtx::new(FpFormat::BFLOAT16, Rounding::Sr, Rng::new(0));
+        let mut ctx = LpCtx::new(FpFormat::BFLOAT16, Scheme::sr(), Rng::new(0));
         results.push(bench("gradient round-after-op (chop-style)", 300 * 300, || {
             p.gradient_rounded(&x0, &mut ctx, &mut g);
         }));

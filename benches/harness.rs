@@ -101,6 +101,26 @@ fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
+/// Staleness guard for the checked-in perf artifacts: the seed repo ships
+/// `BENCH_<name>.json` files whose `"provenance"` field marks them as
+/// hand-projected estimates, not measurements. Each bench calls this at
+/// startup so the console run that produces the replacement numbers also
+/// announces that the previous file was never measured (scripts/bench.sh
+/// performs the same check shell-side). `write_bench_json` never emits a
+/// `provenance` field, so measured artifacts pass silently.
+#[allow(dead_code)]
+pub fn warn_if_hand_projected(bench: &str) {
+    let path = format!("BENCH_{bench}.json");
+    if let Ok(body) = std::fs::read_to_string(&path) {
+        if body.contains("\"provenance\"") {
+            eprintln!(
+                "WARNING: {path} carries a hand-projected 'provenance' marker — its numbers \
+                 are seed estimates, not measurements; this run will replace them."
+            );
+        }
+    }
+}
+
 /// Write `BENCH_<bench>.json` in the current directory (the workspace root
 /// under `cargo bench`): schema v1 with per-result median/p10/p90 ns and
 /// elements/sec, plus named derived speedup ratios. Returns the path.

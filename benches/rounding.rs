@@ -7,6 +7,7 @@ include!("harness.rs");
 use lpgd::fp::{round, round_slice, round_slice_with, FpFormat, Rng, RoundPlan, Rounding};
 
 fn main() {
+    warn_if_hand_projected("rounding");
     let fmt = FpFormat::BINARY8;
     let n = 1 << 16;
     let mut rng = Rng::new(0);
@@ -52,6 +53,38 @@ fn main() {
         speedups.push(("sr_scalar_vs_slice".into(), s));
         results.push(scalar);
         results.push(fused);
+    }
+
+    println!("-- open-scheme dispatch overhead (Scheme handle vs enum, SR slice) --");
+    {
+        let plan = RoundPlan::new(fmt);
+        let scheme = Rounding::Sr.scheme();
+        // Built-in Scheme handles must resolve to the same fused kernel:
+        // bit-identical outputs from identical stream states.
+        {
+            let (mut ra, mut rb) = (Rng::new(99), Rng::new(99));
+            let mut a = xs.clone();
+            let mut b = xs.clone();
+            plan.round_slice(Rounding::Sr, &mut a, &mut ra);
+            plan.round_slice_scheme(scheme, &mut b, &mut rb);
+            assert_eq!(a, b, "Scheme dispatch diverged from the enum kernel");
+        }
+        let mut r = Rng::new(6);
+        let mut buf = xs.clone();
+        let enum_path = bench("round_slice enum SR", n as u64, || {
+            buf.copy_from_slice(&xs);
+            plan.round_slice(Rounding::Sr, &mut buf, &mut r);
+        });
+        let mut r2 = Rng::new(6);
+        let mut buf2 = xs.clone();
+        let scheme_path = bench("round_slice_scheme SR", n as u64, || {
+            buf2.copy_from_slice(&xs);
+            plan.round_slice_scheme(scheme, &mut buf2, &mut r2);
+        });
+        let s = report_speedup(&enum_path, &scheme_path);
+        speedups.push(("sr_enum_vs_scheme_dispatch".into(), s));
+        results.push(enum_path);
+        results.push(scheme_path);
     }
 
     println!("-- few-random-bits knob (SR slice, bits per rounding) --");

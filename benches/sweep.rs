@@ -9,20 +9,21 @@
 include!("harness.rs");
 
 use lpgd::coordinator::scheduler::{available_jobs, cell_stream, run_indexed};
-use lpgd::fp::{FpFormat, Rng, Rounding};
-use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::fp::{FpFormat, Rng, Scheme};
+use lpgd::gd::engine::{GdConfig, GdEngine, SchemePolicy};
 use lpgd::problems::Quadratic;
 
 fn main() {
+    warn_if_hand_projected("sweep");
     let n = 200;
     let steps = 300;
     let reps = 8u64;
     let (p, x0, _) = Quadratic::setting2(n, 0);
     let modes = [
-        Rounding::Sr,
-        Rounding::SrEps(0.1),
-        Rounding::SrEps(0.4),
-        Rounding::SignedSrEps(0.1),
+        Scheme::sr(),
+        Scheme::sr_eps(0.1),
+        Scheme::sr_eps(0.4),
+        Scheme::signed_sr_eps(0.1),
     ];
     let cells: Vec<(usize, u64)> =
         (0..modes.len()).flat_map(|m| (0..reps).map(move |r| (m, r))).collect();
@@ -32,7 +33,7 @@ fn main() {
         run_indexed(jobs, cells.len(), |k| {
             let (m, r) = cells[k];
             let mode = modes[m];
-            let schemes = StepSchemes { grad: Rounding::Sr, mul: Rounding::Sr, sub: mode };
+            let schemes = SchemePolicy { grad: Scheme::sr(), mul: Scheme::sr(), sub: mode };
             let mut cfg = GdConfig::new(FpFormat::BFLOAT16, schemes, 1.0 / n as f64, steps);
             cfg.rng = Some(Rng::new(root_seed).split(cell_stream("sweep", &mode.label(), r)));
             let mut e = GdEngine::new(cfg, &p, &x0);

@@ -1,12 +1,15 @@
 //! END-TO-END DRIVER: trains the paper's multinomial logistic regression
 //! with binary8 rounded GD **through the fused kernel layer** — the rounded
 //! GEMM logits, the fused softmax-row kernel, the slice-rounded gradient
-//! accumulators (`fp::kernels`), and the batched few-random-bits SR stream.
+//! accumulators (`fp::kernels`), and the batched few-random-bits SR stream
+//! — configured through the [`RunBuilder`] front door and the open scheme
+//! registry, so any registered scheme name works on the command line.
 //! Doubles as a smoke benchmark: it reports end-to-end training throughput
 //! (epochs/sec) and the (8a) rounding throughput (rounding ops/sec).
 //!
 //! Run: `cargo run --release --example train_mlr_e2e -- [epochs] [scheme]`
-//!   scheme ∈ rn | rd | ru | rz | sr | sr_eps:0.2 | signed:0.1   (default sr)
+//!   scheme ∈ any registered spec: rn | rd | ru | rz | sr | sr_eps:0.2 |
+//!   signed:0.1 | ...   (default sr; `lpgd --help` lists them all)
 //!
 //! (The AOT-compiled PJRT variant of this driver lives behind the
 //! non-default `pjrt` feature — see `benches/runtime_pjrt.rs` and
@@ -14,16 +17,16 @@
 //! that the perf work of docs/performance.md targets.)
 
 use lpgd::data::load_or_synth;
-use lpgd::fp::{FpFormat, Rounding};
-use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::fp::{FpFormat, SchemeRegistry};
+use lpgd::gd::RunBuilder;
 use lpgd::problems::{Mlr, Problem};
 use lpgd::util::table::sparkline;
 
 fn main() -> anyhow::Result<()> {
     let mut args = std::env::args().skip(1);
     let epochs: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(30);
-    let scheme = Rounding::parse(&args.next().unwrap_or_else(|| "sr".into()))
-        .expect("bad scheme (rn|rd|ru|rz|sr|sr_eps:E|signed:E)");
+    // Registry lookup: unknown specs exit with the registered-scheme list.
+    let scheme = SchemeRegistry::lookup(&args.next().unwrap_or_else(|| "sr".into()))?;
 
     let splits = load_or_synth(None, 2048, 512, 14, 42);
     let mlr = Mlr::new(splits.train, 10);
@@ -36,21 +39,26 @@ fn main() -> anyhow::Result<()> {
         mlr.dim()
     );
 
-    let mut cfg = GdConfig::new(FpFormat::BINARY8, StepSchemes::uniform(scheme), 0.5, epochs);
-    cfg.seed = 0; // default grad model: chop-style RoundAfterOp (paper §2.4)
-    let x0 = vec![0.0f64; mlr.dim()];
-    let mut engine = GdEngine::new(cfg, &mlr, &x0);
+    // The documented front door: builder -> session (chop-style gradient
+    // model and zero start are the defaults; see docs/api.md).
+    let mut session = RunBuilder::new(&mlr)
+        .format(FpFormat::BINARY8)
+        .policy(scheme)
+        .stepsize(0.5)
+        .steps(epochs)
+        .seed(0)
+        .build()?;
 
     let mut errs = Vec::with_capacity(epochs);
     let mut train_secs = 0.0f64;
     for _ in 0..epochs {
         let t0 = std::time::Instant::now();
-        engine.step(); // full-batch epoch: (8a) kernel gradient + (8b)/(8c)
+        session.step(); // full-batch epoch: (8a) kernel gradient + (8b)/(8c)
         train_secs += t0.elapsed().as_secs_f64();
-        errs.push(mlr.test_error(&engine.x, &splits.test));
+        errs.push(mlr.test_error(session.x(), &splits.test));
     }
 
-    let rounds = engine.grad_rounding_ops();
+    let rounds = session.grad_rounding_ops();
     println!(
         "ran {epochs} rounded epochs in {train_secs:.2}s ({:.2} epochs/s, {:.1} ms/epoch)",
         epochs as f64 / train_secs,

@@ -14,8 +14,8 @@ use crate::coordinator::aggregate::expectation_jobs;
 use crate::coordinator::registry;
 use crate::coordinator::scheduler::run_indexed;
 use crate::data::{load_or_synth, Dataset};
-use crate::fp::{expected_round, FpFormat, Rounding};
-use crate::gd::engine::{GdConfig, GdEngine, GradModel, StepSchemes};
+use crate::fp::{FpFormat, RoundPlan, Scheme};
+use crate::gd::engine::{GdConfig, GdEngine, GradModel, SchemePolicy};
 use crate::gd::theory;
 use crate::gd::trace::Trace;
 use crate::problems::{Mlr, Problem, Quadratic, TwoLayerNn};
@@ -166,10 +166,10 @@ pub(crate) fn fig1() -> Table {
             let y = lo + (hi - lo) * i as f64 / steps as f64;
             t.row(vec![
                 y.into(),
-                expected_round(&fmt, Rounding::RoundNearestEven, y, y).into(),
-                expected_round(&fmt, Rounding::Sr, y, y).into(),
-                expected_round(&fmt, Rounding::SrEps(0.25), y, y).into(),
-                expected_round(&fmt, Rounding::SrEps(0.5), y, y).into(),
+                Scheme::rn().expected_round(&fmt, y, y).into(),
+                Scheme::sr().expected_round(&fmt, y, y).into(),
+                Scheme::sr_eps(0.25).expected_round(&fmt, y, y).into(),
+                Scheme::sr_eps(0.5).expected_round(&fmt, y, y).into(),
                 sign.into(),
             ]);
         }
@@ -186,7 +186,7 @@ pub(crate) fn fig2() -> Table {
     let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
     let mut cfg = GdConfig::new(
         FpFormat::BINARY8,
-        StepSchemes::uniform(Rounding::RoundNearestEven),
+        SchemePolicy::uniform(Scheme::rn()),
         0.05,
         40,
     );
@@ -203,7 +203,7 @@ pub(crate) fn fig2() -> Table {
             let f = p.objective(&e.x);
             let ghat = {
                 let mut rng = crate::fp::Rng::new(0);
-                crate::fp::round(&FpFormat::BINARY8, Rounding::RoundNearestEven, g[0], &mut rng)
+                RoundPlan::new(FpFormat::BINARY8).round_scheme(Scheme::rn(), g[0], &mut rng)
             };
             let tau = crate::gd::stagnation::tau_k(&FpFormat::BINARY8, &e.x, &[ghat], 0.05).tau;
             let moved = e.step();
@@ -260,23 +260,23 @@ pub(crate) fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
         crate::fp::linalg::exact::norm2(&d)
     };
 
-    let run = |fmt: FpFormat, schemes: StepSchemes, seed: u64| -> Trace {
+    let run = |fmt: FpFormat, schemes: SchemePolicy, seed: u64| -> Trace {
         let mut cfg = GdConfig::new(fmt, schemes, t_step, steps);
         cfg.seed = seed;
         GdEngine::new(cfg, &p, &x0).run(None)
     };
 
     // binary32 + RN baseline ("exact" reference), deterministic.
-    let base = run(FpFormat::BINARY32, StepSchemes::uniform(Rounding::RoundNearestEven), 0);
+    let base = run(FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn()), 0);
     // bfloat16: (8a)+(8b) SR with (8c) ∈ {SR, signed-SRε(0.4)}; the seed
     // repetitions fan out across the worker pool.
-    let sr_schemes = StepSchemes::uniform(Rounding::Sr);
+    let sr_schemes = SchemePolicy::uniform(Scheme::sr());
     let sr =
         expectation_jobs(ctx.jobs, ctx.seeds, &|s| run(FpFormat::BFLOAT16, sr_schemes, s), &|t| {
             t.objective_series()
         });
     let sg_schemes =
-        StepSchemes { grad: Rounding::Sr, mul: Rounding::Sr, sub: Rounding::SignedSrEps(0.4) };
+        SchemePolicy { grad: Scheme::sr(), mul: Scheme::sr(), sub: Scheme::signed_sr_eps(0.4) };
     let signed =
         expectation_jobs(ctx.jobs, ctx.seeds, &|s| run(FpFormat::BFLOAT16, sg_schemes, s), &|t| {
             t.objective_series()
@@ -302,7 +302,7 @@ pub(crate) fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
     // Paper's §5.1 closing metric for Setting II: relative error at k=4000.
     // One cell per seed; the ordered merge fixes the summation order so the
     // average is identical for every jobs count.
-    let rel_err = |schemes: StepSchemes| -> f64 {
+    let rel_err = |schemes: SchemePolicy| -> f64 {
         let errs = run_indexed(ctx.jobs, ctx.seeds, |s| {
             let mut cfg = GdConfig::new(FpFormat::BFLOAT16, schemes, t_step, steps);
             cfg.seed = s as u64;
@@ -348,11 +348,8 @@ fn mlr_setup(ctx: &ExpCtx) -> LearnSetup {
 
 /// How many expectation seeds a scheme combination needs: stochastic
 /// schemes average over `seeds`, fully deterministic ones run once.
-fn seeds_for(schemes: &StepSchemes, seeds: usize) -> usize {
-    let stochastic = schemes.grad.is_stochastic()
-        || schemes.mul.is_stochastic()
-        || schemes.sub.is_stochastic();
-    if stochastic {
+fn seeds_for(schemes: &SchemePolicy, seeds: usize) -> usize {
+    if schemes.is_stochastic() {
         seeds
     } else {
         1
@@ -400,7 +397,7 @@ fn curves_flat(
 fn mlr_cell(
     setup: &LearnSetup,
     fmt: FpFormat,
-    schemes: StepSchemes,
+    schemes: SchemePolicy,
     gm: GradModel,
     t_step: f64,
     epochs: usize,
@@ -421,13 +418,13 @@ pub(crate) fn fig4a(ctx: &ExpCtx) -> Table {
     let setup = mlr_setup(ctx);
     let t_step = 0.5;
     let b8 = FpFormat::BINARY8;
-    let sr = Rounding::Sr;
-    let cfgs: Vec<(String, FpFormat, StepSchemes)> = vec![
-        ("binary32".into(), FpFormat::BINARY32, StepSchemes::uniform(Rounding::RoundNearestEven)),
-        ("RN".into(), b8, StepSchemes { grad: Rounding::RoundNearestEven, mul: Rounding::RoundNearestEven, sub: sr }),
-        ("SR".into(), b8, StepSchemes { grad: sr, mul: sr, sub: sr }),
-        ("SR_eps(0.2)".into(), b8, StepSchemes { grad: Rounding::SrEps(0.2), mul: Rounding::SrEps(0.2), sub: sr }),
-        ("SR_eps(0.4)".into(), b8, StepSchemes { grad: Rounding::SrEps(0.4), mul: Rounding::SrEps(0.4), sub: sr }),
+    let sr = Scheme::sr();
+    let cfgs: Vec<(String, FpFormat, SchemePolicy)> = vec![
+        ("binary32".into(), FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn())),
+        ("RN".into(), b8, SchemePolicy { grad: Scheme::rn(), mul: Scheme::rn(), sub: sr }),
+        ("SR".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }),
+        ("SR_eps(0.2)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.2), mul: Scheme::sr_eps(0.2), sub: sr }),
+        ("SR_eps(0.4)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.4), mul: Scheme::sr_eps(0.4), sub: sr }),
     ];
     learning_table(
         "fig4a",
@@ -446,13 +443,13 @@ pub(crate) fn fig4b(ctx: &ExpCtx) -> Table {
     let setup = mlr_setup(ctx);
     let t_step = 0.5;
     let b8 = FpFormat::BINARY8;
-    let sr = Rounding::Sr;
-    let cfgs: Vec<(String, FpFormat, StepSchemes)> = vec![
-        ("binary32".into(), FpFormat::BINARY32, StepSchemes::uniform(Rounding::RoundNearestEven)),
-        ("SR|SR".into(), b8, StepSchemes { grad: sr, mul: sr, sub: sr }),
-        ("SR_eps(0.1)|signed(0.1)".into(), b8, StepSchemes { grad: Rounding::SrEps(0.1), mul: Rounding::SrEps(0.1), sub: Rounding::SignedSrEps(0.1) }),
-        ("SR|signed(0.1)".into(), b8, StepSchemes { grad: sr, mul: sr, sub: Rounding::SignedSrEps(0.1) }),
-        ("SR|signed(0.2)".into(), b8, StepSchemes { grad: sr, mul: sr, sub: Rounding::SignedSrEps(0.2) }),
+    let sr = Scheme::sr();
+    let cfgs: Vec<(String, FpFormat, SchemePolicy)> = vec![
+        ("binary32".into(), FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn())),
+        ("SR|SR".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }),
+        ("SR_eps(0.1)|signed(0.1)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.1), mul: Scheme::sr_eps(0.1), sub: Scheme::signed_sr_eps(0.1) }),
+        ("SR|signed(0.1)".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: Scheme::signed_sr_eps(0.1) }),
+        ("SR|signed(0.2)".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: Scheme::signed_sr_eps(0.2) }),
     ];
     let mut t = learning_table(
         "fig4b",
@@ -478,13 +475,13 @@ pub(crate) fn fig4a_acc(ctx: &ExpCtx) -> Table {
     let setup = mlr_setup(ctx);
     let t_step = 0.5;
     let b8 = FpFormat::BINARY8;
-    let sr = Rounding::Sr;
+    let sr = Scheme::sr();
     let epochs = ctx.mlr_epochs.min(60); // the separation is clear early
-    let cfgs: Vec<(String, FpFormat, StepSchemes, GradModel)> = vec![
-        ("binary32".into(), FpFormat::BINARY32, StepSchemes::uniform(Rounding::RoundNearestEven), GradModel::Exact),
-        ("RN_acc".into(), b8, StepSchemes { grad: Rounding::RoundNearestEven, mul: Rounding::RoundNearestEven, sub: sr }, GradModel::PerOp),
-        ("SR_acc".into(), b8, StepSchemes { grad: sr, mul: sr, sub: sr }, GradModel::PerOp),
-        ("RN_chop".into(), b8, StepSchemes { grad: Rounding::RoundNearestEven, mul: Rounding::RoundNearestEven, sub: sr }, GradModel::RoundAfterOp),
+    let cfgs: Vec<(String, FpFormat, SchemePolicy, GradModel)> = vec![
+        ("binary32".into(), FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn()), GradModel::Exact),
+        ("RN_acc".into(), b8, SchemePolicy { grad: Scheme::rn(), mul: Scheme::rn(), sub: sr }, GradModel::PerOp),
+        ("SR_acc".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }, GradModel::PerOp),
+        ("RN_chop".into(), b8, SchemePolicy { grad: Scheme::rn(), mul: Scheme::rn(), sub: sr }, GradModel::RoundAfterOp),
     ];
     let mut cols = vec!["epoch".to_string()];
     cols.extend(cfgs.iter().map(|(n, _, _, _)| n.clone()));
@@ -518,13 +515,13 @@ pub(crate) fn fig5(ctx: &ExpCtx, biased: bool) -> Table {
     let setup = mlr_setup(ctx);
     let b8 = FpFormat::BINARY8;
     let schemes = if biased {
-        StepSchemes {
-            grad: Rounding::SrEps(0.1),
-            mul: Rounding::SignedSrEps(0.1),
-            sub: Rounding::SignedSrEps(0.1),
+        SchemePolicy {
+            grad: Scheme::sr_eps(0.1),
+            mul: Scheme::signed_sr_eps(0.1),
+            sub: Scheme::signed_sr_eps(0.1),
         }
     } else {
-        StepSchemes::uniform(Rounding::Sr)
+        SchemePolicy::uniform(Scheme::sr())
     };
     let id = if biased { "fig5b" } else { "fig5a" };
     let title = if biased {
@@ -544,8 +541,8 @@ pub(crate) fn fig5(ctx: &ExpCtx, biased: bool) -> Table {
     // One flattened batch: the binary32 baseline (t = 1.25) followed by the
     // (stepsize × seed) grid — so the deterministic baseline doesn't hold a
     // core alone while the rest of the pool idles.
-    let mut grid: Vec<(FpFormat, StepSchemes, f64)> =
-        vec![(FpFormat::BINARY32, StepSchemes::uniform(Rounding::RoundNearestEven), 1.25)];
+    let mut grid: Vec<(FpFormat, SchemePolicy, f64)> =
+        vec![(FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn()), 1.25)];
     for &t_ in &ts {
         grid.push((b8, schemes, t_));
     }
@@ -604,7 +601,7 @@ fn nn_setup(ctx: &ExpCtx) -> NnSetup {
 /// the per-config mean test-error series.
 fn nn_curves(
     setup: &NnSetup,
-    cfgs: &[(String, FpFormat, StepSchemes)],
+    cfgs: &[(String, FpFormat, SchemePolicy)],
     t_step: f64,
     epochs: usize,
     seeds: usize,
@@ -626,13 +623,13 @@ pub(crate) fn fig6a(ctx: &ExpCtx) -> Table {
     let setup = nn_setup(ctx);
     let t_step = 0.09375;
     let b8 = FpFormat::BINARY8;
-    let sr = Rounding::Sr;
-    let cfgs: Vec<(String, FpFormat, StepSchemes)> = vec![
-        ("binary32".into(), FpFormat::BINARY32, StepSchemes::uniform(Rounding::RoundNearestEven)),
-        ("RN".into(), b8, StepSchemes::uniform(Rounding::RoundNearestEven)),
-        ("SR".into(), b8, StepSchemes { grad: sr, mul: sr, sub: sr }),
-        ("SR_eps(0.2)".into(), b8, StepSchemes { grad: Rounding::SrEps(0.2), mul: Rounding::SrEps(0.2), sub: sr }),
-        ("SR_eps(0.4)".into(), b8, StepSchemes { grad: Rounding::SrEps(0.4), mul: Rounding::SrEps(0.4), sub: sr }),
+    let sr = Scheme::sr();
+    let cfgs: Vec<(String, FpFormat, SchemePolicy)> = vec![
+        ("binary32".into(), FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn())),
+        ("RN".into(), b8, SchemePolicy::uniform(Scheme::rn())),
+        ("SR".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }),
+        ("SR_eps(0.2)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.2), mul: Scheme::sr_eps(0.2), sub: sr }),
+        ("SR_eps(0.4)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.4), mul: Scheme::sr_eps(0.4), sub: sr }),
     ];
     let mut t = Table::new(
         "fig6a",
@@ -656,13 +653,13 @@ pub(crate) fn fig6b(ctx: &ExpCtx) -> Table {
     let setup = nn_setup(ctx);
     let t_step = 0.09375;
     let b8 = FpFormat::BINARY8;
-    let sr = Rounding::Sr;
-    let cfgs: Vec<(String, FpFormat, StepSchemes)> = vec![
-        ("binary32".into(), FpFormat::BINARY32, StepSchemes::uniform(Rounding::RoundNearestEven)),
-        ("SR|SR".into(), b8, StepSchemes { grad: sr, mul: sr, sub: sr }),
-        ("SR_eps(0.1)|signed(0.05)".into(), b8, StepSchemes { grad: Rounding::SrEps(0.1), mul: Rounding::SrEps(0.1), sub: Rounding::SignedSrEps(0.05) }),
-        ("SR|signed(0.1)".into(), b8, StepSchemes { grad: sr, mul: sr, sub: Rounding::SignedSrEps(0.1) }),
-        ("SR|signed(0.2)".into(), b8, StepSchemes { grad: sr, mul: sr, sub: Rounding::SignedSrEps(0.2) }),
+    let sr = Scheme::sr();
+    let cfgs: Vec<(String, FpFormat, SchemePolicy)> = vec![
+        ("binary32".into(), FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn())),
+        ("SR|SR".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }),
+        ("SR_eps(0.1)|signed(0.05)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.1), mul: Scheme::sr_eps(0.1), sub: Scheme::signed_sr_eps(0.05) }),
+        ("SR|signed(0.1)".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: Scheme::signed_sr_eps(0.1) }),
+        ("SR|signed(0.2)".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: Scheme::signed_sr_eps(0.2) }),
     ];
     let names: Vec<&str> = ["epoch", "binary32", "SR|SR", "SR_eps(0.1)|signed(0.05)", "SR|signed(0.1)", "SR|signed(0.2)"].to_vec();
     let mut t = Table::new(
@@ -723,7 +720,7 @@ pub(crate) fn table1(ctx: &ExpCtx) -> Table {
     // Lemma 4 (monotonicity, general rounding): run RN and check f decreasing
     // while the gradient gate (24) holds.
     {
-        let mut cfg = GdConfig::new(fmt, StepSchemes::uniform(Rounding::RoundNearestEven), t_step, steps);
+        let mut cfg = GdConfig::new(fmt, SchemePolicy::uniform(Scheme::rn()), t_step, steps);
         cfg.seed = 0;
         let tr = GdEngine::new(cfg, &p, &x0).run(None);
         let gate = theory::lemma4_grad_gate(a, u, n, c);
@@ -752,7 +749,7 @@ pub(crate) fn table1(ctx: &ExpCtx) -> Table {
     // fig-3a stepsize (that regime is Scenario 2, where the bound is
     // vacuous). Verify at t = 1/(L(1+2u)²).
     let t_big = theory::t_upper_bound(lip, u);
-    let mut verify_rate = |name: &str, sch: StepSchemes| {
+    let mut verify_rate = |name: &str, sch: SchemePolicy| {
         let runner = |s: u64| {
             let mut cfg = GdConfig::new(fmt, sch, t_big, steps);
             cfg.seed = s;
@@ -795,19 +792,19 @@ pub(crate) fn table1(ctx: &ExpCtx) -> Table {
             (ok as i64).into(),
         ]);
     };
-    verify_rate("Theorem 6(i) (SR rate)", StepSchemes::uniform(Rounding::Sr));
+    verify_rate("Theorem 6(i) (SR rate)", SchemePolicy::uniform(Scheme::sr()));
     verify_rate(
         "Corollary 7 (SR_eps rate)",
-        StepSchemes { grad: Rounding::Sr, mul: Rounding::SrEps(0.4), sub: Rounding::Sr },
+        SchemePolicy { grad: Scheme::sr(), mul: Scheme::sr_eps(0.4), sub: Scheme::sr() },
     );
 
     // Propositions 9/11 (stagnation scenario): compare the SR and signed-SRε
     // average monotonicity on the Figure-2 problem.
     {
         let p2 = Quadratic::diagonal(vec![2.0], vec![1024.0]);
-        let avg_drop = |sub: Rounding| -> f64 {
+        let avg_drop = |sub: Scheme| -> f64 {
             let drops = run_indexed(ctx.jobs, ctx.seeds, |s| {
-                let sch = StepSchemes { grad: Rounding::Sr, mul: Rounding::Sr, sub };
+                let sch = SchemePolicy { grad: Scheme::sr(), mul: Scheme::sr(), sub };
                 let mut cfg = GdConfig::new(FpFormat::BINARY8, sch, 0.05, 100);
                 cfg.seed = s as u64;
                 let tr = GdEngine::new(cfg, &p2, &[1.0]).run(None);
@@ -815,8 +812,8 @@ pub(crate) fn table1(ctx: &ExpCtx) -> Table {
             });
             drops.iter().sum::<f64>() / ctx.seeds as f64
         };
-        let d_sr = avg_drop(Rounding::Sr);
-        let d_sg = avg_drop(Rounding::SignedSrEps(0.25));
+        let d_sr = avg_drop(Scheme::sr());
+        let d_sg = avg_drop(Scheme::signed_sr_eps(0.25));
         t.row(vec![
             "Prop 9 vs Prop 11 (stagnation)".into(),
             "binary8, f=(x-1024)^2, eps=0.25<=0.5".into(),
@@ -837,7 +834,7 @@ fn learning_table(
     id: &str,
     title: &str,
     setup: &LearnSetup,
-    cfgs: Vec<(String, FpFormat, StepSchemes)>,
+    cfgs: Vec<(String, FpFormat, SchemePolicy)>,
     t_step: f64,
     epochs: usize,
     seeds: usize,

@@ -6,7 +6,11 @@
 //! The registry is the single source of truth consumed by the CLI
 //! (`lpgd list` / `lpgd reproduce`), the figure-regeneration bench
 //! (`benches/figures.rs`) and the integration tests — adding an experiment
-//! means adding exactly one entry here.
+//! means adding exactly one entry here. Builders express their rounding
+//! policies through the open scheme API
+//! ([`crate::gd::SchemePolicy`] over [`crate::fp::Scheme`] handles), so an
+//! experiment can sweep any scheme registered with
+//! [`crate::fp::SchemeRegistry`], not just the paper's built-ins.
 
 use crate::coordinator::experiments::{self, ExpCtx};
 use crate::util::table::Table;

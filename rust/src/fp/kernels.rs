@@ -28,8 +28,9 @@
 //!
 //! [`dot_auto`] encodes this contract; `docs/performance.md` spells it out.
 
-use super::round::{RoundPlan, Rounding};
 use super::rng::Rng;
+use super::round::RoundPlan;
+use super::scheme::Scheme;
 
 /// Accumulator-rounding granularity of the *absorption* (low-precision
 /// accumulation) model: the running sum is rounded into the working format
@@ -70,10 +71,11 @@ pub fn dot_fast(a: &[f64], b: &[f64]) -> f64 {
     acc
 }
 
-/// Mode-scoped exact dot: sequential (seed order) for deterministic modes,
-/// multi-accumulator for stochastic modes — the determinism contract.
+/// Mode-scoped exact dot: sequential (seed order) for deterministic
+/// schemes, multi-accumulator for stochastic schemes — the determinism
+/// contract.
 #[inline]
-pub fn dot_auto(mode: Rounding, a: &[f64], b: &[f64]) -> f64 {
+pub fn dot_auto(mode: Scheme, a: &[f64], b: &[f64]) -> f64 {
     if mode.is_stochastic() {
         dot_fast(a, b)
     } else {
@@ -98,7 +100,7 @@ pub fn dot_auto(mode: Rounding, a: &[f64], b: &[f64]) -> f64 {
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_nt_bias_rounded(
     plan: &RoundPlan,
-    mode: Rounding,
+    mode: Scheme,
     x: &[f64],
     rows: usize,
     d: usize,
@@ -121,7 +123,7 @@ pub fn gemm_nt_bias_rounded(
                 *o = dot_auto(mode, xr, &w[k * d..(k + 1) * d]) + bias[k];
             }
         }
-        plan.round_slice(mode, out, rng);
+        plan.round_slice_scheme(mode, out, rng);
         return;
     }
     let mut acc = vec![0.0f64; c];
@@ -135,13 +137,13 @@ pub fn gemm_nt_bias_rounded(
                 *a += dot_auto(mode, &xr[j..hi], &w[k * d + j..k * d + hi]);
             }
             // acc ← fl(acc + block-sum), batched across the c channels.
-            plan.round_slice(mode, &mut acc, rng);
+            plan.round_slice_scheme(mode, &mut acc, rng);
             j = hi;
         }
         for (a, &bk) in acc.iter_mut().zip(bias) {
             *a += bk;
         }
-        plan.round_slice(mode, &mut acc, rng);
+        plan.round_slice_scheme(mode, &mut acc, rng);
         out[r * c..(r + 1) * c].copy_from_slice(&acc);
     }
 }
@@ -154,7 +156,7 @@ pub fn gemm_nt_bias_rounded(
 /// scratch, resized to `rows`.
 pub fn softmax_rows_rounded(
     plan: &RoundPlan,
-    mode: Rounding,
+    mode: Scheme,
     z: &mut [f64],
     rows: usize,
     c: usize,
@@ -169,7 +171,7 @@ pub fn softmax_rows_rounded(
             *v = (*v - maxz).exp();
         }
     }
-    plan.round_slice(mode, z, rng);
+    plan.round_slice_scheme(mode, z, rng);
     sums.clear();
     for r in 0..rows {
         let mut s = 0.0;
@@ -178,14 +180,14 @@ pub fn softmax_rows_rounded(
         }
         sums.push(s);
     }
-    plan.round_slice(mode, sums, rng);
+    plan.round_slice_scheme(mode, sums, rng);
     for r in 0..rows {
         let s = sums[r];
         for v in z[r * c..(r + 1) * c].iter_mut() {
             *v /= s;
         }
     }
-    plan.round_slice(mode, z, rng);
+    plan.round_slice_scheme(mode, z, rng);
 }
 
 /// Fused rounded axpy with per-op semantics: `y ← fl(y + fl(α·x))`,
@@ -193,7 +195,7 @@ pub fn softmax_rows_rounded(
 /// both rounding passes fused slice-wise. `tmp` is caller scratch.
 pub fn axpy_rounded(
     plan: &RoundPlan,
-    mode: Rounding,
+    mode: Scheme,
     alpha: f64,
     x: &[f64],
     y: &mut [f64],
@@ -203,11 +205,11 @@ pub fn axpy_rounded(
     debug_assert_eq!(x.len(), y.len());
     tmp.clear();
     tmp.extend(x.iter().map(|&v| alpha * v));
-    plan.round_slice(mode, tmp, rng);
+    plan.round_slice_scheme(mode, tmp, rng);
     for (yi, &t) in y.iter_mut().zip(tmp.iter()) {
         *yi += t;
     }
-    plan.round_slice(mode, y, rng);
+    plan.round_slice_scheme(mode, y, rng);
 }
 
 /// The fused (8b)+(8c) tail of one GD iteration (the engine's step after
@@ -219,8 +221,8 @@ pub fn axpy_rounded(
 #[allow(clippy::too_many_arguments)]
 pub fn gd_update(
     plan: &RoundPlan,
-    mul_mode: Rounding,
-    sub_mode: Rounding,
+    mul_mode: Scheme,
+    sub_mode: Scheme,
     t: f64,
     x: &mut [f64],
     ghat: &[f64],
@@ -237,21 +239,22 @@ pub fn gd_update(
             && x.len() == zbuf.len()
     );
     // (8b): m = fl₂(t·ĝᵢ). The steering buffer is only consulted by
-    // SignedSrEps; skip the negation pass for every other scheme.
+    // steered schemes (signed-SRε and steered user schemes); skip the
+    // negation pass for every other scheme.
     for (m, &g) in mbuf.iter_mut().zip(ghat) {
         *m = t * g;
     }
-    if matches!(mul_mode, Rounding::SignedSrEps(_)) {
+    if mul_mode.uses_steering() {
         for (v, &g) in vneg.iter_mut().zip(ghat) {
             *v = -g;
         }
     }
-    plan.round_slice_with(mul_mode, mbuf, vneg, rng_mul);
+    plan.round_slice_scheme_with(mul_mode, mbuf, vneg, rng_mul);
     // (8c): x̂ᵢ⁺ = fl₃(x̂ᵢ − mᵢ), steering v = +ĝᵢ.
     for ((z, &xi), &m) in zbuf.iter_mut().zip(x.iter()).zip(mbuf.iter()) {
         *z = xi - m;
     }
-    plan.round_slice_with(sub_mode, zbuf, ghat, rng_sub);
+    plan.round_slice_scheme_with(sub_mode, zbuf, ghat, rng_sub);
     let mut moved = false;
     for (xi, &z) in x.iter_mut().zip(zbuf.iter()) {
         if z != *xi {
@@ -267,6 +270,7 @@ mod tests {
     use super::*;
     use crate::fp::format::FpFormat;
     use crate::fp::linalg::LpCtx;
+    use crate::fp::round::Rounding;
 
     const B8: FpFormat = FpFormat::BINARY8;
 
@@ -282,8 +286,8 @@ mod tests {
         let s = dot_seq(&a, &b);
         let f = dot_fast(&a, &b);
         assert!((s - f).abs() <= 1e-12 * s.abs().max(1.0), "{s} vs {f}");
-        assert_eq!(dot_auto(Rounding::RoundNearestEven, &a, &b), s);
-        assert_eq!(dot_auto(Rounding::Sr, &a, &b), f);
+        assert_eq!(dot_auto(Rounding::RoundNearestEven.scheme(), &a, &b), s);
+        assert_eq!(dot_auto(Rounding::Sr.scheme(), &a, &b), f);
     }
 
     /// Chop-model GEMM under a deterministic mode is bit-identical to the
@@ -299,7 +303,7 @@ mod tests {
                 let plan = RoundPlan::new(fmt);
                 let mut out = vec![0.0; rows * c];
                 let mut rng = Rng::new(0);
-                gemm_nt_bias_rounded(&plan, mode, &x, rows, d, &w, c, &bias, &mut out, false, &mut rng);
+                gemm_nt_bias_rounded(&plan, mode.scheme(), &x, rows, d, &w, c, &bias, &mut out, false, &mut rng);
                 let mut ctx = LpCtx::new(fmt, mode, Rng::new(0));
                 for r in 0..rows {
                     for k in 0..c {
@@ -324,7 +328,7 @@ mod tests {
         let plan = RoundPlan::new(B8);
         let mut out = vec![0.0; rows * c];
         let mut rng = Rng::new(0);
-        gemm_nt_bias_rounded(&plan, mode, &x, rows, d, &w, c, &bias, &mut out, true, &mut rng);
+        gemm_nt_bias_rounded(&plan, mode.scheme(), &x, rows, d, &w, c, &bias, &mut out, true, &mut rng);
         let mut ctx = LpCtx::new(B8, mode, Rng::new(0));
         for r in 0..rows {
             for k in 0..c {
@@ -356,7 +360,7 @@ mod tests {
         // RN: scalar reference comparison.
         let mut got = z.clone();
         let mut sums = Vec::new();
-        softmax_rows_rounded(&plan, Rounding::RoundNearestEven, &mut got, rows, c, &mut sums, &mut rng);
+        softmax_rows_rounded(&plan, Rounding::RoundNearestEven.scheme(), &mut got, rows, c, &mut sums, &mut rng);
         let mut ctx = LpCtx::new(B8, Rounding::RoundNearestEven, Rng::new(2));
         for r in 0..rows {
             let row = &z[r * c..(r + 1) * c];
@@ -370,7 +374,7 @@ mod tests {
         }
         // SR: probabilities are representable and rows roughly normalize.
         let mut sr = z.clone();
-        softmax_rows_rounded(&plan, Rounding::Sr, &mut sr, rows, c, &mut sums, &mut Rng::new(3));
+        softmax_rows_rounded(&plan, Rounding::Sr.scheme(), &mut sr, rows, c, &mut sums, &mut Rng::new(3));
         for r in 0..rows {
             let row = &sr[r * c..(r + 1) * c];
             assert!(row.iter().all(|&p| B8.contains(p) && (0.0..=2.0).contains(&p)));
@@ -387,14 +391,14 @@ mod tests {
         let plan = RoundPlan::new(B8);
         let mut y = y0.clone();
         let mut tmp = Vec::new();
-        axpy_rounded(&plan, Rounding::RoundNearestEven, 0.37, &x, &mut y, &mut tmp, &mut Rng::new(0));
+        axpy_rounded(&plan, Rounding::RoundNearestEven.scheme(), 0.37, &x, &mut y, &mut tmp, &mut Rng::new(0));
         let mut ctx = LpCtx::new(B8, Rounding::RoundNearestEven, Rng::new(0));
         let mut want = y0.clone();
         ctx.axpy(0.37, &x, &mut want);
         assert_eq!(y, want);
         // Stochastic: result stays format-resident.
         let mut ys = y0.clone();
-        axpy_rounded(&plan, Rounding::Sr, 0.37, &x, &mut ys, &mut tmp, &mut Rng::new(4));
+        axpy_rounded(&plan, Rounding::Sr.scheme(), 0.37, &x, &mut ys, &mut tmp, &mut Rng::new(4));
         assert!(ys.iter().all(|&v| B8.contains(v)));
     }
 
@@ -417,7 +421,7 @@ mod tests {
         let mut x = x0.clone();
         let (mut m, mut vneg, mut z) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
         gd_update(
-            &plan, mode, mode, t, &mut x, &ghat, &mut m, &mut vneg, &mut z,
+            &plan, mode.scheme(), mode.scheme(), t, &mut x, &ghat, &mut m, &mut vneg, &mut z,
             &mut Rng::new(1), &mut Rng::new(2),
         );
         let mut want = x0.clone();
@@ -431,8 +435,8 @@ mod tests {
         let mut xs = x0.clone();
         let moved = gd_update(
             &plan,
-            Rounding::Sr,
-            Rounding::SignedSrEps(0.25),
+            Rounding::Sr.scheme(),
+            Rounding::SignedSrEps(0.25).scheme(),
             t,
             &mut xs,
             &ghat,

@@ -14,19 +14,22 @@
 use super::format::FpFormat;
 use super::round::{RoundPlan, Rounding};
 use super::rng::Rng;
+use super::scheme::Scheme;
 
 /// A low-precision computation context: all ops round into a fixed
-/// `(format, mode)` pair chosen at construction.
+/// `(format, scheme)` pair chosen at construction.
 ///
 /// The rounding constants are precomputed once ([`RoundPlan`]) — this is
 /// the (8a) gradient hot path, where a single evaluation performs
-/// `samples × features` scalar roundings. Format and mode are private so
+/// `samples × features` scalar roundings. Format and scheme are private so
 /// the cached plan can never desynchronize; build a fresh context to
-/// switch either.
+/// switch either. The scheme is any open-API [`Scheme`] handle; built-in
+/// schemes dispatch through their cached [`Rounding`] tag (no virtual call
+/// on the per-scalar path, bit-identical to the historic enum dispatch).
 #[derive(Debug, Clone)]
 pub struct LpCtx {
     fmt: FpFormat,
-    mode: Rounding,
+    mode: Scheme,
     /// Randomness stream for the stochastic schemes.
     pub rng: Rng,
     /// Number of rounding operations performed (profiling / op counting).
@@ -36,9 +39,18 @@ pub struct LpCtx {
 }
 
 impl LpCtx {
-    /// A context rounding into `fmt` with `mode`, drawing from `rng`.
-    pub fn new(fmt: FpFormat, mode: Rounding, rng: Rng) -> Self {
-        Self { fmt, mode, rng, rounding_ops: 0, plan: RoundPlan::new(fmt) }
+    /// A context rounding into `fmt` with `mode` (a [`Scheme`] or a legacy
+    /// [`Rounding`], both convert), drawing from `rng`.
+    pub fn new(fmt: FpFormat, mode: impl Into<Scheme>, rng: Rng) -> Self {
+        Self { fmt, mode: mode.into(), rng, rounding_ops: 0, plan: RoundPlan::new(fmt) }
+    }
+
+    /// The same context with `bits` random bits per stochastic slice
+    /// rounding (see [`RoundPlan::with_sr_bits`]); scalar entry points are
+    /// unaffected.
+    pub fn with_sr_bits(mut self, bits: u32) -> Self {
+        self.plan = RoundPlan::new(self.fmt).with_sr_bits(bits);
+        self
     }
 
     /// An exact (binary64) context — the "exact arithmetic" baseline.
@@ -52,7 +64,7 @@ impl LpCtx {
     }
 
     /// Rounding scheme applied to every operation result.
-    pub fn mode(&self) -> Rounding {
+    pub fn mode(&self) -> Scheme {
         self.mode
     }
 
@@ -62,7 +74,7 @@ impl LpCtx {
     /// never desynchronize from the format because both are private and
     /// fixed at construction.
     #[inline]
-    pub fn kernel_parts(&mut self) -> (RoundPlan, Rounding, &mut Rng) {
+    pub fn kernel_parts(&mut self) -> (RoundPlan, Scheme, &mut Rng) {
         (self.plan, self.mode, &mut self.rng)
     }
 
@@ -77,15 +89,16 @@ impl LpCtx {
     /// Round a scalar into the context's format.
     #[inline]
     pub fn fl(&mut self, x: f64) -> f64 {
-        self.rounding_ops += 1;
-        self.plan.round(self.mode, x, &mut self.rng)
+        self.fl_with(x, x)
     }
 
-    /// Round with an explicit steering value for `SignedSrEps`.
+    /// Round with an explicit steering value for steered schemes.
     #[inline]
     pub fn fl_with(&mut self, x: f64, v: f64) -> f64 {
         self.rounding_ops += 1;
-        self.plan.round_with(self.mode, x, v, &mut self.rng)
+        // One dispatch site for the builtin-tag/dyn rule: the plan's
+        // scheme entry point (built-ins take the cached-tag path).
+        self.plan.round_scheme_with(self.mode, x, v, &mut self.rng)
     }
 
     // ---- rounded elementary ops: fl(x op y) ----

@@ -1,14 +1,16 @@
 //! Low-precision floating-point substrate (systems S1–S4 of DESIGN.md):
-//! formats, rounding schemes (RN / directed / SR / SRε / signed-SRε),
+//! formats, rounding schemes (RN / directed / SR / SRε / signed-SRε plus
+//! any user scheme registered through the open [`scheme`] API),
 //! deterministic RNG streams with a bulk/few-random-bits API, rounded
 //! linear algebra, and the blocked rounding-aware kernels that drive the
-//! per-cell hot path (see `docs/performance.md`).
+//! per-cell hot path (see `docs/performance.md` and `docs/api.md`).
 
 pub mod format;
 pub mod kernels;
 pub mod linalg;
 pub mod rng;
 pub mod round;
+pub mod scheme;
 
 pub use format::FpFormat;
 pub use linalg::LpCtx;
@@ -17,3 +19,4 @@ pub use round::{
     expected_round, phi, round, round_slice, round_slice_with, round_with, RoundPlan, Rounding,
     DEFAULT_SR_BITS,
 };
+pub use scheme::{RoundingScheme, Scheme, SchemeError, SchemeRegistry};

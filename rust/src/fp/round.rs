@@ -42,11 +42,19 @@
 
 use super::format::FpFormat;
 use super::rng::{BitBlock, Rng};
+use super::scheme::{Scheme, SchemeError, SchemeRegistry};
 
 /// A rounding scheme. `SignedSrEps` requires a steering value `v` supplied
 /// per-element through [`round_with`]; the plain [`round`] entry point uses
 /// `v = x`, which makes `SignedSrEps(ε)` degenerate to `SrEps(ε)` — exactly
 /// the relationship noted under the paper's Algorithm 1.
+///
+/// **Deprecated shim.** This enum is the closed pre-redesign scheme set,
+/// kept for compatibility; the open API is the
+/// [`crate::fp::scheme::RoundingScheme`] trait, looked up through the
+/// [`SchemeRegistry`] and carried as a [`Scheme`] handle. Every variant
+/// converts losslessly (`Rounding::scheme()` / `From`), and the fused
+/// kernels below stay bit-identical either way.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Rounding {
     /// Round to nearest, ties to even (IEEE default). The paper's "RN".
@@ -84,24 +92,20 @@ impl Rounding {
         }
     }
 
-    /// Parse "rn" | "rd" | "ru" | "rz" | "sr" | "sr_eps:0.1" | "signed:0.1".
-    pub fn parse(s: &str) -> Option<Self> {
-        let s = s.trim().to_ascii_lowercase();
-        match s.as_str() {
-            "rn" => return Some(Rounding::RoundNearestEven),
-            "rd" => return Some(Rounding::RoundDown),
-            "ru" => return Some(Rounding::RoundUp),
-            "rz" => return Some(Rounding::RoundTowardZero),
-            "sr" => return Some(Rounding::Sr),
-            _ => {}
-        }
-        if let Some(rest) = s.strip_prefix("sr_eps:").or_else(|| s.strip_prefix("sreps:")) {
-            return rest.parse().ok().map(Rounding::SrEps);
-        }
-        if let Some(rest) = s.strip_prefix("signed:").or_else(|| s.strip_prefix("signed-sr_eps:")) {
-            return rest.parse().ok().map(Rounding::SignedSrEps);
-        }
-        None
+    /// Parse "rn" | "rd" | "ru" | "rz" | "sr" | "sr_eps:0.1" | "signed:0.1"
+    /// (case-insensitive). A thin shim over [`SchemeRegistry::lookup`]: on
+    /// failure the error lists every registered scheme name, and specs
+    /// naming a registered *custom* scheme (not expressible as this enum)
+    /// are reported as such rather than silently dropped.
+    pub fn parse(s: &str) -> Result<Self, SchemeError> {
+        let scheme = SchemeRegistry::lookup(s)?;
+        scheme.as_builtin().ok_or_else(|| SchemeError::NotBuiltin(s.trim().to_string()))
+    }
+
+    /// This mode as an open-API [`Scheme`] handle (same law, same fused
+    /// kernels; see [`crate::fp::scheme`]).
+    pub fn scheme(self) -> Scheme {
+        Scheme::from(self)
     }
 }
 
@@ -600,6 +604,72 @@ pub fn round_slice_with(fmt: &FpFormat, mode: Rounding, xs: &mut [f64], vs: &[f6
     RoundPlan::new(*fmt).round_slice_with(mode, xs, vs, rng);
 }
 
+// ------------------------------------------------- open-scheme dispatch --
+//
+// The `Scheme` entry points below are what the fused kernels, `LpCtx` and
+// the GD engine call. Built-in schemes carry their `Rounding` tag
+// (`Scheme::as_builtin`, cached at construction) and resolve to the exact
+// monomorphized paths above — bit-identical to pre-trait dispatch; user
+// schemes take a per-element dyn fallback through their scalar law.
+
+impl RoundPlan {
+    /// Round `x` under `scheme`, steering by `v` — the scheme-handle
+    /// counterpart of [`RoundPlan::round_with`].
+    #[inline]
+    pub fn round_scheme_with(&self, scheme: Scheme, x: f64, v: f64, rng: &mut Rng) -> f64 {
+        match scheme.as_builtin() {
+            Some(mode) => self.round_with(mode, x, v, rng),
+            None => scheme.as_impl().round(self, x, v, rng),
+        }
+    }
+
+    /// Round `x` under `scheme` with `v = x`.
+    #[inline]
+    pub fn round_scheme(&self, scheme: Scheme, x: f64, rng: &mut Rng) -> f64 {
+        self.round_scheme_with(scheme, x, x, rng)
+    }
+
+    /// Round every entry of a slice in place under `scheme` (plain `v = x`
+    /// steering) — the scheme-handle counterpart of
+    /// [`RoundPlan::round_slice`]. Built-ins run the fused kernels; user
+    /// schemes loop their scalar law.
+    pub fn round_slice_scheme(&self, scheme: Scheme, xs: &mut [f64], rng: &mut Rng) {
+        match scheme.as_builtin() {
+            Some(mode) => self.round_slice(mode, xs, rng),
+            None => {
+                let imp = scheme.as_impl();
+                for x in xs.iter_mut() {
+                    *x = imp.round(self, *x, *x, rng);
+                }
+            }
+        }
+    }
+
+    /// Round every entry under `scheme`, steering steered schemes per
+    /// element by `vs` — the scheme-handle counterpart of
+    /// [`RoundPlan::round_slice_with`]. Unsteered schemes ignore `vs`
+    /// (each element steers by itself), exactly as the enum path does.
+    pub fn round_slice_scheme_with(
+        &self,
+        scheme: Scheme,
+        xs: &mut [f64],
+        vs: &[f64],
+        rng: &mut Rng,
+    ) {
+        match scheme.as_builtin() {
+            Some(mode) => self.round_slice_with(mode, xs, vs, rng),
+            None if scheme.uses_steering() => {
+                debug_assert_eq!(xs.len(), vs.len());
+                let imp = scheme.as_impl();
+                for (x, &v) in xs.iter_mut().zip(vs) {
+                    *x = imp.round(self, *x, v, rng);
+                }
+            }
+            None => self.round_slice_scheme(scheme, xs, rng),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -967,14 +1037,59 @@ mod tests {
         for (s, m) in [
             ("rn", Rounding::RoundNearestEven),
             ("sr", Rounding::Sr),
+            ("SR", Rounding::Sr),
             ("sr_eps:0.1", Rounding::SrEps(0.1)),
             ("signed:0.4", Rounding::SignedSrEps(0.4)),
             ("rd", Rounding::RoundDown),
             ("ru", Rounding::RoundUp),
             ("rz", Rounding::RoundTowardZero),
         ] {
-            assert_eq!(Rounding::parse(s), Some(m));
+            assert_eq!(Rounding::parse(s), Ok(m));
         }
-        assert_eq!(Rounding::parse("bogus"), None);
+        let err = Rounding::parse("bogus").unwrap_err().to_string();
+        assert!(err.contains("bogus") && err.contains("signed_sr_eps"), "{err}");
+    }
+
+    /// The `Scheme`-handle dispatch is bit-identical to the enum paths for
+    /// every built-in mode, scalar and slice, consuming the same stream.
+    #[test]
+    fn scheme_dispatch_matches_enum_paths_bitwise() {
+        let modes = [
+            Rounding::RoundNearestEven,
+            Rounding::RoundDown,
+            Rounding::RoundUp,
+            Rounding::RoundTowardZero,
+            Rounding::Sr,
+            Rounding::SrEps(0.3),
+            Rounding::SignedSrEps(0.3),
+        ];
+        for fmt in [FpFormat::BINARY8, FpFormat::BFLOAT16] {
+            let plan = RoundPlan::new(fmt);
+            let (xs, vs) = test_inputs(&fmt, 250);
+            for mode in modes {
+                let scheme = mode.scheme();
+                // Scalar.
+                let (mut ra, mut rb) = (Rng::new(13), Rng::new(13));
+                for (&x, &v) in xs.iter().zip(&vs) {
+                    let want = plan.round_with(mode, x, v, &mut ra);
+                    let got = plan.round_scheme_with(scheme, x, v, &mut rb);
+                    assert!(
+                        want == got || (want.is_nan() && got.is_nan()),
+                        "{mode:?} scalar x={x}"
+                    );
+                }
+                assert_eq!(ra.next_u64(), rb.next_u64(), "{mode:?} scalar stream");
+                // Slice, steered.
+                let (mut ra, mut rb) = (Rng::new(14), Rng::new(14));
+                let mut a = xs.clone();
+                let mut b = xs.clone();
+                plan.round_slice_with(mode, &mut a, &vs, &mut ra);
+                plan.round_slice_scheme_with(scheme, &mut b, &vs, &mut rb);
+                for (x, y) in a.iter().zip(&b) {
+                    assert!(x == y || (x.is_nan() && y.is_nan()), "{mode:?} slice");
+                }
+                assert_eq!(ra.next_u64(), rb.next_u64(), "{mode:?} slice stream");
+            }
+        }
     }
 }

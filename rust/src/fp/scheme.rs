@@ -1,0 +1,785 @@
+//! The open rounding-scheme API: the [`RoundingScheme`] trait, the
+//! [`Scheme`] handle, and the [`SchemeRegistry`].
+//!
+//! The paper studies a *family* of rounding schemes (RN, directed modes,
+//! SR, SRε, signed-SRε) under one GD harness, and follow-up work keeps
+//! extending the family — fixed-point SR under the PŁ inequality
+//! (arXiv:2301.09511), few-random-bit SR variants (arXiv:2504.20634).
+//! Historically the family was the closed [`Rounding`] enum, matched in
+//! five layers; adding a scheme meant editing all of them. This module
+//! opens the family:
+//!
+//! * [`RoundingScheme`] is the scheme *law*: the scalar rounding rule
+//!   `round(plan, x, v, rng)`, the closed-form bias oracle
+//!   [`RoundingScheme::expected_round`], and the metadata
+//!   (`is_stochastic`, `bits_per_element`, `label`) the harness needs.
+//! * [`Scheme`] is a `Copy` handle (`&'static dyn RoundingScheme` plus a
+//!   cached [`RoundingScheme::as_builtin`] tag) that flows through configs
+//!   and kernels. Built-in schemes resolve through the tag to the same
+//!   monomorphized fused slice kernels as before — **bit-identical
+//!   trajectories** — while user schemes take a dyn per-element fallback.
+//! * [`SchemeRegistry`] maps spec strings (`"rn"`, `"sr"`,
+//!   `"sr_eps:0.25"`, …) to schemes, lists every registered scheme for
+//!   CLI help and error messages, and accepts new schemes at runtime via
+//!   [`SchemeRegistry::register`].
+//!
+//! The old [`Rounding`] enum remains as a thin deprecated shim: it
+//! converts into a [`Scheme`] (`Rounding::scheme()` / `From`), and
+//! `Rounding::parse` is a registry lookup restricted to built-ins.
+//! See `docs/api.md` for the front-door walkthrough and migration table.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Mutex, OnceLock, RwLock};
+
+use super::format::FpFormat;
+use super::rng::Rng;
+use super::round::{self, RoundPlan, Rounding};
+
+/// One rounding scheme: the scalar law plus the metadata the GD harness,
+/// the bias oracle (Figure 1) and the conformance suite consume.
+///
+/// # Contract
+///
+/// * [`RoundingScheme::round`] must return a value representable in
+///   `plan.fmt` (or NaN for NaN input); the conformance suite
+///   (`rust/tests/scheme_conformance.rs`) checks outputs are (saturated)
+///   neighbors of the input.
+/// * [`RoundingScheme::expected_round`] must be the exact closed-form mean
+///   of `round` (it is checked against the empirical mean).
+/// * Deterministic schemes (`is_stochastic() == false`) must not consume
+///   randomness.
+/// * Implementations registered with [`SchemeRegistry::register`] must be
+///   `'static` (typically a `static` unit/tuple struct).
+pub trait RoundingScheme: Sync + Send {
+    /// Canonical spec string, re-parseable by [`SchemeRegistry::lookup`]
+    /// (e.g. `"sr_eps:0.25"`).
+    fn name(&self) -> String;
+
+    /// Human-readable label for reports (e.g. `"SR_eps(0.25)"`). Defaults
+    /// to [`RoundingScheme::name`].
+    fn label(&self) -> String {
+        self.name()
+    }
+
+    /// Does the scheme consume randomness?
+    fn is_stochastic(&self) -> bool;
+
+    /// Does the scalar law read the steering value `v` (as signed-SRε
+    /// does)? Steered schemes receive per-element steering vectors from
+    /// the GD engine; unsteered ones get `v = x`. Defaults to `false`.
+    fn uses_steering(&self) -> bool {
+        false
+    }
+
+    /// Random bits consumed per inexact element on the slice path.
+    /// Default: 0 for deterministic schemes; `plan.sr_bits()` for
+    /// stochastic *built-ins* (they run the fused few-random-bits
+    /// kernels); 64 for stochastic custom schemes, whose per-element dyn
+    /// fallback typically draws one full word per inexact rounding
+    /// (`Rng::uniform`). Override when your law consumes differently.
+    fn bits_per_element(&self, plan: &RoundPlan) -> u32 {
+        if !self.is_stochastic() {
+            0
+        } else if self.as_builtin().is_some() {
+            plan.sr_bits()
+        } else {
+            64
+        }
+    }
+
+    /// The scalar rounding law: round `x` into `plan.fmt`, steering by
+    /// `v` where applicable, drawing randomness from `rng`.
+    fn round(&self, plan: &RoundPlan, x: f64, v: f64, rng: &mut Rng) -> f64;
+
+    /// Closed-form expectation `E[fl(x)]` under this scheme — the bias
+    /// oracle used by Figure 1 and the conformance suite.
+    fn expected_round(&self, fmt: &FpFormat, x: f64, v: f64) -> f64;
+
+    /// The built-in [`Rounding`] mode this scheme is, if any. Built-in
+    /// schemes return `Some`, which routes every slice entry point to the
+    /// monomorphized fused kernels of [`RoundPlan`] (bit-identical to the
+    /// pre-trait paths); user schemes keep the default `None` and take
+    /// the dyn per-element fallback.
+    fn as_builtin(&self) -> Option<Rounding> {
+        None
+    }
+}
+
+/// A copyable handle to a registered rounding scheme — the type that flows
+/// through [`crate::gd::SchemePolicy`], [`crate::fp::LpCtx`] and the fused
+/// kernels. Obtain one from [`SchemeRegistry::lookup`], the named
+/// constructors ([`Scheme::rn`], [`Scheme::sr`], [`Scheme::sr_eps`], …) or
+/// a legacy [`Rounding`] via `From`.
+#[derive(Clone, Copy)]
+pub struct Scheme {
+    imp: &'static dyn RoundingScheme,
+    /// Cached `imp.as_builtin()` so hot paths dispatch without a virtual
+    /// call.
+    builtin: Option<Rounding>,
+}
+
+impl Scheme {
+    /// Wrap a `'static` scheme implementation.
+    pub fn from_impl(imp: &'static dyn RoundingScheme) -> Self {
+        Scheme { builtin: imp.as_builtin(), imp }
+    }
+
+    /// Round-to-nearest, ties to even (the paper's RN).
+    pub fn rn() -> Self {
+        Self::from_impl(&RnScheme)
+    }
+
+    /// Round toward −∞.
+    pub fn rd() -> Self {
+        Self::from_impl(&RdScheme)
+    }
+
+    /// Round toward +∞.
+    pub fn ru() -> Self {
+        Self::from_impl(&RuScheme)
+    }
+
+    /// Round toward zero.
+    pub fn rz() -> Self {
+        Self::from_impl(&RzScheme)
+    }
+
+    /// Unbiased stochastic rounding (Definition 1).
+    pub fn sr() -> Self {
+        Self::from_impl(&SrScheme)
+    }
+
+    /// ε-biased stochastic rounding (Definition 2), bias away from zero.
+    pub fn sr_eps(eps: f64) -> Self {
+        intern(1, eps, || Box::new(SrEpsScheme(eps)))
+    }
+
+    /// Signed ε-biased stochastic rounding (Definition 3), bias steered by
+    /// the per-element value `v` (the gradient entry in GD).
+    pub fn signed_sr_eps(eps: f64) -> Self {
+        intern(2, eps, || Box::new(SignedSrEpsScheme(eps)))
+    }
+
+    /// Parse a spec string through the registry (`"sr"`, `"sr_eps:0.4"`,
+    /// any registered custom name). Shorthand for
+    /// [`SchemeRegistry::lookup`].
+    pub fn parse(spec: &str) -> Result<Self, SchemeError> {
+        SchemeRegistry::lookup(spec)
+    }
+
+    /// The underlying trait implementation.
+    pub fn as_impl(&self) -> &'static dyn RoundingScheme {
+        self.imp
+    }
+
+    /// The built-in [`Rounding`] mode, if this scheme is one (cached; no
+    /// virtual call).
+    #[inline]
+    pub fn as_builtin(&self) -> Option<Rounding> {
+        self.builtin
+    }
+
+    /// Canonical spec string (see [`RoundingScheme::name`]).
+    pub fn name(&self) -> String {
+        self.imp.name()
+    }
+
+    /// Human-readable label (see [`RoundingScheme::label`]).
+    pub fn label(&self) -> String {
+        self.imp.label()
+    }
+
+    /// Does the scheme consume randomness?
+    #[inline]
+    pub fn is_stochastic(&self) -> bool {
+        match self.builtin {
+            Some(m) => m.is_stochastic(),
+            None => self.imp.is_stochastic(),
+        }
+    }
+
+    /// Does the scalar law read the steering value `v`?
+    #[inline]
+    pub fn uses_steering(&self) -> bool {
+        match self.builtin {
+            Some(m) => matches!(m, Rounding::SignedSrEps(_)),
+            None => self.imp.uses_steering(),
+        }
+    }
+
+    /// Random bits per inexact element on the fused slice path.
+    pub fn bits_per_element(&self, plan: &RoundPlan) -> u32 {
+        self.imp.bits_per_element(plan)
+    }
+
+    /// Scalar rounding with steering — dispatches to the monomorphized
+    /// built-in path or the dyn law (see [`RoundPlan::round_scheme_with`]).
+    #[inline]
+    pub fn round_with(&self, plan: &RoundPlan, x: f64, v: f64, rng: &mut Rng) -> f64 {
+        plan.round_scheme_with(*self, x, v, rng)
+    }
+
+    /// Scalar rounding with `v = x`.
+    #[inline]
+    pub fn round(&self, plan: &RoundPlan, x: f64, rng: &mut Rng) -> f64 {
+        plan.round_scheme_with(*self, x, x, rng)
+    }
+
+    /// Closed-form expectation `E[fl(x)]` (see
+    /// [`RoundingScheme::expected_round`]).
+    pub fn expected_round(&self, fmt: &FpFormat, x: f64, v: f64) -> f64 {
+        match self.builtin {
+            Some(m) => round::expected_round(fmt, m, x, v),
+            None => self.imp.expected_round(fmt, x, v),
+        }
+    }
+}
+
+impl fmt::Debug for Scheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Scheme({})", self.imp.name())
+    }
+}
+
+impl PartialEq for Scheme {
+    fn eq(&self, other: &Self) -> bool {
+        match (self.builtin, other.builtin) {
+            (Some(a), Some(b)) => a == b,
+            (None, None) => {
+                // Thin-pointer identity: custom schemes are registered
+                // statics (or interned leaks), so one instance == one law.
+                std::ptr::eq(
+                    self.imp as *const dyn RoundingScheme as *const u8,
+                    other.imp as *const dyn RoundingScheme as *const u8,
+                )
+            }
+            _ => false,
+        }
+    }
+}
+
+impl From<Rounding> for Scheme {
+    fn from(mode: Rounding) -> Self {
+        match mode {
+            Rounding::RoundNearestEven => Scheme::rn(),
+            Rounding::RoundDown => Scheme::rd(),
+            Rounding::RoundUp => Scheme::ru(),
+            Rounding::RoundTowardZero => Scheme::rz(),
+            Rounding::Sr => Scheme::sr(),
+            Rounding::SrEps(e) => Scheme::sr_eps(e),
+            Rounding::SignedSrEps(e) => Scheme::signed_sr_eps(e),
+        }
+    }
+}
+
+// ------------------------------------------------------------ built-ins --
+
+macro_rules! builtin_scheme {
+    ($(#[$doc:meta])* $ty:ident, $name:expr, $mode:expr, $stochastic:expr) => {
+        $(#[$doc])*
+        pub struct $ty;
+
+        impl RoundingScheme for $ty {
+            fn name(&self) -> String {
+                $name.into()
+            }
+            fn label(&self) -> String {
+                $mode.label()
+            }
+            fn is_stochastic(&self) -> bool {
+                $stochastic
+            }
+            fn round(&self, plan: &RoundPlan, x: f64, v: f64, rng: &mut Rng) -> f64 {
+                plan.round_with($mode, x, v, rng)
+            }
+            fn expected_round(&self, fmt: &FpFormat, x: f64, v: f64) -> f64 {
+                round::expected_round(fmt, $mode, x, v)
+            }
+            fn as_builtin(&self) -> Option<Rounding> {
+                Some($mode)
+            }
+        }
+    };
+}
+
+builtin_scheme!(
+    /// Round-to-nearest, ties to even, as a registered scheme.
+    RnScheme,
+    "rn",
+    Rounding::RoundNearestEven,
+    false
+);
+builtin_scheme!(
+    /// Round toward −∞ as a registered scheme.
+    RdScheme,
+    "rd",
+    Rounding::RoundDown,
+    false
+);
+builtin_scheme!(
+    /// Round toward +∞ as a registered scheme.
+    RuScheme,
+    "ru",
+    Rounding::RoundUp,
+    false
+);
+builtin_scheme!(
+    /// Round toward zero as a registered scheme.
+    RzScheme,
+    "rz",
+    Rounding::RoundTowardZero,
+    false
+);
+builtin_scheme!(
+    /// Unbiased stochastic rounding (Definition 1) as a registered scheme.
+    SrScheme,
+    "sr",
+    Rounding::Sr,
+    true
+);
+
+/// ε-biased stochastic rounding (Definition 2) as a registered scheme.
+pub struct SrEpsScheme(
+    /// The ε bias parameter (the paper's ε ∈ [0, ½]).
+    pub f64,
+);
+
+impl RoundingScheme for SrEpsScheme {
+    fn name(&self) -> String {
+        format!("sr_eps:{}", self.0)
+    }
+    fn label(&self) -> String {
+        Rounding::SrEps(self.0).label()
+    }
+    fn is_stochastic(&self) -> bool {
+        true
+    }
+    fn round(&self, plan: &RoundPlan, x: f64, v: f64, rng: &mut Rng) -> f64 {
+        plan.round_with(Rounding::SrEps(self.0), x, v, rng)
+    }
+    fn expected_round(&self, fmt: &FpFormat, x: f64, v: f64) -> f64 {
+        round::expected_round(fmt, Rounding::SrEps(self.0), x, v)
+    }
+    fn as_builtin(&self) -> Option<Rounding> {
+        Some(Rounding::SrEps(self.0))
+    }
+}
+
+/// Signed ε-biased stochastic rounding (Definition 3) as a registered
+/// scheme; the bias direction is steered per element.
+pub struct SignedSrEpsScheme(
+    /// The ε bias parameter (the paper's ε ∈ [0, ½]).
+    pub f64,
+);
+
+impl RoundingScheme for SignedSrEpsScheme {
+    fn name(&self) -> String {
+        format!("signed_sr_eps:{}", self.0)
+    }
+    fn label(&self) -> String {
+        Rounding::SignedSrEps(self.0).label()
+    }
+    fn is_stochastic(&self) -> bool {
+        true
+    }
+    fn uses_steering(&self) -> bool {
+        true
+    }
+    fn round(&self, plan: &RoundPlan, x: f64, v: f64, rng: &mut Rng) -> f64 {
+        plan.round_with(Rounding::SignedSrEps(self.0), x, v, rng)
+    }
+    fn expected_round(&self, fmt: &FpFormat, x: f64, v: f64) -> f64 {
+        round::expected_round(fmt, Rounding::SignedSrEps(self.0), x, v)
+    }
+    fn as_builtin(&self) -> Option<Rounding> {
+        Some(Rounding::SignedSrEps(self.0))
+    }
+}
+
+/// Intern table for parameterized built-in instances: one leaked instance
+/// per distinct `(family, ε)`, so `Scheme` handles stay `Copy` and repeated
+/// lookups of the same spec return the same `'static` reference.
+fn intern(
+    family: u8,
+    eps: f64,
+    make: impl FnOnce() -> Box<dyn RoundingScheme>,
+) -> Scheme {
+    static TABLE: OnceLock<Mutex<HashMap<(u8, u64), &'static dyn RoundingScheme>>> =
+        OnceLock::new();
+    let table = TABLE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = table.lock().unwrap();
+    let imp = *map
+        .entry((family, eps.to_bits()))
+        .or_insert_with(|| Box::leak(make()));
+    Scheme::from_impl(imp)
+}
+
+// ------------------------------------------------------------- registry --
+
+/// Errors from scheme parsing, registration and the [`crate::gd::RunBuilder`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchemeError {
+    /// The spec named no registered scheme; carries the registered names.
+    UnknownScheme {
+        /// The spec string as given.
+        given: String,
+        /// Comma-separated registered scheme names.
+        known: String,
+    },
+    /// The scheme exists but its `:ε` parameter did not parse.
+    BadParam {
+        /// The scheme family name.
+        family: String,
+        /// The unparseable parameter text.
+        given: String,
+    },
+    /// [`SchemeRegistry::register`] was given an already-taken or invalid
+    /// name.
+    BadRegistration(String),
+    /// The spec resolved to a registered scheme that is not expressible as
+    /// the legacy [`Rounding`] enum (raised only by `Rounding::parse`).
+    NotBuiltin(String),
+    /// An unknown floating-point format name (raised by the run builder).
+    UnknownFormat(String),
+}
+
+impl fmt::Display for SchemeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SchemeError::UnknownScheme { given, known } => {
+                write!(f, "unknown rounding scheme '{given}' (registered schemes: {known})")
+            }
+            SchemeError::BadParam { family, given } => {
+                write!(f, "bad parameter '{given}' for scheme '{family}' (expected '{family}:<eps>', e.g. '{family}:0.25')")
+            }
+            SchemeError::BadRegistration(msg) => write!(f, "scheme registration rejected: {msg}"),
+            SchemeError::NotBuiltin(name) => {
+                write!(f, "scheme '{name}' is registered but is not a built-in `Rounding` mode; use `SchemeRegistry::lookup` / the run builder instead of `Rounding::parse`")
+            }
+            SchemeError::UnknownFormat(name) => {
+                write!(f, "unknown floating-point format '{name}' (known: binary8, bfloat16, binary16, binary32, binary64)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SchemeError {}
+
+/// Default ε for `sr_eps` / `signed_sr_eps` specs given without a
+/// parameter (the mid-range value used throughout the repo's tests).
+pub const DEFAULT_EPS: f64 = 0.25;
+
+/// A built-in scheme family the registry can instantiate from a spec.
+struct Family {
+    /// Canonical name (what error messages and `--help` list).
+    name: &'static str,
+    /// Accepted aliases (legacy spellings kept parseable).
+    aliases: &'static [&'static str],
+    /// Does the family take a `:ε` parameter?
+    takes_param: bool,
+    /// One-line description for `--help`.
+    summary: &'static str,
+    /// Instantiate; `None` means no parameter was given.
+    build: fn(Option<f64>) -> Scheme,
+}
+
+const FAMILIES: &[Family] = &[
+    Family {
+        name: "rn",
+        aliases: &[],
+        takes_param: false,
+        summary: "round-to-nearest, ties to even (IEEE default; stagnates, Fig. 2)",
+        build: |_| Scheme::rn(),
+    },
+    Family {
+        name: "rd",
+        aliases: &[],
+        takes_param: false,
+        summary: "round toward -inf",
+        build: |_| Scheme::rd(),
+    },
+    Family {
+        name: "ru",
+        aliases: &[],
+        takes_param: false,
+        summary: "round toward +inf",
+        build: |_| Scheme::ru(),
+    },
+    Family {
+        name: "rz",
+        aliases: &[],
+        takes_param: false,
+        summary: "round toward zero",
+        build: |_| Scheme::rz(),
+    },
+    Family {
+        name: "sr",
+        aliases: &[],
+        takes_param: false,
+        summary: "unbiased stochastic rounding (Definition 1)",
+        build: |_| Scheme::sr(),
+    },
+    Family {
+        name: "sr_eps",
+        aliases: &["sreps"],
+        takes_param: true,
+        summary: "eps-biased stochastic rounding, bias away from zero (Definition 2)",
+        build: |p| Scheme::sr_eps(p.unwrap_or(DEFAULT_EPS)),
+    },
+    Family {
+        name: "signed_sr_eps",
+        aliases: &["signed", "signed-sr_eps"],
+        takes_param: true,
+        summary: "signed eps-biased stochastic rounding, bias steered per element (Definition 3)",
+        build: |p| Scheme::signed_sr_eps(p.unwrap_or(DEFAULT_EPS)),
+    },
+];
+
+fn custom_registry() -> &'static RwLock<Vec<&'static dyn RoundingScheme>> {
+    static CUSTOM: OnceLock<RwLock<Vec<&'static dyn RoundingScheme>>> = OnceLock::new();
+    CUSTOM.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+fn unknown(spec: &str) -> SchemeError {
+    SchemeError::UnknownScheme {
+        given: spec.trim().to_string(),
+        known: SchemeRegistry::names().join(", "),
+    }
+}
+
+/// The process-wide scheme registry: every built-in family plus any scheme
+/// added through [`SchemeRegistry::register`]. Spec strings are
+/// case-insensitive and whitespace-trimmed.
+pub struct SchemeRegistry;
+
+impl SchemeRegistry {
+    /// Resolve a spec string to a scheme: a built-in family (optionally
+    /// parameterized, `"sr_eps:0.4"`), a legacy alias (`"signed:0.1"`),
+    /// or the exact name of a registered custom scheme.
+    pub fn lookup(spec: &str) -> Result<Scheme, SchemeError> {
+        let s = spec.trim().to_ascii_lowercase();
+        if s.is_empty() {
+            return Err(unknown(spec));
+        }
+        // Custom schemes match on their exact registered name.
+        for imp in custom_registry().read().unwrap().iter() {
+            if imp.name().to_ascii_lowercase() == s {
+                return Ok(Scheme::from_impl(*imp));
+            }
+        }
+        let (fam_name, param) = match s.split_once(':') {
+            Some((f, p)) => (f, Some(p)),
+            None => (s.as_str(), None),
+        };
+        let fam = FAMILIES
+            .iter()
+            .find(|f| f.name == fam_name || f.aliases.contains(&fam_name))
+            .ok_or_else(|| unknown(spec))?;
+        let param = match param {
+            None => None,
+            Some(p) if fam.takes_param => Some(p.parse::<f64>().map_err(|_| {
+                SchemeError::BadParam { family: fam.name.into(), given: p.into() }
+            })?),
+            Some(_) => return Err(unknown(spec)), // e.g. "rn:0.5"
+        };
+        Ok((fam.build)(param))
+    }
+
+    /// Register a custom scheme under its [`RoundingScheme::name`]. The
+    /// name must be non-empty, contain no `':'`, and collide with no
+    /// built-in family, alias, or previously registered scheme.
+    pub fn register(imp: &'static dyn RoundingScheme) -> Result<(), SchemeError> {
+        let name = imp.name().trim().to_ascii_lowercase();
+        if name.is_empty() || name.contains(':') {
+            return Err(SchemeError::BadRegistration(format!(
+                "invalid scheme name '{name}' (must be non-empty, no ':')"
+            )));
+        }
+        if FAMILIES.iter().any(|f| f.name == name || f.aliases.contains(&name.as_str())) {
+            return Err(SchemeError::BadRegistration(format!(
+                "name '{name}' collides with a built-in scheme"
+            )));
+        }
+        let mut custom = custom_registry().write().unwrap();
+        if custom.iter().any(|c| c.name().to_ascii_lowercase() == name) {
+            return Err(SchemeError::BadRegistration(format!(
+                "name '{name}' is already registered"
+            )));
+        }
+        custom.push(imp);
+        Ok(())
+    }
+
+    /// Registered scheme names with parameter hints, built-ins first —
+    /// what `--help` and the unknown-scheme error list.
+    pub fn names() -> Vec<String> {
+        let mut out: Vec<String> = FAMILIES
+            .iter()
+            .map(|f| if f.takes_param { format!("{}[:eps]", f.name) } else { f.name.into() })
+            .collect();
+        out.extend(custom_registry().read().unwrap().iter().map(|c| c.name()));
+        out
+    }
+
+    /// `(name-with-hint, aliases, summary)` rows for every registered
+    /// scheme — the `--help` listing.
+    pub fn entries() -> Vec<(String, String, String)> {
+        let mut out: Vec<(String, String, String)> = FAMILIES
+            .iter()
+            .map(|f| {
+                let name =
+                    if f.takes_param { format!("{}[:eps]", f.name) } else { f.name.to_string() };
+                (name, f.aliases.join(", "), f.summary.to_string())
+            })
+            .collect();
+        out.extend(
+            custom_registry()
+                .read()
+                .unwrap()
+                .iter()
+                .map(|c| (c.name(), String::new(), format!("custom scheme ({})", c.label()))),
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_builtins_and_aliases() {
+        for (spec, mode) in [
+            ("rn", Rounding::RoundNearestEven),
+            ("RD", Rounding::RoundDown),
+            ("ru", Rounding::RoundUp),
+            ("rz", Rounding::RoundTowardZero),
+            (" sr ", Rounding::Sr),
+            ("sr_eps:0.1", Rounding::SrEps(0.1)),
+            ("SREPS:0.1", Rounding::SrEps(0.1)),
+            ("signed:0.4", Rounding::SignedSrEps(0.4)),
+            ("signed-sr_eps:0.4", Rounding::SignedSrEps(0.4)),
+            ("signed_sr_eps:0.4", Rounding::SignedSrEps(0.4)),
+        ] {
+            let s = SchemeRegistry::lookup(spec).unwrap();
+            assert_eq!(s.as_builtin(), Some(mode), "{spec}");
+        }
+        // Parameterized families without a parameter use the default ε.
+        assert_eq!(
+            SchemeRegistry::lookup("sr_eps").unwrap().as_builtin(),
+            Some(Rounding::SrEps(DEFAULT_EPS))
+        );
+    }
+
+    #[test]
+    fn lookup_errors_are_descriptive() {
+        let e = SchemeRegistry::lookup("bogus").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("bogus") && msg.contains("sr_eps"), "{msg}");
+        assert!(matches!(
+            SchemeRegistry::lookup("sr_eps:xyz").unwrap_err(),
+            SchemeError::BadParam { .. }
+        ));
+        // Parameter on a parameterless family is unknown, not a panic.
+        assert!(SchemeRegistry::lookup("rn:0.5").is_err());
+        assert!(SchemeRegistry::lookup("").is_err());
+    }
+
+    #[test]
+    fn interning_is_stable_and_eq_works() {
+        let a = Scheme::sr_eps(0.25);
+        let b = SchemeRegistry::lookup("sr_eps:0.25").unwrap();
+        assert_eq!(a, b);
+        assert!(std::ptr::eq(
+            a.as_impl() as *const dyn RoundingScheme as *const u8,
+            b.as_impl() as *const dyn RoundingScheme as *const u8
+        ));
+        assert_ne!(Scheme::sr_eps(0.25), Scheme::sr_eps(0.1));
+        assert_ne!(Scheme::sr(), Scheme::rn());
+        assert_eq!(Scheme::from(Rounding::Sr), Scheme::sr());
+    }
+
+    #[test]
+    fn names_roundtrip_through_lookup() {
+        for scheme in [
+            Scheme::rn(),
+            Scheme::rd(),
+            Scheme::ru(),
+            Scheme::rz(),
+            Scheme::sr(),
+            Scheme::sr_eps(0.3),
+            Scheme::signed_sr_eps(0.15),
+        ] {
+            let again = SchemeRegistry::lookup(&scheme.name()).unwrap();
+            assert_eq!(scheme, again, "{}", scheme.name());
+        }
+    }
+
+    #[test]
+    fn metadata_matches_the_enum() {
+        assert!(!Scheme::rn().is_stochastic());
+        assert!(Scheme::sr().is_stochastic());
+        assert!(!Scheme::sr().uses_steering());
+        assert!(Scheme::signed_sr_eps(0.1).uses_steering());
+        assert_eq!(Scheme::sr_eps(0.1).label(), Rounding::SrEps(0.1).label());
+        let plan = RoundPlan::new(FpFormat::BINARY8);
+        assert_eq!(Scheme::rn().bits_per_element(&plan), 0);
+        assert_eq!(Scheme::sr().bits_per_element(&plan), plan.sr_bits());
+    }
+
+    #[test]
+    fn register_rejects_collisions() {
+        struct Dup;
+        impl RoundingScheme for Dup {
+            fn name(&self) -> String {
+                "sr".into()
+            }
+            fn is_stochastic(&self) -> bool {
+                false
+            }
+            fn round(&self, _: &RoundPlan, x: f64, _: f64, _: &mut Rng) -> f64 {
+                x
+            }
+            fn expected_round(&self, _: &FpFormat, x: f64, _: f64) -> f64 {
+                x
+            }
+        }
+        static DUP: Dup = Dup;
+        assert!(matches!(
+            SchemeRegistry::register(&DUP),
+            Err(SchemeError::BadRegistration(_))
+        ));
+    }
+
+    #[test]
+    fn custom_scheme_registers_and_resolves() {
+        /// Always-floor test scheme (deterministic, trivially conformant).
+        struct AlwaysDown;
+        impl RoundingScheme for AlwaysDown {
+            fn name(&self) -> String {
+                "unit_test_down".into()
+            }
+            fn is_stochastic(&self) -> bool {
+                false
+            }
+            fn round(&self, plan: &RoundPlan, x: f64, v: f64, rng: &mut Rng) -> f64 {
+                plan.round_with(Rounding::RoundDown, x, v, rng)
+            }
+            fn expected_round(&self, fmt: &FpFormat, x: f64, v: f64) -> f64 {
+                round::expected_round(fmt, Rounding::RoundDown, x, v)
+            }
+        }
+        static DOWN: AlwaysDown = AlwaysDown;
+        // Idempotent across test orderings within the process.
+        let _ = SchemeRegistry::register(&DOWN);
+        let s = SchemeRegistry::lookup("unit_test_down").unwrap();
+        assert_eq!(s.as_builtin(), None);
+        assert!(SchemeRegistry::names().iter().any(|n| n == "unit_test_down"));
+        let plan = RoundPlan::new(FpFormat::BINARY8);
+        let mut rng = Rng::new(0);
+        assert_eq!(s.round(&plan, 1.1, &mut rng), 1.0);
+        // Second registration under the same name is rejected.
+        assert!(SchemeRegistry::register(&DOWN).is_err());
+    }
+}

@@ -1,0 +1,309 @@
+//! [`RunBuilder`] — the documented front door for configuring and running
+//! one low-precision GD experiment, replacing the historic sprawl of
+//! `GdConfig::new` + `StepSchemes` + free rounding functions:
+//!
+//! ```no_run
+//! use lpgd::gd::RunBuilder;
+//! use lpgd::fp::FpFormat;
+//! use lpgd::problems::Quadratic;
+//!
+//! let (p, x0, t) = Quadratic::setting1(1000);
+//! let mut session = RunBuilder::new(&p)
+//!     .format(FpFormat::BFLOAT16)
+//!     .scheme("sr_eps:0.1")     // any registered scheme, per-tensor overridable
+//!     .sub_scheme("signed:0.1") // mixed policy: distinct scheme for (8c)
+//!     .sr_bits(8)               // few-random-bits knob
+//!     .stepsize(t)
+//!     .steps(4000)
+//!     .seed(7)
+//!     .start(&x0)
+//!     .build()
+//!     .unwrap();
+//! let trace = session.run(None);
+//! println!("final f = {}", trace.final_f());
+//! ```
+//!
+//! Scheme specs go through [`crate::fp::scheme::SchemeRegistry`], so user
+//! schemes registered at runtime work everywhere a built-in does. Spec
+//! errors are deferred: setters never panic, and [`RunBuilder::build`]
+//! reports the first one. See `docs/api.md` for the quick-start and the
+//! migration table from the old API.
+
+use crate::fp::format::FpFormat;
+use crate::fp::rng::Rng;
+use crate::fp::round::DEFAULT_SR_BITS;
+use crate::fp::scheme::{Scheme, SchemeError, SchemeRegistry};
+use crate::gd::engine::{GdConfig, GdEngine, GradModel, SchemePolicy};
+use crate::gd::trace::Trace;
+use crate::problems::Problem;
+
+/// Builder-style configuration of one GD run over a [`Problem`].
+///
+/// Defaults: binary8, SR on all three steps, the chop-style
+/// `RoundAfterOp` σ₁ model, `t = 0.5`, 100 steps, seed 0, default
+/// `sr_bits`, `x0 = 0`.
+pub struct RunBuilder<'p> {
+    problem: &'p dyn Problem,
+    fmt: FpFormat,
+    policy: SchemePolicy,
+    grad_model: GradModel,
+    t: f64,
+    steps: usize,
+    seed: u64,
+    rng: Option<Rng>,
+    sr_bits: u32,
+    record_tau: bool,
+    x0: Option<Vec<f64>>,
+    err: Option<SchemeError>,
+}
+
+impl<'p> RunBuilder<'p> {
+    /// Start configuring a run of `problem` with the documented defaults.
+    pub fn new(problem: &'p dyn Problem) -> Self {
+        Self {
+            problem,
+            fmt: FpFormat::BINARY8,
+            policy: SchemePolicy::uniform(Scheme::sr()),
+            grad_model: GradModel::RoundAfterOp,
+            t: 0.5,
+            steps: 100,
+            seed: 0,
+            rng: None,
+            sr_bits: DEFAULT_SR_BITS,
+            record_tau: false,
+            x0: None,
+            err: None,
+        }
+    }
+
+    /// Working floating-point format.
+    pub fn format(mut self, fmt: FpFormat) -> Self {
+        self.fmt = fmt;
+        self
+    }
+
+    /// Working format by name (`"binary8"`, `"bfloat16"`, …); unknown
+    /// names surface as an error from [`RunBuilder::build`].
+    pub fn format_name(mut self, name: &str) -> Self {
+        match FpFormat::by_name(name) {
+            Some(f) => self.fmt = f,
+            None => self.stash(SchemeError::UnknownFormat(name.to_string())),
+        }
+        self
+    }
+
+    /// One scheme spec for all three rounding sites (8a)/(8b)/(8c).
+    pub fn scheme(mut self, spec: &str) -> Self {
+        match SchemeRegistry::lookup(spec) {
+            Ok(s) => self.policy = SchemePolicy::uniform(s),
+            Err(e) => self.stash(e),
+        }
+        self
+    }
+
+    /// Scheme for the gradient evaluation (8a) only.
+    pub fn grad_scheme(mut self, spec: &str) -> Self {
+        match SchemeRegistry::lookup(spec) {
+            Ok(s) => self.policy.grad = s,
+            Err(e) => self.stash(e),
+        }
+        self
+    }
+
+    /// Scheme for the stepsize multiplication (8b) only.
+    pub fn mul_scheme(mut self, spec: &str) -> Self {
+        match SchemeRegistry::lookup(spec) {
+            Ok(s) => self.policy.mul = s,
+            Err(e) => self.stash(e),
+        }
+        self
+    }
+
+    /// Scheme for the iterate subtraction (8c) only.
+    pub fn sub_scheme(mut self, spec: &str) -> Self {
+        match SchemeRegistry::lookup(spec) {
+            Ok(s) => self.policy.sub = s,
+            Err(e) => self.stash(e),
+        }
+        self
+    }
+
+    /// Set the whole per-tensor policy from already-resolved handles.
+    pub fn policy(mut self, policy: impl Into<SchemePolicy>) -> Self {
+        self.policy = policy.into();
+        self
+    }
+
+    /// Random bits per stochastic slice rounding (few-random-bits knob).
+    pub fn sr_bits(mut self, bits: u32) -> Self {
+        self.sr_bits = bits;
+        self
+    }
+
+    /// Fixed stepsize `t`.
+    pub fn stepsize(mut self, t: f64) -> Self {
+        self.t = t;
+        self
+    }
+
+    /// Number of GD iterations (epochs for the learning problems).
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// Root seed for the run's RNG streams.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Inject a pre-split RNG stream (overrides the seed — the
+    /// scheduler's determinism primitive; see [`GdConfig::rng`]).
+    pub fn rng(mut self, rng: Rng) -> Self {
+        self.rng = Some(rng);
+        self
+    }
+
+    /// σ₁ model for the gradient evaluation (8a).
+    pub fn grad_model(mut self, gm: GradModel) -> Self {
+        self.grad_model = gm;
+        self
+    }
+
+    /// Record τ_k each iteration (stagnation diagnostics).
+    pub fn record_tau(mut self, yes: bool) -> Self {
+        self.record_tau = yes;
+        self
+    }
+
+    /// Starting point `x0` (defaults to the zero vector of the problem's
+    /// dimension; rounded into the working format on build, as always).
+    pub fn start(mut self, x0: &[f64]) -> Self {
+        self.x0 = Some(x0.to_vec());
+        self
+    }
+
+    fn stash(&mut self, e: SchemeError) {
+        if self.err.is_none() {
+            self.err = Some(e);
+        }
+    }
+
+    /// Materialize the run: validate the deferred spec errors, assemble
+    /// the [`GdConfig`] and build the engine. The resulting session runs
+    /// bit-identically to a hand-assembled `GdConfig` with the same
+    /// fields (asserted by `rust/tests/scheme_conformance.rs`).
+    pub fn build(self) -> Result<GdSession<'p>, SchemeError> {
+        if let Some(e) = self.err {
+            return Err(e);
+        }
+        let mut cfg = GdConfig::new(self.fmt, self.policy, self.t, self.steps);
+        cfg.grad_model = self.grad_model;
+        cfg.seed = self.seed;
+        cfg.rng = self.rng;
+        cfg.record_tau = self.record_tau;
+        cfg.sr_bits = self.sr_bits;
+        let x0 = self.x0.unwrap_or_else(|| vec![0.0; self.problem.dim()]);
+        Ok(GdSession { engine: GdEngine::new(cfg, self.problem, &x0) })
+    }
+}
+
+/// A configured, runnable GD session produced by [`RunBuilder::build`]: a
+/// [`GdEngine`] over a dyn [`Problem`] with convenience accessors.
+pub struct GdSession<'p> {
+    engine: GdEngine<'p, dyn Problem + 'p>,
+}
+
+impl<'p> GdSession<'p> {
+    /// Run the configured number of steps, optionally recording a
+    /// per-iteration task metric (e.g. test error).
+    pub fn run(&mut self, metric: Option<&dyn Fn(&[f64]) -> f64>) -> Trace {
+        self.engine.run(metric)
+    }
+
+    /// One GD iteration (8a)+(8b)+(8c); returns true if the iterate moved.
+    pub fn step(&mut self) -> bool {
+        self.engine.step()
+    }
+
+    /// The current iterate x̂ (always representable in the working format).
+    pub fn x(&self) -> &[f64] {
+        &self.engine.x
+    }
+
+    /// The run configuration.
+    pub fn config(&self) -> &GdConfig {
+        &self.engine.cfg
+    }
+
+    /// Rounding operations performed inside the (8a) gradient context.
+    pub fn grad_rounding_ops(&self) -> u64 {
+        self.engine.grad_rounding_ops()
+    }
+
+    /// The underlying engine, for callers needing full control.
+    pub fn engine(&mut self) -> &mut GdEngine<'p, dyn Problem + 'p> {
+        &mut self.engine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::round::Rounding;
+    use crate::gd::engine::StepSchemes;
+    use crate::problems::Quadratic;
+
+    /// The builder path is bit-identical to a hand-assembled legacy
+    /// config for a mixed policy.
+    #[test]
+    fn builder_matches_legacy_config_bitwise() {
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+        let schemes = StepSchemes {
+            grad: Rounding::Sr,
+            mul: Rounding::Sr,
+            sub: Rounding::SignedSrEps(0.25),
+        };
+        let mut cfg = GdConfig::new(FpFormat::BINARY8, schemes, 0.05, 80);
+        cfg.seed = 11;
+        let mut legacy = GdEngine::new(cfg, &p, &[1.0]);
+        let legacy_series = legacy.run(None).objective_series();
+
+        let mut session = RunBuilder::new(&p)
+            .format_name("binary8")
+            .scheme("sr")
+            .sub_scheme("signed:0.25")
+            .stepsize(0.05)
+            .steps(80)
+            .seed(11)
+            .start(&[1.0])
+            .build()
+            .unwrap();
+        let built_series = session.run(None).objective_series();
+        assert_eq!(legacy_series, built_series);
+        assert_eq!(legacy.x, session.x());
+    }
+
+    #[test]
+    fn builder_surfaces_spec_errors_at_build() {
+        let p = Quadratic::diagonal(vec![1.0], vec![0.0]);
+        let err = RunBuilder::new(&p).scheme("no_such_scheme").build().unwrap_err();
+        assert!(err.to_string().contains("no_such_scheme"), "{err}");
+        let err = RunBuilder::new(&p).format_name("binary7").build().unwrap_err();
+        assert!(matches!(err, SchemeError::UnknownFormat(_)), "{err}");
+        // First error wins over later valid setters.
+        let err = RunBuilder::new(&p).scheme("bogus").scheme("sr").build().unwrap_err();
+        assert!(err.to_string().contains("bogus"), "{err}");
+    }
+
+    #[test]
+    fn builder_defaults_run_and_round_x0() {
+        let p = Quadratic::diagonal(vec![1.0, 0.5], vec![0.0, 0.0]);
+        let mut s = RunBuilder::new(&p).steps(5).build().unwrap();
+        let tr = s.run(None);
+        assert_eq!(tr.records.len(), 5);
+        assert!(s.x().iter().all(|&v| FpFormat::BINARY8.contains(v)));
+        assert_eq!(s.config().sr_bits, DEFAULT_SR_BITS);
+    }
+}

@@ -6,9 +6,11 @@
 //! (8c)  x̂⁺ = fl₃(x̂ − m)          subtraction, error δ₃
 //! ```
 //!
-//! Each step's rounding scheme is chosen independently ([`StepSchemes`]),
-//! which is exactly the paper's experimental protocol (e.g. Fig. 4b: SRε for
-//! (8a)+(8b), signed-SRε for (8c)). For `SignedSrEps` the steering value is
+//! Each step's rounding scheme is chosen independently ([`SchemePolicy`],
+//! holding any registered [`crate::fp::scheme::Scheme`]; the legacy
+//! enum-typed [`StepSchemes`] converts into it), which is exactly the
+//! paper's experimental protocol (e.g. Fig. 4b: SRε for (8a)+(8b),
+//! signed-SRε for (8c)). For `SignedSrEps` the steering value is
 //!
 //! * `(8b)`: `v = −ĝᵢ` — bias `−sign(v) = +sign(ĝᵢ)` *enlarges* the step in
 //!   the gradient direction (the descent choice; with this steering the law
@@ -20,12 +22,69 @@
 use crate::fp::format::FpFormat;
 use crate::fp::linalg::{exact, LpCtx};
 use crate::fp::rng::Rng;
-use crate::fp::round::Rounding;
+use crate::fp::round::{Rounding, DEFAULT_SR_BITS};
+use crate::fp::scheme::Scheme;
 use crate::gd::stagnation::tau_k;
 use crate::gd::trace::{IterRecord, Trace};
 use crate::problems::Problem;
 
-/// Rounding scheme per GD step.
+/// Per-tensor rounding policy of one GD run: an independent open-API
+/// [`Scheme`] for each of the three rounding sites of eq. (8) — the
+/// gradient evaluation (8a), the stepsize multiplication (8b) and the
+/// iterate subtraction (8c). This generalizes the legacy enum-typed
+/// [`StepSchemes`] (which converts via `From`) to any registered scheme,
+/// including user schemes added through
+/// [`crate::fp::scheme::SchemeRegistry::register`].
+#[derive(Debug, Clone, Copy)]
+pub struct SchemePolicy {
+    /// Scheme used *inside* the gradient evaluation (8a).
+    pub grad: Scheme,
+    /// Scheme for the stepsize multiplication (8b).
+    pub mul: Scheme,
+    /// Scheme for the final subtraction (8c).
+    pub sub: Scheme,
+}
+
+impl SchemePolicy {
+    /// All three steps with the same scheme.
+    pub fn uniform(scheme: Scheme) -> Self {
+        Self { grad: scheme, mul: scheme, sub: scheme }
+    }
+
+    /// Short per-step label, e.g. `8a=SR 8b=SR 8c=signed-SR_eps(0.1)`.
+    pub fn label(&self) -> String {
+        format!("8a={} 8b={} 8c={}", self.grad.label(), self.mul.label(), self.sub.label())
+    }
+
+    /// Does any of the three steps consume randomness?
+    pub fn is_stochastic(&self) -> bool {
+        self.grad.is_stochastic() || self.mul.is_stochastic() || self.sub.is_stochastic()
+    }
+}
+
+impl From<StepSchemes> for SchemePolicy {
+    fn from(s: StepSchemes) -> Self {
+        Self { grad: s.grad.into(), mul: s.mul.into(), sub: s.sub.into() }
+    }
+}
+
+impl From<Scheme> for SchemePolicy {
+    fn from(scheme: Scheme) -> Self {
+        Self::uniform(scheme)
+    }
+}
+
+impl From<Rounding> for SchemePolicy {
+    fn from(mode: Rounding) -> Self {
+        Self::uniform(mode.into())
+    }
+}
+
+/// Rounding scheme per GD step, over the closed built-in enum.
+///
+/// **Deprecated shim**: kept so pre-redesign call sites keep compiling;
+/// it converts losslessly into the open [`SchemePolicy`] (which
+/// [`GdConfig::new`] and [`crate::gd::RunBuilder`] accept directly).
 #[derive(Debug, Clone, Copy)]
 pub struct StepSchemes {
     /// Scheme used *inside* the gradient evaluation (8a).
@@ -42,9 +101,14 @@ impl StepSchemes {
         Self { grad: mode, mul: mode, sub: mode }
     }
 
+    /// This legacy triple as an open-API [`SchemePolicy`].
+    pub fn policy(self) -> SchemePolicy {
+        self.into()
+    }
+
     /// Short per-step label, e.g. `8a=SR 8b=SR 8c=signed-SR_eps(0.1)`.
     pub fn label(&self) -> String {
-        format!("8a={} 8b={} 8c={}", self.grad.label(), self.mul.label(), self.sub.label())
+        self.policy().label()
     }
 }
 
@@ -66,8 +130,9 @@ pub enum GradModel {
 pub struct GdConfig {
     /// Working floating-point format for the iterate and every rounding.
     pub fmt: FpFormat,
-    /// Rounding scheme per GD step (8a)/(8b)/(8c).
-    pub schemes: StepSchemes,
+    /// Rounding scheme per GD step (8a)/(8b)/(8c) — any registered
+    /// [`Scheme`] per step.
+    pub schemes: SchemePolicy,
     /// σ₁ model for the gradient evaluation (8a).
     pub grad_model: GradModel,
     /// Fixed stepsize t.
@@ -89,21 +154,29 @@ pub struct GdConfig {
     pub rng: Option<Rng>,
     /// Record τ_k each iteration (costs one RN pass over the gradient).
     pub record_tau: bool,
+    /// Random bits per stochastic slice rounding (the few-random-bits
+    /// knob; see [`crate::fp::round::RoundPlan::with_sr_bits`]). The
+    /// default [`DEFAULT_SR_BITS`] keeps trajectories bit-identical to
+    /// pre-knob releases.
+    pub sr_bits: u32,
 }
 
 impl GdConfig {
     /// A config with the default σ₁ model (`RoundAfterOp`), seed 0, derived
-    /// RNG root and no τ_k recording.
-    pub fn new(fmt: FpFormat, schemes: StepSchemes, t: f64, steps: usize) -> Self {
+    /// RNG root, default `sr_bits` and no τ_k recording. `schemes` is a
+    /// [`SchemePolicy`] or anything converting into one ([`StepSchemes`],
+    /// a single [`Scheme`], a legacy [`Rounding`]).
+    pub fn new(fmt: FpFormat, schemes: impl Into<SchemePolicy>, t: f64, steps: usize) -> Self {
         Self {
             fmt,
-            schemes,
+            schemes: schemes.into(),
             grad_model: GradModel::RoundAfterOp,
             t,
             steps,
             seed: 0,
             rng: None,
             record_tau: false,
+            sr_bits: DEFAULT_SR_BITS,
         }
     }
 }
@@ -139,7 +212,8 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
     pub fn new(cfg: GdConfig, problem: &'p P, x0: &[f64]) -> Self {
         assert_eq!(x0.len(), problem.dim());
         let root = cfg.rng.clone().unwrap_or_else(|| Rng::new(cfg.seed));
-        let mut ctx_grad = LpCtx::new(cfg.fmt, cfg.schemes.grad, root.fork("sigma1", 0));
+        let mut ctx_grad = LpCtx::new(cfg.fmt, cfg.schemes.grad, root.fork("sigma1", 0))
+            .with_sr_bits(cfg.sr_bits);
         if cfg.grad_model == GradModel::Exact {
             ctx_grad = LpCtx::exact();
         }
@@ -192,7 +266,8 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
         // One plan derivation per step (not per element); reading `cfg.fmt`
         // here keeps the pre-refactor semantics where a caller may adjust
         // the config between steps.
-        let plan = crate::fp::round::RoundPlan::new(self.cfg.fmt);
+        let plan =
+            crate::fp::round::RoundPlan::new(self.cfg.fmt).with_sr_bits(self.cfg.sr_bits);
         crate::fp::kernels::gd_update(
             &plan,
             self.cfg.schemes.mul,

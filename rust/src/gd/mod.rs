@@ -2,11 +2,13 @@
 //! S5–S7): the three-step iteration (8a)/(8b)/(8c), stagnation analysis
 //! (§3.2), and the paper's convergence-theory calculators (§4).
 
+pub mod builder;
 pub mod engine;
 pub mod stagnation;
 pub mod theory;
 pub mod trace;
 
-pub use engine::{GdConfig, GdEngine, GradModel, StepSchemes};
+pub use builder::{GdSession, RunBuilder};
+pub use engine::{GdConfig, GdEngine, GradModel, SchemePolicy, StepSchemes};
 pub use stagnation::{lsb_is_even, tau_k, StagnationReport};
 pub use trace::{IterRecord, Trace};

@@ -8,10 +8,12 @@
 //! The crate provides:
 //! * [`fp`] — a bit-exact software simulator of low-precision floating-point
 //!   formats (binary8/E5M2, bfloat16, …) with every rounding scheme in the
-//!   paper: RN, directed modes, SR, SRε and signed-SRε;
-//! * [`gd`] — the three-step GD iteration (8a)/(8b)/(8c) with per-step
-//!   rounding control, stagnation analysis (τ_k) and the paper's convergence
-//!   bounds;
+//!   paper — RN, directed modes, SR, SRε and signed-SRε — plus the open
+//!   [`fp::scheme::RoundingScheme`] trait and [`fp::scheme::SchemeRegistry`]
+//!   for registering new schemes (see `docs/api.md`);
+//! * [`gd`] — the three-step GD iteration (8a)/(8b)/(8c) with per-tensor
+//!   rounding control ([`gd::SchemePolicy`]), the [`gd::RunBuilder`] front
+//!   door, stagnation analysis (τ_k) and the paper's convergence bounds;
 //! * [`problems`] — quadratics (Settings I/II), multinomial logistic
 //!   regression and a two-layer NN;
 //! * [`data`] — dataset substrate (procedural digits + IDX loader);

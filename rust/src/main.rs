@@ -11,20 +11,33 @@
 //!     --side N --mlr-train N --mlr-epochs N ... (see ExpCtx)
 //! lpgd train <mlr|nn> [opts]            one training run with any schemes
 //!     --fmt binary8  --t 0.5 --epochs 50 --seed 0
-//!     --s8a sr --s8b sr --s8c signed:0.1   per-step rounding schemes
+//!     --scheme sr_eps:0.2    any registered scheme, all three steps
+//!     --s8a sr --s8b sr --s8c signed:0.1   per-step overrides
+//!     --sr-bits N    few-random-bits knob for the stochastic kernels
 //! lpgd round <value> [opts]             inspect rounding of one value
 //!     --fmt binary8 --mode sr_eps:0.25 --samples 10000
 //! lpgd pjrt-info                        PJRT platform + artifact check
+//! lpgd --help                           usage + the registered schemes
 //! ```
+//!
+//! Scheme specs resolve through the open
+//! [`SchemeRegistry`](lpgd::fp::SchemeRegistry); unknown `--options` are
+//! rejected with an error instead of being silently ignored.
 
 use anyhow::{bail, Result};
 use lpgd::coordinator::experiments::{list_experiments, run_experiment, ExpCtx};
 use lpgd::data::load_or_synth;
-use lpgd::fp::{FpFormat, Rng, Rounding};
-use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::fp::{FpFormat, RoundPlan, Rng, Scheme, SchemeRegistry, DEFAULT_SR_BITS};
+use lpgd::gd::{RunBuilder, SchemePolicy};
 use lpgd::problems::{Mlr, TwoLayerNn};
 use lpgd::util::cli::Args;
 use lpgd::util::table::sparkline;
+
+/// `--key value` options shared by every command running the coordinator.
+const CTX_OPTS: &[&str] = &[
+    "seeds", "jobs", "out-dir", "side", "mlr-train", "mlr-test", "nn-train", "nn-test",
+    "mlr-epochs", "nn-epochs", "quad-steps", "quad-n", "mnist-dir",
+];
 
 fn main() {
     if let Err(e) = run() {
@@ -51,20 +64,61 @@ fn ctx_from_args(a: &Args) -> ExpCtx {
     ctx
 }
 
-fn scheme_arg(a: &Args, key: &str, default: Rounding) -> Result<Rounding> {
+/// Resolve `--key` through the scheme registry, or keep `default`.
+fn scheme_arg(a: &Args, key: &str, default: Scheme) -> Result<Scheme> {
     match a.get(key) {
         None => Ok(default),
-        Some(s) => {
-            Rounding::parse(s).ok_or_else(|| anyhow::anyhow!("bad scheme '{s}' for --{key}"))
-        }
+        Some(s) => Ok(SchemeRegistry::lookup(s)?),
     }
+}
+
+/// Reject argv carrying options no command reads (silent ignores used to
+/// swallow typos like `--sceme`).
+fn reject_unknown(a: &Args, known: &[&str]) -> Result<()> {
+    let bad = a.unknown_keys(known);
+    if !bad.is_empty() {
+        bail!("unknown option(s): --{} (run `lpgd --help` for usage)", bad.join(", --"));
+    }
+    let missing = a.missing_values(known);
+    if !missing.is_empty() {
+        bail!(
+            "option(s) missing a value: --{} (run `lpgd --help` for usage)",
+            missing.join(", --")
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!("lpgd — low-precision GD with stochastic rounding (paper reproduction)");
+    println!();
+    println!("commands:");
+    println!("  list                        list reproducible experiments");
+    println!("  reproduce <id|all> [opts]   regenerate a paper table/figure (--seeds, --jobs, --quick, --out-dir, ...)");
+    println!("  train <mlr|nn> [opts]       one training run (--fmt, --t, --epochs, --seed, --scheme, --s8a/--s8b/--s8c, --sr-bits)");
+    println!("  round <value> [opts]        inspect rounding of one value (--fmt, --mode, --samples, --seed)");
+    println!("  pjrt-info [--artifacts D]   PJRT platform + artifact check");
+    println!();
+    println!("registered rounding schemes (--scheme / --s8a / --s8b / --s8c / --mode):");
+    for (name, aliases, summary) in SchemeRegistry::entries() {
+        let alias = if aliases.is_empty() { String::new() } else { format!(" (aliases: {aliases})") };
+        println!("  {name:<22} {summary}{alias}");
+    }
+    println!();
+    println!("formats (--fmt): binary8, bfloat16, binary16, binary32, binary64");
+    println!("see README.md and docs/api.md for the library front door (RunBuilder)");
 }
 
 fn run() -> Result<()> {
     let a = Args::from_env();
     let cmd = a.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    if a.has_flag("help") || cmd == "help" {
+        print_help();
+        return Ok(());
+    }
     match cmd {
         "list" => {
+            reject_unknown(&a, &[])?;
             println!("{:<8}  {}", "id", "description");
             for (id, desc) in list_experiments() {
                 println!("{id:<8}  {desc}");
@@ -72,6 +126,7 @@ fn run() -> Result<()> {
             println!("\nusage: lpgd reproduce <id|all> [--seeds N] [--jobs N] [--quick] [--out-dir D]");
         }
         "reproduce" => {
+            reject_unknown(&a, CTX_OPTS)?;
             let id = a.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
             let ctx = ctx_from_args(&a);
             let jobs = if ctx.jobs == 0 { "auto".to_string() } else { ctx.jobs.to_string() };
@@ -88,16 +143,21 @@ fn run() -> Result<()> {
             );
         }
         "train" => {
+            let mut known = CTX_OPTS.to_vec();
+            known.extend(["fmt", "t", "epochs", "seed", "scheme", "s8a", "s8b", "s8c", "sr-bits"]);
+            reject_unknown(&a, &known)?;
             let which = a.positional.get(1).map(|s| s.as_str()).unwrap_or("mlr");
             let ctx = ctx_from_args(&a);
-            let fmt = FpFormat::by_name(a.get("fmt").unwrap_or("binary8"))
-                .ok_or_else(|| anyhow::anyhow!("unknown --fmt"))?;
-            let schemes = StepSchemes {
-                grad: scheme_arg(&a, "s8a", Rounding::Sr)?,
-                mul: scheme_arg(&a, "s8b", Rounding::Sr)?,
-                sub: scheme_arg(&a, "s8c", Rounding::Sr)?,
+            // --scheme sets all three steps; --s8a/--s8b/--s8c override.
+            let base = scheme_arg(&a, "scheme", Scheme::sr())?;
+            let policy = SchemePolicy {
+                grad: scheme_arg(&a, "s8a", base)?,
+                mul: scheme_arg(&a, "s8b", base)?,
+                sub: scheme_arg(&a, "s8c", base)?,
             };
+            let fmt = a.get("fmt").unwrap_or("binary8");
             let seed = a.get_u64("seed", 0);
+            let sr_bits = a.get_usize("sr-bits", DEFAULT_SR_BITS as usize) as u32;
             match which {
                 "mlr" => {
                     let splits = load_or_synth(
@@ -110,13 +170,17 @@ fn run() -> Result<()> {
                     let p = Mlr::new(splits.train, 10);
                     let t_step = a.get_f64("t", 0.5);
                     let epochs = a.get_usize("epochs", ctx.mlr_epochs);
-                    let mut cfg = GdConfig::new(fmt, schemes, t_step, epochs);
-                    cfg.seed = seed;
-                    let x0 = vec![0.0; lpgd::problems::Problem::dim(&p)];
-                    let mut e = GdEngine::new(cfg, &p, &x0);
+                    let mut session = RunBuilder::new(&p)
+                        .format_name(fmt)
+                        .policy(policy)
+                        .stepsize(t_step)
+                        .steps(epochs)
+                        .seed(seed)
+                        .sr_bits(sr_bits)
+                        .build()?;
                     let metric = |x: &[f64]| p.test_error(x, &splits.test);
-                    let tr = e.run(Some(&metric));
-                    print_training("MLR", fmt, &schemes, t_step, &tr.metric_series());
+                    let tr = session.run(Some(&metric));
+                    print_training("MLR", session.config().fmt, &policy, t_step, &tr.metric_series());
                 }
                 "nn" => {
                     let splits = load_or_synth(
@@ -131,18 +195,31 @@ fn run() -> Result<()> {
                     let p = TwoLayerNn::new(train, 100);
                     let t_step = a.get_f64("t", 0.09375);
                     let epochs = a.get_usize("epochs", ctx.nn_epochs);
-                    let mut cfg = GdConfig::new(fmt, schemes, t_step, epochs);
-                    cfg.seed = seed;
                     let x0 = p.init_params(seed);
-                    let mut e = GdEngine::new(cfg, &p, &x0);
+                    let mut session = RunBuilder::new(&p)
+                        .format_name(fmt)
+                        .policy(policy)
+                        .stepsize(t_step)
+                        .steps(epochs)
+                        .seed(seed)
+                        .sr_bits(sr_bits)
+                        .start(&x0)
+                        .build()?;
                     let metric = |x: &[f64]| p.test_error(x, &test);
-                    let tr = e.run(Some(&metric));
-                    print_training("NN(3v8)", fmt, &schemes, t_step, &tr.metric_series());
+                    let tr = session.run(Some(&metric));
+                    print_training(
+                        "NN(3v8)",
+                        session.config().fmt,
+                        &policy,
+                        t_step,
+                        &tr.metric_series(),
+                    );
                 }
                 other => bail!("unknown model '{other}' (mlr|nn)"),
             }
         }
         "round" => {
+            reject_unknown(&a, &["fmt", "mode", "samples", "seed"])?;
             let val: f64 = a
                 .positional
                 .get(1)
@@ -150,15 +227,16 @@ fn run() -> Result<()> {
                 .parse()?;
             let fmt = FpFormat::by_name(a.get("fmt").unwrap_or("binary8"))
                 .ok_or_else(|| anyhow::anyhow!("unknown --fmt"))?;
-            let mode = Rounding::parse(a.get("mode").unwrap_or("sr")).unwrap();
+            let scheme = SchemeRegistry::lookup(a.get("mode").unwrap_or("sr"))?;
             let samples = a.get_usize("samples", 10000);
             let (lo, hi) = fmt.floor_ceil(val);
             println!("format {}  u={}  neighbors: [{lo}, {hi}]", fmt.name(), fmt.unit_roundoff());
+            let plan = RoundPlan::new(fmt);
             let mut rng = Rng::new(a.get_u64("seed", 0));
             let mut mean = 0.0;
             let mut n_up = 0usize;
             for _ in 0..samples {
-                let y = lpgd::fp::round(&fmt, mode, val, &mut rng);
+                let y = plan.round_scheme(scheme, val, &mut rng);
                 mean += y;
                 if y == hi && hi != lo {
                     n_up += 1;
@@ -167,16 +245,14 @@ fn run() -> Result<()> {
             mean /= samples as f64;
             println!(
                 "{}({val}) over {samples} samples: mean={mean}  bias={:+.3e}  P(up)={:.4}",
-                mode.label(),
+                scheme.label(),
                 mean - val,
                 n_up as f64 / samples as f64
             );
-            println!(
-                "closed-form E[fl(x)]={}",
-                lpgd::fp::expected_round(&fmt, mode, val, val)
-            );
+            println!("closed-form E[fl(x)]={}", scheme.expected_round(&fmt, val, val));
         }
         "pjrt-info" => {
+            reject_unknown(&a, &["artifacts"])?;
             let dir = a.get("artifacts").unwrap_or("artifacts");
             let mut rt = lpgd::runtime::Runtime::cpu(dir)?;
             println!("platform: {}", rt.platform());
@@ -191,20 +267,16 @@ fn run() -> Result<()> {
                 }
             }
         }
-        _ => {
-            println!("lpgd — low-precision GD with stochastic rounding (paper reproduction)");
-            println!("commands: list | reproduce <id|all> | train <mlr|nn> | round <value> | pjrt-info");
-            println!("see `lpgd list` and README.md");
-        }
+        other => bail!("unknown command '{other}' (run `lpgd --help` for usage)"),
     }
     Ok(())
 }
 
-fn print_training(name: &str, fmt: FpFormat, schemes: &StepSchemes, t: f64, err: &[f64]) {
+fn print_training(name: &str, fmt: FpFormat, policy: &SchemePolicy, t: f64, err: &[f64]) {
     println!(
         "{name} fmt={} {} t={t}: final test error {:.4}",
         fmt.name(),
-        schemes.label(),
+        policy.label(),
         err.last().unwrap_or(&f64::NAN)
     );
     println!("test-error curve: {}", sparkline(err, 60));

@@ -232,8 +232,8 @@ impl Mlr {
                 // Absorption: round the accumulators at every block
                 // boundary; chop: once at the end.
                 if lp_acc || i1 == n {
-                    plan.round_slice(mode, gw, rng);
-                    plan.round_slice(mode, gb, rng);
+                    plan.round_slice_scheme(mode, gw, rng);
+                    plan.round_slice_scheme(mode, gb, rng);
                 }
                 i0 = i1;
             }

@@ -218,7 +218,7 @@ impl TwoLayerNn {
                 for v in zo.iter_mut() {
                     *v = sigmoid(*v);
                 }
-                plan.round_slice(mode, zo, rng);
+                plan.round_slice_scheme(mode, zo, rng);
                 // Backward in exact f64, sample order preserved.
                 for r in 0..rows {
                     let i = i0 + r;
@@ -242,10 +242,10 @@ impl TwoLayerNn {
                     }
                 }
                 if lp_acc || i1 == n {
-                    plan.round_slice(mode, gw1, rng);
-                    plan.round_slice(mode, gb1, rng);
-                    plan.round_slice(mode, gw2, rng);
-                    plan.round_slice(mode, gb2, rng);
+                    plan.round_slice_scheme(mode, gw1, rng);
+                    plan.round_slice_scheme(mode, gb1, rng);
+                    plan.round_slice_scheme(mode, gw2, rng);
+                    plan.round_slice_scheme(mode, gb2, rng);
                 }
                 i0 = i1;
             }

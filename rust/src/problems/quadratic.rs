@@ -1,5 +1,9 @@
 //! Quadratic objectives f(x) = ½ (x − x*)ᵀ A (x − x*) — paper §5.1.
 //!
+//! The rounded gradient evaluators run through [`LpCtx`], so they accept
+//! any registered rounding scheme (built-in or custom) via the open
+//! [`crate::fp::scheme::Scheme`] handle the context carries.
+//!
 //! Two constructors mirror the paper's settings:
 //! * [`Quadratic::setting1`]: A = diag(10⁻³, …, 10⁻³, 1) ∈ ℝ¹⁰⁰⁰ˣ¹⁰⁰⁰,
 //!   x⁰ = [10⁻³, …, 10⁻³, 1]ᵀ, x* = 0, t = 10⁻⁵;

@@ -70,6 +70,43 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Every `--key`/`--flag` that is neither in `known` nor a recognized
+    /// boolean flag, sorted. Commands reject argv with a descriptive error
+    /// when this is non-empty, instead of the historic silent ignore
+    /// (`lpgd train --sceme sr` used to train with the default scheme).
+    pub fn unknown_keys(&self, known: &[&str]) -> Vec<String> {
+        let mut bad: Vec<String> = self
+            .options
+            .keys()
+            .filter(|k| !known.contains(&k.as_str()))
+            .cloned()
+            .collect();
+        bad.extend(
+            self.flags
+                .iter()
+                .filter(|f| !BOOL_FLAGS.contains(&f.as_str()) && !known.contains(&f.as_str()))
+                .cloned(),
+        );
+        bad.sort_unstable();
+        bad
+    }
+
+    /// Known value-options given as bare `--key` with no value (e.g.
+    /// `--scheme` as the last token, or `--scheme --t 0.1`), sorted.
+    /// These parse as flags, so without this check the command would
+    /// silently fall back to the option's default — the same silent-ignore
+    /// class [`Args::unknown_keys`] eliminates for typos.
+    pub fn missing_values(&self, known: &[&str]) -> Vec<String> {
+        let mut bad: Vec<String> = self
+            .flags
+            .iter()
+            .filter(|f| known.contains(&f.as_str()) && !BOOL_FLAGS.contains(&f.as_str()))
+            .cloned()
+            .collect();
+        bad.sort_unstable();
+        bad
+    }
 }
 
 #[cfg(test)]
@@ -104,5 +141,30 @@ mod tests {
         let a = parse("--quick fig2");
         assert!(a.has_flag("quick"));
         assert_eq!(a.positional, vec!["fig2"]);
+    }
+
+    #[test]
+    fn unknown_keys_flags_typos_but_allows_known() {
+        let a = parse("train --sceme sr --quik --fmt binary8 --quick --help");
+        let bad = a.unknown_keys(&["fmt", "scheme"]);
+        assert_eq!(bad, vec!["quik".to_string(), "sceme".to_string()]);
+        // Nothing unknown when everything is declared or a bool flag.
+        let b = parse("round 1.1 --fmt binary8 --mode sr --json");
+        assert!(b.unknown_keys(&["fmt", "mode", "samples", "seed"]).is_empty());
+    }
+
+    #[test]
+    fn missing_values_catches_bare_value_options() {
+        // `--scheme` swallowed its value (`--t` follows) and `--fmt` is the
+        // last token: both parse as flags and must be reported.
+        let a = parse("train --scheme --t 0.1 --fmt");
+        assert_eq!(
+            a.missing_values(&["scheme", "t", "fmt"]),
+            vec!["fmt".to_string(), "scheme".to_string()]
+        );
+        assert!(a.unknown_keys(&["scheme", "t", "fmt"]).is_empty());
+        // Well-formed argv reports nothing missing; bool flags never do.
+        let b = parse("train --scheme sr --quick");
+        assert!(b.missing_values(&["scheme"]).is_empty());
     }
 }

@@ -1,0 +1,291 @@
+//! Scheme-conformance suite: every scheme reachable through the
+//! [`SchemeRegistry`] — built-in families at several parameterizations plus
+//! a custom scheme registered in-test — must
+//!
+//! * round to representable values ((saturated) neighbors of the input,
+//!   fixed points on representable inputs),
+//! * match its closed-form [`Scheme::expected_round`] within Monte-Carlo
+//!   tolerance,
+//! * consume zero random bits when deterministic,
+//!
+//! and the registry/builder path must produce **bit-identical** GD
+//! trajectories to the pre-redesign enum path for every built-in scheme
+//! (the redesign's hard acceptance constraint).
+
+use lpgd::fp::{FpFormat, RoundPlan, RoundingScheme, Rng, Scheme, SchemeRegistry};
+use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::gd::RunBuilder;
+use lpgd::fp::Rounding;
+use lpgd::problems::Quadratic;
+
+const B8: FpFormat = FpFormat::BINARY8;
+
+/// Spec strings covering every built-in family, parameterized variants
+/// included.
+fn builtin_specs() -> Vec<&'static str> {
+    vec!["rn", "rd", "ru", "rz", "sr", "sr_eps:0.1", "sr_eps:0.4", "signed_sr_eps:0.25"]
+}
+
+/// Every scheme the conformance properties run against: the built-ins plus
+/// the in-test custom scheme.
+fn all_schemes() -> Vec<Scheme> {
+    let mut out: Vec<Scheme> =
+        builtin_specs().into_iter().map(|s| SchemeRegistry::lookup(s).unwrap()).collect();
+    out.push(coin_flip());
+    out
+}
+
+// ------------------------------------------------- the custom toy scheme --
+
+/// "Coin flip" rounding: an inexact value goes to its (saturated) floor or
+/// ceiling with probability ½ each, regardless of position in the gap —
+/// a deliberately non-paper law proving the API is open. Expected value:
+/// the gap midpoint.
+struct CoinFlip;
+
+fn sat(fmt: &FpFormat, y: f64) -> f64 {
+    y.clamp(-fmt.x_max(), fmt.x_max())
+}
+
+impl RoundingScheme for CoinFlip {
+    fn name(&self) -> String {
+        "coin_flip".into()
+    }
+    fn label(&self) -> String {
+        "CoinFlip".into()
+    }
+    fn is_stochastic(&self) -> bool {
+        true
+    }
+    fn round(&self, plan: &RoundPlan, x: f64, _v: f64, rng: &mut Rng) -> f64 {
+        if x == 0.0 || x.is_nan() {
+            return x;
+        }
+        let (lo, hi) = plan.fmt.floor_ceil(x);
+        if lo == hi {
+            return lo;
+        }
+        let (lo, hi) = (sat(&plan.fmt, lo), sat(&plan.fmt, hi));
+        if lo == hi {
+            return lo;
+        }
+        if rng.uniform() < 0.5 {
+            lo
+        } else {
+            hi
+        }
+    }
+    fn expected_round(&self, fmt: &FpFormat, x: f64, _v: f64) -> f64 {
+        if x == 0.0 || x.is_nan() {
+            return x;
+        }
+        let (lo, hi) = fmt.floor_ceil(x);
+        if lo == hi {
+            return lo;
+        }
+        let (lo, hi) = (sat(fmt, lo), sat(fmt, hi));
+        0.5 * (lo + hi)
+    }
+}
+
+static COIN_FLIP: CoinFlip = CoinFlip;
+
+/// Register (idempotently — tests share the process) and return the custom
+/// scheme through a registry lookup, proving the full name→scheme path.
+fn coin_flip() -> Scheme {
+    let _ = SchemeRegistry::register(&COIN_FLIP);
+    SchemeRegistry::lookup("coin_flip").expect("custom scheme must resolve")
+}
+
+// ------------------------------------------------ conformance properties --
+
+fn test_inputs(fmt: &FpFormat) -> Vec<f64> {
+    let mut rng = Rng::new(1234);
+    let mut xs: Vec<f64> = (0..300).map(|_| rng.normal() * 1e3).collect();
+    xs.extend([
+        0.0,
+        1.0,
+        -1.25,
+        fmt.x_min() * 0.3,
+        -fmt.x_min_sub() * 0.5,
+        fmt.x_max() * 1.5,
+        -fmt.x_max() * 2.0,
+        f64::INFINITY,
+        f64::NAN,
+    ]);
+    xs
+}
+
+/// Property 1: outputs are fixed points on representable inputs and
+/// (saturated) neighbors otherwise, for scalar and slice entry points.
+#[test]
+fn rounds_to_representable_neighbors() {
+    for fmt in [B8, FpFormat::BFLOAT16] {
+        let plan = RoundPlan::new(fmt);
+        let xs = test_inputs(&fmt);
+        for scheme in all_schemes() {
+            let mut rng = Rng::new(5);
+            let mut slice = xs.clone();
+            plan.round_slice_scheme(scheme, &mut slice, &mut Rng::new(6));
+            for (i, &x) in xs.iter().enumerate() {
+                let y = plan.round_scheme(scheme, x, &mut rng);
+                for (entry, got) in [("scalar", y), ("slice", slice[i])] {
+                    if x.is_nan() {
+                        assert!(got.is_nan(), "{} {entry}: NaN in, {got} out", scheme.name());
+                        continue;
+                    }
+                    let (lo, hi) = fmt.floor_ceil(x);
+                    let (slo, shi) = (sat(&fmt, lo), sat(&fmt, hi));
+                    assert!(
+                        got == lo || got == hi || got == slo || got == shi,
+                        "{} {entry} {}: {got} is not a (saturated) neighbor of {x}",
+                        scheme.name(),
+                        fmt.name()
+                    );
+                    if fmt.contains(x) {
+                        assert_eq!(got, x, "{} {entry}: representable {x} moved", scheme.name());
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Property 2: the closed-form `expected_round` matches the empirical mean
+/// of the scalar law within Monte-Carlo tolerance (exactly, for
+/// deterministic schemes).
+#[test]
+fn expected_round_matches_empirical_mean() {
+    let plan = RoundPlan::new(B8);
+    for scheme in all_schemes() {
+        let mut rng = Rng::new(77);
+        for &(x, v) in &[(1.1, -1.0), (-2.6, 2.0), (0.013, 1.0), (900.0, -3.0)] {
+            let want = scheme.expected_round(&B8, x, v);
+            if !scheme.is_stochastic() {
+                let got = plan.round_scheme_with(scheme, x, v, &mut rng);
+                assert_eq!(got, want, "{} deterministic expectation x={x}", scheme.name());
+                continue;
+            }
+            let n = 40_000;
+            let mean: f64 = (0..n)
+                .map(|_| plan.round_scheme_with(scheme, x, v, &mut rng))
+                .sum::<f64>()
+                / n as f64;
+            let (lo, hi) = B8.floor_ceil(x);
+            let tol = 4.0 * (hi - lo) / (n as f64).sqrt();
+            assert!(
+                (mean - want).abs() < tol,
+                "{} x={x} v={v}: mean {mean} vs closed form {want} (tol {tol})",
+                scheme.name()
+            );
+        }
+    }
+}
+
+/// Property 3: deterministic schemes consume zero random bits through both
+/// the scalar and the slice entry points.
+#[test]
+fn deterministic_schemes_consume_no_randomness() {
+    let plan = RoundPlan::new(B8);
+    let xs = test_inputs(&B8);
+    for scheme in all_schemes().into_iter().filter(|s| !s.is_stochastic()) {
+        let mut rng = Rng::new(21);
+        for &x in &xs {
+            let _ = plan.round_scheme(scheme, x, &mut rng);
+        }
+        let mut buf = xs.clone();
+        plan.round_slice_scheme(scheme, &mut buf, &mut rng);
+        let mut fresh = Rng::new(21);
+        assert_eq!(
+            rng.next_u64(),
+            fresh.next_u64(),
+            "{}: deterministic scheme consumed randomness",
+            scheme.name()
+        );
+        assert_eq!(scheme.bits_per_element(&plan), 0, "{}", scheme.name());
+    }
+    // And the stochastic ones advertise their slice bit budget: the fused
+    // few-random-bits path for built-ins, the full-word scalar fallback
+    // for custom schemes (CoinFlip draws one `Rng::uniform` per element).
+    assert_eq!(Scheme::sr().bits_per_element(&plan), plan.sr_bits());
+    assert_eq!(coin_flip().bits_per_element(&plan), 64);
+}
+
+// ------------------------------------- bit-equality vs the pre-redesign --
+
+/// The registry + `RunBuilder` path produces bit-identical GD trajectories
+/// to the legacy enum path (`Rounding::parse` + `StepSchemes` +
+/// `GdConfig::new`) for every built-in scheme.
+#[test]
+fn builder_trajectories_bit_identical_to_enum_path() {
+    let p = Quadratic::diagonal(vec![1.0], vec![100.0]);
+    for spec in builtin_specs() {
+        let mode = Rounding::parse(spec).unwrap();
+        let mut cfg = GdConfig::new(B8, StepSchemes::uniform(mode), 0.1, 60);
+        cfg.seed = 3;
+        let mut legacy = GdEngine::new(cfg, &p, &[1.0]);
+        let legacy_series = legacy.run(None).objective_series();
+
+        let mut session = RunBuilder::new(&p)
+            .format(B8)
+            .scheme(spec)
+            .stepsize(0.1)
+            .steps(60)
+            .seed(3)
+            .start(&[1.0])
+            .build()
+            .unwrap();
+        let built_series = session.run(None).objective_series();
+
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&legacy_series), bits(&built_series), "{spec} trajectory");
+        assert_eq!(bits(&legacy.x), bits(session.x()), "{spec} final iterate");
+    }
+}
+
+/// A custom registered scheme drives a full GD run through the builder:
+/// the API is open end-to-end, and the iterate stays format-resident.
+#[test]
+fn custom_scheme_runs_gd_end_to_end() {
+    let scheme = coin_flip();
+    let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+    // Mixed per-tensor policy: custom law on (8c), built-ins elsewhere.
+    let mut session = RunBuilder::new(&p)
+        .format(B8)
+        .scheme("sr")
+        .sub_scheme("coin_flip")
+        .stepsize(0.05)
+        .steps(40)
+        .seed(9)
+        .start(&[1.0])
+        .build()
+        .unwrap();
+    let tr = session.run(None);
+    assert_eq!(tr.records.len(), 40);
+    assert!(session.x().iter().all(|&v| B8.contains(v)), "iterate left the format");
+    assert!(tr.final_f().is_finite());
+    // Uniform custom policy works too, and is reproducible per seed.
+    let run = |seed: u64| {
+        let mut s = RunBuilder::new(&p)
+            .format(B8)
+            .policy(scheme)
+            .stepsize(0.05)
+            .steps(30)
+            .seed(seed)
+            .start(&[1.0])
+            .build()
+            .unwrap();
+        s.run(None).objective_series()
+    };
+    assert_eq!(run(4), run(4), "custom scheme must be a pure function of the stream");
+    assert_ne!(run(4), run(5), "distinct seeds must decorrelate the custom law");
+}
+
+/// `Rounding::parse` (the deprecated shim) reports registered customs with
+/// a targeted error instead of a silent `None`.
+#[test]
+fn rounding_parse_rejects_custom_schemes_descriptively() {
+    let _ = coin_flip();
+    let err = Rounding::parse("coin_flip").unwrap_err().to_string();
+    assert!(err.contains("coin_flip") && err.contains("not a built-in"), "{err}");
+}

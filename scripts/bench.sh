@@ -15,6 +15,23 @@ if [ ${#benches[@]} -eq 0 ]; then
     benches=(rounding gd_step sweep)
 fi
 
+# Staleness guard: checked-in artifacts carrying a "provenance" field are
+# hand-projected seed estimates, not measurements (the benches print the
+# same warning via warn_if_hand_projected in benches/harness.rs).
+check_provenance() {
+    local stage="$1" stale=0 f
+    for f in BENCH_*.json; do
+        [ -e "$f" ] || continue
+        if grep -q '"provenance"' "$f"; then
+            echo "WARNING ($stage): $f carries a hand-projected 'provenance' marker — not measured numbers." >&2
+            stale=1
+        fi
+    done
+    return $stale
+}
+
+check_provenance "before run" || true
+
 for b in "${benches[@]}"; do
     echo "== cargo bench --bench $b =="
     cargo bench --bench "$b"
@@ -22,3 +39,6 @@ done
 
 echo "== refreshed artifacts =="
 ls -l BENCH_*.json
+if ! check_provenance "after run"; then
+    echo "WARNING: some artifacts above were NOT refreshed by this run (stale seed estimates remain)." >&2
+fi
