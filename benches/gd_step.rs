@@ -7,7 +7,7 @@
 include!("harness.rs");
 
 use lpgd::data::synth;
-use lpgd::fp::{FpFormat, LpCtx, Rng, Scheme};
+use lpgd::fp::{FixedPoint, FpFormat, LpCtx, Rng, Scheme};
 use lpgd::gd::engine::{GdConfig, GdEngine, GradModel, SchemePolicy};
 use lpgd::problems::{Mlr, Problem, Quadratic, TwoLayerNn};
 
@@ -63,6 +63,29 @@ fn main() {
         results.push(bench("gd_step nn 1200x196 h=100", 1200 * 196 * 100, || {
             e.step();
         }));
+    }
+
+    println!("-- fixed-point lane: one GD step on Q3.8 vs bfloat16 (diag n=1000) --");
+    {
+        let diag: Vec<f64> = (0..1000).map(|i| 0.05 + 0.95 * i as f64 / 999.0).collect();
+        let p = Quadratic::diagonal(diag, vec![0.5; 1000]);
+        let x0 = vec![2.0; 1000];
+        let mut cfg = GdConfig::new(FixedPoint::q(3, 8), schemes, 0.5, 1);
+        cfg.seed = 0;
+        let mut ef = GdEngine::new(cfg, &p, &x0);
+        let fixed_lane = bench("gd_step quad diag n=1000 q3.8", 1000, || {
+            ef.step();
+        });
+        let mut cfg2 = GdConfig::new(FpFormat::BFLOAT16, schemes, 0.5, 1);
+        cfg2.seed = 0;
+        let mut eb = GdEngine::new(cfg2, &p, &x0);
+        let float_lane = bench("gd_step quad diag n=1000 bf16", 1000, || {
+            eb.step();
+        });
+        let s = report_speedup(&float_lane, &fixed_lane);
+        speedups.push(("gd_step_bf16_vs_q3.8".into(), s));
+        results.push(fixed_lane);
+        results.push(float_lane);
     }
 
     println!("-- ACCEPTANCE: binary8 MLR rounded gradient, scalar-ref vs kernels --");

@@ -45,17 +45,30 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
+/// Is the reduced-iteration smoke profile requested? `BENCH_SMOKE=1` (any
+/// non-empty value other than `0`) cuts the per-bench budget ~10× so the
+/// CI `bench-smoke` job can exercise every bench target and still upload
+/// fresh `BENCH_*.json` artifacts in minutes. Smoke numbers are noisier —
+/// they validate the pipeline and give a coarse trajectory, not a
+/// publishable measurement.
+pub fn smoke_mode() -> bool {
+    std::env::var("BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
 /// Time `f` (which should perform `elems` logical elements of work) until
-/// ~0.5 s of samples or `max_iters`, whichever first.
+/// ~0.5 s of samples (50 ms under `BENCH_SMOKE=1`) or the iteration cap,
+/// whichever first.
 pub fn bench<F: FnMut()>(name: &str, elems: u64, mut f: F) -> BenchResult {
+    let smoke = smoke_mode();
+    let (warmup, budget_ms, max_iters) = if smoke { (1, 50, 40) } else { (3, 500, 1000) };
     // Warmup.
-    for _ in 0..3 {
+    for _ in 0..warmup {
         f();
     }
     let mut times = Vec::new();
-    let budget = std::time::Duration::from_millis(500);
+    let budget = std::time::Duration::from_millis(budget_ms);
     let started = Instant::now();
-    while started.elapsed() < budget && times.len() < 1000 {
+    while started.elapsed() < budget && times.len() < max_iters {
         let t0 = Instant::now();
         f();
         times.push(t0.elapsed().as_nanos() as f64);

@@ -4,7 +4,9 @@
 
 include!("harness.rs");
 
-use lpgd::fp::{round, round_slice, round_slice_with, FpFormat, Rng, RoundPlan, Rounding};
+use lpgd::fp::{
+    round, round_slice, round_slice_with, FixedPoint, FpFormat, Rng, RoundPlan, Rounding,
+};
 
 fn main() {
     warn_if_hand_projected("rounding");
@@ -128,6 +130,44 @@ fn main() {
             buf.copy_from_slice(&inf_vals);
             round_slice(&fmt, Rounding::Sr, &mut buf, &mut r);
         }));
+    }
+
+    println!("-- fixed-point lane: integer-quantization kernel (Q3.8) --");
+    {
+        let fx = FixedPoint::q(3, 8);
+        // Scale the inputs into the Q3.8 range so the fast path dominates,
+        // mirroring the float lanes' in-range mix.
+        let mut gen = Rng::new(12);
+        let fxs: Vec<f64> = (0..n).map(|_| gen.normal() * 2.0).collect();
+        for mode in [Rounding::RoundNearestEven, Rounding::Sr, Rounding::SignedSrEps(0.25)] {
+            let plan = RoundPlan::new(fx);
+            let mut r = Rng::new(8);
+            let mut buf = fxs.clone();
+            results.push(bench(&format!("round_slice q3.8 {}", mode.label()), n as u64, || {
+                buf.copy_from_slice(&fxs);
+                plan.round_slice_with(mode, &mut buf, &fxs, &mut r);
+            }));
+        }
+        // Head-to-head: the same SR law through the float bit-pattern
+        // kernel (binary8) vs the fixed integer-quantization kernel.
+        let planf = RoundPlan::new(fmt);
+        let mut rf = Rng::new(8);
+        let mut bf = fxs.clone();
+        let float_lane = bench("round_slice SR binary8 (same inputs)", n as u64, || {
+            bf.copy_from_slice(&fxs);
+            planf.round_slice(Rounding::Sr, &mut bf, &mut rf);
+        });
+        let planq = RoundPlan::new(fx);
+        let mut rq = Rng::new(8);
+        let mut bq = fxs.clone();
+        let fixed_lane = bench("round_slice SR q3.8    (same inputs)", n as u64, || {
+            bq.copy_from_slice(&fxs);
+            planq.round_slice(Rounding::Sr, &mut bq, &mut rq);
+        });
+        let s = report_speedup(&float_lane, &fixed_lane);
+        speedups.push(("sr_float_bitkernel_vs_fixed_quant".into(), s));
+        results.push(float_lane);
+        results.push(fixed_lane);
     }
 
     println!("-- single value micro (ns/round) --");

@@ -14,7 +14,7 @@ use crate::coordinator::aggregate::expectation_jobs;
 use crate::coordinator::registry;
 use crate::coordinator::scheduler::run_indexed;
 use crate::data::{load_or_synth, Dataset};
-use crate::fp::{FpFormat, RoundPlan, Scheme};
+use crate::fp::{FixedPoint, FpFormat, Grid, RoundPlan, Scheme};
 use crate::gd::engine::{GdConfig, GdEngine, GradModel, SchemePolicy};
 use crate::gd::theory;
 use crate::gd::trace::Trace;
@@ -389,21 +389,21 @@ fn curves_flat(
     curves
 }
 
-/// One MLR training cell: train `(fmt, schemes, grad_model)` at `seed` for
-/// `epochs` and return the test-error series. Every MLR fan-out
-/// (`learning_table`, `fig4a_acc`, `fig5`) runs this one body, so a change
-/// to how a cell is configured happens in exactly one place.
+/// One MLR training cell: train `(grid, schemes, grad_model)` at `seed`
+/// for `epochs` and return the test-error series. Every MLR fan-out
+/// (`learning_table`, `fig4a_acc`, `fig5`, `plfp2`) runs this one body, so
+/// a change to how a cell is configured happens in exactly one place.
 #[allow(clippy::too_many_arguments)]
 fn mlr_cell(
     setup: &LearnSetup,
-    fmt: FpFormat,
+    grid: Grid,
     schemes: SchemePolicy,
     gm: GradModel,
     t_step: f64,
     epochs: usize,
     seed: u64,
 ) -> Vec<f64> {
-    let mut cfg = GdConfig::new(fmt, schemes, t_step, epochs);
+    let mut cfg = GdConfig::new(grid, schemes, t_step, epochs);
     cfg.seed = seed;
     cfg.grad_model = gm;
     let mut e = GdEngine::new(cfg, &setup.mlr, &setup.x0);
@@ -417,10 +417,10 @@ fn mlr_cell(
 pub(crate) fn fig4a(ctx: &ExpCtx) -> Table {
     let setup = mlr_setup(ctx);
     let t_step = 0.5;
-    let b8 = FpFormat::BINARY8;
+    let b8: Grid = FpFormat::BINARY8.into();
     let sr = Scheme::sr();
-    let cfgs: Vec<(String, FpFormat, SchemePolicy)> = vec![
-        ("binary32".into(), FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn())),
+    let cfgs: Vec<(String, Grid, SchemePolicy)> = vec![
+        ("binary32".into(), FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn())),
         ("RN".into(), b8, SchemePolicy { grad: Scheme::rn(), mul: Scheme::rn(), sub: sr }),
         ("SR".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }),
         ("SR_eps(0.2)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.2), mul: Scheme::sr_eps(0.2), sub: sr }),
@@ -442,10 +442,10 @@ pub(crate) fn fig4a(ctx: &ExpCtx) -> Table {
 pub(crate) fn fig4b(ctx: &ExpCtx) -> Table {
     let setup = mlr_setup(ctx);
     let t_step = 0.5;
-    let b8 = FpFormat::BINARY8;
+    let b8: Grid = FpFormat::BINARY8.into();
     let sr = Scheme::sr();
-    let cfgs: Vec<(String, FpFormat, SchemePolicy)> = vec![
-        ("binary32".into(), FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn())),
+    let cfgs: Vec<(String, Grid, SchemePolicy)> = vec![
+        ("binary32".into(), FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn())),
         ("SR|SR".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }),
         ("SR_eps(0.1)|signed(0.1)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.1), mul: Scheme::sr_eps(0.1), sub: Scheme::signed_sr_eps(0.1) }),
         ("SR|signed(0.1)".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: Scheme::signed_sr_eps(0.1) }),
@@ -474,11 +474,11 @@ pub(crate) fn fig4b(ctx: &ExpCtx) -> Table {
 pub(crate) fn fig4a_acc(ctx: &ExpCtx) -> Table {
     let setup = mlr_setup(ctx);
     let t_step = 0.5;
-    let b8 = FpFormat::BINARY8;
+    let b8: Grid = FpFormat::BINARY8.into();
     let sr = Scheme::sr();
     let epochs = ctx.mlr_epochs.min(60); // the separation is clear early
-    let cfgs: Vec<(String, FpFormat, SchemePolicy, GradModel)> = vec![
-        ("binary32".into(), FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn()), GradModel::Exact),
+    let cfgs: Vec<(String, Grid, SchemePolicy, GradModel)> = vec![
+        ("binary32".into(), FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn()), GradModel::Exact),
         ("RN_acc".into(), b8, SchemePolicy { grad: Scheme::rn(), mul: Scheme::rn(), sub: sr }, GradModel::PerOp),
         ("SR_acc".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }, GradModel::PerOp),
         ("RN_chop".into(), b8, SchemePolicy { grad: Scheme::rn(), mul: Scheme::rn(), sub: sr }, GradModel::RoundAfterOp),
@@ -513,7 +513,7 @@ pub(crate) fn fig4a_acc(ctx: &ExpCtx) -> Table {
 /// Paper Figure 5 (a: SR, b: SRε+signed-SRε): MLR stepsize sweep.
 pub(crate) fn fig5(ctx: &ExpCtx, biased: bool) -> Table {
     let setup = mlr_setup(ctx);
-    let b8 = FpFormat::BINARY8;
+    let b8: Grid = FpFormat::BINARY8.into();
     let schemes = if biased {
         SchemePolicy {
             grad: Scheme::sr_eps(0.1),
@@ -541,8 +541,8 @@ pub(crate) fn fig5(ctx: &ExpCtx, biased: bool) -> Table {
     // One flattened batch: the binary32 baseline (t = 1.25) followed by the
     // (stepsize × seed) grid — so the deterministic baseline doesn't hold a
     // core alone while the rest of the pool idles.
-    let mut grid: Vec<(FpFormat, SchemePolicy, f64)> =
-        vec![(FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn()), 1.25)];
+    let mut grid: Vec<(Grid, SchemePolicy, f64)> =
+        vec![(FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn()), 1.25)];
     for &t_ in &ts {
         grid.push((b8, schemes, t_));
     }
@@ -601,7 +601,7 @@ fn nn_setup(ctx: &ExpCtx) -> NnSetup {
 /// the per-config mean test-error series.
 fn nn_curves(
     setup: &NnSetup,
-    cfgs: &[(String, FpFormat, SchemePolicy)],
+    cfgs: &[(String, Grid, SchemePolicy)],
     t_step: f64,
     epochs: usize,
     seeds: usize,
@@ -622,10 +622,10 @@ fn nn_curves(
 pub(crate) fn fig6a(ctx: &ExpCtx) -> Table {
     let setup = nn_setup(ctx);
     let t_step = 0.09375;
-    let b8 = FpFormat::BINARY8;
+    let b8: Grid = FpFormat::BINARY8.into();
     let sr = Scheme::sr();
-    let cfgs: Vec<(String, FpFormat, SchemePolicy)> = vec![
-        ("binary32".into(), FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn())),
+    let cfgs: Vec<(String, Grid, SchemePolicy)> = vec![
+        ("binary32".into(), FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn())),
         ("RN".into(), b8, SchemePolicy::uniform(Scheme::rn())),
         ("SR".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }),
         ("SR_eps(0.2)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.2), mul: Scheme::sr_eps(0.2), sub: sr }),
@@ -652,10 +652,10 @@ pub(crate) fn fig6a(ctx: &ExpCtx) -> Table {
 pub(crate) fn fig6b(ctx: &ExpCtx) -> Table {
     let setup = nn_setup(ctx);
     let t_step = 0.09375;
-    let b8 = FpFormat::BINARY8;
+    let b8: Grid = FpFormat::BINARY8.into();
     let sr = Scheme::sr();
-    let cfgs: Vec<(String, FpFormat, SchemePolicy)> = vec![
-        ("binary32".into(), FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn())),
+    let cfgs: Vec<(String, Grid, SchemePolicy)> = vec![
+        ("binary32".into(), FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn())),
         ("SR|SR".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }),
         ("SR_eps(0.1)|signed(0.05)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.1), mul: Scheme::sr_eps(0.1), sub: Scheme::signed_sr_eps(0.05) }),
         ("SR|signed(0.1)".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: Scheme::signed_sr_eps(0.1) }),
@@ -827,6 +827,181 @@ pub(crate) fn table1(ctx: &ExpCtx) -> Table {
     t
 }
 
+// ----------------------------------------------------------------- plfp --
+//
+// The fixed-point / PL-inequality experiment family (companion paper
+// arXiv:2301.09511): the same GD harness, schemes and scheduler cells as
+// the floating-point figures, but on uniform Qm.n grids, compared against
+// the PL convergence bounds of `gd::theory`.
+
+/// The `plfp1`/`plfp2` working grid: signed Q3.8 / Q4.8 (δ = 2^{−8}).
+const PLFP_GRID: FixedPoint = FixedPoint::q(3, 8);
+
+/// The quadratic the `plfp*` family descends: a diagonal spectrum ramping
+/// over `[0.05, 1]` (L = 1, μ = 0.05 — strongly convex, hence PL), with
+/// `x* = 0.5·1` and `x⁰ = 2·1` exact grid points of every Q3.f sweep grid
+/// (f ≥ 1), and stepsize `t = 0.5 ≤ 1/L`.
+fn plfp_quadratic(n: usize) -> (Quadratic, Vec<f64>, f64) {
+    let n = n.max(2);
+    let diag: Vec<f64> =
+        (0..n).map(|i| 0.05 + 0.95 * i as f64 / (n - 1) as f64).collect();
+    let p = Quadratic::diagonal(diag, vec![0.5; n]);
+    (p, vec![2.0; n], 0.5)
+}
+
+/// plfp1: GD on the PL quadratic over the fixed-point Q3.8 grid — RN vs SR
+/// vs SR+signed-SRε against the exact-arithmetic PL bound and the
+/// fixed-point-SR PL bound (the companion paper's headline comparison).
+pub(crate) fn plfp1(ctx: &ExpCtx) -> Table {
+    let n = ctx.quad_n.min(200);
+    let steps = ctx.quad_steps.min(1500);
+    let (p, x0, t_step) = plfp_quadratic(n);
+    let n = p.dim(); // plfp_quadratic clamps tiny n up to 2
+    let lip = p.lipschitz().unwrap();
+    let mu = p.pl_constant().unwrap();
+    let gap0 = p.objective(&x0); // f(x*) = 0
+    let fx = PLFP_GRID;
+
+    let rn_pol = SchemePolicy::uniform(Scheme::rn());
+    let sr_pol = SchemePolicy::uniform(Scheme::sr());
+    let sg_pol = SchemePolicy {
+        grad: Scheme::sr(),
+        mul: Scheme::sr(),
+        sub: Scheme::signed_sr_eps(0.25),
+    };
+    let cfgs = [rn_pol, sr_pol, sg_pol];
+    let seeds_per: Vec<usize> = cfgs.iter().map(|sch| seeds_for(sch, ctx.seeds)).collect();
+    let curves = curves_flat(&seeds_per, ctx.jobs, &|ci, s| {
+        let mut cfg = GdConfig::new(fx, cfgs[ci], t_step, steps);
+        cfg.seed = s;
+        GdEngine::new(cfg, &p, &x0).run(None).objective_series()
+    });
+
+    let mut t = Table::new(
+        "plfp1",
+        "PL quadratic on fixed-point Q3.8: RN vs SR vs signed-SReps vs PL bounds (arXiv:2301.09511)",
+        &["k", "pl_exact_bound", "pl_sr_bound", "Q3.8_RN", "Q3.8_SR", "Q3.8_SR|signed(0.25)"],
+    );
+    let stride = (steps / 200).max(1);
+    for k in (0..steps).step_by(stride) {
+        t.row(vec![
+            k.into(),
+            theory::pl_exact_bound(mu, lip, t_step, k, gap0).into(),
+            theory::pl_fixed_sr_bound(mu, lip, t_step, k, gap0, fx.delta(), n).into(),
+            curves[0][k].into(),
+            curves[1][k].into(),
+            curves[2][k].into(),
+        ]);
+    }
+    t.note(format!(
+        "theory: SR limiting accuracy {:.3e}, worst-case RN stagnation gap {:.3e} (delta={:.3e}, mu={mu}, L={lip}, t={t_step})",
+        theory::pl_fixed_sr_limit(mu, lip, t_step, fx.delta(), n),
+        theory::pl_rn_stagnation_gap(mu, t_step, fx.delta(), n),
+        fx.delta(),
+    ));
+    t.note(format!("seeds={} (companion paper: 20)", ctx.seeds));
+    t
+}
+
+/// plfp2: MLR training on a fixed-point Q4.8 grid (range ±16 holds the
+/// softmax sums, δ = 2^{−8}): RN stalls, SR tracks the binary32 baseline,
+/// signed-SRε on (8c) converges fastest — the companion paper's learning
+/// experiment transplanted onto the uniform grid.
+pub(crate) fn plfp2(ctx: &ExpCtx) -> Table {
+    let setup = mlr_setup(ctx);
+    let t_step = 0.5;
+    let q: Grid = FixedPoint::q(4, 8).into();
+    let sr = Scheme::sr();
+    let cfgs: Vec<(String, Grid, SchemePolicy)> = vec![
+        ("binary32".into(), FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn())),
+        ("Q4.8_RN".into(), q, SchemePolicy::uniform(Scheme::rn())),
+        ("Q4.8_SR".into(), q, SchemePolicy { grad: sr, mul: sr, sub: sr }),
+        (
+            "Q4.8_SR|signed(0.1)".into(),
+            q,
+            SchemePolicy { grad: sr, mul: sr, sub: Scheme::signed_sr_eps(0.1) },
+        ),
+    ];
+    let mut t = learning_table(
+        "plfp2",
+        "MLR test error on fixed-point Q4.8, t=0.5 (companion paper arXiv:2301.09511)",
+        &setup,
+        cfgs,
+        t_step,
+        ctx.mlr_epochs,
+        ctx.seeds,
+        ctx.jobs,
+    );
+    t.note("fixed-point analogue of fig4a/fig4b: uniform grid, saturating arithmetic");
+    t
+}
+
+/// plfp3: the stagnation-threshold sweep over `frac_bits` — for each Q3.f
+/// grid, the final objective gap under RN (one deterministic run) and SR
+/// (mean over seeds), against the theory columns: the SR limiting accuracy
+/// and the worst-case RN stagnation gap, both O(δ²) but separated by the
+/// 1/(Lt²μ·…) factor that makes SR win on every grid.
+pub(crate) fn plfp3(ctx: &ExpCtx) -> Table {
+    let n = ctx.quad_n.min(50);
+    let steps = ctx.quad_steps.min(800);
+    let (p, x0, t_step) = plfp_quadratic(n);
+    let n = p.dim();
+    let lip = p.lipschitz().unwrap();
+    let mu = p.pl_constant().unwrap();
+    let fracs: &[u32] = &[4, 6, 8, 10];
+
+    // One flattened batch over (frac_bits × {RN, SR-seed}) cells.
+    let rn_pol = SchemePolicy::uniform(Scheme::rn());
+    let sr_pol = SchemePolicy::uniform(Scheme::sr());
+    let mut grids: Vec<(FixedPoint, SchemePolicy)> = Vec::new();
+    for &f in fracs {
+        grids.push((FixedPoint::q(3, f), rn_pol));
+        grids.push((FixedPoint::q(3, f), sr_pol));
+    }
+    let seeds_per: Vec<usize> =
+        grids.iter().map(|(_, sch)| seeds_for(sch, ctx.seeds)).collect();
+    let finals = curves_flat(&seeds_per, ctx.jobs, &|ci, s| {
+        let (fx, sch) = grids[ci];
+        let mut cfg = GdConfig::new(fx, sch, t_step, steps);
+        cfg.seed = s;
+        let mut e = GdEngine::new(cfg, &p, &x0);
+        e.run(None);
+        vec![p.objective(&e.x)] // the settled gap (f* = 0)
+    });
+
+    let mut t = Table::new(
+        "plfp3",
+        "Stagnation-threshold sweep over frac_bits: final gap, RN vs SR vs theory (Q3.f grids)",
+        &[
+            "frac_bits",
+            "delta",
+            "rn_final_gap",
+            "sr_final_gap",
+            "sr_limit_theory",
+            "rn_stagnation_theory",
+        ],
+    );
+    for (i, &f) in fracs.iter().enumerate() {
+        let fx = FixedPoint::q(3, f);
+        let d = fx.delta();
+        t.row(vec![
+            (f as usize).into(),
+            d.into(),
+            finals[2 * i][0].into(),
+            finals[2 * i + 1][0].into(),
+            theory::pl_fixed_sr_limit(mu, lip, t_step, d, n).into(),
+            theory::pl_rn_stagnation_gap(mu, t_step, d, n).into(),
+        ]);
+    }
+    if let Some(fbits) = theory::frac_bits_for_target_gap(mu, lip, t_step, n, 1e-6) {
+        t.note(format!(
+            "smallest frac_bits with SR limiting accuracy <= 1e-6: {fbits} (theory::frac_bits_for_target_gap)"
+        ));
+    }
+    t.note(format!("n={n}, steps={steps}, seeds={} per stochastic cell", ctx.seeds));
+    t
+}
+
 /// Shared learning-figure table builder (named-config × epochs grid),
 /// fanned out through [`curves_flat`].
 #[allow(clippy::too_many_arguments)]
@@ -834,7 +1009,7 @@ fn learning_table(
     id: &str,
     title: &str,
     setup: &LearnSetup,
-    cfgs: Vec<(String, FpFormat, SchemePolicy)>,
+    cfgs: Vec<(String, Grid, SchemePolicy)>,
     t_step: f64,
     epochs: usize,
     seeds: usize,
@@ -906,6 +1081,48 @@ mod tests {
     #[test]
     fn unknown_experiment_errors() {
         assert!(run_experiment("nope", &ExpCtx::quick()).is_err());
+    }
+
+    /// plfp1 at smoke scale: SR tracks the PL-SR bound, RN stagnates above
+    /// the SR curve, and the exact bound under-runs the fixed-point runs.
+    #[test]
+    fn quick_plfp1_shapes_hold() {
+        let ctx = ExpCtx::quick();
+        let t = plfp1(&ctx);
+        assert!(t.rows.len() > 10);
+        let last = t.rows.last().unwrap();
+        let get = |i: usize| match last[i] {
+            Cell::Num(v) => v,
+            _ => f64::NAN,
+        };
+        let (sr_bound, rn, sr) = (get(2), get(3), get(4));
+        assert!(sr.is_finite() && rn.is_finite());
+        // The final SR mean respects the fixed-point PL bound.
+        assert!(sr <= sr_bound * 1.05, "sr={sr} bound={sr_bound}");
+        // RN stagnates well above SR on the uniform grid.
+        assert!(rn > sr, "rn={rn} sr={sr}");
+    }
+
+    /// plfp3 at smoke scale: finer grids lower both final gaps, and SR
+    /// settles below the worst-case RN stagnation level on every grid.
+    #[test]
+    fn quick_plfp3_sweep_is_monotone() {
+        let ctx = ExpCtx::quick();
+        let t = plfp3(&ctx);
+        assert_eq!(t.rows.len(), 4);
+        let num = |r: &Vec<Cell>, i: usize| match r[i] {
+            Cell::Num(v) => v,
+            _ => f64::NAN,
+        };
+        for r in &t.rows {
+            let (sr_final, sr_limit, rn_theory) = (num(r, 3), num(r, 4), num(r, 5));
+            assert!(sr_final.is_finite());
+            assert!(sr_limit < rn_theory, "theory separation must hold");
+        }
+        // The theory columns shrink 16x per 2 extra fractional bits.
+        let l0 = num(&t.rows[0], 4);
+        let l1 = num(&t.rows[1], 4);
+        assert!((l0 / l1 - 16.0).abs() < 1e-6, "{l0} vs {l1}");
     }
 
     #[test]

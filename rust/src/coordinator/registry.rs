@@ -111,6 +111,24 @@ pub const REGISTRY: &[ExperimentSpec] = &[
         paper_ref: "Table 1",
         run: |ctx| vec![experiments::table1(ctx)],
     },
+    ExperimentSpec {
+        id: "plfp1",
+        description: "PL quadratic on fixed-point Q3.8: RN/SR/signed-SReps vs PL bounds",
+        paper_ref: "arXiv:2301.09511 (companion)",
+        run: |ctx| vec![experiments::plfp1(ctx)],
+    },
+    ExperimentSpec {
+        id: "plfp2",
+        description: "MLR test error on fixed-point Q4.8: RN/SR/signed-SReps",
+        paper_ref: "arXiv:2301.09511 (companion)",
+        run: |ctx| vec![experiments::plfp2(ctx)],
+    },
+    ExperimentSpec {
+        id: "plfp3",
+        description: "Stagnation-threshold sweep over frac_bits (Q3.f grids) vs theory",
+        paper_ref: "arXiv:2301.09511 (companion)",
+        run: |ctx| vec![experiments::plfp3(ctx)],
+    },
 ];
 
 /// Look an experiment up by id.
@@ -127,7 +145,7 @@ mod tests {
         let ids: Vec<&str> = REGISTRY.iter().map(|s| s.id).collect();
         for required in [
             "table1", "table2", "fig1", "fig2", "fig3a", "fig3b", "fig4a", "fig4b", "fig5a",
-            "fig5b", "fig6a", "fig6b",
+            "fig5b", "fig6a", "fig6b", "plfp1", "plfp2", "plfp3",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }

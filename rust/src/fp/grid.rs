@@ -1,0 +1,506 @@
+//! Number *grids*: the set of representable values a rounding scheme maps
+//! into, abstracted over the number system.
+//!
+//! The paper's analysis is floating-point, but its companion work ("On the
+//! Convergence of the Gradient Descent Method with Stochastic Fixed-point
+//! Rounding Errors under the Polyak–Łojasiewicz Inequality",
+//! arXiv:2301.09511) runs the same bias-in-a-descent-direction story on
+//! *fixed-point* grids, and "Stochastic Rounding 2.0" (arXiv:2410.10517)
+//! frames SR as a general grid-quantization tool. Every rounding law in
+//! this repo only ever needs four things from the number system:
+//!
+//! 1. the neighbor pair `(⌊x⌋, ⌈x⌉)` of an arbitrary real `x`,
+//! 2. the residual `(x − ⌊x⌋)/(⌈x⌉ − ⌊x⌋)` driving the stochastic laws,
+//! 3. strict successor/predecessor for stagnation analysis, and
+//! 4. the saturation bounds `[min, max]`.
+//!
+//! [`NumberGrid`] captures exactly that contract; [`crate::fp::FpFormat`]
+//! (non-uniform, binade-scaled spacing) and [`FixedPoint`] (uniform spacing
+//! `δ = 2^{−f}`) both implement it, and the `Copy`-able [`Grid`] enum is
+//! the closed dispatch handle that [`crate::fp::round::RoundPlan`], the
+//! fused slice kernels, [`crate::fp::LpCtx`] and the GD engine carry —
+//! so every registered [`crate::fp::scheme::RoundingScheme`] runs
+//! unchanged on either backend. The uniform fixed-point grid gets a fast
+//! integer-quantization rounding path (scale, `floor`, exact residual)
+//! instead of the float backend's bit-pattern kernels — see
+//! `docs/fixed-point.md` for the grid definition, the saturation contract
+//! and the mapping to the companion paper's notation.
+
+use super::format::{pow2, FpFormat};
+
+/// The operations a rounding scheme needs from a number system: neighbor
+/// arithmetic, residuals, membership and saturation bounds.
+///
+/// # Contract
+///
+/// * `floor_ceil(x)` returns `(max{y ∈ G : y ≤ x}, min{y ∈ G : y ≥ x})`,
+///   with the out-of-range sides reported as `±∞` (e.g. `x > max` yields
+///   `(max, +∞)`); both components equal `x` iff `x ∈ G`. NaN propagates.
+/// * `successor`/`predecessor` are *strict* and require `x ∈ G`.
+/// * `min_value()`/`max_value()` are the finite saturation endpoints the
+///   stochastic schemes clamp to (the deterministic overflow rule is
+///   backend-specific: floats overflow to `±∞` under RN past the IEEE
+///   threshold, fixed-point always saturates — see `docs/fixed-point.md`).
+pub trait NumberGrid {
+    /// `(⌊x⌋_G, ⌈x⌉_G)` — see the trait-level contract.
+    fn floor_ceil(&self, x: f64) -> (f64, f64);
+    /// Is `x` exactly an element of the grid (finite values only)?
+    fn contains(&self, x: f64) -> bool;
+    /// Strict successor `min{y ∈ G : y > x}` for `x ∈ G` (`+∞` past `max`).
+    fn successor(&self, x: f64) -> f64;
+    /// Strict predecessor `max{y ∈ G : y < x}` for `x ∈ G`.
+    fn predecessor(&self, x: f64) -> f64;
+    /// Most negative finite grid point (the lower saturation endpoint).
+    fn min_value(&self) -> f64;
+    /// Largest finite grid point (the upper saturation endpoint).
+    fn max_value(&self) -> f64;
+    /// Short human-readable name (`"binary8"`, `"Q3.8"`, …).
+    fn label(&self) -> String;
+    /// The residual `(x − ⌊x⌋)/(⌈x⌉ − ⌊x⌋) ∈ [0, 1)` that drives the
+    /// stochastic rounding laws; `0` when `x ∈ G`.
+    fn residual(&self, x: f64) -> f64 {
+        let (lo, hi) = self.floor_ceil(x);
+        if lo == hi {
+            0.0
+        } else {
+            (x - lo) / (hi - lo)
+        }
+    }
+
+    /// Clamp to the finite grid range `[min_value, max_value]` — the
+    /// saturation every stochastic scheme applies to out-of-range
+    /// neighbors (NaN passes through, as `f64::clamp` keeps it). Custom
+    /// schemes should use this instead of re-deriving the clamp.
+    fn saturate(&self, x: f64) -> f64 {
+        x.clamp(self.min_value(), self.max_value())
+    }
+}
+
+impl NumberGrid for FpFormat {
+    fn floor_ceil(&self, x: f64) -> (f64, f64) {
+        FpFormat::floor_ceil(self, x)
+    }
+    fn contains(&self, x: f64) -> bool {
+        FpFormat::contains(self, x)
+    }
+    fn successor(&self, x: f64) -> f64 {
+        FpFormat::successor(self, x)
+    }
+    fn predecessor(&self, x: f64) -> f64 {
+        FpFormat::predecessor(self, x)
+    }
+    fn min_value(&self) -> f64 {
+        -self.x_max()
+    }
+    fn max_value(&self) -> f64 {
+        self.x_max()
+    }
+    fn label(&self) -> String {
+        self.name().to_string()
+    }
+}
+
+/// A binary fixed-point grid in the Qm.n convention of the companion paper
+/// (arXiv:2301.09511, §2): the values `k · δ` with `δ = 2^{−frac_bits}` and
+/// the stored integer `k` ranging over a `word_bits`-wide two's-complement
+/// (signed) or unsigned word. `Q3.8` is signed with 3 integer bits and
+/// 8 fractional bits (12-bit word); `uQ3.8` is the unsigned 11-bit variant.
+///
+/// Every grid point is carried exactly as an `f64` (the same embedding
+/// trick as [`FpFormat`]): `word_bits ≤ 52` guarantees `k`, `k·δ` and the
+/// residual arithmetic are all exact in binary64.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixedPoint {
+    /// Fractional bits `n` — the spacing is `δ = 2^{−n}`.
+    pub frac_bits: u32,
+    /// Total word width in bits (sign bit included when `signed`).
+    pub word_bits: u32,
+    /// Two's-complement (`k ∈ [−2^{w−1}, 2^{w−1}−1]`) vs unsigned
+    /// (`k ∈ [0, 2^w−1]`).
+    pub signed: bool,
+}
+
+impl FixedPoint {
+    /// A signed Qm.n grid: `m` integer bits, `n` fractional bits, one sign
+    /// bit (`word_bits = m + n + 1`). Panics when the word exceeds the
+    /// 52-bit exact-embedding budget.
+    pub const fn q(int_bits: u32, frac_bits: u32) -> Self {
+        let word_bits = int_bits + frac_bits + 1;
+        assert!(word_bits >= 2, "fixed-point word must be at least 2 bits");
+        assert!(word_bits <= 52, "fixed-point word must fit the 52-bit exact-embedding budget");
+        Self { frac_bits, word_bits, signed: true }
+    }
+
+    /// An unsigned uQm.n grid (`word_bits = m + n`).
+    pub const fn uq(int_bits: u32, frac_bits: u32) -> Self {
+        let word_bits = int_bits + frac_bits;
+        assert!(word_bits >= 1, "fixed-point word must be at least 1 bit");
+        assert!(word_bits <= 52, "fixed-point word must fit the 52-bit exact-embedding budget");
+        Self { frac_bits, word_bits, signed: false }
+    }
+
+    /// Integer bits `m` of the Qm.n form (sign bit excluded).
+    pub fn int_bits(&self) -> u32 {
+        self.word_bits - self.frac_bits - self.signed as u32
+    }
+
+    /// The grid spacing `δ = 2^{−frac_bits}` — the uniform-grid analogue of
+    /// the floating-point unit roundoff (the companion paper's ε).
+    #[inline]
+    pub fn delta(&self) -> f64 {
+        pow2(-(self.frac_bits as i32))
+    }
+
+    /// Smallest stored integer `k_min` (0 when unsigned).
+    #[inline]
+    fn k_min(&self) -> f64 {
+        if self.signed {
+            -((1u64 << (self.word_bits - 1)) as f64)
+        } else {
+            0.0
+        }
+    }
+
+    /// Largest stored integer `k_max`.
+    #[inline]
+    fn k_max(&self) -> f64 {
+        if self.signed {
+            ((1u64 << (self.word_bits - 1)) - 1) as f64
+        } else {
+            ((1u64 << self.word_bits) - 1) as f64
+        }
+    }
+
+    /// Parse `"Q3.8"` / `"q3.8"` (signed) or `"uQ3.8"` (unsigned), with an
+    /// optional `"fixed:"` prefix — the CLI `--backend fixed:Qm.n` spelling.
+    /// Returns `None` on malformed specs or words outside the constructor
+    /// bounds (signed ≥ 2 bits, unsigned ≥ 1 bit, ≤ 52 either way), so
+    /// [`FixedPoint::name`] always round-trips.
+    pub fn parse(spec: &str) -> Option<Self> {
+        let s = spec.trim().to_ascii_lowercase();
+        let s = s.strip_prefix("fixed:").unwrap_or(&s);
+        let (signed, body) = match s.strip_prefix("uq") {
+            Some(rest) => (false, rest),
+            None => (true, s.strip_prefix('q')?),
+        };
+        let (m, n) = body.split_once('.')?;
+        let int_bits: u32 = m.parse().ok()?;
+        let frac_bits: u32 = n.parse().ok()?;
+        let word_bits = int_bits.checked_add(frac_bits)?.checked_add(signed as u32)?;
+        let min_bits = if signed { 2u32 } else { 1 };
+        if !(min_bits..=52).contains(&word_bits) {
+            return None;
+        }
+        Some(Self { frac_bits, word_bits, signed })
+    }
+
+    /// Canonical spec string, re-parseable by [`FixedPoint::parse`].
+    pub fn name(&self) -> String {
+        if self.signed {
+            format!("q{}.{}", self.int_bits(), self.frac_bits)
+        } else {
+            format!("uq{}.{}", self.int_bits(), self.frac_bits)
+        }
+    }
+}
+
+impl NumberGrid for FixedPoint {
+    fn floor_ceil(&self, x: f64) -> (f64, f64) {
+        if x == 0.0 {
+            return (0.0, 0.0); // 0 = 0·δ is a grid point of every variant
+        }
+        if x.is_nan() {
+            return (f64::NAN, f64::NAN);
+        }
+        let (vmin, vmax) = (self.min_value(), self.max_value());
+        if x > vmax {
+            return (vmax, f64::INFINITY);
+        }
+        if x < vmin {
+            return (f64::NEG_INFINITY, vmin);
+        }
+        // Exact integer quantization: δ is a power of two and |k| < 2^52,
+        // so the scaling, the floor and the rescaling are all exact.
+        let m = x * (1.0 / self.delta());
+        let k = m.floor();
+        let lo = k * self.delta();
+        if k == m {
+            (lo, lo)
+        } else {
+            (lo, (k + 1.0) * self.delta())
+        }
+    }
+
+    fn contains(&self, x: f64) -> bool {
+        if x == 0.0 {
+            return true;
+        }
+        if !x.is_finite() || x > self.max_value() || x < self.min_value() {
+            return false;
+        }
+        let m = x * (1.0 / self.delta());
+        m == m.floor()
+    }
+
+    fn successor(&self, x: f64) -> f64 {
+        debug_assert!(self.contains(x), "successor() requires x on the grid (got {x})");
+        if x >= self.max_value() {
+            f64::INFINITY
+        } else {
+            x + self.delta() // exact: one step on the uniform grid
+        }
+    }
+
+    fn predecessor(&self, x: f64) -> f64 {
+        debug_assert!(self.contains(x), "predecessor() requires x on the grid (got {x})");
+        if x <= self.min_value() {
+            f64::NEG_INFINITY
+        } else {
+            x - self.delta()
+        }
+    }
+
+    fn min_value(&self) -> f64 {
+        self.k_min() * self.delta()
+    }
+
+    fn max_value(&self) -> f64 {
+        self.k_max() * self.delta()
+    }
+
+    fn label(&self) -> String {
+        if self.signed {
+            format!("Q{}.{}", self.int_bits(), self.frac_bits)
+        } else {
+            format!("uQ{}.{}", self.int_bits(), self.frac_bits)
+        }
+    }
+}
+
+/// The closed, `Copy`-able dispatch handle over the supported number-grid
+/// backends — what [`crate::fp::round::RoundPlan`], [`crate::fp::LpCtx`],
+/// `GdConfig` and the CLI carry. Build one from an [`FpFormat`] or a
+/// [`FixedPoint`] via `From`/`Into` (every constructor in the repo accepts
+/// `impl Into<Grid>`, so float-only call sites are unchanged), or parse a
+/// spec string with [`Grid::parse`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Grid {
+    /// A floating-point format (binade-scaled spacing) — the source paper.
+    Float(FpFormat),
+    /// A fixed-point Qm.n grid (uniform spacing) — the companion paper.
+    Fixed(FixedPoint),
+}
+
+impl Grid {
+    /// Parse a backend spec: any [`FpFormat::by_name`] name (`"binary8"`,
+    /// `"bfloat16"`, …) or a fixed-point spec (`"q3.8"` / `"uQ3.8"` /
+    /// `"fixed:Q3.8"`).
+    pub fn parse(spec: &str) -> Option<Self> {
+        if let Some(f) = FpFormat::by_name(spec) {
+            return Some(Grid::Float(f));
+        }
+        FixedPoint::parse(spec).map(Grid::Fixed)
+    }
+
+    /// The underlying float format, when this is a float grid.
+    pub fn as_float(&self) -> Option<FpFormat> {
+        match self {
+            Grid::Float(f) => Some(*f),
+            Grid::Fixed(_) => None,
+        }
+    }
+
+    /// The underlying fixed-point grid, when this is one.
+    pub fn as_fixed(&self) -> Option<FixedPoint> {
+        match self {
+            Grid::Float(_) => None,
+            Grid::Fixed(f) => Some(*f),
+        }
+    }
+
+    /// Canonical spec string (`"binary8"`, `"q3.8"`), re-parseable by
+    /// [`Grid::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            Grid::Float(f) => f.name().to_string(),
+            Grid::Fixed(f) => f.name(),
+        }
+    }
+
+    /// The τ_k stagnation threshold of the backend: GD under RN freezes
+    /// once the scaled update falls to or below it — `u/2` on a float grid
+    /// (paper §3.2), `1/2` (i.e. half a spacing, in spacings) on a uniform
+    /// fixed-point grid.
+    pub fn stagnation_threshold(&self) -> f64 {
+        match self {
+            Grid::Float(f) => f.unit_roundoff() / 2.0,
+            Grid::Fixed(_) => 0.5,
+        }
+    }
+}
+
+impl NumberGrid for Grid {
+    fn floor_ceil(&self, x: f64) -> (f64, f64) {
+        match self {
+            Grid::Float(f) => f.floor_ceil(x),
+            Grid::Fixed(f) => NumberGrid::floor_ceil(f, x),
+        }
+    }
+    fn contains(&self, x: f64) -> bool {
+        match self {
+            Grid::Float(f) => f.contains(x),
+            Grid::Fixed(f) => NumberGrid::contains(f, x),
+        }
+    }
+    fn successor(&self, x: f64) -> f64 {
+        match self {
+            Grid::Float(f) => f.successor(x),
+            Grid::Fixed(f) => NumberGrid::successor(f, x),
+        }
+    }
+    fn predecessor(&self, x: f64) -> f64 {
+        match self {
+            Grid::Float(f) => f.predecessor(x),
+            Grid::Fixed(f) => NumberGrid::predecessor(f, x),
+        }
+    }
+    fn min_value(&self) -> f64 {
+        match self {
+            Grid::Float(f) => NumberGrid::min_value(f),
+            Grid::Fixed(f) => NumberGrid::min_value(f),
+        }
+    }
+    fn max_value(&self) -> f64 {
+        match self {
+            Grid::Float(f) => NumberGrid::max_value(f),
+            Grid::Fixed(f) => NumberGrid::max_value(f),
+        }
+    }
+    fn label(&self) -> String {
+        match self {
+            Grid::Float(f) => NumberGrid::label(f),
+            Grid::Fixed(f) => NumberGrid::label(f),
+        }
+    }
+}
+
+impl From<FpFormat> for Grid {
+    fn from(f: FpFormat) -> Self {
+        Grid::Float(f)
+    }
+}
+
+impl From<&FpFormat> for Grid {
+    fn from(f: &FpFormat) -> Self {
+        Grid::Float(*f)
+    }
+}
+
+impl From<FixedPoint> for Grid {
+    fn from(f: FixedPoint) -> Self {
+        Grid::Fixed(f)
+    }
+}
+
+impl From<&FixedPoint> for Grid {
+    fn from(f: &FixedPoint) -> Self {
+        Grid::Fixed(*f)
+    }
+}
+
+impl From<&Grid> for Grid {
+    fn from(g: &Grid) -> Self {
+        *g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const Q2_3: FixedPoint = FixedPoint::q(2, 3); // δ=1/8, range [-4, 3.875]
+
+    #[test]
+    fn q_parameters() {
+        assert_eq!(Q2_3.delta(), 0.125);
+        assert_eq!(Q2_3.word_bits, 6);
+        assert_eq!(NumberGrid::min_value(&Q2_3), -4.0);
+        assert_eq!(NumberGrid::max_value(&Q2_3), 3.875);
+        let u = FixedPoint::uq(2, 3);
+        assert_eq!(NumberGrid::min_value(&u), 0.0);
+        assert_eq!(NumberGrid::max_value(&u), 31.0 * 0.125);
+        assert_eq!(Q2_3.int_bits(), 2);
+    }
+
+    #[test]
+    fn parse_roundtrips() {
+        for spec in ["q2.3", "Q2.3", "fixed:Q2.3", "uq4.8", "fixed:uQ4.8", "q0.7", "uq1.0"] {
+            let fx = FixedPoint::parse(spec).unwrap_or_else(|| panic!("parse {spec}"));
+            assert_eq!(FixedPoint::parse(&fx.name()), Some(fx), "{spec}");
+            assert_eq!(Grid::parse(spec), Some(Grid::Fixed(fx)), "{spec}");
+        }
+        assert_eq!(Grid::parse("binary8"), Some(Grid::Float(FpFormat::BINARY8)));
+        for bad in ["q2", "q.3", "qx.y", "fixed:", "q60.0", "binary7", ""] {
+            assert_eq!(Grid::parse(bad), None, "{bad}");
+        }
+        assert_eq!(Q2_3.name(), "q2.3");
+        assert_eq!(NumberGrid::label(&Q2_3), "Q2.3");
+        assert_eq!(NumberGrid::label(&FixedPoint::uq(2, 3)), "uQ2.3");
+    }
+
+    #[test]
+    fn floor_ceil_on_the_uniform_grid() {
+        assert_eq!(NumberGrid::floor_ceil(&Q2_3, 0.0), (0.0, 0.0));
+        assert_eq!(NumberGrid::floor_ceil(&Q2_3, 1.1), (1.0, 1.125));
+        assert_eq!(NumberGrid::floor_ceil(&Q2_3, -1.1), (-1.125, -1.0));
+        assert_eq!(NumberGrid::floor_ceil(&Q2_3, 0.125), (0.125, 0.125));
+        // Out of range: inward saturation endpoint, outward infinity.
+        assert_eq!(NumberGrid::floor_ceil(&Q2_3, 5.0), (3.875, f64::INFINITY));
+        assert_eq!(NumberGrid::floor_ceil(&Q2_3, -5.0), (f64::NEG_INFINITY, -4.0));
+        assert_eq!(NumberGrid::floor_ceil(&Q2_3, f64::INFINITY), (3.875, f64::INFINITY));
+        // Unsigned grid: everything below zero ceils to 0.
+        let u = FixedPoint::uq(2, 3);
+        assert_eq!(NumberGrid::floor_ceil(&u, -0.01), (f64::NEG_INFINITY, 0.0));
+        // Residual is the exact position in the gap.
+        assert_eq!(NumberGrid::residual(&Q2_3, 1.0625), 0.5);
+        assert_eq!(NumberGrid::residual(&Q2_3, 1.0), 0.0);
+    }
+
+    #[test]
+    fn membership_and_neighbors() {
+        for k in -32i64..=31 {
+            let x = k as f64 * 0.125;
+            assert!(NumberGrid::contains(&Q2_3, x), "{x}");
+            let (lo, hi) = NumberGrid::floor_ceil(&Q2_3, x);
+            assert_eq!((lo, hi), (x, x));
+        }
+        assert!(!NumberGrid::contains(&Q2_3, 0.1));
+        assert!(!NumberGrid::contains(&Q2_3, 4.0)); // past k_max
+        assert!(!NumberGrid::contains(&Q2_3, f64::INFINITY));
+        // su/pr walk the grid in δ steps and are strict inverses inside.
+        assert_eq!(NumberGrid::successor(&Q2_3, 0.0), 0.125);
+        assert_eq!(NumberGrid::predecessor(&Q2_3, 0.0), -0.125);
+        assert_eq!(NumberGrid::successor(&Q2_3, 3.875), f64::INFINITY);
+        assert_eq!(NumberGrid::predecessor(&Q2_3, -4.0), f64::NEG_INFINITY);
+        for k in -31i64..=30 {
+            let x = k as f64 * 0.125;
+            assert_eq!(NumberGrid::predecessor(&Q2_3, NumberGrid::successor(&Q2_3, x)), x);
+        }
+    }
+
+    #[test]
+    fn grid_enum_delegates_and_converts() {
+        let g: Grid = Q2_3.into();
+        assert_eq!(g.as_fixed(), Some(Q2_3));
+        assert_eq!(g.as_float(), None);
+        assert_eq!(g.floor_ceil(1.1), (1.0, 1.125));
+        assert_eq!(g.name(), "q2.3");
+        assert_eq!(g.stagnation_threshold(), 0.5);
+        let f: Grid = FpFormat::BINARY8.into();
+        assert_eq!(f.as_float(), Some(FpFormat::BINARY8));
+        assert_eq!(f.stagnation_threshold(), 0.0625);
+        assert_eq!(Grid::from(&FpFormat::BINARY8), f);
+        assert_eq!(Grid::from(&g), g);
+        assert_ne!(f, g);
+    }
+}

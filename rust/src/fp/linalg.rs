@@ -12,44 +12,49 @@
 //! RN / SR / SRε / signed-SRε with one configuration knob.
 
 use super::format::FpFormat;
+use super::grid::Grid;
 use super::round::{RoundPlan, Rounding};
 use super::rng::Rng;
 use super::scheme::Scheme;
 
 /// A low-precision computation context: all ops round into a fixed
-/// `(format, scheme)` pair chosen at construction.
+/// `(grid, scheme)` pair chosen at construction.
 ///
 /// The rounding constants are precomputed once ([`RoundPlan`]) — this is
 /// the (8a) gradient hot path, where a single evaluation performs
-/// `samples × features` scalar roundings. Format and scheme are private so
+/// `samples × features` scalar roundings. Grid and scheme are private so
 /// the cached plan can never desynchronize; build a fresh context to
-/// switch either. The scheme is any open-API [`Scheme`] handle; built-in
-/// schemes dispatch through their cached [`Rounding`] tag (no virtual call
-/// on the per-scalar path, bit-identical to the historic enum dispatch).
+/// switch either. The grid is either backend (a float [`FpFormat`] or a
+/// fixed-point [`crate::fp::FixedPoint`], both convert into [`Grid`]); the
+/// scheme is any open-API [`Scheme`] handle — built-in schemes dispatch
+/// through their cached [`Rounding`] tag (no virtual call on the
+/// per-scalar path, bit-identical to the historic enum dispatch).
 #[derive(Debug, Clone)]
 pub struct LpCtx {
-    fmt: FpFormat,
+    grid: Grid,
     mode: Scheme,
     /// Randomness stream for the stochastic schemes.
     pub rng: Rng,
     /// Number of rounding operations performed (profiling / op counting).
     pub rounding_ops: u64,
-    /// Constants precomputed from `fmt` at construction.
+    /// Constants precomputed from `grid` at construction.
     plan: RoundPlan,
 }
 
 impl LpCtx {
-    /// A context rounding into `fmt` with `mode` (a [`Scheme`] or a legacy
-    /// [`Rounding`], both convert), drawing from `rng`.
-    pub fn new(fmt: FpFormat, mode: impl Into<Scheme>, rng: Rng) -> Self {
-        Self { fmt, mode: mode.into(), rng, rounding_ops: 0, plan: RoundPlan::new(fmt) }
+    /// A context rounding into `grid` (an [`FpFormat`], a
+    /// [`crate::fp::FixedPoint`] or a [`Grid`]) with `mode` (a [`Scheme`]
+    /// or a legacy [`Rounding`], both convert), drawing from `rng`.
+    pub fn new(grid: impl Into<Grid>, mode: impl Into<Scheme>, rng: Rng) -> Self {
+        let grid = grid.into();
+        Self { grid, mode: mode.into(), rng, rounding_ops: 0, plan: RoundPlan::new(grid) }
     }
 
     /// The same context with `bits` random bits per stochastic slice
     /// rounding (see [`RoundPlan::with_sr_bits`]); scalar entry points are
     /// unaffected.
     pub fn with_sr_bits(mut self, bits: u32) -> Self {
-        self.plan = RoundPlan::new(self.fmt).with_sr_bits(bits);
+        self.plan = RoundPlan::new(self.grid).with_sr_bits(bits);
         self
     }
 
@@ -58,9 +63,9 @@ impl LpCtx {
         Self::new(FpFormat::BINARY64, Rounding::RoundNearestEven, Rng::new(0))
     }
 
-    /// Target format every operation result is rounded into.
-    pub fn fmt(&self) -> FpFormat {
-        self.fmt
+    /// Target grid every operation result is rounded into.
+    pub fn grid(&self) -> Grid {
+        self.grid
     }
 
     /// Rounding scheme applied to every operation result.

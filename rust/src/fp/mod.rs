@@ -1,11 +1,14 @@
-//! Low-precision floating-point substrate (systems S1–S4 of DESIGN.md):
-//! formats, rounding schemes (RN / directed / SR / SRε / signed-SRε plus
-//! any user scheme registered through the open [`scheme`] API),
-//! deterministic RNG streams with a bulk/few-random-bits API, rounded
-//! linear algebra, and the blocked rounding-aware kernels that drive the
-//! per-cell hot path (see `docs/performance.md` and `docs/api.md`).
+//! Low-precision number substrate (systems S1–S4 of DESIGN.md): number
+//! grids (floating-point *formats* and fixed-point Qm.n grids behind the
+//! [`grid`] abstraction), rounding schemes (RN / directed / SR / SRε /
+//! signed-SRε plus any user scheme registered through the open [`scheme`]
+//! API), deterministic RNG streams with a bulk/few-random-bits API,
+//! rounded linear algebra, and the blocked rounding-aware kernels that
+//! drive the per-cell hot path (see `docs/performance.md`,
+//! `docs/fixed-point.md` and `docs/api.md`).
 
 pub mod format;
+pub mod grid;
 pub mod kernels;
 pub mod linalg;
 pub mod rng;
@@ -13,6 +16,7 @@ pub mod round;
 pub mod scheme;
 
 pub use format::FpFormat;
+pub use grid::{FixedPoint, Grid, NumberGrid};
 pub use linalg::LpCtx;
 pub use rng::{BitBlock, Rng};
 pub use round::{

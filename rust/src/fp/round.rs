@@ -1,5 +1,8 @@
 //! Rounding schemes: the paper's Definitions 1–3 plus the IEEE deterministic
-//! modes, implemented over [`FpFormat`].
+//! modes, implemented over any [`Grid`] backend — the floating-point
+//! [`FpFormat`]s (bit-pattern kernels) and the fixed-point
+//! [`FixedPoint`] Qm.n grids (exact integer-quantization kernels; see
+//! `docs/fixed-point.md`).
 //!
 //! * `RoundNearestEven` — IEEE-754 default (RN, ties to even);
 //! * `RoundDown` / `RoundUp` / `RoundTowardZero` — directed modes;
@@ -41,6 +44,7 @@
 //! See `docs/performance.md` for the full determinism contract.
 
 use super::format::FpFormat;
+use super::grid::{FixedPoint, Grid, NumberGrid};
 use super::rng::{BitBlock, Rng};
 use super::scheme::{Scheme, SchemeError, SchemeRegistry};
 
@@ -134,7 +138,7 @@ fn saturate(fmt: &FpFormat, x: f64) -> f64 {
 /// test-suite and the paper's figures.
 pub const DEFAULT_SR_BITS: u32 = 32;
 
-/// Precomputed per-[`FpFormat`] rounding constants — the "format table".
+/// Precomputed per-[`Grid`] rounding constants — the "grid table".
 ///
 /// The scalar entry points recompute five integers (`shift`, `mask`, the
 /// tie point, the gap scale, the exponent gates) from the format on every
@@ -143,25 +147,46 @@ pub const DEFAULT_SR_BITS: u32 = 32;
 /// hoisting both the constant derivation and the mode dispatch out of the
 /// per-element loop (≈2× for the stochastic schemes; see `benches/rounding.rs`).
 ///
-/// Correctness notes for the fast path: with `shift = 53 − s`, the f64 bits
-/// of |x| split as `lo_mag = bits & !mask` (the magnitude-floor, exactly
-/// `⌊|x|⌋_F`) and `hi_mag = lo_mag + 2^shift` (magnitude-ceil; carries into
-/// the exponent field exactly when the mantissa overflows to the next
-/// binade, which is still a representable value). `tail/2^shift` is exactly
-/// `(|x| − ⌊|x|⌋)/(⌈|x|⌉ − ⌊|x|⌋)` because the gap is one target-ulp.
+/// A plan is built over either backend ([`RoundPlan::new`] takes any
+/// `impl Into<Grid>`): floating-point grids keep the historic bit-pattern
+/// fast path below — **bit-identical** to the pre-grid plans — while
+/// fixed-point grids take a fast *integer-quantization* path (scale by
+/// `2^{frac_bits}`, `floor`, exact residual) with no bit twiddling at all.
+///
+/// Correctness notes for the float fast path: with `shift = 53 − s`, the
+/// f64 bits of |x| split as `lo_mag = bits & !mask` (the magnitude-floor,
+/// exactly `⌊|x|⌋_F`) and `hi_mag = lo_mag + 2^shift` (magnitude-ceil;
+/// carries into the exponent field exactly when the mantissa overflows to
+/// the next binade, which is still a representable value). `tail/2^shift`
+/// is exactly `(|x| − ⌊|x|⌋)/(⌈|x|⌉ − ⌊|x|⌋)` because the gap is one
+/// target-ulp. For the fixed path, `m = x·2^f`, `⌊m⌋` and `m − ⌊m⌋` are
+/// all exact in binary64 because the word is ≤ 52 bits wide.
 #[derive(Debug, Clone, Copy)]
 pub struct RoundPlan {
-    /// The format this plan was precomputed for.
-    pub fmt: FpFormat,
-    /// `53 − s`: binary64 mantissa bits below the target ulp.
+    /// The number grid this plan was precomputed for.
+    pub grid: Grid,
+    /// Float: `53 − s`, binary64 mantissa bits below the target ulp.
     shift: u32,
-    /// `2^shift − 1`: mask selecting the discarded tail bits.
+    /// Float: `2^shift − 1`, mask selecting the discarded tail bits.
     mask: u64,
-    /// `2^{shift−1}`: the RN tie point (0 when `shift = 0`, i.e. binary64,
-    /// where the tail is always 0 and the tie point is never consulted).
+    /// Float: `2^{shift−1}`, the RN tie point (0 when `shift = 0`, i.e.
+    /// binary64, where the tail is always 0 and the tie point is never
+    /// consulted).
     half: u64,
-    /// `2^{−shift}` exactly: converts the tail to a fraction of the gap.
+    /// Float: `2^{−shift}` exactly, converts the tail to a gap fraction.
     inv_gap: f64,
+    /// Float: normalized-exponent eligibility gates of the fast path.
+    e_min: i32,
+    /// Float: see `e_min`.
+    e_max: i32,
+    /// Fixed: `2^{frac_bits}`, the exact integer-quantization scale.
+    scale: f64,
+    /// Fixed: the spacing `δ = 2^{−frac_bits}`.
+    delta: f64,
+    /// Fixed: lower saturation endpoint `k_min·δ`.
+    vmin: f64,
+    /// Fixed: upper saturation endpoint `k_max·δ`.
+    vmax: f64,
     /// Random bits per stochastic slice rounding (the few-random-bits knob).
     sr_bits: u32,
     /// `2^{−sr_bits}` exactly: converts a bit chunk to a uniform in `[0,1)`.
@@ -169,20 +194,45 @@ pub struct RoundPlan {
 }
 
 impl RoundPlan {
-    /// Precompute the rounding constants for `fmt` with the default
-    /// [`DEFAULT_SR_BITS`] few-random-bits setting.
+    /// Precompute the rounding constants for `grid` (an [`FpFormat`], a
+    /// [`FixedPoint`] or a [`Grid`]) with the default [`DEFAULT_SR_BITS`]
+    /// few-random-bits setting.
     #[inline]
-    pub fn new(fmt: FpFormat) -> Self {
-        let shift = 53 - fmt.sig_bits;
-        Self {
-            fmt,
-            shift,
-            mask: (1u64 << shift) - 1,
-            half: if shift == 0 { 0 } else { 1u64 << (shift - 1) },
-            inv_gap: inv_pow2(shift),
+    pub fn new(grid: impl Into<Grid>) -> Self {
+        let grid = grid.into();
+        let mut plan = Self {
+            grid,
+            shift: 0,
+            mask: 0,
+            half: 0,
+            inv_gap: 0.0,
+            e_min: 0,
+            e_max: 0,
+            scale: 0.0,
+            delta: 0.0,
+            vmin: 0.0,
+            vmax: 0.0,
             sr_bits: DEFAULT_SR_BITS,
             inv_sr: inv_pow2(DEFAULT_SR_BITS),
+        };
+        match grid {
+            Grid::Float(fmt) => {
+                let shift = 53 - fmt.sig_bits;
+                plan.shift = shift;
+                plan.mask = (1u64 << shift) - 1;
+                plan.half = if shift == 0 { 0 } else { 1u64 << (shift - 1) };
+                plan.inv_gap = inv_pow2(shift);
+                plan.e_min = fmt.e_min;
+                plan.e_max = fmt.e_max;
+            }
+            Grid::Fixed(fx) => {
+                plan.delta = fx.delta();
+                plan.scale = 1.0 / fx.delta();
+                plan.vmin = fx.min_value();
+                plan.vmax = fx.max_value();
+            }
         }
+        plan
     }
 
     /// The same plan with `bits` random bits per stochastic slice rounding
@@ -220,7 +270,7 @@ impl RoundPlan {
         // Eligibility: finite, f64-normal, target-normal, strictly inside the
         // target's largest binade (so the magnitude-ceil cannot overflow past
         // x_max: for e < e_max, ceil ≤ 2^{e+1} ≤ 2^{e_max} ≤ x_max).
-        if raw_e == 0 || raw_e == 0x7ff || e < self.fmt.e_min || e >= self.fmt.e_max {
+        if raw_e == 0 || raw_e == 0x7ff || e < self.e_min || e >= self.e_max {
             return None;
         }
         let tail = mag & self.mask;
@@ -266,18 +316,66 @@ impl RoundPlan {
         Some(f64::from_bits(if down { lo_bits } else { hi_bits }))
     }
 
+    /// Fixed-point counterpart of [`RoundPlan::fast`]: in-range values
+    /// round through exact integer quantization — scale by `2^f`, `floor`,
+    /// exact residual — with no neighbor search. Out-of-range, non-finite
+    /// and NaN inputs fall back to the saturating slow path. The RN tie
+    /// rule is ties-to-even on the stored integer `k` (the uniform-grid
+    /// analogue of the even-significand rule).
+    #[inline(always)]
+    fn fast_fixed(&self, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> Option<f64> {
+        // NaN and ±∞ fail the containment test and take the slow path.
+        if !(self.vmin..=self.vmax).contains(&x) {
+            return None;
+        }
+        let m = x * self.scale; // exact power-of-two scaling
+        let k = m.floor();
+        if k == m {
+            return Some(x); // on the grid
+        }
+        let frac = m - k; // exact: the fractional bits of an exact f64
+        let down = match mode {
+            Rounding::RoundDown => true,
+            Rounding::RoundUp => false,
+            Rounding::RoundTowardZero => x > 0.0,
+            Rounding::RoundNearestEven => {
+                if frac != 0.5 {
+                    frac < 0.5
+                } else {
+                    (k as i64) & 1 == 0
+                }
+            }
+            Rounding::Sr => rng.uniform() < 1.0 - frac,
+            Rounding::SrEps(eps) => rng.uniform() < phi(1.0 - frac - x.signum() * eps),
+            Rounding::SignedSrEps(eps) => {
+                let sv = if v == 0.0 { 0.0 } else { v.signum() };
+                rng.uniform() < phi(1.0 - frac + sv * eps)
+            }
+        };
+        Some(if down { k * self.delta } else { (k + 1.0) * self.delta })
+    }
+
     /// Round `x` using scheme `mode`, steering `SignedSrEps` by `v`. Same
-    /// contract as the free [`round_with`], without re-deriving the format
+    /// contract as the free [`round_with`], without re-deriving the grid
     /// constants per call.
     #[inline]
     pub fn round_with(&self, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> f64 {
         if x == 0.0 || x.is_nan() {
             return x;
         }
-        if let Some(y) = self.fast(mode, x, v, rng) {
-            return y;
+        match self.grid {
+            Grid::Float(_) => {
+                if let Some(y) = self.fast(mode, x, v, rng) {
+                    return y;
+                }
+            }
+            Grid::Fixed(_) => {
+                if let Some(y) = self.fast_fixed(mode, x, v, rng) {
+                    return y;
+                }
+            }
         }
-        round_slow(&self.fmt, mode, x, v, rng)
+        round_slow_grid(&self.grid, mode, x, v, rng)
     }
 
     /// Round `x` with `v = x` (see the [`Rounding`] type-level docs).
@@ -293,11 +391,12 @@ fn inv_pow2(k: u32) -> f64 {
     f64::from_bits(((1023 - k as u64) & 0x7ff) << 52)
 }
 
-/// Round `x` into `fmt` using scheme `mode`, steering `SignedSrEps` by `v`.
-/// One uniform is drawn from `rng` iff the scheme is stochastic and `x ∉ F`.
+/// Round `x` into `grid` (an [`FpFormat`], [`FixedPoint`] or [`Grid`])
+/// using scheme `mode`, steering `SignedSrEps` by `v`. One uniform is
+/// drawn from `rng` iff the scheme is stochastic and `x ∉ G`.
 #[inline]
-pub fn round_with(fmt: &FpFormat, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> f64 {
-    RoundPlan::new(*fmt).round_with(mode, x, v, rng)
+pub fn round_with(grid: impl Into<Grid>, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> f64 {
+    RoundPlan::new(grid).round_with(mode, x, v, rng)
 }
 
 /// General (slow) path shared by the scalar and slice kernels: exact
@@ -348,10 +447,90 @@ fn round_slow(fmt: &FpFormat, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> 
     }
 }
 
+/// Saturate to the fixed-point range `[k_min·δ, k_max·δ]`
+/// ([`NumberGrid::saturate`]). Unlike the float backend (whose
+/// deterministic RN overflows to `±∞` past the IEEE threshold), *every*
+/// scheme saturates on a fixed-point grid — hardware fixed-point
+/// accumulators clamp, they do not produce infinities. This is the
+/// saturation contract of `docs/fixed-point.md`.
+#[inline]
+fn saturate_fixed(fx: &FixedPoint, x: f64) -> f64 {
+    fx.saturate(x)
+}
+
+/// General (slow) path for fixed-point grids: exact neighbor arithmetic
+/// through [`FixedPoint::floor_ceil`] with the saturating overflow rule
+/// for every mode (deterministic and stochastic alike — see
+/// [`saturate_fixed`]). Requires `x != 0` and `x` not NaN (callers guard).
+fn round_slow_fixed(fx: &FixedPoint, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> f64 {
+    let (lo, hi) = fx.floor_ceil(x);
+    if lo == hi {
+        return lo; // x on the grid
+    }
+    let (lo, hi) = (saturate_fixed(fx, lo), saturate_fixed(fx, hi));
+    if lo == hi {
+        return lo; // out of range: both neighbors clamp to the endpoint
+    }
+    match mode {
+        Rounding::RoundDown => lo,
+        Rounding::RoundUp => hi,
+        Rounding::RoundTowardZero => {
+            if x > 0.0 {
+                lo
+            } else {
+                hi
+            }
+        }
+        Rounding::RoundNearestEven => {
+            let frac = (x - lo) / (hi - lo);
+            if frac != 0.5 {
+                if frac < 0.5 {
+                    lo
+                } else {
+                    hi
+                }
+            } else {
+                // Tie: keep the endpoint whose stored integer k is even.
+                if ((lo / fx.delta()) as i64) & 1 == 0 {
+                    lo
+                } else {
+                    hi
+                }
+            }
+        }
+        Rounding::Sr | Rounding::SrEps(_) | Rounding::SignedSrEps(_) => {
+            let frac = (x - lo) / (hi - lo);
+            let p_down = match mode {
+                Rounding::Sr => 1.0 - frac,
+                Rounding::SrEps(eps) => phi(1.0 - frac - x.signum() * eps),
+                Rounding::SignedSrEps(eps) => {
+                    let sv = if v == 0.0 { 0.0 } else { v.signum() };
+                    phi(1.0 - frac + sv * eps)
+                }
+                _ => unreachable!(),
+            };
+            if rng.uniform() < p_down {
+                lo
+            } else {
+                hi
+            }
+        }
+    }
+}
+
+/// Backend dispatch for the shared slow path (rare in hot loops: only
+/// out-of-range / non-finite elements land here).
+fn round_slow_grid(grid: &Grid, mode: Rounding, x: f64, v: f64, rng: &mut Rng) -> f64 {
+    match grid {
+        Grid::Float(fmt) => round_slow(fmt, mode, x, v, rng),
+        Grid::Fixed(fx) => round_slow_fixed(fx, mode, x, v, rng),
+    }
+}
+
 /// Round `x` with `v = x` (see type-level docs).
 #[inline]
-pub fn round(fmt: &FpFormat, mode: Rounding, x: f64, rng: &mut Rng) -> f64 {
-    round_with(fmt, mode, x, x, rng)
+pub fn round(grid: impl Into<Grid>, mode: Rounding, x: f64, rng: &mut Rng) -> f64 {
+    round_with(grid, mode, x, x, rng)
 }
 
 /// IEEE round-to-nearest, ties to even, with the standard overflow rule
@@ -386,18 +565,21 @@ fn round_nearest_even(fmt: &FpFormat, x: f64, lo: f64, hi: f64) -> f64 {
 
 /// Expected rounded value `E[fl(x)]` under a scheme — closed form, no
 /// sampling (used for Figure 1 and for property tests against the empirical
-/// mean). For deterministic schemes this is just the rounded value.
-pub fn expected_round(fmt: &FpFormat, mode: Rounding, x: f64, v: f64) -> f64 {
+/// mean). For deterministic schemes this is just the rounded value. Works
+/// on either backend: the stochastic laws read only the grid's neighbor
+/// pair and saturation endpoints.
+pub fn expected_round(grid: impl Into<Grid>, mode: Rounding, x: f64, v: f64) -> f64 {
+    let grid = grid.into();
     if x == 0.0 || x.is_nan() {
         return x;
     }
-    let (lo, hi) = fmt.floor_ceil(x);
+    let (lo, hi) = grid.floor_ceil(x);
     if lo == hi {
         return lo;
     }
     match mode {
         Rounding::Sr | Rounding::SrEps(_) | Rounding::SignedSrEps(_) => {
-            let (lo, hi) = (saturate(fmt, lo), saturate(fmt, hi));
+            let (lo, hi) = (grid.saturate(lo), grid.saturate(hi));
             if lo == hi {
                 return lo;
             }
@@ -415,7 +597,7 @@ pub fn expected_round(fmt: &FpFormat, mode: Rounding, x: f64, v: f64) -> f64 {
         }
         _ => {
             let mut rng = Rng::new(0); // unused by deterministic modes
-            round_with(fmt, mode, x, v, &mut rng)
+            round_with(grid, mode, x, v, &mut rng)
         }
     }
 }
@@ -491,10 +673,15 @@ impl RoundPlan {
     }
 
     /// Fused deterministic slice kernel (no randomness): bit-identical to
-    /// the scalar path element-by-element.
+    /// the scalar path element-by-element. Fixed-point grids divert to the
+    /// integer-quantization kernel (same elementwise law as the scalar
+    /// path, hence also bit-identical).
     fn round_slice_det(&self, mode: Rounding, xs: &mut [f64], rng: &mut Rng) {
+        if let Grid::Fixed(_) = self.grid {
+            return self.round_slice_det_fixed(mode, xs, rng);
+        }
         let (mask, shift, half) = (self.mask, self.shift, self.half);
-        let (e_min, e_max) = (self.fmt.e_min, self.fmt.e_max);
+        let (e_min, e_max) = (self.e_min, self.e_max);
         // Value-scale floor decision per sign for the directed modes (RN
         // overrides per element below).
         let (down_pos, down_neg) = match mode {
@@ -510,7 +697,7 @@ impl RoundPlan {
             let e = raw_e - 1023;
             if raw_e == 0 || raw_e == 0x7ff || e < e_min || e >= e_max {
                 if *x != 0.0 && !x.is_nan() {
-                    *x = round_slow(&self.fmt, mode, *x, *x, rng); // rare slow path
+                    *x = round_slow_grid(&self.grid, mode, *x, *x, rng); // rare slow path
                 }
                 continue;
             }
@@ -553,8 +740,11 @@ impl RoundPlan {
         rng: &mut Rng,
     ) {
         debug_assert!(mode.is_stochastic());
+        if let Grid::Fixed(_) = self.grid {
+            return self.round_slice_stoch_fixed(mode, xs, vs, p_down, rng);
+        }
         let (mask, inv) = (self.mask, self.inv_gap);
-        let (e_min, e_max) = (self.fmt.e_min, self.fmt.e_max);
+        let (e_min, e_max) = (self.e_min, self.e_max);
         let (k, inv_sr) = (self.sr_bits, self.inv_sr);
         let plain_sr = matches!(mode, Rounding::Sr);
         let mut bsrc = BitBlock::for_elems(xs.len(), k);
@@ -566,7 +756,7 @@ impl RoundPlan {
             if raw_e == 0 || raw_e == 0x7ff || e < e_min || e >= e_max {
                 if *x != 0.0 && !x.is_nan() {
                     let v = vs.map_or(*x, |vs| vs[i]);
-                    *x = round_slow(&self.fmt, mode, *x, v, rng); // rare slow path
+                    *x = round_slow_grid(&self.grid, mode, *x, v, rng); // rare slow path
                 }
                 continue;
             }
@@ -589,19 +779,106 @@ impl RoundPlan {
             *x = f64::from_bits(out_mag | (bits & (1u64 << 63)));
         }
     }
+
+    /// Fused deterministic slice kernel for fixed-point grids: the exact
+    /// integer-quantization path per element (scale, `floor`, pick a side),
+    /// bit-identical to the scalar [`RoundPlan::fast_fixed`] law. No
+    /// randomness anywhere.
+    fn round_slice_det_fixed(&self, mode: Rounding, xs: &mut [f64], rng: &mut Rng) {
+        let (scale, delta, vmin, vmax) = (self.scale, self.delta, self.vmin, self.vmax);
+        let (down_pos, down_neg) = match mode {
+            Rounding::RoundDown => (true, true),
+            Rounding::RoundUp => (false, false),
+            _ => (true, false), // RZ: toward zero
+        };
+        let rn = mode == Rounding::RoundNearestEven;
+        for x in xs.iter_mut() {
+            if !(vmin..=vmax).contains(x) {
+                if *x != 0.0 && !x.is_nan() {
+                    *x = round_slow_grid(&self.grid, mode, *x, *x, rng); // rare slow path
+                }
+                continue;
+            }
+            let m = *x * scale;
+            let k = m.floor();
+            if k == m {
+                continue; // on the grid
+            }
+            let frac = m - k;
+            let down = if rn {
+                if frac != 0.5 {
+                    frac < 0.5
+                } else {
+                    (k as i64) & 1 == 0
+                }
+            } else if *x < 0.0 {
+                down_neg
+            } else {
+                down_pos
+            };
+            *x = if down { k * delta } else { (k + 1.0) * delta };
+        }
+    }
+
+    /// Fused stochastic slice kernel for fixed-point grids, over the same
+    /// block-buffered few-random-bits source — and thus the same
+    /// [`RoundPlan::sr_bits`] randomness contract — as the float kernel.
+    /// `p_down(frac, neg, v)` receives the exact value-scale residual
+    /// directly (uniform grids have no magnitude/value asymmetry to undo).
+    fn round_slice_stoch_fixed<F: Fn(f64, bool, f64) -> f64>(
+        &self,
+        mode: Rounding,
+        xs: &mut [f64],
+        vs: Option<&[f64]>,
+        p_down: F,
+        rng: &mut Rng,
+    ) {
+        let (scale, delta, vmin, vmax) = (self.scale, self.delta, self.vmin, self.vmax);
+        let (kbits, inv_sr) = (self.sr_bits, self.inv_sr);
+        let plain_sr = matches!(mode, Rounding::Sr);
+        let mut bsrc = BitBlock::for_elems(xs.len(), kbits);
+        for (i, x) in xs.iter_mut().enumerate() {
+            if !(vmin..=vmax).contains(x) {
+                if *x != 0.0 && !x.is_nan() {
+                    let v = vs.map_or(*x, |vs| vs[i]);
+                    *x = round_slow_grid(&self.grid, mode, *x, v, rng); // rare slow path
+                }
+                continue;
+            }
+            let m = *x * scale;
+            let k = m.floor();
+            if k == m {
+                continue; // on the grid
+            }
+            let frac = m - k;
+            let p = if plain_sr {
+                1.0 - frac
+            } else {
+                p_down(frac, *x < 0.0, vs.map_or(*x, |vs| vs[i]))
+            };
+            let r = bsrc.take(kbits, rng) as f64 * inv_sr;
+            *x = if r < p { k * delta } else { (k + 1.0) * delta };
+        }
+    }
 }
 
 /// Round every entry of a slice in place (plain `v = x` steering) — free
 /// wrapper building a [`RoundPlan`] per call; prefer the plan method when
-/// rounding repeatedly into the same format.
-pub fn round_slice(fmt: &FpFormat, mode: Rounding, xs: &mut [f64], rng: &mut Rng) {
-    RoundPlan::new(*fmt).round_slice(mode, xs, rng);
+/// rounding repeatedly into the same grid.
+pub fn round_slice(grid: impl Into<Grid>, mode: Rounding, xs: &mut [f64], rng: &mut Rng) {
+    RoundPlan::new(grid).round_slice(mode, xs, rng);
 }
 
 /// Round every entry, steering `SignedSrEps` per element by `vs` — free
 /// wrapper over [`RoundPlan::round_slice_with`].
-pub fn round_slice_with(fmt: &FpFormat, mode: Rounding, xs: &mut [f64], vs: &[f64], rng: &mut Rng) {
-    RoundPlan::new(*fmt).round_slice_with(mode, xs, vs, rng);
+pub fn round_slice_with(
+    grid: impl Into<Grid>,
+    mode: Rounding,
+    xs: &mut [f64],
+    vs: &[f64],
+    rng: &mut Rng,
+) {
+    RoundPlan::new(grid).round_slice_with(mode, xs, vs, rng);
 }
 
 // ------------------------------------------------- open-scheme dispatch --
@@ -1090,6 +1367,187 @@ mod tests {
                 }
                 assert_eq!(ra.next_u64(), rb.next_u64(), "{mode:?} slice stream");
             }
+        }
+    }
+
+    // ------------------------------------------------ fixed-point backend --
+
+    const Q3_8: FixedPoint = FixedPoint::q(3, 8); // δ=2^-8, range [-8, 8)
+
+    fn fixed_test_inputs(fx: &FixedPoint, n: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut gen = Rng::new(31);
+        let mut xs: Vec<f64> = (0..n).map(|_| gen.normal() * 2.0).collect();
+        xs.extend([
+            0.0,
+            1.0,
+            fx.delta(),
+            -3.0 * fx.delta(),
+            fx.max_value(),
+            fx.min_value(),
+            fx.max_value() + 0.3 * fx.delta(),
+            fx.max_value() * 4.0,
+            fx.min_value() - 2.0,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+        ]);
+        let vs: Vec<f64> = (0..xs.len()).map(|_| gen.normal()).collect();
+        (xs, vs)
+    }
+
+    /// Fixed-point scalar rounding: representable fixed points, neighbor
+    /// residency, deterministic directed modes, RN ties-to-even-k, and the
+    /// saturation contract (no ±∞ under any mode).
+    #[test]
+    fn fixed_scalar_modes_and_saturation() {
+        let plan = RoundPlan::new(Q3_8);
+        let mut rng = Rng::new(0);
+        let d = Q3_8.delta();
+        let x = 1.0 + 0.3 * d; // strictly inside a gap
+        assert_eq!(plan.round_with(Rounding::RoundDown, x, x, &mut rng), 1.0);
+        assert_eq!(plan.round_with(Rounding::RoundUp, x, x, &mut rng), 1.0 + d);
+        assert_eq!(plan.round_with(Rounding::RoundTowardZero, x, x, &mut rng), 1.0);
+        assert_eq!(plan.round_with(Rounding::RoundTowardZero, -x, -x, &mut rng), -1.0);
+        assert_eq!(plan.round_with(Rounding::RoundNearestEven, x, x, &mut rng), 1.0);
+        // Ties to even stored integer: 1.0 = 256δ (even) vs 1.0+δ (odd).
+        assert_eq!(plan.round_with(Rounding::RoundNearestEven, 1.0 + 0.5 * d, 0.0, &mut rng), 1.0);
+        // (1.0+δ, 1.0+2δ) midpoint → 1.0+2δ (even k=258).
+        assert_eq!(
+            plan.round_with(Rounding::RoundNearestEven, 1.0 + 1.5 * d, 0.0, &mut rng),
+            1.0 + 2.0 * d
+        );
+        // Saturation: every mode clamps out-of-range values, never ±∞.
+        for mode in [
+            Rounding::RoundNearestEven,
+            Rounding::RoundDown,
+            Rounding::RoundUp,
+            Rounding::RoundTowardZero,
+            Rounding::Sr,
+            Rounding::SrEps(0.3),
+            Rounding::SignedSrEps(0.3),
+        ] {
+            for &(x, want) in &[
+                (100.0, Q3_8.max_value()),
+                (f64::INFINITY, Q3_8.max_value()),
+                (-100.0, Q3_8.min_value()),
+                (f64::NEG_INFINITY, Q3_8.min_value()),
+            ] {
+                assert_eq!(plan.round_with(mode, x, x, &mut rng), want, "{mode:?} x={x}");
+            }
+            // Representable values are fixed points.
+            for &x in &[0.0, 1.0, -1.0, Q3_8.max_value(), Q3_8.min_value(), 3.0 * d] {
+                assert_eq!(plan.round_with(mode, x, x, &mut rng), x, "{mode:?} x={x}");
+            }
+        }
+        assert!(plan.round_with(Rounding::Sr, f64::NAN, 0.0, &mut rng).is_nan());
+    }
+
+    /// Fixed-point slice kernels: deterministic modes bit-identical to the
+    /// scalar path consuming zero randomness; stochastic modes resident,
+    /// reproducible and seed-sensitive — the same contract as the float
+    /// kernels.
+    #[test]
+    fn fixed_slice_kernels_match_contract() {
+        let plan = RoundPlan::new(Q3_8);
+        let (xs, vs) = fixed_test_inputs(&Q3_8, 300);
+        for mode in [
+            Rounding::RoundNearestEven,
+            Rounding::RoundDown,
+            Rounding::RoundUp,
+            Rounding::RoundTowardZero,
+        ] {
+            let mut rng = Rng::new(9);
+            let mut buf = xs.clone();
+            plan.round_slice_with(mode, &mut buf, &vs, &mut rng);
+            let mut rd = Rng::new(9);
+            for (i, &x) in xs.iter().enumerate() {
+                let want = plan.round_with(mode, x, vs[i], &mut rd);
+                assert!(
+                    want == buf[i] || (want.is_nan() && buf[i].is_nan()),
+                    "fixed slice {mode:?} i={i} x={x}: {want} vs {}",
+                    buf[i]
+                );
+            }
+            assert_eq!(rng.next_u64(), rd.next_u64(), "det mode consumed randomness");
+        }
+        for mode in [Rounding::Sr, Rounding::SrEps(0.3), Rounding::SignedSrEps(0.3)] {
+            let mut a = xs.clone();
+            plan.round_slice_with(mode, &mut a, &vs, &mut Rng::new(3));
+            let mut b = xs.clone();
+            plan.round_slice_with(mode, &mut b, &vs, &mut Rng::new(3));
+            let mut c = xs.clone();
+            plan.round_slice_with(mode, &mut c, &vs, &mut Rng::new(4));
+            let mut any_diff = false;
+            for i in 0..xs.len() {
+                assert!(
+                    a[i] == b[i] || (a[i].is_nan() && b[i].is_nan()),
+                    "{mode:?} not reproducible"
+                );
+                any_diff |= a[i] != c[i];
+                if xs[i].is_nan() {
+                    assert!(a[i].is_nan());
+                    continue;
+                }
+                let (lo, hi) = Q3_8.floor_ceil(xs[i]);
+                let sat =
+                    |y: f64| y.clamp(NumberGrid::min_value(&Q3_8), NumberGrid::max_value(&Q3_8));
+                assert!(
+                    a[i] == lo || a[i] == hi || a[i] == sat(lo) || a[i] == sat(hi),
+                    "{mode:?}: {} not a (saturated) neighbor of {}",
+                    a[i],
+                    xs[i]
+                );
+                assert!(a[i].is_finite(), "{mode:?} produced non-finite {}", a[i]);
+            }
+            assert!(any_diff, "{mode:?}: seeds 3 and 4 gave identical streams");
+        }
+    }
+
+    /// SR on a fixed-point grid is unbiased and SRε keeps the eq. (3) bias
+    /// shape — the laws transfer verbatim to the uniform grid.
+    #[test]
+    fn fixed_sr_laws_hold() {
+        let plan = RoundPlan::new(Q3_8);
+        let d = Q3_8.delta();
+        let mut rng = Rng::new(42);
+        for &x in &[1.0 + 0.3 * d, -2.0 - 0.7 * d, 0.41 * d] {
+            let n = 40_000usize;
+            let mut buf = vec![x; n];
+            plan.round_slice(Rounding::Sr, &mut buf, &mut rng);
+            let mean = buf.iter().sum::<f64>() / n as f64;
+            let tol = 4.0 * d / (n as f64).sqrt() + d * inv_pow2(plan.sr_bits());
+            assert!((mean - x).abs() < tol, "x={x} mean={mean} tol={tol}");
+        }
+        // Closed-form expectation matches the empirical mean for SRε.
+        let eps = 0.25;
+        let x = 1.0 + 0.4 * d;
+        let n = 60_000usize;
+        let mut buf = vec![x; n];
+        plan.round_slice(Rounding::SrEps(eps), &mut buf, &mut rng);
+        let mean = buf.iter().sum::<f64>() / n as f64;
+        let want = expected_round(Q3_8, Rounding::SrEps(eps), x, x);
+        assert!((want - x - eps * d).abs() < 1e-12, "closed form bias must be eps*delta");
+        let tol = 4.0 * d / (n as f64).sqrt();
+        assert!((mean - want).abs() < tol, "mean={mean} want={want}");
+    }
+
+    /// The `Scheme`-handle dispatch runs the fused fixed kernels for
+    /// built-ins: bit-identical to the enum path on a fixed grid too.
+    #[test]
+    fn fixed_scheme_dispatch_matches_enum() {
+        let plan = RoundPlan::new(Q3_8);
+        let (xs, vs) = fixed_test_inputs(&Q3_8, 200);
+        for mode in [Rounding::RoundNearestEven, Rounding::Sr, Rounding::SignedSrEps(0.25)] {
+            let scheme = mode.scheme();
+            let (mut ra, mut rb) = (Rng::new(14), Rng::new(14));
+            let mut a = xs.clone();
+            let mut b = xs.clone();
+            plan.round_slice_with(mode, &mut a, &vs, &mut ra);
+            plan.round_slice_scheme_with(scheme, &mut b, &vs, &mut rb);
+            for (x, y) in a.iter().zip(&b) {
+                assert!(x == y || (x.is_nan() && y.is_nan()), "{mode:?} fixed slice");
+            }
+            assert_eq!(ra.next_u64(), rb.next_u64(), "{mode:?} fixed stream");
         }
     }
 }

@@ -32,7 +32,7 @@ use std::collections::HashMap;
 use std::fmt;
 use std::sync::{Mutex, OnceLock, RwLock};
 
-use super::format::FpFormat;
+use super::grid::Grid;
 use super::rng::Rng;
 use super::round::{self, RoundPlan, Rounding};
 
@@ -42,9 +42,9 @@ use super::round::{self, RoundPlan, Rounding};
 /// # Contract
 ///
 /// * [`RoundingScheme::round`] must return a value representable in
-///   `plan.fmt` (or NaN for NaN input); the conformance suite
+///   `plan.grid` (or NaN for NaN input); the conformance suite
 ///   (`rust/tests/scheme_conformance.rs`) checks outputs are (saturated)
-///   neighbors of the input.
+///   neighbors of the input — on floating-point *and* fixed-point grids.
 /// * [`RoundingScheme::expected_round`] must be the exact closed-form mean
 ///   of `round` (it is checked against the empirical mean).
 /// * Deterministic schemes (`is_stochastic() == false`) must not consume
@@ -88,13 +88,15 @@ pub trait RoundingScheme: Sync + Send {
         }
     }
 
-    /// The scalar rounding law: round `x` into `plan.fmt`, steering by
-    /// `v` where applicable, drawing randomness from `rng`.
+    /// The scalar rounding law: round `x` into `plan.grid`, steering by
+    /// `v` where applicable, drawing randomness from `rng`. A law written
+    /// against the [`crate::fp::grid::NumberGrid`] surface (neighbors,
+    /// residual, saturation bounds) runs unchanged on both backends.
     fn round(&self, plan: &RoundPlan, x: f64, v: f64, rng: &mut Rng) -> f64;
 
-    /// Closed-form expectation `E[fl(x)]` under this scheme — the bias
-    /// oracle used by Figure 1 and the conformance suite.
-    fn expected_round(&self, fmt: &FpFormat, x: f64, v: f64) -> f64;
+    /// Closed-form expectation `E[fl(x)]` under this scheme on `grid` —
+    /// the bias oracle used by Figure 1 and the conformance suite.
+    fn expected_round(&self, grid: &Grid, x: f64, v: f64) -> f64;
 
     /// The built-in [`Rounding`] mode this scheme is, if any. Built-in
     /// schemes return `Some`, which routes every slice entry point to the
@@ -226,12 +228,14 @@ impl Scheme {
         plan.round_scheme_with(*self, x, x, rng)
     }
 
-    /// Closed-form expectation `E[fl(x)]` (see
-    /// [`RoundingScheme::expected_round`]).
-    pub fn expected_round(&self, fmt: &FpFormat, x: f64, v: f64) -> f64 {
+    /// Closed-form expectation `E[fl(x)]` on `grid` (an [`crate::fp::FpFormat`],
+    /// [`crate::fp::FixedPoint`] or [`Grid`]) — see
+    /// [`RoundingScheme::expected_round`].
+    pub fn expected_round(&self, grid: impl Into<Grid>, x: f64, v: f64) -> f64 {
+        let grid = grid.into();
         match self.builtin {
-            Some(m) => round::expected_round(fmt, m, x, v),
-            None => self.imp.expected_round(fmt, x, v),
+            Some(m) => round::expected_round(grid, m, x, v),
+            None => self.imp.expected_round(&grid, x, v),
         }
     }
 }
@@ -293,8 +297,8 @@ macro_rules! builtin_scheme {
             fn round(&self, plan: &RoundPlan, x: f64, v: f64, rng: &mut Rng) -> f64 {
                 plan.round_with($mode, x, v, rng)
             }
-            fn expected_round(&self, fmt: &FpFormat, x: f64, v: f64) -> f64 {
-                round::expected_round(fmt, $mode, x, v)
+            fn expected_round(&self, grid: &Grid, x: f64, v: f64) -> f64 {
+                round::expected_round(grid, $mode, x, v)
             }
             fn as_builtin(&self) -> Option<Rounding> {
                 Some($mode)
@@ -358,8 +362,8 @@ impl RoundingScheme for SrEpsScheme {
     fn round(&self, plan: &RoundPlan, x: f64, v: f64, rng: &mut Rng) -> f64 {
         plan.round_with(Rounding::SrEps(self.0), x, v, rng)
     }
-    fn expected_round(&self, fmt: &FpFormat, x: f64, v: f64) -> f64 {
-        round::expected_round(fmt, Rounding::SrEps(self.0), x, v)
+    fn expected_round(&self, grid: &Grid, x: f64, v: f64) -> f64 {
+        round::expected_round(grid, Rounding::SrEps(self.0), x, v)
     }
     fn as_builtin(&self) -> Option<Rounding> {
         Some(Rounding::SrEps(self.0))
@@ -389,8 +393,8 @@ impl RoundingScheme for SignedSrEpsScheme {
     fn round(&self, plan: &RoundPlan, x: f64, v: f64, rng: &mut Rng) -> f64 {
         plan.round_with(Rounding::SignedSrEps(self.0), x, v, rng)
     }
-    fn expected_round(&self, fmt: &FpFormat, x: f64, v: f64) -> f64 {
-        round::expected_round(fmt, Rounding::SignedSrEps(self.0), x, v)
+    fn expected_round(&self, grid: &Grid, x: f64, v: f64) -> f64 {
+        round::expected_round(grid, Rounding::SignedSrEps(self.0), x, v)
     }
     fn as_builtin(&self) -> Option<Rounding> {
         Some(Rounding::SignedSrEps(self.0))
@@ -440,7 +444,7 @@ pub enum SchemeError {
     /// The spec resolved to a registered scheme that is not expressible as
     /// the legacy [`Rounding`] enum (raised only by `Rounding::parse`).
     NotBuiltin(String),
-    /// An unknown floating-point format name (raised by the run builder).
+    /// An unknown number-format / grid spec (raised by the run builder).
     UnknownFormat(String),
 }
 
@@ -458,7 +462,7 @@ impl fmt::Display for SchemeError {
                 write!(f, "scheme '{name}' is registered but is not a built-in `Rounding` mode; use `SchemeRegistry::lookup` / the run builder instead of `Rounding::parse`")
             }
             SchemeError::UnknownFormat(name) => {
-                write!(f, "unknown floating-point format '{name}' (known: binary8, bfloat16, binary16, binary32, binary64)")
+                write!(f, "unknown number format '{name}' (known: binary8, bfloat16, binary16, binary32, binary64, or a fixed-point spec like 'q3.8' / 'uq4.8' / 'fixed:Q3.8')")
             }
         }
     }
@@ -647,6 +651,7 @@ impl SchemeRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fp::format::FpFormat;
 
     #[test]
     fn lookup_builtins_and_aliases() {
@@ -741,7 +746,7 @@ mod tests {
             fn round(&self, _: &RoundPlan, x: f64, _: f64, _: &mut Rng) -> f64 {
                 x
             }
-            fn expected_round(&self, _: &FpFormat, x: f64, _: f64) -> f64 {
+            fn expected_round(&self, _: &Grid, x: f64, _: f64) -> f64 {
                 x
             }
         }
@@ -766,8 +771,8 @@ mod tests {
             fn round(&self, plan: &RoundPlan, x: f64, v: f64, rng: &mut Rng) -> f64 {
                 plan.round_with(Rounding::RoundDown, x, v, rng)
             }
-            fn expected_round(&self, fmt: &FpFormat, x: f64, v: f64) -> f64 {
-                round::expected_round(fmt, Rounding::RoundDown, x, v)
+            fn expected_round(&self, grid: &Grid, x: f64, v: f64) -> f64 {
+                round::expected_round(grid, Rounding::RoundDown, x, v)
             }
         }
         static DOWN: AlwaysDown = AlwaysDown;

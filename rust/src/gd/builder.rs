@@ -30,6 +30,7 @@
 //! migration table from the old API.
 
 use crate::fp::format::FpFormat;
+use crate::fp::grid::Grid;
 use crate::fp::rng::Rng;
 use crate::fp::round::DEFAULT_SR_BITS;
 use crate::fp::scheme::{Scheme, SchemeError, SchemeRegistry};
@@ -44,7 +45,7 @@ use crate::problems::Problem;
 /// `sr_bits`, `x0 = 0`.
 pub struct RunBuilder<'p> {
     problem: &'p dyn Problem,
-    fmt: FpFormat,
+    grid: Grid,
     policy: SchemePolicy,
     grad_model: GradModel,
     t: f64,
@@ -62,7 +63,7 @@ impl<'p> RunBuilder<'p> {
     pub fn new(problem: &'p dyn Problem) -> Self {
         Self {
             problem,
-            fmt: FpFormat::BINARY8,
+            grid: Grid::Float(FpFormat::BINARY8),
             policy: SchemePolicy::uniform(Scheme::sr()),
             grad_model: GradModel::RoundAfterOp,
             t: 0.5,
@@ -76,20 +77,29 @@ impl<'p> RunBuilder<'p> {
         }
     }
 
-    /// Working floating-point format.
-    pub fn format(mut self, fmt: FpFormat) -> Self {
-        self.fmt = fmt;
+    /// Working number grid: a floating-point [`FpFormat`], a fixed-point
+    /// [`crate::fp::FixedPoint`], or a [`Grid`].
+    pub fn format(mut self, grid: impl Into<Grid>) -> Self {
+        self.grid = grid.into();
         self
     }
 
-    /// Working format by name (`"binary8"`, `"bfloat16"`, …); unknown
-    /// names surface as an error from [`RunBuilder::build`].
+    /// Working grid by spec string — a float format name (`"binary8"`,
+    /// `"bfloat16"`, …) or a fixed-point spec (`"q3.8"`, `"uq4.8"`,
+    /// `"fixed:Q3.8"`); unknown specs surface as an error from
+    /// [`RunBuilder::build`].
     pub fn format_name(mut self, name: &str) -> Self {
-        match FpFormat::by_name(name) {
-            Some(f) => self.fmt = f,
+        match Grid::parse(name) {
+            Some(g) => self.grid = g,
             None => self.stash(SchemeError::UnknownFormat(name.to_string())),
         }
         self
+    }
+
+    /// Alias of [`RunBuilder::format_name`] in CLI vocabulary: the
+    /// `--backend` spec (`"binary8"` / `"fixed:Q3.8"` / …).
+    pub fn backend(self, spec: &str) -> Self {
+        self.format_name(spec)
     }
 
     /// One scheme spec for all three rounding sites (8a)/(8b)/(8c).
@@ -198,7 +208,7 @@ impl<'p> RunBuilder<'p> {
         if let Some(e) = self.err {
             return Err(e);
         }
-        let mut cfg = GdConfig::new(self.fmt, self.policy, self.t, self.steps);
+        let mut cfg = GdConfig::new(self.grid, self.policy, self.t, self.steps);
         cfg.grad_model = self.grad_model;
         cfg.seed = self.seed;
         cfg.rng = self.rng;
@@ -295,6 +305,44 @@ mod tests {
         // First error wins over later valid setters.
         let err = RunBuilder::new(&p).scheme("bogus").scheme("sr").build().unwrap_err();
         assert!(err.to_string().contains("bogus"), "{err}");
+    }
+
+    /// `--backend fixed:Qm.n` plumbing: the builder parses fixed-point
+    /// specs, the session runs on the uniform grid, and the two spec
+    /// spellings produce bit-identical trajectories.
+    #[test]
+    fn builder_accepts_fixed_backend_specs() {
+        use crate::fp::grid::{FixedPoint, NumberGrid};
+        let p = Quadratic::diagonal(vec![2.0], vec![1.0]);
+        let run = |spec: &str| {
+            let mut s = RunBuilder::new(&p)
+                .backend(spec)
+                .scheme("sr")
+                .stepsize(0.05)
+                .steps(40)
+                .seed(3)
+                .start(&[4.0])
+                .build()
+                .unwrap();
+            (s.run(None).objective_series(), s.x().to_vec())
+        };
+        let (fa, xa) = run("fixed:Q3.8");
+        let (fb, xb) = run("q3.8");
+        assert_eq!(fa, fb);
+        assert_eq!(xa, xb);
+        let fx = FixedPoint::q(3, 8);
+        assert!(xa.iter().all(|&v| NumberGrid::contains(&fx, v)));
+        // And the typed entry point agrees with the spec path.
+        let mut s = RunBuilder::new(&p)
+            .format(fx)
+            .scheme("sr")
+            .stepsize(0.05)
+            .steps(40)
+            .seed(3)
+            .start(&[4.0])
+            .build()
+            .unwrap();
+        assert_eq!(s.run(None).objective_series(), fa);
     }
 
     #[test]

@@ -19,7 +19,7 @@
 //!   direction, exactly as §4.2.2 prescribes ("replacing v with the
 //!   components of the gradient vector").
 
-use crate::fp::format::FpFormat;
+use crate::fp::grid::Grid;
 use crate::fp::linalg::{exact, LpCtx};
 use crate::fp::rng::Rng;
 use crate::fp::round::{Rounding, DEFAULT_SR_BITS};
@@ -128,8 +128,10 @@ pub enum GradModel {
 /// Configuration of one GD run.
 #[derive(Debug, Clone)]
 pub struct GdConfig {
-    /// Working floating-point format for the iterate and every rounding.
-    pub fmt: FpFormat,
+    /// Working number grid for the iterate and every rounding — a
+    /// floating-point format or a fixed-point Qm.n grid (both convert
+    /// into [`Grid`]); the engine is backend-agnostic.
+    pub grid: Grid,
     /// Rounding scheme per GD step (8a)/(8b)/(8c) — any registered
     /// [`Scheme`] per step.
     pub schemes: SchemePolicy,
@@ -163,12 +165,18 @@ pub struct GdConfig {
 
 impl GdConfig {
     /// A config with the default σ₁ model (`RoundAfterOp`), seed 0, derived
-    /// RNG root, default `sr_bits` and no τ_k recording. `schemes` is a
+    /// RNG root, default `sr_bits` and no τ_k recording. `grid` is any
+    /// backend (`FpFormat`, `FixedPoint` or `Grid`); `schemes` is a
     /// [`SchemePolicy`] or anything converting into one ([`StepSchemes`],
     /// a single [`Scheme`], a legacy [`Rounding`]).
-    pub fn new(fmt: FpFormat, schemes: impl Into<SchemePolicy>, t: f64, steps: usize) -> Self {
+    pub fn new(
+        grid: impl Into<Grid>,
+        schemes: impl Into<SchemePolicy>,
+        t: f64,
+        steps: usize,
+    ) -> Self {
         Self {
-            fmt,
+            grid: grid.into(),
             schemes: schemes.into(),
             grad_model: GradModel::RoundAfterOp,
             t,
@@ -187,7 +195,7 @@ pub struct GdEngine<'p, P: Problem + ?Sized> {
     pub cfg: GdConfig,
     /// The objective being minimized.
     pub problem: &'p P,
-    /// Current iterate x̂ (always exactly representable in `cfg.fmt`).
+    /// Current iterate x̂ (always exactly representable on `cfg.grid`).
     pub x: Vec<f64>,
     ctx_grad: LpCtx,
     rng_mul: Rng,
@@ -212,15 +220,15 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
     pub fn new(cfg: GdConfig, problem: &'p P, x0: &[f64]) -> Self {
         assert_eq!(x0.len(), problem.dim());
         let root = cfg.rng.clone().unwrap_or_else(|| Rng::new(cfg.seed));
-        let mut ctx_grad = LpCtx::new(cfg.fmt, cfg.schemes.grad, root.fork("sigma1", 0))
+        let mut ctx_grad = LpCtx::new(cfg.grid, cfg.schemes.grad, root.fork("sigma1", 0))
             .with_sr_bits(cfg.sr_bits);
         if cfg.grad_model == GradModel::Exact {
             ctx_grad = LpCtx::exact();
         }
-        // The starting point is stored in the working format.
+        // The starting point is stored on the working grid.
         let mut x = x0.to_vec();
         let mut rng0 = root.fork("x0", 0);
-        crate::fp::round::RoundPlan::new(cfg.fmt)
+        crate::fp::round::RoundPlan::new(cfg.grid)
             .round_slice(Rounding::RoundNearestEven, &mut x, &mut rng0);
         let n = x.len();
         Self {
@@ -263,11 +271,11 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
     /// per-element path (see `docs/performance.md`).
     pub fn step(&mut self) -> bool {
         self.eval_gradient();
-        // One plan derivation per step (not per element); reading `cfg.fmt`
+        // One plan derivation per step (not per element); reading `cfg.grid`
         // here keeps the pre-refactor semantics where a caller may adjust
         // the config between steps.
         let plan =
-            crate::fp::round::RoundPlan::new(self.cfg.fmt).with_sr_bits(self.cfg.sr_bits);
+            crate::fp::round::RoundPlan::new(self.cfg.grid).with_sr_bits(self.cfg.sr_bits);
         crate::fp::kernels::gd_update(
             &plan,
             self.cfg.schemes.mul,
@@ -306,7 +314,7 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
             let tau = if self.cfg.record_tau {
                 // τ_k is defined w.r.t. the computed gradient ĝ.
                 self.eval_gradient();
-                tau_k(&self.cfg.fmt, &self.x, &self.ghat, self.cfg.t).tau
+                tau_k(&self.cfg.grid, &self.x, &self.ghat, self.cfg.t).tau
             } else {
                 f64::NAN
             };
@@ -329,6 +337,8 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fp::format::FpFormat;
+    use crate::fp::grid::{FixedPoint, NumberGrid};
     use crate::problems::quadratic::Quadratic;
 
     fn schemes_rn() -> StepSchemes {
@@ -447,6 +457,36 @@ mod tests {
         let c = mk(Some(root.split(6)), 0);
         assert_eq!(a, b);
         assert_ne!(a, c);
+    }
+
+    /// The engine runs unchanged on a fixed-point grid: RN stagnates off
+    /// the optimum once the update falls below δ/2, SR escapes (the
+    /// companion paper's arXiv:2301.09511 story on the uniform grid), and
+    /// the iterate stays grid-resident throughout.
+    #[test]
+    fn fixed_point_rn_stagnates_and_sr_escapes() {
+        let fx = FixedPoint::q(3, 6); // δ = 2^-6, range [-8, 8)
+        let p = Quadratic::diagonal(vec![2.0], vec![1.0]); // f = (x-1)²
+        // t·∇f = 0.02·2·(x−1): far from the optimum the update exceeds
+        // δ/2 ≈ 0.0078; near it RN freezes strictly away from x* = 1.
+        let mut cfg = GdConfig::new(fx, schemes_rn(), 0.02, 120);
+        cfg.seed = 1;
+        let mut ern = GdEngine::new(cfg, &p, &[6.0]);
+        let f_rn = ern.run(None).final_f();
+        assert!(ern.x[0] != 1.0, "RN should stagnate off-optimum, got {}", ern.x[0]);
+        assert!(NumberGrid::contains(&fx, ern.x[0]));
+        // SR (averaged over seeds) ends well below the RN stagnation level.
+        let mut acc = 0.0;
+        let nseed = 8;
+        for s in 0..nseed {
+            let mut c = GdConfig::new(fx, StepSchemes::uniform(Rounding::Sr), 0.02, 120);
+            c.seed = 50 + s;
+            let mut esr = GdEngine::new(c, &p, &[6.0]);
+            acc += esr.run(None).final_f();
+            assert!(esr.x.iter().all(|&v| NumberGrid::contains(&fx, v)));
+        }
+        let f_sr = acc / nseed as f64;
+        assert!(f_sr < 0.5 * f_rn, "SR should beat stagnated RN: sr={f_sr} rn={f_rn}");
     }
 
     /// The iterate always remains exactly representable in the working format.

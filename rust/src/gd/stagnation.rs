@@ -9,80 +9,99 @@
 //! bit of `x̂_{i_k}` is 0: the scaled update falls below half an ulp of the
 //! landing binade, so RN maps `z` back to `x̂`.
 
-use crate::fp::format::{exponent_of, FpFormat};
+use crate::fp::format::exponent_of;
+use crate::fp::grid::{Grid, NumberGrid};
 use crate::fp::round::{round, Rounding};
 use crate::fp::rng::Rng;
 
 /// Result of the τ_k computation for one iteration.
 #[derive(Debug, Clone, Copy)]
 pub struct StagnationReport {
-    /// τ_k as defined above (0 when the update is identically zero).
+    /// τ_k as defined above (0 when the update is identically zero). On a
+    /// fixed-point grid τ_k is the update measured in grid spacings,
+    /// `max_i RN(t·ĝ_i)/δ` (the binade scaling degenerates to one uniform
+    /// scale).
     pub tau: f64,
     /// The arg-max coordinate i_k.
     pub argmax: usize,
-    /// τ_k ≤ u/2, the paper's stagnation threshold.
+    /// τ_k at or below the grid's stagnation threshold
+    /// ([`Grid::stagnation_threshold`]: `u/2` float, `1/2` fixed).
     pub below_threshold: bool,
-    /// Is the least significant bit of x̂_{i_k} zero (even significand)?
+    /// Is the least significant bit of x̂_{i_k} zero (even significand /
+    /// even stored integer)?
     pub lsb_even: bool,
 }
 
-/// Least-significant-bit parity of a representable value `x ∈ F`:
-/// true iff the significand is even (lsb = 0).
-pub fn lsb_is_even(fmt: &FpFormat, x: f64) -> bool {
+/// Least-significant-bit parity of a representable value `x ∈ G`:
+/// true iff the significand (float) or stored integer `k` (fixed) is even.
+pub fn lsb_is_even(grid: impl Into<Grid>, x: f64) -> bool {
     if x == 0.0 {
         return true;
     }
-    let q = fmt.spacing_at(x);
-    let m = (x / q).abs();
-    debug_assert_eq!(m, m.trunc(), "lsb_is_even requires x ∈ F");
+    let m = match grid.into() {
+        Grid::Float(fmt) => (x / fmt.spacing_at(x)).abs(),
+        Grid::Fixed(fx) => (x / fx.delta()).abs(),
+    };
+    debug_assert_eq!(m, m.trunc(), "lsb_is_even requires x ∈ G");
     (m as u64) % 2 == 0
 }
 
 /// Compute τ_k for the current iterate `x` and *computed* (already rounded,
-/// step-(8a)) gradient `ghat`, with stepsize `t`, under RN in `fmt`.
+/// step-(8a)) gradient `ghat`, with stepsize `t`, under RN on `grid`.
 ///
-/// `2^{e_i - s}`-scaling: with `μ ∈ [2^{s−1}, 2^s)` we have
+/// Float backend — `2^{e_i - s}`-scaling: with `μ ∈ [2^{s−1}, 2^s)` we have
 /// `e_i = exponent_of(|z_i|) + 1`, so `2^{−e_i} = 2^{−(⌊log₂|z_i|⌋+1)}`.
-pub fn tau_k(fmt: &FpFormat, x: &[f64], ghat: &[f64], t: f64) -> StagnationReport {
+/// Fixed backend — the spacing is uniform, so the scaled update is simply
+/// `RN(t·ĝ_i)/δ` and the threshold is `1/2` (RN maps the landing point
+/// back to x̂ exactly when the update is below half a spacing).
+pub fn tau_k(grid: impl Into<Grid>, x: &[f64], ghat: &[f64], t: f64) -> StagnationReport {
+    let grid = grid.into();
     debug_assert_eq!(x.len(), ghat.len());
     let mut rng = Rng::new(0); // RN consumes no randomness
     let mut tau = 0.0f64;
     let mut argmax = 0usize;
     for i in 0..x.len() {
-        // RN(t · RN(ĝ_i)): ĝ is already in F (RN(ĝ)=ĝ); round the product.
-        let upd = round(fmt, Rounding::RoundNearestEven, t * ghat[i], &mut rng).abs();
-        let z = x[i] - upd * ghat[i].signum(); // landing point (exact probe)
-        if z == 0.0 {
-            continue; // landing exactly on zero cannot stagnate via binade scaling
-        }
-        let e = exponent_of(z.abs()) + 1;
-        let scaled = upd * crate::fp::format::pow2(-e);
+        // RN(t · RN(ĝ_i)): ĝ is already on the grid (RN(ĝ)=ĝ); round the
+        // product.
+        let upd = round(grid, Rounding::RoundNearestEven, t * ghat[i], &mut rng).abs();
+        let scaled = match grid {
+            Grid::Float(_) => {
+                let z = x[i] - upd * ghat[i].signum(); // landing point (exact probe)
+                if z == 0.0 {
+                    continue; // landing exactly on zero cannot stagnate via binade scaling
+                }
+                let e = exponent_of(z.abs()) + 1;
+                upd * crate::fp::format::pow2(-e)
+            }
+            Grid::Fixed(fx) => upd / fx.delta(),
+        };
         if scaled > tau {
             tau = scaled;
             argmax = i;
         }
     }
-    let below = tau <= fmt.unit_roundoff() / 2.0;
+    let below = tau <= grid.stagnation_threshold();
     StagnationReport {
         tau,
         argmax,
         below_threshold: below,
-        lsb_even: lsb_is_even(fmt, x[argmax]),
+        lsb_even: lsb_is_even(grid, x[argmax]),
     }
 }
 
 /// Scenario classification per coordinate (conditions (11)/(12)): does the
 /// scaled update exceed half the gap to the strict neighbors of x̂_i?
 /// Returns the fraction of coordinates in Scenario 1 (no stagnation).
-pub fn scenario1_fraction(fmt: &FpFormat, x: &[f64], update: &[f64]) -> f64 {
+pub fn scenario1_fraction(grid: impl Into<Grid>, x: &[f64], update: &[f64]) -> f64 {
+    let grid = grid.into();
     debug_assert_eq!(x.len(), update.len());
     if x.is_empty() {
         return 1.0;
     }
     let mut n1 = 0usize;
     for i in 0..x.len() {
-        let su = fmt.successor(x[i]);
-        let pr = fmt.predecessor(x[i]);
+        let su = grid.successor(x[i]);
+        let pr = grid.predecessor(x[i]);
         let up = update[i].abs();
         let gap_up = su - x[i];
         let gap_dn = x[i] - pr;
@@ -97,6 +116,8 @@ pub fn scenario1_fraction(fmt: &FpFormat, x: &[f64], update: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fp::format::FpFormat;
+    use crate::fp::grid::FixedPoint;
 
     const B8: FpFormat = FpFormat::BINARY8;
 
@@ -129,6 +150,29 @@ mod tests {
         let rep = tau_k(&B8, &[1.0, 2.0], &[0.0, 0.0], 0.1);
         assert_eq!(rep.tau, 0.0);
         assert!(rep.below_threshold);
+    }
+
+    /// Fixed-point τ_k: the scaled update is upd/δ, the threshold is ½ —
+    /// RN on a uniform grid freezes exactly when the rounded update is 0.
+    #[test]
+    fn tau_on_fixed_grid() {
+        let fx = FixedPoint::q(3, 6); // δ = 2^-6
+        let d = fx.delta();
+        // Update t·g = 0.3δ < δ/2 ⇒ RN(t·g) = 0 ⇒ τ = 0, below threshold.
+        let rep = tau_k(&fx, &[1.0], &[0.3 * d / 0.1], 0.1);
+        assert_eq!(rep.tau, 0.0);
+        assert!(rep.below_threshold);
+        // Update 3δ ⇒ τ = 3 > ½ ⇒ not stagnating.
+        let rep2 = tau_k(&fx, &[1.0], &[3.0 * d / 0.1], 0.1);
+        assert!((rep2.tau - 3.0).abs() < 1e-12, "tau={}", rep2.tau);
+        assert!(!rep2.below_threshold);
+        // LSB parity on the stored integer: 1.0 = 64δ even, 1.0+δ odd.
+        assert!(lsb_is_even(&fx, 1.0));
+        assert!(!lsb_is_even(&fx, 1.0 + d));
+        assert!(lsb_is_even(&fx, 0.0));
+        // Scenario split on the uniform grid: both gaps are δ.
+        assert_eq!(scenario1_fraction(&fx, &[1.0], &[0.6 * d]), 1.0);
+        assert_eq!(scenario1_fraction(&fx, &[1.0], &[0.4 * d]), 0.0);
     }
 
     #[test]

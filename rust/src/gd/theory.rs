@@ -98,6 +98,94 @@ pub fn format_admissible(fmt: &FpFormat, a: f64, c: f64) -> bool {
     fmt.unit_roundoff() <= u_upper_bound(a, c)
 }
 
+// ------------------------------------------------------------------------
+// Polyak–Łojasiewicz bounds for the *fixed-point* backend (the companion
+// paper, arXiv:2301.09511). For an L-smooth f satisfying the PL inequality
+// ‖∇f(x)‖² ≥ 2μ(f(x) − f*), one GD step with stepsize t contracts the gap
+// by ρ = 1 − 2μt(1 − Lt/2) (the descent lemma + PL; ρ ≤ 1 − μt for
+// t ≤ 1/L). On a uniform grid of spacing δ = 2^{−f}, unbiased SR adds a
+// zero-mean per-coordinate rounding error of magnitude < δ — variance at
+// most δ²/4 — to the iterate update, so the smoothness term contributes at
+// most (L/2)·nδ²/4 per step:
+//
+//   E[f(x_{k+1}) − f*] ≤ ρ · E[f(x_k) − f*] + L·n·δ²/8.
+//
+// Unrolling gives the geometric bound with an O(δ²) limiting-accuracy
+// floor — the fixed-point analogue of the paper's Theorem 6 — while RN can
+// stagnate as soon as every |t·∇f(x)_i| drops below δ/2, i.e. at a gap as
+// large as nδ²/(8μt²): the δ² floor shrinks with the grid but the RN
+// stagnation level dominates it by the factor 1/(Lt(1−ρ-ish)) ≫ 1, which
+// is exactly the stagnation-threshold sweep of the `plfp3` experiment.
+// ------------------------------------------------------------------------
+
+/// PL contraction factor `ρ = 1 − 2μt(1 − Lt/2)` of one exact GD step
+/// (clamped into `[0, 1]`; meaningful for `0 < t ≤ 1/L`, `0 < μ ≤ L`).
+pub fn pl_contraction_factor(mu: f64, lip: f64, t: f64) -> f64 {
+    (1.0 - 2.0 * mu * t * (1.0 - lip * t / 2.0)).clamp(0.0, 1.0)
+}
+
+/// Exact-arithmetic PL bound: `f(x_k) − f* ≤ ρ^k (f(x⁰) − f*)`.
+pub fn pl_exact_bound(mu: f64, lip: f64, t: f64, k: usize, gap0: f64) -> f64 {
+    pl_contraction_factor(mu, lip, t).powi(k as i32) * gap0
+}
+
+/// Fixed-point SR bound under PL (companion paper, Theorem-4 shape):
+/// `E[f(x_k) − f*] ≤ ρ^k gap0 + (Lnδ²/8)·(1−ρ^k)/(1−ρ)`.
+pub fn pl_fixed_sr_bound(
+    mu: f64,
+    lip: f64,
+    t: f64,
+    k: usize,
+    gap0: f64,
+    delta: f64,
+    n: usize,
+) -> f64 {
+    let rho = pl_contraction_factor(mu, lip, t);
+    let noise = lip * n as f64 * delta * delta / 8.0;
+    let rk = rho.powi(k as i32);
+    if rho >= 1.0 {
+        rk * gap0 + noise * k as f64
+    } else {
+        rk * gap0 + noise * (1.0 - rk) / (1.0 - rho)
+    }
+}
+
+/// Limiting accuracy of fixed-point SR under PL (the `k → ∞` floor of
+/// [`pl_fixed_sr_bound`]): `Lnδ² / (8(1−ρ))`.
+pub fn pl_fixed_sr_limit(mu: f64, lip: f64, t: f64, delta: f64, n: usize) -> f64 {
+    let rho = pl_contraction_factor(mu, lip, t);
+    if rho >= 1.0 {
+        f64::INFINITY
+    } else {
+        lip * n as f64 * delta * delta / (8.0 * (1.0 - rho))
+    }
+}
+
+/// The gap at which RN can stagnate on a uniform grid: RN freezes once
+/// every `|t·∇f(x)_i| ≤ δ/2`, and under PL that can happen with
+/// `f − f* ≤ ‖∇f‖²/(2μ) ≤ nδ²/(8μt²)` — the worst-case stagnation level.
+pub fn pl_rn_stagnation_gap(mu: f64, t: f64, delta: f64, n: usize) -> f64 {
+    n as f64 * delta * delta / (8.0 * mu * t * t)
+}
+
+/// Smallest `frac_bits` whose SR limiting accuracy ([`pl_fixed_sr_limit`])
+/// is at or below `target` — how fine a Qm.n grid must be for SR-GD to
+/// reach a given objective gap (the design question behind `plfp3`).
+/// Searches `frac_bits ∈ [0, 51]`; returns `None` when even the finest
+/// admissible grid misses the target.
+pub fn frac_bits_for_target_gap(
+    mu: f64,
+    lip: f64,
+    t: f64,
+    n: usize,
+    target: f64,
+) -> Option<u32> {
+    (0..=51u32).find(|&f| {
+        let delta = crate::fp::format::pow2(-(f as i32));
+        pl_fixed_sr_limit(mu, lip, t, delta, n) <= target
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +247,37 @@ mod tests {
             theorem6_grad_gate_ii(small_a, u16, 1000, c)
                 > theorem6_grad_gate(small_a, u16, 1000, c) * 0.9
         );
+    }
+
+    #[test]
+    fn pl_bounds_shapes() {
+        let (mu, lip, t, n) = (0.1, 1.0, 0.5, 100);
+        let rho = pl_contraction_factor(mu, lip, t);
+        assert!(rho > 0.0 && rho < 1.0, "rho={rho}");
+        // Exact bound decays geometrically; SR bound converges to the floor.
+        assert!(pl_exact_bound(mu, lip, t, 50, 1.0) < pl_exact_bound(mu, lip, t, 10, 1.0));
+        let delta = (2.0f64).powi(-8);
+        let b10 = pl_fixed_sr_bound(mu, lip, t, 10, 1.0, delta, n);
+        let b1000 = pl_fixed_sr_bound(mu, lip, t, 1000, 1.0, delta, n);
+        let floor = pl_fixed_sr_limit(mu, lip, t, delta, n);
+        assert!(b1000 < b10);
+        assert!(b1000 >= floor && (b1000 - floor) / floor < 1e-6, "{b1000} vs {floor}");
+        // Finer grids push the floor down by exactly 4x per extra bit.
+        let floor9 = pl_fixed_sr_limit(mu, lip, t, delta / 2.0, n);
+        assert!((floor / floor9 - 4.0).abs() < 1e-9);
+        // The RN stagnation level dominates the SR floor in this regime.
+        assert!(pl_rn_stagnation_gap(mu, t, delta, n) > floor);
+        // Target-gap inversion is monotone and consistent with the floor.
+        let f = frac_bits_for_target_gap(mu, lip, t, n, 1e-6).unwrap();
+        let d = (2.0f64).powi(-(f as i32));
+        assert!(pl_fixed_sr_limit(mu, lip, t, d, n) <= 1e-6);
+        if f > 0 {
+            let d2 = (2.0f64).powi(-(f as i32 - 1));
+            assert!(pl_fixed_sr_limit(mu, lip, t, d2, n) > 1e-6);
+        }
+        // Unstable stepsize: no contraction, no finite floor.
+        assert_eq!(pl_contraction_factor(0.0, lip, t), 1.0);
+        assert_eq!(pl_fixed_sr_limit(0.0, lip, t, delta, n), f64::INFINITY);
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //!     --quick        smoke-scale profile
 //!     --side N --mlr-train N --mlr-epochs N ... (see ExpCtx)
 //! lpgd train <mlr|nn> [opts]            one training run with any schemes
-//!     --fmt binary8  --t 0.5 --epochs 50 --seed 0
+//!     --backend binary8 | fixed:Q3.8   number grid (--fmt is a legacy alias)
+//!     --t 0.5 --epochs 50 --seed 0
 //!     --scheme sr_eps:0.2    any registered scheme, all three steps
 //!     --s8a sr --s8b sr --s8c signed:0.1   per-step overrides
 //!     --sr-bits N    few-random-bits knob for the stochastic kernels
@@ -27,7 +28,7 @@
 use anyhow::{bail, Result};
 use lpgd::coordinator::experiments::{list_experiments, run_experiment, ExpCtx};
 use lpgd::data::load_or_synth;
-use lpgd::fp::{FpFormat, RoundPlan, Rng, Scheme, SchemeRegistry, DEFAULT_SR_BITS};
+use lpgd::fp::{Grid, NumberGrid, Rng, RoundPlan, Scheme, SchemeRegistry, DEFAULT_SR_BITS};
 use lpgd::gd::{RunBuilder, SchemePolicy};
 use lpgd::problems::{Mlr, TwoLayerNn};
 use lpgd::util::cli::Args;
@@ -95,7 +96,7 @@ fn print_help() {
     println!("commands:");
     println!("  list                        list reproducible experiments");
     println!("  reproduce <id|all> [opts]   regenerate a paper table/figure (--seeds, --jobs, --quick, --out-dir, ...)");
-    println!("  train <mlr|nn> [opts]       one training run (--fmt, --t, --epochs, --seed, --scheme, --s8a/--s8b/--s8c, --sr-bits)");
+    println!("  train <mlr|nn> [opts]       one training run (--backend/--fmt, --t, --epochs, --seed, --scheme, --s8a/--s8b/--s8c, --sr-bits)");
     println!("  round <value> [opts]        inspect rounding of one value (--fmt, --mode, --samples, --seed)");
     println!("  pjrt-info [--artifacts D]   PJRT platform + artifact check");
     println!();
@@ -105,7 +106,10 @@ fn print_help() {
         println!("  {name:<22} {summary}{alias}");
     }
     println!();
-    println!("formats (--fmt): binary8, bfloat16, binary16, binary32, binary64");
+    println!("number backends (--backend, or legacy --fmt; both accept every spec):");
+    println!("  float formats: binary8, bfloat16, binary16, binary32, binary64");
+    println!("  fixed-point:   fixed:Qm.n / qm.n (signed), fixed:uQm.n / uqm.n (unsigned)");
+    println!("                 e.g. --backend fixed:Q3.8  (delta=2^-8, range [-8, 8); docs/fixed-point.md)");
     println!("see README.md and docs/api.md for the library front door (RunBuilder)");
 }
 
@@ -144,7 +148,9 @@ fn run() -> Result<()> {
         }
         "train" => {
             let mut known = CTX_OPTS.to_vec();
-            known.extend(["fmt", "t", "epochs", "seed", "scheme", "s8a", "s8b", "s8c", "sr-bits"]);
+            known.extend([
+                "backend", "fmt", "t", "epochs", "seed", "scheme", "s8a", "s8b", "s8c", "sr-bits",
+            ]);
             reject_unknown(&a, &known)?;
             let which = a.positional.get(1).map(|s| s.as_str()).unwrap_or("mlr");
             let ctx = ctx_from_args(&a);
@@ -155,7 +161,9 @@ fn run() -> Result<()> {
                 mul: scheme_arg(&a, "s8b", base)?,
                 sub: scheme_arg(&a, "s8c", base)?,
             };
-            let fmt = a.get("fmt").unwrap_or("binary8");
+            // --backend is the grid spec (float name or fixed:Qm.n);
+            // --fmt is the legacy spelling, kept as an alias.
+            let fmt = a.get("backend").or_else(|| a.get("fmt")).unwrap_or("binary8");
             let seed = a.get_u64("seed", 0);
             let sr_bits = a.get_usize("sr-bits", DEFAULT_SR_BITS as usize) as u32;
             match which {
@@ -180,7 +188,7 @@ fn run() -> Result<()> {
                         .build()?;
                     let metric = |x: &[f64]| p.test_error(x, &splits.test);
                     let tr = session.run(Some(&metric));
-                    print_training("MLR", session.config().fmt, &policy, t_step, &tr.metric_series());
+                    print_training("MLR", session.config().grid, &policy, t_step, &tr.metric_series());
                 }
                 "nn" => {
                     let splits = load_or_synth(
@@ -209,7 +217,7 @@ fn run() -> Result<()> {
                     let tr = session.run(Some(&metric));
                     print_training(
                         "NN(3v8)",
-                        session.config().fmt,
+                        session.config().grid,
                         &policy,
                         t_step,
                         &tr.metric_series(),
@@ -219,18 +227,32 @@ fn run() -> Result<()> {
             }
         }
         "round" => {
-            reject_unknown(&a, &["fmt", "mode", "samples", "seed"])?;
+            reject_unknown(&a, &["backend", "fmt", "mode", "samples", "seed"])?;
             let val: f64 = a
                 .positional
                 .get(1)
                 .ok_or_else(|| anyhow::anyhow!("usage: lpgd round <value>"))?
                 .parse()?;
-            let fmt = FpFormat::by_name(a.get("fmt").unwrap_or("binary8"))
-                .ok_or_else(|| anyhow::anyhow!("unknown --fmt"))?;
+            let spec = a.get("backend").or_else(|| a.get("fmt")).unwrap_or("binary8");
+            let fmt = Grid::parse(spec)
+                .ok_or_else(|| anyhow::anyhow!("unknown --backend/--fmt '{spec}' (float format name or fixed:Qm.n)"))?;
             let scheme = SchemeRegistry::lookup(a.get("mode").unwrap_or("sr"))?;
             let samples = a.get_usize("samples", 10000);
             let (lo, hi) = fmt.floor_ceil(val);
-            println!("format {}  u={}  neighbors: [{lo}, {hi}]", fmt.name(), fmt.unit_roundoff());
+            match fmt {
+                Grid::Float(f) => println!(
+                    "format {}  u={}  neighbors: [{lo}, {hi}]",
+                    f.name(),
+                    f.unit_roundoff()
+                ),
+                Grid::Fixed(f) => println!(
+                    "grid {}  delta={}  range [{}, {}]  neighbors: [{lo}, {hi}]",
+                    fmt.label(),
+                    f.delta(),
+                    fmt.min_value(),
+                    fmt.max_value()
+                ),
+            }
             let plan = RoundPlan::new(fmt);
             let mut rng = Rng::new(a.get_u64("seed", 0));
             let mut mean = 0.0;
@@ -272,10 +294,10 @@ fn run() -> Result<()> {
     Ok(())
 }
 
-fn print_training(name: &str, fmt: FpFormat, policy: &SchemePolicy, t: f64, err: &[f64]) {
+fn print_training(name: &str, grid: Grid, policy: &SchemePolicy, t: f64, err: &[f64]) {
     println!(
-        "{name} fmt={} {} t={t}: final test error {:.4}",
-        fmt.name(),
+        "{name} backend={} {} t={t}: final test error {:.4}",
+        grid.label(),
         policy.label(),
         err.last().unwrap_or(&f64::NAN)
     );

@@ -41,6 +41,14 @@ pub trait Problem {
         None
     }
 
+    /// Polyak–Łojasiewicz constant μ (‖∇f(x)‖² ≥ 2μ(f(x) − f*)), when
+    /// known analytically — drives the fixed-point PL bounds of
+    /// [`crate::gd::theory`] and the `plfp*` experiments. For a quadratic
+    /// this is the smallest eigenvalue of A.
+    fn pl_constant(&self) -> Option<f64> {
+        None
+    }
+
     /// The minimizer x*, when known analytically.
     fn optimum(&self) -> Option<&[f64]> {
         None

@@ -24,6 +24,8 @@ pub struct Quadratic {
     xstar: Vec<f64>,
     /// Largest eigenvalue = Lipschitz constant of ∇f.
     lip: f64,
+    /// Smallest eigenvalue = PL constant μ (None when unknown).
+    mu: Option<f64>,
     /// Scratch for (x − x*).
     n: usize,
 }
@@ -33,16 +35,18 @@ impl Quadratic {
     pub fn diagonal(diag: Vec<f64>, xstar: Vec<f64>) -> Self {
         assert_eq!(diag.len(), xstar.len());
         let lip = diag.iter().cloned().fold(0.0f64, f64::max);
+        let mu = diag.iter().cloned().fold(f64::INFINITY, f64::min);
         let n = diag.len();
-        Self { diag, dense: None, xstar, lip, n }
+        Self { diag, dense: None, xstar, lip, mu: Some(mu), n }
     }
 
     /// Dense symmetric quadratic with matrix `a` (row-major n×n) and
-    /// largest eigenvalue `lip`.
+    /// largest eigenvalue `lip` (smallest eigenvalue unknown ⇒ no PL
+    /// constant; see [`Quadratic::setting2`], which knows its spectrum).
     pub fn dense(a: Vec<f64>, xstar: Vec<f64>, lip: f64) -> Self {
         let n = xstar.len();
         assert_eq!(a.len(), n * n);
-        Self { diag: vec![], dense: Some(a), xstar, lip, n }
+        Self { diag: vec![], dense: Some(a), xstar, lip, mu: None, n }
     }
 
     /// Paper Setting I (§5.1).
@@ -85,7 +89,9 @@ impl Quadratic {
         let x0: Vec<f64> = (0..n).map(|i| (n - i) as f64).collect();
         let xstar = vec![0.0625; n]; // 2⁻⁴
         let lip = n as f64;
-        (Self::dense(a, xstar, lip), x0, 1.0 / n as f64)
+        let mut p = Self::dense(a, xstar, lip);
+        p.mu = Some(1.0); // spectrum {1, …, n} by construction
+        (p, x0, 1.0 / n as f64)
     }
 
     fn residual(&self, x: &[f64]) -> Vec<f64> {
@@ -161,6 +167,10 @@ impl Problem for Quadratic {
 
     fn lipschitz(&self) -> Option<f64> {
         Some(self.lip)
+    }
+
+    fn pl_constant(&self) -> Option<f64> {
+        self.mu
     }
 
     fn optimum(&self) -> Option<&[f64]> {

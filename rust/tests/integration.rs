@@ -20,7 +20,11 @@ fn quick_ctx(tag: &str) -> ExpCtx {
 fn all_experiments_run_and_write_csvs() {
     let ctx = quick_ctx("all");
     let tables = run_experiment("all", &ctx).expect("pipeline failed");
-    assert_eq!(tables.len(), 13, "12 paper artifacts + the fig4a-acc ablation");
+    assert_eq!(
+        tables.len(),
+        16,
+        "12 paper artifacts + the fig4a-acc ablation + the plfp1-3 fixed-point family"
+    );
     for t in &tables {
         let p = std::path::Path::new(&ctx.out_dir).join(format!("{}.csv", t.id));
         assert!(p.exists(), "missing {}", p.display());
@@ -30,11 +34,13 @@ fn all_experiments_run_and_write_csvs() {
 
 /// The sharded scheduler's acceptance guarantee: running an experiment
 /// through the worker pool produces *bit-identical* CSVs at `--jobs 1` and
-/// `--jobs 8`, for both the quadratic (expectation over seeds) and the
-/// learning (flattened config × seed grid) fan-out paths.
+/// `--jobs 8`, for the quadratic (expectation over seeds) and learning
+/// (flattened config × seed grid) fan-out paths — and for the fixed-point
+/// `plfp1` family (the PR-4 acceptance criterion:
+/// `lpgd reproduce plfp1 --jobs 8` ≡ `--jobs 1`).
 #[test]
 fn experiments_are_bit_identical_across_job_counts() {
-    for id in ["fig3a", "fig4b"] {
+    for id in ["fig3a", "fig4b", "plfp1", "plfp3"] {
         let mut c1 = quick_ctx(&format!("{id}_jobs1"));
         c1.jobs = 1;
         let mut c8 = quick_ctx(&format!("{id}_jobs8"));

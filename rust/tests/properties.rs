@@ -328,6 +328,120 @@ fn prop_bit_kernels_match_reference_exhaustive() {
     }
 }
 
+/// Fixed-point satellite: exhaustive small-grid oracle sweep. Every
+/// representable Q2.3 value (all 64 stored integers), every halfway point
+/// between neighbors, quarter-points, out-of-range magnitudes, ±∞ and ±0
+/// are checked against a *naive* f64 reference built by materializing the
+/// entire grid as a sorted vector and scanning for neighbors — fully
+/// independent of the production integer-quantization path.
+#[test]
+fn prop_fixed_point_small_grid_matches_naive_oracle() {
+    use lpgd::fp::{FixedPoint, NumberGrid, RoundPlan};
+
+    for fx in [FixedPoint::q(2, 3), FixedPoint::uq(2, 3)] {
+        let d = fx.delta();
+        // Materialize the whole grid: k_min..=k_max stored integers.
+        let (k_min, k_max) = if fx.signed {
+            (-(1i64 << (fx.word_bits - 1)), (1i64 << (fx.word_bits - 1)) - 1)
+        } else {
+            (0, (1i64 << fx.word_bits) - 1)
+        };
+        let grid: Vec<f64> = (k_min..=k_max).map(|k| k as f64 * d).collect();
+        assert_eq!(grid[0], NumberGrid::min_value(&fx));
+        assert_eq!(*grid.last().unwrap(), NumberGrid::max_value(&fx));
+
+        // Naive oracle: scan the sorted grid for the neighbor pair.
+        let oracle_floor_ceil = |x: f64| -> (f64, f64) {
+            let lo = grid.iter().rev().find(|&&g| g <= x).copied();
+            let hi = grid.iter().find(|&&g| g >= x).copied();
+            (lo.unwrap_or(f64::NEG_INFINITY), hi.unwrap_or(f64::INFINITY))
+        };
+
+        // Inputs: the grid, halfway and quarter points of every gap,
+        // out-of-range magnitudes and the specials.
+        let mut inputs: Vec<f64> = grid.clone();
+        for w in grid.windows(2) {
+            inputs.push((w[0] + w[1]) / 2.0); // exact midpoint
+            inputs.push(w[0] + 0.25 * d);
+            inputs.push(w[0] + 0.75 * d);
+        }
+        inputs.extend([
+            NumberGrid::max_value(&fx) + 0.4 * d,
+            NumberGrid::max_value(&fx) + 10.0,
+            NumberGrid::min_value(&fx) - 0.4 * d,
+            NumberGrid::min_value(&fx) - 10.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            0.0,
+            -0.0,
+        ]);
+
+        for &x in &inputs {
+            let want = oracle_floor_ceil(x);
+            let got = NumberGrid::floor_ceil(&fx, x);
+            assert_eq!(got, want, "{} floor_ceil({x:e})", fx.name());
+            let on_grid = grid.contains(&x);
+            assert_eq!(NumberGrid::contains(&fx, x), on_grid, "{} contains({x:e})", fx.name());
+            assert_eq!(got.0 == got.1, on_grid, "{} degenerate pair iff on grid", fx.name());
+        }
+
+        // Strict successor/predecessor against the sorted index.
+        for (i, &g) in grid.iter().enumerate() {
+            let su = NumberGrid::successor(&fx, g);
+            let want_su = grid.get(i + 1).copied().unwrap_or(f64::INFINITY);
+            assert_eq!(su, want_su, "{} successor({g})", fx.name());
+            let pr = NumberGrid::predecessor(&fx, g);
+            let want_pr =
+                if i == 0 { f64::NEG_INFINITY } else { grid[i - 1] };
+            assert_eq!(pr, want_pr, "{} predecessor({g})", fx.name());
+        }
+
+        // Rounding laws on the exhaustive inputs: directed modes pick the
+        // oracle side (with saturation), RN picks the nearer side and
+        // breaks exact ties toward the even stored integer, and SR outputs
+        // are always (saturated) oracle neighbors.
+        let plan = RoundPlan::new(fx);
+        let mut rng = Rng::new(77);
+        let satv = |y: f64| y.clamp(NumberGrid::min_value(&fx), NumberGrid::max_value(&fx));
+        for &x in &inputs {
+            if x.is_nan() {
+                continue;
+            }
+            let (lo, hi) = oracle_floor_ceil(x);
+            let (slo, shi) = (satv(lo), satv(hi));
+            let rd = plan.round_with(Rounding::RoundDown, x, x, &mut rng);
+            assert_eq!(rd, slo, "{} RD({x:e})", fx.name());
+            let ru = plan.round_with(Rounding::RoundUp, x, x, &mut rng);
+            assert_eq!(ru, shi, "{} RU({x:e})", fx.name());
+            let rz = plan.round_with(Rounding::RoundTowardZero, x, x, &mut rng);
+            let rz_want = if x > 0.0 {
+                slo
+            } else if x < 0.0 {
+                shi
+            } else {
+                0.0
+            };
+            assert_eq!(rz, rz_want, "{} RZ({x:e})", fx.name());
+            let rn = plan.round_with(Rounding::RoundNearestEven, x, x, &mut rng);
+            if slo == shi {
+                assert_eq!(rn, slo, "{} RN({x:e}) saturation", fx.name());
+            } else if x - lo < hi - x {
+                assert_eq!(rn, lo, "{} RN({x:e}) lower", fx.name());
+            } else if hi - x < x - lo {
+                assert_eq!(rn, hi, "{} RN({x:e}) upper", fx.name());
+            } else {
+                let k_lo = (lo / d).round() as i64;
+                let want = if k_lo % 2 == 0 { lo } else { hi };
+                assert_eq!(rn, want, "{} RN({x:e}) tie-to-even-k", fx.name());
+            }
+            for _ in 0..4 {
+                let sr = plan.round_with(Rounding::Sr, x, x, &mut rng);
+                assert!(sr == slo || sr == shi, "{} SR({x:e}) -> {sr}", fx.name());
+            }
+        }
+    }
+}
+
 #[test]
 fn prop_nan_and_inf_handling() {
     let mut rng = Rng::new(14);

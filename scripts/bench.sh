@@ -4,6 +4,8 @@
 #
 #   ./scripts/bench.sh            # all benches with JSON emitters
 #   ./scripts/bench.sh gd_step    # just one
+#   BENCH_SMOKE=1 ./scripts/bench.sh   # ~10x reduced iterations (the CI
+#                                      # bench-smoke job; noisier numbers)
 #
 # The figures/runtime benches are excluded: `figures` regenerates paper
 # CSVs (minutes), `runtime_pjrt` needs the non-default pjrt feature.
@@ -27,7 +29,7 @@ check_provenance() {
             stale=1
         fi
     done
-    return $stale
+    return "$stale"
 }
 
 check_provenance "before run" || true

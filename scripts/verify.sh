@@ -13,6 +13,13 @@
 #    (index loops over parallel buffers, many-scalar kernel signatures)
 #    are allowed crate-wide at the top of rust/src/lib.rs; everything
 #    else — including the correctness lints — is enforced.
+# 5. release build of every example (the docs' runnable front doors used
+#    to bit-rot silently: `cargo build --release` does not touch them).
+# 6. cargo fmt --check (house style in rustfmt.toml) when rustfmt is
+#    installed, keeping the local gate equivalent to the CI lint job.
+# 7. shellcheck over scripts/*.sh when the tool is installed (the CI
+#    `lint` job always runs it; locally we warn-and-skip if absent so the
+#    tier-1 gate stays runnable on minimal images).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -27,5 +34,22 @@ RUSTDOCFLAGS="-D missing_docs" cargo doc --no-deps --quiet
 
 echo "== cargo clippy --all-targets (-D warnings) =="
 cargo clippy --all-targets -- -D warnings
+
+echo "== cargo build --examples --release =="
+cargo build --examples --release
+
+echo "== cargo fmt --all -- --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    echo "rustfmt not installed; skipping locally (the CI lint job enforces it)"
+fi
+
+echo "== shellcheck scripts/*.sh =="
+if command -v shellcheck >/dev/null 2>&1; then
+    shellcheck scripts/*.sh
+else
+    echo "shellcheck not installed; skipping locally (the CI lint job enforces it)"
+fi
 
 echo "verify OK"
