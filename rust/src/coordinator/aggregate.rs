@@ -7,6 +7,7 @@
 //! seed order, so the aggregate is bit-identical for every `--jobs` value
 //! (floating-point summation order is fixed by the ordered merge).
 
+use crate::coordinator::journal::{sweep_cells, SweepFaults};
 use crate::coordinator::scheduler::run_indexed;
 use crate::gd::trace::{mean_series, variance_series, Trace};
 
@@ -52,6 +53,35 @@ pub fn expectation_jobs(
     ExpectationResult { mean: mean_series(&all), variance: variance_series(&all), seeds }
 }
 
+/// Fault-aware, journal-backed [`expectation_jobs`]: the repetitions run
+/// through [`sweep_cells`] as cells of identity `(exp, label, seed)`, so
+/// they checkpoint into (and resume from) the sweep journal and obey the
+/// fault policy. Seeds lost to the skip-cell policy drop out of the
+/// aggregate — the returned `seeds` field counts the survivors — and the
+/// accompanying notes record every resume/retry/skip event. With no
+/// journal, injector, or retries configured this is bit-identical to
+/// [`expectation_jobs`].
+pub fn expectation_sweep(
+    exp: &str,
+    label: &str,
+    faults: &SweepFaults<'_>,
+    seeds: usize,
+    runner: &(dyn Fn(u64) -> Trace + Sync),
+    select: &(dyn Fn(&Trace) -> Vec<f64> + Sync),
+) -> (ExpectationResult, Vec<String>) {
+    let cells: Vec<(String, u64)> =
+        (0..seeds as u64).map(|s| (label.to_string(), s)).collect();
+    let (values, notes) =
+        sweep_cells(exp, faults, &cells, &|i| select(&runner(i as u64)), None);
+    let all: Vec<Vec<f64>> = values.into_iter().flatten().collect();
+    let result = ExpectationResult {
+        mean: mean_series(&all),
+        variance: variance_series(&all),
+        seeds: all.len(),
+    };
+    (result, notes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,6 +109,32 @@ mod tests {
         let pooled = expectation_jobs(8, 8, &toy_trace, &|t| t.objective_series());
         assert_eq!(serial.mean, pooled.mean);
         assert_eq!(serial.variance, pooled.variance);
+    }
+
+    /// expectation_sweep with no faults configured matches expectation_jobs
+    /// bit for bit; with a skip-cell injector one seed drops out of the
+    /// aggregate and the seed count reflects the survivors.
+    #[test]
+    fn expectation_sweep_matches_and_degrades() {
+        use crate::coordinator::health::{FaultInjector, FaultPolicy};
+        let select = |t: &Trace| t.objective_series();
+        let plain = expectation_jobs(1, 6, &toy_trace, &select);
+        let (swept, notes) =
+            expectation_sweep("aexp", "toy", &SweepFaults::none(1), 6, &toy_trace, &select);
+        assert_eq!(plain.mean, swept.mean);
+        assert_eq!(plain.variance, swept.variance);
+        assert_eq!(swept.seeds, 6);
+        assert!(notes.is_empty());
+        let inj = FaultInjector::panic_at("aexp", 2, u32::MAX);
+        let faults = SweepFaults {
+            policy: FaultPolicy::SkipCell,
+            injector: Some(&inj),
+            ..SweepFaults::none(1)
+        };
+        let (swept, notes) =
+            expectation_sweep("aexp", "toy", &faults, 6, &toy_trace, &select);
+        assert_eq!(swept.seeds, 5);
+        assert!(notes.iter().any(|n| n.contains("skipped")), "{notes:?}");
     }
 
     #[test]

@@ -10,7 +10,11 @@
 //! (`--side 28` for full size) and `--seeds` controls the expectation
 //! estimate (paper: 20; default here: 5 for a single-core laptop budget).
 
-use crate::coordinator::aggregate::expectation_jobs;
+use std::sync::Arc;
+
+use crate::coordinator::aggregate::expectation_sweep;
+use crate::coordinator::health::{panic_message, FaultInjector, FaultPolicy};
+use crate::coordinator::journal::{sweep_cells, Journal, SweepFaults};
 use crate::coordinator::registry;
 use crate::coordinator::scheduler::run_indexed;
 use crate::data::{load_or_synth, Dataset};
@@ -54,6 +58,23 @@ pub struct ExpCtx {
     pub quad_n: usize,
     /// Optional real-MNIST directory.
     pub mnist_dir: Option<String>,
+    /// Extra attempts per panicking sweep cell before the cell is declared
+    /// failed (`--max-retries`; retries are deterministic, see
+    /// `docs/robustness.md`).
+    pub max_retries: u32,
+    /// What a terminally failed cell does to its sweep (`--fault-policy`).
+    pub fault_policy: FaultPolicy,
+    /// Divergence-guard threshold threaded into every GD cell
+    /// (`--escape`): a cell whose loss turns non-finite or exceeds it stops
+    /// early with `RunStatus::Diverged`. `None` keeps the historic
+    /// run-to-completion behavior and bit-identical CSVs.
+    pub escape: Option<f64>,
+    /// Checkpoint/resume journal (`--journal PATH`, loaded when `--resume`
+    /// is also given). Shared across the experiment's sweeps.
+    pub journal: Option<Arc<Journal>>,
+    /// Deterministic fault injector — test/CI hook only, never set by
+    /// normal CLI use.
+    pub injector: Option<Arc<FaultInjector>>,
 }
 
 impl Default for ExpCtx {
@@ -72,6 +93,11 @@ impl Default for ExpCtx {
             quad_steps: 4000,
             quad_n: 1000,
             mnist_dir: None,
+            max_retries: 0,
+            fault_policy: FaultPolicy::FailFast,
+            escape: None,
+            journal: None,
+            injector: None,
         }
     }
 }
@@ -92,6 +118,53 @@ impl ExpCtx {
             quad_n: 100,
             ..Self::default()
         }
+    }
+
+    /// The sweep-level fault-handling view of this context, consumed by
+    /// [`sweep_cells`].
+    pub fn faults(&self) -> SweepFaults<'_> {
+        SweepFaults {
+            jobs: self.jobs,
+            max_retries: self.max_retries,
+            policy: self.fault_policy,
+            journal: self.journal.as_deref(),
+            injector: self.injector.as_deref(),
+        }
+    }
+
+    /// Digest of every knob that changes what a sweep cell *computes* (data
+    /// sizes, epochs, problem dimensions, the MNIST source, the escape
+    /// guard). Journal lines carry it, and resume replays only matching
+    /// lines — so a journal written under different settings is inert
+    /// rather than corrupting. `seeds`, `jobs`, `out_dir` and the fault
+    /// knobs are deliberately excluded: they select or schedule cells but
+    /// never change an individual cell's output.
+    pub fn config_digest(&self) -> u64 {
+        fn eat(mut h: u64, bytes: &[u8]) -> u64 {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            h
+        }
+        let mut h = 0xcbf29ce484222325u64;
+        for v in [
+            self.side,
+            self.mlr_train,
+            self.mlr_test,
+            self.nn_train,
+            self.nn_test,
+            self.mlr_epochs,
+            self.nn_epochs,
+            self.quad_steps,
+            self.quad_n,
+        ] {
+            h = eat(h, &(v as u64).to_le_bytes());
+        }
+        h = eat(h, self.mnist_dir.as_deref().unwrap_or("").as_bytes());
+        h = eat(h, &[self.escape.is_some() as u8]);
+        h = eat(h, &self.escape.map_or(0, f64::to_bits).to_le_bytes());
+        h
     }
 }
 
@@ -115,7 +188,17 @@ pub fn run_experiment(id: &str, ctx: &ExpCtx) -> Result<Vec<Table>> {
         Some(s) => s,
         None => bail!("unknown experiment '{id}' (see `lpgd list`)"),
     };
-    let tables = (spec.run)(ctx);
+    // The fail-fast fault policy (and any unguarded builder bug) surfaces
+    // as a panic inside the builder; catch it here so one bad experiment
+    // becomes a clean error — and, under `id == "all"`, cannot take down
+    // the experiments already journaled or written.
+    let tables =
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (spec.run)(ctx))) {
+            Ok(tables) => tables,
+            Err(payload) => {
+                bail!("experiment '{id}' aborted: {}", panic_message(payload.as_ref()))
+            }
+        };
     for t in &tables {
         t.write_csv(&ctx.out_dir)?;
     }
@@ -263,41 +346,59 @@ pub(crate) fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
     let run = |fmt: FpFormat, schemes: SchemePolicy, seed: u64| -> Trace {
         let mut cfg = GdConfig::new(fmt, schemes, t_step, steps);
         cfg.seed = seed;
+        cfg.escape = ctx.escape;
         GdEngine::new(cfg, &p, &x0).run(None)
     };
 
+    let id = if dense { "fig3b" } else { "fig3a" };
     // binary32 + RN baseline ("exact" reference), deterministic.
     let base = run(FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn()), 0);
     // bfloat16: (8a)+(8b) SR with (8c) ∈ {SR, signed-SRε(0.4)}; the seed
-    // repetitions fan out across the worker pool.
+    // repetitions fan out across the worker pool through the fault-aware
+    // journaled sweep (labels keep the two scheme families' cell identities
+    // apart in the journal).
+    let faults = ctx.faults();
     let sr_schemes = SchemePolicy::uniform(Scheme::sr());
-    let sr =
-        expectation_jobs(ctx.jobs, ctx.seeds, &|s| run(FpFormat::BFLOAT16, sr_schemes, s), &|t| {
-            t.objective_series()
-        });
+    let (sr, sr_notes) = expectation_sweep(
+        id,
+        "bf16_SR",
+        &faults,
+        ctx.seeds,
+        &|s| run(FpFormat::BFLOAT16, sr_schemes, s),
+        &|t| t.objective_series(),
+    );
     let sg_schemes =
         SchemePolicy { grad: Scheme::sr(), mul: Scheme::sr(), sub: Scheme::signed_sr_eps(0.4) };
-    let signed =
-        expectation_jobs(ctx.jobs, ctx.seeds, &|s| run(FpFormat::BFLOAT16, sg_schemes, s), &|t| {
-            t.objective_series()
-        });
-
-    let id = if dense { "fig3b" } else { "fig3a" };
+    let (signed, sg_notes) = expectation_sweep(
+        id,
+        "bf16_signed_SReps0.4",
+        &faults,
+        ctx.seeds,
+        &|s| run(FpFormat::BFLOAT16, sg_schemes, s),
+        &|t| t.objective_series(),
+    );
     let setting = if dense { "Setting II" } else { "Setting I" };
     let mut t = Table::new(
         id,
         &format!("Quadratic {setting}, bfloat16 (paper Figure 3)"),
         &["k", "thm2_bound", "binary32_RN", "bf16_SR", "bf16_signed_SReps0.4"],
     );
+    // An escape-shortened (diverged) run truncates its aggregate series;
+    // pad the missing tail with NaN so the row loop stays rectangular.
+    let at = |series: &[f64], k: usize| series.get(k).copied().unwrap_or(f64::NAN);
+    let base_f = base.objective_series();
     let stride = (steps / 200).max(1); // keep CSVs compact
     for k in (0..steps).step_by(stride) {
         t.row(vec![
             k.into(),
             theory::theorem2_bound(lip, t_step, k, dist0).into(),
-            base.records[k].f.into(),
-            sr.mean[k].into(),
-            signed.mean[k].into(),
+            at(&base_f, k).into(),
+            at(&sr.mean, k).into(),
+            at(&signed.mean, k).into(),
         ]);
+    }
+    for n in sr_notes.into_iter().chain(sg_notes) {
+        t.note(n);
     }
     // Paper's §5.1 closing metric for Setting II: relative error at k=4000.
     // One cell per seed; the ordered merge fixes the summation order so the
@@ -357,7 +458,8 @@ fn seeds_for(schemes: &SchemePolicy, seeds: usize) -> usize {
 }
 
 /// Fan a (config × repetition) grid out as **one** batch of scheduler
-/// cells and return the per-config mean series.
+/// cells and return the per-config mean series plus the sweep's fault
+/// notes (resume/retry/skip/degrade events — empty on a clean run).
 ///
 /// This is the coordinator's main fan-out shape: flattening the whole grid
 /// keeps every worker busy even when some configs are deterministic single
@@ -365,28 +467,58 @@ fn seeds_for(schemes: &SchemePolicy, seeds: usize) -> usize {
 /// `run(ci, seed)` produces one cell's series. Results are grouped back
 /// per config in cell order, making the means — and the CSVs — bit-
 /// identical for any `jobs` value.
+///
+/// The batch runs through [`sweep_cells`], so every fan-out in the crate
+/// gets checkpoint/resume, panic isolation and retry for free: the cell
+/// identity is `(exp, labels[ci], seed)` and the journal key is its
+/// [`crate::coordinator::scheduler::cell_stream`] hash. Skipped cells
+/// (skip-cell policy) drop out of their config's mean; a config that loses
+/// *every* cell pads with NaN. Each mean is padded to `rows` entries with
+/// NaN so tables stay rectangular when the `--escape` guard shortens a
+/// trace. `master`, when given, supplies the degrade-policy fallback for a
+/// `(config, seed)` cell.
 fn curves_flat(
+    exp: &str,
+    labels: &[String],
     seeds_per_cfg: &[usize],
-    jobs: usize,
+    rows: usize,
+    ctx: &ExpCtx,
     run: &(dyn Fn(usize, u64) -> Vec<f64> + Sync),
-) -> Vec<Vec<f64>> {
-    let mut cells: Vec<(usize, u64)> = Vec::new();
+    master: Option<&(dyn Fn(usize, u64) -> Vec<f64> + Sync)>,
+) -> (Vec<Vec<f64>>, Vec<String>) {
+    debug_assert_eq!(labels.len(), seeds_per_cfg.len());
+    let mut cells: Vec<(String, u64)> = Vec::new();
+    let mut map: Vec<(usize, u64)> = Vec::new();
     for (ci, &n) in seeds_per_cfg.iter().enumerate() {
         for s in 0..n as u64 {
-            cells.push((ci, s));
+            cells.push((labels[ci].clone(), s));
+            map.push((ci, s));
         }
     }
-    let series: Vec<Vec<f64>> = run_indexed(jobs, cells.len(), |k| {
-        let (ci, s) = cells[k];
+    let cell_run = |k: usize| -> Vec<f64> {
+        let (ci, s) = map[k];
         run(ci, s)
-    });
+    };
+    let master_run = |k: usize| -> Vec<f64> {
+        let (ci, s) = map[k];
+        (master.expect("master_run is only reachable when master is Some"))(ci, s)
+    };
+    let master_opt: Option<&(dyn Fn(usize) -> Vec<f64> + Sync)> =
+        if master.is_some() { Some(&master_run) } else { None };
+    let (values, notes) = sweep_cells(exp, &ctx.faults(), &cells, &cell_run, master_opt);
     let mut curves = Vec::with_capacity(seeds_per_cfg.len());
     let mut offset = 0;
     for &n in seeds_per_cfg {
-        curves.push(crate::gd::trace::mean_series(&series[offset..offset + n]));
+        let group: Vec<Vec<f64>> =
+            values[offset..offset + n].iter().filter_map(|v| v.clone()).collect();
+        let mut mean = crate::gd::trace::mean_series(&group);
+        if mean.len() < rows {
+            mean.resize(rows, f64::NAN);
+        }
+        curves.push(mean);
         offset += n;
     }
-    curves
+    (curves, notes)
 }
 
 /// One MLR training cell: train `(grid, schemes, grad_model)` at `seed`
@@ -402,10 +534,12 @@ fn mlr_cell(
     t_step: f64,
     epochs: usize,
     seed: u64,
+    escape: Option<f64>,
 ) -> Vec<f64> {
     let mut cfg = GdConfig::new(grid, schemes, t_step, epochs);
     cfg.seed = seed;
     cfg.grad_model = gm;
+    cfg.escape = escape;
     let mut e = GdEngine::new(cfg, &setup.mlr, &setup.x0);
     let metric = |x: &[f64]| setup.mlr.test_error(x, &setup.test);
     e.run(Some(&metric)).metric_series()
@@ -433,8 +567,7 @@ pub(crate) fn fig4a(ctx: &ExpCtx) -> Table {
         cfgs,
         t_step,
         ctx.mlr_epochs,
-        ctx.seeds,
-        ctx.jobs,
+        ctx,
     )
 }
 
@@ -458,8 +591,7 @@ pub(crate) fn fig4b(ctx: &ExpCtx) -> Table {
         cfgs,
         t_step,
         ctx.mlr_epochs,
-        ctx.seeds,
-        ctx.jobs,
+        ctx,
     );
     t.note("paper: signed-SReps(0.1) reaches the binary32-150-epoch error in ~82-84 epochs");
     t
@@ -491,18 +623,30 @@ pub(crate) fn fig4a_acc(ctx: &ExpCtx) -> Table {
         "MLR: absorption ablation (low-precision accumulation vs chop result-rounding)",
         &col_refs,
     );
+    let labels: Vec<String> = cfgs.iter().map(|(n, _, _, _)| n.clone()).collect();
     let seeds_per: Vec<usize> =
         cfgs.iter().map(|(_, _, sch, _)| seeds_for(sch, ctx.seeds)).collect();
-    let curves = curves_flat(&seeds_per, ctx.jobs, &|ci, s| {
-        let (_, fmt, sch, gm) = &cfgs[ci];
-        mlr_cell(&setup, *fmt, *sch, *gm, t_step, epochs, s)
-    });
+    let (curves, notes) = curves_flat(
+        "fig4a-acc",
+        &labels,
+        &seeds_per,
+        epochs,
+        ctx,
+        &|ci, s| {
+            let (_, fmt, sch, gm) = &cfgs[ci];
+            mlr_cell(&setup, *fmt, *sch, *gm, t_step, epochs, s, ctx.escape)
+        },
+        None,
+    );
     for k in 0..epochs {
         let mut row: Vec<Cell> = vec![k.into()];
         for cv in &curves {
             row.push(cv[k].into());
         }
         t.row(row);
+    }
+    for n in notes {
+        t.note(n);
     }
     t.note("RN_acc should stall well above binary32 while SR_acc keeps tracking it");
     t
@@ -546,12 +690,24 @@ pub(crate) fn fig5(ctx: &ExpCtx, biased: bool) -> Table {
     for &t_ in &ts {
         grid.push((b8, schemes, t_));
     }
+    let labels: Vec<String> = cols[1..].to_vec();
     let seeds_per: Vec<usize> =
         grid.iter().map(|(_, sch, _)| seeds_for(sch, ctx.seeds)).collect();
-    let mut all = curves_flat(&seeds_per, ctx.jobs, &|ci, s| {
-        let (fmt, sch, t_) = grid[ci];
-        mlr_cell(&setup, fmt, sch, GradModel::RoundAfterOp, t_, ctx.mlr_epochs, s)
-    });
+    let (mut all, notes) = curves_flat(
+        id,
+        &labels,
+        &seeds_per,
+        ctx.mlr_epochs,
+        ctx,
+        &|ci, s| {
+            let (fmt, sch, t_) = grid[ci];
+            mlr_cell(&setup, fmt, sch, GradModel::RoundAfterOp, t_, ctx.mlr_epochs, s, ctx.escape)
+        },
+        None,
+    );
+    for n in notes {
+        table.note(n);
+    }
     let baseline = all.remove(0);
     let curves = all;
     for k in 0..ctx.mlr_epochs {
@@ -598,24 +754,42 @@ fn nn_setup(ctx: &ExpCtx) -> NnSetup {
 }
 
 /// Fan an NN (config × seed) grid out through [`curves_flat`], returning
-/// the per-config mean test-error series.
+/// the per-config mean test-error series plus the sweep's fault notes.
+/// The degrade fault policy falls back to the binary64 + RN master.
 fn nn_curves(
+    exp: &str,
     setup: &NnSetup,
     cfgs: &[(String, Grid, SchemePolicy)],
     t_step: f64,
     epochs: usize,
-    seeds: usize,
-    jobs: usize,
-) -> Vec<Vec<f64>> {
-    let seeds_per: Vec<usize> = cfgs.iter().map(|(_, _, sch)| seeds_for(sch, seeds)).collect();
-    curves_flat(&seeds_per, jobs, &|ci, s| {
-        let (_, fmt, sch) = &cfgs[ci];
-        let mut cfg = GdConfig::new(*fmt, *sch, t_step, epochs);
+    ctx: &ExpCtx,
+) -> (Vec<Vec<f64>>, Vec<String>) {
+    let nn_run = |grid: Grid, sch: SchemePolicy, s: u64| {
+        let mut cfg = GdConfig::new(grid, sch, t_step, epochs);
         cfg.seed = s;
+        cfg.escape = ctx.escape;
         let mut e = GdEngine::new(cfg, &setup.nn, &setup.x0);
         let metric = |x: &[f64]| setup.nn.test_error(x, &setup.test);
         e.run(Some(&metric)).metric_series()
-    })
+    };
+    let labels: Vec<String> = cfgs.iter().map(|(n, _, _)| n.clone()).collect();
+    let seeds_per: Vec<usize> =
+        cfgs.iter().map(|(_, _, sch)| seeds_for(sch, ctx.seeds)).collect();
+    let master = |_ci: usize, s: u64| {
+        nn_run(FpFormat::BINARY64.into(), SchemePolicy::uniform(Scheme::rn()), s)
+    };
+    curves_flat(
+        exp,
+        &labels,
+        &seeds_per,
+        epochs,
+        ctx,
+        &|ci, s| {
+            let (_, fmt, sch) = &cfgs[ci];
+            nn_run(*fmt, *sch, s)
+        },
+        Some(&master),
+    )
 }
 
 /// Paper Figure 6a: NN scheme sweep for (8a)+(8b).
@@ -636,13 +810,16 @@ pub(crate) fn fig6a(ctx: &ExpCtx) -> Table {
         "NN (3 vs 8) test error, binary8, t=0.09375 (paper Fig. 6a)",
         &["epoch", "binary32", "RN", "SR", "SR_eps(0.2)", "SR_eps(0.4)"],
     );
-    let curves = nn_curves(&setup, &cfgs, t_step, ctx.nn_epochs, ctx.seeds, ctx.jobs);
+    let (curves, notes) = nn_curves("fig6a", &setup, &cfgs, t_step, ctx.nn_epochs, ctx);
     for k in 0..ctx.nn_epochs {
         let mut row: Vec<Cell> = vec![k.into()];
         for c in &curves {
             row.push(c[k].into());
         }
         t.row(row);
+    }
+    for n in notes {
+        t.note(n);
     }
     t.note(format!("seeds={} (paper: 20)", ctx.seeds));
     t
@@ -667,13 +844,16 @@ pub(crate) fn fig6b(ctx: &ExpCtx) -> Table {
         "NN (3 vs 8): signed-SReps for (8c) (paper Fig. 6b)",
         &names,
     );
-    let curves = nn_curves(&setup, &cfgs, t_step, ctx.nn_epochs, ctx.seeds, ctx.jobs);
+    let (curves, notes) = nn_curves("fig6b", &setup, &cfgs, t_step, ctx.nn_epochs, ctx);
     for k in 0..ctx.nn_epochs {
         let mut row: Vec<Cell> = vec![k.into()];
         for c in &curves {
             row.push(c[k].into());
         }
         t.row(row);
+    }
+    for n in notes {
+        t.note(n);
     }
     let target = *curves[0].last().unwrap();
     for (i, (name, _, _)) in cfgs.iter().enumerate().skip(1) {
@@ -870,12 +1050,23 @@ pub(crate) fn plfp1(ctx: &ExpCtx) -> Table {
         sub: Scheme::signed_sr_eps(0.25),
     };
     let cfgs = [rn_pol, sr_pol, sg_pol];
+    let labels: Vec<String> =
+        ["Q3.8_RN", "Q3.8_SR", "Q3.8_SR|signed(0.25)"].map(String::from).to_vec();
     let seeds_per: Vec<usize> = cfgs.iter().map(|sch| seeds_for(sch, ctx.seeds)).collect();
-    let curves = curves_flat(&seeds_per, ctx.jobs, &|ci, s| {
-        let mut cfg = GdConfig::new(fx, cfgs[ci], t_step, steps);
-        cfg.seed = s;
-        GdEngine::new(cfg, &p, &x0).run(None).objective_series()
-    });
+    let (curves, notes) = curves_flat(
+        "plfp1",
+        &labels,
+        &seeds_per,
+        steps,
+        ctx,
+        &|ci, s| {
+            let mut cfg = GdConfig::new(fx, cfgs[ci], t_step, steps);
+            cfg.seed = s;
+            cfg.escape = ctx.escape;
+            GdEngine::new(cfg, &p, &x0).run(None).objective_series()
+        },
+        None,
+    );
 
     let mut t = Table::new(
         "plfp1",
@@ -899,6 +1090,9 @@ pub(crate) fn plfp1(ctx: &ExpCtx) -> Table {
         theory::pl_rn_stagnation_gap(mu, t_step, fx.delta(), n),
         fx.delta(),
     ));
+    for n in notes {
+        t.note(n);
+    }
     t.note(format!("seeds={} (companion paper: 20)", ctx.seeds));
     t
 }
@@ -929,8 +1123,7 @@ pub(crate) fn plfp2(ctx: &ExpCtx) -> Table {
         cfgs,
         t_step,
         ctx.mlr_epochs,
-        ctx.seeds,
-        ctx.jobs,
+        ctx,
     );
     t.note("fixed-point analogue of fig4a/fig4b: uniform grid, saturating arithmetic");
     t
@@ -958,16 +1151,32 @@ pub(crate) fn plfp3(ctx: &ExpCtx) -> Table {
         grids.push((FixedPoint::q(3, f), rn_pol));
         grids.push((FixedPoint::q(3, f), sr_pol));
     }
+    let labels: Vec<String> = grids
+        .iter()
+        .map(|(fx, sch)| {
+            let mode = if sch.is_stochastic() { "SR" } else { "RN" };
+            format!("Q3.{}_{mode}", fx.frac_bits)
+        })
+        .collect();
     let seeds_per: Vec<usize> =
         grids.iter().map(|(_, sch)| seeds_for(sch, ctx.seeds)).collect();
-    let finals = curves_flat(&seeds_per, ctx.jobs, &|ci, s| {
-        let (fx, sch) = grids[ci];
-        let mut cfg = GdConfig::new(fx, sch, t_step, steps);
-        cfg.seed = s;
-        let mut e = GdEngine::new(cfg, &p, &x0);
-        e.run(None);
-        vec![p.objective(&e.x)] // the settled gap (f* = 0)
-    });
+    let (finals, notes) = curves_flat(
+        "plfp3",
+        &labels,
+        &seeds_per,
+        1,
+        ctx,
+        &|ci, s| {
+            let (fx, sch) = grids[ci];
+            let mut cfg = GdConfig::new(fx, sch, t_step, steps);
+            cfg.seed = s;
+            cfg.escape = ctx.escape;
+            let mut e = GdEngine::new(cfg, &p, &x0);
+            e.run(None);
+            vec![p.objective(&e.x)] // the settled gap (f* = 0)
+        },
+        None,
+    );
 
     let mut t = Table::new(
         "plfp3",
@@ -998,12 +1207,17 @@ pub(crate) fn plfp3(ctx: &ExpCtx) -> Table {
             "smallest frac_bits with SR limiting accuracy <= 1e-6: {fbits} (theory::frac_bits_for_target_gap)"
         ));
     }
+    for note in notes {
+        t.note(note);
+    }
     t.note(format!("n={n}, steps={steps}, seeds={} per stochastic cell", ctx.seeds));
     t
 }
 
 /// Shared learning-figure table builder (named-config × epochs grid),
-/// fanned out through [`curves_flat`].
+/// fanned out through [`curves_flat`]. The degrade fault policy falls a
+/// failed cell back to the binary64 + RN master (exact-arithmetic
+/// reference) of the same seed.
 #[allow(clippy::too_many_arguments)]
 fn learning_table(
     id: &str,
@@ -1012,18 +1226,32 @@ fn learning_table(
     cfgs: Vec<(String, Grid, SchemePolicy)>,
     t_step: f64,
     epochs: usize,
-    seeds: usize,
-    jobs: usize,
+    ctx: &ExpCtx,
 ) -> Table {
     let mut cols = vec!["epoch".to_string()];
     cols.extend(cfgs.iter().map(|(n, _, _)| n.clone()));
     let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new(id, title, &col_refs);
-    let seeds_per: Vec<usize> = cfgs.iter().map(|(_, _, sch)| seeds_for(sch, seeds)).collect();
-    let curves = curves_flat(&seeds_per, jobs, &|ci, s| {
-        let (_, fmt, sch) = &cfgs[ci];
-        mlr_cell(setup, *fmt, *sch, GradModel::RoundAfterOp, t_step, epochs, s)
-    });
+    let labels: Vec<String> = cfgs.iter().map(|(n, _, _)| n.clone()).collect();
+    let seeds_per: Vec<usize> =
+        cfgs.iter().map(|(_, _, sch)| seeds_for(sch, ctx.seeds)).collect();
+    let master = |_ci: usize, s: u64| {
+        let exact: Grid = FpFormat::BINARY64.into();
+        let rn = SchemePolicy::uniform(Scheme::rn());
+        mlr_cell(setup, exact, rn, GradModel::RoundAfterOp, t_step, epochs, s, ctx.escape)
+    };
+    let (curves, notes) = curves_flat(
+        id,
+        &labels,
+        &seeds_per,
+        epochs,
+        ctx,
+        &|ci, s| {
+            let (_, fmt, sch) = &cfgs[ci];
+            mlr_cell(setup, *fmt, *sch, GradModel::RoundAfterOp, t_step, epochs, s, ctx.escape)
+        },
+        Some(&master),
+    );
     for k in 0..epochs {
         let mut row: Vec<Cell> = vec![k.into()];
         for c in &curves {
@@ -1031,7 +1259,10 @@ fn learning_table(
         }
         t.row(row);
     }
-    t.note(format!("seeds={seeds} (paper: 20)"));
+    for n in notes {
+        t.note(n);
+    }
+    t.note(format!("seeds={} (paper: 20)", ctx.seeds));
     t
 }
 
@@ -1081,6 +1312,45 @@ mod tests {
     #[test]
     fn unknown_experiment_errors() {
         assert!(run_experiment("nope", &ExpCtx::quick()).is_err());
+    }
+
+    /// The journal digest covers exactly the knobs that shape a cell's
+    /// output: scheduling/selection knobs (jobs, seeds, fault policy) leave
+    /// it unchanged, cell-shaping knobs (sizes, escape guard) change it.
+    #[test]
+    fn config_digest_tracks_cell_shaping_knobs_only() {
+        let a = ExpCtx::quick();
+        let mut b = ExpCtx::quick();
+        b.jobs = 7;
+        b.seeds = 9;
+        b.max_retries = 3;
+        b.fault_policy = FaultPolicy::SkipCell;
+        assert_eq!(a.config_digest(), b.config_digest());
+        let mut c = ExpCtx::quick();
+        c.quad_steps += 1;
+        assert_ne!(a.config_digest(), c.config_digest());
+        let mut d = ExpCtx::quick();
+        d.escape = Some(0.0);
+        assert_ne!(a.config_digest(), d.config_digest());
+        let mut e = ExpCtx::quick();
+        e.escape = Some(1e9);
+        assert_ne!(d.config_digest(), e.config_digest());
+    }
+
+    /// A cell that panics under the fail-fast default aborts the experiment
+    /// with a clean error (not a process abort) carrying the panic text.
+    #[test]
+    fn fail_fast_surfaces_as_run_experiment_error() {
+        let mut ctx = ExpCtx::quick();
+        ctx.jobs = 1;
+        ctx.out_dir = std::env::temp_dir()
+            .join(format!("lpgd_ff_{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        ctx.injector = Some(Arc::new(FaultInjector::panic_at("plfp1", 0, u32::MAX)));
+        let err = run_experiment("plfp1", &ctx).unwrap_err().to_string();
+        assert!(err.contains("aborted") && err.contains("cell 0"), "{err}");
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
     }
 
     /// plfp1 at smoke scale: SR tracks the PL-SR bound, RN stagnates above

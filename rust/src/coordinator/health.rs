@@ -1,0 +1,172 @@
+//! Sweep-level fault machinery: what to do when a cell misbehaves.
+//!
+//! The per-run numeric counters live in [`crate::fp::RunHealth`] (fp layer);
+//! this module holds the *scheduling* side — the [`FaultPolicy`] chosen on
+//! the CLI, the per-cell [`CellOutcome`] the fault-aware scheduler reports,
+//! and the deterministic test-only [`FaultInjector`] that drives the
+//! crash/resume coverage. See `docs/robustness.md`.
+
+use std::any::Any;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// What a sweep does with a cell that still fails after every retry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultPolicy {
+    /// Abort the whole experiment with the cell's panic message (the
+    /// historic behavior, and the default).
+    #[default]
+    FailFast,
+    /// Drop the cell from the aggregate and note it in the fault report;
+    /// every healthy cell's contribution stays bit-identical.
+    SkipCell,
+    /// Replace the failed cell's series with the caller-supplied exact
+    /// (binary64 master) fallback, noted in the fault report.
+    Degrade,
+}
+
+impl FaultPolicy {
+    /// Parse a CLI spelling (`fail-fast` / `skip-cell` / `degrade`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fail-fast" => Some(Self::FailFast),
+            "skip-cell" => Some(Self::SkipCell),
+            "degrade" => Some(Self::Degrade),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling of this policy.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::FailFast => "fail-fast",
+            Self::SkipCell => "skip-cell",
+            Self::Degrade => "degrade",
+        }
+    }
+}
+
+/// How one cell of a fault-aware sweep ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CellOutcome {
+    /// First attempt succeeded.
+    Ok,
+    /// Succeeded after `n` retries (bit-identical to a first-try success:
+    /// a cell is a pure function of its identity-split RNG stream).
+    Retried(u32),
+    /// Every attempt panicked; `reason` is the last panic's message.
+    Failed(String),
+}
+
+impl CellOutcome {
+    /// Did the cell produce a value?
+    pub fn succeeded(&self) -> bool {
+        !matches!(self, CellOutcome::Failed(_))
+    }
+}
+
+/// Which failure the [`FaultInjector`] plants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectedFault {
+    /// Panic inside the cell closure (exercises `catch_unwind` + retry).
+    Panic,
+    /// Poison the cell's series with a NaN (exercises numeric-health
+    /// accounting downstream of a "successful" cell).
+    Nan,
+}
+
+/// Deterministic test-only fault injector: fires `times` times at one
+/// (experiment, cell-index) coordinate, then stays quiet. Thread-safe —
+/// the counter is atomic, so concurrent cells race benignly. Never
+/// constructed outside tests/CLI test hooks; sweeps run with `None`.
+#[derive(Debug)]
+pub struct FaultInjector {
+    exp: String,
+    index: usize,
+    kind: InjectedFault,
+    times: u32,
+    fired: AtomicU32,
+}
+
+impl FaultInjector {
+    /// An injector that panics the given cell of the given experiment
+    /// `times` consecutive attempts, then lets it through.
+    pub fn panic_at(exp: &str, index: usize, times: u32) -> Self {
+        let exp = exp.to_string();
+        Self { exp, index, kind: InjectedFault::Panic, times, fired: AtomicU32::new(0) }
+    }
+
+    /// An injector that NaN-poisons the given cell's output once.
+    pub fn nan_at(exp: &str, index: usize) -> Self {
+        Self { exp: exp.to_string(), index, kind: InjectedFault::Nan, times: 1, fired: AtomicU32::new(0) }
+    }
+
+    /// Called by the sweep from inside the cell closure: returns the fault
+    /// to inject for this attempt, or `None` to run the cell normally.
+    pub fn fire(&self, exp: &str, index: usize) -> Option<InjectedFault> {
+        if exp != self.exp || index != self.index {
+            return None;
+        }
+        if self.fired.fetch_add(1, Ordering::Relaxed) < self.times {
+            Some(self.kind)
+        } else {
+            None
+        }
+    }
+}
+
+/// Best-effort text of a `catch_unwind` payload: `&str` and `String`
+/// panics (everything `panic!` produces in this crate) are returned
+/// verbatim, anything else gets a placeholder.
+pub fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrips_labels() {
+        for p in [FaultPolicy::FailFast, FaultPolicy::SkipCell, FaultPolicy::Degrade] {
+            assert_eq!(FaultPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(FaultPolicy::parse("explode"), None);
+        assert_eq!(FaultPolicy::default(), FaultPolicy::FailFast);
+    }
+
+    #[test]
+    fn injector_fires_exactly_times_at_its_coordinate() {
+        let inj = FaultInjector::panic_at("sweep", 3, 2);
+        assert_eq!(inj.fire("sweep", 2), None); // wrong index
+        assert_eq!(inj.fire("other", 3), None); // wrong experiment
+        assert_eq!(inj.fire("sweep", 3), Some(InjectedFault::Panic));
+        assert_eq!(inj.fire("sweep", 3), Some(InjectedFault::Panic));
+        assert_eq!(inj.fire("sweep", 3), None); // budget exhausted
+        let nan = FaultInjector::nan_at("sweep", 0);
+        assert_eq!(nan.fire("sweep", 0), Some(InjectedFault::Nan));
+        assert_eq!(nan.fire("sweep", 0), None);
+    }
+
+    #[test]
+    fn panic_message_handles_both_string_kinds() {
+        let s: Box<dyn std::any::Any + Send> = Box::new("boom");
+        assert_eq!(panic_message(s.as_ref()), "boom");
+        let s: Box<dyn std::any::Any + Send> = Box::new(String::from("kaboom"));
+        assert_eq!(panic_message(s.as_ref()), "kaboom");
+        let s: Box<dyn std::any::Any + Send> = Box::new(42u32);
+        assert_eq!(panic_message(s.as_ref()), "non-string panic payload");
+    }
+
+    #[test]
+    fn outcome_success_predicate() {
+        assert!(CellOutcome::Ok.succeeded());
+        assert!(CellOutcome::Retried(1).succeeded());
+        assert!(!CellOutcome::Failed("x".into()).succeeded());
+    }
+}

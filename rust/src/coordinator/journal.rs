@@ -1,0 +1,459 @@
+//! Journaled checkpoint/resume for sweeps, and the fault-aware cell driver.
+//!
+//! A sweep cell is a pure function of its identity — experiment × config
+//! label × repetition, plus the run configuration — so its output can be
+//! checkpointed by identity and replayed on resume with **bit-identical**
+//! results. The journal is an append-only JSONL file: one line per
+//! completed cell, written atomically-enough (a single `write` + flush of a
+//! complete line) that a `kill -9` mid-sweep loses at most the in-flight
+//! cells; a truncated trailing line is detected and ignored on load.
+//!
+//! Line format (stable; see `docs/robustness.md`):
+//!
+//! ```text
+//! {"cell":"<16-hex cell_stream id>","digest":"<16-hex config digest>","outcome":"ok","series":[1.5,-0.25,...]}
+//! ```
+//!
+//! Series values are written with Rust's shortest round-trip `f64`
+//! formatting, so every finite value — subnormals and `-0.0` included —
+//! parses back to the identical bits. Non-finite values use the `inf` /
+//! `-inf` / `NaN` spellings `f64::from_str` accepts (strict JSON has no
+//! such tokens; the journal is a private format, not an interchange one).
+//!
+//! Resume loads only lines whose `digest` matches the current run
+//! configuration: a journal written under different grid/seed/size settings
+//! contributes nothing rather than corrupting the sweep.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::coordinator::health::{CellOutcome, FaultInjector, FaultPolicy, InjectedFault};
+use crate::coordinator::scheduler::{cell_stream, run_indexed_faulted};
+
+/// An append-only cell-result journal backing `--journal PATH --resume`.
+#[derive(Debug)]
+pub struct Journal {
+    path: PathBuf,
+    digest: u64,
+    file: Mutex<File>,
+    seen: HashMap<u64, Vec<f64>>,
+}
+
+impl Journal {
+    /// Open (or create) the journal at `path` under config `digest`.
+    /// With `resume`, previously journaled cells whose digest matches are
+    /// loaded for replay and new lines are appended; without it, any
+    /// existing file is truncated and the sweep starts clean.
+    pub fn open(path: &Path, resume: bool, digest: u64) -> std::io::Result<Self> {
+        let mut seen = HashMap::new();
+        if resume && path.exists() {
+            let reader = BufReader::new(File::open(path)?);
+            for line in reader.lines() {
+                // An unreadable tail (or a torn final line, caught by the
+                // parser) ends the replay; everything before it is intact.
+                let Ok(line) = line else { break };
+                if let Some((cell, d, series)) = parse_line(&line) {
+                    if d == digest {
+                        seen.insert(cell, series);
+                    }
+                }
+            }
+        }
+        let mut opts = OpenOptions::new();
+        opts.create(true);
+        if resume {
+            opts.append(true);
+        } else {
+            opts.write(true).truncate(true);
+        }
+        let file = opts.open(path)?;
+        Ok(Self { path: path.to_path_buf(), digest, file: Mutex::new(file), seen })
+    }
+
+    /// The journal's on-disk location.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Number of completed cells loaded at open time (0 unless resuming).
+    pub fn resumed_cells(&self) -> usize {
+        self.seen.len()
+    }
+
+    /// The journaled series for a cell id, if that cell already completed
+    /// under the current config digest.
+    pub fn lookup(&self, cell: u64) -> Option<Vec<f64>> {
+        self.seen.get(&cell).cloned()
+    }
+
+    /// Append one completed cell. Called from worker threads as cells
+    /// finish; each line is built in full and written with a single
+    /// `write_all` so a concurrent kill cannot interleave torn halves of
+    /// two cells. Write errors are reported on stderr but do not fail the
+    /// sweep (the journal is a recovery aid, not the result channel).
+    pub fn append(&self, cell: u64, series: &[f64]) {
+        let mut line = format!(
+            "{{\"cell\":\"{cell:016x}\",\"digest\":\"{:016x}\",\"outcome\":\"ok\",\"series\":[",
+            self.digest
+        );
+        for (k, v) in series.iter().enumerate() {
+            if k > 0 {
+                line.push(',');
+            }
+            line.push_str(&format!("{v}"));
+        }
+        line.push_str("]}\n");
+        let mut f = self.file.lock().unwrap_or_else(|e| e.into_inner());
+        if let Err(e) = f.write_all(line.as_bytes()).and_then(|()| f.flush()) {
+            eprintln!("warning: journal write failed ({}): {e}", self.path.display());
+        }
+    }
+}
+
+/// Parse one journal line into (cell id, config digest, series). Returns
+/// `None` — the line is skipped — for anything malformed, including a line
+/// torn by a mid-write kill (missing `]}` tail).
+fn parse_line(line: &str) -> Option<(u64, u64, Vec<f64>)> {
+    let cell = hex_field(line, "\"cell\":\"")?;
+    let digest = hex_field(line, "\"digest\":\"")?;
+    let tag = "\"series\":[";
+    let start = line.find(tag)? + tag.len();
+    let end = line[start..].find(']')? + start;
+    if line[end + 1..].trim_end() != "}" {
+        return None;
+    }
+    let body = line[start..end].trim();
+    let mut series = Vec::new();
+    if !body.is_empty() {
+        for tok in body.split(',') {
+            series.push(tok.trim().parse::<f64>().ok()?);
+        }
+    }
+    Some((cell, digest, series))
+}
+
+fn hex_field(line: &str, tag: &str) -> Option<u64> {
+    let start = line.find(tag)? + tag.len();
+    let end = line[start..].find('"')? + start;
+    u64::from_str_radix(&line[start..end], 16).ok()
+}
+
+/// Fault-handling context of one sweep, distilled from the experiment
+/// context (journal, injector, policy, retry budget, worker count).
+pub struct SweepFaults<'a> {
+    /// Worker threads (0 = auto), as for `run_indexed`.
+    pub jobs: usize,
+    /// Extra attempts per cell before a panic becomes `Failed`.
+    pub max_retries: u32,
+    /// What a terminally failed cell does to the sweep.
+    pub policy: FaultPolicy,
+    /// Checkpoint/resume journal, when `--journal` is active.
+    pub journal: Option<&'a Journal>,
+    /// Deterministic test-only fault injector.
+    pub injector: Option<&'a FaultInjector>,
+}
+
+impl SweepFaults<'_> {
+    /// A plain sweep: no journal, no injector, fail-fast, no retries.
+    pub fn none(jobs: usize) -> Self {
+        Self { jobs, max_retries: 0, policy: FaultPolicy::FailFast, journal: None, injector: None }
+    }
+}
+
+/// Run one sweep of `cells` (each a `(config label, repetition)` identity)
+/// through the fault-aware scheduler with journaling.
+///
+/// Per cell, in order: (1) if the journal already holds its series under
+/// the current digest, replay it without running anything; (2) otherwise
+/// run it under `catch_unwind` with up to `max_retries` deterministic
+/// retries, journaling the series the moment the cell completes; (3) a
+/// terminally failed cell is resolved by the [`FaultPolicy`] — fail-fast
+/// panics the sweep (caught at the experiment boundary), skip-cell leaves
+/// `None` in its slot, degrade substitutes `master(i)` (the exact-arithmetic
+/// fallback) when one is supplied. Healthy cells are bit-identical under
+/// every policy, any `jobs`, and any kill/resume split — they always run
+/// the same pure function of the same identity.
+///
+/// Returns the per-cell series (index-aligned with `cells`; `None` only for
+/// skipped cells) and human-readable fault notes for the sweep report.
+pub fn sweep_cells(
+    exp: &str,
+    faults: &SweepFaults<'_>,
+    cells: &[(String, u64)],
+    run: &(dyn Fn(usize) -> Vec<f64> + Sync),
+    master: Option<&(dyn Fn(usize) -> Vec<f64> + Sync)>,
+) -> (Vec<Option<Vec<f64>>>, Vec<String>) {
+    let n = cells.len();
+    let keys: Vec<u64> =
+        cells.iter().map(|(label, rep)| cell_stream(exp, label, *rep)).collect();
+    let mut values: Vec<Option<Vec<f64>>> = vec![None; n];
+    let mut notes = Vec::new();
+    // (1) Replay journaled cells.
+    let mut todo: Vec<usize> = Vec::new();
+    for i in 0..n {
+        match faults.journal.and_then(|j| j.lookup(keys[i])) {
+            Some(series) => values[i] = Some(series),
+            None => todo.push(i),
+        }
+    }
+    if todo.len() < n {
+        notes.push(format!("{exp}: resumed {} of {n} cells from journal", n - todo.len()));
+    }
+    // (2) Fault-aware execution of the remainder.
+    let wrapped = |t: usize| -> Vec<f64> {
+        let i = todo[t];
+        match faults.injector.and_then(|inj| inj.fire(exp, i)) {
+            Some(InjectedFault::Panic) => panic!("injected fault: {exp} cell {i}"),
+            Some(InjectedFault::Nan) => {
+                let mut v = run(i);
+                if let Some(x) = v.first_mut() {
+                    *x = f64::NAN;
+                }
+                v
+            }
+            None => run(i),
+        }
+    };
+    let runs = run_indexed_faulted(faults.jobs, todo.len(), faults.max_retries, wrapped, |t, r| {
+        if let (Some(j), Some(v)) = (faults.journal, &r.value) {
+            j.append(keys[todo[t]], v);
+        }
+    });
+    // (3) Resolve outcomes under the fault policy.
+    for (t, r) in runs.into_iter().enumerate() {
+        let i = todo[t];
+        let (label, rep) = &cells[i];
+        match r.outcome {
+            CellOutcome::Ok => values[i] = r.value,
+            CellOutcome::Retried(k) => {
+                notes.push(format!("{exp}: cell {i} ({label}, rep {rep}) recovered on retry {k}"));
+                values[i] = r.value;
+            }
+            CellOutcome::Failed(reason) => match faults.policy {
+                FaultPolicy::FailFast => panic!(
+                    "{exp}: cell {i} ({label}, rep {rep}) failed after {} retries: {reason}",
+                    faults.max_retries
+                ),
+                FaultPolicy::SkipCell => {
+                    notes.push(format!(
+                        "{exp}: cell {i} ({label}, rep {rep}) failed, skipped: {reason}"
+                    ));
+                }
+                FaultPolicy::Degrade => {
+                    if let Some(m) = master {
+                        values[i] = Some(m(i));
+                        notes.push(format!(
+                            "{exp}: cell {i} ({label}, rep {rep}) failed, \
+                             degraded to exact master: {reason}"
+                        ));
+                    } else {
+                        notes.push(format!(
+                            "{exp}: cell {i} ({label}, rep {rep}) failed, no master \
+                             fallback available, skipped: {reason}"
+                        ));
+                    }
+                }
+            },
+        }
+    }
+    (values, notes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("lpgd_journal_{}_{tag}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn series_roundtrip_is_bit_exact() {
+        let path = tmp_path("roundtrip");
+        let series = vec![
+            1.5,
+            -0.25,
+            0.0,
+            -0.0,
+            f64::MIN_POSITIVE,
+            5e-324, // subnormal
+            1.0 / 3.0,
+            -1024.0,
+            f64::MAX,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ];
+        {
+            let j = Journal::open(&path, false, 0xabcd).unwrap();
+            j.append(7, &series);
+            j.append(9, &[]);
+        }
+        let j = Journal::open(&path, true, 0xabcd).unwrap();
+        assert_eq!(j.resumed_cells(), 2);
+        let got = j.lookup(7).unwrap();
+        assert_eq!(got.len(), series.len());
+        for (a, b) in got.iter().zip(&series) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        assert_eq!(j.lookup(9), Some(vec![]));
+        assert_eq!(j.lookup(8), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_final_line_and_foreign_digest_are_ignored() {
+        let path = tmp_path("torn");
+        {
+            let j = Journal::open(&path, false, 1).unwrap();
+            j.append(1, &[1.0, 2.0]);
+        }
+        // A cell journaled under another config digest...
+        {
+            let j = Journal::open(&path, true, 2).unwrap();
+            j.append(5, &[9.0]);
+        }
+        // ...and a torn trailing line from a mid-write kill.
+        {
+            use std::io::Write as _;
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"cell\":\"0000000000000003\",\"digest\":\"0000000000000001\",\"outcome\":\"ok\",\"series\":[4.0,5").unwrap();
+        }
+        let j = Journal::open(&path, true, 1).unwrap();
+        assert_eq!(j.lookup(1), Some(vec![1.0, 2.0]));
+        assert_eq!(j.lookup(5), None, "foreign digest must not replay");
+        assert_eq!(j.lookup(3), None, "torn line must not replay");
+        assert_eq!(j.resumed_cells(), 1);
+        // Garbage lines don't parse either.
+        assert_eq!(parse_line("not json at all"), None);
+        assert_eq!(parse_line(""), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_without_resume_truncates() {
+        let path = tmp_path("truncate");
+        {
+            let j = Journal::open(&path, false, 3).unwrap();
+            j.append(11, &[1.0]);
+        }
+        {
+            let j = Journal::open(&path, false, 3).unwrap();
+            assert_eq!(j.resumed_cells(), 0);
+            assert_eq!(j.lookup(11), None);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn sweep_replays_journaled_cells_without_running_them() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let path = tmp_path("sweep");
+        let cells: Vec<(String, u64)> =
+            (0..6).map(|r| ("cfg".to_string(), r as u64)).collect();
+        let run = |i: usize| vec![i as f64, (i * i) as f64];
+        // First pass: everything runs and is journaled.
+        let (first, ran_first) = {
+            let j = Journal::open(&path, false, 77).unwrap();
+            let count = AtomicUsize::new(0);
+            let faults = SweepFaults { journal: Some(&j), ..SweepFaults::none(1) };
+            let (v, _) = sweep_cells(
+                "jexp",
+                &faults,
+                &cells,
+                &|i| {
+                    count.fetch_add(1, Ordering::Relaxed);
+                    run(i)
+                },
+                None,
+            );
+            (v, count.load(Ordering::Relaxed))
+        };
+        assert_eq!(ran_first, 6);
+        // Second pass under --resume: zero cells run, values bit-identical.
+        let j = Journal::open(&path, true, 77).unwrap();
+        assert_eq!(j.resumed_cells(), 6);
+        let count = AtomicUsize::new(0);
+        let faults = SweepFaults { journal: Some(&j), ..SweepFaults::none(1) };
+        let (second, notes) = sweep_cells(
+            "jexp",
+            &faults,
+            &cells,
+            &|i| {
+                count.fetch_add(1, Ordering::Relaxed);
+                run(i)
+            },
+            None,
+        );
+        assert_eq!(count.load(Ordering::Relaxed), 0);
+        assert_eq!(first, second);
+        assert!(notes.iter().any(|s| s.contains("resumed 6 of 6")), "{notes:?}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn policies_resolve_a_terminally_failing_cell() {
+        let cells: Vec<(String, u64)> = (0..4).map(|r| ("c".to_string(), r)).collect();
+        let run = |i: usize| vec![i as f64];
+        // skip-cell: hole at the failed index, siblings intact.
+        let inj = FaultInjector::panic_at("pexp", 2, u32::MAX);
+        let faults = SweepFaults {
+            policy: FaultPolicy::SkipCell,
+            max_retries: 1,
+            injector: Some(&inj),
+            ..SweepFaults::none(1)
+        };
+        let (v, notes) = sweep_cells("pexp", &faults, &cells, &run, None);
+        assert_eq!(v[2], None);
+        for i in [0usize, 1, 3] {
+            assert_eq!(v[i], Some(vec![i as f64]));
+        }
+        assert!(notes.iter().any(|s| s.contains("cell 2") && s.contains("skipped")), "{notes:?}");
+        // degrade: the master fallback fills the hole.
+        let inj = FaultInjector::panic_at("pexp", 2, u32::MAX);
+        let faults = SweepFaults {
+            policy: FaultPolicy::Degrade,
+            injector: Some(&inj),
+            ..SweepFaults::none(1)
+        };
+        let (v, notes) =
+            sweep_cells("pexp", &faults, &cells, &run, Some(&|i| vec![100.0 + i as f64]));
+        assert_eq!(v[2], Some(vec![102.0]));
+        assert!(notes.iter().any(|s| s.contains("degraded")), "{notes:?}");
+        // retry beats a transient fault: no holes, a recovery note instead.
+        let inj = FaultInjector::panic_at("pexp", 2, 1);
+        let faults =
+            SweepFaults { max_retries: 2, injector: Some(&inj), ..SweepFaults::none(1) };
+        let (v, notes) = sweep_cells("pexp", &faults, &cells, &run, None);
+        assert_eq!(v[2], Some(vec![2.0]));
+        assert!(notes.iter().any(|s| s.contains("recovered on retry 1")), "{notes:?}");
+    }
+
+    #[test]
+    fn fail_fast_policy_panics_the_sweep() {
+        let cells: Vec<(String, u64)> = (0..2).map(|r| ("c".to_string(), r)).collect();
+        let inj = FaultInjector::panic_at("fexp", 1, u32::MAX);
+        let faults = SweepFaults { injector: Some(&inj), ..SweepFaults::none(1) };
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sweep_cells("fexp", &faults, &cells, &|i| vec![i as f64], None)
+        }))
+        .unwrap_err();
+        let msg = crate::coordinator::health::panic_message(err.as_ref());
+        assert!(msg.contains("cell 1") && msg.contains("failed after 0 retries"), "{msg}");
+    }
+
+    #[test]
+    fn nan_injection_poisons_the_series_without_failing() {
+        let cells: Vec<(String, u64)> = (0..3).map(|r| ("c".to_string(), r)).collect();
+        let inj = FaultInjector::nan_at("nexp", 1);
+        let faults = SweepFaults { injector: Some(&inj), ..SweepFaults::none(1) };
+        let (v, notes) = sweep_cells("nexp", &faults, &cells, &|i| vec![i as f64, 1.0], None);
+        assert!(v[1].as_ref().unwrap()[0].is_nan());
+        assert_eq!(v[1].as_ref().unwrap()[1], 1.0);
+        assert_eq!(v[0], Some(vec![0.0, 1.0]));
+        assert!(notes.is_empty(), "{notes:?}");
+    }
+}

@@ -13,14 +13,21 @@
 //! * [`experiments`] — the builder functions themselves plus the shared
 //!   [`experiments::ExpCtx`] knobs;
 //! * [`aggregate`] — the multi-seed expectation/variance estimator the
-//!   cells merge through.
+//!   cells merge through;
+//! * [`health`] + [`journal`] — the fault-tolerance layer: per-cell fault
+//!   policies, panic-isolated retry, and the append-only checkpoint/resume
+//!   journal behind `--journal` / `--resume` (see `docs/robustness.md`).
 
 pub mod aggregate;
 pub mod experiments;
+pub mod health;
+pub mod journal;
 pub mod registry;
 pub mod scheduler;
 
-pub use aggregate::{expectation, expectation_jobs, ExpectationResult};
+pub use aggregate::{expectation, expectation_jobs, expectation_sweep, ExpectationResult};
 pub use experiments::{list_experiments, run_experiment, ExpCtx};
+pub use health::{CellOutcome, FaultInjector, FaultPolicy, InjectedFault};
+pub use journal::{sweep_cells, Journal, SweepFaults};
 pub use registry::{ExperimentSpec, REGISTRY};
-pub use scheduler::{cell_stream, resolve_jobs, run_indexed};
+pub use scheduler::{cell_stream, resolve_jobs, run_indexed, run_indexed_faulted, CellRun};

@@ -11,6 +11,13 @@
 //! ([`crate::gd::SchemePolicy`] over [`crate::fp::Scheme`] handles), so an
 //! experiment can sweep any scheme registered with
 //! [`crate::fp::SchemeRegistry`], not just the paper's built-ins.
+//!
+//! Fault tolerance is layered around the registry, not into it: builders
+//! remain plain `fn(&ExpCtx) -> Vec<Table>` and pick up journaling, retry
+//! and fault policies from the [`ExpCtx`] they receive, while
+//! [`crate::coordinator::run_experiment`] wraps every builder invocation in
+//! a panic boundary so one aborting experiment cannot take down a multi-id
+//! `lpgd reproduce` invocation (see `docs/robustness.md`).
 
 use crate::coordinator::experiments::{self, ExpCtx};
 use crate::util::table::Table;

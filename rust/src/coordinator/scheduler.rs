@@ -22,8 +22,11 @@
 //! plumbing. Cells are coarse (one GD run: 10³–10⁶ rounded operations), so
 //! a single atomic fetch-add per cell is negligible scheduling overhead.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+use crate::coordinator::health::{panic_message, CellOutcome};
 
 /// Number of worker threads the machine can usefully run (≥ 1).
 pub fn available_jobs() -> usize {
@@ -85,12 +88,108 @@ where
                     }
                     local.push((i, f(i)));
                 }
-                done.lock().unwrap().append(&mut local);
+                // A panicking sibling poisons the mutex, but the data it
+                // guards is a plain append-only buffer — every pair already
+                // in it is complete. Recover the guard and keep merging, so
+                // one bad cell cannot discard its siblings' finished work.
+                done.lock().unwrap_or_else(|e| e.into_inner()).append(&mut local);
             });
         }
     });
-    let mut pairs = done.into_inner().unwrap();
-    debug_assert_eq!(pairs.len(), n);
+    let mut pairs = done.into_inner().unwrap_or_else(|e| e.into_inner());
+    assert_eq!(
+        pairs.len(),
+        n,
+        "scheduler lost cells: merged {} of {n} (a worker died without reporting)",
+        pairs.len()
+    );
+    pairs.sort_unstable_by_key(|&(i, _)| i);
+    pairs.into_iter().map(|(_, t)| t).collect()
+}
+
+/// One cell's result under the fault-aware scheduler: the value (when any
+/// attempt succeeded) plus how it was obtained.
+#[derive(Debug, Clone)]
+pub struct CellRun<T> {
+    /// The cell's value; `None` iff `outcome` is [`CellOutcome::Failed`].
+    pub value: Option<T>,
+    /// First-try success, retried success, or exhausted failure.
+    pub outcome: CellOutcome,
+}
+
+/// Fault-aware [`run_indexed`]: each cell runs under
+/// [`std::panic::catch_unwind`] and is retried up to `retries` extra times
+/// before being reported as [`CellOutcome::Failed`]. Because a cell is a
+/// pure function of its index (the determinism contract above), a retry
+/// re-executes the *identical* computation — a transient fault's successful
+/// retry is bit-identical to a first-try success. `on_done(i, &run)` fires
+/// once per cell as it completes (on the worker thread, completion order),
+/// which is the journaling hook: a kill between calls loses at most the
+/// in-flight cells. The returned vector is index-ordered as always.
+///
+/// Panic isolation note: `catch_unwind` stops the unwind at the cell
+/// boundary, so sibling cells, the worker loop, and the result mutex all
+/// survive a panicking cell — the caller decides what a `Failed` cell does
+/// to the sweep via [`crate::coordinator::health::FaultPolicy`].
+pub fn run_indexed_faulted<T, F, D>(
+    jobs: usize,
+    n: usize,
+    retries: u32,
+    f: F,
+    on_done: D,
+) -> Vec<CellRun<T>>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+    D: Fn(usize, &CellRun<T>) + Sync,
+{
+    let attempt = |i: usize| -> CellRun<T> {
+        let mut last = String::new();
+        for try_no in 0..=retries {
+            match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                Ok(v) => {
+                    let outcome =
+                        if try_no == 0 { CellOutcome::Ok } else { CellOutcome::Retried(try_no) };
+                    return CellRun { value: Some(v), outcome };
+                }
+                Err(payload) => last = panic_message(payload.as_ref()),
+            }
+        }
+        CellRun { value: None, outcome: CellOutcome::Failed(last) }
+    };
+    let run_one = |i: usize| -> CellRun<T> {
+        let r = attempt(i);
+        on_done(i, &r);
+        r
+    };
+    let jobs = resolve_jobs(jobs).min(n.max(1));
+    if jobs <= 1 || n <= 1 {
+        return (0..n).map(run_one).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, CellRun<T>)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| {
+                let mut local = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, run_one(i)));
+                }
+                done.lock().unwrap_or_else(|e| e.into_inner()).append(&mut local);
+            });
+        }
+    });
+    let mut pairs = done.into_inner().unwrap_or_else(|e| e.into_inner());
+    assert_eq!(
+        pairs.len(),
+        n,
+        "scheduler lost cells: merged {} of {n} (a worker died without reporting)",
+        pairs.len()
+    );
     pairs.sort_unstable_by_key(|&(i, _)| i);
     pairs.into_iter().map(|(_, t)| t).collect()
 }
@@ -168,5 +267,112 @@ mod tests {
         assert_eq!(serial, parallel);
         // Distinct cells genuinely follow distinct trajectories.
         assert_ne!(serial[0], serial[1]);
+    }
+
+    /// A panic-always cell is isolated: the sweep completes, the bad cell
+    /// reports `Failed` with its panic message, and every sibling's value is
+    /// bit-identical to a fault-free run — at jobs=1 and jobs=4.
+    #[test]
+    fn faulted_sweep_isolates_a_panicking_cell() {
+        use crate::coordinator::health::FaultInjector;
+        let clean = run_indexed(1, 12, |i| i * 10);
+        for jobs in [1usize, 4] {
+            let inj = FaultInjector::panic_at("t", 5, u32::MAX);
+            let out = run_indexed_faulted(
+                jobs,
+                12,
+                1,
+                |i| {
+                    if inj.fire("t", i).is_some() {
+                        panic!("injected fault at cell {i}");
+                    }
+                    i * 10
+                },
+                |_, _| {},
+            );
+            assert_eq!(out.len(), 12);
+            for (i, run) in out.iter().enumerate() {
+                if i == 5 {
+                    assert_eq!(run.value, None);
+                    match &run.outcome {
+                        CellOutcome::Failed(msg) => {
+                            assert!(msg.contains("injected fault at cell 5"), "{msg}")
+                        }
+                        o => panic!("expected Failed, got {o:?}"),
+                    }
+                } else {
+                    assert_eq!(run.value, Some(clean[i]), "jobs={jobs} cell={i}");
+                    assert_eq!(run.outcome, CellOutcome::Ok);
+                }
+            }
+        }
+    }
+
+    /// A transient fault (panics once, then succeeds) is retried and the
+    /// retried value is bit-identical to a first-try success; with zero
+    /// retries the same cell stays `Failed`.
+    #[test]
+    fn retry_makes_a_transient_fault_bit_identical() {
+        use crate::coordinator::health::FaultInjector;
+        let cell = |i: usize| -> u64 {
+            // A "real" cell: value derives only from the identity stream.
+            let mut rng = Rng::new(7).split(cell_stream("retry", "SR", i as u64));
+            rng.next_u64()
+        };
+        let clean: Vec<u64> = (0..6).map(cell).collect();
+        let inj = FaultInjector::panic_at("retry", 3, 1);
+        let out = run_indexed_faulted(
+            2,
+            6,
+            2,
+            |i| {
+                if inj.fire("retry", i).is_some() {
+                    panic!("transient");
+                }
+                cell(i)
+            },
+            |_, _| {},
+        );
+        for (i, run) in out.iter().enumerate() {
+            assert_eq!(run.value, Some(clean[i]), "cell {i}");
+            let want = if i == 3 { CellOutcome::Retried(1) } else { CellOutcome::Ok };
+            assert_eq!(run.outcome, want);
+        }
+        // No retry budget: the transient fault is terminal.
+        let inj0 = FaultInjector::panic_at("retry", 3, 1);
+        let out0 = run_indexed_faulted(
+            1,
+            6,
+            0,
+            |i| {
+                if inj0.fire("retry", i).is_some() {
+                    panic!("transient");
+                }
+                cell(i)
+            },
+            |_, _| {},
+        );
+        assert!(!out0[3].outcome.succeeded());
+        assert!(out0.iter().enumerate().all(|(i, r)| i == 3 || r.outcome == CellOutcome::Ok));
+    }
+
+    /// The `on_done` hook fires exactly once per cell with the final
+    /// outcome — the journaling contract.
+    #[test]
+    fn on_done_fires_once_per_cell() {
+        let seen = Mutex::new(Vec::new());
+        let out = run_indexed_faulted(
+            4,
+            9,
+            0,
+            |i| i + 1,
+            |i, run: &CellRun<usize>| {
+                seen.lock().unwrap().push((i, run.value));
+            },
+        );
+        assert_eq!(out.len(), 9);
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..9).map(|i| (i, Some(i + 1))).collect::<Vec<_>>());
     }
 }

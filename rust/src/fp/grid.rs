@@ -337,6 +337,17 @@ impl Grid {
             Grid::Fixed(_) => 0.5,
         }
     }
+
+    /// Is `x` inside the finite representable range
+    /// `[min_value, max_value]` of this grid? A value outside it either
+    /// saturates (clamps to the nearer endpoint — every mode on a fixed
+    /// grid, directed/stochastic modes on a float grid) or overflows to
+    /// `±∞` (float RN). Non-finite `x` (±∞, NaN) is out of range. This is
+    /// the predicate the [`crate::fp::round::RunHealth`] saturation
+    /// counter keys on.
+    pub fn in_range(&self, x: f64) -> bool {
+        x >= NumberGrid::min_value(self) && x <= NumberGrid::max_value(self)
+    }
 }
 
 impl NumberGrid for Grid {
@@ -502,5 +513,21 @@ mod tests {
         assert_eq!(Grid::from(&FpFormat::BINARY8), f);
         assert_eq!(Grid::from(&g), g);
         assert_ne!(f, g);
+    }
+
+    #[test]
+    fn in_range_matches_the_saturation_endpoints() {
+        let q: Grid = Q2_3.into();
+        assert!(q.in_range(0.0) && q.in_range(3.875) && q.in_range(-4.0));
+        assert!(!q.in_range(3.9) && !q.in_range(-4.1));
+        let f: Grid = FpFormat::BINARY8.into();
+        let xmax = FpFormat::BINARY8.x_max();
+        assert!(f.in_range(xmax) && f.in_range(-xmax) && f.in_range(1.0));
+        assert!(!f.in_range(xmax * 1.01));
+        for g in [q, f] {
+            assert!(!g.in_range(f64::INFINITY));
+            assert!(!g.in_range(f64::NEG_INFINITY));
+            assert!(!g.in_range(f64::NAN));
+        }
     }
 }

@@ -29,7 +29,7 @@
 //! [`dot_auto`] encodes this contract; `docs/performance.md` spells it out.
 
 use super::rng::Rng;
-use super::round::RoundPlan;
+use super::round::{RoundPlan, RunHealth};
 use super::scheme::Scheme;
 
 /// Accumulator-rounding granularity of the *absorption* (low-precision
@@ -265,6 +265,66 @@ pub fn gd_update(
     moved
 }
 
+/// [`gd_update`] with numeric-health accounting: bit-identical iterates and
+/// RNG streams (it calls the very same fused slice rounders on the very same
+/// intermediates), plus a [`RoundPlan::classify`] pass over each rounding
+/// site. Pre-rounding values are *recomputed* from inputs the kernel has not
+/// yet overwritten — `t·ĝᵢ` for (8b) and `x̂ᵢ − mᵢ` for (8c), both the exact
+/// same f64 operations the kernel performed — so no snapshot buffer and no
+/// allocation is needed on the hot path.
+#[allow(clippy::too_many_arguments)]
+pub fn gd_update_health(
+    plan: &RoundPlan,
+    mul_mode: Scheme,
+    sub_mode: Scheme,
+    t: f64,
+    x: &mut [f64],
+    ghat: &[f64],
+    mbuf: &mut [f64],
+    vneg: &mut [f64],
+    zbuf: &mut [f64],
+    rng_mul: &mut Rng,
+    rng_sub: &mut Rng,
+    health: &mut RunHealth,
+) -> bool {
+    debug_assert!(
+        x.len() == ghat.len()
+            && x.len() == mbuf.len()
+            && x.len() == vneg.len()
+            && x.len() == zbuf.len()
+    );
+    // (8b), same staging as `gd_update`.
+    for (m, &g) in mbuf.iter_mut().zip(ghat) {
+        *m = t * g;
+    }
+    if mul_mode.uses_steering() {
+        for (v, &g) in vneg.iter_mut().zip(ghat) {
+            *v = -g;
+        }
+    }
+    plan.round_slice_scheme_with(mul_mode, mbuf, vneg, rng_mul);
+    for (&m, &g) in mbuf.iter().zip(ghat) {
+        plan.classify(t * g, m, health);
+    }
+    // (8c): x is untouched until the commit loop below, so `x̂ᵢ − mᵢ` is
+    // still recomputable after the rounding pass.
+    for ((z, &xi), &m) in zbuf.iter_mut().zip(x.iter()).zip(mbuf.iter()) {
+        *z = xi - m;
+    }
+    plan.round_slice_scheme_with(sub_mode, zbuf, ghat, rng_sub);
+    for ((&z, &xi), &m) in zbuf.iter().zip(x.iter()).zip(mbuf.iter()) {
+        plan.classify(xi - m, z, health);
+    }
+    let mut moved = false;
+    for (xi, &z) in x.iter_mut().zip(zbuf.iter()) {
+        if z != *xi {
+            moved = true;
+        }
+        *xi = z;
+    }
+    moved
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -448,5 +508,46 @@ mod tests {
         );
         assert!(moved);
         assert!(xs.iter().all(|&v| B8.contains(v)));
+    }
+
+    /// The health-instrumented update is a pure observer: iterates, `moved`
+    /// flag, and both RNG streams are bit-identical to the plain kernel, for
+    /// a deterministic and a stochastic (steered) mode pairing.
+    #[test]
+    fn gd_update_health_is_a_pure_observer() {
+        let n = 57;
+        let plan = RoundPlan::new(B8);
+        let ghat = rand_vec(n, 21, 1.0);
+        let x0: Vec<f64> = {
+            let mut v = rand_vec(n, 22, 1.0);
+            plan.round_slice(Rounding::RoundNearestEven, &mut v, &mut Rng::new(0));
+            v
+        };
+        let pairings = [
+            (Rounding::RoundTowardZero.scheme(), Rounding::RoundNearestEven.scheme()),
+            (Rounding::Sr.scheme(), Rounding::SignedSrEps(0.25).scheme()),
+        ];
+        for (mul_mode, sub_mode) in pairings {
+            let (mut m, mut vneg, mut z) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+            let mut xa = x0.clone();
+            let (mut ra_mul, mut ra_sub) = (Rng::new(5), Rng::new(6));
+            let moved_a = gd_update(
+                &plan, mul_mode, sub_mode, 0.5, &mut xa, &ghat, &mut m, &mut vneg, &mut z,
+                &mut ra_mul, &mut ra_sub,
+            );
+            let mut xb = x0.clone();
+            let (mut rb_mul, mut rb_sub) = (Rng::new(5), Rng::new(6));
+            let mut health = RunHealth::default();
+            let moved_b = gd_update_health(
+                &plan, mul_mode, sub_mode, 0.5, &mut xb, &ghat, &mut m, &mut vneg, &mut z,
+                &mut rb_mul, &mut rb_sub, &mut health,
+            );
+            assert_eq!(xa, xb);
+            assert_eq!(moved_a, moved_b);
+            assert_eq!(ra_mul.next_u64(), rb_mul.next_u64());
+            assert_eq!(ra_sub.next_u64(), rb_sub.next_u64());
+            // Well-scaled inputs on binary8: no overflow, no NaN.
+            assert_eq!(health.nan_inf, 0);
+        }
     }
 }

@@ -21,6 +21,6 @@ pub use linalg::LpCtx;
 pub use rng::{BitBlock, Rng};
 pub use round::{
     expected_round, phi, round, round_slice, round_slice_with, round_with, RoundPlan, Rounding,
-    DEFAULT_SR_BITS,
+    RunHealth, DEFAULT_SR_BITS,
 };
 pub use scheme::{RoundingScheme, Scheme, SchemeError, SchemeRegistry};

@@ -947,6 +947,114 @@ impl RoundPlan {
     }
 }
 
+// ------------------------------------------------------ numeric health --
+//
+// The paper's failure modes — saturation at the grid edge, vanishing
+// updates, overflow to ±∞ — made observable at runtime. A rounding site is
+// classified from its *transition* `before → after` (the exact value in
+// and the grid value out), so the counters are a pure function of the
+// trajectory and never perturb it: deterministic runs stay bit-identical
+// with or without monitoring.
+
+/// Counters of numerically notable events along one run (or one slice):
+/// the observability half of the fault-tolerance layer (see
+/// `docs/robustness.md`). Merge cell-level counters with
+/// [`RunHealth::merge`]; a fresh default value means "nothing notable".
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RunHealth {
+    /// Roundings that produced a non-finite output (±∞ or NaN) from a
+    /// finite input — float RN overflow, or a NaN fabricated upstream.
+    /// Non-finite *inputs* are propagation, not production, and are not
+    /// recounted here.
+    pub nan_inf: u64,
+    /// Finite inputs outside the grid's representable range clamped to a
+    /// finite saturation endpoint (every mode on a fixed-point grid,
+    /// directed/stochastic modes on a float grid).
+    pub saturations: u64,
+    /// Nonzero finite inputs rounded to exactly zero — the underflow /
+    /// absorption mechanism behind RN stagnation.
+    pub underflows: u64,
+    /// GD steps on which the iterate did not move at all (x̂⁺ == x̂) —
+    /// accumulated by the engine, not by the slice kernels.
+    pub stalled_steps: u64,
+    /// GD steps observed (denominator for the per-step rates).
+    pub steps: u64,
+}
+
+impl RunHealth {
+    /// Fold another counter set into this one (sweep-level aggregation).
+    pub fn merge(&mut self, other: &RunHealth) {
+        self.nan_inf += other.nan_inf;
+        self.saturations += other.saturations;
+        self.underflows += other.underflows;
+        self.stalled_steps += other.stalled_steps;
+        self.steps += other.steps;
+    }
+
+    /// True when no numeric event was recorded (stalls included: a fully
+    /// clean run both stayed finite and kept moving).
+    pub fn is_clean(&self) -> bool {
+        self.nan_inf == 0 && self.saturations == 0 && self.underflows == 0 && self.stalled_steps == 0
+    }
+
+    /// Compact one-line rendering for logs and table notes, e.g.
+    /// `nan_inf=0 sat=12 underflow=3 stalled=40/200`.
+    pub fn summary(&self) -> String {
+        format!(
+            "nan_inf={} sat={} underflow={} stalled={}/{}",
+            self.nan_inf, self.saturations, self.underflows, self.stalled_steps, self.steps
+        )
+    }
+}
+
+impl RoundPlan {
+    /// Classify one rounding transition `before → after` into `health`.
+    /// `before` is the exact (binary64) value that entered the rounding,
+    /// `after` the grid value that left it. Inline and branch-cheap: the
+    /// fused health kernels call this once per element after rounding.
+    #[inline]
+    pub fn classify(&self, before: f64, after: f64, health: &mut RunHealth) {
+        if !before.is_finite() {
+            return; // propagation of an already-counted event
+        }
+        if !after.is_finite() {
+            health.nan_inf += 1;
+        } else if !self.grid.in_range(before) {
+            health.saturations += 1;
+        } else if before != 0.0 && after == 0.0 {
+            health.underflows += 1;
+        }
+    }
+
+    /// Classify a whole pre-image/image slice pair (the slice counterpart
+    /// of [`RoundPlan::classify`]).
+    pub fn classify_slice(&self, before: &[f64], after: &[f64], health: &mut RunHealth) {
+        debug_assert_eq!(before.len(), after.len());
+        for (&b, &a) in before.iter().zip(after) {
+            self.classify(b, a, health);
+        }
+    }
+
+    /// [`RoundPlan::round_slice_scheme_with`] plus health accounting: the
+    /// pre-image is snapshotted, the slice is rounded through the ordinary
+    /// fused kernels (same RNG consumption, hence bit-identical outputs),
+    /// and every transition is classified into `health`. Allocates one
+    /// scratch buffer per call; the GD hot path avoids even that by
+    /// recomputing its pre-images (see `fp::kernels::gd_update_health`).
+    pub fn round_slice_scheme_health(
+        &self,
+        scheme: Scheme,
+        xs: &mut [f64],
+        vs: &[f64],
+        rng: &mut Rng,
+        health: &mut RunHealth,
+    ) {
+        let before = xs.to_vec();
+        self.round_slice_scheme_with(scheme, xs, vs, rng);
+        self.classify_slice(&before, xs, health);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1548,6 +1656,64 @@ mod tests {
                 assert!(x == y || (x.is_nan() && y.is_nan()), "{mode:?} fixed slice");
             }
             assert_eq!(ra.next_u64(), rb.next_u64(), "{mode:?} fixed stream");
+        }
+    }
+
+    /// `classify` sorts transitions into exactly one counter: overflow to
+    /// ±∞ is `nan_inf`, an out-of-range clamp is a saturation, a vanished
+    /// nonzero value is an underflow, and non-finite *inputs* (propagation)
+    /// count nowhere.
+    #[test]
+    fn classify_separates_the_event_kinds() {
+        let plan = RoundPlan::new(B8);
+        let xmax = B8.x_max();
+        let mut h = RunHealth::default();
+        plan.classify(xmax * 4.0, f64::INFINITY, &mut h); // RN overflow
+        plan.classify(xmax * 4.0, xmax, &mut h); // directed/SR clamp
+        plan.classify(-xmax * 4.0, -xmax, &mut h); // clamp, other sign
+        plan.classify(B8.x_min_sub() * 0.1, 0.0, &mut h); // underflow
+        plan.classify(f64::INFINITY, f64::INFINITY, &mut h); // propagation
+        plan.classify(f64::NAN, f64::NAN, &mut h); // propagation
+        plan.classify(1.0, 1.0, &mut h); // clean
+        assert_eq!(
+            h,
+            RunHealth { nan_inf: 1, saturations: 2, underflows: 1, stalled_steps: 0, steps: 0 }
+        );
+        assert!(!h.is_clean());
+        assert!(RunHealth::default().is_clean());
+        let mut total = RunHealth::default();
+        total.merge(&h);
+        total.merge(&h);
+        assert_eq!(total.saturations, 4);
+        assert!(h.summary().contains("sat=2"));
+    }
+
+    /// The health wrapper is bit-identical to the plain fused kernel (same
+    /// outputs, same RNG stream) and its counters match a per-element
+    /// oracle on a fixed grid, where every mode saturates.
+    #[test]
+    fn round_slice_scheme_health_matches_plain_kernel() {
+        let plan = RoundPlan::new(Q3_8);
+        let (mut xs, vs) = fixed_test_inputs(&Q3_8, 300);
+        // Salt in out-of-range and vanishing values at known positions.
+        xs[3] = 100.0;
+        xs[7] = -100.0;
+        xs[11] = f64::NAN;
+        for scheme in [Rounding::RoundNearestEven.scheme(), Rounding::Sr.scheme()] {
+            let (mut ra, mut rb) = (Rng::new(21), Rng::new(21));
+            let mut plain = xs.clone();
+            let mut monitored = xs.clone();
+            plan.round_slice_scheme_with(scheme, &mut plain, &vs, &mut ra);
+            let mut h = RunHealth::default();
+            plan.round_slice_scheme_health(scheme, &mut monitored, &vs, &mut rb, &mut h);
+            for (x, y) in plain.iter().zip(&monitored) {
+                assert!(x == y || (x.is_nan() && y.is_nan()));
+            }
+            assert_eq!(ra.next_u64(), rb.next_u64(), "health wrapper must not re-stream");
+            let oracle_sat =
+                xs.iter().filter(|v| v.is_finite() && !plan.grid.in_range(**v)).count() as u64;
+            assert_eq!(h.saturations, oracle_sat);
+            assert_eq!(h.nan_inf, 0, "fixed grids never produce non-finite outputs");
         }
     }
 }

@@ -54,6 +54,7 @@ pub struct RunBuilder<'p> {
     rng: Option<Rng>,
     sr_bits: u32,
     record_tau: bool,
+    escape: Option<f64>,
     x0: Option<Vec<f64>>,
     err: Option<SchemeError>,
 }
@@ -72,6 +73,7 @@ impl<'p> RunBuilder<'p> {
             rng: None,
             sr_bits: DEFAULT_SR_BITS,
             record_tau: false,
+            escape: None,
             x0: None,
             err: None,
         }
@@ -187,6 +189,14 @@ impl<'p> RunBuilder<'p> {
         self
     }
 
+    /// Divergence guard: terminate the run with
+    /// [`crate::gd::trace::RunStatus::Diverged`] as soon as the loss is
+    /// non-finite or exceeds `threshold` (see `docs/robustness.md`).
+    pub fn escape(mut self, threshold: f64) -> Self {
+        self.escape = Some(threshold);
+        self
+    }
+
     /// Starting point `x0` (defaults to the zero vector of the problem's
     /// dimension; rounded into the working format on build, as always).
     pub fn start(mut self, x0: &[f64]) -> Self {
@@ -214,6 +224,7 @@ impl<'p> RunBuilder<'p> {
         cfg.rng = self.rng;
         cfg.record_tau = self.record_tau;
         cfg.sr_bits = self.sr_bits;
+        cfg.escape = self.escape;
         let x0 = self.x0.unwrap_or_else(|| vec![0.0; self.problem.dim()]);
         Ok(GdSession { engine: GdEngine::new(cfg, self.problem, &x0) })
     }

@@ -22,10 +22,10 @@
 use crate::fp::grid::Grid;
 use crate::fp::linalg::{exact, LpCtx};
 use crate::fp::rng::Rng;
-use crate::fp::round::{Rounding, DEFAULT_SR_BITS};
+use crate::fp::round::{Rounding, RunHealth, DEFAULT_SR_BITS};
 use crate::fp::scheme::Scheme;
 use crate::gd::stagnation::tau_k;
-use crate::gd::trace::{IterRecord, Trace};
+use crate::gd::trace::{IterRecord, RunStatus, Trace};
 use crate::problems::Problem;
 
 /// Per-tensor rounding policy of one GD run: an independent open-API
@@ -161,6 +161,11 @@ pub struct GdConfig {
     /// default [`DEFAULT_SR_BITS`] keeps trajectories bit-identical to
     /// pre-knob releases.
     pub sr_bits: u32,
+    /// Divergence guard: when set, [`GdEngine::run`] terminates early with
+    /// [`RunStatus::Diverged`] as soon as the exactly-evaluated loss is
+    /// non-finite or exceeds this threshold. `None` (the default) preserves
+    /// the historic run-to-`steps` behavior and trace lengths exactly.
+    pub escape: Option<f64>,
 }
 
 impl GdConfig {
@@ -185,6 +190,7 @@ impl GdConfig {
             rng: None,
             record_tau: false,
             sr_bits: DEFAULT_SR_BITS,
+            escape: None,
         }
     }
 }
@@ -197,6 +203,11 @@ pub struct GdEngine<'p, P: Problem + ?Sized> {
     pub problem: &'p P,
     /// Current iterate x̂ (always exactly representable on `cfg.grid`).
     pub x: Vec<f64>,
+    /// Numeric-health counters accumulated over every step taken so far
+    /// (NaN/Inf productions, saturation clamps, underflows, stalled steps at
+    /// the (8b)/(8c) rounding sites — see `docs/robustness.md`). [`Self::run`]
+    /// snapshots this into the returned trace.
+    pub health: RunHealth,
     ctx_grad: LpCtx,
     rng_mul: Rng,
     rng_sub: Rng,
@@ -234,6 +245,7 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
         Self {
             problem,
             x,
+            health: RunHealth::default(),
             ctx_grad,
             rng_mul: root.fork("delta2", 0),
             rng_sub: root.fork("delta3", 0),
@@ -276,7 +288,7 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
         // the config between steps.
         let plan =
             crate::fp::round::RoundPlan::new(self.cfg.grid).with_sr_bits(self.cfg.sr_bits);
-        crate::fp::kernels::gd_update(
+        let moved = crate::fp::kernels::gd_update_health(
             &plan,
             self.cfg.schemes.mul,
             self.cfg.schemes.sub,
@@ -288,7 +300,13 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
             &mut self.zbuf,
             &mut self.rng_mul,
             &mut self.rng_sub,
-        )
+            &mut self.health,
+        );
+        self.health.steps += 1;
+        if !moved {
+            self.health.stalled_steps += 1;
+        }
+        moved
     }
 
     /// Rounding operations performed so far inside the (8a) gradient context
@@ -300,6 +318,12 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
     /// Run the configured number of steps, recording a [`Trace`].
     /// `metric` (optional) computes a task-level number per iteration, e.g.
     /// test error for the MLR/NN figures.
+    ///
+    /// When [`GdConfig::escape`] is set and the exactly-evaluated loss turns
+    /// non-finite or exceeds the threshold, the run stops *before* taking
+    /// that step: the trace gains one final record exposing the escaping
+    /// loss and the status becomes [`RunStatus::Diverged`]. The engine's
+    /// [`Self::health`] counters are snapshotted into the trace either way.
     pub fn run(&mut self, metric: Option<&dyn Fn(&[f64]) -> f64>) -> Trace {
         let mut trace = Trace::default();
         for k in 0..self.cfg.steps {
@@ -311,6 +335,24 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
                 Some(xs) => exact::norm2(&exact::sub(&self.x, xs)),
                 None => f64::NAN,
             };
+            let m = metric.map(|f| f(&self.x)).unwrap_or(f64::NAN);
+            if let Some(thr) = self.cfg.escape {
+                if !f.is_finite() || f > thr {
+                    // Record the escaping loss without stepping further —
+                    // the iterate no longer moves, so the step is `stalled`.
+                    trace.push(IterRecord {
+                        k,
+                        f,
+                        grad_norm,
+                        dist_to_opt: dist,
+                        tau: f64::NAN,
+                        stalled: true,
+                        metric: m,
+                    });
+                    trace.status = RunStatus::Diverged { step: k };
+                    break;
+                }
+            }
             let tau = if self.cfg.record_tau {
                 // τ_k is defined w.r.t. the computed gradient ĝ.
                 self.eval_gradient();
@@ -318,7 +360,6 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
             } else {
                 f64::NAN
             };
-            let m = metric.map(|f| f(&self.x)).unwrap_or(f64::NAN);
             let moved = self.step();
             trace.push(IterRecord {
                 k,
@@ -330,6 +371,7 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
                 metric: m,
             });
         }
+        trace.health = self.health;
         trace
     }
 }
@@ -503,5 +545,69 @@ mod tests {
                 assert!(FpFormat::BINARY8.contains(xi), "xi={xi}");
             }
         }
+    }
+
+    /// The divergence guard cuts an exploding run short: with t beyond the
+    /// stability limit GD on a quadratic grows the loss 9× per step, so the
+    /// escape threshold fires deterministically and the trace reports
+    /// `Diverged` with the escaping loss in its final record. Without the
+    /// guard the same run burns all configured steps.
+    #[test]
+    fn escape_threshold_terminates_diverging_run() {
+        let p = Quadratic::diagonal(vec![2.0], vec![0.0]);
+        let mk = |escape: Option<f64>| {
+            let mut cfg = GdConfig::new(FpFormat::BINARY64, schemes_rn(), 1.0, 100);
+            cfg.grad_model = GradModel::Exact;
+            cfg.escape = escape;
+            let mut e = GdEngine::new(cfg, &p, &[1.0]);
+            e.run(None)
+        };
+        let tr = mk(Some(1e8));
+        let step = match tr.status {
+            RunStatus::Diverged { step } => step,
+            RunStatus::Completed => panic!("guard should have fired"),
+        };
+        assert_eq!(tr.len(), step + 1);
+        assert!(tr.len() < 100, "len={}", tr.len());
+        assert!(tr.final_f() > 1e8);
+        // No guard: historic behavior, full-length trace.
+        let tr_off = mk(None);
+        assert!(tr_off.status.is_completed());
+        assert_eq!(tr_off.len(), 100);
+    }
+
+    /// A non-finite loss also trips the guard, and the (8b) overflow that
+    /// caused it shows up in the trace's health counters.
+    #[test]
+    fn nonfinite_loss_trips_guard_and_counts_nan_inf() {
+        // t beyond the stability limit: |1 − 2tλ| = 3, so the iterate grows
+        // ~3× per step until t·ĝ overflows binary8's range and RN produces
+        // an Inf at the (8b) rounding site.
+        let p = Quadratic::diagonal(vec![2.0], vec![0.0]);
+        let mut cfg = GdConfig::new(FpFormat::BINARY8, schemes_rn(), 1.0, 2000);
+        cfg.grad_model = GradModel::Exact;
+        cfg.escape = Some(f64::INFINITY); // only non-finiteness can fire it
+        let mut e = GdEngine::new(cfg, &p, &[1.0]);
+        let tr = e.run(None);
+        assert!(matches!(tr.status, RunStatus::Diverged { .. }));
+        assert!(!tr.final_f().is_finite());
+        assert!(tr.health.nan_inf > 0, "{}", tr.health.summary());
+    }
+
+    /// The stalled-step counter agrees with the per-record `stalled` flags on
+    /// the Figure-2 stagnation run, and the stagnated RN run is otherwise
+    /// numerically clean (no overflow, no saturation).
+    #[test]
+    fn health_counts_stalled_steps_on_stagnating_run() {
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+        let mut cfg = GdConfig::new(FpFormat::BINARY8, schemes_rn(), 0.05, 40);
+        cfg.seed = 1;
+        let mut e = GdEngine::new(cfg, &p, &[1.0]);
+        let tr = e.run(None);
+        let stalled = tr.records.iter().filter(|r| r.stalled).count() as u64;
+        assert!(stalled > 0, "Figure-2 run should stall");
+        assert_eq!(tr.health.stalled_steps, stalled);
+        assert_eq!(tr.health.steps, 40);
+        assert_eq!(tr.health.nan_inf, 0, "{}", tr.health.summary());
     }
 }

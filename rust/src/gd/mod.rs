@@ -11,4 +11,4 @@ pub mod trace;
 pub use builder::{GdSession, RunBuilder};
 pub use engine::{GdConfig, GdEngine, GradModel, SchemePolicy, StepSchemes};
 pub use stagnation::{lsb_is_even, tau_k, StagnationReport};
-pub use trace::{IterRecord, Trace};
+pub use trace::{IterRecord, RunStatus, Trace};

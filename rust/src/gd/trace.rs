@@ -1,4 +1,30 @@
-//! Iteration traces: everything the figures need, recorded per GD step.
+//! Iteration traces: everything the figures need, recorded per GD step,
+//! plus the run's terminal [`RunStatus`] and aggregated numeric health
+//! (see `docs/robustness.md`).
+
+use crate::fp::RunHealth;
+
+/// How a GD run ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RunStatus {
+    /// The run executed every configured step.
+    #[default]
+    Completed,
+    /// The run was cut short by the divergence guard (loss non-finite or
+    /// above the configured escape threshold) at step `step`; the trace
+    /// holds `step + 1` records, the last one showing the escaping loss.
+    Diverged {
+        /// Iteration index at which the guard fired.
+        step: usize,
+    },
+}
+
+impl RunStatus {
+    /// True unless the divergence guard fired.
+    pub fn is_completed(&self) -> bool {
+        matches!(self, RunStatus::Completed)
+    }
+}
 
 /// One GD iteration's worth of diagnostics (exact-arithmetic monitoring of a
 /// low-precision run; the monitored quantities never feed back into the run).
@@ -25,6 +51,10 @@ pub struct IterRecord {
 pub struct Trace {
     /// One record per completed iteration, in order.
     pub records: Vec<IterRecord>,
+    /// How the run ended (default: ran to completion).
+    pub status: RunStatus,
+    /// Numeric-health counters aggregated over the whole run.
+    pub health: RunHealth,
 }
 
 impl Trace {
@@ -128,6 +158,14 @@ mod tests {
         t.push(rec(0, 1.0, false));
         t.push(rec(1, 0.5, false));
         assert_eq!(t.stagnation_onset(), None);
+    }
+
+    #[test]
+    fn default_trace_is_completed_and_clean() {
+        let t = Trace::default();
+        assert!(t.status.is_completed());
+        assert!(t.health.is_clean());
+        assert_ne!(t.status, RunStatus::Diverged { step: 0 });
     }
 
     #[test]

@@ -9,6 +9,11 @@
 //!     --out-dir D    (default results/)
 //!     --quick        smoke-scale profile
 //!     --side N --mlr-train N --mlr-epochs N ... (see ExpCtx)
+//!     --journal P    append-only cell checkpoint file; --resume skips
+//!                    cells already journaled under the same config
+//!     --max-retries N --fault-policy fail-fast|skip-cell|degrade
+//!     --escape X     terminate a run early once its loss exceeds X or
+//!                    goes non-finite (see docs/robustness.md)
 //! lpgd train <mlr|nn> [opts]            one training run with any schemes
 //!     --backend binary8 | fixed:Q3.8   number grid (--fmt is a legacy alias)
 //!     --t 0.5 --epochs 50 --seed 0
@@ -25,8 +30,11 @@
 //! [`SchemeRegistry`](lpgd::fp::SchemeRegistry); unknown `--options` are
 //! rejected with an error instead of being silently ignored.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 use lpgd::coordinator::experiments::{list_experiments, run_experiment, ExpCtx};
+use lpgd::coordinator::{FaultPolicy, Journal};
 use lpgd::data::load_or_synth;
 use lpgd::fp::{Grid, NumberGrid, Rng, RoundPlan, Scheme, SchemeRegistry, DEFAULT_SR_BITS};
 use lpgd::gd::{RunBuilder, SchemePolicy};
@@ -37,7 +45,8 @@ use lpgd::util::table::sparkline;
 /// `--key value` options shared by every command running the coordinator.
 const CTX_OPTS: &[&str] = &[
     "seeds", "jobs", "out-dir", "side", "mlr-train", "mlr-test", "nn-train", "nn-test",
-    "mlr-epochs", "nn-epochs", "quad-steps", "quad-n", "mnist-dir",
+    "mlr-epochs", "nn-epochs", "quad-steps", "quad-n", "mnist-dir", "journal", "resume",
+    "max-retries", "fault-policy", "escape",
 ];
 
 fn main() {
@@ -47,7 +56,7 @@ fn main() {
     }
 }
 
-fn ctx_from_args(a: &Args) -> ExpCtx {
+fn ctx_from_args(a: &Args) -> Result<ExpCtx> {
     let mut ctx = if a.has_flag("quick") { ExpCtx::quick() } else { ExpCtx::default() };
     ctx.seeds = a.get_usize("seeds", ctx.seeds);
     ctx.jobs = a.get_usize("jobs", ctx.jobs);
@@ -62,7 +71,34 @@ fn ctx_from_args(a: &Args) -> ExpCtx {
     ctx.quad_steps = a.get_usize("quad-steps", ctx.quad_steps);
     ctx.quad_n = a.get_usize("quad-n", ctx.quad_n);
     ctx.mnist_dir = a.get("mnist-dir").map(String::from);
-    ctx
+    ctx.max_retries = a.get_usize("max-retries", ctx.max_retries as usize) as u32;
+    if let Some(p) = a.get("fault-policy") {
+        ctx.fault_policy = FaultPolicy::parse(p).ok_or_else(|| {
+            anyhow::anyhow!("unknown --fault-policy '{p}' (fail-fast | skip-cell | degrade)")
+        })?;
+    }
+    if let Some(e) = a.get("escape") {
+        let thr: f64 =
+            e.parse().map_err(|_| anyhow::anyhow!("--escape takes a number, got '{e}'"))?;
+        ctx.escape = Some(thr);
+    }
+    // The journal digest covers every cell-shaping knob, so it must be
+    // computed after all of them (escape included) are in place.
+    if let Some(path) = a.get("journal") {
+        let resume = a.has_flag("resume");
+        let journal = Journal::open(std::path::Path::new(path), resume, ctx.config_digest())
+            .map_err(|e| anyhow::anyhow!("cannot open journal '{path}': {e}"))?;
+        if resume {
+            eprintln!(
+                "journal: {} completed cell(s) loaded from {path}",
+                journal.resumed_cells()
+            );
+        }
+        ctx.journal = Some(Arc::new(journal));
+    } else if a.has_flag("resume") {
+        bail!("--resume requires --journal PATH");
+    }
+    Ok(ctx)
 }
 
 /// Resolve `--key` through the scheme registry, or keep `default`.
@@ -96,6 +132,8 @@ fn print_help() {
     println!("commands:");
     println!("  list                        list reproducible experiments");
     println!("  reproduce <id|all> [opts]   regenerate a paper table/figure (--seeds, --jobs, --quick, --out-dir, ...)");
+    println!("                              fault tolerance: --journal PATH [--resume], --max-retries N,");
+    println!("                              --fault-policy fail-fast|skip-cell|degrade, --escape X (docs/robustness.md)");
     println!("  train <mlr|nn> [opts]       one training run (--backend/--fmt, --t, --epochs, --seed, --scheme, --s8a/--s8b/--s8c, --sr-bits)");
     println!("  round <value> [opts]        inspect rounding of one value (--fmt, --mode, --samples, --seed)");
     println!("  pjrt-info [--artifacts D]   PJRT platform + artifact check");
@@ -132,7 +170,7 @@ fn run() -> Result<()> {
         "reproduce" => {
             reject_unknown(&a, CTX_OPTS)?;
             let id = a.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
-            let ctx = ctx_from_args(&a);
+            let ctx = ctx_from_args(&a)?;
             let jobs = if ctx.jobs == 0 { "auto".to_string() } else { ctx.jobs.to_string() };
             let t0 = std::time::Instant::now();
             let tables = run_experiment(id, &ctx)?;
@@ -153,7 +191,7 @@ fn run() -> Result<()> {
             ]);
             reject_unknown(&a, &known)?;
             let which = a.positional.get(1).map(|s| s.as_str()).unwrap_or("mlr");
-            let ctx = ctx_from_args(&a);
+            let ctx = ctx_from_args(&a)?;
             // --scheme sets all three steps; --s8a/--s8b/--s8c override.
             let base = scheme_arg(&a, "scheme", Scheme::sr())?;
             let policy = SchemePolicy {

@@ -4,7 +4,7 @@ use std::collections::HashMap;
 
 /// Boolean flags (never consume a value). Everything else written as
 /// `--key value` takes the next token as its value.
-const BOOL_FLAGS: &[&str] = &["quick", "full", "verbose", "help", "pjrt", "json"];
+const BOOL_FLAGS: &[&str] = &["quick", "full", "verbose", "help", "pjrt", "json", "resume"];
 
 /// Parsed command line: positionals, `--key value` options, bare flags.
 #[derive(Debug, Clone, Default)]
@@ -141,6 +141,16 @@ mod tests {
         let a = parse("--quick fig2");
         assert!(a.has_flag("quick"));
         assert_eq!(a.positional, vec!["fig2"]);
+    }
+
+    #[test]
+    fn resume_is_a_bool_flag() {
+        // `--resume` must never swallow the token after it (here the
+        // positional experiment id).
+        let a = parse("reproduce plfp1 --journal sweep.jsonl --resume plfp1extra");
+        assert!(a.has_flag("resume"));
+        assert_eq!(a.get("journal"), Some("sweep.jsonl"));
+        assert_eq!(a.positional, vec!["reproduce", "plfp1", "plfp1extra"]);
     }
 
     #[test]

@@ -173,3 +173,111 @@ fn unknown_ids_and_empty_dirs_fail_cleanly() {
     assert!(run_experiment("fig99", &ctx).is_err());
     assert!(lpgd::data::idx::load_mnist("/nope").is_err());
 }
+
+mod fault_tolerance {
+    use super::*;
+    use lpgd::coordinator::{FaultInjector, FaultPolicy, Journal};
+    use std::sync::Arc;
+
+    fn journal_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("lpgd_itest_journal_{}_{tag}.jsonl", std::process::id()))
+    }
+
+    /// PR acceptance: a sweep interrupted mid-flight (simulated kill -9:
+    /// journal truncated to two intact lines plus a torn third) resumes
+    /// from its journal and the merged CSV is byte-identical to an
+    /// uninterrupted run.
+    #[test]
+    fn killed_sweep_resumes_to_a_byte_identical_csv() {
+        let reference = run_experiment("plfp1", &quick_ctx("res_ref")).unwrap();
+        let path = journal_path("resume");
+        let _ = std::fs::remove_file(&path);
+
+        let mut c1 = quick_ctx("res_a");
+        c1.jobs = 1;
+        let digest = c1.config_digest();
+        c1.journal = Some(Arc::new(Journal::open(&path, false, digest).unwrap()));
+        let full = run_experiment("plfp1", &c1).unwrap();
+        assert_eq!(full[0].to_csv(), reference[0].to_csv(), "journaling changed the result");
+
+        // Keep the first two journal lines and leave a torn third, as an
+        // interrupted write would.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= 3, "expected >=3 journaled cells, got {}", lines.len());
+        let torn = format!("{}\n{}\n{}", lines[0], lines[1], &lines[2][..lines[2].len() / 2]);
+        std::fs::write(&path, torn).unwrap();
+
+        let mut c2 = quick_ctx("res_b");
+        c2.jobs = 1;
+        let journal = Journal::open(&path, true, digest).unwrap();
+        assert_eq!(journal.resumed_cells(), 2, "torn line must not replay");
+        c2.journal = Some(Arc::new(journal));
+        let resumed = run_experiment("plfp1", &c2).unwrap();
+        assert_eq!(resumed[0].to_csv(), reference[0].to_csv(), "resumed CSV diverged");
+        assert!(
+            resumed[0].notes.iter().any(|n| n.contains("resumed 2 of")),
+            "missing resume note: {:?}",
+            resumed[0].notes
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// PR acceptance: with the injector panicking one cell, the sweep
+    /// completes under skip-cell with that cell reported failed and every
+    /// other column bit-identical — and under retry it succeeds
+    /// bit-identically to the clean run.
+    #[test]
+    fn injected_fault_is_skipped_or_retried_deterministically() {
+        let clean = run_experiment("plfp1", &quick_ctx("inj_ref")).unwrap();
+        // Column j of every CSV row, joined; plfp1's columns are
+        // [k, pl_exact_bound, pl_sr_bound, Q3.8_RN, Q3.8_SR, signed].
+        let cols = |csv: &str, keep: &[usize]| -> Vec<String> {
+            csv.lines()
+                .map(|l| {
+                    let f: Vec<&str> = l.split(',').collect();
+                    keep.iter().map(|&j| f[j]).collect::<Vec<_>>().join(",")
+                })
+                .collect()
+        };
+
+        // Cell 1 of plfp1's flat grid is (Q3.8_SR, seed 0): deterministic
+        // RN occupies cell 0 alone, so the SR mean loses one seed.
+        let mut skip = quick_ctx("inj_skip");
+        skip.jobs = 1;
+        skip.fault_policy = FaultPolicy::SkipCell;
+        skip.injector = Some(Arc::new(FaultInjector::panic_at("plfp1", 1, u32::MAX)));
+        let skipped = run_experiment("plfp1", &skip).expect("skip-cell must complete the sweep");
+        assert!(
+            skipped[0].notes.iter().any(|n| n.contains("failed, skipped")),
+            "missing skip note: {:?}",
+            skipped[0].notes
+        );
+        let (csv_clean, csv_skip) = (clean[0].to_csv(), skipped[0].to_csv());
+        assert_eq!(
+            cols(&csv_clean, &[0, 1, 2, 3, 5]),
+            cols(&csv_skip, &[0, 1, 2, 3, 5]),
+            "columns untouched by the fault must stay bit-identical"
+        );
+        assert_ne!(
+            cols(&csv_clean, &[4]),
+            cols(&csv_skip, &[4]),
+            "the SR mean should have lost its seed-0 run"
+        );
+
+        // A transient fault (fires once) plus one retry recovers the exact
+        // series: the retry re-runs the same pure cell function.
+        let mut retry = quick_ctx("inj_retry");
+        retry.jobs = 1;
+        retry.max_retries = 1;
+        retry.injector = Some(Arc::new(FaultInjector::panic_at("plfp1", 1, 1)));
+        let retried = run_experiment("plfp1", &retry).expect("retry must recover the sweep");
+        assert_eq!(retried[0].to_csv(), clean[0].to_csv(), "retried run must be bit-identical");
+        assert!(
+            retried[0].notes.iter().any(|n| n.contains("recovered on retry")),
+            "missing retry note: {:?}",
+            retried[0].notes
+        );
+    }
+}

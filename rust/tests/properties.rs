@@ -456,6 +456,45 @@ fn prop_nan_and_inf_handling() {
     }
 }
 
+/// Robustness satellite: a NaN input propagates as NaN through every
+/// scheme in the registry — scalar and fused slice kernels, float and
+/// fixed-point grids — without panicking, and without disturbing finite
+/// neighbors in the same slice. The health layer counts NaN productions,
+/// so the kernels underneath must survive them.
+#[test]
+fn prop_nan_propagates_through_every_registered_scheme() {
+    use lpgd::fp::{FixedPoint, Grid, RoundPlan, SchemeRegistry};
+
+    let grids: [Grid; 3] =
+        [FpFormat::BINARY8.into(), FpFormat::BFLOAT16.into(), FixedPoint::q(3, 8).into()];
+    for (name, _aliases, _summary) in SchemeRegistry::entries() {
+        // Parameterized families are listed as "fam[:eps]"; instantiate
+        // them with a representative eps.
+        let spec = match name.split_once("[:eps]") {
+            Some((base, _)) => format!("{base}:0.25"),
+            None => name.clone(),
+        };
+        let scheme = SchemeRegistry::lookup(&spec).expect("registry entry must resolve");
+        for &grid in &grids {
+            let plan = RoundPlan::new(grid);
+            let mut rng = Rng::new(21);
+            let y = plan.round_scheme(scheme, f64::NAN, &mut rng);
+            assert!(y.is_nan(), "{spec} on {}: NaN -> {y}", grid.label());
+            // Slice kernel: NaN embedded among finite values must come out
+            // NaN with the finite entries still rounded onto the grid.
+            let mut xs = [1.0, f64::NAN, -0.5, 0.25];
+            let vs = xs;
+            plan.round_slice_scheme_with(scheme, &mut xs, &vs, &mut rng);
+            assert!(xs[1].is_nan(), "{spec} on {}: slice NaN lost", grid.label());
+            for (j, &x) in xs.iter().enumerate() {
+                if j != 1 {
+                    assert!(x.is_finite(), "{spec} on {}: neighbor {j} became {x}", grid.label());
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn prop_gd_iterate_always_in_format() {
     // Random diagonal quadratics, random schemes: the engine's iterate is

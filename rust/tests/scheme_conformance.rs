@@ -255,6 +255,75 @@ fn deterministic_schemes_consume_no_randomness() {
     }
 }
 
+/// Robustness satellite: [`RunHealth`] saturation counts agree with an
+/// exhaustive oracle on the tiny Q2.3 grid, for every scheme in the
+/// registry. Saturation is classified on the *pre-image* (a finite input
+/// strictly outside the representable range), so the expected count is the
+/// same for every scheme — deterministic or stochastic — and can be
+/// computed independently by materializing the whole grid. Underflow and
+/// nan_inf counts are cross-checked against the realized outputs.
+#[test]
+fn run_health_saturations_match_the_exhaustive_q23_oracle() {
+    use lpgd::fp::RunHealth;
+
+    let fx = FixedPoint::q(2, 3);
+    let grid: Grid = fx.into();
+    let d = fx.delta();
+    let (k_min, k_max) = (-(1i64 << (fx.word_bits - 1)), (1i64 << (fx.word_bits - 1)) - 1);
+    let pts: Vec<f64> = (k_min..=k_max).map(|k| k as f64 * d).collect();
+    let (min, max) = (NumberGrid::min_value(&fx), NumberGrid::max_value(&fx));
+    assert_eq!((pts[0], *pts.last().unwrap()), (min, max));
+
+    // Exhaustive inputs: every grid point, every midpoint and quarter
+    // point, out-of-range magnitudes on both sides, and the specials.
+    let mut inputs: Vec<f64> = pts.clone();
+    for w in pts.windows(2) {
+        inputs.push((w[0] + w[1]) / 2.0);
+        inputs.push(w[0] + 0.25 * d);
+    }
+    inputs.extend([
+        max + 0.4 * d,
+        max + 10.0,
+        min - 0.4 * d,
+        min - 10.0,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        f64::NAN,
+    ]);
+
+    // Independent oracle: finite and strictly outside [min, max] — the
+    // grid itself plays no part in the count.
+    let want_sat =
+        inputs.iter().filter(|x| x.is_finite() && (**x < min || **x > max)).count() as u64;
+    assert!(want_sat >= 4, "the input set must exercise both saturation sides");
+
+    for scheme in all_schemes() {
+        let plan = RoundPlan::new(grid);
+        let mut health = RunHealth::default();
+        let mut xs = inputs.clone();
+        let vs = inputs.clone();
+        let mut rng = Rng::new(3);
+        plan.round_slice_scheme_health(scheme, &mut xs, &vs, &mut rng, &mut health);
+        assert_eq!(health.saturations, want_sat, "{} saturation count", scheme.name());
+        assert_eq!(
+            health.nan_inf,
+            0,
+            "{}: a saturating fixed grid never fabricates non-finites",
+            scheme.name()
+        );
+        // Underflow oracle from the realized outputs: nonzero in-range
+        // pre-image, exactly-zero image.
+        let want_under = inputs
+            .iter()
+            .zip(&xs)
+            .filter(|&(&b, &a)| b.is_finite() && min <= b && b <= max && b != 0.0 && a == 0.0)
+            .count() as u64;
+        assert_eq!(health.underflows, want_under, "{} underflow count", scheme.name());
+        assert_eq!(health.stalled_steps, 0);
+        assert_eq!(health.steps, 0);
+    }
+}
+
 // ------------------------------------- bit-equality vs the pre-redesign --
 
 /// The registry + `RunBuilder` path produces bit-identical GD trajectories

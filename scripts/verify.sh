@@ -5,6 +5,9 @@
 #
 # 1. release build          (tier-1)
 # 2. full test suite        (tier-1)
+# 2b. the fault-injection / crash-resume acceptance tests, run by name so
+#    a regression in the robustness layer (docs/robustness.md) is
+#    reported as its own failing stage rather than buried in the suite.
 # 3. cargo doc with the crate's #![warn(missing_docs)] escalated to an
 #    error, so any undocumented public API — notably the new scheduler
 #    and kernel surfaces — fails loudly instead of rotting silently.
@@ -28,6 +31,11 @@ cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== fault-injection + crash-resume acceptance tests =="
+cargo test -q --test integration fault_tolerance
+cargo test -q --lib journal
+cargo test -q --lib health
 
 echo "== cargo doc --no-deps (missing_docs -> error) =="
 RUSTDOCFLAGS="-D missing_docs" cargo doc --no-deps --quiet
