@@ -23,7 +23,7 @@ use crate::gd::engine::{GdConfig, GdEngine, GradModel, SchemePolicy};
 use crate::gd::theory;
 use crate::gd::trace::Trace;
 use crate::problems::{Mlr, Problem, Quadratic, TwoLayerNn};
-use crate::util::stats::first_at_or_below;
+use crate::util::stats::{first_at_or_below, sem, sem_from_population_variance};
 use crate::util::table::{Cell, Table};
 use anyhow::{bail, Result};
 
@@ -201,6 +201,7 @@ pub fn run_experiment(id: &str, ctx: &ExpCtx) -> Result<Vec<Table>> {
         };
     for t in &tables {
         t.write_csv(&ctx.out_dir)?;
+        t.write_band_csv(&ctx.out_dir)?;
     }
     Ok(tables)
 }
@@ -397,6 +398,23 @@ pub(crate) fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
             at(&signed.mean, k).into(),
         ]);
     }
+    if ctx.seeds > 1 {
+        // SEM bands from the aggregate's population variance, strided
+        // exactly like the rows (missing tail entries carry a zero band:
+        // their means are NaN and compare as NaN either way).
+        let band_of = |res: &crate::coordinator::aggregate::ExpectationResult| -> Vec<f64> {
+            (0..steps)
+                .step_by(stride)
+                .map(|k| {
+                    res.variance
+                        .get(k)
+                        .map_or(0.0, |&v| sem_from_population_variance(v, res.seeds))
+                })
+                .collect()
+        };
+        t.band("bf16_SR", band_of(&sr));
+        t.band("bf16_signed_SReps0.4", band_of(&signed));
+    }
     for n in sr_notes.into_iter().chain(sg_notes) {
         t.note(n);
     }
@@ -458,8 +476,10 @@ fn seeds_for(schemes: &SchemePolicy, seeds: usize) -> usize {
 }
 
 /// Fan a (config × repetition) grid out as **one** batch of scheduler
-/// cells and return the per-config mean series plus the sweep's fault
-/// notes (resume/retry/skip/degrade events — empty on a clean run).
+/// cells and return the per-config mean series, the per-config pointwise
+/// standard errors of those means (zero for single-seed configs — the
+/// golden harness treats such columns as deterministic), plus the sweep's
+/// fault notes (resume/retry/skip/degrade events — empty on a clean run).
 ///
 /// This is the coordinator's main fan-out shape: flattening the whole grid
 /// keeps every worker busy even when some configs are deterministic single
@@ -485,7 +505,7 @@ fn curves_flat(
     ctx: &ExpCtx,
     run: &(dyn Fn(usize, u64) -> Vec<f64> + Sync),
     master: Option<&(dyn Fn(usize, u64) -> Vec<f64> + Sync)>,
-) -> (Vec<Vec<f64>>, Vec<String>) {
+) -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<String>) {
     debug_assert_eq!(labels.len(), seeds_per_cfg.len());
     let mut cells: Vec<(String, u64)> = Vec::new();
     let mut map: Vec<(usize, u64)> = Vec::new();
@@ -507,6 +527,7 @@ fn curves_flat(
         if master.is_some() { Some(&master_run) } else { None };
     let (values, notes) = sweep_cells(exp, &ctx.faults(), &cells, &cell_run, master_opt);
     let mut curves = Vec::with_capacity(seeds_per_cfg.len());
+    let mut sems = Vec::with_capacity(seeds_per_cfg.len());
     let mut offset = 0;
     for &n in seeds_per_cfg {
         let group: Vec<Vec<f64>> =
@@ -515,10 +536,20 @@ fn curves_flat(
         if mean.len() < rows {
             mean.resize(rows, f64::NAN);
         }
+        // Pointwise standard error of that mean across the group — the
+        // spread the golden harness turns into a CLT band. Zero whenever
+        // fewer than two repetitions reach an index.
+        let sem_series: Vec<f64> = (0..rows)
+            .map(|k| {
+                let at_k: Vec<f64> = group.iter().filter_map(|g| g.get(k).copied()).collect();
+                sem(&at_k)
+            })
+            .collect();
         curves.push(mean);
+        sems.push(sem_series);
         offset += n;
     }
-    (curves, notes)
+    (curves, sems, notes)
 }
 
 /// One MLR training cell: train `(grid, schemes, grad_model)` at `seed`
@@ -626,7 +657,7 @@ pub(crate) fn fig4a_acc(ctx: &ExpCtx) -> Table {
     let labels: Vec<String> = cfgs.iter().map(|(n, _, _, _)| n.clone()).collect();
     let seeds_per: Vec<usize> =
         cfgs.iter().map(|(_, _, sch, _)| seeds_for(sch, ctx.seeds)).collect();
-    let (curves, notes) = curves_flat(
+    let (curves, sems, notes) = curves_flat(
         "fig4a-acc",
         &labels,
         &seeds_per,
@@ -644,6 +675,11 @@ pub(crate) fn fig4a_acc(ctx: &ExpCtx) -> Table {
             row.push(cv[k].into());
         }
         t.row(row);
+    }
+    for (i, label) in labels.iter().enumerate() {
+        if seeds_per[i] > 1 {
+            t.band(label.clone(), sems[i].clone());
+        }
     }
     for n in notes {
         t.note(n);
@@ -693,7 +729,7 @@ pub(crate) fn fig5(ctx: &ExpCtx, biased: bool) -> Table {
     let labels: Vec<String> = cols[1..].to_vec();
     let seeds_per: Vec<usize> =
         grid.iter().map(|(_, sch, _)| seeds_for(sch, ctx.seeds)).collect();
-    let (mut all, notes) = curves_flat(
+    let (mut all, mut sems, notes) = curves_flat(
         id,
         &labels,
         &seeds_per,
@@ -709,6 +745,7 @@ pub(crate) fn fig5(ctx: &ExpCtx, biased: bool) -> Table {
         table.note(n);
     }
     let baseline = all.remove(0);
+    sems.remove(0); // the deterministic baseline carries no band
     let curves = all;
     for k in 0..ctx.mlr_epochs {
         let mut row: Vec<Cell> = vec![k.into(), baseline[k].into()];
@@ -716,6 +753,11 @@ pub(crate) fn fig5(ctx: &ExpCtx, biased: bool) -> Table {
             row.push(c[k].into());
         }
         table.row(row);
+    }
+    for (i, label) in labels.iter().enumerate().skip(1) {
+        if seeds_per[i] > 1 {
+            table.band(label.clone(), sems[i - 1].clone());
+        }
     }
     // Epochs-to-baseline metric (paper: 84 epochs at t=1 for fig5b).
     let target = *baseline.last().unwrap();
@@ -754,8 +796,9 @@ fn nn_setup(ctx: &ExpCtx) -> NnSetup {
 }
 
 /// Fan an NN (config × seed) grid out through [`curves_flat`], returning
-/// the per-config mean test-error series plus the sweep's fault notes.
-/// The degrade fault policy falls back to the binary64 + RN master.
+/// the per-config mean test-error series, their pointwise standard
+/// errors, plus the sweep's fault notes. The degrade fault policy falls
+/// back to the binary64 + RN master.
 fn nn_curves(
     exp: &str,
     setup: &NnSetup,
@@ -763,7 +806,7 @@ fn nn_curves(
     t_step: f64,
     epochs: usize,
     ctx: &ExpCtx,
-) -> (Vec<Vec<f64>>, Vec<String>) {
+) -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<String>) {
     let nn_run = |grid: Grid, sch: SchemePolicy, s: u64| {
         let mut cfg = GdConfig::new(grid, sch, t_step, epochs);
         cfg.seed = s;
@@ -810,13 +853,18 @@ pub(crate) fn fig6a(ctx: &ExpCtx) -> Table {
         "NN (3 vs 8) test error, binary8, t=0.09375 (paper Fig. 6a)",
         &["epoch", "binary32", "RN", "SR", "SR_eps(0.2)", "SR_eps(0.4)"],
     );
-    let (curves, notes) = nn_curves("fig6a", &setup, &cfgs, t_step, ctx.nn_epochs, ctx);
+    let (curves, sems, notes) = nn_curves("fig6a", &setup, &cfgs, t_step, ctx.nn_epochs, ctx);
     for k in 0..ctx.nn_epochs {
         let mut row: Vec<Cell> = vec![k.into()];
         for c in &curves {
             row.push(c[k].into());
         }
         t.row(row);
+    }
+    for (i, (name, _, sch)) in cfgs.iter().enumerate() {
+        if seeds_for(sch, ctx.seeds) > 1 {
+            t.band(name.clone(), sems[i].clone());
+        }
     }
     for n in notes {
         t.note(n);
@@ -844,13 +892,18 @@ pub(crate) fn fig6b(ctx: &ExpCtx) -> Table {
         "NN (3 vs 8): signed-SReps for (8c) (paper Fig. 6b)",
         &names,
     );
-    let (curves, notes) = nn_curves("fig6b", &setup, &cfgs, t_step, ctx.nn_epochs, ctx);
+    let (curves, sems, notes) = nn_curves("fig6b", &setup, &cfgs, t_step, ctx.nn_epochs, ctx);
     for k in 0..ctx.nn_epochs {
         let mut row: Vec<Cell> = vec![k.into()];
         for c in &curves {
             row.push(c[k].into());
         }
         t.row(row);
+    }
+    for (i, (name, _, sch)) in cfgs.iter().enumerate() {
+        if seeds_for(sch, ctx.seeds) > 1 {
+            t.band(name.clone(), sems[i].clone());
+        }
     }
     for n in notes {
         t.note(n);
@@ -1053,7 +1106,7 @@ pub(crate) fn plfp1(ctx: &ExpCtx) -> Table {
     let labels: Vec<String> =
         ["Q3.8_RN", "Q3.8_SR", "Q3.8_SR|signed(0.25)"].map(String::from).to_vec();
     let seeds_per: Vec<usize> = cfgs.iter().map(|sch| seeds_for(sch, ctx.seeds)).collect();
-    let (curves, notes) = curves_flat(
+    let (curves, sems, notes) = curves_flat(
         "plfp1",
         &labels,
         &seeds_per,
@@ -1083,6 +1136,13 @@ pub(crate) fn plfp1(ctx: &ExpCtx) -> Table {
             curves[1][k].into(),
             curves[2][k].into(),
         ]);
+    }
+    // Stride the SEM series exactly like the rows so bands stay aligned.
+    for (i, label) in labels.iter().enumerate() {
+        if seeds_per[i] > 1 {
+            let strided: Vec<f64> = (0..steps).step_by(stride).map(|k| sems[i][k]).collect();
+            t.band(label.clone(), strided);
+        }
     }
     t.note(format!(
         "theory: SR limiting accuracy {:.3e}, worst-case RN stagnation gap {:.3e} (delta={:.3e}, mu={mu}, L={lip}, t={t_step})",
@@ -1160,7 +1220,7 @@ pub(crate) fn plfp3(ctx: &ExpCtx) -> Table {
         .collect();
     let seeds_per: Vec<usize> =
         grids.iter().map(|(_, sch)| seeds_for(sch, ctx.seeds)).collect();
-    let (finals, notes) = curves_flat(
+    let (finals, final_sems, notes) = curves_flat(
         "plfp3",
         &labels,
         &seeds_per,
@@ -1202,6 +1262,12 @@ pub(crate) fn plfp3(ctx: &ExpCtx) -> Table {
             theory::pl_rn_stagnation_gap(mu, t_step, d, n).into(),
         ]);
     }
+    if ctx.seeds > 1 {
+        // One SR cell group per frac_bits row; each contributes its single
+        // settled-gap SEM to the seed-averaged column.
+        let band: Vec<f64> = (0..fracs.len()).map(|i| final_sems[2 * i + 1][0]).collect();
+        t.band("sr_final_gap", band);
+    }
     if let Some(fbits) = theory::frac_bits_for_target_gap(mu, lip, t_step, n, 1e-6) {
         t.note(format!(
             "smallest frac_bits with SR limiting accuracy <= 1e-6: {fbits} (theory::frac_bits_for_target_gap)"
@@ -1240,7 +1306,7 @@ fn learning_table(
         let rn = SchemePolicy::uniform(Scheme::rn());
         mlr_cell(setup, exact, rn, GradModel::RoundAfterOp, t_step, epochs, s, ctx.escape)
     };
-    let (curves, notes) = curves_flat(
+    let (curves, sems, notes) = curves_flat(
         id,
         &labels,
         &seeds_per,
@@ -1258,6 +1324,11 @@ fn learning_table(
             row.push(c[k].into());
         }
         t.row(row);
+    }
+    for (i, label) in labels.iter().enumerate() {
+        if seeds_per[i] > 1 {
+            t.band(label.clone(), sems[i].clone());
+        }
     }
     for n in notes {
         t.note(n);

@@ -16,10 +16,14 @@
 //!   cells merge through;
 //! * [`health`] + [`journal`] — the fault-tolerance layer: per-cell fault
 //!   policies, panic-isolated retry, and the append-only checkpoint/resume
-//!   journal behind `--journal` / `--resume` (see `docs/robustness.md`).
+//!   journal behind `--journal` / `--resume` (see `docs/robustness.md`);
+//! * [`goldens`] — the golden-figure replication harness: extraction,
+//!   byte-exact / CLT-band diffing and the validation report behind
+//!   `lpgd goldens` and `tests/golden_diff.rs` (see `docs/testing.md`).
 
 pub mod aggregate;
 pub mod experiments;
+pub mod goldens;
 pub mod health;
 pub mod journal;
 pub mod registry;
@@ -27,6 +31,7 @@ pub mod scheduler;
 
 pub use aggregate::{expectation, expectation_jobs, expectation_sweep, ExpectationResult};
 pub use experiments::{list_experiments, run_experiment, ExpCtx};
+pub use goldens::{check as golden_check, extract as golden_extract, CheckOpts, CheckStatus, Report};
 pub use health::{CellOutcome, FaultInjector, FaultPolicy, InjectedFault};
 pub use journal::{sweep_cells, Journal, SweepFaults};
 pub use registry::{ExperimentSpec, REGISTRY};

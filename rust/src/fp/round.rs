@@ -1121,7 +1121,17 @@ mod tests {
         }
     }
 
-    /// SR empirical mean ≈ x (zero bias, Definition 1).
+    /// Monte-Carlo false-failure bound for this module's empirical-mean
+    /// tests: every draw lies in `[⌊x⌋, ⌈x⌉]` (one gap), so by Hoeffding
+    /// each assertion fails spuriously with probability at most
+    /// `MC_P_FAIL`. The value is chosen so the half-width coincides with
+    /// the historic `4·gap/√n` tolerance (`ln(2/p) ≈ 32`), i.e. the
+    /// fixed-seed outcomes are unchanged — the bound is now just explicit
+    /// (see `util::stats::hoeffding_halfwidth` and docs/testing.md).
+    const MC_P_FAIL: f64 = 2.5e-14;
+
+    /// SR empirical mean ≈ x (zero bias, Definition 1). Fixed seed;
+    /// spurious-failure probability ≤ `MC_P_FAIL` per input (Hoeffding).
     #[test]
     fn sr_is_unbiased() {
         let mut rng = Rng::new(42);
@@ -1129,13 +1139,14 @@ mod tests {
             let n = 40_000;
             let mean: f64 = (0..n).map(|_| round(&B8, Rounding::Sr, x, &mut rng)).sum::<f64>() / n as f64;
             let (lo, hi) = B8.floor_ceil(x);
-            let tol = 4.0 * (hi - lo) / (n as f64).sqrt();
+            let tol = crate::util::stats::hoeffding_halfwidth(hi - lo, n, MC_P_FAIL);
             assert!((mean - x).abs() < tol, "x={x} mean={mean} tol={tol}");
         }
     }
 
     /// SRε bias has the sign of x and magnitude ε·(⌈x⌉−⌊x⌋) in the interior
-    /// regime (eq. (3) middle case).
+    /// regime (eq. (3) middle case). Fixed seed; spurious-failure
+    /// probability ≤ `MC_P_FAIL` per input (Hoeffding).
     #[test]
     fn sr_eps_bias_matches_eq3() {
         let mut rng = Rng::new(7);
@@ -1151,7 +1162,7 @@ mod tests {
             let mean: f64 =
                 (0..n).map(|_| round(&B8, Rounding::SrEps(eps), x, &mut rng)).sum::<f64>() / n as f64;
             let expected_bias = x.signum() * eps * (hi - lo);
-            let tol = 4.0 * (hi - lo) / (n as f64).sqrt();
+            let tol = crate::util::stats::hoeffding_halfwidth(hi - lo, n, MC_P_FAIL);
             assert!(
                 ((mean - x) - expected_bias).abs() < tol,
                 "x={x} bias={} expected={expected_bias}",
@@ -1160,7 +1171,8 @@ mod tests {
         }
     }
 
-    /// signed-SRε bias has the sign of −v (eq. (4) middle case).
+    /// signed-SRε bias has the sign of −v (eq. (4) middle case). Fixed
+    /// seed; spurious-failure probability ≤ `MC_P_FAIL` per pair.
     #[test]
     fn signed_sr_eps_bias_opposes_v() {
         let mut rng = Rng::new(9);
@@ -1173,7 +1185,7 @@ mod tests {
                 .sum::<f64>()
                 / n as f64;
             let expected_bias = -v.signum() * eps * (hi - lo);
-            let tol = 4.0 * (hi - lo) / (n as f64).sqrt();
+            let tol = crate::util::stats::hoeffding_halfwidth(hi - lo, n, MC_P_FAIL);
             assert!(
                 ((mean - x) - expected_bias).abs() < tol,
                 "x={x} v={v} bias={} expected={expected_bias}",
@@ -1183,6 +1195,7 @@ mod tests {
     }
 
     /// Closed-form expectation matches the empirical mean for all schemes.
+    /// Fixed seed; spurious-failure probability ≤ `MC_P_FAIL` per case.
     #[test]
     fn expected_round_matches_empirical() {
         let mut rng = Rng::new(3);
@@ -1193,7 +1206,7 @@ mod tests {
                     (0..n).map(|_| round_with(&B8, mode, x, v, &mut rng)).sum::<f64>() / n as f64;
                 let exp = expected_round(&B8, mode, x, v);
                 let (lo, hi) = B8.floor_ceil(x);
-                let tol = 4.0 * (hi - lo) / (n as f64).sqrt();
+                let tol = crate::util::stats::hoeffding_halfwidth(hi - lo, n, MC_P_FAIL);
                 assert!((mean - exp).abs() < tol, "{mode:?} x={x}: {mean} vs {exp}");
             }
         }
@@ -1390,8 +1403,10 @@ mod tests {
                 let mean = buf.iter().sum::<f64>() / n as f64;
                 let (lo, hi) = B8.floor_ceil(x);
                 let gap = hi - lo;
-                // Statistical tolerance plus the quantization allowance.
-                let tol = 4.0 * gap / (n as f64).sqrt() + gap * inv_pow2(bits);
+                // Hoeffding tolerance (fails spuriously w.p. ≤ MC_P_FAIL)
+                // plus the few-bits probability-quantization allowance.
+                let tol = crate::util::stats::hoeffding_halfwidth(gap, n, MC_P_FAIL)
+                    + gap * inv_pow2(bits);
                 assert!((mean - x).abs() < tol, "bits={bits} x={x} mean={mean} tol={tol}");
             }
         }
@@ -1412,7 +1427,8 @@ mod tests {
             let mean = buf.iter().sum::<f64>() / n as f64;
             let want = expected_round(&B8, Rounding::SignedSrEps(eps), x, v);
             let (lo, hi) = B8.floor_ceil(x);
-            let tol = 4.0 * (hi - lo) / (n as f64).sqrt();
+            // Fixed seed; fails spuriously w.p. ≤ MC_P_FAIL per pair.
+            let tol = crate::util::stats::hoeffding_halfwidth(hi - lo, n, MC_P_FAIL);
             assert!((mean - want).abs() < tol, "x={x} v={v}: {mean} vs {want}");
         }
     }
@@ -1612,7 +1628,8 @@ mod tests {
     }
 
     /// SR on a fixed-point grid is unbiased and SRε keeps the eq. (3) bias
-    /// shape — the laws transfer verbatim to the uniform grid.
+    /// shape — the laws transfer verbatim to the uniform grid. Fixed
+    /// seeds; spurious-failure probability ≤ `MC_P_FAIL` per assertion.
     #[test]
     fn fixed_sr_laws_hold() {
         let plan = RoundPlan::new(Q3_8);
@@ -1623,7 +1640,8 @@ mod tests {
             let mut buf = vec![x; n];
             plan.round_slice(Rounding::Sr, &mut buf, &mut rng);
             let mean = buf.iter().sum::<f64>() / n as f64;
-            let tol = 4.0 * d / (n as f64).sqrt() + d * inv_pow2(plan.sr_bits());
+            let tol = crate::util::stats::hoeffding_halfwidth(d, n, MC_P_FAIL)
+                + d * inv_pow2(plan.sr_bits());
             assert!((mean - x).abs() < tol, "x={x} mean={mean} tol={tol}");
         }
         // Closed-form expectation matches the empirical mean for SRε.
@@ -1635,7 +1653,7 @@ mod tests {
         let mean = buf.iter().sum::<f64>() / n as f64;
         let want = expected_round(Q3_8, Rounding::SrEps(eps), x, x);
         assert!((want - x - eps * d).abs() < 1e-12, "closed form bias must be eps*delta");
-        let tol = 4.0 * d / (n as f64).sqrt();
+        let tol = crate::util::stats::hoeffding_halfwidth(d, n, MC_P_FAIL);
         assert!((mean - want).abs() < tol, "mean={mean} want={want}");
     }
 

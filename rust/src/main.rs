@@ -22,6 +22,11 @@
 //!     --sr-bits N    few-random-bits knob for the stochastic kernels
 //! lpgd round <value> [opts]             inspect rounding of one value
 //!     --fmt binary8 --mode sr_eps:0.25 --samples 10000
+//! lpgd goldens <extract|check> [opts]   golden-figure replication harness
+//!     --dir D        goldens directory (default goldens/)
+//!     --report P     write the JSON validation index to P
+//!     --require      fail on missing goldens instead of bootstrapping
+//!     --stream-change  CLT bands for stochastic columns (docs/testing.md)
 //! lpgd pjrt-info                        PJRT platform + artifact check
 //! lpgd --help                           usage + the registered schemes
 //! ```
@@ -34,7 +39,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 use lpgd::coordinator::experiments::{list_experiments, run_experiment, ExpCtx};
-use lpgd::coordinator::{FaultPolicy, Journal};
+use lpgd::coordinator::{goldens, FaultPolicy, Journal};
 use lpgd::data::load_or_synth;
 use lpgd::fp::{Grid, NumberGrid, Rng, RoundPlan, Scheme, SchemeRegistry, DEFAULT_SR_BITS};
 use lpgd::gd::{RunBuilder, SchemePolicy};
@@ -136,6 +141,7 @@ fn print_help() {
     println!("                              --fault-policy fail-fast|skip-cell|degrade, --escape X (docs/robustness.md)");
     println!("  train <mlr|nn> [opts]       one training run (--backend/--fmt, --t, --epochs, --seed, --scheme, --s8a/--s8b/--s8c, --sr-bits)");
     println!("  round <value> [opts]        inspect rounding of one value (--fmt, --mode, --samples, --seed)");
+    println!("  goldens <extract|check>     golden-figure harness (--dir, --report, --require, --stream-change)");
     println!("  pjrt-info [--artifacts D]   PJRT platform + artifact check");
     println!();
     println!("registered rounding schemes (--scheme / --s8a / --s8b / --s8c / --mode):");
@@ -310,6 +316,39 @@ fn run() -> Result<()> {
                 n_up as f64 / samples as f64
             );
             println!("closed-form E[fl(x)]={}", scheme.expected_round(&fmt, val, val));
+        }
+        "goldens" => {
+            reject_unknown(&a, &["dir", "report"])?;
+            let action = a.positional.get(1).map(|s| s.as_str()).unwrap_or("check");
+            let dir = std::path::PathBuf::from(a.get("dir").unwrap_or("goldens"));
+            let ctx = goldens::golden_ctx();
+            match action {
+                "extract" => {
+                    let written = goldens::extract(&dir, &ctx)?;
+                    for p in &written {
+                        println!("wrote {}", p.display());
+                    }
+                    println!(
+                        "extracted {} golden artifact(s) to {}/ — commit them",
+                        written.len(),
+                        dir.display()
+                    );
+                }
+                "check" => {
+                    let opts = goldens::CheckOpts {
+                        require: a.has_flag("require"),
+                        stream_change: a.has_flag("stream-change"),
+                    };
+                    let report = goldens::check(&dir, &ctx, &opts)?;
+                    print!("{}", report.to_text());
+                    if let Some(p) = a.get("report") {
+                        report.write_json(std::path::Path::new(p))?;
+                        println!("validation index written to {p}");
+                    }
+                    goldens::ensure_passed(&report)?;
+                }
+                other => bail!("unknown goldens action '{other}' (extract|check)"),
+            }
         }
         "pjrt-info" => {
             reject_unknown(&a, &["artifacts"])?;

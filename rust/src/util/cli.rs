@@ -4,7 +4,8 @@ use std::collections::HashMap;
 
 /// Boolean flags (never consume a value). Everything else written as
 /// `--key value` takes the next token as its value.
-const BOOL_FLAGS: &[&str] = &["quick", "full", "verbose", "help", "pjrt", "json", "resume"];
+const BOOL_FLAGS: &[&str] =
+    &["quick", "full", "verbose", "help", "pjrt", "json", "resume", "require", "stream-change"];
 
 /// Parsed command line: positionals, `--key value` options, bare flags.
 #[derive(Debug, Clone, Default)]

@@ -1,4 +1,25 @@
-//! Summary statistics used by the aggregator and the bench harness.
+//! Summary statistics used by the aggregator and the bench harness, plus
+//! the tolerance engine behind the golden-figure harness and the
+//! Monte-Carlo tests (see `docs/testing.md`).
+//!
+//! # Tolerance engine
+//!
+//! Two concentration bounds back every statistical tolerance in the repo,
+//! each exposed with its failure probability as an explicit argument so
+//! tests can *document* their false-failure bound instead of hard-coding
+//! a magic multiple of `1/sqrt(n)`:
+//!
+//! * **Hoeffding** ([`hoeffding_halfwidth`], [`hoeffding_samples`]) — for
+//!   empirical means of bounded draws (a rounding output always lies in
+//!   `[⌊x⌋, ⌈x⌉]`, a range of one gap):
+//!   `P(|mean − E| ≥ t) ≤ 2·exp(−2·n·t²/range²)`. Non-asymptotic, so the
+//!   bound is valid at every `n`, not just in the CLT limit.
+//! * **Gaussian tail** ([`gaussian_z`], [`clt_halfwidth`]) — for
+//!   CLT-normalized statistics (difference of two independent empirical
+//!   means with known standard errors): `P(|Z| ≥ z) ≤ 2·exp(−z²/2)`, i.e.
+//!   `z(p) = sqrt(2·ln(2/p))` gives a two-sided tail ≤ `p`. The Chernoff
+//!   form avoids an `erfinv` dependency and is conservative (never
+//!   tighter than the exact Gaussian quantile).
 
 /// Mean of a slice (NaN for empty).
 pub fn mean(xs: &[f64]) -> f64 {
@@ -34,6 +55,93 @@ pub fn first_at_or_below(series: &[f64], threshold: f64) -> Option<usize> {
     series.iter().position(|&v| v <= threshold)
 }
 
+/// Standard error of the mean of `xs`: `sqrt(s²/n)` with the *unbiased*
+/// sample variance `s² = Σ(x−m)²/(n−1)`. Zero for `n ≤ 1` (a single seed
+/// carries no spread information; callers treat such columns as exact).
+pub fn sem(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n <= 1 {
+        return 0.0;
+    }
+    (population_variance(xs) * n as f64 / (n - 1) as f64 / n as f64).sqrt()
+}
+
+/// Standard error of a mean from a precomputed *population* variance over
+/// `n` samples: `sqrt(var·n/(n−1)/n)` — the slice-free twin of [`sem`]
+/// for aggregates that only kept the variance (e.g.
+/// `coordinator::aggregate::ExpectationResult`). Zero for `n ≤ 1`.
+pub fn sem_from_population_variance(var: f64, n: usize) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    (var * n as f64 / (n - 1) as f64 / n as f64).sqrt()
+}
+
+/// Two-sided Gaussian-tail critical value: the `z` with
+/// `P(|N(0,1)| ≥ z) ≤ p_fail`, from the Chernoff bound
+/// `P(|Z| ≥ z) ≤ 2·exp(−z²/2)` ⇒ `z = sqrt(2·ln(2/p_fail))`.
+/// Conservative (≥ the exact quantile); e.g. `z(1e-6) ≈ 5.39`,
+/// `z(1e-9) ≈ 6.55`.
+pub fn gaussian_z(p_fail: f64) -> f64 {
+    assert!(p_fail > 0.0 && p_fail < 1.0, "p_fail must be in (0,1), got {p_fail}");
+    (2.0 * (2.0 / p_fail).ln()).sqrt()
+}
+
+/// Hoeffding half-width for the empirical mean of `n` i.i.d. draws bounded
+/// in an interval of width `range`: the `t` with
+/// `P(|mean − E| ≥ t) ≤ p_fail`, i.e. `t = range·sqrt(ln(2/p_fail)/(2n))`.
+/// Valid at every `n` (non-asymptotic), so a test asserting
+/// `|mean − E| < hoeffding_halfwidth(range, n, p)` fails spuriously with
+/// probability at most `p` — the number to quote in the test's comment.
+pub fn hoeffding_halfwidth(range: f64, n: usize, p_fail: f64) -> f64 {
+    assert!(p_fail > 0.0 && p_fail < 1.0, "p_fail must be in (0,1), got {p_fail}");
+    assert!(n > 0, "need at least one sample");
+    range * ((2.0 / p_fail).ln() / (2.0 * n as f64)).sqrt()
+}
+
+/// Smallest sample count `n` for which
+/// [`hoeffding_halfwidth`]`(range, n, p_fail) ≤ halfwidth` — use it to
+/// *size* a Monte-Carlo test from the tolerance it needs instead of
+/// guessing: `n = ⌈range²·ln(2/p_fail)/(2·t²)⌉`.
+pub fn hoeffding_samples(range: f64, halfwidth: f64, p_fail: f64) -> usize {
+    assert!(halfwidth > 0.0, "halfwidth must be positive");
+    assert!(p_fail > 0.0 && p_fail < 1.0, "p_fail must be in (0,1), got {p_fail}");
+    let n = (range / halfwidth).powi(2) * (2.0 / p_fail).ln() / 2.0;
+    n.ceil() as usize
+}
+
+/// CLT band half-width for the difference of two independent empirical
+/// means with standard errors `sem_a` and `sem_b`:
+/// `z(p_fail)·sqrt(sem_a² + sem_b²)`. Under the CLT the difference is
+/// `N(0, sem_a² + sem_b²)`, so `|mean_a − mean_b|` exceeds this with
+/// probability at most `p_fail` — the golden harness's stochastic-column
+/// acceptance band (see `docs/testing.md`).
+pub fn clt_halfwidth(sem_a: f64, sem_b: f64, p_fail: f64) -> f64 {
+    gaussian_z(p_fail) * (sem_a * sem_a + sem_b * sem_b).sqrt()
+}
+
+/// Distance between two finite `f64`s in units in the last place: the
+/// number of representable binary64 values strictly between them, plus
+/// one if they differ (0 ⇔ bit-identical up to `−0.0 == +0.0`). Uses the
+/// monotone ordered-integer mapping of the IEEE bit pattern, so it is
+/// exact across binades and signs. NaN on either side → `u64::MAX`.
+pub fn ulp_distance(a: f64, b: f64) -> u64 {
+    if a.is_nan() || b.is_nan() {
+        return u64::MAX;
+    }
+    // Map the sign-magnitude bit pattern onto a monotone ordered integer.
+    let ordered = |x: f64| -> i64 {
+        let bits = x.to_bits() as i64;
+        if bits < 0 {
+            i64::MIN.wrapping_sub(bits)
+        } else {
+            bits
+        }
+    };
+    let (oa, ob) = (ordered(a), ordered(b));
+    oa.abs_diff(ob)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -58,5 +166,52 @@ mod tests {
         let s = [0.9, 0.5, 0.3, 0.09, 0.05];
         assert_eq!(first_at_or_below(&s, 0.1), Some(3));
         assert_eq!(first_at_or_below(&s, 0.01), None);
+    }
+
+    #[test]
+    fn sem_matches_by_hand() {
+        // {1, 3}: unbiased s² = 2, sem = sqrt(2/2) = 1.
+        assert!((sem(&[1.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(sem(&[5.0]), 0.0);
+        assert_eq!(sem(&[]), 0.0);
+        // Population-variance twin agrees with the slice form.
+        let xs = [1.0, 2.0, 4.0, 8.0];
+        let twin = sem_from_population_variance(population_variance(&xs), xs.len());
+        assert!((sem(&xs) - twin).abs() < 1e-12);
+        assert_eq!(sem_from_population_variance(1.0, 1), 0.0);
+    }
+
+    #[test]
+    fn gaussian_z_is_conservative_and_monotone() {
+        // Exact two-sided 1e-6 quantile is ≈ 4.89; the Chernoff z must
+        // dominate it and shrink as p grows.
+        let z6 = gaussian_z(1e-6);
+        assert!(z6 > 4.89 && z6 < 6.0, "{z6}");
+        assert!(gaussian_z(1e-9) > z6);
+        assert!(gaussian_z(0.05) < z6);
+    }
+
+    #[test]
+    fn hoeffding_roundtrips() {
+        let (range, p) = (0.25, 1e-9);
+        let t = hoeffding_halfwidth(range, 60_000, p);
+        // Sizing from that half-width must land at (or just under) 60k.
+        let n = hoeffding_samples(range, t, p);
+        assert!(n <= 60_000 && n > 59_000, "{n}");
+        // Bigger n → tighter band; smaller p → wider band.
+        assert!(hoeffding_halfwidth(range, 240_000, p) < t);
+        assert!(hoeffding_halfwidth(range, 60_000, 1e-12) > t);
+    }
+
+    #[test]
+    fn ulp_distance_counts_representables() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+        assert_eq!(ulp_distance(1.0, f64::from_bits(1.0f64.to_bits() + 1)), 1);
+        assert_eq!(ulp_distance(-1.0, f64::from_bits((-1.0f64).to_bits() + 1)), 1);
+        // Across the sign boundary: smallest positive vs smallest negative
+        // subnormal are two steps apart (through ±0).
+        assert_eq!(ulp_distance(f64::from_bits(1), -f64::from_bits(1)), 2);
+        assert_eq!(ulp_distance(1.0, f64::NAN), u64::MAX);
     }
 }

@@ -76,6 +76,14 @@ pub struct Table {
     pub rows: Vec<Vec<Cell>>,
     /// Free-form footnotes (rendered in text/markdown, not CSV).
     pub notes: Vec<String>,
+    /// Per-column standard errors of the mean for the *stochastic*
+    /// columns: `(column label, sem per data row)`. Populated by the
+    /// experiment builders for seed-averaged expectation curves and
+    /// consumed by the golden harness to derive CLT tolerance bands
+    /// (`coordinator::goldens`, `docs/testing.md`). Columns without an
+    /// entry are deterministic and diffed byte-exactly. Rendered to the
+    /// `<id>.band.csv` sidecar, never to the main CSV.
+    pub bands: Vec<(String, Vec<f64>)>,
 }
 
 impl Table {
@@ -87,6 +95,7 @@ impl Table {
             columns: columns.iter().map(|s| s.to_string()).collect(),
             rows: vec![],
             notes: vec![],
+            bands: vec![],
         }
     }
 
@@ -99,6 +108,59 @@ impl Table {
     /// Append a footnote.
     pub fn note(&mut self, s: impl Into<String>) {
         self.notes.push(s.into());
+    }
+
+    /// Attach the per-row standard errors of the mean for a stochastic
+    /// column (marking it as seed-averaged for the golden harness). The
+    /// label must name an existing column; the series is aligned with the
+    /// data rows, padded/truncated to the row count at render time.
+    pub fn band(&mut self, label: impl Into<String>, sems: Vec<f64>) {
+        let label = label.into();
+        debug_assert!(self.columns.iter().any(|c| *c == label), "band for unknown column {label}");
+        self.bands.push((label, sems));
+    }
+
+    /// Render the SEM sidecar as CSV: one `row` index column plus one
+    /// column per banded label, values in shortest-roundtrip form so a
+    /// read-back reconstructs the exact `f64`. Empty string when the
+    /// table has no bands.
+    pub fn bands_to_csv(&self) -> String {
+        if self.bands.is_empty() {
+            return String::new();
+        }
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let hdr: Vec<String> = std::iter::once("row".to_string())
+            .chain(self.bands.iter().map(|(l, _)| esc(l)))
+            .collect();
+        let _ = writeln!(out, "{}", hdr.join(","));
+        for i in 0..self.rows.len() {
+            let mut cells = vec![i.to_string()];
+            for (_, sems) in &self.bands {
+                cells.push(format!("{}", sems.get(i).copied().unwrap_or(0.0)));
+            }
+            let _ = writeln!(out, "{}", cells.join(","));
+        }
+        out
+    }
+
+    /// Write `<dir>/<id>.band.csv` when the table carries bands; returns
+    /// the path written, or `None` for band-free (fully deterministic)
+    /// tables.
+    pub fn write_band_csv(&self, dir: impl AsRef<Path>) -> Result<Option<std::path::PathBuf>> {
+        if self.bands.is_empty() {
+            return Ok(None);
+        }
+        fs::create_dir_all(&dir)?;
+        let path = dir.as_ref().join(format!("{}.band.csv", self.id));
+        fs::write(&path, self.bands_to_csv())?;
+        Ok(Some(path))
     }
 
     /// Render as CSV (header + rows; notes omitted).
@@ -240,6 +302,24 @@ mod tests {
         let p = sample().write_csv(&dir).unwrap();
         let content = std::fs::read_to_string(p).unwrap();
         assert!(content.contains("a,b"));
+    }
+
+    #[test]
+    fn band_sidecar_roundtrips_exact_f64() {
+        let mut t = sample();
+        assert_eq!(t.bands_to_csv(), "");
+        assert!(t.write_band_csv(std::env::temp_dir()).unwrap().is_none());
+        let sems = vec![0.1, 1.0 / 3.0];
+        t.band("f", sems.clone());
+        let csv = t.bands_to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("row,f"));
+        for (i, line) in lines.enumerate() {
+            let (row, v) = line.split_once(',').unwrap();
+            assert_eq!(row, i.to_string());
+            // Shortest-roundtrip rendering: the parse is bit-exact.
+            assert_eq!(v.parse::<f64>().unwrap().to_bits(), sems[i].to_bits());
+        }
     }
 
     #[test]

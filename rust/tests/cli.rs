@@ -1,0 +1,103 @@
+//! CLI error-path coverage, driven through the built binary with
+//! `std::process::Command` (satellite of the golden-harness issue): every
+//! malformed invocation must exit non-zero with a descriptive message —
+//! never run with silently-defaulted options. Each case below exercises a
+//! path that fails *before* any experiment work starts, so the whole
+//! suite is cheap.
+
+use std::process::{Command, Output};
+
+fn lpgd(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_lpgd"))
+        .args(args)
+        .output()
+        .expect("spawn the lpgd binary")
+}
+
+fn run_err(args: &[&str]) -> String {
+    let out = lpgd(args);
+    assert!(
+        !out.status.success(),
+        "`lpgd {}` unexpectedly succeeded:\n{}",
+        args.join(" "),
+        String::from_utf8_lossy(&out.stdout)
+    );
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+#[test]
+fn unknown_command_is_rejected() {
+    let err = run_err(&["frobnicate"]);
+    assert!(err.contains("unknown command 'frobnicate'"), "{err}");
+    assert!(err.contains("--help"), "{err}");
+}
+
+#[test]
+fn unknown_options_are_rejected_per_subcommand() {
+    // The historic failure mode was a silent ignore: `--sceme` trained
+    // with the default scheme. Every subcommand must reject typos.
+    let err = run_err(&["list", "--bogus", "1"]);
+    assert!(err.contains("unknown option(s): --bogus"), "{err}");
+    let err = run_err(&["reproduce", "table2", "--sceme", "sr"]);
+    assert!(err.contains("unknown option(s): --sceme"), "{err}");
+    let err = run_err(&["train", "mlr", "--epocs", "3"]);
+    assert!(err.contains("unknown option(s): --epocs"), "{err}");
+    let err = run_err(&["round", "1.1", "--frmt", "binary8"]);
+    assert!(err.contains("unknown option(s): --frmt"), "{err}");
+    let err = run_err(&["goldens", "check", "--bogus", "1"]);
+    assert!(err.contains("unknown option(s): --bogus"), "{err}");
+}
+
+#[test]
+fn value_options_missing_their_value_are_rejected() {
+    // `--scheme` as the last token parses as a flag; it must be reported
+    // instead of silently training with the default scheme.
+    let err = run_err(&["train", "mlr", "--scheme"]);
+    assert!(err.contains("missing a value: --scheme"), "{err}");
+}
+
+#[test]
+fn malformed_scheme_specs_are_rejected() {
+    let err = run_err(&["train", "mlr", "--scheme", "nope"]);
+    assert!(err.contains("unknown rounding scheme 'nope'"), "{err}");
+    // The error lists the registered schemes so the fix is one read away.
+    assert!(err.contains("sr_eps"), "{err}");
+    let err = run_err(&["train", "mlr", "--scheme", "sr_eps:abc"]);
+    assert!(err.contains("bad parameter 'abc'"), "{err}");
+    let err = run_err(&["round", "1.1", "--mode", "sr_eps:abc"]);
+    assert!(err.contains("bad parameter 'abc'"), "{err}");
+}
+
+#[test]
+fn malformed_grid_and_backend_specs_are_rejected() {
+    let err = run_err(&["round", "1.1", "--backend", "q99.99"]);
+    assert!(err.contains("unknown --backend/--fmt 'q99.99'"), "{err}");
+    let err = run_err(&["round", "1.1", "--fmt", "binary7"]);
+    assert!(err.contains("binary7"), "{err}");
+    // A non-numeric positional for `round` fails the f64 parse.
+    let err = run_err(&["round", "abc"]);
+    assert!(err.contains("error"), "{err}");
+}
+
+#[test]
+fn resume_without_journal_is_rejected() {
+    let err = run_err(&["reproduce", "table2", "--resume"]);
+    assert!(err.contains("--resume requires --journal"), "{err}");
+}
+
+#[test]
+fn unknown_experiment_and_goldens_action_are_rejected() {
+    let err = run_err(&["reproduce", "nosuchfig"]);
+    assert!(err.contains("unknown experiment 'nosuchfig'"), "{err}");
+    let err = run_err(&["goldens", "frobnicate"]);
+    assert!(err.contains("unknown goldens action 'frobnicate'"), "{err}");
+}
+
+#[test]
+fn help_lists_the_new_subcommand_and_exits_zero() {
+    let out = lpgd(&["--help"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("goldens <extract|check>"), "{text}");
+    assert!(text.contains("registered rounding schemes"), "{text}");
+}

@@ -1,0 +1,146 @@
+//! Golden-figure replication suite (the "golden" test tier, see
+//! `docs/testing.md` and ROADMAP item 4).
+//!
+//! The first test diffs fresh scheduler output for **every** registered
+//! experiment against the checked-in artifacts under `goldens/` — one
+//! looping test rather than one `#[test]` per figure so libtest's
+//! parallelism never races two checks over the shared goldens directory.
+//! Missing goldens bootstrap via a double-run determinism proof (and the
+//! test prints a commit reminder); from a clean checkout the suite
+//! therefore passes twice in a row — run one bootstraps, run two diffs.
+//!
+//! Environment knobs (both read by this suite only):
+//!
+//! * `LPGD_GOLDEN_REQUIRE=1` — fail on missing goldens instead of
+//!   bootstrapping (the `scripts/verify.sh` golden stage and CI mode).
+//! * `LPGD_GOLDEN_STREAM_CHANGE=1` — compare SEM-banded stochastic
+//!   columns under CLT tolerance bands instead of byte-exactly, for
+//!   validating an intentional RNG stream change. Per-point false-failure
+//!   probability 1e-9; union-bounded over a full suite run the spurious
+//!   failure probability stays below ~5e-6 (see `coordinator::goldens`).
+//!
+//! The default tier is byte-exact for every column — stochastic curves
+//! included, because fixed seeds make them bit-reproducible — so the
+//! default false-failure probability is 0.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use lpgd::coordinator::goldens::{self, CheckOpts, CheckStatus};
+use lpgd::coordinator::registry::REGISTRY;
+
+fn repo_goldens() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("goldens")
+}
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| v == "1").unwrap_or(false)
+}
+
+/// The headline check: every figure experiment + the expected-round bias
+/// table vs `goldens/`.
+#[test]
+fn golden_figures_match_or_bootstrap() {
+    let opts = CheckOpts {
+        require: env_flag("LPGD_GOLDEN_REQUIRE"),
+        stream_change: env_flag("LPGD_GOLDEN_STREAM_CHANGE"),
+    };
+    let dir = repo_goldens();
+    let ctx = goldens::golden_ctx();
+    let report = goldens::check(&dir, &ctx, &opts).expect("golden check must run");
+    print!("{}", report.to_text());
+    let boots = report.bootstrapped();
+    if !boots.is_empty() {
+        println!(
+            "bootstrapped golden(s) under {} — commit them: {}",
+            dir.display(),
+            boots.join(", ")
+        );
+    }
+    // One entry per registered experiment plus the expected-round table.
+    assert!(
+        report.entries.len() >= REGISTRY.len() + 1,
+        "expected >= {} entries, got {}",
+        REGISTRY.len() + 1,
+        report.entries.len()
+    );
+    assert!(
+        report.passed(),
+        "golden check failed — see the entries above; docs/testing.md explains \
+         how to read a byte-exact or tolerance-band failure and when to rerun \
+         `lpgd goldens extract`"
+    );
+}
+
+/// Sensitivity: a minimally perturbed golden (1 ulp in the bit-pattern
+/// table, one trailing rendered digit in a figure CSV) must fail the
+/// check, and a missing golden must fail under `require` with remediation
+/// text — exercised in a throwaway directory so the checked-in goldens
+/// stay untouched.
+#[test]
+fn golden_check_rejects_perturbations_and_missing_goldens() {
+    let dir = std::env::temp_dir().join(format!("lpgd_golden_it_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    let ctx = goldens::golden_ctx();
+    let open = CheckOpts::default();
+
+    // Bootstrap everything via the double-run determinism proof.
+    let r = goldens::check(&dir, &ctx, &open).expect("bootstrap check");
+    assert!(r.passed(), "{}", r.to_text());
+    assert!(
+        r.entries.iter().all(|e| e.status == CheckStatus::Bootstrapped),
+        "{}",
+        r.to_text()
+    );
+
+    // Perturb the expected-round table by exactly 1 ulp (hex bit edit) and
+    // one figure CSV by its smallest rendered increment (last digit).
+    let er = dir.join("expected_round_binary8.csv");
+    let text = fs::read_to_string(&er).unwrap();
+    let mut lines: Vec<String> = text.lines().map(String::from).collect();
+    let mut cells: Vec<String> = lines[5].split(',').map(String::from).collect();
+    let bits = u64::from_str_radix(&cells[1], 16).unwrap();
+    cells[1] = format!("{:016x}", bits + 1);
+    lines[5] = cells.join(",");
+    fs::write(&er, format!("{}\n", lines.join("\n"))).unwrap();
+
+    let fig = dir.join("table2.csv");
+    let text = fs::read_to_string(&fig).unwrap();
+    let mut lines: Vec<String> = text.lines().map(String::from).collect();
+    let bumped = lines[1]
+        .chars()
+        .rev()
+        .find(|c| c.is_ascii_digit())
+        .expect("a numeric cell to perturb");
+    let replacement = if bumped == '1' { '2' } else { '1' };
+    let pos = lines[1].rfind(bumped).unwrap();
+    lines[1].replace_range(pos..pos + 1, &replacement.to_string());
+    fs::write(&fig, format!("{}\n", lines.join("\n"))).unwrap();
+
+    let r = goldens::check(&dir, &ctx, &open).expect("perturbed check");
+    assert!(!r.passed(), "perturbations must be caught:\n{}", r.to_text());
+    let fails: Vec<&str> = r
+        .entries
+        .iter()
+        .filter(|e| e.status == CheckStatus::Fail)
+        .map(|e| e.id.as_str())
+        .collect();
+    assert_eq!(fails, vec!["table2", "expected_round_binary8"], "{}", r.to_text());
+    let er_fail = r.entries.iter().find(|e| e.id == "expected_round_binary8").unwrap();
+    assert!(er_fail.detail.contains("1 ulp"), "{}", er_fail.detail);
+    let fig_fail = r.entries.iter().find(|e| e.id == "table2").unwrap();
+    assert!(fig_fail.detail.contains("golden"), "{}", fig_fail.detail);
+
+    // A deleted golden under `require` fails with remediation instead of
+    // silently bootstrapping.
+    fs::remove_file(&fig).unwrap();
+    let strict = CheckOpts { require: true, stream_change: false };
+    let r = goldens::check(&dir, &ctx, &strict).expect("require check");
+    assert!(!r.passed());
+    let missing = r.entries.iter().find(|e| e.id == "table2").unwrap();
+    assert_eq!(missing.status, CheckStatus::Fail);
+    assert!(missing.detail.contains("extract"), "{}", missing.detail);
+    assert!(!dir.join("table2.csv").exists(), "require mode must not bootstrap");
+
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -46,3 +46,10 @@ ls -l BENCH_*.json
 if ! check_provenance "after run"; then
     echo "WARNING: some artifacts above were NOT refreshed by this run (stale seed estimates remain)." >&2
 fi
+
+# Append the freshly measured artifacts to the cross-PR perf trajectory
+# (BENCH_history.jsonl) with machine provenance. The appender refuses any
+# artifact still carrying the SEED ESTIMATE marker, so a partially stale
+# run records only its measured entries.
+echo "== appending to BENCH_history.jsonl =="
+python3 scripts/bench_history.py

@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Append the current BENCH_*.json artifacts to BENCH_history.jsonl.
+
+One JSONL line per artifact per invocation, stamped with machine
+provenance (hostname, platform, CPU count, UTC timestamp, git commit), so
+the perf trajectory is tracked *across* PRs instead of each PR
+overwriting the last measurement. Artifacts still carrying the
+hand-projected ``SEED ESTIMATE`` marker are refused: history records
+measurements only.
+
+Stdlib only. Usage:  python3 scripts/bench_history.py [artifact.json ...]
+(defaults to every BENCH_*.json in the repo root).
+"""
+
+import datetime
+import glob
+import json
+import os
+import platform
+import socket
+import subprocess
+import sys
+
+
+def git_commit():
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, check=True,
+        )
+        return out.stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def main():
+    explicit = [os.path.abspath(p) for p in sys.argv[1:]]
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    os.chdir(root)
+    paths = explicit or sorted(glob.glob("BENCH_*.json"))
+    if not paths:
+        print("bench_history: no BENCH_*.json artifacts found, nothing to append")
+        return 0
+    provenance = {
+        "host": socket.gethostname(),
+        "platform": platform.platform(),
+        "cpus": os.cpu_count(),
+        "utc": datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "commit": git_commit(),
+    }
+    appended = 0
+    with open("BENCH_history.jsonl", "a") as hist:
+        for path in paths:
+            with open(path) as f:
+                try:
+                    artifact = json.load(f)
+                except json.JSONDecodeError as e:
+                    print(f"bench_history: skipping unparsable {path}: {e}", file=sys.stderr)
+                    continue
+            blob = json.dumps(artifact)
+            if "SEED ESTIMATE" in blob:
+                print(
+                    f"bench_history: refusing {path}: carries the hand-projected "
+                    "'SEED ESTIMATE' marker (history records measurements only)",
+                    file=sys.stderr,
+                )
+                continue
+            hist.write(json.dumps({
+                "artifact": os.path.basename(path),
+                "provenance": provenance,
+                "data": artifact,
+            }, sort_keys=True) + "\n")
+            appended += 1
+    print(f"bench_history: appended {appended} artifact(s) to BENCH_history.jsonl")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

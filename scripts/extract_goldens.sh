@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Regenerate every checked-in golden artifact from the current tree.
+#
+#   ./scripts/extract_goldens.sh
+#
+# Builds the release binary, runs `lpgd goldens extract` (figure CSVs,
+# band sidecars, native-provenance expected-round bit table, manifest),
+# then re-stamps the bit table from the independent Python generator so
+# the committed table carries cross-language provenance — the golden
+# check then verifies Rust-vs-Python agreement (<= 1 ulp) on every run
+# instead of Rust against itself. Commit the resulting goldens/ diff
+# from the CI reference platform (figure goldens pin libm; see
+# goldens/README.md).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== lpgd goldens extract =="
+./target/release/lpgd goldens extract --dir goldens
+
+echo "== cross-language expected-round table =="
+python3 scripts/gen_expected_round_goldens.py goldens
+
+echo "== goldens/ status =="
+git status --short goldens/ || true
+echo "review and commit the goldens/ diff (reference platform only)"

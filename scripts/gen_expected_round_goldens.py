@@ -1,0 +1,178 @@
+#!/usr/bin/env python3
+"""Generate goldens/expected_round_binary8.csv from first principles.
+
+This is the *independent* (cross-language) generator for the expected-round
+golden table: it re-derives the closed-form ``E[fl(x)]`` bias law of every
+built-in rounding scheme on the full binary8 grid directly from the paper's
+definitions (arXiv:2202.12276, Definitions 1-3), with no Rust code in the
+loop. The Rust golden check (``rust/src/coordinator/goldens.rs``) compares
+its native closed forms against this table with <= 1 ulp of slack (the
+``cross-language`` provenance sidecar); ``lpgd goldens extract`` re-stamps
+the table from the Rust side (``native``), after which the comparison is
+bit-exact.
+
+Every arithmetic step below mirrors the Rust implementation operation for
+operation (same IEEE double ops, same order), so the two tables are
+expected to agree bit for bit; the 1-ulp slack is cushion, not a license.
+
+Stdlib only. Usage:  python3 scripts/gen_expected_round_goldens.py [outdir]
+"""
+
+import math
+import struct
+import sys
+
+
+SIG_BITS = 3          # binary8 (E5M2): significand bits incl. implicit
+E_MIN, E_MAX = -14, 15
+
+
+def bits(x):
+    """IEEE-754 bit pattern of a double, as 16 hex digits."""
+    return "%016x" % struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def phi(y):
+    """Clamp to [0, 1] (the paper's phi; matches Rust f64::clamp here)."""
+    return min(max(y, 0.0), 1.0)
+
+
+def positive_points():
+    """Ascending positive binary8 grid: subnormals m*2^-16 (m=1..3), then
+    m*2^(e-2) (m=4..7) per binade e in [E_MIN, E_MAX] — the same
+    enumeration as the Rust side (goldens::binary8_positive_points)."""
+    q = math.ldexp(1.0, E_MIN - SIG_BITS + 1)   # 2^-16
+    pts = [m * q for m in range(1, 4)]
+    for e in range(E_MIN, E_MAX + 1):
+        ulp = math.ldexp(1.0, e - SIG_BITS + 1)
+        pts.extend(m * ulp for m in range(4, 8))
+    return pts
+
+
+def samples():
+    """0, every grid point, every gap's quarter/half/three-quarter points,
+    then the negative mirror of everything (matching the Rust order)."""
+    pts = positive_points()
+    xs = [0.0]
+    prev = 0.0
+    for p in pts:
+        g = p - prev
+        xs.append(prev + 0.25 * g)
+        xs.append(prev + 0.5 * g)
+        xs.append(prev + 0.75 * g)
+        xs.append(p)
+        prev = p
+    xs.extend(-x for x in xs[1:])
+    return xs
+
+
+def round_nearest_even(x, lo, hi):
+    """RN on an interior point: nearer neighbor; ties to the neighbor with
+    even significand multiple (parity of |lo|/gap, valid across binades
+    and signs — mirrors fp::round::round_nearest_even)."""
+    dlo, dhi = x - lo, hi - x
+    if dlo < dhi:
+        return lo
+    if dhi < dlo:
+        return hi
+    m_lo = abs(lo / (hi - lo))
+    return lo if int(m_lo) % 2 == 0 else hi
+
+
+def expected(mode, x, lo, hi, v):
+    """Closed-form E[fl(x)] for interior x in (lo, hi); mirrors
+    fp::round::expected_round arm by arm."""
+    if mode == "rn":
+        return round_nearest_even(x, lo, hi)
+    if mode == "rd":
+        return lo
+    if mode == "ru":
+        return hi
+    if mode == "rz":
+        return lo if x > 0.0 else hi
+    frac = (x - lo) / (hi - lo)
+    if mode == "sr":
+        p_down = 1.0 - frac
+    elif mode.startswith("sr_eps:"):
+        eps = float(mode.split(":")[1])
+        p_down = phi(1.0 - frac - math.copysign(1.0, x) * eps)
+    else:  # signed:<eps>
+        eps = float(mode.split(":")[1])
+        sv = 0.0 if v == 0.0 else math.copysign(1.0, v)
+        p_down = phi(1.0 - frac + sv * eps)
+    return p_down * lo + (1.0 - p_down) * hi
+
+
+# (column label, mode spec, steering v: "x" | +1 | -1 | 0) — order must
+# match goldens::expected_round_columns on the Rust side.
+COLUMNS = [
+    ("rn", "rn", "x"),
+    ("rd", "rd", "x"),
+    ("ru", "ru", "x"),
+    ("rz", "rz", "x"),
+    ("sr", "sr", "x"),
+    ("sr_eps_0.1", "sr_eps:0.1", "x"),
+    ("sr_eps_0.25", "sr_eps:0.25", "x"),
+    ("sr_eps_0.4", "sr_eps:0.4", "x"),
+    ("signed_0.1_vpos", "signed:0.1", 1.0),
+    ("signed_0.1_vneg", "signed:0.1", -1.0),
+    ("signed_0.25_vpos", "signed:0.25", 1.0),
+    ("signed_0.25_vneg", "signed:0.25", -1.0),
+    ("signed_0.4_vpos", "signed:0.4", 1.0),
+    ("signed_0.4_vneg", "signed:0.4", -1.0),
+    ("signed_0.25_v0", "signed:0.25", 0.0),
+]
+
+
+def main():
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "goldens"
+    pts = positive_points()
+    grid = set(pts) | {0.0} | {-p for p in pts}
+    # Neighbor lookup for interior samples: sorted grid, bisect by value.
+    ordered = sorted(grid)
+
+    def neighbors(x):
+        import bisect
+
+        i = bisect.bisect_left(ordered, x)
+        return ordered[i - 1], ordered[i]
+
+    rows = []
+    for x in samples():
+        row = [bits(x)]
+        on_grid = x in grid
+        if on_grid:
+            row.extend(bits(x) for _ in COLUMNS)
+        else:
+            lo, hi = neighbors(x)
+            for _, mode, steer in COLUMNS:
+                v = x if steer == "x" else steer
+                row.append(bits(expected(mode, x, lo, hi, v)))
+        rows.append(row)
+
+    header = ["x_bits"] + [c[0] for c in COLUMNS]
+    csv_path = f"{outdir}/expected_round_binary8.csv"
+    with open(csv_path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for row in rows:
+            f.write(",".join(row) + "\n")
+    with open(f"{outdir}/expected_round_binary8.provenance", "w") as f:
+        f.write("cross-language\n")
+
+    # Self-checks on the laws themselves (cheap invariants; a violation
+    # means the generator, not the data, is wrong).
+    hdr_idx = {name: i + 1 for i, (name, _, _) in enumerate(COLUMNS)}
+    for row in rows:
+        x = struct.unpack("<d", struct.pack("<Q", int(row[0], 16)))[0]
+        sr = struct.unpack("<d", struct.pack("<Q", int(row[hdr_idx["sr"]], 16)))[0]
+        assert sr == x, f"SR must be unbiased: x={x!r} sr={sr!r}"
+        assert row[hdr_idx["signed_0.25_v0"]] == row[hdr_idx["sr"]], "v=0 degenerates to SR"
+        rd = struct.unpack("<d", struct.pack("<Q", int(row[hdr_idx["rd"]], 16)))[0]
+        ru = struct.unpack("<d", struct.pack("<Q", int(row[hdr_idx["ru"]], 16)))[0]
+        assert rd <= x <= ru, f"RD/RU must bracket x={x!r}"
+
+    print(f"wrote {csv_path}: {len(rows)} rows x {len(header)} columns (cross-language provenance)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,251 @@
+#!/usr/bin/env python3
+"""Render the golden validation index + figure CSVs as one static HTML page.
+
+Consumes ``report/validation.json`` (written by ``lpgd goldens check
+--report``) and every ``goldens/<id>.csv`` figure artifact, and emits a
+single self-contained HTML file with inline SVG line charts — no
+JavaScript, no external assets, suitable for a CI artifact upload.
+
+Stdlib only. Usage:
+    python3 scripts/render_report.py <goldens-dir> <validation.json> <out.html>
+"""
+
+import csv
+import html
+import json
+import math
+import os
+import sys
+
+# Chart geometry (pixels).
+W, H = 640, 320
+ML, MR, MT, MB = 56, 16, 16, 36
+PALETTE = [
+    "#1f77b4", "#d62728", "#2ca02c", "#ff7f0e", "#9467bd",
+    "#8c564b", "#e377c2", "#7f7f7f", "#bcbd22", "#17becf",
+]
+
+
+def parse_float(cell):
+    """A figure cell as float, or None for the NaN marker / non-numerics."""
+    cell = cell.strip()
+    if cell in ("", "-"):
+        return None
+    try:
+        v = float(cell)
+    except ValueError:
+        return None
+    return v if math.isfinite(v) else None
+
+
+def load_csv(path):
+    with open(path, newline="") as f:
+        rows = list(csv.reader(f))
+    if not rows:
+        return [], []
+    return rows[0], rows[1:]
+
+
+def axis_ticks(lo, hi, n=5):
+    """n evenly spaced tick values across [lo, hi]."""
+    if hi <= lo:
+        return [lo]
+    return [lo + (hi - lo) * i / (n - 1) for i in range(n)]
+
+
+def fmt_tick(v, log):
+    if log:
+        v = 10.0 ** v
+    if v == 0:
+        return "0"
+    if abs(v) >= 1e4 or abs(v) < 1e-3:
+        return f"{v:.1e}"
+    return f"{v:g}"
+
+
+def svg_chart(header, rows, title):
+    """An inline SVG line chart: first numeric-looking column as x (row
+    index otherwise), every other numeric column a polyline. Returns None
+    when nothing is chartable (e.g. all-text tables)."""
+    if not rows or len(header) < 2:
+        return None
+    cols = list(zip(*rows))  # column-major cell strings
+    x_vals = [parse_float(c) for c in cols[0]]
+    use_index = any(v is None for v in x_vals)
+    xs = list(range(len(rows))) if use_index else x_vals
+    series = []
+    for ci in range(1, len(header)):
+        ys = [parse_float(c) for c in cols[ci]]
+        pts = [(x, y) for x, y in zip(xs, ys) if y is not None]
+        if len(pts) >= 2:
+            series.append((header[ci], pts))
+    if not series:
+        return None
+
+    all_y = [y for _, pts in series for _, y in pts]
+    # Log y-axis when the data is positive and spans several decades
+    # (typical for the loss/error curves in this repo).
+    log_y = min(all_y) > 0.0 and max(all_y) / min(all_y) > 1e3
+    if log_y:
+        series = [(n, [(x, math.log10(y)) for x, y in pts]) for n, pts in series]
+        all_y = [y for _, pts in series for _, y in pts]
+    all_x = [x for _, pts in series for x, _ in pts]
+    x0, x1 = min(all_x), max(all_x)
+    y0, y1 = min(all_y), max(all_y)
+    if x1 == x0:
+        x1 = x0 + 1.0
+    if y1 == y0:
+        y0, y1 = y0 - 0.5, y1 + 0.5
+    pad = 0.04 * (y1 - y0)
+    y0, y1 = y0 - pad, y1 + pad
+
+    def px(x):
+        return ML + (x - x0) / (x1 - x0) * (W - ML - MR)
+
+    def py(y):
+        return H - MB - (y - y0) / (y1 - y0) * (H - MT - MB)
+
+    parts = [
+        f'<svg viewBox="0 0 {W} {H}" width="{W}" height="{H}" role="img" '
+        f'aria-label="{html.escape(title, quote=True)}">',
+        f'<rect x="{ML}" y="{MT}" width="{W - ML - MR}" height="{H - MT - MB}" '
+        'fill="none" stroke="#ccc"/>',
+    ]
+    for t in axis_ticks(y0, y1):
+        y = py(t)
+        parts.append(f'<line x1="{ML}" y1="{y:.1f}" x2="{W - MR}" y2="{y:.1f}" stroke="#eee"/>')
+        parts.append(
+            f'<text x="{ML - 6}" y="{y + 4:.1f}" text-anchor="end" font-size="11" '
+            f'fill="#555">{fmt_tick(t, log_y)}</text>'
+        )
+    for t in axis_ticks(x0, x1):
+        x = px(t)
+        parts.append(
+            f'<text x="{x:.1f}" y="{H - MB + 16}" text-anchor="middle" font-size="11" '
+            f'fill="#555">{fmt_tick(t, False)}</text>'
+        )
+    x_label = "row" if use_index else html.escape(header[0])
+    parts.append(
+        f'<text x="{(ML + W - MR) / 2:.0f}" y="{H - 6}" text-anchor="middle" '
+        f'font-size="12" fill="#333">{x_label}'
+        f'{" (log y)" if log_y else ""}</text>'
+    )
+    for si, (name, pts) in enumerate(series):
+        color = PALETTE[si % len(PALETTE)]
+        d = " ".join(f"{px(x):.1f},{py(y):.1f}" for x, y in pts)
+        parts.append(f'<polyline points="{d}" fill="none" stroke="{color}" stroke-width="1.5"/>')
+        ly = MT + 14 + 14 * si
+        parts.append(f'<line x1="{ML + 8}" y1="{ly - 4}" x2="{ML + 26}" y2="{ly - 4}" stroke="{color}" stroke-width="2"/>')
+        parts.append(
+            f'<text x="{ML + 30}" y="{ly}" font-size="11" fill="#333">{html.escape(name)}</text>'
+        )
+    parts.append("</svg>")
+    return "\n".join(parts)
+
+
+STATUS_STYLE = {
+    "pass": ("PASS", "#2e7d32"),
+    "bootstrapped": ("BOOTSTRAPPED", "#e65100"),
+    "fail": ("FAIL", "#c62828"),
+}
+
+
+def main():
+    if len(sys.argv) != 4:
+        print(__doc__, file=sys.stderr)
+        return 2
+    goldens_dir, validation_path, out_path = sys.argv[1:4]
+
+    validation = {"entries": [], "passed": False}
+    if os.path.exists(validation_path):
+        with open(validation_path) as f:
+            validation = json.load(f)
+    entries = validation.get("entries", [])
+    passed = validation.get("passed", False)
+
+    body = []
+    verdict, vcolor = ("OK", "#2e7d32") if passed else ("FAIL", "#c62828")
+    body.append(f'<h1>Golden replication report — <span style="color:{vcolor}">{verdict}</span></h1>')
+    counts = {}
+    for e in entries:
+        counts[e.get("status", "?")] = counts.get(e.get("status", "?"), 0) + 1
+    body.append(
+        "<p>"
+        + ", ".join(f"{n} {s}" for s, n in sorted(counts.items()))
+        + f" — {len(entries)} checks total.</p>"
+    )
+
+    body.append("<h2>Validation index</h2>")
+    body.append('<table><tr><th>check</th><th>status</th><th>mode</th><th>cells</th><th>detail</th></tr>')
+    for e in entries:
+        label, color = STATUS_STYLE.get(e.get("status", ""), (e.get("status", "?"), "#333"))
+        body.append(
+            "<tr>"
+            f'<td><a href="#{html.escape(e.get("id", ""), quote=True)}">{html.escape(e.get("id", "?"))}</a></td>'
+            f'<td style="color:{color};font-weight:bold">{label}</td>'
+            f'<td>{html.escape(e.get("mode", ""))}</td>'
+            f'<td>{e.get("cells", 0)}</td>'
+            f'<td>{html.escape(e.get("detail", ""))}</td>'
+            "</tr>"
+        )
+    body.append("</table>")
+
+    body.append("<h2>Figures</h2>")
+    charted = 0
+    names = sorted(
+        n for n in os.listdir(goldens_dir)
+        if n.endswith(".csv") and not n.endswith(".band.csv")
+    ) if os.path.isdir(goldens_dir) else []
+    for name in names:
+        stem = name[:-4]
+        body.append(f'<h3 id="{html.escape(stem, quote=True)}">{html.escape(stem)}</h3>')
+        if stem.startswith("expected_round_"):
+            header, rows = load_csv(os.path.join(goldens_dir, name))
+            body.append(
+                f"<p>Bit-level expectation table: {len(rows)} rows × {len(header)} "
+                "columns of hex f64 bit patterns (see goldens/README.md for "
+                "decoding) — compared exactly, not charted.</p>"
+            )
+            continue
+        header, rows = load_csv(os.path.join(goldens_dir, name))
+        svg = svg_chart(header, rows, stem)
+        if svg is None:
+            body.append(f"<p>No numeric series to chart ({len(rows)} rows).</p>")
+        else:
+            body.append(svg)
+            charted += 1
+        band_path = os.path.join(goldens_dir, f"{stem}.band.csv")
+        if os.path.exists(band_path):
+            bh, _ = load_csv(band_path)
+            banded = ", ".join(html.escape(c) for c in bh[1:])
+            body.append(f"<p class=note>Stochastic columns (CLT-banded under stream change): {banded}.</p>")
+        else:
+            body.append("<p class=note>Fully deterministic table: byte-exact comparison.</p>")
+    if not names:
+        body.append(
+            "<p>No golden CSVs found — run <code>./scripts/extract_goldens.sh</code> "
+            "or <code>cargo test -q golden</code> to bootstrap them.</p>"
+        )
+
+    doc = f"""<!DOCTYPE html>
+<html lang="en"><head><meta charset="utf-8">
+<title>Golden replication report</title>
+<style>
+body {{ font: 14px/1.5 system-ui, sans-serif; margin: 2em auto; max-width: 760px; color: #222; }}
+table {{ border-collapse: collapse; width: 100%; }}
+th, td {{ border: 1px solid #ddd; padding: 4px 8px; text-align: left; font-size: 13px; }}
+th {{ background: #f5f5f5; }}
+.note {{ color: #666; font-size: 12px; }}
+svg {{ max-width: 100%; height: auto; }}
+</style></head><body>
+{os.linesep.join(body)}
+</body></html>
+"""
+    with open(out_path, "w") as f:
+        f.write(doc)
+    print(f"render_report: wrote {out_path} ({len(entries)} checks, {charted} charts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Build the static HTML validation report (report/index.html).
+#
+#   ./scripts/report.sh            # tolerant: report reflects pass/fail
+#   LPGD_GOLDEN_REQUIRE=1 ./scripts/report.sh   # also exit non-zero on
+#                                               # missing/drifted goldens
+#
+# Pipeline: run the golden check with a machine-readable validation
+# index (`lpgd goldens check --report report/validation.json`), then
+# render the index plus every goldens/ figure CSV into a single static
+# HTML page with inline SVG charts (scripts/render_report.py, stdlib
+# only). CI uploads report/ as the `golden-report` artifact.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+mkdir -p report
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== lpgd goldens check --report report/validation.json =="
+check_args=(goldens check --dir goldens --report report/validation.json)
+if [ "${LPGD_GOLDEN_REQUIRE:-0}" = "1" ]; then
+    check_args+=(--require)
+fi
+status=0
+./target/release/lpgd "${check_args[@]}" || status=$?
+
+echo "== rendering report/index.html =="
+python3 scripts/render_report.py goldens report/validation.json report/index.html
+
+echo "report written to report/index.html (golden check exit: $status)"
+exit "$status"

@@ -8,6 +8,10 @@
 # 2b. the fault-injection / crash-resume acceptance tests, run by name so
 #    a regression in the robustness layer (docs/robustness.md) is
 #    reported as its own failing stage rather than buried in the suite.
+# 2c. the golden-figure replication suite in REQUIRE mode: stage 2 already
+#    ran it permissively (bootstrapping any missing goldens), so this
+#    stage exits non-zero if goldens are still missing or drifted —
+#    verify.sh no longer warn-skips an empty goldens/ (docs/testing.md).
 # 3. cargo doc with the crate's #![warn(missing_docs)] escalated to an
 #    error, so any undocumented public API — notably the new scheduler
 #    and kernel surfaces — fails loudly instead of rotting silently.
@@ -36,6 +40,9 @@ echo "== fault-injection + crash-resume acceptance tests =="
 cargo test -q --test integration fault_tolerance
 cargo test -q --lib journal
 cargo test -q --lib health
+
+echo "== golden-figure replication (LPGD_GOLDEN_REQUIRE=1) =="
+LPGD_GOLDEN_REQUIRE=1 cargo test -q --test golden_diff
 
 echo "== cargo doc --no-deps (missing_docs -> error) =="
 RUSTDOCFLAGS="-D missing_docs" cargo doc --no-deps --quiet
