@@ -7,8 +7,9 @@
 include!("harness.rs");
 
 use lpgd::data::synth;
-use lpgd::fp::{FixedPoint, FpFormat, LpCtx, Rng, Scheme};
+use lpgd::fp::{backend_label, set_backend, FixedPoint, FpFormat, LpCtx, Rng, Scheme, SimdChoice};
 use lpgd::gd::engine::{GdConfig, GdEngine, GradModel, SchemePolicy};
+use lpgd::gd::run_lane_batch;
 use lpgd::problems::{Mlr, Problem, Quadratic, TwoLayerNn};
 
 fn main() {
@@ -118,6 +119,66 @@ fn main() {
             results.push(r_ref);
             results.push(r_new);
         }
+    }
+
+    println!("-- ACCEPTANCE: 16-seed SR repetition sweep, dense quad n=256 x 10 steps --");
+    {
+        // Baseline: 16 sequential scalar-engine runs on forced-scalar
+        // kernels (the pre-PR repetition loop). Fast path: one
+        // run_lane_batch call at L=16 under the runtime-detected SIMD
+        // backend. Both sides are timed by this run — never projected.
+        let (p, x0, t) = Quadratic::setting2(256, 0);
+        let cfg = GdConfig::new(FpFormat::BINARY8, schemes, t, 10);
+        let roots: Vec<Rng> = (0..16u64).map(|l| Rng::new(1000 + l)).collect();
+        let elems = 16u64 * 10 * 256 * 256;
+        // Bit-identity gate first: the lane batch under SIMD must match
+        // the scalar engines record for record before timing is trusted.
+        {
+            set_backend(SimdChoice::Scalar);
+            let seq: Vec<_> = roots
+                .iter()
+                .map(|root| {
+                    let mut c = cfg.clone();
+                    c.rng = Some(root.clone());
+                    GdEngine::new(c, &p, &x0).run(None)
+                })
+                .collect();
+            set_backend(SimdChoice::Auto);
+            let batched = run_lane_batch(&cfg, &p, &x0, &roots, None);
+            for (a, b) in seq.iter().zip(&batched) {
+                assert_eq!(a.records.len(), b.records.len());
+                for (ra, rb) in a.records.iter().zip(&b.records) {
+                    assert_eq!(
+                        ra.f.to_bits(),
+                        rb.f.to_bits(),
+                        "lane batch diverged from scalar engines"
+                    );
+                }
+            }
+        }
+        set_backend(SimdChoice::Scalar);
+        let base = bench("gd 16 seeds sequential scalar engines", elems, || {
+            for root in &roots {
+                let mut c = cfg.clone();
+                c.rng = Some(root.clone());
+                let mut e = GdEngine::new(c, &p, &x0);
+                std::hint::black_box(e.run(None));
+            }
+        });
+        set_backend(SimdChoice::Auto);
+        let fast =
+            bench(&format!("gd 16 seeds lane batch L=16 ({})", backend_label()), elems, || {
+                std::hint::black_box(run_lane_batch(&cfg, &p, &x0, &roots, None));
+            });
+        let s = report_speedup(&base, &fast);
+        println!(
+            "acceptance: {s:.2}x SIMD+lanes vs sequential scalar (target >= 4.0x) -> {}",
+            if s >= 4.0 { "PASS" } else { "BELOW TARGET" }
+        );
+        speedups.push(("gd_b8_sr_16seeds_scalar_seq_vs_simd_lanes".into(), s));
+        results.push(base);
+        results.push(fast);
+        set_backend(SimdChoice::Auto);
     }
 
     println!("-- ablation: sigma1 model (dense quad n=300) --");

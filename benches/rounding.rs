@@ -5,7 +5,8 @@
 include!("harness.rs");
 
 use lpgd::fp::{
-    round, round_slice, round_slice_with, FixedPoint, FpFormat, Rng, RoundPlan, Rounding,
+    avx2_active, backend_label, round, round_slice, round_slice_with, set_backend, FixedPoint,
+    FpFormat, Rng, RoundPlan, Rounding, SimdChoice,
 };
 
 fn main() {
@@ -55,6 +56,55 @@ fn main() {
         speedups.push(("sr_scalar_vs_slice".into(), s));
         results.push(scalar);
         results.push(fused);
+    }
+
+    println!("-- SIMD dispatch: forced-scalar vs runtime-detected (binary8 slice) --");
+    {
+        let plan = RoundPlan::new(fmt);
+        // Bit-identity gate before any timing is trusted: both backends
+        // must produce identical outputs AND consume the stream
+        // identically (docs/performance.md).
+        {
+            let (mut ra, mut rb) = (Rng::new(77), Rng::new(77));
+            let mut a = xs.clone();
+            let mut b = xs.clone();
+            set_backend(SimdChoice::Scalar);
+            plan.round_slice(Rounding::Sr, &mut a, &mut ra);
+            set_backend(SimdChoice::Auto);
+            plan.round_slice(Rounding::Sr, &mut b, &mut rb);
+            assert_eq!(a, b, "SIMD backend diverged bitwise from the scalar kernel");
+            assert_eq!(ra.next_u64(), rb.next_u64(), "SIMD backend desynced the bit stream");
+        }
+        for (mode, tag) in [
+            (Rounding::Sr, "SR"),
+            (Rounding::RoundNearestEven, "RN"),
+            (Rounding::SrEps(0.25), "SR_eps(0.25)"),
+        ] {
+            set_backend(SimdChoice::Scalar);
+            let mut r = Rng::new(31);
+            let mut buf = xs.clone();
+            let scalar = bench(&format!("round_slice {tag} forced-scalar"), n as u64, || {
+                buf.copy_from_slice(&xs);
+                plan.round_slice(mode, &mut buf, &mut r);
+            });
+            set_backend(SimdChoice::Auto);
+            let mut r2 = Rng::new(31);
+            let mut buf2 = xs.clone();
+            let auto =
+                bench(&format!("round_slice {tag} auto ({})", backend_label()), n as u64, || {
+                    buf2.copy_from_slice(&xs);
+                    plan.round_slice(mode, &mut buf2, &mut r2);
+                });
+            if avx2_active() {
+                let s = report_speedup(&scalar, &auto);
+                speedups.push((format!("slice_scalar_vs_simd {tag}"), s));
+            } else {
+                println!("note: AVX2 unavailable here; both lanes ran the scalar kernel");
+            }
+            results.push(scalar);
+            results.push(auto);
+        }
+        set_backend(SimdChoice::Auto);
     }
 
     println!("-- open-scheme dispatch overhead (Scheme handle vs enum, SR slice) --");

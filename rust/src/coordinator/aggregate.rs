@@ -7,8 +7,9 @@
 //! seed order, so the aggregate is bit-identical for every `--jobs` value
 //! (floating-point summation order is fixed by the ordered merge).
 
+use crate::coordinator::health::{CellOutcome, FaultPolicy};
 use crate::coordinator::journal::{sweep_cells, SweepFaults};
-use crate::coordinator::scheduler::run_indexed;
+use crate::coordinator::scheduler::{cell_stream, run_indexed, run_indexed_faulted};
 use crate::gd::trace::{mean_series, variance_series, Trace};
 
 /// Aggregated series over seeds.
@@ -82,6 +83,110 @@ pub fn expectation_sweep(
     (result, notes)
 }
 
+/// Lane-batched [`expectation_sweep`]: the `seeds` repetitions are mapped
+/// onto lane batches of width `lanes` (each batch one scheduler task
+/// running all its repetitions over a shared data pass, e.g. through
+/// [`crate::gd::run_lane_batch`]) while **cell identities stay per
+/// repetition**: journal keys are the same `(exp, label, seed)` streams as
+/// the scalar sweep, journal lines are appended one per repetition, and
+/// resume replays per repetition — so a journal written at one lane width
+/// resumes correctly at any other, and the aggregate is bit-identical to
+/// [`expectation_sweep`] at every width (each lane's trace is bit-identical
+/// to its scalar run; see `docs/performance.md`).
+///
+/// `batch(seeds)` must return one [`Trace`] per requested seed, in order.
+/// Fault isolation is per batch: a panicking batch retries (deterministic)
+/// and, if terminally failed, all its repetitions resolve under the fault
+/// policy together (fail-fast panics the sweep; skip/degrade drop them from
+/// the aggregate with a note — there is no exact-master fallback at this
+/// granularity).
+pub fn expectation_sweep_lanes(
+    exp: &str,
+    label: &str,
+    faults: &SweepFaults<'_>,
+    seeds: usize,
+    lanes: usize,
+    batch: &(dyn Fn(&[u64]) -> Vec<Trace> + Sync),
+    select: &(dyn Fn(&Trace) -> Vec<f64> + Sync),
+) -> (ExpectationResult, Vec<String>) {
+    let lanes = lanes.max(1);
+    let mut values: Vec<Option<Vec<f64>>> = vec![None; seeds];
+    let mut notes = Vec::new();
+    // (1) Replay journaled repetitions — per-rep keys, lane-width agnostic.
+    let mut todo: Vec<u64> = Vec::new();
+    for s in 0..seeds as u64 {
+        match faults.journal.and_then(|j| j.lookup(cell_stream(exp, label, s))) {
+            Some(series) => values[s as usize] = Some(series),
+            None => todo.push(s),
+        }
+    }
+    if todo.len() < seeds {
+        notes.push(format!(
+            "{exp}: resumed {} of {seeds} cells from journal",
+            seeds - todo.len()
+        ));
+    }
+    // (2) Fan the remainder out as lane batches; journal per repetition as
+    // each batch completes.
+    let chunks: Vec<&[u64]> = todo.chunks(lanes).collect();
+    let runs = run_indexed_faulted(
+        faults.jobs,
+        chunks.len(),
+        faults.max_retries,
+        |c| {
+            let ss = chunks[c];
+            let traces = batch(ss);
+            assert_eq!(
+                traces.len(),
+                ss.len(),
+                "lane batch returned {} traces for {} repetitions",
+                traces.len(),
+                ss.len()
+            );
+            traces.iter().map(|t| select(t)).collect::<Vec<Vec<f64>>>()
+        },
+        |c, r| {
+            if let (Some(j), Some(vs)) = (faults.journal, &r.value) {
+                for (&s, v) in chunks[c].iter().zip(vs) {
+                    j.append(cell_stream(exp, label, s), v);
+                }
+            }
+        },
+    );
+    // (3) Resolve batch outcomes under the fault policy.
+    for (c, r) in runs.into_iter().enumerate() {
+        let ss = chunks[c];
+        match r.outcome {
+            CellOutcome::Ok | CellOutcome::Retried(_) => {
+                if let CellOutcome::Retried(k) = r.outcome {
+                    notes.push(format!(
+                        "{exp}: lane batch ({label}, reps {ss:?}) recovered on retry {k}"
+                    ));
+                }
+                for (&s, v) in ss.iter().zip(r.value.expect("succeeded batch has value")) {
+                    values[s as usize] = Some(v);
+                }
+            }
+            CellOutcome::Failed(reason) => match faults.policy {
+                FaultPolicy::FailFast => panic!(
+                    "{exp}: lane batch ({label}, reps {ss:?}) failed after {} retries: {reason}",
+                    faults.max_retries
+                ),
+                FaultPolicy::SkipCell | FaultPolicy::Degrade => notes.push(format!(
+                    "{exp}: lane batch ({label}, reps {ss:?}) failed, skipped: {reason}"
+                )),
+            },
+        }
+    }
+    let all: Vec<Vec<f64>> = values.into_iter().flatten().collect();
+    let result = ExpectationResult {
+        mean: mean_series(&all),
+        variance: variance_series(&all),
+        seeds: all.len(),
+    };
+    (result, notes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,6 +240,79 @@ mod tests {
             expectation_sweep("aexp", "toy", &faults, 6, &toy_trace, &select);
         assert_eq!(swept.seeds, 5);
         assert!(notes.iter().any(|n| n.contains("skipped")), "{notes:?}");
+    }
+
+    /// Lane batching never changes the aggregate: at widths 1, 4 and 8 the
+    /// lane sweep is bit-identical to the scalar [`expectation_sweep`] on
+    /// real stochastic GD cells, and a journal written at one width resumes
+    /// (zero cells re-run) at another.
+    #[test]
+    fn lane_sweep_is_width_invariant_and_resumes_across_widths() {
+        use crate::coordinator::journal::Journal;
+        use crate::fp::{FpFormat, Rng, Rounding};
+        use crate::gd::engine::{GdConfig, GdEngine, StepSchemes};
+        use crate::gd::lanes::run_lane_batch;
+        use crate::problems::Quadratic;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+        let cfg =
+            GdConfig::new(FpFormat::BINARY8, StepSchemes::uniform(Rounding::Sr), 0.05, 30);
+        let select = |t: &Trace| t.objective_series();
+        let scalar_runner = |s: u64| {
+            let mut c = cfg.clone();
+            c.seed = s;
+            GdEngine::new(c, &p, &[1.0]).run(None)
+        };
+        let batch = |ss: &[u64]| {
+            let roots: Vec<Rng> = ss.iter().map(|&s| Rng::new(s)).collect();
+            run_lane_batch(&cfg, &p, &[1.0], &roots, None)
+        };
+        let (plain, _) = expectation_sweep(
+            "lexp",
+            "sr",
+            &SweepFaults::none(1),
+            6,
+            &scalar_runner,
+            &select,
+        );
+        for width in [1usize, 4, 8] {
+            let (laned, notes) = expectation_sweep_lanes(
+                "lexp",
+                "sr",
+                &SweepFaults::none(1),
+                6,
+                width,
+                &batch,
+                &select,
+            );
+            assert_eq!(plain.mean, laned.mean, "width={width}");
+            assert_eq!(plain.variance, laned.variance, "width={width}");
+            assert_eq!(laned.seeds, 6);
+            assert!(notes.is_empty(), "{notes:?}");
+        }
+        // Journal at width 4, resume at width 3: zero batches run.
+        let path = std::env::temp_dir()
+            .join(format!("lpgd_lane_sweep_{}.jsonl", std::process::id()));
+        {
+            let j = Journal::open(&path, false, 5).unwrap();
+            let faults = SweepFaults { journal: Some(&j), ..SweepFaults::none(1) };
+            expectation_sweep_lanes("lexp", "sr", &faults, 6, 4, &batch, &select);
+        }
+        let j = Journal::open(&path, true, 5).unwrap();
+        assert_eq!(j.resumed_cells(), 6);
+        let ran = AtomicUsize::new(0);
+        let counting_batch = |ss: &[u64]| {
+            ran.fetch_add(ss.len(), Ordering::Relaxed);
+            batch(ss)
+        };
+        let faults = SweepFaults { journal: Some(&j), ..SweepFaults::none(1) };
+        let (resumed, notes) =
+            expectation_sweep_lanes("lexp", "sr", &faults, 6, 3, &counting_batch, &select);
+        assert_eq!(ran.load(Ordering::Relaxed), 0);
+        assert_eq!(plain.mean, resumed.mean);
+        assert!(notes.iter().any(|n| n.contains("resumed 6 of 6")), "{notes:?}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::aggregate::expectation_sweep;
+use crate::coordinator::aggregate::expectation_sweep_lanes;
 use crate::coordinator::health::{panic_message, FaultInjector, FaultPolicy};
 use crate::coordinator::journal::{sweep_cells, Journal, SweepFaults};
 use crate::coordinator::registry;
@@ -36,6 +36,12 @@ pub struct ExpCtx {
     /// serial). Any value produces bit-identical results; see
     /// [`crate::coordinator::scheduler`].
     pub jobs: usize,
+    /// Lane width for repetition fan-outs (`--lanes`): seeds execute in
+    /// structure-of-arrays batches of this many interleaved lanes sharing
+    /// one data pass ([`crate::gd::run_lane_batch`]). Like `jobs`, purely
+    /// an execution knob — every width produces bit-identical results and
+    /// journal lines, so it is excluded from [`ExpCtx::config_digest`].
+    pub lanes: usize,
     /// Output directory for CSVs.
     pub out_dir: String,
     /// Image side for the synthetic digit data (paper MNIST: 28).
@@ -82,6 +88,7 @@ impl Default for ExpCtx {
         Self {
             seeds: 5,
             jobs: 0,
+            lanes: 1,
             out_dir: "results".into(),
             side: 14,
             mlr_train: 4000,
@@ -136,9 +143,9 @@ impl ExpCtx {
     /// sizes, epochs, problem dimensions, the MNIST source, the escape
     /// guard). Journal lines carry it, and resume replays only matching
     /// lines — so a journal written under different settings is inert
-    /// rather than corrupting. `seeds`, `jobs`, `out_dir` and the fault
-    /// knobs are deliberately excluded: they select or schedule cells but
-    /// never change an individual cell's output.
+    /// rather than corrupting. `seeds`, `jobs`, `lanes`, `out_dir` and the
+    /// fault knobs are deliberately excluded: they select or schedule cells
+    /// but never change an individual cell's output.
     pub fn config_digest(&self) -> u64 {
         fn eat(mut h: u64, bytes: &[u8]) -> u64 {
             for &b in bytes {
@@ -350,6 +357,16 @@ pub(crate) fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
         cfg.escape = ctx.escape;
         GdEngine::new(cfg, &p, &x0).run(None)
     };
+    // Lane batch runner: the seed repetitions of one scheme family execute
+    // as interleaved lanes over a shared data pass, each lane on the legacy
+    // seed-keyed root — bit-identical to `run` per seed at every `--lanes`.
+    let run_batch = |fmt: FpFormat, schemes: SchemePolicy, seeds: &[u64]| -> Vec<Trace> {
+        let mut cfg = GdConfig::new(fmt, schemes, t_step, steps);
+        cfg.escape = ctx.escape;
+        let roots: Vec<crate::fp::Rng> =
+            seeds.iter().map(|&s| crate::fp::Rng::new(s)).collect();
+        crate::gd::run_lane_batch(&cfg, &p, &x0, &roots, None)
+    };
 
     let id = if dense { "fig3b" } else { "fig3a" };
     // binary32 + RN baseline ("exact" reference), deterministic.
@@ -357,25 +374,27 @@ pub(crate) fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
     // bfloat16: (8a)+(8b) SR with (8c) ∈ {SR, signed-SRε(0.4)}; the seed
     // repetitions fan out across the worker pool through the fault-aware
     // journaled sweep (labels keep the two scheme families' cell identities
-    // apart in the journal).
+    // apart in the journal), `--lanes` at a time as lane batches.
     let faults = ctx.faults();
     let sr_schemes = SchemePolicy::uniform(Scheme::sr());
-    let (sr, sr_notes) = expectation_sweep(
+    let (sr, sr_notes) = expectation_sweep_lanes(
         id,
         "bf16_SR",
         &faults,
         ctx.seeds,
-        &|s| run(FpFormat::BFLOAT16, sr_schemes, s),
+        ctx.lanes,
+        &|ss| run_batch(FpFormat::BFLOAT16, sr_schemes, ss),
         &|t| t.objective_series(),
     );
     let sg_schemes =
         SchemePolicy { grad: Scheme::sr(), mul: Scheme::sr(), sub: Scheme::signed_sr_eps(0.4) };
-    let (signed, sg_notes) = expectation_sweep(
+    let (signed, sg_notes) = expectation_sweep_lanes(
         id,
         "bf16_signed_SReps0.4",
         &faults,
         ctx.seeds,
-        &|s| run(FpFormat::BFLOAT16, sg_schemes, s),
+        ctx.lanes,
+        &|ss| run_batch(FpFormat::BFLOAT16, sg_schemes, ss),
         &|t| t.objective_series(),
     );
     let setting = if dense { "Setting II" } else { "Setting I" };
@@ -1394,6 +1413,7 @@ mod tests {
         let mut b = ExpCtx::quick();
         b.jobs = 7;
         b.seeds = 9;
+        b.lanes = 16;
         b.max_retries = 3;
         b.fault_policy = FaultPolicy::SkipCell;
         assert_eq!(a.config_digest(), b.config_digest());
@@ -1464,6 +1484,22 @@ mod tests {
         let l0 = num(&t.rows[0], 4);
         let l1 = num(&t.rows[1], 4);
         assert!((l0 / l1 - 16.0).abs() < 1e-6, "{l0} vs {l1}");
+    }
+
+    /// `--lanes` is execution-only end to end: the fig3a table (rows, bands
+    /// and notes) is identical at lane widths 1 and 4.
+    #[test]
+    fn fig3a_table_is_lane_width_invariant() {
+        let mut ctx = ExpCtx::quick();
+        ctx.seeds = 3;
+        ctx.quad_n = 20;
+        ctx.quad_steps = 60;
+        ctx.jobs = 1;
+        let narrow = fig3(&ctx, false);
+        ctx.lanes = 4;
+        let wide = fig3(&ctx, false);
+        assert_eq!(narrow.to_csv(), wide.to_csv());
+        assert_eq!(narrow.notes, wide.notes);
     }
 
     #[test]

@@ -325,6 +325,75 @@ pub fn gd_update_health(
     moved
 }
 
+/// Lane-batched [`gd_update_health`]: one fused (8b)+(8c) pass over a
+/// structure-of-arrays slab of `lanes` interleaved repetitions (element `i`
+/// of lane `l` at `i * lanes + l`; see [`crate::fp::lanes::LaneBatch`]).
+/// Per lane, iterates, `moved` flags, health counters and RNG consumption
+/// are bit-identical to running [`gd_update_health`] on that lane's column
+/// with that lane's generators — lane width is an execution strategy, not
+/// part of a trajectory's identity. `rngs_mul[l]` / `rngs_sub[l]` are lane
+/// `l`'s δ₂/δ₃ streams; `health[l]` / `moved[l]` accumulate per lane.
+#[allow(clippy::too_many_arguments)]
+pub fn gd_update_lanes(
+    plan: &RoundPlan,
+    mul_mode: Scheme,
+    sub_mode: Scheme,
+    t: f64,
+    x: &mut [f64],
+    ghat: &[f64],
+    lanes: usize,
+    mbuf: &mut [f64],
+    vneg: &mut [f64],
+    zbuf: &mut [f64],
+    rngs_mul: &mut [Rng],
+    rngs_sub: &mut [Rng],
+    health: &mut [RunHealth],
+    moved: &mut [bool],
+) {
+    debug_assert!(lanes >= 1 && x.len() % lanes == 0);
+    debug_assert!(
+        x.len() == ghat.len()
+            && x.len() == mbuf.len()
+            && x.len() == vneg.len()
+            && x.len() == zbuf.len()
+    );
+    debug_assert!(rngs_mul.len() == lanes && rngs_sub.len() == lanes);
+    debug_assert!(health.len() == lanes && moved.len() == lanes);
+    // (8b): m = fl₂(t·ĝ), steered by −ĝ for steered schemes only (same
+    // staging as `gd_update`; unsteered schemes never read `vneg`).
+    for (m, &g) in mbuf.iter_mut().zip(ghat) {
+        *m = t * g;
+    }
+    let vs_mul: Option<&[f64]> = if mul_mode.uses_steering() {
+        for (v, &g) in vneg.iter_mut().zip(ghat) {
+            *v = -g;
+        }
+        Some(vneg)
+    } else {
+        None
+    };
+    plan.round_slice_lanes_scheme_with(mul_mode, mbuf, lanes, vs_mul, rngs_mul);
+    for (idx, (&m, &g)) in mbuf.iter().zip(ghat).enumerate() {
+        plan.classify(t * g, m, &mut health[idx % lanes]);
+    }
+    // (8c): x̂⁺ = fl₃(x̂ − m), steering v = +ĝ. `x` is untouched until the
+    // commit loop, so the pre-rounding value stays recomputable.
+    for ((z, &xi), &m) in zbuf.iter_mut().zip(x.iter()).zip(mbuf.iter()) {
+        *z = xi - m;
+    }
+    let vs_sub: Option<&[f64]> = if sub_mode.uses_steering() { Some(ghat) } else { None };
+    plan.round_slice_lanes_scheme_with(sub_mode, zbuf, lanes, vs_sub, rngs_sub);
+    for (idx, ((&z, &xi), &m)) in zbuf.iter().zip(x.iter()).zip(mbuf.iter()).enumerate() {
+        plan.classify(xi - m, z, &mut health[idx % lanes]);
+    }
+    for (idx, (xi, &z)) in x.iter_mut().zip(zbuf.iter()).enumerate() {
+        if z != *xi {
+            moved[idx % lanes] = true;
+        }
+        *xi = z;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -548,6 +617,73 @@ mod tests {
             assert_eq!(ra_sub.next_u64(), rb_sub.next_u64());
             // Well-scaled inputs on binary8: no overflow, no NaN.
             assert_eq!(health.nan_inf, 0);
+        }
+    }
+
+    /// Per lane, the lane-batched update is bit-identical to
+    /// `gd_update_health` on that lane's column: iterates, `moved` flags,
+    /// health counters, and both RNG streams.
+    #[test]
+    fn gd_update_lanes_matches_per_lane_scalar() {
+        let n = 33;
+        let plan = RoundPlan::new(B8);
+        let pairings = [
+            (Rounding::RoundTowardZero.scheme(), Rounding::RoundNearestEven.scheme()),
+            (Rounding::Sr.scheme(), Rounding::SignedSrEps(0.25).scheme()),
+        ];
+        for lanes in [1usize, 4, 8] {
+            // Distinct x and ĝ columns per lane.
+            let cols_x: Vec<Vec<f64>> = (0..lanes)
+                .map(|l| {
+                    let mut v = rand_vec(n, 100 + l as u64, 1.0);
+                    plan.round_slice(Rounding::RoundNearestEven, &mut v, &mut Rng::new(0));
+                    v
+                })
+                .collect();
+            let cols_g: Vec<Vec<f64>> =
+                (0..lanes).map(|l| rand_vec(n, 200 + l as u64, 1.0)).collect();
+            for (mul_mode, sub_mode) in pairings {
+                let mut xslab = vec![0.0; n * lanes];
+                let mut gslab = vec![0.0; n * lanes];
+                for i in 0..n {
+                    for l in 0..lanes {
+                        xslab[i * lanes + l] = cols_x[l][i];
+                        gslab[i * lanes + l] = cols_g[l][i];
+                    }
+                }
+                let (mut m, mut vneg, mut z) =
+                    (vec![0.0; n * lanes], vec![0.0; n * lanes], vec![0.0; n * lanes]);
+                let mut rmul: Vec<Rng> = (0..lanes as u64).map(|l| Rng::new(5).split(l)).collect();
+                let mut rsub: Vec<Rng> = (0..lanes as u64).map(|l| Rng::new(6).split(l)).collect();
+                let mut health = vec![RunHealth::default(); lanes];
+                let mut moved = vec![false; lanes];
+                gd_update_lanes(
+                    &plan, mul_mode, sub_mode, 0.5, &mut xslab, &gslab, lanes, &mut m, &mut vneg,
+                    &mut z, &mut rmul, &mut rsub, &mut health, &mut moved,
+                );
+                for l in 0..lanes {
+                    let mut xw = cols_x[l].clone();
+                    let (mut sm, mut sv, mut sz) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+                    let mut om = Rng::new(5).split(l as u64);
+                    let mut os = Rng::new(6).split(l as u64);
+                    let mut oh = RunHealth::default();
+                    let omoved = gd_update_health(
+                        &plan, mul_mode, sub_mode, 0.5, &mut xw, &cols_g[l], &mut sm, &mut sv,
+                        &mut sz, &mut om, &mut os, &mut oh,
+                    );
+                    for i in 0..n {
+                        assert_eq!(
+                            xslab[i * lanes + l].to_bits(),
+                            xw[i].to_bits(),
+                            "lanes={lanes} lane={l} i={i}"
+                        );
+                    }
+                    assert_eq!(moved[l], omoved, "lane {l} moved");
+                    assert_eq!(health[l], oh, "lane {l} health");
+                    assert_eq!(rmul[l].next_u64(), om.next_u64(), "lane {l} mul stream");
+                    assert_eq!(rsub[l].next_u64(), os.next_u64(), "lane {l} sub stream");
+                }
+            }
         }
     }
 }

@@ -1,0 +1,137 @@
+//! Structure-of-arrays lane batches for multi-seed execution.
+//!
+//! A [`LaneBatch`] holds `lanes` independent copies ("lanes") of an
+//! `n`-element vector in one contiguous slab, element-major and
+//! lane-minor: element `i` of lane `l` lives at `i * lanes + l`. That
+//! layout puts the same element of every lane side by side, so the
+//! per-element math of the GD hot path (gradient accumulation, rounding,
+//! the update kernels) runs once over the slab and vectorizes across
+//! lanes, while each lane still carries its own RNG stream and therefore
+//! reproduces, bit for bit, the scalar run it stands for (see
+//! `docs/performance.md`).
+//!
+//! Lanes are an execution strategy, never part of a result's identity:
+//! everything downstream (journals, goldens, CSV artifacts) sees per-lane
+//! columns identical to scalar runs.
+
+/// A structure-of-arrays slab of `lanes` interleaved `n`-element vectors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneBatch {
+    n: usize,
+    lanes: usize,
+    data: Vec<f64>,
+}
+
+impl LaneBatch {
+    /// An all-zero batch of `lanes` vectors of `n` elements each.
+    pub fn zeros(n: usize, lanes: usize) -> Self {
+        let lanes = lanes.max(1);
+        Self { n, lanes, data: vec![0.0; n * lanes] }
+    }
+
+    /// A batch with every lane initialised to a copy of `xs`.
+    pub fn broadcast(xs: &[f64], lanes: usize) -> Self {
+        let lanes = lanes.max(1);
+        let mut data = Vec::with_capacity(xs.len() * lanes);
+        for &x in xs {
+            data.extend(std::iter::repeat(x).take(lanes));
+        }
+        Self { n: xs.len(), lanes, data }
+    }
+
+    /// Number of elements per lane.
+    pub fn elems(&self) -> usize {
+        self.n
+    }
+
+    /// Number of lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Flat index of element `i` in lane `l`.
+    #[inline(always)]
+    pub fn idx(&self, i: usize, l: usize) -> usize {
+        i * self.lanes + l
+    }
+
+    /// Element `i` of lane `l`.
+    #[inline(always)]
+    pub fn get(&self, i: usize, l: usize) -> f64 {
+        self.data[i * self.lanes + l]
+    }
+
+    /// Set element `i` of lane `l`.
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, l: usize, v: f64) {
+        self.data[i * self.lanes + l] = v;
+    }
+
+    /// The whole interleaved slab (element-major, lane-minor).
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable view of the interleaved slab.
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Gather lane `l` out into a contiguous vector.
+    pub fn lane(&self, l: usize) -> Vec<f64> {
+        assert!(l < self.lanes, "lane {l} out of {}", self.lanes);
+        (0..self.n).map(|i| self.data[i * self.lanes + l]).collect()
+    }
+
+    /// Scatter a contiguous vector into lane `l`.
+    pub fn set_lane(&mut self, l: usize, xs: &[f64]) {
+        assert!(l < self.lanes, "lane {l} out of {}", self.lanes);
+        assert_eq!(xs.len(), self.n, "lane length mismatch");
+        for (i, &x) in xs.iter().enumerate() {
+            self.data[i * self.lanes + l] = x;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_element_major_lane_minor() {
+        let mut b = LaneBatch::zeros(3, 2);
+        b.set(0, 0, 1.0);
+        b.set(0, 1, 2.0);
+        b.set(2, 1, 5.0);
+        assert_eq!(b.as_slice(), &[1.0, 2.0, 0.0, 0.0, 0.0, 5.0]);
+        assert_eq!(b.get(2, 1), 5.0);
+        assert_eq!(b.idx(2, 1), 5);
+    }
+
+    #[test]
+    fn broadcast_then_gather_roundtrips() {
+        let xs = [1.5, -2.0, 0.25];
+        let b = LaneBatch::broadcast(&xs, 4);
+        assert_eq!(b.elems(), 3);
+        assert_eq!(b.lanes(), 4);
+        for l in 0..4 {
+            assert_eq!(b.lane(l), xs.to_vec());
+        }
+    }
+
+    #[test]
+    fn scatter_updates_only_its_lane() {
+        let mut b = LaneBatch::broadcast(&[1.0, 1.0], 3);
+        b.set_lane(1, &[7.0, 8.0]);
+        assert_eq!(b.lane(0), vec![1.0, 1.0]);
+        assert_eq!(b.lane(1), vec![7.0, 8.0]);
+        assert_eq!(b.lane(2), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn zero_lane_requests_are_clamped_to_one() {
+        let b = LaneBatch::zeros(2, 0);
+        assert_eq!(b.lanes(), 1);
+        assert_eq!(LaneBatch::broadcast(&[3.0], 0).lanes(), 1);
+    }
+}

@@ -4,21 +4,27 @@
 //! signed-SRε plus any user scheme registered through the open [`scheme`]
 //! API), deterministic RNG streams with a bulk/few-random-bits API,
 //! rounded linear algebra, and the blocked rounding-aware kernels that
-//! drive the per-cell hot path (see `docs/performance.md`,
-//! `docs/fixed-point.md` and `docs/api.md`).
+//! drive the per-cell hot path — with runtime-dispatched SIMD backends
+//! ([`simd`]) and structure-of-arrays multi-seed lane batches ([`lanes`])
+//! on top (see `docs/performance.md`, `docs/fixed-point.md` and
+//! `docs/api.md`).
 
 pub mod format;
 pub mod grid;
 pub mod kernels;
+pub mod lanes;
 pub mod linalg;
 pub mod rng;
 pub mod round;
 pub mod scheme;
+pub mod simd;
 
 pub use format::FpFormat;
 pub use grid::{FixedPoint, Grid, NumberGrid};
+pub use lanes::LaneBatch;
 pub use linalg::LpCtx;
-pub use rng::{BitBlock, Rng};
+pub use rng::{BitBlock, LaneBits, Rng};
+pub use simd::{avx2_active, backend_label, set_backend, SimdChoice};
 pub use round::{
     expected_round, phi, round, round_slice, round_slice_with, round_with, RoundPlan, Rounding,
     RunHealth, DEFAULT_SR_BITS,

@@ -223,6 +223,81 @@ impl BitBlock {
     }
 }
 
+/// Multi-lane counterpart of [`BitBlock`] for the structure-of-arrays lane
+/// mode: one shared buffer, partitioned into per-lane regions, dispensing
+/// `k`-bit chunks to `lanes` independent repetitions of one experiment cell.
+///
+/// The determinism contract is the whole point of this type: **lane `l`
+/// consumes exactly the chunk sequence that a scalar
+/// `BitBlock::for_elems(elems, bits)` would serve from lane `l`'s own
+/// generator.** Each lane's region has the same word capacity as the scalar
+/// dispenser's refill and is refilled from that lane's `Rng` with one bulk
+/// [`Rng::fill_u64s`] call, so lane width is an execution strategy — running
+/// 1, 8 or 64 lanes never changes any lane's stream, and per-lane streams
+/// are disjoint whenever the lane generators are (seeded per repetition).
+/// Chunks never straddle words, and therefore never straddle refills.
+#[derive(Debug)]
+pub struct LaneBits {
+    /// Lane `l`'s words live at `buf[l * refill .. (l + 1) * refill]`.
+    buf: Vec<u64>,
+    /// Words drawn per refill, per lane — identical to the scalar
+    /// [`BitBlock::for_elems`] sizing for the same `(elems, bits)`.
+    refill: usize,
+    /// Per-lane: valid words currently in the lane's region.
+    len: Vec<usize>,
+    /// Per-lane: index (within the region) of the word being served.
+    word: Vec<usize>,
+    /// Per-lane: bits already consumed from the current word.
+    used: Vec<u32>,
+}
+
+impl LaneBits {
+    /// A dispenser for `lanes` lanes, each sized for about `elems` upcoming
+    /// `bits`-wide chunks — the lane-batched analogue of
+    /// [`BitBlock::for_elems`].
+    pub fn for_elems(elems: usize, bits: u32, lanes: usize) -> Self {
+        let lanes = lanes.max(1);
+        let per_word = (64 / bits.clamp(1, 64)) as usize;
+        let need = elems.max(1).div_ceil(per_word);
+        let refill = need.clamp(1, BitBlock::WORDS);
+        Self {
+            buf: vec![0; refill * lanes],
+            refill,
+            len: vec![0; lanes],
+            word: vec![0; lanes],
+            used: vec![0; lanes],
+        }
+    }
+
+    /// Number of lanes this dispenser serves.
+    pub fn lanes(&self) -> usize {
+        self.len.len()
+    }
+
+    /// Serve `bits` (1..=64) random bits to lane `lane`, refilling that
+    /// lane's region from `rng` — which must be the lane's own generator —
+    /// when it runs dry. Bit-identical to [`BitBlock::take`] on a scalar
+    /// dispenser driven by the same generator.
+    #[inline]
+    pub fn take(&mut self, lane: usize, bits: u32, rng: &mut Rng) -> u64 {
+        debug_assert!((1..=64).contains(&bits));
+        if self.word[lane] >= self.len[lane] || self.used[lane] + bits > 64 {
+            self.word[lane] += 1;
+            self.used[lane] = 0;
+            if self.word[lane] >= self.len[lane] {
+                let base = lane * self.refill;
+                rng.fill_u64s(&mut self.buf[base..base + self.refill]);
+                self.len[lane] = self.refill;
+                self.word[lane] = 0;
+            }
+        }
+        let w = self.buf[lane * self.refill + self.word[lane]];
+        let chunk = (w >> self.used[lane]) & (u64::MAX >> (64 - bits));
+        self.used[lane] += bits;
+        chunk
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,6 +476,132 @@ mod tests {
         for &i in &p {
             assert!(!seen[i]);
             seen[i] = true;
+        }
+    }
+
+    // ---- LaneBits lane-packing suite (sr_bits k ∈ 1..=8 × lane widths) ----
+
+    const LANE_WIDTHS: [usize; 4] = [1, 8, 16, 64];
+
+    /// Lane 0 of a 1-lane batch is bit-identical to the scalar dispenser:
+    /// same chunks, same generator end state, for every few-random-bits k.
+    #[test]
+    fn lane_bits_single_lane_matches_scalar_dispenser() {
+        for k in 1u32..=8 {
+            for elems in [1usize, 5, 64, 700] {
+                let mut r_scalar = Rng::new(1000 + k as u64);
+                let mut r_lane = r_scalar.clone();
+                let mut blk = BitBlock::for_elems(elems, k);
+                let mut lb = LaneBits::for_elems(elems, k, 1);
+                for i in 0..elems {
+                    assert_eq!(
+                        blk.take(k, &mut r_scalar),
+                        lb.take(0, k, &mut r_lane),
+                        "k={k} elems={elems} chunk {i}"
+                    );
+                }
+                // Same number of words drawn from the stream.
+                assert_eq!(r_scalar.next_u64(), r_lane.next_u64(), "k={k} elems={elems}");
+            }
+        }
+    }
+
+    /// Every lane of every batch width serves exactly the scalar chunk
+    /// sequence of its own generator — interleaved across lanes in element
+    /// order, as the lane kernels consume it — and refill boundaries never
+    /// split a chunk (each chunk equals the shift+mask of one stream word).
+    #[test]
+    fn lane_bits_every_lane_matches_its_scalar_stream() {
+        for k in 1u32..=8 {
+            for &lanes in &LANE_WIDTHS {
+                // Enough elements to force several refills per lane.
+                let per_word = (64 / k) as usize;
+                let elems = BitBlock::WORDS * per_word * 2 + 3;
+                let root = Rng::new(7 * k as u64 + lanes as u64);
+                let mut rngs: Vec<Rng> = (0..lanes).map(|l| root.split(l as u64)).collect();
+                let mut expect: Vec<(BitBlock, Rng)> = (0..lanes)
+                    .map(|l| (BitBlock::for_elems(elems, k), rngs[l].clone()))
+                    .collect();
+                let mut lb = LaneBits::for_elems(elems, k, lanes);
+                for i in 0..elems {
+                    for l in 0..lanes {
+                        let (blk, r) = &mut expect[l];
+                        assert_eq!(
+                            lb.take(l, k, &mut rngs[l]),
+                            blk.take(k, r),
+                            "k={k} lanes={lanes} elem {i} lane {l}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// A chunk is always `k` consecutive low-order bits of a single word of
+    /// its lane's stream: reconstructing the chunk sequence directly from
+    /// the raw stream words (refill-block by refill-block) reproduces the
+    /// dispenser output exactly, so no chunk ever crosses a word or a
+    /// refill boundary.
+    #[test]
+    fn lane_bits_chunks_never_straddle_refill_boundaries() {
+        for k in 1u32..=8 {
+            for &lanes in &LANE_WIDTHS {
+                let per_word = (64 / k) as usize;
+                let elems = 150; // small refills → many refill boundaries
+                let refill = elems.div_ceil(per_word).clamp(1, BitBlock::WORDS);
+                let root = Rng::new(999 + k as u64 * 64 + lanes as u64);
+                let mut rngs: Vec<Rng> = (0..lanes).map(|l| root.split(l as u64)).collect();
+                let mut mirrors: Vec<Rng> = rngs.clone();
+                let mut lb = LaneBits::for_elems(elems, k, lanes);
+                let mask = u64::MAX >> (64 - k);
+                for l in 0..lanes {
+                    let mut expected = Vec::with_capacity(elems);
+                    'fill: loop {
+                        let mut block = vec![0u64; refill];
+                        mirrors[l].fill_u64s(&mut block);
+                        for w in block {
+                            for j in 0..per_word {
+                                expected.push((w >> (j as u32 * k)) & mask);
+                                if expected.len() == elems {
+                                    break 'fill;
+                                }
+                            }
+                        }
+                    }
+                    for (i, &e) in expected.iter().enumerate() {
+                        assert_eq!(
+                            lb.take(l, k, &mut rngs[l]),
+                            e,
+                            "k={k} lanes={lanes} lane {l} chunk {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per-lane streams are disjoint: distinct lanes (seeded per
+    /// repetition through `split`) never serve identical chunk sequences.
+    #[test]
+    fn lane_bits_per_lane_streams_are_disjoint() {
+        for k in 1u32..=8 {
+            for &lanes in &LANE_WIDTHS[1..] {
+                let elems = 128;
+                let root = Rng::new(k as u64);
+                let mut rngs: Vec<Rng> = (0..lanes).map(|l| root.split(l as u64)).collect();
+                let mut lb = LaneBits::for_elems(elems, k, lanes);
+                let mut seqs: Vec<Vec<u64>> = vec![Vec::with_capacity(elems); lanes];
+                for _ in 0..elems {
+                    for l in 0..lanes {
+                        seqs[l].push(lb.take(l, k, &mut rngs[l]));
+                    }
+                }
+                for a in 0..lanes {
+                    for b in a + 1..lanes {
+                        assert_ne!(seqs[a], seqs[b], "k={k} lanes {a} and {b} collide");
+                    }
+                }
+            }
         }
     }
 }

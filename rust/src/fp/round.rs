@@ -41,11 +41,19 @@
 //!   the scalar path (and re-seeding `sr_bits` re-streams again); slice
 //!   results remain a pure function of `(plan, inputs, rng state)`.
 //!
+//! The slice kernels additionally dispatch to runtime-detected AVX2
+//! implementations ([`crate::fp::simd`]) that are **bit-identical to the
+//! scalar loops for every mode** — the stochastic SIMD path preserves the
+//! draw order of the `BitBlock` stream rather than re-streaming — and a
+//! lane-batched entry point ([`RoundPlan::round_slice_lanes_scheme_with`])
+//! rounds a structure-of-arrays slab of independent repetitions, each lane
+//! bit-identical to a scalar run of its own stream.
+//!
 //! See `docs/performance.md` for the full determinism contract.
 
 use super::format::FpFormat;
 use super::grid::{FixedPoint, Grid, NumberGrid};
-use super::rng::{BitBlock, Rng};
+use super::rng::{BitBlock, LaneBits, Rng};
 use super::scheme::{Scheme, SchemeError, SchemeRegistry};
 
 /// A rounding scheme. `SignedSrEps` requires a steering value `v` supplied
@@ -166,19 +174,22 @@ pub struct RoundPlan {
     /// The number grid this plan was precomputed for.
     pub grid: Grid,
     /// Float: `53 − s`, binary64 mantissa bits below the target ulp.
-    shift: u32,
+    /// (These float-path constants are `pub(crate)` for the AVX2 kernels in
+    /// [`crate::fp::simd`], which evaluate the same bit-pattern arithmetic
+    /// four lanes at a time.)
+    pub(crate) shift: u32,
     /// Float: `2^shift − 1`, mask selecting the discarded tail bits.
-    mask: u64,
+    pub(crate) mask: u64,
     /// Float: `2^{shift−1}`, the RN tie point (0 when `shift = 0`, i.e.
     /// binary64, where the tail is always 0 and the tie point is never
     /// consulted).
-    half: u64,
+    pub(crate) half: u64,
     /// Float: `2^{−shift}` exactly, converts the tail to a gap fraction.
-    inv_gap: f64,
+    pub(crate) inv_gap: f64,
     /// Float: normalized-exponent eligibility gates of the fast path.
-    e_min: i32,
+    pub(crate) e_min: i32,
     /// Float: see `e_min`.
-    e_max: i32,
+    pub(crate) e_max: i32,
     /// Fixed: `2^{frac_bits}`, the exact integer-quantization scale.
     scale: f64,
     /// Fixed: the spacing `δ = 2^{−frac_bits}`.
@@ -188,9 +199,9 @@ pub struct RoundPlan {
     /// Fixed: upper saturation endpoint `k_max·δ`.
     vmax: f64,
     /// Random bits per stochastic slice rounding (the few-random-bits knob).
-    sr_bits: u32,
+    pub(crate) sr_bits: u32,
     /// `2^{−sr_bits}` exactly: converts a bit chunk to a uniform in `[0,1)`.
-    inv_sr: f64,
+    pub(crate) inv_sr: f64,
 }
 
 impl RoundPlan {
@@ -675,10 +686,28 @@ impl RoundPlan {
     /// Fused deterministic slice kernel (no randomness): bit-identical to
     /// the scalar path element-by-element. Fixed-point grids divert to the
     /// integer-quantization kernel (same elementwise law as the scalar
-    /// path, hence also bit-identical).
+    /// path, hence also bit-identical). When the AVX2 backend is active
+    /// (see [`crate::fp::simd`]) the 4-aligned prefix runs the vector
+    /// kernel — also bit-identical — and the remainder stays on this loop.
     fn round_slice_det(&self, mode: Rounding, xs: &mut [f64], rng: &mut Rng) {
         if let Grid::Fixed(_) = self.grid {
             return self.round_slice_det_fixed(mode, xs, rng);
+        }
+        #[allow(unused_mut)] // mutated only on the x86-64 SIMD path
+        let mut start = 0usize;
+        #[cfg(target_arch = "x86_64")]
+        if super::simd::avx2_active() {
+            let n4 = xs.len() & !3;
+            {
+                let mut slow = |x: &mut f64| {
+                    if *x != 0.0 && !x.is_nan() {
+                        *x = round_slow_grid(&self.grid, mode, *x, *x, rng);
+                    }
+                };
+                // SAFETY: gated on runtime AVX2 detection via avx2_active().
+                unsafe { super::simd::round_slice_det_avx2(self, mode, &mut xs[..n4], &mut slow) };
+            }
+            start = n4;
         }
         let (mask, shift, half) = (self.mask, self.shift, self.half);
         let (e_min, e_max) = (self.e_min, self.e_max);
@@ -690,7 +719,7 @@ impl RoundPlan {
             _ => (true, false), // RZ: toward zero
         };
         let rn = mode == Rounding::RoundNearestEven;
-        for x in xs.iter_mut() {
+        for x in xs[start..].iter_mut() {
             let bits = x.to_bits();
             let mag = bits & 0x7fff_ffff_ffff_ffff;
             let raw_e = (mag >> 52) as i32;
@@ -731,6 +760,13 @@ impl RoundPlan {
     /// elements (subnormal / overflow / non-finite) fall back to
     /// [`round_slow`], which draws its own full-width uniform from `rng`;
     /// the result remains a pure function of the stream state.
+    ///
+    /// When the AVX2 backend is active the 4-aligned prefix runs the vector
+    /// kernel in [`crate::fp::simd`]. That kernel is *stream-preserving* —
+    /// it draws from the same `BitBlock` per inexact eligible element in
+    /// element order and delegates mixed groups to the exact per-element
+    /// body below — so backend choice never changes outputs or the RNG end
+    /// state, for any mode (pinned by `simd_stoch_matches_scalar_bitwise`).
     fn round_slice_stoch<F: Fn(f64, bool, f64) -> f64>(
         &self,
         mode: Rounding,
@@ -748,35 +784,65 @@ impl RoundPlan {
         let (k, inv_sr) = (self.sr_bits, self.inv_sr);
         let plain_sr = matches!(mode, Rounding::Sr);
         let mut bsrc = BitBlock::for_elems(xs.len(), k);
-        for (i, x) in xs.iter_mut().enumerate() {
+        // The reference per-element body, shared verbatim by the scalar
+        // loop below and the SIMD kernel's mixed-group fallback, so both
+        // consume the stream identically.
+        let elem = |x: &mut f64, v: f64, bsrc: &mut BitBlock, rng: &mut Rng| {
             let bits = x.to_bits();
             let mag = bits & 0x7fff_ffff_ffff_ffff;
             let raw_e = (mag >> 52) as i32;
             let e = raw_e - 1023;
             if raw_e == 0 || raw_e == 0x7ff || e < e_min || e >= e_max {
                 if *x != 0.0 && !x.is_nan() {
-                    let v = vs.map_or(*x, |vs| vs[i]);
                     *x = round_slow_grid(&self.grid, mode, *x, v, rng); // rare slow path
                 }
-                continue;
+                return;
             }
             let tail = mag & mask;
             if tail == 0 {
-                continue; // representable
+                return; // representable
             }
             let neg = bits >> 63 == 1;
             let frac_mag = tail as f64 * inv;
             let frac = if neg { 1.0 - frac_mag } else { frac_mag };
-            let p = if plain_sr {
-                1.0 - frac
-            } else {
-                p_down(frac, neg, vs.map_or(*x, |vs| vs[i]))
-            };
+            let p = if plain_sr { 1.0 - frac } else { p_down(frac, neg, v) };
             let r = bsrc.take(k, rng) as f64 * inv_sr;
             let down = r < p;
             let lo_mag = mag & !mask;
             let out_mag = if down != neg { lo_mag } else { lo_mag + (mask + 1) };
             *x = f64::from_bits(out_mag | (bits & (1u64 << 63)));
+        };
+        #[allow(unused_mut)] // mutated only on the x86-64 SIMD path
+        let mut start = 0usize;
+        #[cfg(target_arch = "x86_64")]
+        {
+            let eps_finite = match mode {
+                Rounding::SrEps(e) | Rounding::SignedSrEps(e) => e.is_finite(),
+                _ => true,
+            };
+            if k <= 52 && eps_finite && super::simd::avx2_active() {
+                let n4 = xs.len() & !3;
+                let mut elem_dyn = |x: &mut f64, v: f64, b: &mut BitBlock, r: &mut Rng| {
+                    elem(x, v, b, r);
+                };
+                // SAFETY: gated on runtime AVX2 detection via avx2_active().
+                unsafe {
+                    super::simd::round_slice_stoch_avx2(
+                        self,
+                        mode,
+                        &mut xs[..n4],
+                        vs.map(|v| &v[..n4]),
+                        &mut bsrc,
+                        rng,
+                        &mut elem_dyn,
+                    );
+                }
+                start = n4;
+            }
+        }
+        for (i, x) in xs.iter_mut().enumerate().skip(start) {
+            let v = vs.map_or(*x, |vs| vs[i]);
+            elem(x, v, &mut bsrc, rng);
         }
     }
 
@@ -943,6 +1009,199 @@ impl RoundPlan {
                 }
             }
             None => self.round_slice_scheme(scheme, xs, rng),
+        }
+    }
+}
+
+// ---------------------------------------------------- multi-seed lanes --
+//
+// The structure-of-arrays lane mode: `lanes` independent repetitions of one
+// experiment cell share a single data pass. A slab stores element `i` of
+// lane `l` at `slab[i * lanes + l]` (element-major, lane-minor), so the
+// per-element math vectorizes across lanes; each lane draws from its own
+// generator through a shared `LaneBits` dispenser. The contract — asserted
+// by `lanes_slice_matches_per_lane_scalar` and the engine-level lane tests
+// — is that **lane `l` of a slab rounding is bit-identical to rounding lane
+// `l`'s column with the scalar slice kernel and lane `l`'s generator**:
+// lane width is an execution strategy, never part of a result's identity.
+
+impl RoundPlan {
+    /// Round a lane slab in place under `scheme`, steering steered schemes
+    /// by `vs` (same slab layout) when supplied — the lane-batched
+    /// counterpart of [`RoundPlan::round_slice_scheme_with`].
+    ///
+    /// `slab` holds `lanes` interleaved repetitions (element `i` of lane
+    /// `l` at `i * lanes + l`); `rngs[l]` is lane `l`'s generator. Per
+    /// lane, outputs and RNG consumption are bit-identical to the scalar
+    /// slice kernels run on that lane's column.
+    pub fn round_slice_lanes_scheme_with(
+        &self,
+        scheme: Scheme,
+        slab: &mut [f64],
+        lanes: usize,
+        vs: Option<&[f64]>,
+        rngs: &mut [Rng],
+    ) {
+        assert!(lanes >= 1, "lane batches need at least one lane");
+        assert_eq!(slab.len() % lanes, 0, "slab length must be a multiple of the lane count");
+        assert_eq!(rngs.len(), lanes, "one RNG stream per lane");
+        if let Some(vs) = vs {
+            debug_assert_eq!(vs.len(), slab.len());
+        }
+        match scheme.as_builtin() {
+            Some(
+                mode @ (Rounding::RoundNearestEven
+                | Rounding::RoundDown
+                | Rounding::RoundUp
+                | Rounding::RoundTowardZero),
+            ) => {
+                // Deterministic rounding is elementwise and stateless: the
+                // fused (and, when active, SIMD) det kernel over the whole
+                // slab is already per-lane bit-identical. No randomness is
+                // consumed on any det path, slow elements included.
+                self.round_slice_det(mode, slab, &mut rngs[0]);
+            }
+            Some(mode @ Rounding::Sr) => {
+                self.round_slice_stoch_lanes(mode, slab, lanes, None, |_, _, _| 0.0, rngs);
+            }
+            Some(mode @ Rounding::SrEps(eps)) => {
+                self.round_slice_stoch_lanes(
+                    mode,
+                    slab,
+                    lanes,
+                    None,
+                    |frac, neg, _| {
+                        let sx = if neg { -1.0 } else { 1.0 };
+                        phi(1.0 - frac - sx * eps)
+                    },
+                    rngs,
+                );
+            }
+            Some(mode @ Rounding::SignedSrEps(eps)) => match vs {
+                Some(vs) => self.round_slice_stoch_lanes(
+                    mode,
+                    slab,
+                    lanes,
+                    Some(vs),
+                    |frac, _, v| {
+                        let sv = if v == 0.0 { 0.0 } else { v.signum() };
+                        phi(1.0 - frac + sv * eps)
+                    },
+                    rngs,
+                ),
+                None => self.round_slice_stoch_lanes(
+                    mode,
+                    slab,
+                    lanes,
+                    None,
+                    |frac, neg, _| {
+                        let sv = if neg { -1.0 } else { 1.0 };
+                        phi(1.0 - frac + sv * eps)
+                    },
+                    rngs,
+                ),
+            },
+            None => {
+                // Custom schemes already take a per-element dyn path in the
+                // scalar kernels; the lane loop replays exactly that, with
+                // each lane's own generator.
+                let imp = scheme.as_impl();
+                let steer = scheme.uses_steering() && vs.is_some();
+                let n = slab.len() / lanes;
+                for i in 0..n {
+                    for l in 0..lanes {
+                        let idx = i * lanes + l;
+                        let v = if steer { vs.unwrap()[idx] } else { slab[idx] };
+                        slab[idx] = imp.round(self, slab[idx], v, &mut rngs[l]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Lane-batched stochastic slice kernel: the float/fixed per-element
+    /// bodies of [`RoundPlan::round_slice_stoch`] replayed per `(element,
+    /// lane)` with lane-private streams through a shared [`LaneBits`]
+    /// dispenser.
+    fn round_slice_stoch_lanes<F: Fn(f64, bool, f64) -> f64>(
+        &self,
+        mode: Rounding,
+        slab: &mut [f64],
+        lanes: usize,
+        vs: Option<&[f64]>,
+        p_down: F,
+        rngs: &mut [Rng],
+    ) {
+        debug_assert!(mode.is_stochastic());
+        let n = slab.len() / lanes;
+        let (k, inv_sr) = (self.sr_bits, self.inv_sr);
+        let plain_sr = matches!(mode, Rounding::Sr);
+        let mut lb = LaneBits::for_elems(n, k, lanes);
+        if let Grid::Fixed(_) = self.grid {
+            let (scale, delta, vmin, vmax) = (self.scale, self.delta, self.vmin, self.vmax);
+            for i in 0..n {
+                for l in 0..lanes {
+                    let idx = i * lanes + l;
+                    let x = &mut slab[idx];
+                    if !(vmin..=vmax).contains(x) {
+                        if *x != 0.0 && !x.is_nan() {
+                            let v = vs.map_or(*x, |vs| vs[idx]);
+                            *x = round_slow_grid(&self.grid, mode, *x, v, &mut rngs[l]);
+                        }
+                        continue;
+                    }
+                    let m = *x * scale;
+                    let kf = m.floor();
+                    if kf == m {
+                        continue; // on the grid
+                    }
+                    let frac = m - kf;
+                    let p = if plain_sr {
+                        1.0 - frac
+                    } else {
+                        p_down(frac, *x < 0.0, vs.map_or(*x, |vs| vs[idx]))
+                    };
+                    let r = lb.take(l, k, &mut rngs[l]) as f64 * inv_sr;
+                    *x = if r < p { kf * delta } else { (kf + 1.0) * delta };
+                }
+            }
+            return;
+        }
+        let (mask, inv) = (self.mask, self.inv_gap);
+        let (e_min, e_max) = (self.e_min, self.e_max);
+        for i in 0..n {
+            for l in 0..lanes {
+                let idx = i * lanes + l;
+                let x = &mut slab[idx];
+                let bits = x.to_bits();
+                let mag = bits & 0x7fff_ffff_ffff_ffff;
+                let raw_e = (mag >> 52) as i32;
+                let e = raw_e - 1023;
+                if raw_e == 0 || raw_e == 0x7ff || e < e_min || e >= e_max {
+                    if *x != 0.0 && !x.is_nan() {
+                        let v = vs.map_or(*x, |vs| vs[idx]);
+                        *x = round_slow_grid(&self.grid, mode, *x, v, &mut rngs[l]);
+                    }
+                    continue;
+                }
+                let tail = mag & mask;
+                if tail == 0 {
+                    continue; // representable
+                }
+                let neg = bits >> 63 == 1;
+                let frac_mag = tail as f64 * inv;
+                let frac = if neg { 1.0 - frac_mag } else { frac_mag };
+                let p = if plain_sr {
+                    1.0 - frac
+                } else {
+                    p_down(frac, neg, vs.map_or(*x, |vs| vs[idx]))
+                };
+                let r = lb.take(l, k, &mut rngs[l]) as f64 * inv_sr;
+                let down = r < p;
+                let lo_mag = mag & !mask;
+                let out_mag = if down != neg { lo_mag } else { lo_mag + (mask + 1) };
+                *x = f64::from_bits(out_mag | (bits & (1u64 << 63)));
+            }
         }
     }
 }
@@ -1732,6 +1991,162 @@ mod tests {
                 xs.iter().filter(|v| v.is_finite() && !plan.grid.in_range(**v)).count() as u64;
             assert_eq!(h.saturations, oracle_sat);
             assert_eq!(h.nan_inf, 0, "fixed grids never produce non-finite outputs");
+        }
+    }
+
+    // ------------------------------------------------------ SIMD dispatch --
+
+    /// Forced-scalar and forced-AVX2 backends are bit-identical for every
+    /// mode — outputs *and* RNG end state (the vector stochastic kernel
+    /// preserves the scalar draw stream). On hosts without AVX2 the forced
+    /// request falls back to scalar and the comparison is trivially true;
+    /// the CI AVX2 lane keeps the vector side honest.
+    #[test]
+    fn simd_backends_agree_bitwise_and_stream() {
+        use super::super::simd::{set_backend, SimdChoice, BACKEND_TEST_LOCK};
+        let _lock = BACKEND_TEST_LOCK.lock().unwrap();
+        let modes = [
+            Rounding::RoundNearestEven,
+            Rounding::RoundDown,
+            Rounding::RoundUp,
+            Rounding::RoundTowardZero,
+            Rounding::Sr,
+            Rounding::SrEps(0.3),
+            Rounding::SignedSrEps(0.3),
+        ];
+        for fmt in [FpFormat::BINARY8, FpFormat::BFLOAT16] {
+            for bits in [DEFAULT_SR_BITS, 8] {
+                let plan = RoundPlan::new(fmt).with_sr_bits(bits);
+                // 201 + 8 specials = 209 elements: not a multiple of 4, so
+                // the scalar remainder after the vector body runs too.
+                let (xs, vs) = test_inputs(&fmt, 201);
+                for mode in modes {
+                    for steered in [false, true] {
+                        set_backend(SimdChoice::Scalar);
+                        let mut rs = Rng::new(17);
+                        let mut a = xs.clone();
+                        if steered {
+                            plan.round_slice_with(mode, &mut a, &vs, &mut rs);
+                        } else {
+                            plan.round_slice(mode, &mut a, &mut rs);
+                        }
+                        set_backend(SimdChoice::Avx2);
+                        let mut rv = Rng::new(17);
+                        let mut b = xs.clone();
+                        if steered {
+                            plan.round_slice_with(mode, &mut b, &vs, &mut rv);
+                        } else {
+                            plan.round_slice(mode, &mut b, &mut rv);
+                        }
+                        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "{mode:?} {} bits={bits} steered={steered} i={i}: {x} vs {y}",
+                                fmt.name()
+                            );
+                        }
+                        assert_eq!(rs.next_u64(), rv.next_u64(), "{mode:?} stream diverged");
+                    }
+                }
+            }
+        }
+        set_backend(SimdChoice::Auto);
+    }
+
+    /// The SR law holds under both forced backends: the slice mean stays
+    /// unbiased whichever kernel runs (the distribution-level counterpart
+    /// of the bitwise check above). Fixed seed; spurious-failure
+    /// probability ≤ `MC_P_FAIL` per backend (Hoeffding).
+    #[test]
+    fn simd_backends_keep_sr_law() {
+        use super::super::simd::{set_backend, SimdChoice, BACKEND_TEST_LOCK};
+        let _lock = BACKEND_TEST_LOCK.lock().unwrap();
+        let plan = RoundPlan::new(B8);
+        for choice in [SimdChoice::Scalar, SimdChoice::Avx2] {
+            set_backend(choice);
+            let x = 1.1;
+            let n = 40_000usize;
+            let mut buf = vec![x; n];
+            plan.round_slice(Rounding::Sr, &mut buf, &mut Rng::new(5));
+            let mean = buf.iter().sum::<f64>() / n as f64;
+            let (lo, hi) = B8.floor_ceil(x);
+            let tol = crate::util::stats::hoeffding_halfwidth(hi - lo, n, MC_P_FAIL)
+                + (hi - lo) * inv_pow2(plan.sr_bits());
+            assert!((mean - x).abs() < tol, "{choice:?}: mean={mean} tol={tol}");
+        }
+        set_backend(SimdChoice::Auto);
+    }
+
+    // --------------------------------------------------- multi-seed lanes --
+
+    /// Every lane of `round_slice_lanes_scheme_with` is bit-identical to a
+    /// scalar slice pass over that lane's column with the same generator —
+    /// the lane batch is an execution strategy, not a new rounding law.
+    /// Checked on float and fixed grids, deterministic + stochastic +
+    /// steered, including per-lane RNG end states.
+    #[test]
+    fn lanes_slice_matches_per_lane_scalar() {
+        let modes = [
+            Rounding::RoundNearestEven,
+            Rounding::Sr,
+            Rounding::SrEps(0.3),
+            Rounding::SignedSrEps(0.3),
+        ];
+        for plan in [RoundPlan::new(B8).with_sr_bits(8), RoundPlan::new(Q3_8)] {
+            for lanes in [1usize, 4, 8] {
+                let n = 97; // odd on purpose: no alignment crutch
+                let mut gen = Rng::new(61);
+                let cols: Vec<Vec<f64>> =
+                    (0..lanes).map(|_| (0..n).map(|_| gen.normal() * 4.0).collect()).collect();
+                let vcols: Vec<Vec<f64>> =
+                    (0..lanes).map(|_| (0..n).map(|_| gen.normal()).collect()).collect();
+                let mut xslab = vec![0.0; n * lanes];
+                let mut vslab = vec![0.0; n * lanes];
+                for i in 0..n {
+                    for l in 0..lanes {
+                        xslab[i * lanes + l] = cols[l][i];
+                        vslab[i * lanes + l] = vcols[l][i];
+                    }
+                }
+                for mode in modes {
+                    let scheme = mode.scheme();
+                    for steered in [false, true] {
+                        let root = Rng::new(300);
+                        let mut rngs: Vec<Rng> =
+                            (0..lanes as u64).map(|l| root.split(l)).collect();
+                        let mut got = xslab.clone();
+                        let vs = if steered { Some(&vslab[..]) } else { None };
+                        plan.round_slice_lanes_scheme_with(scheme, &mut got, lanes, vs, &mut rngs);
+                        for l in 0..lanes {
+                            let mut want = cols[l].clone();
+                            let mut oracle = root.split(l as u64);
+                            if steered {
+                                plan.round_slice_scheme_with(
+                                    scheme,
+                                    &mut want,
+                                    &vcols[l],
+                                    &mut oracle,
+                                );
+                            } else {
+                                plan.round_slice_scheme(scheme, &mut want, &mut oracle);
+                            }
+                            for i in 0..n {
+                                assert_eq!(
+                                    want[i].to_bits(),
+                                    got[i * lanes + l].to_bits(),
+                                    "{mode:?} lanes={lanes} lane={l} i={i} steered={steered}"
+                                );
+                            }
+                            assert_eq!(
+                                rngs[l].next_u64(),
+                                oracle.next_u64(),
+                                "{mode:?} lanes={lanes} lane={l} stream diverged"
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 }

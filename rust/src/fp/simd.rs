@@ -1,0 +1,432 @@
+//! Runtime-dispatched x86-64 SIMD (AVX2) slice-rounding kernels.
+//!
+//! The scalar bit-pattern kernels in [`crate::fp::round`] stay the
+//! reference implementation and the oracle; this module adds 4-wide AVX2
+//! versions of the deterministic and stochastic float slice loops behind
+//! **runtime feature detection**. The whole point of the design is that the
+//! SIMD path is not a different algorithm — it is the same bit-pattern
+//! arithmetic evaluated four elements at a time:
+//!
+//! * **Deterministic modes** are pure integer mask/compare/add on the f64
+//!   bit patterns, so the vector path is trivially **bit-identical** to the
+//!   scalar loop.
+//! * **Stochastic modes** are *stream-preserving*: random chunks are drawn
+//!   from the same [`BitBlock`] in the same element order (only inexact,
+//!   eligible elements draw), the probability math is elementwise IEEE
+//!   arithmetic (`vmulpd`/`vsubpd` are exact per lane, no FMA, no
+//!   reassociation), and any 4-group containing a slow-path element or a
+//!   NaN steering value is delegated wholesale to the scalar per-element
+//!   body. The SIMD backend therefore produces **bit-identical outputs and
+//!   an identical RNG end state** for every mode — no `--stream-change`
+//!   gating is needed, and journals/goldens replay exactly regardless of
+//!   backend (asserted by the `simd_*` tests in `fp::round`).
+//!
+//! # Backend selection
+//!
+//! Priority: explicit [`set_backend`] (the CLI `--simd` flag) > the
+//! `LPGD_SIMD` environment variable (`auto` | `avx2` | `scalar`) > runtime
+//! `is_x86_feature_detected!("avx2")`. Forcing `avx2` on a CPU without it
+//! warns and falls back to scalar rather than crashing. On non-x86-64
+//! targets everything resolves to scalar and no `unsafe` is compiled at
+//! all. See the feature-detection matrix in `docs/performance.md`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which kernel backend the process should use (CLI `--simd`, env
+/// `LPGD_SIMD`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdChoice {
+    /// Detect at runtime: AVX2 when the CPU supports it, scalar otherwise.
+    Auto,
+    /// Force the AVX2 kernels (warns and falls back to scalar on CPUs
+    /// without AVX2 — never crashes).
+    Avx2,
+    /// Force the scalar reference kernels.
+    Scalar,
+}
+
+impl SimdChoice {
+    /// Parse a `--simd` / `LPGD_SIMD` spelling (case-insensitive).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(SimdChoice::Auto),
+            "avx2" => Ok(SimdChoice::Avx2),
+            "scalar" => Ok(SimdChoice::Scalar),
+            other => {
+                Err(format!("unknown SIMD backend '{other}' (expected auto, avx2 or scalar)"))
+            }
+        }
+    }
+}
+
+/// Resolved backend, cached for the process: 0 = unresolved, 1 = scalar,
+/// 2 = AVX2.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+fn detect_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn resolve(choice: SimdChoice) -> u8 {
+    match choice {
+        SimdChoice::Scalar => 1,
+        SimdChoice::Avx2 => {
+            if detect_avx2() {
+                2
+            } else {
+                eprintln!(
+                    "warning: SIMD backend 'avx2' requested but AVX2 is unavailable; \
+                     using scalar kernels"
+                );
+                1
+            }
+        }
+        SimdChoice::Auto => {
+            if detect_avx2() {
+                2
+            } else {
+                1
+            }
+        }
+    }
+}
+
+/// Pin the kernel backend for the process (the CLI `--simd` flag). Safe to
+/// call repeatedly — benches use it to measure both paths; every backend
+/// produces bit-identical results, so flipping mid-run changes speed only.
+pub fn set_backend(choice: SimdChoice) {
+    ACTIVE.store(resolve(choice), Ordering::Relaxed);
+}
+
+fn resolved() -> u8 {
+    match ACTIVE.load(Ordering::Relaxed) {
+        0 => {
+            let choice = match std::env::var("LPGD_SIMD") {
+                Ok(s) => SimdChoice::parse(&s).unwrap_or_else(|e| {
+                    eprintln!("warning: LPGD_SIMD ignored: {e}");
+                    SimdChoice::Auto
+                }),
+                Err(_) => SimdChoice::Auto,
+            };
+            let r = resolve(choice);
+            // A concurrent first resolution computes the same value (the
+            // environment is stable), so a plain racy store is benign.
+            ACTIVE.store(r, Ordering::Relaxed);
+            r
+        }
+        r => r,
+    }
+}
+
+/// True when slice kernels should take the AVX2 path.
+#[inline]
+pub fn avx2_active() -> bool {
+    resolved() == 2
+}
+
+/// The resolved backend as a label for logs and bench provenance.
+pub fn backend_label() -> &'static str {
+    if avx2_active() {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+/// Serializes tests that flip the process-global backend, so a
+/// forced-scalar measurement cannot race a forced-AVX2 one in a sibling
+/// test. (Results are bit-identical either way; the lock keeps the tests
+/// honest about which path they exercised.)
+#[cfg(test)]
+pub(crate) static BACKEND_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) use x86::{round_slice_det_avx2, round_slice_stoch_avx2};
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use crate::fp::rng::{BitBlock, Rng};
+    use crate::fp::round::{RoundPlan, Rounding};
+
+    const SIGN: i64 = i64::MIN;
+
+    /// `max(min(y, 1), 0)` — agrees with the scalar `phi` (`f64::clamp`)
+    /// for every finite input; the only divergence is the sign of a zero
+    /// result, which cannot change an `r < p` comparison.
+    #[inline(always)]
+    #[target_feature(enable = "avx2")]
+    unsafe fn clamp01(y: __m256d, one: __m256d, zero: __m256d) -> __m256d {
+        _mm256_max_pd(_mm256_min_pd(y, one), zero)
+    }
+
+    /// Raw-exponent eligibility band `[lo, hi]` (inclusive) of the float
+    /// fast path: f64-normal, target-normal, strictly below the top binade —
+    /// exactly the scalar gate `raw_e != 0 && raw_e != 0x7ff && e >= e_min
+    /// && e < e_max`.
+    #[inline(always)]
+    fn raw_exp_band(plan: &RoundPlan) -> (i64, i64) {
+        let lo = (plan.e_min + 1023).max(1) as i64;
+        let hi = (plan.e_max + 1022).min(0x7fe) as i64;
+        (lo, hi)
+    }
+
+    /// AVX2 deterministic slice kernel over a float grid — bit-identical to
+    /// the scalar loop in `RoundPlan::round_slice_det` (pinned by
+    /// `simd_det_matches_scalar_bitwise`). `xs.len()` must be a multiple of
+    /// 4; the dispatcher rounds down and runs the remainder through the
+    /// scalar loop. Ineligible elements (subnormal / overflow / non-finite)
+    /// are handed to `slow` in element order; deterministic slow rounding
+    /// consumes no randomness, so delegation order is observable only
+    /// through exactness, which is preserved.
+    ///
+    /// # Safety
+    /// Requires AVX2; dispatch is gated on runtime detection.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn round_slice_det_avx2(
+        plan: &RoundPlan,
+        mode: Rounding,
+        xs: &mut [f64],
+        slow: &mut dyn FnMut(&mut f64),
+    ) {
+        debug_assert_eq!(xs.len() % 4, 0);
+        let rn = mode == Rounding::RoundNearestEven;
+        let vsign = _mm256_set1_epi64x(SIGN);
+        let vmask = _mm256_set1_epi64x(plan.mask as i64);
+        let vhalf = _mm256_set1_epi64x(plan.half as i64);
+        let vinc = _mm256_set1_epi64x((plan.mask + 1) as i64);
+        let vone = _mm256_set1_epi64x(1);
+        let zero = _mm256_setzero_si256();
+        let ones = _mm256_set1_epi64x(-1);
+        let (lo, hi) = raw_exp_band(plan);
+        let vlo = _mm256_set1_epi64x(lo - 1);
+        let vhi = _mm256_set1_epi64x(hi + 1);
+        let shift_cnt = _mm_cvtsi32_si128(plan.shift as i32);
+        for i in (0..xs.len()).step_by(4) {
+            let p = xs.as_mut_ptr().add(i);
+            let bits = _mm256_loadu_si256(p as *const __m256i);
+            let mag = _mm256_andnot_si256(vsign, bits);
+            let raw_e = _mm256_srli_epi64::<52>(mag);
+            // Signed 64-bit compares are exact here: raw_e ∈ [0, 0x7ff].
+            let eligible = _mm256_and_si256(
+                _mm256_cmpgt_epi64(raw_e, vlo),
+                _mm256_cmpgt_epi64(vhi, raw_e),
+            );
+            let elig = _mm256_movemask_pd(_mm256_castsi256_pd(eligible));
+            let tail = _mm256_and_si256(mag, vmask);
+            let exact = _mm256_cmpeq_epi64(tail, zero);
+            let process = _mm256_andnot_si256(exact, eligible);
+            let lo_mag = _mm256_andnot_si256(vmask, mag);
+            let negm = _mm256_cmpgt_epi64(zero, bits);
+            // `pick_lo` = keep the magnitude-floor. Derived from the scalar
+            // decision `down` by `pick_lo = down ^ neg`, which is sign-free
+            // for RN and RZ: RN picks lo iff tail < half (or an even-floor
+            // tie), RZ always truncates magnitude, RD/RU fold to ±neg.
+            let pick_lo = if rn {
+                let lt = _mm256_cmpgt_epi64(vhalf, tail);
+                let tie = _mm256_cmpeq_epi64(tail, vhalf);
+                let lobit = _mm256_and_si256(_mm256_srl_epi64(lo_mag, shift_cnt), vone);
+                let lo_even = _mm256_cmpeq_epi64(lobit, zero);
+                _mm256_or_si256(lt, _mm256_and_si256(tie, lo_even))
+            } else {
+                match mode {
+                    Rounding::RoundDown => _mm256_xor_si256(negm, ones),
+                    Rounding::RoundUp => negm,
+                    _ => ones, // RZ
+                }
+            };
+            let inc = _mm256_andnot_si256(pick_lo, vinc);
+            let out_mag = _mm256_add_epi64(lo_mag, inc);
+            let out = _mm256_or_si256(out_mag, _mm256_and_si256(bits, vsign));
+            let res = _mm256_blendv_pd(
+                _mm256_castsi256_pd(bits),
+                _mm256_castsi256_pd(out),
+                _mm256_castsi256_pd(process),
+            );
+            _mm256_storeu_pd(p, res);
+            if elig != 0b1111 {
+                for lane in 0..4 {
+                    if elig & (1 << lane) == 0 {
+                        slow(&mut xs[i + lane]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// AVX2 stochastic slice kernel over a float grid — **stream-preserving**
+    /// and therefore bit-identical to the scalar loop, RNG end state
+    /// included: chunks are drawn from the shared [`BitBlock`] per inexact
+    /// eligible element in element order, and any 4-group containing a
+    /// slow-path element or a NaN steering value is delegated wholesale to
+    /// the scalar per-element body `elem` (the exact loop body of
+    /// `RoundPlan::round_slice_stoch`). The vectorized probability math
+    /// must mirror the closures in `round_slice` / `round_slice_with`; the
+    /// `simd_stoch_matches_scalar_bitwise` test pins this. Requires
+    /// `plan.sr_bits <= 52` (the u64→f64 magic conversion below is exact
+    /// under 2^52; `k = 53` stays scalar) and a finite `eps`.
+    ///
+    /// # Safety
+    /// Requires AVX2; dispatch is gated on runtime detection.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn round_slice_stoch_avx2(
+        plan: &RoundPlan,
+        mode: Rounding,
+        xs: &mut [f64],
+        vs: Option<&[f64]>,
+        bsrc: &mut BitBlock,
+        rng: &mut Rng,
+        elem: &mut dyn FnMut(&mut f64, f64, &mut BitBlock, &mut Rng),
+    ) {
+        debug_assert_eq!(xs.len() % 4, 0);
+        let k = plan.sr_bits;
+        debug_assert!(k <= 52);
+        let vsign = _mm256_set1_epi64x(SIGN);
+        let vmask = _mm256_set1_epi64x(plan.mask as i64);
+        let vinc = _mm256_set1_epi64x((plan.mask + 1) as i64);
+        let zero = _mm256_setzero_si256();
+        let (lo, hi) = raw_exp_band(plan);
+        let vlo = _mm256_set1_epi64x(lo - 1);
+        let vhi = _mm256_set1_epi64x(hi + 1);
+        let magic = _mm256_set1_epi64x(0x4330_0000_0000_0000); // bits of 2^52
+        let magic_pd = _mm256_castsi256_pd(magic);
+        let vinv_gap = _mm256_set1_pd(plan.inv_gap);
+        let vinv_sr = _mm256_set1_pd(plan.inv_sr);
+        let onef = _mm256_set1_pd(1.0);
+        let zerof = _mm256_setzero_pd();
+        let signf = _mm256_castsi256_pd(vsign);
+        let eps = match mode {
+            Rounding::SrEps(e) | Rounding::SignedSrEps(e) => e,
+            _ => 0.0,
+        };
+        let veps = _mm256_set1_pd(eps);
+        let steered = vs.is_some() && matches!(mode, Rounding::SignedSrEps(_));
+        for i in (0..xs.len()).step_by(4) {
+            let p = xs.as_mut_ptr().add(i);
+            let bits = _mm256_loadu_si256(p as *const __m256i);
+            let mag = _mm256_andnot_si256(vsign, bits);
+            let raw_e = _mm256_srli_epi64::<52>(mag);
+            let eligible = _mm256_and_si256(
+                _mm256_cmpgt_epi64(raw_e, vlo),
+                _mm256_cmpgt_epi64(vhi, raw_e),
+            );
+            let elig = _mm256_movemask_pd(_mm256_castsi256_pd(eligible));
+            let vv = if steered {
+                _mm256_loadu_pd(vs.unwrap().as_ptr().add(i))
+            } else {
+                zerof
+            };
+            let v_nan =
+                steered && _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_UNORD_Q>(vv, vv)) != 0;
+            if elig != 0b1111 || v_nan {
+                // A slow-path or NaN-steered lane: the whole group runs the
+                // scalar reference body so draws interleave in exactly the
+                // scalar order.
+                for lane in 0..4 {
+                    let j = i + lane;
+                    let v = vs.map_or(xs[j], |vs| vs[j]);
+                    elem(&mut xs[j], v, bsrc, rng);
+                }
+                continue;
+            }
+            let tail = _mm256_and_si256(mag, vmask);
+            let exact = _mm256_cmpeq_epi64(tail, zero);
+            let proc = !_mm256_movemask_pd(_mm256_castsi256_pd(exact)) & 0b1111;
+            if proc == 0 {
+                continue; // whole group representable: no draws
+            }
+            // Draw each processed lane's chunk in element order — the same
+            // `take` sequence the scalar loop performs.
+            let mut ch = [0u64; 4];
+            for lane in 0..4 {
+                if proc & (1 << lane) != 0 {
+                    ch[lane] = bsrc.take(k, rng);
+                }
+            }
+            let chv = _mm256_loadu_si256(ch.as_ptr() as *const __m256i);
+            // Exact u64→f64 for values < 2^52: OR into the mantissa of 2^52
+            // and subtract 2^52 (also used for the tail, which is < 2^shift
+            // ≤ 2^52). Identical to the scalar `as f64` conversion.
+            let r = _mm256_mul_pd(
+                _mm256_sub_pd(_mm256_castsi256_pd(_mm256_or_si256(chv, magic)), magic_pd),
+                vinv_sr,
+            );
+            let tail_f =
+                _mm256_sub_pd(_mm256_castsi256_pd(_mm256_or_si256(tail, magic)), magic_pd);
+            let frac_mag = _mm256_mul_pd(tail_f, vinv_gap);
+            let negm = _mm256_cmpgt_epi64(zero, bits);
+            let negf = _mm256_castsi256_pd(negm);
+            let frac = _mm256_blendv_pd(frac_mag, _mm256_sub_pd(onef, frac_mag), negf);
+            let omf = _mm256_sub_pd(onef, frac);
+            let p_down = match mode {
+                Rounding::Sr => omf,
+                Rounding::SrEps(_) => {
+                    // phi(1 − frac − sign(x)·eps)
+                    let se = _mm256_xor_pd(veps, _mm256_and_pd(negf, signf));
+                    clamp01(_mm256_sub_pd(omf, se), onef, zerof)
+                }
+                Rounding::SignedSrEps(_) => {
+                    if steered {
+                        // phi(1 − frac + sv·eps), sv = 0 when v == 0.
+                        let sv_eps = _mm256_xor_pd(veps, _mm256_and_pd(vv, signf));
+                        let v_zero = _mm256_cmp_pd::<_CMP_EQ_OQ>(vv, zerof);
+                        let b = _mm256_andnot_pd(v_zero, sv_eps);
+                        clamp01(_mm256_add_pd(omf, b), onef, zerof)
+                    } else {
+                        // Unsteered: sv = −1 for negative x, +1 otherwise
+                        // (x ≠ 0 on this path — zero is representable).
+                        let sv_eps = _mm256_xor_pd(veps, _mm256_and_pd(negf, signf));
+                        clamp01(_mm256_add_pd(omf, sv_eps), onef, zerof)
+                    }
+                }
+                _ => unreachable!("deterministic mode in the stochastic kernel"),
+            };
+            let down = _mm256_castpd_si256(_mm256_cmp_pd::<_CMP_LT_OQ>(r, p_down));
+            let pick_lo = _mm256_xor_si256(down, negm);
+            let lo_mag = _mm256_andnot_si256(vmask, mag);
+            let inc = _mm256_andnot_si256(pick_lo, vinc);
+            let out_mag = _mm256_add_epi64(lo_mag, inc);
+            let out = _mm256_or_si256(out_mag, _mm256_and_si256(bits, vsign));
+            let process = _mm256_andnot_si256(exact, eligible);
+            let res = _mm256_blendv_pd(
+                _mm256_castsi256_pd(bits),
+                _mm256_castsi256_pd(out),
+                _mm256_castsi256_pd(process),
+            );
+            _mm256_storeu_pd(p, res);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parsing_accepts_the_three_backends() {
+        assert_eq!(SimdChoice::parse("auto"), Ok(SimdChoice::Auto));
+        assert_eq!(SimdChoice::parse("AVX2"), Ok(SimdChoice::Avx2));
+        assert_eq!(SimdChoice::parse(" scalar "), Ok(SimdChoice::Scalar));
+        let err = SimdChoice::parse("avx512").unwrap_err();
+        assert!(err.contains("avx512") && err.contains("scalar"), "{err}");
+    }
+
+    #[test]
+    fn forcing_scalar_deactivates_avx2() {
+        let _guard = BACKEND_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_backend(SimdChoice::Scalar);
+        assert!(!avx2_active());
+        assert_eq!(backend_label(), "scalar");
+        set_backend(SimdChoice::Auto);
+        // Auto matches the hardware either way; just exercise the label.
+        let _ = backend_label();
+    }
+}

@@ -35,6 +35,7 @@ use crate::fp::rng::Rng;
 use crate::fp::round::DEFAULT_SR_BITS;
 use crate::fp::scheme::{Scheme, SchemeError, SchemeRegistry};
 use crate::gd::engine::{GdConfig, GdEngine, GradModel, SchemePolicy};
+use crate::gd::lanes::run_lane_batch;
 use crate::gd::trace::Trace;
 use crate::problems::Problem;
 
@@ -56,6 +57,7 @@ pub struct RunBuilder<'p> {
     record_tau: bool,
     escape: Option<f64>,
     x0: Option<Vec<f64>>,
+    lanes: usize,
     err: Option<SchemeError>,
 }
 
@@ -75,6 +77,7 @@ impl<'p> RunBuilder<'p> {
             record_tau: false,
             escape: None,
             x0: None,
+            lanes: 1,
             err: None,
         }
     }
@@ -204,6 +207,17 @@ impl<'p> RunBuilder<'p> {
         self
     }
 
+    /// Lane width for [`RunBuilder::run_reps`]: repetitions execute in
+    /// chunks of `n` interleaved lanes sharing one data pass (the
+    /// structure-of-arrays fast path of [`crate::gd::run_lane_batch`];
+    /// see `docs/performance.md`). Clamped to ≥ 1. This is purely an
+    /// execution knob — per-repetition results are bit-identical at
+    /// every width.
+    pub fn lanes(mut self, n: usize) -> Self {
+        self.lanes = n.max(1);
+        self
+    }
+
     fn stash(&mut self, e: SchemeError) {
         if self.err.is_none() {
             self.err = Some(e);
@@ -227,6 +241,44 @@ impl<'p> RunBuilder<'p> {
         cfg.escape = self.escape;
         let x0 = self.x0.unwrap_or_else(|| vec![0.0; self.problem.dim()]);
         Ok(GdSession { engine: GdEngine::new(cfg, self.problem, &x0) })
+    }
+
+    /// Run `reps` independent repetitions of this configuration and return
+    /// one [`Trace`] per repetition, executing them [`RunBuilder::lanes`]
+    /// at a time as interleaved lane batches over one shared data pass.
+    ///
+    /// Stream derivation matches the scalar conventions exactly, so every
+    /// repetition is bit-identical to a single [`RunBuilder::build`] +
+    /// `run` at any lane width: without an injected stream, repetition `r`
+    /// uses the legacy seed-keyed root `Rng::new(seed + r)`; with
+    /// [`RunBuilder::rng`] set, repetition `r` uses `root.split(r)` (the
+    /// scheduler's per-cell stream convention).
+    pub fn run_reps(
+        self,
+        reps: usize,
+        metric: Option<&dyn Fn(&[f64]) -> f64>,
+    ) -> Result<Vec<Trace>, SchemeError> {
+        if let Some(e) = self.err {
+            return Err(e);
+        }
+        let mut cfg = GdConfig::new(self.grid, self.policy, self.t, self.steps);
+        cfg.grad_model = self.grad_model;
+        cfg.seed = self.seed;
+        cfg.record_tau = self.record_tau;
+        cfg.sr_bits = self.sr_bits;
+        cfg.escape = self.escape;
+        let x0 = self.x0.unwrap_or_else(|| vec![0.0; self.problem.dim()]);
+        let roots: Vec<Rng> = (0..reps as u64)
+            .map(|r| match &self.rng {
+                Some(root) => root.split(r),
+                None => Rng::new(self.seed.wrapping_add(r)),
+            })
+            .collect();
+        let mut traces = Vec::with_capacity(reps);
+        for chunk in roots.chunks(self.lanes) {
+            traces.extend(run_lane_batch(&cfg, self.problem, &x0, chunk, metric));
+        }
+        Ok(traces)
     }
 }
 
@@ -354,6 +406,76 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(s.run(None).objective_series(), fa);
+    }
+
+    /// `run_reps` is bit-identical to looping scalar sessions over
+    /// `seed + r`, at every lane width (the lanes knob is execution-only).
+    #[test]
+    fn run_reps_is_bit_identical_to_seed_looped_runs() {
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+        let mk = |lanes: usize| {
+            RunBuilder::new(&p)
+                .format_name("binary8")
+                .scheme("sr")
+                .stepsize(0.05)
+                .steps(50)
+                .seed(20)
+                .start(&[1.0])
+                .lanes(lanes)
+                .run_reps(6, None)
+                .unwrap()
+        };
+        let wide = mk(4);
+        let narrow = mk(1);
+        assert_eq!(wide.len(), 6);
+        for (r, tr) in wide.iter().enumerate() {
+            assert_eq!(
+                tr.objective_series(),
+                narrow[r].objective_series(),
+                "rep {r}: lane width leaked into results"
+            );
+            let mut s = RunBuilder::new(&p)
+                .format_name("binary8")
+                .scheme("sr")
+                .stepsize(0.05)
+                .steps(50)
+                .seed(20 + r as u64)
+                .start(&[1.0])
+                .build()
+                .unwrap();
+            assert_eq!(tr.objective_series(), s.run(None).objective_series(), "rep {r}");
+        }
+    }
+
+    /// With an injected root stream, repetition `r` runs on `root.split(r)`
+    /// — the scheduler's per-cell convention.
+    #[test]
+    fn run_reps_with_injected_stream_splits_per_rep() {
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+        let root = Rng::new(9);
+        let reps = RunBuilder::new(&p)
+            .format_name("binary8")
+            .scheme("sr")
+            .stepsize(0.05)
+            .steps(40)
+            .rng(root.clone())
+            .lanes(3)
+            .start(&[1.0])
+            .run_reps(5, None)
+            .unwrap();
+        assert_eq!(reps.len(), 5);
+        for (r, tr) in reps.iter().enumerate() {
+            let mut s = RunBuilder::new(&p)
+                .format_name("binary8")
+                .scheme("sr")
+                .stepsize(0.05)
+                .steps(40)
+                .rng(root.split(r as u64))
+                .start(&[1.0])
+                .build()
+                .unwrap();
+            assert_eq!(tr.objective_series(), s.run(None).objective_series(), "rep {r}");
+        }
     }
 
     #[test]

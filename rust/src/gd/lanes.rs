@@ -1,0 +1,331 @@
+//! Multi-seed lane execution of the GD iteration (8a)/(8b)/(8c).
+//!
+//! [`run_lane_batch`] runs `roots.len()` repetitions of one experiment cell
+//! as interleaved lanes of a structure-of-arrays slab
+//! ([`crate::fp::LaneBatch`] layout: element `i` of lane `l` at
+//! `i * lanes + l`), sharing every data pass — the gradient evaluation, the
+//! diagnostics and the fused (8b)/(8c) update kernel — across all lanes.
+//! Each lane keeps its own RNG streams (σ₁ / δ₂ / δ₃, forked from its root
+//! exactly as [`GdEngine::new`] forks them), so lane `l`'s trace is **bit
+//! identical** to a scalar [`GdEngine`] run with `cfg.rng = Some(roots[l])`:
+//! lanes are an execution strategy, never part of a result's identity (the
+//! contract asserted by this module's tests and relied on by the journal
+//! and golden layers — see `docs/performance.md`).
+//!
+//! Features that are inherently per-lane-sequential — τ_k recording (an
+//! extra gradient evaluation interleaved with the σ₁ stream) and the
+//! divergence guard (early exit at different steps per lane) — fall back
+//! to per-lane scalar engines, which satisfies the identity trivially.
+
+use crate::fp::kernels;
+use crate::fp::lanes::LaneBatch;
+use crate::fp::linalg::LpCtx;
+use crate::fp::rng::Rng;
+use crate::fp::round::{RoundPlan, Rounding, RunHealth};
+use crate::gd::engine::{GdConfig, GdEngine, GradModel};
+use crate::gd::trace::{IterRecord, Trace};
+use crate::problems::Problem;
+
+/// Run `roots.len()` repetitions of the configured GD run as parallel lanes
+/// over one shared data pass. `roots[l]` is lane `l`'s root RNG (the stream
+/// a scalar run would receive via [`GdConfig::rng`]); `x0` is the shared
+/// starting point (rounded onto the working grid with RN, as in
+/// [`GdEngine::new`]); `metric` is evaluated per lane on gathered columns.
+/// Returns one [`Trace`] per lane, bit-identical to the corresponding
+/// scalar runs.
+pub fn run_lane_batch<P: Problem + ?Sized>(
+    cfg: &GdConfig,
+    problem: &P,
+    x0: &[f64],
+    roots: &[Rng],
+    metric: Option<&dyn Fn(&[f64]) -> f64>,
+) -> Vec<Trace> {
+    assert!(!roots.is_empty(), "run_lane_batch needs at least one lane");
+    let n = problem.dim();
+    assert_eq!(x0.len(), n);
+
+    // τ_k interleaves an extra (8a) evaluation with the per-lane σ₁ stream
+    // and the escape guard ends lanes at different steps; both are
+    // per-lane-sequential, so serve them with scalar engines (identical
+    // results by construction).
+    if cfg.record_tau || cfg.escape.is_some() {
+        return roots
+            .iter()
+            .map(|root| {
+                let mut c = cfg.clone();
+                c.rng = Some(root.clone());
+                GdEngine::new(c, problem, x0).run(metric)
+            })
+            .collect();
+    }
+
+    let lanes = roots.len();
+    // Per-lane streams, forked exactly as `GdEngine::new` forks them.
+    let mut ctxs: Vec<LpCtx> = roots
+        .iter()
+        .map(|root| {
+            if cfg.grad_model == GradModel::Exact {
+                LpCtx::exact()
+            } else {
+                LpCtx::new(cfg.grid, cfg.schemes.grad, root.fork("sigma1", 0))
+                    .with_sr_bits(cfg.sr_bits)
+            }
+        })
+        .collect();
+    let mut rngs_mul: Vec<Rng> = roots.iter().map(|r| r.fork("delta2", 0)).collect();
+    let mut rngs_sub: Vec<Rng> = roots.iter().map(|r| r.fork("delta3", 0)).collect();
+
+    // The shared x0 lands on the working grid via RN, exactly as in
+    // `GdEngine::new`. RN consumes no randomness, so one pass (with lane
+    // 0's "x0" fork, unread) serves every lane.
+    let mut x0g = x0.to_vec();
+    let mut rng0 = roots[0].fork("x0", 0);
+    RoundPlan::new(cfg.grid).round_slice(Rounding::RoundNearestEven, &mut x0g, &mut rng0);
+    let mut x = LaneBatch::broadcast(&x0g, lanes);
+
+    // One plan for the whole run: `cfg` is borrowed immutably, so the
+    // per-step re-derivation of the scalar engine cannot observe changes.
+    let plan = RoundPlan::new(cfg.grid).with_sr_bits(cfg.sr_bits);
+
+    let mut gexact = vec![0.0; n * lanes];
+    let mut ghat = vec![0.0; n * lanes];
+    let mut mbuf = vec![0.0; n * lanes];
+    let mut vneg = vec![0.0; n * lanes];
+    let mut zbuf = vec![0.0; n * lanes];
+    let mut fs = vec![0.0; lanes];
+    let mut gn2 = vec![0.0; lanes];
+    let mut d2 = vec![0.0; lanes];
+    let mut mvals = vec![f64::NAN; lanes];
+    let mut health = vec![RunHealth::default(); lanes];
+    let mut moved = vec![false; lanes];
+    let mut traces = vec![Trace::default(); lanes];
+
+    for k in 0..cfg.steps {
+        // Diagnostics on the *current* iterates — per-lane accumulation in
+        // element order, matching the sequential fold of `exact::norm2`.
+        problem.gradient_exact_lanes(x.as_slice(), lanes, &mut gexact);
+        problem.objective_lanes(x.as_slice(), lanes, &mut fs);
+        gn2.fill(0.0);
+        for i in 0..n {
+            for (l, s) in gn2.iter_mut().enumerate() {
+                let g = gexact[i * lanes + l];
+                *s += g * g;
+            }
+        }
+        let opt = problem.optimum();
+        if let Some(xs) = opt {
+            d2.fill(0.0);
+            for (i, &xsi) in xs.iter().enumerate() {
+                for (l, s) in d2.iter_mut().enumerate() {
+                    let r = x.get(i, l) - xsi;
+                    *s += r * r;
+                }
+            }
+        }
+        if let Some(m) = metric {
+            for (l, v) in mvals.iter_mut().enumerate() {
+                *v = m(&x.lane(l));
+            }
+        }
+
+        // (8a): the low-precision gradient, one shared pass over the slab.
+        match cfg.grad_model {
+            GradModel::Exact => ghat.copy_from_slice(&gexact),
+            GradModel::RoundAfterOp => {
+                problem.gradient_rounded_lanes(x.as_slice(), lanes, &mut ctxs, &mut ghat)
+            }
+            GradModel::PerOp => {
+                problem.gradient_per_op_lanes(x.as_slice(), lanes, &mut ctxs, &mut ghat)
+            }
+        }
+
+        // (8b)+(8c): the fused lane kernel.
+        moved.fill(false);
+        kernels::gd_update_lanes(
+            &plan,
+            cfg.schemes.mul,
+            cfg.schemes.sub,
+            cfg.t,
+            x.as_mut_slice(),
+            &ghat,
+            lanes,
+            &mut mbuf,
+            &mut vneg,
+            &mut zbuf,
+            &mut rngs_mul,
+            &mut rngs_sub,
+            &mut health,
+            &mut moved,
+        );
+        for (l, trace) in traces.iter_mut().enumerate() {
+            health[l].steps += 1;
+            if !moved[l] {
+                health[l].stalled_steps += 1;
+            }
+            trace.push(IterRecord {
+                k,
+                f: fs[l],
+                grad_norm: gn2[l].sqrt(),
+                dist_to_opt: if opt.is_some() { d2[l].sqrt() } else { f64::NAN },
+                tau: f64::NAN,
+                stalled: !moved[l],
+                metric: mvals[l],
+            });
+        }
+    }
+    for (trace, h) in traces.iter_mut().zip(&health) {
+        trace.health = *h;
+    }
+    traces
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::format::FpFormat;
+    use crate::gd::engine::{SchemePolicy, StepSchemes};
+    use crate::problems::quadratic::Quadratic;
+
+    fn scalar_oracle<P: Problem + ?Sized>(
+        cfg: &GdConfig,
+        p: &P,
+        x0: &[f64],
+        root: &Rng,
+        metric: Option<&dyn Fn(&[f64]) -> f64>,
+    ) -> Trace {
+        let mut c = cfg.clone();
+        c.rng = Some(root.clone());
+        GdEngine::new(c, p, x0).run(metric)
+    }
+
+    fn assert_traces_bit_equal(lane: &Trace, oracle: &Trace, tag: &str) {
+        assert_eq!(lane.len(), oracle.len(), "{tag}: trace length");
+        assert_eq!(lane.status, oracle.status, "{tag}: status");
+        for (a, b) in lane.records.iter().zip(&oracle.records) {
+            assert_eq!(a.k, b.k, "{tag}");
+            assert_eq!(a.f.to_bits(), b.f.to_bits(), "{tag} k={}: f", a.k);
+            assert_eq!(
+                a.grad_norm.to_bits(),
+                b.grad_norm.to_bits(),
+                "{tag} k={}: grad_norm",
+                a.k
+            );
+            assert_eq!(
+                a.dist_to_opt.to_bits(),
+                b.dist_to_opt.to_bits(),
+                "{tag} k={}: dist",
+                a.k
+            );
+            assert_eq!(a.metric.to_bits(), b.metric.to_bits(), "{tag} k={}: metric", a.k);
+            assert_eq!(a.stalled, b.stalled, "{tag} k={}: stalled", a.k);
+        }
+        assert_eq!(lane.health, oracle.health, "{tag}: health");
+    }
+
+    /// The core contract: every lane of a batch is bit-identical — records,
+    /// health, status — to a scalar engine run with that lane's root stream,
+    /// across lane widths, problems (diagonal and dense), schemes
+    /// (deterministic, SR, mixed signed-SRε) and σ₁ models.
+    #[test]
+    fn lane_batch_matches_scalar_engines_bitwise() {
+        let diag = Quadratic::diagonal(vec![2.0, 0.7, 1.3], vec![4.0, -1.0, 0.5]);
+        let (dense, _, _) = Quadratic::setting2(9, 1);
+        let policies: Vec<(&str, SchemePolicy)> = vec![
+            ("rn", StepSchemes::uniform(Rounding::RoundNearestEven).into()),
+            ("sr", StepSchemes::uniform(Rounding::Sr).into()),
+            (
+                "mixed",
+                StepSchemes {
+                    grad: Rounding::Sr,
+                    mul: Rounding::SrEps(0.2),
+                    sub: Rounding::SignedSrEps(0.25),
+                }
+                .into(),
+            ),
+        ];
+        let metric: Option<&dyn Fn(&[f64]) -> f64> = Some(&|x: &[f64]| x[0] * 2.0);
+        for (pname, problem) in [("diag", &diag), ("dense", &dense)] {
+            let x0: Vec<f64> = (0..problem.dim()).map(|i| 1.0 + 0.25 * i as f64).collect();
+            for (sname, policy) in &policies {
+                for model in [GradModel::Exact, GradModel::RoundAfterOp, GradModel::PerOp] {
+                    for lanes in [1usize, 4, 8] {
+                        let mut cfg =
+                            GdConfig::new(FpFormat::BFLOAT16, *policy, 0.05, 25);
+                        cfg.grad_model = model;
+                        let roots: Vec<Rng> =
+                            (0..lanes).map(|l| Rng::new(40).split(l as u64)).collect();
+                        let traces = run_lane_batch(&cfg, problem, &x0, &roots, metric);
+                        assert_eq!(traces.len(), lanes);
+                        for (l, tr) in traces.iter().enumerate() {
+                            let oracle =
+                                scalar_oracle(&cfg, problem, &x0, &roots[l], metric);
+                            let tag =
+                                format!("{pname}/{sname}/{model:?}/L={lanes}/lane={l}");
+                            assert_traces_bit_equal(tr, &oracle, &tag);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Lane width never leaks into results: the same roots run at widths 1,
+    /// 2 and 8 produce identical traces lane for lane.
+    #[test]
+    fn lane_width_does_not_change_results() {
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+        let cfg = GdConfig::new(
+            FpFormat::BINARY8,
+            StepSchemes::uniform(Rounding::Sr),
+            0.05,
+            60,
+        );
+        let roots: Vec<Rng> = (0..8).map(|l| Rng::new(7).split(l)).collect();
+        let wide = run_lane_batch(&cfg, &p, &[1.0], &roots, None);
+        for l in 0..8 {
+            let solo = run_lane_batch(&cfg, &p, &[1.0], &roots[l..l + 1], None);
+            assert_traces_bit_equal(&wide[l], &solo[0], &format!("width lane {l}"));
+        }
+        let pair = run_lane_batch(&cfg, &p, &[1.0], &roots[2..4], None);
+        assert_traces_bit_equal(&wide[2], &pair[0], "pair lane 2");
+        assert_traces_bit_equal(&wide[3], &pair[1], "pair lane 3");
+    }
+
+    /// τ_k recording and the divergence guard take the scalar fallback and
+    /// still reproduce scalar engines exactly (including tau values and
+    /// per-lane `Diverged` statuses).
+    #[test]
+    fn sequential_features_fall_back_to_scalar_engines() {
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+        let mut cfg = GdConfig::new(
+            FpFormat::BINARY8,
+            StepSchemes::uniform(Rounding::Sr),
+            0.05,
+            30,
+        );
+        cfg.record_tau = true;
+        let roots: Vec<Rng> = (0..3).map(|l| Rng::new(11).split(l)).collect();
+        let traces = run_lane_batch(&cfg, &p, &[1.0], &roots, None);
+        for (l, tr) in traces.iter().enumerate() {
+            let oracle = scalar_oracle(&cfg, &p, &[1.0], &roots[l], None);
+            assert_eq!(tr.tau_series(), oracle.tau_series(), "lane {l} tau");
+            assert_traces_bit_equal(tr, &oracle, &format!("tau lane {l}"));
+        }
+        // Divergence guard: an unstable stepsize trips `escape` per lane.
+        let mut cfg2 = GdConfig::new(
+            FpFormat::BINARY64,
+            StepSchemes::uniform(Rounding::RoundNearestEven),
+            1.0,
+            100,
+        );
+        cfg2.grad_model = GradModel::Exact;
+        cfg2.escape = Some(1e8);
+        let p2 = Quadratic::diagonal(vec![2.0], vec![0.0]);
+        let traces2 = run_lane_batch(&cfg2, &p2, &[1.0], &roots, None);
+        for (l, tr) in traces2.iter().enumerate() {
+            let oracle = scalar_oracle(&cfg2, &p2, &[1.0], &roots[l], None);
+            assert_traces_bit_equal(tr, &oracle, &format!("escape lane {l}"));
+            assert!(!tr.status.is_completed(), "lane {l} should diverge");
+        }
+    }
+}

@@ -14,6 +14,11 @@
 //!     --max-retries N --fault-policy fail-fast|skip-cell|degrade
 //!     --escape X     terminate a run early once its loss exceeds X or
 //!                    goes non-finite (see docs/robustness.md)
+//!     --lanes N      run seed repetitions N at a time as interleaved
+//!                    lane batches (execution knob: results and journals
+//!                    are bit-identical at every width)
+//!     --simd auto|avx2|scalar   pin the kernel backend (default: runtime
+//!                    detection; see docs/performance.md)
 //! lpgd train <mlr|nn> [opts]            one training run with any schemes
 //!     --backend binary8 | fixed:Q3.8   number grid (--fmt is a legacy alias)
 //!     --t 0.5 --epochs 50 --seed 0
@@ -41,7 +46,10 @@ use anyhow::{bail, Result};
 use lpgd::coordinator::experiments::{list_experiments, run_experiment, ExpCtx};
 use lpgd::coordinator::{goldens, FaultPolicy, Journal};
 use lpgd::data::load_or_synth;
-use lpgd::fp::{Grid, NumberGrid, Rng, RoundPlan, Scheme, SchemeRegistry, DEFAULT_SR_BITS};
+use lpgd::fp::{
+    set_backend, Grid, NumberGrid, Rng, RoundPlan, Scheme, SchemeRegistry, SimdChoice,
+    DEFAULT_SR_BITS,
+};
 use lpgd::gd::{RunBuilder, SchemePolicy};
 use lpgd::problems::{Mlr, TwoLayerNn};
 use lpgd::util::cli::Args;
@@ -51,7 +59,7 @@ use lpgd::util::table::sparkline;
 const CTX_OPTS: &[&str] = &[
     "seeds", "jobs", "out-dir", "side", "mlr-train", "mlr-test", "nn-train", "nn-test",
     "mlr-epochs", "nn-epochs", "quad-steps", "quad-n", "mnist-dir", "journal", "resume",
-    "max-retries", "fault-policy", "escape",
+    "max-retries", "fault-policy", "escape", "lanes", "simd",
 ];
 
 fn main() {
@@ -86,6 +94,19 @@ fn ctx_from_args(a: &Args) -> Result<ExpCtx> {
         let thr: f64 =
             e.parse().map_err(|_| anyhow::anyhow!("--escape takes a number, got '{e}'"))?;
         ctx.escape = Some(thr);
+    }
+    if let Some(l) = a.get("lanes") {
+        let lanes: usize = l
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--lanes takes a positive integer, got '{l}'"))?;
+        if lanes == 0 {
+            bail!("--lanes must be at least 1 (lane width, not a disable switch)");
+        }
+        ctx.lanes = lanes;
+    }
+    if let Some(s) = a.get("simd") {
+        let choice = SimdChoice::parse(s).map_err(|e| anyhow::anyhow!("--simd: {e}"))?;
+        set_backend(choice);
     }
     // The journal digest covers every cell-shaping knob, so it must be
     // computed after all of them (escape included) are in place.
@@ -139,6 +160,8 @@ fn print_help() {
     println!("  reproduce <id|all> [opts]   regenerate a paper table/figure (--seeds, --jobs, --quick, --out-dir, ...)");
     println!("                              fault tolerance: --journal PATH [--resume], --max-retries N,");
     println!("                              --fault-policy fail-fast|skip-cell|degrade, --escape X (docs/robustness.md)");
+    println!("                              performance: --lanes N (multi-seed lane batches), --simd auto|avx2|scalar");
+    println!("                              (both execution-only: bit-identical results; docs/performance.md)");
     println!("  train <mlr|nn> [opts]       one training run (--backend/--fmt, --t, --epochs, --seed, --scheme, --s8a/--s8b/--s8c, --sr-bits)");
     println!("  round <value> [opts]        inspect rounding of one value (--fmt, --mode, --samples, --seed)");
     println!("  goldens <extract|check>     golden-figure harness (--dir, --report, --require, --stream-change)");

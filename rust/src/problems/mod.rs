@@ -36,6 +36,106 @@ pub trait Problem {
         self.gradient_rounded(x, ctx, out);
     }
 
+    // ---- multi-seed lane batches (structure-of-arrays slabs) -------------
+    //
+    // The lane entry points evaluate `lanes` independent iterates at once;
+    // slabs are element-major, lane-minor (element `i` of lane `l` at
+    // `i * lanes + l`, the `crate::fp::LaneBatch` layout). The contract —
+    // asserted by the lane-vs-scalar tests — is per-lane bit-identity: lane
+    // `l`'s outputs (and, for the rounded evaluators, lane `l`'s context
+    // stream consumption) must equal a scalar call on lane `l`'s column.
+    // The defaults gather/scatter columns around the scalar evaluators,
+    // which satisfies the contract trivially; problems with an expensive
+    // shared data pass (e.g. a dense matrix) override them to amortize that
+    // pass across lanes — see `Quadratic` for the pattern.
+
+    /// Lane-batched objective: `out[l] = f(x_l)` for the `lanes` interleaved
+    /// iterates of `xslab`. Monitoring only, exact (binary64) arithmetic.
+    fn objective_lanes(&self, xslab: &[f64], lanes: usize, out: &mut [f64]) {
+        let n = self.dim();
+        debug_assert_eq!(xslab.len(), n * lanes);
+        debug_assert_eq!(out.len(), lanes);
+        let mut col = vec![0.0; n];
+        for (l, o) in out.iter_mut().enumerate() {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = xslab[i * lanes + l];
+            }
+            *o = self.objective(&col);
+        }
+    }
+
+    /// Lane-batched exact gradient: lane `l` of `out` is `∇f` of lane `l`
+    /// of `xslab` (both slabs in the same interleaved layout).
+    fn gradient_exact_lanes(&self, xslab: &[f64], lanes: usize, out: &mut [f64]) {
+        let n = self.dim();
+        debug_assert_eq!(xslab.len(), n * lanes);
+        debug_assert_eq!(out.len(), n * lanes);
+        let mut col = vec![0.0; n];
+        let mut g = vec![0.0; n];
+        for l in 0..lanes {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = xslab[i * lanes + l];
+            }
+            self.gradient_exact(&col, &mut g);
+            for (i, &gi) in g.iter().enumerate() {
+                out[i * lanes + l] = gi;
+            }
+        }
+    }
+
+    /// Lane-batched chop-style gradient: lane `l` evaluates through
+    /// `ctxs[l]` (its own scheme stream), bit-identical to a scalar
+    /// [`Problem::gradient_rounded`] call on lane `l`'s column.
+    fn gradient_rounded_lanes(
+        &self,
+        xslab: &[f64],
+        lanes: usize,
+        ctxs: &mut [LpCtx],
+        out: &mut [f64],
+    ) {
+        let n = self.dim();
+        debug_assert_eq!(xslab.len(), n * lanes);
+        debug_assert_eq!(out.len(), n * lanes);
+        debug_assert_eq!(ctxs.len(), lanes);
+        let mut col = vec![0.0; n];
+        let mut g = vec![0.0; n];
+        for (l, ctx) in ctxs.iter_mut().enumerate() {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = xslab[i * lanes + l];
+            }
+            self.gradient_rounded(&col, ctx, &mut g);
+            for (i, &gi) in g.iter().enumerate() {
+                out[i * lanes + l] = gi;
+            }
+        }
+    }
+
+    /// Lane-batched strict per-op gradient; same contract as
+    /// [`Problem::gradient_rounded_lanes`].
+    fn gradient_per_op_lanes(
+        &self,
+        xslab: &[f64],
+        lanes: usize,
+        ctxs: &mut [LpCtx],
+        out: &mut [f64],
+    ) {
+        let n = self.dim();
+        debug_assert_eq!(xslab.len(), n * lanes);
+        debug_assert_eq!(out.len(), n * lanes);
+        debug_assert_eq!(ctxs.len(), lanes);
+        let mut col = vec![0.0; n];
+        let mut g = vec![0.0; n];
+        for (l, ctx) in ctxs.iter_mut().enumerate() {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = xslab[i * lanes + l];
+            }
+            self.gradient_per_op(&col, ctx, &mut g);
+            for (i, &gi) in g.iter().enumerate() {
+                out[i * lanes + l] = gi;
+            }
+        }
+    }
+
     /// Lipschitz constant L of ∇f, when known analytically.
     fn lipschitz(&self) -> Option<f64> {
         None

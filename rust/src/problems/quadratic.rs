@@ -99,6 +99,31 @@ impl Quadratic {
     }
 }
 
+/// Lane-batched exact gemv over an interleaved slab: per lane bit-identical
+/// to [`exact::gemv`] on that lane's column (one running accumulator per
+/// lane, summed in the same sequential `j` order), with a single pass over
+/// `a` shared by all lanes — the cache-reuse move the multi-seed lane mode
+/// is built on (the matrix is read once per batch instead of once per rep).
+fn gemv_lanes(a: &[f64], n: usize, lanes: usize, xslab: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(xslab.len(), n * lanes);
+    debug_assert_eq!(out.len(), n * lanes);
+    let mut acc = vec![0.0f64; lanes];
+    for i in 0..n {
+        acc.fill(0.0);
+        let row = &a[i * n..(i + 1) * n];
+        for (j, &aij) in row.iter().enumerate() {
+            let col = &xslab[j * lanes..(j + 1) * lanes];
+            // Independent lanes: the inner loop autovectorizes without any
+            // reassociation inside a lane's sum.
+            for (s, &x) in acc.iter_mut().zip(col) {
+                *s += aij * x;
+            }
+        }
+        out[i * lanes..(i + 1) * lanes].copy_from_slice(&acc);
+    }
+}
+
 impl Problem for Quadratic {
     fn dim(&self) -> usize {
         self.n
@@ -162,6 +187,121 @@ impl Problem for Quadratic {
                 }
             }
             Some(a) => ctx.gemv(a, self.n, self.n, &r, out),
+        }
+    }
+
+    /// Shared-pass lane objective: the residuals and (dense) `A·r` pass run
+    /// once over the slab; per lane the arithmetic order matches the scalar
+    /// [`Quadratic::objective`] exactly, so the values are bit-identical.
+    fn objective_lanes(&self, xslab: &[f64], lanes: usize, out: &mut [f64]) {
+        let n = self.n;
+        debug_assert_eq!(xslab.len(), n * lanes);
+        debug_assert_eq!(out.len(), lanes);
+        let mut r = vec![0.0; n * lanes];
+        for i in 0..n {
+            for l in 0..lanes {
+                r[i * lanes + l] = xslab[i * lanes + l] - self.xstar[i];
+            }
+        }
+        out.fill(0.0);
+        match &self.dense {
+            None => {
+                for i in 0..n {
+                    let di = self.diag[i];
+                    for (l, o) in out.iter_mut().enumerate() {
+                        let ri = r[i * lanes + l];
+                        *o += di * ri * ri;
+                    }
+                }
+            }
+            Some(a) => {
+                let mut ar = vec![0.0; n * lanes];
+                gemv_lanes(a, n, lanes, &r, &mut ar);
+                for i in 0..n {
+                    for (l, o) in out.iter_mut().enumerate() {
+                        *o += r[i * lanes + l] * ar[i * lanes + l];
+                    }
+                }
+            }
+        }
+        for o in out.iter_mut() {
+            *o *= 0.5;
+        }
+    }
+
+    /// Shared-pass lane exact gradient (dense: one matrix pass for all
+    /// lanes via [`gemv_lanes`]); per lane bit-identical to
+    /// [`Quadratic::gradient_exact`] on that lane's column.
+    fn gradient_exact_lanes(&self, xslab: &[f64], lanes: usize, out: &mut [f64]) {
+        let n = self.n;
+        debug_assert_eq!(xslab.len(), n * lanes);
+        debug_assert_eq!(out.len(), n * lanes);
+        match &self.dense {
+            None => {
+                for i in 0..n {
+                    let di = self.diag[i];
+                    let xs = self.xstar[i];
+                    for l in 0..lanes {
+                        let idx = i * lanes + l;
+                        out[idx] = di * (xslab[idx] - xs);
+                    }
+                }
+            }
+            Some(a) => {
+                let mut r = vec![0.0; n * lanes];
+                for i in 0..n {
+                    for l in 0..lanes {
+                        r[i * lanes + l] = xslab[i * lanes + l] - self.xstar[i];
+                    }
+                }
+                gemv_lanes(a, n, lanes, &r, out);
+            }
+        }
+    }
+
+    /// Shared-pass lane chop gradient: per-`(i, l)` rounded ops in element
+    /// order through lane `l`'s context (the same call sequence the scalar
+    /// [`Quadratic::gradient_rounded`] makes per lane — bit-identical
+    /// values *and* stream consumption), with the exact dense gemv shared
+    /// across lanes.
+    fn gradient_rounded_lanes(
+        &self,
+        xslab: &[f64],
+        lanes: usize,
+        ctxs: &mut [LpCtx],
+        out: &mut [f64],
+    ) {
+        let n = self.n;
+        debug_assert_eq!(xslab.len(), n * lanes);
+        debug_assert_eq!(out.len(), n * lanes);
+        debug_assert_eq!(ctxs.len(), lanes);
+        let mut r = vec![0.0; n * lanes];
+        for i in 0..n {
+            for (l, ctx) in ctxs.iter_mut().enumerate() {
+                let idx = i * lanes + l;
+                r[idx] = ctx.sub(xslab[idx], self.xstar[i]);
+            }
+        }
+        match &self.dense {
+            None => {
+                for i in 0..n {
+                    let di = self.diag[i];
+                    for (l, ctx) in ctxs.iter_mut().enumerate() {
+                        let idx = i * lanes + l;
+                        out[idx] = ctx.mul(di, r[idx]);
+                    }
+                }
+            }
+            Some(a) => {
+                gemv_lanes(a, n, lanes, &r, out);
+                // Entrywise storage rounding in `fl_slice` order per lane.
+                for i in 0..n {
+                    for (l, ctx) in ctxs.iter_mut().enumerate() {
+                        let idx = i * lanes + l;
+                        out[idx] = ctx.fl(out[idx]);
+                    }
+                }
+            }
         }
     }
 
@@ -282,5 +422,66 @@ mod tests {
         assert!(exact::norm2(&exact::sub(&g1, &ge)) / n2 < 0.05);
         // Per-op accumulates more error but must stay within the γ_n regime.
         assert!(exact::norm2(&exact::sub(&g2, &ge)) / n2 < 0.3);
+    }
+
+    /// The shared-pass lane evaluators are bit-identical per lane to the
+    /// scalar ones — objective, exact gradient, and the chop gradient
+    /// including context stream consumption and op counts — for both the
+    /// diagonal and the dense matrix shape.
+    #[test]
+    fn lane_evaluators_match_scalar_per_lane() {
+        let diag =
+            Quadratic::diagonal(vec![2.0, 0.5, 1.0, 3.0, 0.1], vec![1.0, -1.0, 0.0, 2.0, 0.5]);
+        let dense = Quadratic::setting2(17, 1).0;
+        for p in [&diag, &dense] {
+            let n = p.dim();
+            for lanes in [1usize, 4, 5] {
+                let mut gen = Rng::new(88);
+                let cols: Vec<Vec<f64>> =
+                    (0..lanes).map(|_| (0..n).map(|_| gen.normal() * 3.0).collect()).collect();
+                let mut xslab = vec![0.0; n * lanes];
+                for i in 0..n {
+                    for l in 0..lanes {
+                        xslab[i * lanes + l] = cols[l][i];
+                    }
+                }
+                // Objective.
+                let mut fs = vec![0.0; lanes];
+                p.objective_lanes(&xslab, lanes, &mut fs);
+                for l in 0..lanes {
+                    assert_eq!(fs[l].to_bits(), p.objective(&cols[l]).to_bits(), "f lane {l}");
+                }
+                // Exact gradient.
+                let mut gslab = vec![0.0; n * lanes];
+                p.gradient_exact_lanes(&xslab, lanes, &mut gslab);
+                let mut g = vec![0.0; n];
+                for l in 0..lanes {
+                    p.gradient_exact(&cols[l], &mut g);
+                    for i in 0..n {
+                        assert_eq!(gslab[i * lanes + l].to_bits(), g[i].to_bits(), "∇ lane {l}");
+                    }
+                }
+                // Chop gradient: values, stream end state, and op counts.
+                let root = Rng::new(7);
+                let mut ctxs: Vec<LpCtx> = (0..lanes as u64)
+                    .map(|l| LpCtx::new(FpFormat::BFLOAT16, Rounding::Sr, root.split(l)))
+                    .collect();
+                p.gradient_rounded_lanes(&xslab, lanes, &mut ctxs, &mut gslab);
+                for l in 0..lanes {
+                    let mut oracle =
+                        LpCtx::new(FpFormat::BFLOAT16, Rounding::Sr, root.split(l as u64));
+                    p.gradient_rounded(&cols[l], &mut oracle, &mut g);
+                    for i in 0..n {
+                        assert_eq!(gslab[i * lanes + l].to_bits(), g[i].to_bits(), "ĝ lane {l}");
+                    }
+                    assert_eq!(ctxs[l].rounding_ops, oracle.rounding_ops, "ops lane {l}");
+                    assert_eq!(
+                        ctxs[l].rng.next_u64(),
+                        oracle.rng.next_u64(),
+                        "stream lane {l}"
+                    );
+                }
+            }
+        }
     }
 }

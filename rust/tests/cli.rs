@@ -94,6 +94,77 @@ fn unknown_experiment_and_goldens_action_are_rejected() {
 }
 
 #[test]
+fn lanes_zero_and_malformed_lanes_are_rejected() {
+    let err = run_err(&["reproduce", "table2", "--lanes", "0"]);
+    assert!(err.contains("--lanes must be at least 1"), "{err}");
+    let err = run_err(&["reproduce", "table2", "--lanes", "four"]);
+    assert!(err.contains("--lanes takes a positive integer"), "{err}");
+}
+
+#[test]
+fn malformed_simd_backend_is_rejected() {
+    let err = run_err(&["reproduce", "table2", "--simd", "avx512"]);
+    assert!(err.contains("unknown SIMD backend 'avx512'"), "{err}");
+    assert!(err.contains("auto, avx2 or scalar"), "{err}");
+}
+
+/// `--lanes` composes with `--journal`/`--resume`: cells journaled by a
+/// lane-batched sweep replay bit-identically into a resume at a different
+/// lane width, and the CSVs match a fresh run at width 1 byte for byte.
+#[test]
+fn journaled_cells_replay_bit_identically_across_lane_widths() {
+    let base = std::env::temp_dir().join(format!("lpgd_cli_lanes_{}", std::process::id()));
+    let journal = base.join("sweep.jsonl");
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).unwrap();
+    let jpath = journal.to_string_lossy().into_owned();
+    let run_ok = |out_dir: &str, extra: &[&str]| {
+        let dir = base.join(out_dir);
+        let mut args = vec![
+            "reproduce",
+            "fig3a",
+            "--quick",
+            "--quad-n",
+            "10",
+            "--quad-steps",
+            "40",
+            "--seeds",
+            "3",
+            "--jobs",
+            "1",
+            "--out-dir",
+        ];
+        let dir_s = dir.to_string_lossy().into_owned();
+        args.push(&dir_s);
+        args.extend_from_slice(extra);
+        let out = lpgd(&args);
+        assert!(
+            out.status.success(),
+            "`lpgd {}` failed:\n{}",
+            args.join(" "),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        (dir, String::from_utf8_lossy(&out.stderr).into_owned())
+    };
+    // Fresh lane-batched run writes the journal.
+    let (dir_wide, _) = run_ok("wide", &["--lanes", "4", "--journal", &jpath]);
+    // Resume at a different width: every cell replays from the journal.
+    let (dir_resumed, stderr) =
+        run_ok("resumed", &["--lanes", "1", "--journal", &jpath, "--resume"]);
+    assert!(stderr.contains("completed cell(s) loaded"), "{stderr}");
+    // Fresh scalar-width run, no journal at all.
+    let (dir_scalar, _) = run_ok("scalar", &["--lanes", "1"]);
+    let csv = |dir: &std::path::Path| {
+        std::fs::read_to_string(dir.join("fig3a.csv")).expect("fig3a.csv written")
+    };
+    let wide = csv(&dir_wide);
+    assert!(!wide.is_empty());
+    assert_eq!(wide, csv(&dir_resumed), "journal replay changed the CSV");
+    assert_eq!(wide, csv(&dir_scalar), "lane width changed the CSV");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
 fn help_lists_the_new_subcommand_and_exits_zero() {
     let out = lpgd(&["--help"]);
     assert!(out.status.success());

@@ -1,15 +1,33 @@
 #!/usr/bin/env python3
-"""Append the current BENCH_*.json artifacts to BENCH_history.jsonl.
+"""Maintain and police BENCH_history.jsonl, the cross-PR perf trajectory.
 
-One JSONL line per artifact per invocation, stamped with machine
-provenance (hostname, platform, CPU count, UTC timestamp, git commit), so
-the perf trajectory is tracked *across* PRs instead of each PR
-overwriting the last measurement. Artifacts still carrying the
-hand-projected ``SEED ESTIMATE`` marker are refused: history records
-measurements only.
+Two modes, stdlib only:
 
-Stdlib only. Usage:  python3 scripts/bench_history.py [artifact.json ...]
-(defaults to every BENCH_*.json in the repo root).
+``append`` (the default, for backward compatibility)
+    Append the current BENCH_*.json artifacts to BENCH_history.jsonl, one
+    JSONL line per artifact per invocation, stamped with machine
+    provenance (hostname, platform, CPU count, UTC timestamp, git
+    commit), so the perf trajectory is tracked *across* PRs instead of
+    each PR overwriting the last measurement. Artifacts still carrying
+    the hand-projected ``SEED ESTIMATE`` marker are refused: history
+    records measurements only.
+
+``compare``
+    Regression gate over the recorded trajectory: for every (artifact,
+    machine) pair, take the two newest entries and compare each named
+    result's median ns/iter. Exit non-zero if any median regressed more
+    than the threshold (default 15%). "Machine" means the provenance
+    ``platform`` string (kernel + arch + libc) — CI runner *hostnames*
+    are randomized per job, but runners drawn from the same image
+    generation share a platform string, so consecutive CI runs compare
+    while a runner-image upgrade starts a fresh baseline instead of
+    producing a false alarm. Pairs with fewer than two entries are
+    skipped (nothing to compare is a pass, not a failure).
+
+Usage:
+    python3 scripts/bench_history.py [append] [artifact.json ...]
+    python3 scripts/bench_history.py compare [--threshold 0.15]
+        [--history BENCH_history.jsonl] [--ignore-machine]
 """
 
 import datetime
@@ -33,10 +51,13 @@ def git_commit():
         return "unknown"
 
 
-def main():
-    explicit = [os.path.abspath(p) for p in sys.argv[1:]]
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    os.chdir(root)
+def repo_root():
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def append(argv):
+    explicit = [os.path.abspath(p) for p in argv]
+    os.chdir(repo_root())
     paths = explicit or sorted(glob.glob("BENCH_*.json"))
     if not paths:
         print("bench_history: no BENCH_*.json artifacts found, nothing to append")
@@ -73,6 +94,89 @@ def main():
             appended += 1
     print(f"bench_history: appended {appended} artifact(s) to BENCH_history.jsonl")
     return 0
+
+
+def compare(argv):
+    threshold = 0.15
+    history = "BENCH_history.jsonl"
+    ignore_machine = False
+    it = iter(argv)
+    for arg in it:
+        if arg == "--threshold":
+            threshold = float(next(it, "") or "nan")
+            if not threshold >= 0:
+                print("bench_history: --threshold needs a non-negative fraction",
+                      file=sys.stderr)
+                return 2
+        elif arg == "--history":
+            history = next(it, "")
+        elif arg == "--ignore-machine":
+            ignore_machine = True
+        else:
+            print(f"bench_history: unknown compare option '{arg}'", file=sys.stderr)
+            return 2
+    os.chdir(repo_root())
+    if not os.path.exists(history):
+        print(f"bench_history: {history} does not exist yet — nothing to compare")
+        return 0
+    entries = []
+    with open(history) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entries.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                print(f"bench_history: skipping unparsable history line {ln}: {e}",
+                      file=sys.stderr)
+    # Group chronologically (file order == append order) per machine key.
+    groups = {}
+    for e in entries:
+        prov = e.get("provenance", {})
+        machine = "any" if ignore_machine else prov.get("platform", "unknown")
+        groups.setdefault((e.get("artifact", "?"), machine), []).append(e)
+    regressions = []
+    compared = 0
+    for (artifact, machine), seq in sorted(groups.items()):
+        if len(seq) < 2:
+            print(f"compare: {artifact} on [{machine}]: only {len(seq)} entry(ies), skipping")
+            continue
+        prev, new = seq[-2], seq[-1]
+        prev_medians = {r["name"]: r.get("median_ns", 0.0)
+                        for r in prev.get("data", {}).get("results", [])}
+        for r in new.get("data", {}).get("results", []):
+            name = r["name"]
+            if name not in prev_medians or not prev_medians[name] > 0:
+                continue
+            old_ns, new_ns = prev_medians[name], r.get("median_ns", 0.0)
+            compared += 1
+            ratio = new_ns / old_ns
+            if ratio > 1.0 + threshold:
+                regressions.append(
+                    f"{artifact} [{machine}] '{name}': median {old_ns:.0f} -> "
+                    f"{new_ns:.0f} ns/iter ({(ratio - 1.0) * 100:.1f}% slower, "
+                    f"commits {prev['provenance'].get('commit')} -> "
+                    f"{new['provenance'].get('commit')})"
+                )
+    if regressions:
+        print(f"compare: {len(regressions)} regression(s) beyond "
+              f"{threshold * 100:.0f}% of {compared} compared medians:", file=sys.stderr)
+        for r in regressions:
+            print(f"  REGRESSION: {r}", file=sys.stderr)
+        return 1
+    print(f"compare: OK — {compared} median(s) compared, none regressed beyond "
+          f"{threshold * 100:.0f}%")
+    return 0
+
+
+def main():
+    argv = sys.argv[1:]
+    if argv and argv[0] == "compare":
+        return compare(argv[1:])
+    if argv and argv[0] == "append":
+        return append(argv[1:])
+    return append(argv)
 
 
 if __name__ == "__main__":
