@@ -1,0 +1,86 @@
+// Bench: the experiment service's request path — registry hits (the hot
+// path the service exists for) vs cold misses that fan the computation out
+// across the scheduler. Drives `ExperimentService::handle` in-process with
+// synthetic requests, so the numbers measure dispatch + registry + compute
+// without socket noise, and reports the hit/miss ratio (the acceptance
+// metric: serving from the registry must be orders of magnitude cheaper
+// than recomputing).
+//
+// Run: `cargo bench --bench serve`
+
+include!("harness.rs");
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use lpgd::registry::ResultStore;
+use lpgd::serve::http::Request;
+use lpgd::serve::ExperimentService;
+
+fn post_run(seed: u64) -> Request {
+    Request {
+        method: "POST".to_string(),
+        path: "/v1/run".to_string(),
+        body: format!(
+            r#"{{"problem":{{"kind":"quadratic1","dim":64}},"grid":"bfloat16",
+                "stepsize":0.05,"steps":200,"seed":{seed},"reps":1}}"#
+        )
+        .into_bytes(),
+    }
+}
+
+fn main() {
+    warn_if_hand_projected("serve");
+    let dir = std::env::temp_dir().join(format!("lpgd_bench_serve_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(ResultStore::open(&dir).expect("open bench registry"));
+    let service = ExperimentService::new(store, 4096, 1);
+
+    println!("-- serve: POST /v1/run, quadratic1 n=64, 200 steps, 1 rep --");
+
+    // Cold path: every iteration a fresh seed, so every request computes
+    // its cell and writes it back.
+    let next_seed = AtomicU64::new(0);
+    let miss = bench("run miss (compute + write-back)", 1, || {
+        let req = post_run(next_seed.fetch_add(1, Ordering::Relaxed));
+        let resp = service.handle(&req);
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        std::hint::black_box(resp.body.len());
+    });
+
+    // Hot path: one warmed spec answered from the registry every time.
+    let warm = post_run(999_999_999);
+    assert_eq!(service.handle(&warm).status, 200);
+    let hit = bench("run hit (registry-served)", 1, || {
+        let resp = service.handle(&warm);
+        assert_eq!(resp.status, 200);
+        std::hint::black_box(resp.body.len());
+    });
+
+    // Stats never touch the registry log — a floor for pure dispatch.
+    let stats_req = Request {
+        method: "GET".to_string(),
+        path: "/v1/stats".to_string(),
+        body: Vec::new(),
+    };
+    let stats = bench("stats (dispatch floor)", 1, || {
+        std::hint::black_box(service.handle(&stats_req).body.len());
+    });
+
+    let ratio = report_speedup(&miss, &hit);
+    for r in [&miss, &hit, &stats] {
+        println!(
+            "  {:<40} {:>10.0} req/s (median)",
+            r.name,
+            1e9 / r.median_ns
+        );
+    }
+
+    write_bench_json(
+        "serve",
+        &[miss, hit, stats],
+        &[("serve_hit_vs_miss".into(), ratio)],
+    )
+    .expect("writing BENCH_serve.json");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -11,6 +11,8 @@ use crate::coordinator::health::{CellOutcome, FaultPolicy};
 use crate::coordinator::journal::{sweep_cells, SweepFaults};
 use crate::coordinator::scheduler::{cell_stream, run_indexed, run_indexed_faulted};
 use crate::gd::trace::{mean_series, variance_series, Trace};
+use crate::registry::{sweep_provenance, CellRecord};
+use crate::util::hash::registry_key;
 
 /// Aggregated series over seeds.
 #[derive(Debug, Clone)]
@@ -112,19 +114,36 @@ pub fn expectation_sweep_lanes(
     let lanes = lanes.max(1);
     let mut values: Vec<Option<Vec<f64>>> = vec![None; seeds];
     let mut notes = Vec::new();
-    // (1) Replay journaled repetitions — per-rep keys, lane-width agnostic.
+    // (1) Replay journaled repetitions — per-rep keys, lane-width agnostic
+    // — then serve registry-stored ones (same content addresses as the
+    // scalar sweep: lane width never changes a cell's identity or bytes).
     let mut todo: Vec<u64> = Vec::new();
+    let mut served = 0usize;
     for s in 0..seeds as u64 {
-        match faults.journal.and_then(|j| j.lookup(cell_stream(exp, label, s))) {
-            Some(series) => values[s as usize] = Some(series),
-            None => todo.push(s),
+        let key = cell_stream(exp, label, s);
+        if let Some(series) = faults.journal.and_then(|j| j.lookup(key)) {
+            values[s as usize] = Some(series);
+        } else if let Some((reg, rec)) = faults.registry.and_then(|reg| {
+            reg.peek(registry_key(faults.config_digest, key)).map(|rec| (reg, rec))
+        }) {
+            reg.count_hit();
+            if let Some(j) = faults.journal {
+                j.append(key, &rec.series);
+            }
+            values[s as usize] = Some(rec.series.clone());
+            served += 1;
+        } else {
+            todo.push(s);
         }
     }
-    if todo.len() < seeds {
+    if todo.len() + served < seeds {
         notes.push(format!(
             "{exp}: resumed {} of {seeds} cells from journal",
-            seeds - todo.len()
+            seeds - todo.len() - served
         ));
+    }
+    if served > 0 {
+        notes.push(format!("{exp}: served {served} of {seeds} cells from registry"));
     }
     // (2) Fan the remainder out as lane batches; journal per repetition as
     // each batch completes.
@@ -146,9 +165,24 @@ pub fn expectation_sweep_lanes(
             traces.iter().map(|t| select(t)).collect::<Vec<Vec<f64>>>()
         },
         |c, r| {
-            if let (Some(j), Some(vs)) = (faults.journal, &r.value) {
-                for (&s, v) in chunks[c].iter().zip(vs) {
-                    j.append(cell_stream(exp, label, s), v);
+            let Some(vs) = &r.value else { return };
+            for (&s, v) in chunks[c].iter().zip(vs) {
+                let key = cell_stream(exp, label, s);
+                if let Some(j) = faults.journal {
+                    j.append(key, v);
+                }
+                if let Some(reg) = faults.registry {
+                    reg.insert(
+                        registry_key(faults.config_digest, key),
+                        CellRecord {
+                            digest: faults.config_digest,
+                            cell: key,
+                            series: v.clone(),
+                            health: Default::default(),
+                            provenance: sweep_provenance(exp, label, s),
+                        },
+                    );
+                    reg.count_miss();
                 }
             }
         },

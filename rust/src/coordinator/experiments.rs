@@ -23,6 +23,8 @@ use crate::gd::engine::{GdConfig, GdEngine, GradModel, SchemePolicy};
 use crate::gd::theory;
 use crate::gd::trace::Trace;
 use crate::problems::{Mlr, Problem, Quadratic, TwoLayerNn};
+use crate::registry::ResultStore;
+use crate::util::hash::Fnv1a;
 use crate::util::stats::{first_at_or_below, sem, sem_from_population_variance};
 use crate::util::table::{Cell, Table};
 use anyhow::{bail, Result};
@@ -78,6 +80,11 @@ pub struct ExpCtx {
     /// Checkpoint/resume journal (`--journal PATH`, loaded when `--resume`
     /// is also given). Shared across the experiment's sweeps.
     pub journal: Option<Arc<Journal>>,
+    /// Content-addressed result registry (`--registry DIR`): sweep cells
+    /// whose key is already in the store are served from it instead of
+    /// recomputed, and freshly computed cells are written back. Shared
+    /// byte-for-byte with `lpgd serve` (see `docs/service.md`).
+    pub registry: Option<Arc<ResultStore>>,
     /// Deterministic fault injector — test/CI hook only, never set by
     /// normal CLI use.
     pub injector: Option<Arc<FaultInjector>>,
@@ -104,6 +111,7 @@ impl Default for ExpCtx {
             fault_policy: FaultPolicy::FailFast,
             escape: None,
             journal: None,
+            registry: None,
             injector: None,
         }
     }
@@ -135,6 +143,8 @@ impl ExpCtx {
             max_retries: self.max_retries,
             policy: self.fault_policy,
             journal: self.journal.as_deref(),
+            registry: self.registry.as_deref(),
+            config_digest: self.config_digest(),
             injector: self.injector.as_deref(),
         }
     }
@@ -147,14 +157,9 @@ impl ExpCtx {
     /// fault knobs are deliberately excluded: they select or schedule cells
     /// but never change an individual cell's output.
     pub fn config_digest(&self) -> u64 {
-        fn eat(mut h: u64, bytes: &[u8]) -> u64 {
-            for &b in bytes {
-                h ^= b as u64;
-                h = h.wrapping_mul(0x100000001b3);
-            }
-            h
-        }
-        let mut h = 0xcbf29ce484222325u64;
+        // The fold order below is the on-disk journal contract — see
+        // `util::hash` for the byte-compatibility notes.
+        let mut h = Fnv1a::new();
         for v in [
             self.side,
             self.mlr_train,
@@ -166,12 +171,12 @@ impl ExpCtx {
             self.quad_steps,
             self.quad_n,
         ] {
-            h = eat(h, &(v as u64).to_le_bytes());
+            h = h.u64(v as u64);
         }
-        h = eat(h, self.mnist_dir.as_deref().unwrap_or("").as_bytes());
-        h = eat(h, &[self.escape.is_some() as u8]);
-        h = eat(h, &self.escape.map_or(0, f64::to_bits).to_le_bytes());
-        h
+        h.str(self.mnist_dir.as_deref().unwrap_or(""))
+            .byte(self.escape.is_some() as u8)
+            .u64(self.escape.map_or(0, f64::to_bits))
+            .finish()
     }
 }
 

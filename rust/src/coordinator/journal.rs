@@ -32,6 +32,8 @@ use std::sync::Mutex;
 
 use crate::coordinator::health::{CellOutcome, FaultInjector, FaultPolicy, InjectedFault};
 use crate::coordinator::scheduler::{cell_stream, run_indexed_faulted};
+use crate::registry::{sweep_provenance, CellRecord, ResultStore};
+use crate::util::hash::registry_key;
 
 /// An append-only cell-result journal backing `--journal PATH --resume`.
 #[derive(Debug)]
@@ -152,14 +154,30 @@ pub struct SweepFaults<'a> {
     pub policy: FaultPolicy,
     /// Checkpoint/resume journal, when `--journal` is active.
     pub journal: Option<&'a Journal>,
+    /// Content-addressed result registry, when `--registry` is active:
+    /// cells whose key is already stored are served instead of recomputed,
+    /// fresh cells are written back (see [`crate::registry`]).
+    pub registry: Option<&'a ResultStore>,
+    /// The run-configuration digest (`ExpCtx::config_digest`) that keys
+    /// registry lookups; `0` when no registry is attached.
+    pub config_digest: u64,
     /// Deterministic test-only fault injector.
     pub injector: Option<&'a FaultInjector>,
 }
 
 impl SweepFaults<'_> {
-    /// A plain sweep: no journal, no injector, fail-fast, no retries.
+    /// A plain sweep: no journal, no registry, no injector, fail-fast, no
+    /// retries.
     pub fn none(jobs: usize) -> Self {
-        Self { jobs, max_retries: 0, policy: FaultPolicy::FailFast, journal: None, injector: None }
+        Self {
+            jobs,
+            max_retries: 0,
+            policy: FaultPolicy::FailFast,
+            journal: None,
+            registry: None,
+            config_digest: 0,
+            injector: None,
+        }
     }
 }
 
@@ -167,9 +185,13 @@ impl SweepFaults<'_> {
 /// through the fault-aware scheduler with journaling.
 ///
 /// Per cell, in order: (1) if the journal already holds its series under
-/// the current digest, replay it without running anything; (2) otherwise
-/// run it under `catch_unwind` with up to `max_retries` deterministic
-/// retries, journaling the series the moment the cell completes; (3) a
+/// the current digest, replay it without running anything; (1b) otherwise,
+/// if the result registry holds the cell's content address, serve the
+/// stored series (counting a registry hit, and journaling it so a later
+/// `--resume` replays locally); (2) otherwise run it under `catch_unwind`
+/// with up to `max_retries` deterministic retries, journaling — and
+/// registering, with a registry miss counted — the series the moment the
+/// cell completes; (3) a
 /// terminally failed cell is resolved by the [`FaultPolicy`] — fail-fast
 /// panics the sweep (caught at the experiment boundary), skip-cell leaves
 /// `None` in its slot, degrade substitutes `master(i)` (the exact-arithmetic
@@ -191,16 +213,35 @@ pub fn sweep_cells(
         cells.iter().map(|(label, rep)| cell_stream(exp, label, *rep)).collect();
     let mut values: Vec<Option<Vec<f64>>> = vec![None; n];
     let mut notes = Vec::new();
-    // (1) Replay journaled cells.
+    // (1) Replay journaled cells; (1b) serve registry-stored cells.
     let mut todo: Vec<usize> = Vec::new();
+    let mut served = 0usize;
     for i in 0..n {
-        match faults.journal.and_then(|j| j.lookup(keys[i])) {
-            Some(series) => values[i] = Some(series),
-            None => todo.push(i),
+        if let Some(series) = faults.journal.and_then(|j| j.lookup(keys[i])) {
+            values[i] = Some(series);
+        } else if let Some((reg, rec)) = faults.registry.and_then(|reg| {
+            reg.peek(registry_key(faults.config_digest, keys[i])).map(|rec| (reg, rec))
+        }) {
+            reg.count_hit();
+            // Journal the served series too, so a later `--resume` replays
+            // without even touching the registry.
+            if let Some(j) = faults.journal {
+                j.append(keys[i], &rec.series);
+            }
+            values[i] = Some(rec.series.clone());
+            served += 1;
+        } else {
+            todo.push(i);
         }
     }
-    if todo.len() < n {
-        notes.push(format!("{exp}: resumed {} of {n} cells from journal", n - todo.len()));
+    if todo.len() + served < n {
+        notes.push(format!(
+            "{exp}: resumed {} of {n} cells from journal",
+            n - todo.len() - served
+        ));
+    }
+    if served > 0 {
+        notes.push(format!("{exp}: served {served} of {n} cells from registry"));
     }
     // (2) Fault-aware execution of the remainder.
     let wrapped = |t: usize| -> Vec<f64> {
@@ -218,8 +259,24 @@ pub fn sweep_cells(
         }
     };
     let runs = run_indexed_faulted(faults.jobs, todo.len(), faults.max_retries, wrapped, |t, r| {
-        if let (Some(j), Some(v)) = (faults.journal, &r.value) {
-            j.append(keys[todo[t]], v);
+        let Some(v) = &r.value else { return };
+        let i = todo[t];
+        if let Some(j) = faults.journal {
+            j.append(keys[i], v);
+        }
+        if let Some(reg) = faults.registry {
+            let (label, rep) = &cells[i];
+            reg.insert(
+                registry_key(faults.config_digest, keys[i]),
+                CellRecord {
+                    digest: faults.config_digest,
+                    cell: keys[i],
+                    series: v.clone(),
+                    health: Default::default(),
+                    provenance: sweep_provenance(exp, label, *rep),
+                },
+            );
+            reg.count_miss();
         }
     });
     // (3) Resolve outcomes under the fault policy.
@@ -443,6 +500,64 @@ mod tests {
         .unwrap_err();
         let msg = crate::coordinator::health::panic_message(err.as_ref());
         assert!(msg.contains("cell 1") && msg.contains("failed after 0 retries"), "{msg}");
+    }
+
+    /// `--registry`: a cold sweep registers every cell as a miss; a warm
+    /// sweep (fresh store handle, same directory) serves every cell
+    /// bit-identically without running anything; a different config digest
+    /// keys different content addresses and recomputes.
+    #[test]
+    fn sweep_serves_registry_hits_and_registers_misses() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let dir =
+            std::env::temp_dir().join(format!("lpgd_sweep_registry_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cells: Vec<(String, u64)> = (0..5).map(|r| ("cfg".to_string(), r)).collect();
+        let run = |i: usize| vec![i as f64, 0.1 + 0.2, (i * i) as f64];
+        // Cold pass: everything computes and registers.
+        let first = {
+            let reg = ResultStore::open(&dir).unwrap();
+            let faults = SweepFaults {
+                registry: Some(&reg),
+                config_digest: 0x77,
+                ..SweepFaults::none(1)
+            };
+            let (v, notes) = sweep_cells("rexp", &faults, &cells, &run, None);
+            assert_eq!((reg.hits(), reg.misses()), (0, 5));
+            assert_eq!(reg.len(), 5);
+            assert!(notes.is_empty(), "{notes:?}");
+            v
+        };
+        // Warm pass on a reopened store: zero cells run, values identical.
+        let reg = ResultStore::open(&dir).unwrap();
+        let ran = AtomicUsize::new(0);
+        let faults =
+            SweepFaults { registry: Some(&reg), config_digest: 0x77, ..SweepFaults::none(1) };
+        let (second, notes) = sweep_cells(
+            "rexp",
+            &faults,
+            &cells,
+            &|i| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                run(i)
+            },
+            None,
+        );
+        assert_eq!(ran.load(Ordering::Relaxed), 0);
+        assert_eq!(first, second);
+        assert_eq!((reg.hits(), reg.misses()), (5, 0));
+        assert!(
+            notes.iter().any(|s| s.contains("served 5 of 5 cells from registry")),
+            "{notes:?}"
+        );
+        // A different config digest keys different addresses: recompute.
+        let faults =
+            SweepFaults { registry: Some(&reg), config_digest: 0x78, ..SweepFaults::none(1) };
+        let (third, _) = sweep_cells("rexp", &faults, &cells, &run, None);
+        assert_eq!(first, third);
+        assert_eq!(reg.misses(), 5);
+        assert_eq!(reg.len(), 10);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

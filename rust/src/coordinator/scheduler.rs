@@ -42,25 +42,15 @@ pub fn resolve_jobs(requested: usize) -> usize {
     }
 }
 
-/// Stable stream id for an (experiment, config, repetition) cell: FNV-1a
-/// over the two labels, mixed with the repetition index. Purely a function
-/// of the cell's *identity*, never of scheduling state, so the id — and
-/// through [`crate::fp::Rng::split`] the cell's whole random trajectory —
-/// survives reordering, re-sharding and resumption.
-///
-/// The in-repo figure builders keep the paper's legacy seed-keyed streams
-/// (`GdConfig::seed = repetition`) for bit-compatibility with earlier
-/// releases; `cell_stream` + `Rng::split` is the injection path for
-/// fully-independent per-cell streams, exercised by `benches/sweep.rs`,
-/// the tests below, and intended for cross-process sharding.
-pub fn cell_stream(experiment: &str, config: &str, rep: u64) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for b in experiment.bytes().chain([0xff]).chain(config.bytes()) {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h ^ rep.wrapping_mul(0x9E3779B97F4A7C15)
-}
+// The cell-identity hash lives in `util::hash` now (the result registry
+// needs the same law); re-exported here so every historic call site —
+// `coordinator::cell_stream`, the benches, downstream users — still
+// resolves. The in-repo figure builders keep the paper's legacy seed-keyed
+// streams (`GdConfig::seed = repetition`) for bit-compatibility with
+// earlier releases; `cell_stream` + `Rng::split` is the injection path for
+// fully-independent per-cell streams, exercised by `benches/sweep.rs`, the
+// tests below, and intended for cross-process sharding.
+pub use crate::util::hash::cell_stream;
 
 /// Run `f(0), f(1), …, f(n-1)` on a pool of `jobs` worker threads and
 /// return the results **in index order** (see the module docs for the

@@ -21,10 +21,15 @@
 //! * [`coordinator`] — the experiment registry, the sharded multi-threaded
 //!   scheduler (deterministic for every `--jobs` value) and the aggregation
 //!   path that regenerate every table and figure of the paper;
-//! * [`util`] — the in-repo CLI/config/CSV/bench plumbing (this image is
-//!   offline: the only dependency is the vendored `anyhow` shim under
-//!   `vendor/`, and the PJRT `xla` binding is gated behind the optional
-//!   `pjrt` feature).
+//! * [`registry`] — the content-addressed, append-only result store shared
+//!   by the offline CLI (`--registry DIR`) and the experiment service;
+//! * [`serve`] — `lpgd serve`: the HTTP/1.1 experiment service that
+//!   answers RunBuilder-shaped requests from the registry and computes
+//!   only misses (see `docs/service.md`);
+//! * [`util`] — the in-repo CLI/config/CSV/JSON/hash/bench plumbing (this
+//!   image is offline: the only dependency is the vendored `anyhow` shim
+//!   under `vendor/`, and the PJRT `xla` binding is gated behind the
+//!   optional `pjrt` feature).
 //!
 //! See the top-level `README.md` for a quickstart and `docs/` for the
 //! rounding-scheme ↔ paper mapping and the coordinator architecture.
@@ -41,5 +46,7 @@ pub mod data;
 pub mod fp;
 pub mod gd;
 pub mod problems;
+pub mod registry;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -1,7 +1,16 @@
 //! `lpgd` — the Layer-3 coordinator CLI.
 //!
 //! ```text
-//! lpgd list                             list reproducible experiments
+//! lpgd list [--registry D]              experiments, schemes, grids (and
+//!                                       cached-cell counts when a result
+//!                                       registry is given)
+//! lpgd serve [opts]                     HTTP experiment service over a
+//!                                       content-addressed result registry
+//!     --registry D   registry directory (required; created if missing)
+//!     --addr A:P     bind address (default 127.0.0.1:7878; port 0 = any)
+//!     --threads N    HTTP worker threads (default 4)
+//!     --queue N      max in-flight cells before 429 (default 256)
+//!     --jobs N       scheduler threads per request (default 0 = all cores)
 //! lpgd reproduce <id|all> [opts]        regenerate a paper table/figure
 //!     --seeds N      (default 5; paper uses 20)
 //!     --jobs N       worker threads (default 0 = all cores; results are
@@ -11,6 +20,9 @@
 //!     --side N --mlr-train N --mlr-epochs N ... (see ExpCtx)
 //!     --journal P    append-only cell checkpoint file; --resume skips
 //!                    cells already journaled under the same config
+//!     --registry D   content-addressed result store: cells already in it
+//!                    are served instead of recomputed, fresh cells are
+//!                    written back (shared with `lpgd serve`; docs/service.md)
 //!     --max-retries N --fault-policy fail-fast|skip-cell|degrade
 //!     --escape X     terminate a run early once its loss exceeds X or
 //!                    goes non-finite (see docs/robustness.md)
@@ -43,7 +55,7 @@
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
-use lpgd::coordinator::experiments::{list_experiments, run_experiment, ExpCtx};
+use lpgd::coordinator::experiments::{run_experiment, ExpCtx};
 use lpgd::coordinator::{goldens, FaultPolicy, Journal};
 use lpgd::data::load_or_synth;
 use lpgd::fp::{
@@ -52,6 +64,8 @@ use lpgd::fp::{
 };
 use lpgd::gd::{RunBuilder, SchemePolicy};
 use lpgd::problems::{Mlr, TwoLayerNn};
+use lpgd::registry::ResultStore;
+use lpgd::serve::{Catalog, ExperimentService, Server};
 use lpgd::util::cli::Args;
 use lpgd::util::table::sparkline;
 
@@ -59,8 +73,14 @@ use lpgd::util::table::sparkline;
 const CTX_OPTS: &[&str] = &[
     "seeds", "jobs", "out-dir", "side", "mlr-train", "mlr-test", "nn-train", "nn-test",
     "mlr-epochs", "nn-epochs", "quad-steps", "quad-n", "mnist-dir", "journal", "resume",
-    "max-retries", "fault-policy", "escape", "lanes", "simd",
+    "max-retries", "fault-policy", "escape", "lanes", "simd", "registry",
 ];
+
+/// Open (or create) the content-addressed result registry at `dir`.
+fn open_registry(dir: &str) -> Result<ResultStore> {
+    ResultStore::open(std::path::Path::new(dir))
+        .map_err(|e| anyhow::anyhow!("cannot open registry '{dir}': {e}"))
+}
 
 fn main() {
     if let Err(e) = run() {
@@ -107,6 +127,9 @@ fn ctx_from_args(a: &Args) -> Result<ExpCtx> {
     if let Some(s) = a.get("simd") {
         let choice = SimdChoice::parse(s).map_err(|e| anyhow::anyhow!("--simd: {e}"))?;
         set_backend(choice);
+    }
+    if let Some(dir) = a.get("registry") {
+        ctx.registry = Some(Arc::new(open_registry(dir)?));
     }
     // The journal digest covers every cell-shaping knob, so it must be
     // computed after all of them (escape included) are in place.
@@ -156,12 +179,17 @@ fn print_help() {
     println!("lpgd — low-precision GD with stochastic rounding (paper reproduction)");
     println!();
     println!("commands:");
-    println!("  list                        list reproducible experiments");
+    println!("  list [--registry D]         list experiments, schemes, grids (and cached-cell counts)");
+    println!("  serve [opts]                HTTP experiment service over a content-addressed result");
+    println!("                              registry: --registry D (required), --addr A:P, --threads N,");
+    println!("                              --queue N, --jobs N (docs/service.md)");
     println!("  reproduce <id|all> [opts]   regenerate a paper table/figure (--seeds, --jobs, --quick, --out-dir, ...)");
     println!("                              fault tolerance: --journal PATH [--resume], --max-retries N,");
     println!("                              --fault-policy fail-fast|skip-cell|degrade, --escape X (docs/robustness.md)");
     println!("                              performance: --lanes N (multi-seed lane batches), --simd auto|avx2|scalar");
     println!("                              (both execution-only: bit-identical results; docs/performance.md)");
+    println!("                              caching: --registry D serves already-computed cells and writes");
+    println!("                              fresh ones back (shared with `lpgd serve`; docs/service.md)");
     println!("  train <mlr|nn> [opts]       one training run (--backend/--fmt, --t, --epochs, --seed, --scheme, --s8a/--s8b/--s8c, --sr-bits)");
     println!("  round <value> [opts]        inspect rounding of one value (--fmt, --mode, --samples, --seed)");
     println!("  goldens <extract|check>     golden-figure harness (--dir, --report, --require, --stream-change)");
@@ -189,12 +217,29 @@ fn run() -> Result<()> {
     }
     match cmd {
         "list" => {
-            reject_unknown(&a, &[])?;
-            println!("{:<8}  {}", "id", "description");
-            for (id, desc) in list_experiments() {
-                println!("{id:<8}  {desc}");
-            }
+            reject_unknown(&a, &["registry"])?;
+            let store = a.get("registry").map(open_registry).transpose()?;
+            print!("{}", Catalog::gather(store.as_ref()).render_text());
             println!("\nusage: lpgd reproduce <id|all> [--seeds N] [--jobs N] [--quick] [--out-dir D]");
+        }
+        "serve" => {
+            reject_unknown(&a, &["addr", "registry", "threads", "queue", "jobs"])?;
+            let dir = a
+                .get("registry")
+                .ok_or_else(|| anyhow::anyhow!("serve requires --registry DIR (see docs/service.md)"))?;
+            let store = Arc::new(open_registry(dir)?);
+            println!("registry: {} cached cell(s) in {dir}", store.len());
+            let service = Arc::new(ExperimentService::new(
+                store,
+                a.get_usize("queue", 256),
+                a.get_usize("jobs", 0),
+            ));
+            let addr = a.get("addr").unwrap_or("127.0.0.1:7878");
+            let server = Server::bind(addr, service)
+                .map_err(|e| anyhow::anyhow!("cannot bind '{addr}': {e}"))?;
+            // Tests and scripts parse this line for the ephemeral port.
+            println!("listening on http://{}", server.local_addr()?);
+            server.run(a.get_usize("threads", 4))?;
         }
         "reproduce" => {
             reject_unknown(&a, CTX_OPTS)?;

@@ -1,0 +1,21 @@
+//! Content-addressed, append-only result registry (ROADMAP item 2; see
+//! `docs/service.md`).
+//!
+//! A sweep cell is a pure function of its identity, so its result can be
+//! *content-addressed*: the key is [`crate::util::hash::registry_key`] over
+//! the run-configuration digest and the cell's stream id — exactly the two
+//! fields every journal line already carries — and the value is the cell's
+//! series plus numeric-health counters and provenance. The store is shared
+//! byte-for-byte between the offline CLI (`--registry DIR` on `reproduce`)
+//! and the `lpgd serve` daemon ([`crate::serve`]): a sweep warmed by the
+//! CLI is served hot by the daemon, and vice versa.
+//!
+//! Durability follows the journal's contract (`docs/robustness.md`): one
+//! complete JSONL line per record, written with a single `write_all` +
+//! flush, so a `kill -9` loses at most in-flight cells and a torn trailing
+//! line is rejected on load instead of corrupting the store.
+
+mod store;
+
+pub(crate) use store::sweep_provenance;
+pub use store::{CellRecord, Provenance, ResultStore};

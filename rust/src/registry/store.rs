@@ -1,0 +1,423 @@
+//! The on-disk store: a single append-only `records.jsonl` log inside the
+//! registry directory, mirrored by an in-memory key → record map.
+//!
+//! Line format (stable; rendered by [`CellRecord::to_json`] through the
+//! deterministic [`Json`] renderer, so identical records are identical
+//! bytes):
+//!
+//! ```text
+//! {"key":"<16-hex>","digest":"<16-hex>","cell":"<16-hex>","series":[...],
+//!  "health":{...},"provenance":{...}}
+//! ```
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::fp::RunHealth;
+use crate::util::json::Json;
+
+/// Where a registry record came from: enough to audit a served result
+/// without re-deriving it. Lane width and job count are deliberately
+/// absent, mirroring `ExpCtx::config_digest` — they never change a cell's
+/// bytes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Provenance {
+    /// Crate version that computed the record (`CARGO_PKG_VERSION`).
+    pub code_version: String,
+    /// Experiment id (`fig3a`, …) or `"run"` for builder-spec cells.
+    pub experiment: String,
+    /// Config label inside the experiment (`bf16_SR`, …).
+    pub label: String,
+    /// Repetition index within the sweep.
+    pub rep: u64,
+    /// Number grid spec (`bfloat16`, `q4.8`, …); empty when the sweep did
+    /// not thread it through (experiment cells carry it in the label).
+    pub grid: String,
+    /// Rounding-scheme spec (`sr`, `signed:0.25`, …); empty as above.
+    pub scheme: String,
+    /// Root RNG seed of the repetition.
+    pub seed: u64,
+    /// Random bits drawn per stochastic rounding (0 = scheme default).
+    pub sr_bits: u32,
+}
+
+/// One content-addressed cell result: the series plus health counters and
+/// provenance, stored under [`crate::util::hash::registry_key`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellRecord {
+    /// Run-configuration digest the cell was computed under.
+    pub digest: u64,
+    /// The cell's stream id ([`crate::util::hash::cell_stream`]).
+    pub cell: u64,
+    /// The cell's output series (objective or metric values).
+    pub series: Vec<f64>,
+    /// Numeric-health counters of the run (all zero when the computing
+    /// path aggregates health elsewhere and only series are threaded).
+    pub health: RunHealth,
+    /// Where the record came from.
+    pub provenance: Provenance,
+}
+
+impl CellRecord {
+    /// Render as a JSON value (key included) — the single renderer behind
+    /// both the on-disk line and the `GET /v1/result/<key>` body, so the
+    /// two are bytes of the same law.
+    pub fn to_json(&self, key: u64) -> Json {
+        let num = |v: u64| Json::Num(v as f64);
+        Json::Obj(vec![
+            ("key".into(), Json::Str(format!("{key:016x}"))),
+            ("digest".into(), Json::Str(format!("{:016x}", self.digest))),
+            ("cell".into(), Json::Str(format!("{:016x}", self.cell))),
+            (
+                "series".into(),
+                Json::Arr(self.series.iter().map(|&v| Json::Num(v)).collect()),
+            ),
+            (
+                "health".into(),
+                Json::Obj(vec![
+                    ("nan_inf".into(), num(self.health.nan_inf)),
+                    ("saturations".into(), num(self.health.saturations)),
+                    ("underflows".into(), num(self.health.underflows)),
+                    ("stalled_steps".into(), num(self.health.stalled_steps)),
+                    ("steps".into(), num(self.health.steps)),
+                ]),
+            ),
+            (
+                "provenance".into(),
+                Json::Obj(vec![
+                    ("code_version".into(), Json::Str(self.provenance.code_version.clone())),
+                    ("experiment".into(), Json::Str(self.provenance.experiment.clone())),
+                    ("label".into(), Json::Str(self.provenance.label.clone())),
+                    ("rep".into(), num(self.provenance.rep)),
+                    ("grid".into(), Json::Str(self.provenance.grid.clone())),
+                    ("scheme".into(), Json::Str(self.provenance.scheme.clone())),
+                    ("seed".into(), num(self.provenance.seed)),
+                    ("sr_bits".into(), num(self.provenance.sr_bits as u64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Parse one log line back into `(key, record)`. `None` — the line is
+    /// skipped on load — for anything malformed, including a line torn by
+    /// a mid-write kill (the journal's torn-record contract).
+    fn parse(line: &str) -> Option<(u64, CellRecord)> {
+        let v = Json::parse(line).ok()?;
+        let hex = |k: &str| u64::from_str_radix(v.get(k)?.as_str()?, 16).ok();
+        let key = hex("key")?;
+        let series =
+            v.get("series")?.as_array()?.iter().map(|x| x.as_f64()).collect::<Option<Vec<_>>>()?;
+        let h = v.get("health")?;
+        let hf = |k: &str| h.get(k)?.as_u64();
+        let p = v.get("provenance")?;
+        let ps = |k: &str| Some(p.get(k)?.as_str()?.to_string());
+        let rec = CellRecord {
+            digest: hex("digest")?,
+            cell: hex("cell")?,
+            series,
+            health: RunHealth {
+                nan_inf: hf("nan_inf")?,
+                saturations: hf("saturations")?,
+                underflows: hf("underflows")?,
+                stalled_steps: hf("stalled_steps")?,
+                steps: hf("steps")?,
+            },
+            provenance: Provenance {
+                code_version: ps("code_version")?,
+                label: ps("label")?,
+                experiment: ps("experiment")?,
+                rep: p.get("rep")?.as_u64()?,
+                grid: ps("grid")?,
+                scheme: ps("scheme")?,
+                seed: p.get("seed")?.as_u64()?,
+                sr_bits: p.get("sr_bits")?.as_u64()? as u32,
+            },
+        };
+        Some((key, rec))
+    }
+}
+
+/// The content-addressed result store: an append-only `records.jsonl` log
+/// under a registry directory, loaded into a key → record map at open.
+///
+/// Thread-safe by construction: lookups clone an `Arc`, inserts append one
+/// complete line under a file lock. Hit/miss counters are *not* bumped by
+/// [`ResultStore::peek`] — callers count at the resolution level via
+/// [`ResultStore::count_hit`]/[`ResultStore::count_miss`], so a request
+/// that waits on an in-flight computation and then reads the store counts
+/// as exactly one hit, not a miss-then-hit (the `/v1/stats` contract).
+#[derive(Debug)]
+pub struct ResultStore {
+    dir: PathBuf,
+    file: Mutex<File>,
+    records: Mutex<HashMap<u64, Arc<CellRecord>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ResultStore {
+    /// Open (or create) the registry at `dir`, loading every parseable
+    /// record from `records.jsonl`. Unparsable lines — torn tails from a
+    /// `kill -9`, foreign garbage — are skipped, never fatal: the store is
+    /// a cache, and a lost record is recomputed on the next miss.
+    pub fn open(dir: &Path) -> std::io::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let log = dir.join("records.jsonl");
+        let mut records = HashMap::new();
+        if log.exists() {
+            let reader = BufReader::new(File::open(&log)?);
+            for line in reader.lines() {
+                let Ok(line) = line else { break };
+                if let Some((key, rec)) = CellRecord::parse(&line) {
+                    records.insert(key, Arc::new(rec));
+                }
+            }
+        }
+        let mut file = OpenOptions::new().create(true).append(true).open(&log)?;
+        // A line torn by a mid-write kill has no trailing newline; terminate
+        // it so the next record starts on a fresh line instead of
+        // concatenating into the garbage (which would lose that record too).
+        if log_lacks_final_newline(&log)? {
+            file.write_all(b"\n")?;
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            file: Mutex::new(file),
+            records: Mutex::new(records),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    /// The registry directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Look a key up **without touching the hit/miss counters** (see the
+    /// type docs for why counting is the caller's job).
+    pub fn peek(&self, key: u64) -> Option<Arc<CellRecord>> {
+        self.records.lock().unwrap_or_else(|e| e.into_inner()).get(&key).cloned()
+    }
+
+    /// Insert a freshly computed record and append it to the log.
+    /// Idempotent: a key already present is left untouched (first write
+    /// wins — all writers compute the same pure function, so the bytes
+    /// are the same either way). Log-write errors are reported on stderr
+    /// but do not fail the computation (the store is a cache, not the
+    /// result channel — the journal's error contract).
+    pub fn insert(&self, key: u64, rec: CellRecord) {
+        let line = {
+            let mut map = self.records.lock().unwrap_or_else(|e| e.into_inner());
+            if map.contains_key(&key) {
+                return;
+            }
+            let mut line = rec.to_json(key).render();
+            line.push('\n');
+            map.insert(key, Arc::new(rec));
+            line
+        };
+        let mut f = self.file.lock().unwrap_or_else(|e| e.into_inner());
+        if let Err(e) = f.write_all(line.as_bytes()).and_then(|()| f.flush()) {
+            eprintln!("warning: registry write failed ({}): {e}", self.dir.display());
+        }
+    }
+
+    /// Count one served-from-store resolution.
+    pub fn count_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one computed-on-miss resolution.
+    pub fn count_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Cells served from the store so far (this process).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cells computed on a miss so far (this process).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of records in the store.
+    pub fn len(&self) -> usize {
+        self.records.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// True when the store holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Distinct `provenance.experiment` values with their record counts,
+    /// sorted by experiment id (the `lpgd list --registry` view).
+    pub fn experiments(&self) -> Vec<(String, usize)> {
+        let map = self.records.lock().unwrap_or_else(|e| e.into_inner());
+        let mut counts: HashMap<&str, usize> = HashMap::new();
+        for rec in map.values() {
+            *counts.entry(rec.provenance.experiment.as_str()).or_insert(0) += 1;
+        }
+        let mut out: Vec<(String, usize)> =
+            counts.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        out.sort();
+        out
+    }
+}
+
+/// True when the log exists, is non-empty, and its last byte is not a
+/// newline — the signature of a torn trailing record.
+fn log_lacks_final_newline(path: &Path) -> std::io::Result<bool> {
+    let mut f = File::open(path)?;
+    let len = f.metadata()?.len();
+    if len == 0 {
+        return Ok(false);
+    }
+    f.seek(SeekFrom::End(-1))?;
+    let mut last = [0u8; 1];
+    f.read_exact(&mut last)?;
+    Ok(last[0] != b'\n')
+}
+
+/// Provenance for a cell computed by an experiment sweep: grid and scheme
+/// live inside the experiment's config label, so only the identity triple
+/// and the code version are recorded.
+pub(crate) fn sweep_provenance(experiment: &str, label: &str, rep: u64) -> Provenance {
+    Provenance {
+        code_version: env!("CARGO_PKG_VERSION").to_string(),
+        experiment: experiment.to_string(),
+        label: label.to_string(),
+        rep,
+        seed: rep,
+        ..Provenance::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("lpgd_registry_{}_{tag}", std::process::id()))
+    }
+
+    fn record(cell: u64, series: Vec<f64>) -> CellRecord {
+        CellRecord {
+            digest: 0xabcd,
+            cell,
+            series,
+            health: RunHealth { stalled_steps: 3, steps: 40, ..RunHealth::default() },
+            provenance: sweep_provenance("fig3a", "bf16_SR", cell),
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_across_reopen() {
+        let dir = tmp_dir("roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let series = vec![
+            1.5,
+            -0.0,
+            5e-324,
+            1.0 / 3.0,
+            f64::MAX,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ];
+        {
+            let store = ResultStore::open(&dir).unwrap();
+            store.insert(7, record(7, series.clone()));
+            store.insert(9, record(9, vec![]));
+            assert_eq!(store.len(), 2);
+        }
+        let store = ResultStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 2);
+        let got = store.peek(7).unwrap();
+        assert_eq!(got.series.len(), series.len());
+        for (a, b) in got.series.iter().zip(&series) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        assert_eq!(got.health.stalled_steps, 3);
+        assert_eq!(got.provenance.experiment, "fig3a");
+        assert!(store.peek(9).unwrap().series.is_empty());
+        assert_eq!(store.peek(8), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rendering_is_deterministic_and_insert_idempotent() {
+        let dir = tmp_dir("determinism");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ResultStore::open(&dir).unwrap();
+        let rec = record(1, vec![0.1 + 0.2, 2.0]);
+        let line = rec.to_json(1).render();
+        assert_eq!(line, rec.to_json(1).render());
+        store.insert(1, rec.clone());
+        store.insert(1, record(1, vec![999.0])); // loser: first write wins
+        assert_eq!(store.peek(1).unwrap().series[1], 2.0);
+        // The log holds exactly the one line the renderer produced.
+        let log = std::fs::read_to_string(dir.join("records.jsonl")).unwrap();
+        assert_eq!(log, format!("{line}\n"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_trailing_record_is_rejected_on_load() {
+        let dir = tmp_dir("torn");
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let store = ResultStore::open(&dir).unwrap();
+            store.insert(1, record(1, vec![1.0, 2.0]));
+        }
+        {
+            use std::io::Write as _;
+            let mut f =
+                OpenOptions::new().append(true).open(dir.join("records.jsonl")).unwrap();
+            // A mid-write kill tears the second record in half.
+            let full = record(2, vec![4.0, 5.0]).to_json(2).render();
+            f.write_all(full[..full.len() / 2].as_bytes()).unwrap();
+        }
+        let store = ResultStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 1, "torn record must not load");
+        assert!(store.peek(1).is_some());
+        assert!(store.peek(2).is_none());
+        // The store still appends fine after the torn tail...
+        store.insert(3, record(3, vec![7.0]));
+        drop(store);
+        // ...and the fresh record loads even though it sits after garbage
+        // (line-oriented recovery: only the torn line itself is lost).
+        let store = ResultStore::open(&dir).unwrap();
+        assert!(store.peek(3).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn counters_are_caller_driven_and_experiments_summarize() {
+        let dir = tmp_dir("counters");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ResultStore::open(&dir).unwrap();
+        store.insert(1, record(1, vec![1.0]));
+        store.peek(1); // peeking never counts
+        assert_eq!((store.hits(), store.misses()), (0, 0));
+        store.count_hit();
+        store.count_hit();
+        store.count_miss();
+        assert_eq!((store.hits(), store.misses()), (2, 1));
+        let mut other = record(2, vec![2.0]);
+        other.provenance.experiment = "fig4a".into();
+        store.insert(2, other);
+        assert_eq!(
+            store.experiments(),
+            vec![("fig3a".to_string(), 1), ("fig4a".to_string(), 1)]
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,191 @@
+//! The experiment/scheme/grid catalog shared by `lpgd list` and
+//! `GET /v1/experiments`: one gathering pass, two renderers, so the CLI
+//! listing and the service endpoint can never drift apart.
+
+use std::collections::HashMap;
+
+use crate::coordinator::registry as experiments;
+use crate::fp::{FpFormat, SchemeRegistry};
+use crate::registry::ResultStore;
+use crate::util::json::Json;
+
+/// One experiment row: the registry entry plus how many of its cells the
+/// result registry holds (when one is open).
+#[derive(Debug, Clone)]
+pub struct ExperimentRow {
+    /// Experiment id (`fig3a`, …).
+    pub id: String,
+    /// Human-readable description.
+    pub description: String,
+    /// Paper table/figure reference.
+    pub paper_ref: String,
+    /// Cached cell count in the result registry; `None` when the catalog
+    /// was gathered without a store.
+    pub cached: Option<usize>,
+}
+
+/// The full catalog: experiments, rounding schemes and number grids.
+#[derive(Debug, Clone)]
+pub struct Catalog {
+    /// Every registered experiment, registry order.
+    pub experiments: Vec<ExperimentRow>,
+    /// `(name-with-hint, aliases, summary)` per registered scheme.
+    pub schemes: Vec<(String, String, String)>,
+    /// Number-grid spec strings the builders accept.
+    pub grids: Vec<String>,
+    /// Total records in the result registry (`None` without one).
+    pub cached_total: Option<usize>,
+}
+
+impl Catalog {
+    /// Gather the catalog, joining per-experiment registry record counts
+    /// when a store is supplied.
+    pub fn gather(store: Option<&ResultStore>) -> Self {
+        let counts: Option<HashMap<String, usize>> =
+            store.map(|s| s.experiments().into_iter().collect());
+        let experiments = experiments::REGISTRY
+            .iter()
+            .map(|s| ExperimentRow {
+                id: s.id.to_string(),
+                description: s.description.to_string(),
+                paper_ref: s.paper_ref.to_string(),
+                cached: counts.as_ref().map(|c| c.get(s.id).copied().unwrap_or(0)),
+            })
+            .collect();
+        let mut grids: Vec<String> = [
+            FpFormat::BINARY8,
+            FpFormat::BFLOAT16,
+            FpFormat::BINARY16,
+            FpFormat::BINARY32,
+            FpFormat::BINARY64,
+        ]
+        .iter()
+        .map(|f| f.name().to_string())
+        .collect();
+        grids.push("qM.F (signed fixed point, e.g. q3.8)".to_string());
+        grids.push("uqM.F (unsigned fixed point)".to_string());
+        Self {
+            experiments,
+            schemes: SchemeRegistry::entries(),
+            grids,
+            cached_total: store.map(ResultStore::len),
+        }
+    }
+
+    /// The `GET /v1/experiments` body.
+    pub fn to_json(&self) -> Json {
+        let exps = self
+            .experiments
+            .iter()
+            .map(|e| {
+                let mut o = vec![
+                    ("id".to_string(), Json::Str(e.id.clone())),
+                    ("description".to_string(), Json::Str(e.description.clone())),
+                    ("paper_ref".to_string(), Json::Str(e.paper_ref.clone())),
+                ];
+                if let Some(n) = e.cached {
+                    o.push(("cached_cells".to_string(), Json::Num(n as f64)));
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let schemes = self
+            .schemes
+            .iter()
+            .map(|(name, aliases, summary)| {
+                Json::Obj(vec![
+                    ("name".to_string(), Json::Str(name.clone())),
+                    ("aliases".to_string(), Json::Str(aliases.clone())),
+                    ("summary".to_string(), Json::Str(summary.clone())),
+                ])
+            })
+            .collect();
+        let grids = self.grids.iter().map(|g| Json::Str(g.clone())).collect();
+        let mut top = vec![
+            ("experiments".to_string(), Json::Arr(exps)),
+            ("schemes".to_string(), Json::Arr(schemes)),
+            ("grids".to_string(), Json::Arr(grids)),
+        ];
+        if let Some(total) = self.cached_total {
+            top.push(("cached_total".to_string(), Json::Num(total as f64)));
+        }
+        Json::Obj(top)
+    }
+
+    /// The `lpgd list` text rendering.
+    pub fn render_text(&self) -> String {
+        let mut out = String::from("experiments:\n");
+        for e in &self.experiments {
+            out.push_str(&format!("  {:<8} {:<10} {}", e.id, e.paper_ref, e.description));
+            if let Some(n) = e.cached {
+                if n > 0 {
+                    out.push_str(&format!("  [{n} cells cached]"));
+                }
+            }
+            out.push('\n');
+        }
+        out.push_str("\nrounding schemes:\n");
+        for (name, aliases, summary) in &self.schemes {
+            out.push_str(&format!("  {name:<16} {summary}"));
+            if !aliases.is_empty() {
+                out.push_str(&format!(" (aliases: {aliases})"));
+            }
+            out.push('\n');
+        }
+        out.push_str("\nnumber grids:\n");
+        for g in &self.grids {
+            out.push_str(&format!("  {g}\n"));
+        }
+        if let Some(total) = self.cached_total {
+            out.push_str(&format!("\nregistry: {total} cached cells\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_lists_experiments_schemes_and_grids_in_both_renderings() {
+        let cat = Catalog::gather(None);
+        assert!(cat.experiments.iter().any(|e| e.id == "fig3a"));
+        assert!(cat.experiments.iter().all(|e| e.cached.is_none()));
+        assert!(cat.grids.iter().any(|g| g == "bfloat16"));
+        assert!(!cat.schemes.is_empty());
+        let text = cat.render_text();
+        assert!(text.contains("fig3a"), "{text}");
+        assert!(text.contains("rounding schemes:"), "{text}");
+        assert!(!text.contains("registry:"), "no store, no registry footer: {text}");
+        let json = cat.to_json().render();
+        assert!(json.contains("\"experiments\""), "{json}");
+        assert!(json.contains("\"fig3a\""), "{json}");
+        assert!(!json.contains("cached_total"), "{json}");
+    }
+
+    #[test]
+    fn registry_counts_join_into_both_renderings() {
+        use crate::registry::CellRecord;
+        let dir = std::env::temp_dir()
+            .join(format!("lpgd_catalog_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ResultStore::open(&dir).unwrap();
+        let mut rec = CellRecord {
+            digest: 1,
+            cell: 2,
+            series: vec![1.0],
+            health: Default::default(),
+            provenance: Default::default(),
+        };
+        rec.provenance.experiment = "fig3a".to_string();
+        store.insert(11, rec);
+        let cat = Catalog::gather(Some(&store));
+        let row = cat.experiments.iter().find(|e| e.id == "fig3a").unwrap();
+        assert_eq!(row.cached, Some(1));
+        assert_eq!(cat.cached_total, Some(1));
+        assert!(cat.render_text().contains("[1 cells cached]"));
+        assert!(cat.to_json().render().contains("\"cached_total\":1"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

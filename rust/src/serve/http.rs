@@ -1,0 +1,261 @@
+//! Minimal HTTP/1.1 plumbing for the experiment service: request parsing
+//! and response writing over a raw `TcpStream`, hand-rolled because the
+//! image is offline (no `hyper`/`tiny_http`) and the API surface is four
+//! routes.
+//!
+//! Deliberately narrow: every response carries `Connection: close` (no
+//! keep-alive state machine), headers are capped at [`MAX_HEADER_BYTES`],
+//! bodies at [`MAX_BODY_BYTES`], and reads time out after
+//! [`READ_TIMEOUT`], so a slow or malicious client cannot pin a worker
+//! thread indefinitely.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Maximum bytes of request line + headers; beyond this the request is
+/// answered with `431`.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// Maximum request-body bytes; a larger declared `Content-Length` is
+/// answered with `413` without reading the body.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// Per-connection socket read timeout.
+pub const READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// One parsed request: method, path and raw body bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    /// Request method (`GET`, `POST`, …).
+    pub method: String,
+    /// Request path as sent (`/v1/run`).
+    pub path: String,
+    /// Raw body bytes (`Content-Length`-delimited; empty when absent).
+    pub body: Vec<u8>,
+}
+
+/// A response ready to serialize: status code, content type, body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    /// HTTP status code (`200`, `400`, `429`, …).
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A `text/plain` response; the error-path constructor. The message is
+    /// newline-terminated so `curl` output reads cleanly.
+    pub fn text(status: u16, msg: &str) -> Self {
+        let mut body = msg.as_bytes().to_vec();
+        if !body.ends_with(b"\n") {
+            body.push(b'\n');
+        }
+        Self { status, content_type: "text/plain; charset=utf-8", body }
+    }
+
+    /// An `application/json` response rendered from a [`Json`] value
+    /// through the deterministic renderer (identical values → identical
+    /// bytes, the bit-identity contract of `docs/service.md`).
+    pub fn json(status: u16, v: &Json) -> Self {
+        Self { status, content_type: "application/json", body: v.render().into_bytes() }
+    }
+
+    /// A response with an explicit content type and raw body bytes
+    /// (the `text/csv` experiment path).
+    pub fn bytes(status: u16, content_type: &'static str, body: Vec<u8>) -> Self {
+        Self { status, content_type, body }
+    }
+
+    /// Serialize to the wire. Always `Connection: close`: the client gets
+    /// exactly one response per connection.
+    pub fn write(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+/// Standard reason phrase for every status the service emits.
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Read and parse one request from `stream`. `Err` carries the response
+/// that should be written back (when the socket still works) before
+/// closing the connection.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request, Response> {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_header_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(Response::text(
+                431,
+                &format!("request headers exceed {MAX_HEADER_BYTES} bytes"),
+            ));
+        }
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| Response::text(408, &format!("read failed or timed out: {e}")))?;
+        if n == 0 {
+            return Err(Response::text(400, "connection closed before the headers completed"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| Response::text(400, "request headers are not valid UTF-8"))?;
+    let (method, path, content_length) = parse_head(head)?;
+    if content_length > MAX_BODY_BYTES {
+        return Err(Response::text(
+            413,
+            &format!("request body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte cap"),
+        ));
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| Response::text(408, &format!("body read failed or timed out: {e}")))?;
+        if n == 0 {
+            return Err(Response::text(400, "connection closed before the body completed"));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Request { method, path, body })
+}
+
+/// Byte offset of the `\r\n\r\n` header terminator, if present.
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Parse the request line + headers into `(method, path, content_length)`.
+fn parse_head(head: &str) -> Result<(String, String, usize), Response> {
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_ascii_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) => (m, p, v),
+        _ => {
+            return Err(Response::text(
+                400,
+                &format!("malformed request line '{request_line}' (want 'METHOD /path HTTP/1.1')"),
+            ))
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(Response::text(400, &format!("unsupported protocol version '{version}'")));
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().map_err(|_| {
+                    Response::text(400, &format!("invalid Content-Length '{}'", value.trim()))
+                })?;
+            }
+        }
+    }
+    Ok((method.to_string(), path.to_string(), content_length))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn head_parsing_extracts_method_path_and_length() {
+        let (m, p, n) =
+            parse_head("POST /v1/run HTTP/1.1\r\nHost: x\r\ncOnTeNt-LeNgTh:  42").unwrap();
+        assert_eq!((m.as_str(), p.as_str(), n), ("POST", "/v1/run", 42));
+        let (_, _, n) = parse_head("GET /v1/stats HTTP/1.1").unwrap();
+        assert_eq!(n, 0);
+        assert_eq!(parse_head("garbage").unwrap_err().status, 400);
+        assert_eq!(parse_head("GET / SPDY/3").unwrap_err().status, 400);
+        assert_eq!(
+            parse_head("GET / HTTP/1.1\r\nContent-Length: ten").unwrap_err().status,
+            400
+        );
+    }
+
+    #[test]
+    fn header_end_is_found_across_chunk_boundaries() {
+        assert_eq!(find_header_end(b"GET / HTTP/1.1\r\n\r\nbody"), Some(14));
+        assert_eq!(find_header_end(b"GET / HTTP/1.1\r\n"), None);
+    }
+
+    /// Full loop over a real socket: a pipelined write of headers + body in
+    /// one segment parses, and the response wire format is well-formed.
+    #[test]
+    fn request_roundtrips_over_a_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"POST /v1/run HTTP/1.1\r\nContent-Length: 9\r\n\r\n{\"a\":1}\r\n")
+                .unwrap();
+            let mut reply = Vec::new();
+            s.read_to_end(&mut reply).unwrap();
+            reply
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let req = read_request(&mut conn).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/run");
+        assert_eq!(req.body, b"{\"a\":1}\r\n");
+        Response::text(200, "ok").write(&mut conn).unwrap();
+        drop(conn);
+        let reply = String::from_utf8(client.join().unwrap()).unwrap();
+        assert!(reply.starts_with("HTTP/1.1 200 OK\r\n"), "{reply}");
+        assert!(reply.contains("Connection: close\r\n"), "{reply}");
+        assert!(reply.ends_with("\r\n\r\nok\n"), "{reply}");
+    }
+
+    #[test]
+    fn oversized_declared_body_is_rejected_without_reading_it() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(
+                format!("POST /v1/run HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1)
+                    .as_bytes(),
+            )
+            .unwrap();
+            s
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let err = read_request(&mut conn).unwrap_err();
+        assert_eq!(err.status, 413);
+        drop(client.join().unwrap());
+    }
+}

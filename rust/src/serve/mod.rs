@@ -1,0 +1,37 @@
+//! `lpgd serve` — the HTTP/1.1 experiment service over the
+//! content-addressed result registry ([`crate::registry`]; API reference
+//! and curl examples in `docs/service.md`).
+//!
+//! The daemon answers `POST /v1/run` requests — builder-shaped cell specs
+//! or whole-experiment specs — *from the registry when it can*: a cell
+//! whose content address is already stored is served byte-identically to
+//! the run that computed it, misses fan out across the in-process
+//! scheduler ([`crate::coordinator::scheduler`]) and are written back.
+//! Because the store is the same one `reproduce --registry DIR` uses, a
+//! sweep warmed offline is served hot, and vice versa.
+//!
+//! Guarantees (asserted by `rust/tests/serve.rs` and the unit tests):
+//!
+//! * **Bit-identity** — identical specs return byte-identical bodies
+//!   whether computed, registry-served, or CLI-warmed; responses render
+//!   from the stored records through one deterministic JSON law.
+//! * **Coalescing** — identical concurrent requests share one
+//!   computation; `/v1/stats` shows one miss per cell, ever.
+//! * **Back-pressure** — the in-flight cell set is bounded (`--queue`);
+//!   overflowing requests get `429` immediately instead of queueing.
+//!
+//! Everything is hand-rolled on `std::net` because the image is offline —
+//! see [`http`] for the deliberately narrow HTTP/1.1 subset.
+//!
+//! Routes: `GET /v1/experiments` (the [`Catalog`], shared with
+//! `lpgd list`), `GET /v1/stats`, `GET /v1/result/<16-hex-key>`,
+//! `POST /v1/run`.
+
+pub mod catalog;
+pub mod http;
+pub mod service;
+pub mod spec;
+
+pub use catalog::Catalog;
+pub use service::{ExperimentService, Server};
+pub use spec::RunSpec;

@@ -1,0 +1,578 @@
+//! The experiment service proper: request routing, registry-backed cell
+//! resolution with request coalescing and bounded back-pressure, and the
+//! `std::net` accept loop with its worker pool.
+//!
+//! # Coalescing contract
+//!
+//! Identical concurrent `POST /v1/run` requests must not compute the same
+//! cell twice. A shared *in-flight set* holds the keys currently being
+//! computed; a request claims every free missing key of its plan in one
+//! locked pass, computes the claims on the scheduler, and only then —
+//! holding no claims — waits for keys another request claimed first.
+//! Claims are never held across a wait, so claim-cycle deadlocks between
+//! overlapping requests are impossible by construction. A waiter reads the
+//! finished records from the registry and counts them as *hits*: the first
+//! request pays exactly one miss per cell, every other request pure hits,
+//! which is what `rust/tests/serve.rs` asserts via `/v1/stats`.
+//!
+//! # Back-pressure contract
+//!
+//! The in-flight set is bounded (`--queue`). A request whose fresh claims
+//! would push the set past capacity is answered `429` immediately, claiming
+//! nothing — clients retry with backoff. Served-from-registry requests
+//! never consume capacity, so a warmed registry keeps answering under
+//! overload.
+
+use std::collections::HashSet;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::coordinator::health::{panic_message, CellOutcome};
+use crate::coordinator::registry as experiments;
+use crate::coordinator::scheduler::run_indexed_faulted;
+use crate::registry::{CellRecord, ResultStore};
+use crate::serve::catalog::Catalog;
+use crate::serve::http::{read_request, Request, Response};
+use crate::serve::spec::{CellSpec, ExpSpec, OutFormat, PlannedCell, RunSpec};
+use crate::util::json::Json;
+
+/// Shared state of the `lpgd serve` daemon: the result registry plus the
+/// coalescing / back-pressure machinery. One instance serves all workers.
+pub struct ExperimentService {
+    store: Arc<ResultStore>,
+    inflight: Mutex<HashSet<u64>>,
+    done: Condvar,
+    capacity: usize,
+    jobs: usize,
+    requests: AtomicU64,
+    started: Instant,
+}
+
+impl ExperimentService {
+    /// Build a service over `store`. `capacity` bounds the in-flight cell
+    /// set (the back-pressure knob); `jobs` is the scheduler width for
+    /// computing misses (0 = all cores).
+    pub fn new(store: Arc<ResultStore>, capacity: usize, jobs: usize) -> Self {
+        Self {
+            store,
+            inflight: Mutex::new(HashSet::new()),
+            done: Condvar::new(),
+            capacity,
+            jobs,
+            requests: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    /// The underlying result registry.
+    pub fn store(&self) -> &Arc<ResultStore> {
+        &self.store
+    }
+
+    /// Route one parsed request — the worker entry point, also callable
+    /// in-process (the unit tests exercise the full dispatch without
+    /// sockets).
+    pub fn handle(&self, req: &Request) -> Response {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/v1/experiments") => {
+                Response::json(200, &Catalog::gather(Some(&self.store)).to_json())
+            }
+            ("GET", "/v1/stats") => self.stats(),
+            ("POST", "/v1/run") => self.run(req),
+            ("GET", path) if path.starts_with("/v1/result/") => {
+                self.result(&path["/v1/result/".len()..])
+            }
+            (_, "/v1/experiments") | (_, "/v1/stats") | (_, "/v1/run") => {
+                Response::text(405, "method not allowed on this route")
+            }
+            _ => Response::text(
+                404,
+                "unknown route (GET /v1/experiments | GET /v1/stats | \
+                 GET /v1/result/<key> | POST /v1/run)",
+            ),
+        }
+    }
+
+    fn lock_inflight(&self) -> MutexGuard<'_, HashSet<u64>> {
+        self.inflight.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// `GET /v1/stats`: the hit/miss proof of the hot path. `requests`
+    /// includes the call itself.
+    fn stats(&self) -> Response {
+        let num = |v: u64| Json::Num(v as f64);
+        let in_flight = self.lock_inflight().len();
+        Response::json(
+            200,
+            &Json::Obj(vec![
+                ("requests".to_string(), num(self.requests.load(Ordering::Relaxed))),
+                ("hits".to_string(), num(self.store.hits())),
+                ("misses".to_string(), num(self.store.misses())),
+                ("in_flight".to_string(), num(in_flight as u64)),
+                ("queue_capacity".to_string(), num(self.capacity as u64)),
+                ("cached_cells".to_string(), num(self.store.len() as u64)),
+                (
+                    "registry".to_string(),
+                    Json::Str(self.store.dir().display().to_string()),
+                ),
+                ("uptime_secs".to_string(), num(self.started.elapsed().as_secs())),
+            ]),
+        )
+    }
+
+    /// `GET /v1/result/<16-hex-key>`: one record, rendered by the same
+    /// `CellRecord::to_json` law as the on-disk line. Reads never touch
+    /// the hit/miss counters (those measure `/v1/run` resolution only).
+    fn result(&self, hex: &str) -> Response {
+        let key = match u64::from_str_radix(hex, 16) {
+            Ok(k) if hex.len() == 16 => k,
+            _ => {
+                return Response::text(
+                    400,
+                    &format!("'{hex}' is not a 16-hex-digit registry key"),
+                )
+            }
+        };
+        match self.store.peek(key) {
+            Some(rec) => Response::json(200, &rec.to_json(key)),
+            None => Response::text(404, &format!("no record under key {key:016x}")),
+        }
+    }
+
+    /// `POST /v1/run`: parse, validate, dispatch to the cell or experiment
+    /// path.
+    fn run(&self, req: &Request) -> Response {
+        let text = match std::str::from_utf8(&req.body) {
+            Ok(t) => t,
+            Err(_) => return Response::text(400, "request body is not UTF-8"),
+        };
+        let v = match Json::parse(text) {
+            Ok(v) => v,
+            Err(e) => {
+                return Response::text(400, &format!("request body is not valid JSON: {e}"))
+            }
+        };
+        match RunSpec::parse(&v) {
+            Err(e) => Response::text(400, &format!("invalid run spec: {e}")),
+            Ok(RunSpec::Cells(spec)) => self.run_cells(&spec),
+            Ok(RunSpec::Experiment(spec)) => self.run_experiment(&spec),
+        }
+    }
+
+    /// Builder-shaped cells: resolve every planned repetition against the
+    /// registry and render the response from the stored records — so a
+    /// computed answer and a served answer are bytes of the same law.
+    fn run_cells(&self, spec: &CellSpec) -> Response {
+        let planned = spec.plan();
+        let records = match self.resolve_cells(spec, &planned) {
+            Ok(r) => r,
+            Err(resp) => return resp,
+        };
+        let cells: Vec<Json> =
+            planned.iter().zip(&records).map(|(pc, rec)| rec.to_json(pc.key)).collect();
+        Response::json(
+            200,
+            &Json::Obj(vec![
+                ("digest".to_string(), Json::Str(format!("{:016x}", spec.digest()))),
+                ("cells".to_string(), Json::Arr(cells)),
+            ]),
+        )
+    }
+
+    /// Resolve every planned cell to a registry record (see the module
+    /// docs for the coalescing and back-pressure contracts).
+    fn resolve_cells(
+        &self,
+        spec: &CellSpec,
+        planned: &[PlannedCell],
+    ) -> Result<Vec<Arc<CellRecord>>, Response> {
+        let mut computed: HashSet<u64> = HashSet::new();
+        // Two rounds suffice without faults (claim + compute, then
+        // wait-and-read); the third absorbs a foreign computation dying
+        // and this request re-claiming its cells.
+        for _round in 0..3 {
+            // Claim phase: every free missing key in one locked pass,
+            // all-or-nothing against capacity.
+            let mut mine: Vec<usize> = Vec::new();
+            let mut wait_keys: Vec<u64> = Vec::new();
+            {
+                let mut inflight = self.lock_inflight();
+                for (i, pc) in planned.iter().enumerate() {
+                    if self.store.peek(pc.key).is_some() {
+                        continue;
+                    }
+                    if inflight.contains(&pc.key) {
+                        wait_keys.push(pc.key);
+                    } else if !mine.iter().any(|&j| planned[j].key == pc.key) {
+                        mine.push(i);
+                    }
+                }
+                if !mine.is_empty() {
+                    if inflight.len() + mine.len() > self.capacity {
+                        return Err(Response::text(
+                            429,
+                            &format!(
+                                "queue full: {} cells in flight, request needs {} more \
+                                 (capacity {}) — retry later",
+                                inflight.len(),
+                                mine.len(),
+                                self.capacity
+                            ),
+                        ));
+                    }
+                    for &i in &mine {
+                        inflight.insert(planned[i].key);
+                    }
+                }
+            }
+            // Compute phase: fan the claims across the scheduler; each
+            // finished cell is journaled into the registry from the
+            // worker (`on_done`), so a kill mid-request loses at most
+            // in-flight cells — the registry is never torn.
+            if !mine.is_empty() {
+                let runs = run_indexed_faulted(
+                    self.jobs,
+                    mine.len(),
+                    1,
+                    |k| spec.compute(planned[mine[k]].rep),
+                    |k, r| {
+                        if let Some(trace) = &r.value {
+                            let pc = &planned[mine[k]];
+                            self.store.insert(pc.key, spec.record(pc, trace));
+                            self.store.count_miss();
+                        }
+                    },
+                );
+                {
+                    let mut inflight = self.lock_inflight();
+                    for &i in &mine {
+                        inflight.remove(&planned[i].key);
+                    }
+                }
+                self.done.notify_all();
+                for &i in &mine {
+                    computed.insert(planned[i].key);
+                }
+                for r in &runs {
+                    if let CellOutcome::Failed(msg) = &r.outcome {
+                        return Err(Response::text(
+                            500,
+                            &format!("cell computation failed: {msg}"),
+                        ));
+                    }
+                }
+            }
+            // Wait phase: no claims held here, so overlapping requests
+            // can never deadlock on each other's claims.
+            {
+                let mut inflight = self.lock_inflight();
+                while wait_keys.iter().any(|k| inflight.contains(k)) {
+                    inflight = self.done.wait(inflight).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+            // Read phase: serve from the store; anything this request did
+            // not compute itself counts as a hit.
+            let records: Option<Vec<Arc<CellRecord>>> =
+                planned.iter().map(|pc| self.store.peek(pc.key)).collect();
+            if let Some(records) = records {
+                for pc in planned {
+                    if !computed.contains(&pc.key) {
+                        self.store.count_hit();
+                    }
+                }
+                return Ok(records);
+            }
+            // A cell claimed by another request failed to materialize (its
+            // computation panicked); loop and claim it ourselves.
+        }
+        Err(Response::text(500, "cells failed to materialize after retry"))
+    }
+
+    /// Whole-experiment requests: coalesce on the spec's computation
+    /// identity, run the experiment builder with the service registry
+    /// threaded into the context (cells hit the same store the CLI
+    /// warms), and render the tables.
+    fn run_experiment(&self, spec: &ExpSpec) -> Response {
+        let key = spec.coalesce_key();
+        {
+            let mut inflight = self.lock_inflight();
+            // Wait for an identical in-flight request, then run anyway:
+            // every cell is now a registry hit and aggregation is
+            // deterministic, so the bytes match the first answer.
+            while inflight.contains(&key) {
+                inflight = self.done.wait(inflight).unwrap_or_else(|e| e.into_inner());
+            }
+            if inflight.len() >= self.capacity {
+                return Response::text(
+                    429,
+                    &format!(
+                        "queue full: {} units in flight (capacity {}) — retry later",
+                        inflight.len(),
+                        self.capacity
+                    ),
+                );
+            }
+            inflight.insert(key);
+        }
+        let mut ctx = spec.ctx.clone();
+        ctx.registry = Some(Arc::clone(&self.store));
+        ctx.jobs = spec.jobs.unwrap_or(self.jobs);
+        let exp = experiments::find(&spec.id).expect("id validated at parse time");
+        let result = catch_unwind(AssertUnwindSafe(|| (exp.run)(&ctx)));
+        {
+            let mut inflight = self.lock_inflight();
+            inflight.remove(&key);
+        }
+        self.done.notify_all();
+        let tables = match result {
+            Ok(t) => t,
+            Err(payload) => {
+                return Response::text(
+                    500,
+                    &format!(
+                        "experiment '{}' aborted: {}",
+                        spec.id,
+                        panic_message(payload.as_ref())
+                    ),
+                )
+            }
+        };
+        match spec.format {
+            OutFormat::Csv => {
+                let table = match &spec.table {
+                    Some(id) => tables.iter().find(|t| &t.id == id),
+                    None => tables.first(),
+                };
+                match table {
+                    Some(t) => Response::bytes(200, "text/csv", t.to_csv().into_bytes()),
+                    None => Response::text(
+                        400,
+                        &format!(
+                            "experiment '{}' has no table '{}' (tables: {})",
+                            spec.id,
+                            spec.table.as_deref().unwrap_or("<first>"),
+                            tables.iter().map(|t| t.id.as_str()).collect::<Vec<_>>().join(", ")
+                        ),
+                    ),
+                }
+            }
+            OutFormat::Json => {
+                let tables_json: Vec<Json> = tables
+                    .iter()
+                    .map(|t| {
+                        Json::Obj(vec![
+                            ("id".to_string(), Json::Str(t.id.clone())),
+                            ("title".to_string(), Json::Str(t.title.clone())),
+                            ("csv".to_string(), Json::Str(t.to_csv())),
+                        ])
+                    })
+                    .collect();
+                Response::json(
+                    200,
+                    &Json::Obj(vec![
+                        ("experiment".to_string(), Json::Str(spec.id.clone())),
+                        ("tables".to_string(), Json::Arr(tables_json)),
+                    ]),
+                )
+            }
+        }
+    }
+}
+
+/// The TCP front end: a bound listener plus a fixed worker pool draining
+/// an accept queue.
+pub struct Server {
+    listener: TcpListener,
+    service: Arc<ExperimentService>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:7878`; port `0` picks an ephemeral
+    /// port — read it back via [`Server::local_addr`]).
+    pub fn bind(addr: &str, service: Arc<ExperimentService>) -> io::Result<Self> {
+        Ok(Self { listener: TcpListener::bind(addr)?, service })
+    }
+
+    /// The bound socket address.
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Serve forever with `threads` workers (min 1). Accept errors are
+    /// logged and survived; the call only returns if the listener dies.
+    pub fn run(self, threads: usize) -> io::Result<()> {
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        std::thread::scope(|scope| {
+            for _ in 0..threads.max(1) {
+                let rx = Arc::clone(&rx);
+                let service = Arc::clone(&self.service);
+                scope.spawn(move || loop {
+                    let next = rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
+                    match next {
+                        Ok(mut stream) => handle_connection(&mut stream, &service),
+                        Err(_) => break, // sender dropped: listener is gone
+                    }
+                });
+            }
+            for stream in self.listener.incoming() {
+                match stream {
+                    Ok(s) => {
+                        if tx.send(s).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => eprintln!("warning: accept failed: {e}"),
+                }
+            }
+            drop(tx);
+        });
+        Ok(())
+    }
+}
+
+/// Read one request, dispatch it, answer it; every error that can be
+/// answered is, then the connection closes (`Connection: close` always).
+fn handle_connection(stream: &mut TcpStream, service: &ExperimentService) {
+    let response = match read_request(stream) {
+        Ok(req) => service.handle(&req),
+        Err(resp) => resp,
+    };
+    if let Err(e) = response.write(stream) {
+        eprintln!("warning: response write failed: {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("lpgd_serve_{}_{tag}", std::process::id()))
+    }
+
+    fn service(tag: &str, capacity: usize) -> ExperimentService {
+        let dir = tmp_dir(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        ExperimentService::new(Arc::new(ResultStore::open(&dir).unwrap()), capacity, 1)
+    }
+
+    fn post_run(body: &str) -> Request {
+        Request {
+            method: "POST".to_string(),
+            path: "/v1/run".to_string(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn get(path: &str) -> Request {
+        Request { method: "GET".to_string(), path: path.to_string(), body: vec![] }
+    }
+
+    const SPEC: &str = r#"{"problem":{"kind":"quadratic1","dim":8},"grid":"bfloat16",
+        "stepsize":0.05,"steps":10,"seed":3,"reps":2}"#;
+
+    /// The headline contract: compute-then-serve is byte-identical, and
+    /// the counters prove the second answer never recomputed.
+    #[test]
+    fn identical_requests_are_byte_identical_and_hit_the_registry() {
+        let svc = service("bitident", 64);
+        let cold = svc.handle(&post_run(SPEC));
+        assert_eq!(cold.status, 200, "{}", String::from_utf8_lossy(&cold.body));
+        assert_eq!((svc.store.hits(), svc.store.misses()), (0, 2));
+        let warm = svc.handle(&post_run(SPEC));
+        assert_eq!(warm.status, 200);
+        assert_eq!(cold.body, warm.body, "served bytes must equal computed bytes");
+        assert_eq!((svc.store.hits(), svc.store.misses()), (2, 2));
+        // GET /v1/result serves the same record the run response embeds.
+        let body = String::from_utf8(cold.body).unwrap();
+        let v = Json::parse(&body).unwrap();
+        let key = v.get("cells").unwrap().as_array().unwrap()[0]
+            .get("key")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        let one = svc.handle(&get(&format!("/v1/result/{key}")));
+        assert_eq!(one.status, 200);
+        assert!(body.contains(std::str::from_utf8(&one.body).unwrap()));
+        let _ = std::fs::remove_dir_all(tmp_dir("bitident"));
+    }
+
+    /// Two overlapping identical requests coalesce: exactly one pays the
+    /// misses, regardless of interleaving.
+    #[test]
+    fn concurrent_duplicates_coalesce_onto_one_computation() {
+        let svc = service("coalesce", 64);
+        let (a, b) = std::thread::scope(|scope| {
+            let ta = scope.spawn(|| svc.handle(&post_run(SPEC)));
+            let tb = scope.spawn(|| svc.handle(&post_run(SPEC)));
+            (ta.join().unwrap(), tb.join().unwrap())
+        });
+        assert_eq!((a.status, b.status), (200, 200));
+        assert_eq!(a.body, b.body);
+        assert_eq!(svc.store.misses(), 2, "two cells, each computed exactly once");
+        assert_eq!(svc.store.hits(), 2, "the duplicate request is pure hits");
+        let _ = std::fs::remove_dir_all(tmp_dir("coalesce"));
+    }
+
+    #[test]
+    fn malformed_specs_get_descriptive_400s_and_unknown_routes_404() {
+        let svc = service("badspec", 64);
+        let r = svc.handle(&post_run("not json"));
+        assert_eq!(r.status, 400);
+        assert!(String::from_utf8_lossy(&r.body).contains("not valid JSON"));
+        let r = svc.handle(&post_run(r#"{"problem":{"kind":"cubic","dim":4},
+            "grid":"binary8","stepsize":0.1,"steps":5}"#));
+        assert_eq!(r.status, 400);
+        assert!(String::from_utf8_lossy(&r.body).contains("quadratic1"));
+        assert_eq!(svc.handle(&get("/nope")).status, 404);
+        assert_eq!(svc.handle(&get("/v1/run")).status, 405);
+        assert_eq!(svc.handle(&get("/v1/result/xyz")).status, 400);
+        assert_eq!(svc.handle(&get("/v1/result/0000000000000abc")).status, 404);
+        // Spec failures never consume queue capacity.
+        assert_eq!(svc.lock_inflight().len(), 0);
+        let _ = std::fs::remove_dir_all(tmp_dir("badspec"));
+    }
+
+    /// Zero capacity: misses shed with 429, but registry hits still serve.
+    #[test]
+    fn back_pressure_sheds_misses_but_serves_hits() {
+        let warm = service("bp_warm", 64);
+        assert_eq!(warm.handle(&post_run(SPEC)).status, 200);
+        // Re-open the same registry with zero compute capacity.
+        let store = Arc::new(ResultStore::open(warm.store.dir()).unwrap());
+        let cold = ExperimentService::new(store, 0, 1);
+        assert_eq!(cold.handle(&post_run(SPEC)).status, 200, "hits need no capacity");
+        let other = SPEC.replace("\"seed\":3", "\"seed\":4");
+        let shed = cold.handle(&post_run(&other));
+        assert_eq!(shed.status, 429);
+        assert!(String::from_utf8_lossy(&shed.body).contains("queue full"));
+        let _ = std::fs::remove_dir_all(tmp_dir("bp_warm"));
+    }
+
+    /// Experiment-form requests run the real builders against the shared
+    /// store and render CSV bytes identical across a warm repeat.
+    #[test]
+    fn experiment_requests_serve_tables_and_reuse_the_registry() {
+        let svc = service("exp", 64);
+        let body = r#"{"experiment":"fig3a","quick":true,"seeds":2,"quad_n":24,
+            "quad_steps":40,"format":"csv"}"#;
+        let cold = svc.handle(&post_run(body));
+        assert_eq!(cold.status, 200, "{}", String::from_utf8_lossy(&cold.body));
+        assert_eq!(cold.content_type, "text/csv");
+        let misses = svc.store.misses();
+        assert!(misses > 0, "cold experiment must compute cells");
+        let warm = svc.handle(&post_run(body));
+        assert_eq!(warm.body, cold.body, "warm CSV must be byte-identical");
+        assert_eq!(svc.store.misses(), misses, "warm run must not recompute");
+        assert!(svc.store.hits() >= misses, "warm run is served from the store");
+        let _ = std::fs::remove_dir_all(tmp_dir("exp"));
+    }
+}

@@ -1,0 +1,564 @@
+//! `POST /v1/run` body parsing, validation and cell planning.
+//!
+//! Two spec shapes are accepted (see `docs/service.md`):
+//!
+//! * **builder-shaped cells** — a `"problem"` object plus the
+//!   [`crate::gd::RunBuilder`] knobs (`grid`, `scheme`, `stepsize`,
+//!   `steps`, `seed`, `sr_bits`, `reps`). Each repetition is one
+//!   content-addressed cell: the key is derived from a *canonical spec
+//!   string* (resolved scheme labels, normalized grid spelling, stepsize
+//!   as raw bits), so equivalent spellings of the same run — `"SR"` vs
+//!   `"sr"`, `"fixed:Q3.8"` vs `"q3.8"` — share registry entries.
+//! * **whole experiments** — an `"experiment"` id plus the `ExpCtx` knobs
+//!   the CLI exposes. The service threads its registry into the context,
+//!   so experiment cells share the store with `reproduce --registry`.
+//!
+//! Every parse error is a complete human-readable sentence; it becomes the
+//! body of the `400` response verbatim.
+
+use crate::coordinator::experiments::ExpCtx;
+use crate::coordinator::registry as experiments;
+use crate::fp::{Grid, SchemeRegistry};
+use crate::gd::trace::Trace;
+use crate::gd::RunBuilder;
+use crate::problems::Quadratic;
+use crate::registry::{CellRecord, Provenance};
+use crate::util::hash::{cell_stream, fnv1a, registry_key, Fnv1a};
+use crate::util::json::Json;
+
+/// Problem selector for builder-shaped specs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProblemSpec {
+    /// Paper Setting I (§5.1): the ill-conditioned diagonal quadratic.
+    Quadratic1 {
+        /// Problem dimension (paper: 1000).
+        dim: usize,
+    },
+    /// Paper Setting II (§5.1): the dense Householder quadratic with
+    /// spectrum `{1, …, n}`.
+    Quadratic2 {
+        /// Problem dimension.
+        dim: usize,
+        /// Seed of the random orthogonal factor.
+        data_seed: u64,
+    },
+}
+
+impl ProblemSpec {
+    /// Materialize `(problem, x0, paper default stepsize)`.
+    fn build(&self) -> (Quadratic, Vec<f64>, f64) {
+        match *self {
+            ProblemSpec::Quadratic1 { dim } => Quadratic::setting1(dim),
+            ProblemSpec::Quadratic2 { dim, data_seed } => Quadratic::setting2(dim, data_seed),
+        }
+    }
+
+    /// Canonical identity fragment for the cache key.
+    fn canon(&self) -> String {
+        match *self {
+            ProblemSpec::Quadratic1 { dim } => format!("quadratic1:{dim}"),
+            ProblemSpec::Quadratic2 { dim, data_seed } => {
+                format!("quadratic2:{dim}:{data_seed}")
+            }
+        }
+    }
+}
+
+/// One planned repetition of a [`CellSpec`]: its content-addressed
+/// identity, ready for registry lookup or compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedCell {
+    /// Registry key ([`registry_key`] over the spec digest and cell id).
+    pub key: u64,
+    /// Cell stream id ([`cell_stream`] over the canonical spec string).
+    pub cell: u64,
+    /// Repetition index.
+    pub rep: u64,
+}
+
+/// A validated builder-shaped run spec: everything needed to compute the
+/// request's cells plus their content-addressed identities. Construct via
+/// [`RunSpec::parse`] — validation happens there, so the compute path
+/// cannot fail on spec errors.
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    problem: ProblemSpec,
+    grid: String,
+    grad: String,
+    mul: String,
+    sub: String,
+    scheme_label: String,
+    stepsize: f64,
+    steps: usize,
+    seed: u64,
+    sr_bits: u32,
+    reps: usize,
+    canon: String,
+    digest: u64,
+}
+
+impl CellSpec {
+    /// The spec's configuration digest (FNV-1a over the canonical string);
+    /// hex-rendered in the response envelope.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// The request's cells, one per repetition. Keys derive from the
+    /// canonical spec string, so equivalent spellings share identity.
+    pub fn plan(&self) -> Vec<PlannedCell> {
+        (0..self.reps as u64)
+            .map(|rep| {
+                let cell = cell_stream("run", &self.canon, rep);
+                PlannedCell { key: registry_key(self.digest, cell), cell, rep }
+            })
+            .collect()
+    }
+
+    /// Compute one repetition. Pure: identical specs and reps produce
+    /// bit-identical traces, which is what makes the records cacheable.
+    /// Repetition `r` runs on seed `seed + r`, the
+    /// [`RunBuilder::run_reps`] convention.
+    pub fn compute(&self, rep: u64) -> Trace {
+        let (p, x0, _) = self.problem.build();
+        let mut b = RunBuilder::new(&p)
+            .format_name(&self.grid)
+            .grad_scheme(&self.grad)
+            .mul_scheme(&self.mul)
+            .sub_scheme(&self.sub)
+            .stepsize(self.stepsize)
+            .steps(self.steps)
+            .seed(self.seed.wrapping_add(rep))
+            .start(&x0);
+        if self.sr_bits != 0 {
+            b = b.sr_bits(self.sr_bits);
+        }
+        b.build().expect("spec validated at parse time").run(None)
+    }
+
+    /// Package a computed trace as the registry record for `pc`.
+    pub fn record(&self, pc: &PlannedCell, trace: &Trace) -> CellRecord {
+        CellRecord {
+            digest: self.digest,
+            cell: pc.cell,
+            series: trace.objective_series(),
+            health: trace.health,
+            provenance: Provenance {
+                code_version: env!("CARGO_PKG_VERSION").to_string(),
+                experiment: "run".to_string(),
+                label: format!("{}_{}", self.grid, self.scheme_label),
+                rep: pc.rep,
+                grid: self.grid.clone(),
+                scheme: self.scheme_label.clone(),
+                seed: self.seed.wrapping_add(pc.rep),
+                sr_bits: self.sr_bits,
+            },
+        }
+    }
+
+    fn parse(v: &Json) -> Result<CellSpec, String> {
+        reject_unknown(
+            v,
+            "spec",
+            &[
+                "problem", "grid", "scheme", "grad_scheme", "mul_scheme", "sub_scheme",
+                "stepsize", "steps", "seed", "sr_bits", "reps",
+            ],
+        )?;
+        let p = v.get("problem").expect("dispatched on 'problem' by RunSpec::parse");
+        reject_unknown(p, "problem", &["kind", "dim", "data_seed"])?;
+        let kind = req_str(p, "problem.kind")?;
+        let dim = req_int(p, "problem.dim", 1, 4096)?;
+        let data_seed = opt_u64(p, "problem.data_seed", 0)?;
+        let problem = match kind.as_str() {
+            "quadratic1" => ProblemSpec::Quadratic1 { dim },
+            "quadratic2" => ProblemSpec::Quadratic2 { dim, data_seed },
+            other => {
+                return Err(format!(
+                    "problem.kind must be 'quadratic1' or 'quadratic2', got '{other}'"
+                ))
+            }
+        };
+
+        let grid_raw = req_str(v, "grid")?;
+        // Canonicalize through Grid::name() so every alias spelling —
+        // "BF16", "bfloat16", "fixed:Q3.8", "q3.8" — shares one identity.
+        let grid = match Grid::parse(&grid_raw) {
+            Some(g) => g.name(),
+            None => {
+                return Err(format!(
+                    "unknown grid '{grid_raw}' (float formats: binary8, bfloat16, binary16, \
+                     binary32, binary64; fixed point: qM.F / uqM.F / fixed:QM.F)"
+                ))
+            }
+        };
+
+        let scheme = opt_str(v, "scheme")?.unwrap_or_else(|| "sr".to_string());
+        let grad = opt_str(v, "grad_scheme")?.unwrap_or_else(|| scheme.clone());
+        let mul = opt_str(v, "mul_scheme")?.unwrap_or_else(|| scheme.clone());
+        let sub = opt_str(v, "sub_scheme")?.unwrap_or_else(|| scheme.clone());
+        let label = |spec: &str| -> Result<String, String> {
+            SchemeRegistry::lookup(spec).map(|s| s.label()).map_err(|e| e.to_string())
+        };
+        let (grad_l, mul_l, sub_l) = (label(&grad)?, label(&mul)?, label(&sub)?);
+        let scheme_label = if grad_l == mul_l && mul_l == sub_l {
+            grad_l.clone()
+        } else {
+            format!("{grad_l}/{mul_l}/{sub_l}")
+        };
+
+        let stepsize = req_f64(v, "stepsize")?;
+        if !(stepsize.is_finite() && stepsize > 0.0) {
+            return Err(format!("stepsize must be a finite positive number, got {stepsize}"));
+        }
+        let steps = req_int(v, "steps", 1, 1_000_000)?;
+        let seed = opt_u64(v, "seed", 0)?;
+        let sr_bits = opt_int(v, "sr_bits", 0, 0, 53)? as u32;
+        let reps = opt_int(v, "reps", 1, 1, 512)?;
+
+        // The canonical string is the cache identity: resolved labels and
+        // raw stepsize bits, so float formatting and spelling never split
+        // or alias entries.
+        let canon = format!(
+            "problem={};grid={};grad={};mul={};sub={};t={:016x};steps={};seed={};sr_bits={}",
+            problem.canon(),
+            grid,
+            grad_l,
+            mul_l,
+            sub_l,
+            stepsize.to_bits(),
+            steps,
+            seed,
+            sr_bits
+        );
+        let digest = fnv1a(canon.as_bytes());
+        Ok(CellSpec {
+            problem,
+            grid,
+            grad,
+            mul,
+            sub,
+            scheme_label,
+            stepsize,
+            steps,
+            seed,
+            sr_bits,
+            reps,
+            canon,
+            digest,
+        })
+    }
+}
+
+/// Response shape for experiment-form requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutFormat {
+    /// JSON envelope with every produced table embedded as CSV text.
+    Json,
+    /// Raw `text/csv` of one table — byte-identical to the file
+    /// `reproduce` writes, which is what the CI smoke `cmp`s.
+    Csv,
+}
+
+/// A validated experiment-form spec: an experiment id plus the context
+/// knobs that shape its cells.
+#[derive(Debug, Clone)]
+pub struct ExpSpec {
+    /// Experiment id (validated against the experiment registry).
+    pub id: String,
+    /// Context assembled from the spec fields. The service fills in the
+    /// registry handle and the jobs default before running.
+    pub ctx: ExpCtx,
+    /// Worker-thread override from the spec (absent → service default).
+    pub jobs: Option<usize>,
+    /// Response shape.
+    pub format: OutFormat,
+    /// For `format = "csv"`: id of the table to return (default: first).
+    pub table: Option<String>,
+}
+
+impl ExpSpec {
+    /// Coalescing identity: requests with equal keys compute identical
+    /// cells, so concurrent duplicates share one computation slot. Folds
+    /// everything that changes the computed values — the id, the
+    /// config digest and the seed count — and nothing that doesn't.
+    pub fn coalesce_key(&self) -> u64 {
+        Fnv1a::new()
+            .str("exp")
+            .byte(0xff)
+            .str(&self.id)
+            .u64(self.ctx.config_digest())
+            .u64(self.ctx.seeds as u64)
+            .finish()
+    }
+
+    fn parse(v: &Json) -> Result<ExpSpec, String> {
+        reject_unknown(
+            v,
+            "spec",
+            &[
+                "experiment", "quick", "seeds", "jobs", "lanes", "side", "mlr_train",
+                "mlr_test", "nn_train", "nn_test", "mlr_epochs", "nn_epochs", "quad_steps",
+                "quad_n", "escape", "format", "table",
+            ],
+        )?;
+        let id = req_str(v, "experiment")?;
+        if id == "all" || experiments::find(&id).is_none() {
+            let ids: Vec<&str> = experiments::REGISTRY.iter().map(|s| s.id).collect();
+            return Err(format!("unknown experiment '{id}' (known: {})", ids.join(", ")));
+        }
+        // The quick profile is the service default: a stray full-size
+        // request should be an explicit opt-out, not an accident.
+        let quick = opt_bool(v, "quick", true)?;
+        let mut ctx = if quick { ExpCtx::quick() } else { ExpCtx::default() };
+        ctx.seeds = opt_int(v, "seeds", ctx.seeds, 1, 100)?;
+        ctx.lanes = opt_int(v, "lanes", ctx.lanes, 1, 64)?;
+        ctx.side = opt_int(v, "side", ctx.side, 4, 64)?;
+        ctx.mlr_train = opt_int(v, "mlr_train", ctx.mlr_train, 1, 100_000)?;
+        ctx.mlr_test = opt_int(v, "mlr_test", ctx.mlr_test, 1, 100_000)?;
+        ctx.nn_train = opt_int(v, "nn_train", ctx.nn_train, 1, 100_000)?;
+        ctx.nn_test = opt_int(v, "nn_test", ctx.nn_test, 1, 100_000)?;
+        ctx.mlr_epochs = opt_int(v, "mlr_epochs", ctx.mlr_epochs, 1, 10_000)?;
+        ctx.nn_epochs = opt_int(v, "nn_epochs", ctx.nn_epochs, 1, 10_000)?;
+        ctx.quad_steps = opt_int(v, "quad_steps", ctx.quad_steps, 1, 1_000_000)?;
+        ctx.quad_n = opt_int(v, "quad_n", ctx.quad_n, 1, 4096)?;
+        if let Some(x) = v.get("escape") {
+            let e = x.as_f64().ok_or("escape must be a number")?;
+            if !(e.is_finite() && e > 0.0) {
+                return Err(format!("escape must be a finite positive number, got {e}"));
+            }
+            ctx.escape = Some(e);
+        }
+        let jobs = match v.get("jobs") {
+            Some(_) => Some(opt_int(v, "jobs", 0, 0, 256)?),
+            None => None,
+        };
+        let format = match opt_str(v, "format")?.as_deref() {
+            None | Some("json") => OutFormat::Json,
+            Some("csv") => OutFormat::Csv,
+            Some(other) => {
+                return Err(format!("format must be 'json' or 'csv', got '{other}'"))
+            }
+        };
+        let table = opt_str(v, "table")?;
+        Ok(ExpSpec { id, ctx, jobs, format, table })
+    }
+}
+
+/// A parsed `POST /v1/run` body: one of the two accepted spec shapes.
+#[derive(Debug, Clone)]
+pub enum RunSpec {
+    /// Builder-shaped cells.
+    Cells(CellSpec),
+    /// A whole-experiment run.
+    Experiment(ExpSpec),
+}
+
+impl RunSpec {
+    /// Validate a request body. Every error string is a complete sentence
+    /// — it becomes the `400` response body verbatim.
+    pub fn parse(v: &Json) -> Result<RunSpec, String> {
+        if v.get("experiment").is_some() {
+            ExpSpec::parse(v).map(RunSpec::Experiment)
+        } else if v.get("problem").is_some() {
+            CellSpec::parse(v).map(RunSpec::Cells)
+        } else {
+            Err("spec must contain either 'problem' (builder-shaped cells) or 'experiment' \
+                 (a whole experiment); see docs/service.md"
+                .to_string())
+        }
+    }
+}
+
+// ------------------------------------------------- field-access helpers --
+
+fn reject_unknown(v: &Json, what: &str, known: &[&str]) -> Result<(), String> {
+    let Json::Obj(pairs) = v else {
+        return Err(format!("{what} must be a JSON object"));
+    };
+    for (k, _) in pairs {
+        if !known.contains(&k.as_str()) {
+            return Err(format!("unknown {what} field '{k}' (known: {})", known.join(", ")));
+        }
+    }
+    Ok(())
+}
+
+fn req_str(v: &Json, name: &str) -> Result<String, String> {
+    let key = name.rsplit('.').next().unwrap_or(name);
+    match v.get(key) {
+        None => Err(format!("missing field '{name}'")),
+        Some(x) => {
+            x.as_str().map(str::to_string).ok_or_else(|| format!("{name} must be a string"))
+        }
+    }
+}
+
+fn opt_str(v: &Json, name: &str) -> Result<Option<String>, String> {
+    match v.get(name) {
+        None => Ok(None),
+        Some(x) => x
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .ok_or_else(|| format!("{name} must be a string")),
+    }
+}
+
+fn req_f64(v: &Json, name: &str) -> Result<f64, String> {
+    match v.get(name) {
+        None => Err(format!("missing field '{name}'")),
+        Some(x) => x.as_f64().ok_or_else(|| format!("{name} must be a number")),
+    }
+}
+
+fn req_int(v: &Json, name: &str, lo: usize, hi: usize) -> Result<usize, String> {
+    let key = name.rsplit('.').next().unwrap_or(name);
+    match v.get(key) {
+        None => Err(format!("missing field '{name}'")),
+        Some(x) => int_in_range(x, name, lo, hi),
+    }
+}
+
+fn opt_int(v: &Json, name: &str, default: usize, lo: usize, hi: usize) -> Result<usize, String> {
+    match v.get(name) {
+        None => Ok(default),
+        Some(x) => int_in_range(x, name, lo, hi),
+    }
+}
+
+fn int_in_range(x: &Json, name: &str, lo: usize, hi: usize) -> Result<usize, String> {
+    let n = x.as_usize().ok_or_else(|| format!("{name} must be a non-negative integer"))?;
+    if (lo..=hi).contains(&n) {
+        Ok(n)
+    } else {
+        Err(format!("{name} must be in {lo}..={hi}, got {n}"))
+    }
+}
+
+fn opt_u64(v: &Json, name: &str, default: u64) -> Result<u64, String> {
+    let key = name.rsplit('.').next().unwrap_or(name);
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x.as_u64().ok_or_else(|| format!("{name} must be a non-negative integer")),
+    }
+}
+
+fn opt_bool(v: &Json, name: &str, default: bool) -> Result<bool, String> {
+    match v.get(name) {
+        None => Ok(default),
+        Some(x) => x.as_bool().ok_or_else(|| format!("{name} must be true or false")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<RunSpec, String> {
+        RunSpec::parse(&Json::parse(text).unwrap())
+    }
+
+    fn cells(text: &str) -> CellSpec {
+        match parse(text).unwrap() {
+            RunSpec::Cells(c) => c,
+            RunSpec::Experiment(_) => panic!("expected cell spec"),
+        }
+    }
+
+    const MINIMAL: &str = r#"{"problem":{"kind":"quadratic1","dim":16},
+        "grid":"bfloat16","stepsize":0.05,"steps":20}"#;
+
+    #[test]
+    fn equivalent_spellings_share_cell_identity() {
+        let a = cells(MINIMAL);
+        let b = cells(
+            r#"{"problem":{"kind":"quadratic1","dim":16},"grid":"BF16",
+                "scheme":"SR","stepsize":0.05,"steps":20,"seed":0,"reps":1}"#,
+        );
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.plan(), b.plan());
+        // And a genuinely different run gets different keys.
+        let c = cells(
+            r#"{"problem":{"kind":"quadratic1","dim":16},"grid":"bfloat16",
+                "stepsize":0.05,"steps":21}"#,
+        );
+        assert_ne!(a.digest(), c.digest());
+        assert_ne!(a.plan()[0].key, c.plan()[0].key);
+    }
+
+    #[test]
+    fn planned_reps_are_distinct_and_compute_matches_run_builder() {
+        let spec = cells(
+            r#"{"problem":{"kind":"quadratic1","dim":8},"grid":"binary8",
+                "stepsize":0.05,"steps":12,"seed":5,"reps":3}"#,
+        );
+        let plan = spec.plan();
+        assert_eq!(plan.len(), 3);
+        assert_ne!(plan[0].key, plan[1].key);
+        // compute(rep) follows the run_reps convention: seed + rep.
+        let (p, x0, _) = Quadratic::setting1(8);
+        let mut direct = RunBuilder::new(&p)
+            .format_name("binary8")
+            .scheme("sr")
+            .stepsize(0.05)
+            .steps(12)
+            .seed(7)
+            .start(&x0)
+            .build()
+            .unwrap();
+        assert_eq!(spec.compute(2).objective_series(), direct.run(None).objective_series());
+        let rec = spec.record(&plan[2], &spec.compute(2));
+        assert_eq!(rec.provenance.seed, 7);
+        assert_eq!(rec.provenance.experiment, "run");
+        assert_eq!(rec.provenance.label, "binary8_SR");
+        assert_eq!(rec.series.len(), 12);
+    }
+
+    #[test]
+    fn errors_are_descriptive() {
+        let err = |t: &str| parse(t).unwrap_err();
+        assert!(err("{}").contains("'problem'"), "{}", err("{}"));
+        let e = err(r#"{"problem":{"kind":"cubic","dim":4},"grid":"binary8",
+            "stepsize":0.1,"steps":5}"#);
+        assert!(e.contains("quadratic1") && e.contains("cubic"), "{e}");
+        let e = err(r#"{"problem":{"kind":"quadratic1","dim":4},"grid":"binary7",
+            "stepsize":0.1,"steps":5}"#);
+        assert!(e.contains("binary7") && e.contains("bfloat16"), "{e}");
+        let e = err(r#"{"problem":{"kind":"quadratic1","dim":4},"grid":"binary8",
+            "stepsize":0.1,"steps":5,"scheme":"nope"}"#);
+        assert!(e.contains("nope"), "{e}");
+        let e = err(r#"{"problem":{"kind":"quadratic1","dim":4},"grid":"binary8",
+            "stepsize":0.1}"#);
+        assert!(e.contains("missing field 'steps'"), "{e}");
+        let e = err(r#"{"problem":{"kind":"quadratic1","dim":4},"grid":"binary8",
+            "stepsize":0.1,"step":5}"#);
+        assert!(e.contains("unknown spec field 'step'"), "{e}");
+        let e = err(r#"{"experiment":"nope"}"#);
+        assert!(e.contains("unknown experiment 'nope'") && e.contains("fig3a"), "{e}");
+        let e = err(r#"{"experiment":"fig3a","format":"xml"}"#);
+        assert!(e.contains("'json' or 'csv'"), "{e}");
+    }
+
+    #[test]
+    fn experiment_specs_build_contexts_and_coalesce_keys() {
+        let RunSpec::Experiment(a) = parse(r#"{"experiment":"fig3a"}"#).unwrap() else {
+            panic!("expected experiment spec")
+        };
+        assert_eq!(a.ctx.seeds, ExpCtx::quick().seeds, "quick is the service default");
+        assert_eq!(a.format, OutFormat::Json);
+        let RunSpec::Experiment(b) =
+            parse(r#"{"experiment":"fig3a","format":"csv"}"#).unwrap()
+        else {
+            panic!("expected experiment spec")
+        };
+        // The output format never splits the computation identity…
+        assert_eq!(a.coalesce_key(), b.coalesce_key());
+        // …but a cell-shaping knob does.
+        let RunSpec::Experiment(c) =
+            parse(r#"{"experiment":"fig3a","quad_n":64}"#).unwrap()
+        else {
+            panic!("expected experiment spec")
+        };
+        assert_ne!(a.coalesce_key(), c.coalesce_key());
+    }
+}

@@ -1,0 +1,159 @@
+//! FNV-1a hashing shared by the sweep journal, the cell scheduler and the
+//! content-addressed result registry.
+//!
+//! Historically the 64-bit FNV-1a fold lived twice: inline in
+//! [`crate::coordinator::scheduler`] (`cell_stream`) and inline in
+//! [`crate::coordinator::experiments`] (`ExpCtx::config_digest`, the digest
+//! carried by every journal line). The result registry
+//! ([`crate::registry`]) needs the *same* bytes-to-u64 law so that a cell
+//! journaled by `lpgd reproduce` and a cell cached for `lpgd serve` agree
+//! on identity — so the fold now lives here and everything else reuses it.
+//!
+//! **Byte-compatibility contract:** [`Fnv1a`] folds exactly the historic
+//! constants (offset `0xcbf29ce484222325`, prime `0x100000001b3`) one byte
+//! at a time, and [`cell_stream`] reproduces the historic scheduler id
+//! (FNV-1a over `experiment ‖ 0xff ‖ config`, xor-mixed with the golden-ratio
+//! spread of the repetition index) bit for bit. Journal files and golden
+//! config digests written before the extraction parse and replay unchanged
+//! — pinned by the test vectors below and by the kill/resume integration
+//! test (`rust/tests/integration.rs::fault_tolerance`).
+
+/// The FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// The FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Incremental 64-bit FNV-1a hasher with a builder-style API:
+///
+/// ```
+/// use lpgd::util::hash::Fnv1a;
+/// let digest = Fnv1a::new().bytes(b"fig3a").u64(42).finish();
+/// assert_ne!(digest, Fnv1a::new().finish());
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    /// Start a fresh hash at the FNV-1a offset basis.
+    pub fn new() -> Self {
+        Fnv1a(FNV_OFFSET)
+    }
+
+    /// Fold a byte slice, one byte at a time (xor, then multiply — the
+    /// FNV-1a order, as the historic inline copies did).
+    pub fn bytes(mut self, bytes: &[u8]) -> Self {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    /// Fold one byte.
+    pub fn byte(self, b: u8) -> Self {
+        self.bytes(&[b])
+    }
+
+    /// Fold a `u64` as its 8 little-endian bytes (the `config_digest`
+    /// convention for numeric knobs).
+    pub fn u64(self, v: u64) -> Self {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    /// Fold a string's UTF-8 bytes.
+    pub fn str(self, s: &str) -> Self {
+        self.bytes(s.as_bytes())
+    }
+
+    /// The folded digest.
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot FNV-1a of a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    Fnv1a::new().bytes(bytes).finish()
+}
+
+/// Stable stream id for an (experiment, config, repetition) cell: FNV-1a
+/// over the two labels (separated by a `0xff` byte so `("ab","c")` and
+/// `("a","bc")` stay distinct), mixed with the repetition index. Purely a
+/// function of the cell's *identity*, never of scheduling state, so the id
+/// — and through [`crate::fp::Rng::split`] the cell's whole random
+/// trajectory — survives reordering, re-sharding and resumption.
+///
+/// This is the historic `coordinator::scheduler::cell_stream` law moved
+/// here verbatim (the scheduler re-exports it); journal lines keyed by it
+/// replay bit-identically across the move.
+pub fn cell_stream(experiment: &str, config: &str, rep: u64) -> u64 {
+    Fnv1a::new().str(experiment).byte(0xff).str(config).finish()
+        ^ rep.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// Content address of one sweep cell in the result registry
+/// ([`crate::registry`]): the run-configuration digest
+/// ([`crate::coordinator::experiments::ExpCtx::config_digest`]) folded with
+/// the cell's stream id ([`cell_stream`]). Two cells share a registry key
+/// iff they share both the config shape *and* the cell identity — exactly
+/// the pair the journal stores as separate fields on every line.
+pub fn registry_key(config_digest: u64, cell: u64) -> u64 {
+    Fnv1a::new().u64(config_digest).u64(cell).finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The published FNV-1a 64-bit test vectors: the extraction must not
+    /// have changed the law (journals and registries on disk depend on it).
+    #[test]
+    fn fnv1a_matches_published_test_vectors() {
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    /// Byte-for-byte equivalence with the historic inline scheduler fold.
+    #[test]
+    fn cell_stream_matches_the_historic_inline_fold() {
+        fn legacy(experiment: &str, config: &str, rep: u64) -> u64 {
+            let mut h = 0xcbf29ce484222325u64;
+            for b in experiment.bytes().chain([0xff]).chain(config.bytes()) {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            h ^ rep.wrapping_mul(0x9E3779B97F4A7C15)
+        }
+        for (exp, cfg, rep) in
+            [("fig4a", "SR", 0u64), ("fig3a", "signed:0.25", 17), ("", "", u64::MAX)]
+        {
+            assert_eq!(cell_stream(exp, cfg, rep), legacy(exp, cfg, rep), "{exp}/{cfg}/{rep}");
+        }
+    }
+
+    #[test]
+    fn builder_folds_match_one_shot() {
+        assert_eq!(Fnv1a::new().bytes(b"foobar").finish(), fnv1a(b"foobar"));
+        assert_eq!(Fnv1a::new().str("foo").str("bar").finish(), fnv1a(b"foobar"));
+        assert_eq!(
+            Fnv1a::new().u64(0x0102030405060708).finish(),
+            fnv1a(&[8, 7, 6, 5, 4, 3, 2, 1])
+        );
+    }
+
+    #[test]
+    fn registry_key_separates_config_and_cell() {
+        let k = registry_key(1, 2);
+        assert_eq!(k, registry_key(1, 2));
+        assert_ne!(k, registry_key(2, 1));
+        assert_ne!(k, registry_key(1, 3));
+    }
+}

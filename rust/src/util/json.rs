@@ -1,0 +1,397 @@
+//! Minimal JSON for the result registry and the `lpgd serve` API. (The
+//! image is offline; `serde_json` is not vendored, so these ~300 lines
+//! replace it for the small, fully-known documents the registry log and
+//! the `/v1/*` endpoints exchange.)
+//!
+//! Two properties matter more here than generality:
+//!
+//! 1. **Deterministic rendering.** [`Json::render`] emits objects in
+//!    insertion order (an object is an ordered `Vec` of pairs, not a map)
+//!    and floats via Rust's shortest-roundtrip `{}` formatting — the same
+//!    convention the sweep journal uses — so identical values render to
+//!    identical bytes. The serve tier's bit-identical-response guarantee
+//!    rests on this.
+//! 2. **Lossless floats.** The parser accepts `NaN`, `inf` and `-inf`
+//!    (the spellings `{}` produces for non-finite `f64`), matching the
+//!    journal's private-format precedent: registry records round-trip
+//!    every value a run can produce, including diverged series.
+use std::fmt::Write as _;
+
+/// A parsed JSON value. Objects preserve insertion order so rendering is
+/// deterministic (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any number, including the non-finite spellings `NaN`/`inf`/`-inf`.
+    Num(f64),
+    /// A string (escapes resolved).
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object as an *ordered* list of `(key, value)` pairs.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a JSON document, requiring it to span the whole input.
+    /// Errors carry a byte offset and a description.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing garbage at byte {pos}"));
+        }
+        Ok(v)
+    }
+
+    /// Look up a key in an object; `None` for missing keys or non-objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The string payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The numeric payload, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// The numeric payload as a non-negative integer, if it is one exactly.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v <= u64::MAX as f64 => {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// [`Json::as_u64`] narrowed to `usize`.
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    /// The boolean payload, if this is a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The element list, if this is an array.
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Render to a compact, deterministic JSON string (see module docs for
+    /// the byte-stability contract).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        render_into(self, &mut out);
+        out
+    }
+}
+
+/// Escape a string into a JSON string literal (quotes included).
+pub fn escape_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn render_into(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        // `{}` is Rust's shortest round-trip form: `Json::parse(render(v))`
+        // recovers the identical bits (NaN/inf spellings included — the
+        // journal's precedent for a private, lossless float format).
+        Json::Num(n) => {
+            let _ = write!(out, "{n}");
+        }
+        Json::Str(s) => out.push_str(&escape_str(s)),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                render_into(item, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(pairs) => {
+            out.push('{');
+            for (i, (k, val)) in pairs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&escape_str(k));
+                out.push(':');
+                render_into(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else {
+        return Err(format!("unexpected end of input at byte {pos}", pos = *pos));
+    };
+    match c {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => parse_keyword(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_keyword(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_keyword(b, pos, "null", Json::Null),
+        _ => parse_number(b, pos),
+    }
+}
+
+fn parse_keyword(b: &[u8], pos: &mut usize, word: &str, v: Json) -> Result<Json, String> {
+    if b[*pos..].starts_with(word.as_bytes()) {
+        *pos += word.len();
+        Ok(v)
+    } else {
+        Err(format!("bad keyword at byte {pos} (expected '{word}')", pos = *pos))
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    // Token = everything a number (or the non-finite spellings `NaN`,
+    // `inf`, `-inf`) can contain; `f64::from_str` does the real validation.
+    while *pos < b.len()
+        && matches!(b[*pos],
+            b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E' | b'a' | b'f' | b'i' | b'n' | b'N')
+    {
+        *pos += 1;
+    }
+    let token = std::str::from_utf8(&b[start..*pos]).map_err(|_| "non-UTF8 number".to_string())?;
+    token
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("bad number '{token}' at byte {start}"))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        let Some(&c) = b.get(*pos) else {
+            return Err("unterminated string".to_string());
+        };
+        *pos += 1;
+        match c {
+            b'"' => return Ok(out),
+            b'\\' => {
+                let Some(&e) = b.get(*pos) else {
+                    return Err("unterminated escape".to_string());
+                };
+                *pos += 1;
+                match e {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        let hex = b
+                            .get(*pos..*pos + 4)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .ok_or("truncated \\u escape")?;
+                        *pos += 4;
+                        let code =
+                            u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape digits")?;
+                        // Surrogates and other invalid scalars degrade to
+                        // U+FFFD; the registry never writes them.
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    _ => return Err(format!("bad escape '\\{}'", e as char)),
+                }
+            }
+            c if c < 0x80 => out.push(c as char),
+            _ => {
+                // Multi-byte UTF-8: find the full scalar at pos-1.
+                let rest = std::str::from_utf8(&b[*pos - 1..])
+                    .map_err(|_| "non-UTF8 string".to_string())?;
+                let ch = rest.chars().next().unwrap();
+                out.push(ch);
+                *pos += ch.len_utf8() - 1;
+            }
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    *pos += 1; // consume '['
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => return Err(format!("expected ',' or ']' at byte {pos}", pos = *pos)),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    *pos += 1; // consume '{'
+    let mut pairs = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(pairs));
+    }
+    loop {
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b'"') {
+            return Err(format!("expected object key at byte {pos}", pos = *pos));
+        }
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b':') {
+            return Err(format!("expected ':' at byte {pos}", pos = *pos));
+        }
+        *pos += 1;
+        pairs.push((key, parse_value(b, pos)?));
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(pairs));
+            }
+            _ => return Err(format!("expected ',' or '}}' at byte {pos}", pos = *pos)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_usual_shapes() {
+        let v = Json::parse(r#"{"a": 1, "b": [true, null, "x\ny"], "c": {"d": -2.5e3}}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_u64(), Some(1));
+        let b = v.get("b").unwrap().as_array().unwrap();
+        assert_eq!(b[0].as_bool(), Some(true));
+        assert_eq!(b[1], Json::Null);
+        assert_eq!(b[2].as_str(), Some("x\ny"));
+        assert_eq!(v.get("c").unwrap().get("d").unwrap().as_f64(), Some(-2500.0));
+    }
+
+    #[test]
+    fn rejects_malformed_documents_with_positions() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+        assert!(Json::parse("123 456").unwrap_err().contains("trailing"));
+        assert!(Json::parse("").is_err());
+    }
+
+    /// The byte-stability contract: render → parse → render is a fixed
+    /// point, and floats round-trip bit-exactly (including non-finite,
+    /// which the journal precedent spells NaN / inf / -inf).
+    #[test]
+    fn render_parse_roundtrip_is_bit_exact() {
+        let v = Json::Obj(vec![
+            ("series".to_string(), Json::Arr(vec![
+                Json::Num(0.1 + 0.2), // classic non-representable sum
+                Json::Num(f64::INFINITY),
+                Json::Num(f64::NEG_INFINITY),
+                Json::Num(1e-308),
+            ])),
+            ("label".to_string(), Json::Str("signed:0.25 \"q\"".to_string())),
+        ]);
+        let text = v.render();
+        let re = Json::parse(&text).unwrap();
+        assert_eq!(re.render(), text);
+        let series = re.get("series").unwrap().as_array().unwrap();
+        assert_eq!(series[0].as_f64().unwrap().to_bits(), (0.1f64 + 0.2).to_bits());
+        assert!(series[1].as_f64().unwrap().is_infinite());
+    }
+
+    #[test]
+    fn nan_round_trips_through_the_private_spelling() {
+        let text = Json::Arr(vec![Json::Num(f64::NAN)]).render();
+        assert_eq!(text, "[NaN]");
+        let re = Json::parse(&text).unwrap();
+        assert!(re.as_array().unwrap()[0].as_f64().unwrap().is_nan());
+    }
+
+    #[test]
+    fn object_order_is_preserved_not_sorted() {
+        let text = r#"{"z": 1, "a": 2}"#;
+        assert_eq!(Json::parse(text).unwrap().render(), r#"{"z":1,"a":2}"#);
+    }
+
+    #[test]
+    fn unicode_escapes_and_multibyte_text_parse() {
+        let v = Json::parse(r#""café µ""#).unwrap();
+        assert_eq!(v.as_str(), Some("café µ"));
+        assert_eq!(Json::parse(&v.render()).unwrap(), v);
+        // \uXXXX escapes resolve to the scalar value.
+        assert_eq!(Json::parse("\"\\u00e9\\u0041\"").unwrap().as_str(), Some("éA"));
+    }
+}

@@ -1,10 +1,15 @@
-//! In-repo plumbing: CLI argument parsing, CSV/markdown table writing and
-//! summary statistics. (The image is offline; `clap`/`serde`/`csv` are not
-//! vendored, so these ~200 lines replace them.)
+//! In-repo plumbing: CLI argument parsing, CSV/markdown table writing,
+//! summary statistics, FNV-1a content hashing and minimal JSON. (The image
+//! is offline; `clap`/`serde`/`csv`/`serde_json` are not vendored, so
+//! these modules replace them.)
 
 pub mod cli;
+pub mod hash;
+pub mod json;
 pub mod stats;
 pub mod table;
 
 pub use cli::Args;
+pub use hash::Fnv1a;
+pub use json::Json;
 pub use table::Table;

@@ -1,0 +1,263 @@
+//! Process-level coverage of `lpgd serve` (satellite of the experiment
+//! service issue): the built binary on an ephemeral port, exercised over
+//! real sockets with a hand-rolled HTTP/1.1 client.
+//!
+//! What only a process test can prove:
+//!
+//! * the `--addr 127.0.0.1:0` + "listening on http://" startup contract
+//!   that scripts and CI parse for the ephemeral port;
+//! * bit-identity of served bodies across requests *through the socket
+//!   layer* (Content-Length framing and all);
+//! * the `/v1/stats` hot-path proof — exactly one miss per unique cell,
+//!   every repeat a hit — with the counters observed externally;
+//! * a registry warmed by `lpgd reproduce --registry` serving the same
+//!   bytes hot, with zero misses.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+/// A running `lpgd serve` child bound to an ephemeral port. Killed on drop
+/// so a failing assertion never leaks a daemon.
+struct ServeProc {
+    child: Child,
+    addr: String,
+}
+
+impl ServeProc {
+    /// Spawn `lpgd serve --registry <dir> --addr 127.0.0.1:0` and parse
+    /// the bound address from the startup line.
+    fn start(registry: &Path, extra: &[&str]) -> ServeProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_lpgd"))
+            .arg("serve")
+            .args(["--registry", &registry.to_string_lossy()])
+            .args(["--addr", "127.0.0.1:0", "--threads", "3"])
+            .args(extra)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn the lpgd binary");
+        let mut lines = BufReader::new(child.stdout.take().expect("piped stdout")).lines();
+        let addr = loop {
+            let line = lines
+                .next()
+                .expect("server exited before announcing its address")
+                .expect("read server stdout");
+            // The startup contract scripts rely on: the bound (possibly
+            // ephemeral) address on a "listening on http://" line.
+            if let Some(rest) = line.strip_prefix("listening on http://") {
+                break rest.trim().to_string();
+            }
+        };
+        ServeProc { child, addr }
+    }
+
+    /// One HTTP exchange: connect, send, read to EOF (the server always
+    /// answers `Connection: close`). Returns `(status, body)`.
+    fn request(&self, method: &str, path: &str, body: &str) -> (u16, Vec<u8>) {
+        let mut stream = TcpStream::connect(&self.addr).expect("connect to lpgd serve");
+        stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Length: {}\r\n\r\n",
+            self.addr,
+            body.len()
+        )
+        .unwrap();
+        stream.write_all(body.as_bytes()).unwrap();
+        let mut raw = Vec::new();
+        stream.read_to_end(&mut raw).expect("read the response");
+        let head_end = raw
+            .windows(4)
+            .position(|w| w == b"\r\n\r\n")
+            .expect("response has a header/body separator");
+        let head = String::from_utf8_lossy(&raw[..head_end]).into_owned();
+        let status: u16 = head
+            .strip_prefix("HTTP/1.1 ")
+            .and_then(|r| r.split_whitespace().next())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("malformed status line: {head}"));
+        (status, raw[head_end + 4..].to_vec())
+    }
+
+    fn get(&self, path: &str) -> (u16, Vec<u8>) {
+        self.request("GET", path, "")
+    }
+
+    fn post_run(&self, spec: &str) -> (u16, Vec<u8>) {
+        self.request("POST", "/v1/run", spec)
+    }
+}
+
+impl Drop for ServeProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Crude extraction of an integer field from a flat JSON body — enough for
+/// `/v1/stats`, and it keeps the test free of a JSON dependency.
+fn json_u64(body: &[u8], field: &str) -> u64 {
+    let text = std::str::from_utf8(body).expect("JSON body is UTF-8");
+    let pat = format!("\"{field}\":");
+    let at = text.find(&pat).unwrap_or_else(|| panic!("no '{field}' in {text}"));
+    let digits: String =
+        text[at + pat.len()..].chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().unwrap_or_else(|_| panic!("no integer after '{field}' in {text}"))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lpgd_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// One cell (reps 1) so the miss arithmetic below is exact.
+const SPEC_A: &str = r#"{"problem":{"kind":"quadratic1","dim":8},"grid":"bfloat16",
+    "stepsize":0.05,"steps":10,"seed":3,"reps":1}"#;
+/// Same run, different seed: a second, distinct cell.
+const SPEC_B: &str = r#"{"problem":{"kind":"quadratic1","dim":8},"grid":"bfloat16",
+    "stepsize":0.05,"steps":10,"seed":4,"reps":1}"#;
+
+/// The tentpole acceptance, observed through the socket: identical specs
+/// return byte-identical bodies whether computed or registry-served, a
+/// concurrent duplicate coalesces onto one computation, and `/v1/stats`
+/// proves the hot path never recomputes — one miss per unique cell, ever.
+#[test]
+fn served_bodies_are_bit_identical_and_stats_prove_the_hot_path() {
+    let dir = temp_dir("identity");
+    let server = ServeProc::start(&dir, &["--jobs", "2"]);
+
+    // Cold then warm: the second answer must be the first, byte for byte.
+    let (s1, cold) = server.post_run(SPEC_A);
+    assert_eq!(s1, 200, "{}", String::from_utf8_lossy(&cold));
+    let (s2, warm) = server.post_run(SPEC_A);
+    assert_eq!(s2, 200);
+    assert_eq!(cold, warm, "registry-served body differs from the computed one");
+
+    // A concurrent identical pair on a fresh cell: both answers 200 and
+    // byte-identical, but only one computation behind them.
+    let (ra, rb) = std::thread::scope(|scope| {
+        let a = scope.spawn(|| server.post_run(SPEC_B));
+        let b = scope.spawn(|| server.post_run(SPEC_B));
+        (a.join().unwrap(), b.join().unwrap())
+    });
+    assert_eq!(ra.0, 200, "{}", String::from_utf8_lossy(&ra.1));
+    assert_eq!(rb.0, 200);
+    assert_eq!(ra.1, rb.1, "concurrent duplicates must serve the same bytes");
+
+    // The counters tell the whole story: two unique cells → exactly two
+    // misses; the sequential repeat and the coalesced duplicate → hits.
+    let (ss, stats) = server.get("/v1/stats");
+    assert_eq!(ss, 200);
+    assert_eq!(json_u64(&stats, "misses"), 2, "{}", String::from_utf8_lossy(&stats));
+    assert_eq!(json_u64(&stats, "hits"), 2, "{}", String::from_utf8_lossy(&stats));
+    assert_eq!(json_u64(&stats, "in_flight"), 0);
+    assert_eq!(json_u64(&stats, "cached_cells"), 2);
+
+    // The response embeds each cell's registry key; the key dereferences
+    // through GET /v1/result to the same record.
+    let body = String::from_utf8_lossy(&cold).into_owned();
+    let at = body.find("\"key\":\"").expect("response carries the registry key") + 7;
+    let key = &body[at..at + 16];
+    let (sr, rec) = server.get(&format!("/v1/result/{key}"));
+    assert_eq!(sr, 200);
+    let rec = String::from_utf8_lossy(&rec);
+    assert!(rec.contains(&format!("\"key\":\"{key}\"")), "{rec}");
+    assert!(rec.contains("\"series\""), "{rec}");
+
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Error paths through the socket: malformed specs get descriptive `400`s
+/// (the parse error verbatim), unknown routes `404`, wrong methods `405`.
+#[test]
+fn malformed_requests_get_descriptive_errors() {
+    let dir = temp_dir("errors");
+    let server = ServeProc::start(&dir, &[]);
+
+    let (s, b) = server.post_run("this is not json");
+    assert_eq!(s, 400);
+    assert!(
+        String::from_utf8_lossy(&b).contains("not valid JSON"),
+        "{}",
+        String::from_utf8_lossy(&b)
+    );
+
+    let (s, b) = server.post_run(
+        r#"{"problem":{"kind":"quadratic1","dim":8},"grid":"binary7",
+            "stepsize":0.05,"steps":10}"#,
+    );
+    assert_eq!(s, 400);
+    let b = String::from_utf8_lossy(&b);
+    assert!(b.contains("binary7") && b.contains("bfloat16"), "names the fix: {b}");
+
+    let (s, b) = server.post_run(r#"{"problem":{"kind":"quadratic1","dim":8},
+        "grid":"binary8","stepsize":0.05,"steps":10,"step_size":1}"#);
+    assert_eq!(s, 400);
+    assert!(String::from_utf8_lossy(&b).contains("unknown spec field 'step_size'"));
+
+    let (s, _) = server.get("/v1/nope");
+    assert_eq!(s, 404);
+    let (s, _) = server.request("DELETE", "/v1/run", "");
+    assert_eq!(s, 405);
+    let (s, b) = server.get("/v1/result/xyz");
+    assert_eq!(s, 400);
+    assert!(String::from_utf8_lossy(&b).contains("16-hex-digit"));
+
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The CLI/service round trip: a registry warmed offline by
+/// `lpgd reproduce --registry` serves the experiment hot — the `text/csv`
+/// body is byte-identical to the CSV the CLI wrote, and `/v1/stats`
+/// records zero misses (nothing recomputed).
+#[test]
+fn registry_warmed_by_cli_serves_hot_and_bit_identical() {
+    let base = temp_dir("warm");
+    let registry = base.join("registry");
+    let out = base.join("results");
+    std::fs::create_dir_all(&base).unwrap();
+
+    let cli = Command::new(env!("CARGO_BIN_EXE_lpgd"))
+        .args(["reproduce", "fig3a", "--quick", "--seeds", "2"])
+        .args(["--quad-n", "16", "--quad-steps", "30", "--jobs", "1"])
+        .args(["--registry", &registry.to_string_lossy()])
+        .args(["--out-dir", &out.to_string_lossy()])
+        .output()
+        .expect("spawn the lpgd binary");
+    assert!(
+        cli.status.success(),
+        "warm-up reproduce failed:\n{}",
+        String::from_utf8_lossy(&cli.stderr)
+    );
+    let offline = std::fs::read(out.join("fig3a.csv")).expect("reproduce wrote fig3a.csv");
+
+    let server = ServeProc::start(&registry, &["--jobs", "1"]);
+    let spec = r#"{"experiment":"fig3a","seeds":2,"quad_n":16,"quad_steps":30,
+        "format":"csv"}"#;
+    let (s, served) = server.post_run(spec);
+    assert_eq!(s, 200, "{}", String::from_utf8_lossy(&served));
+    assert_eq!(
+        served, offline,
+        "served CSV differs from the offline `reproduce` output"
+    );
+
+    let (ss, stats) = server.get("/v1/stats");
+    assert_eq!(ss, 200);
+    assert_eq!(
+        json_u64(&stats, "misses"),
+        0,
+        "a warmed registry must serve without recomputation: {}",
+        String::from_utf8_lossy(&stats)
+    );
+    assert!(json_u64(&stats, "hits") > 0, "{}", String::from_utf8_lossy(&stats));
+
+    drop(server);
+    let _ = std::fs::remove_dir_all(&base);
+}

@@ -12,6 +12,9 @@
 #    ran it permissively (bootstrapping any missing goldens), so this
 #    stage exits non-zero if goldens are still missing or drifted —
 #    verify.sh no longer warn-skips an empty goldens/ (docs/testing.md).
+# 2d. the experiment-service acceptance tests: the result-registry and
+#    serve unit suites plus the process-level test over the built binary
+#    and real sockets (docs/service.md).
 # 3. cargo doc with the crate's #![warn(missing_docs)] escalated to an
 #    error, so any undocumented public API — notably the new scheduler
 #    and kernel surfaces — fails loudly instead of rotting silently.
@@ -40,6 +43,14 @@ echo "== fault-injection + crash-resume acceptance tests =="
 cargo test -q --test integration fault_tolerance
 cargo test -q --lib journal
 cargo test -q --lib health
+
+echo "== experiment service + result registry acceptance tests =="
+# The serve subsystem's own gate (docs/service.md): registry durability
+# and bit-identity at the unit layer, then the process-level suite over
+# the built binary and real sockets.
+cargo test -q --lib registry
+cargo test -q --lib serve
+cargo test -q --test serve
 
 echo "== golden-figure replication (LPGD_GOLDEN_REQUIRE=1) =="
 LPGD_GOLDEN_REQUIRE=1 cargo test -q --test golden_diff
