@@ -8,13 +8,13 @@ include!("harness.rs");
 
 use lpgd::data::synth;
 use lpgd::fp::{backend_label, set_backend, FixedPoint, FpFormat, LpCtx, Rng, Scheme, SimdChoice};
-use lpgd::gd::engine::{GdConfig, GdEngine, GradModel, SchemePolicy};
+use lpgd::gd::engine::{GdConfig, GdEngine, GradModel, PolicyMap};
 use lpgd::gd::run_lane_batch;
 use lpgd::problems::{Mlr, Problem, Quadratic, TwoLayerNn};
 
 fn main() {
     warn_if_hand_projected("gd_step");
-    let schemes = SchemePolicy::uniform(Scheme::sr());
+    let schemes = PolicyMap::uniform(Scheme::sr());
     let mut results: Vec<BenchResult> = Vec::new();
     let mut speedups: Vec<(String, f64)> = Vec::new();
 

@@ -1,0 +1,92 @@
+// Bench: fused optimizer-update cost per step — the optimizer zoo (plain
+// GD vs momentum vs Nesterov vs Adam) on the same rounded quadratic, the
+// per-tensor policy-binding overhead (master weights on binary64, fp32
+// momentum buffer), and the LR-schedule overhead (constant vs inverse-time
+// decay). The plain-GD row doubles as the refactor's regression sentinel:
+// the trait-driven engine must price one GD step like the pre-trait one
+// (compare against BENCH_gd_step.json's "gd_step quad diag n=1000").
+// Emits BENCH_opt_step.json (schema v1; refresh with scripts/bench.sh).
+
+include!("harness.rs");
+
+use lpgd::fp::{FpFormat, Scheme};
+use lpgd::gd::engine::{GdConfig, GdEngine, PolicyMap, TensorPolicy};
+use lpgd::gd::optimizer::{LrSchedule, OptimizerSpec};
+use lpgd::problems::Quadratic;
+
+fn main() {
+    warn_if_hand_projected("opt_step");
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    let (p, x0, t) = Quadratic::setting1(1000);
+    let schemes = PolicyMap::uniform(Scheme::sr());
+
+    println!("-- optimizer zoo: one rounded step, quad diag n=1000, bfloat16 SR --");
+    let mut gd_row: Option<BenchResult> = None;
+    for (name, opt) in [
+        ("gd", OptimizerSpec::Gd),
+        ("momentum", OptimizerSpec::Momentum { beta: 0.9 }),
+        ("nesterov", OptimizerSpec::Nesterov { beta: 0.9 }),
+        ("adam", OptimizerSpec::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }),
+    ] {
+        let mut cfg = GdConfig::new(FpFormat::BFLOAT16, schemes, t, 1);
+        cfg.seed = 0;
+        cfg.optimizer = opt;
+        let mut e = GdEngine::new(cfg, &p, &x0);
+        let r = bench(&format!("opt_step {name} quad diag n=1000 bf16"), 1000, || {
+            e.step();
+        });
+        match &gd_row {
+            None => gd_row = Some(r),
+            Some(gd) => {
+                // Cost of the stateful optimizer relative to plain GD
+                // (ratio > 1 = that much slower per step).
+                let rel = r.min_ns / gd.min_ns;
+                println!("relative cost: {name} = {rel:.2}x of plain gd");
+                speedups.push((format!("opt_step_{name}_cost_vs_gd"), rel));
+                results.push(r);
+            }
+        }
+    }
+    results.insert(0, gd_row.expect("gd row benched first"));
+
+    println!("-- policy bindings: momentum with master weights / fp32 m --");
+    for (name, pol) in [
+        ("unbound", schemes),
+        (
+            "w=rn@binary64",
+            PolicyMap::uniform(Scheme::sr())
+                .with_weights(TensorPolicy::new(Scheme::rn()).on(FpFormat::BINARY64)),
+        ),
+        (
+            "m=rn@binary32",
+            PolicyMap::uniform(Scheme::sr())
+                .with_m(TensorPolicy::new(Scheme::rn()).on(FpFormat::BINARY32)),
+        ),
+    ] {
+        let mut cfg = GdConfig::new(FpFormat::BFLOAT16, pol, t, 1);
+        cfg.seed = 0;
+        cfg.optimizer = OptimizerSpec::Momentum { beta: 0.9 };
+        let mut e = GdEngine::new(cfg, &p, &x0);
+        results.push(bench(&format!("opt_step momentum {name} n=1000 bf16"), 1000, || {
+            e.step();
+        }));
+    }
+
+    println!("-- LR schedules: constant vs inverse-time decay (momentum) --");
+    for (name, lr) in [
+        ("const", LrSchedule::Constant),
+        ("inv:0.01", LrSchedule::InvTime { rate: 0.01 }),
+    ] {
+        let mut cfg = GdConfig::new(FpFormat::BFLOAT16, schemes, t, 1);
+        cfg.seed = 0;
+        cfg.optimizer = OptimizerSpec::Momentum { beta: 0.9 };
+        cfg.lr = lr;
+        let mut e = GdEngine::new(cfg, &p, &x0);
+        results.push(bench(&format!("opt_step momentum lr={name} n=1000 bf16"), 1000, || {
+            e.step();
+        }));
+    }
+
+    write_bench_json("opt_step", &results, &speedups).expect("writing BENCH_opt_step.json");
+}

@@ -81,12 +81,7 @@ fn main() {
         // Rust-native equivalent: one full-batch gradient + rounded update.
         let p = Mlr::new(data, spec.classes);
         let x0 = vec![0.0; p.dim()];
-        let mut cfg = lpgd::gd::engine::GdConfig::new(
-            FpFormat::BINARY8,
-            lpgd::gd::engine::StepSchemes::uniform(Rounding::Sr),
-            0.5,
-            1,
-        );
+        let mut cfg = lpgd::gd::engine::GdConfig::new(FpFormat::BINARY8, Rounding::Sr, 0.5, 1);
         cfg.seed = 0;
         let mut e = lpgd::gd::engine::GdEngine::new(cfg, &p, &x0);
         bench("mlr_step via Rust engine", (n * spec.features * spec.classes) as u64, || {

@@ -10,7 +10,7 @@ include!("harness.rs");
 
 use lpgd::coordinator::scheduler::{available_jobs, cell_stream, run_indexed};
 use lpgd::fp::{FpFormat, Rng, Scheme};
-use lpgd::gd::engine::{GdConfig, GdEngine, SchemePolicy};
+use lpgd::gd::engine::{GdConfig, GdEngine, PolicyMap};
 use lpgd::problems::Quadratic;
 
 fn main() {
@@ -33,7 +33,7 @@ fn main() {
         run_indexed(jobs, cells.len(), |k| {
             let (m, r) = cells[k];
             let mode = modes[m];
-            let schemes = SchemePolicy { grad: Scheme::sr(), mul: Scheme::sr(), sub: mode };
+            let schemes = PolicyMap::sites(Scheme::sr(), Scheme::sr(), mode);
             let mut cfg = GdConfig::new(FpFormat::BFLOAT16, schemes, 1.0 / n as f64, steps);
             cfg.rng = Some(Rng::new(root_seed).split(cell_stream("sweep", &mode.label(), r)));
             let mut e = GdEngine::new(cfg, &p, &x0);

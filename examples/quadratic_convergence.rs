@@ -3,8 +3,8 @@
 //!
 //! Run: `cargo run --release --example quadratic_convergence -- [n] [steps]`
 
-use lpgd::fp::{FpFormat, Rounding};
-use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::fp::{FpFormat, Scheme};
+use lpgd::gd::engine::{GdConfig, GdEngine, PolicyMap};
 use lpgd::gd::theory;
 use lpgd::problems::{Problem, Quadratic};
 use lpgd::util::table::sparkline;
@@ -17,7 +17,7 @@ fn main() {
     let lip = p.lipschitz().unwrap();
     println!("Setting II: dense A in R^{n}x{n}, spectrum 1..{n}, t = 1/L = {t}");
 
-    let run = |fmt: FpFormat, schemes: StepSchemes, seed: u64| {
+    let run = |fmt: FpFormat, schemes: PolicyMap, seed: u64| {
         let mut cfg = GdConfig::new(fmt, schemes, t, steps);
         cfg.seed = seed;
         let mut e = GdEngine::new(cfg, &p, &x0);
@@ -25,15 +25,11 @@ fn main() {
         (tr, e.x)
     };
 
-    let (base, _) = run(
-        FpFormat::BINARY32,
-        StepSchemes::uniform(Rounding::RoundNearestEven),
-        0,
-    );
-    let (sr, x_sr) = run(FpFormat::BFLOAT16, StepSchemes::uniform(Rounding::Sr), 1);
+    let (base, _) = run(FpFormat::BINARY32, PolicyMap::uniform(Scheme::rn()), 0);
+    let (sr, x_sr) = run(FpFormat::BFLOAT16, PolicyMap::uniform(Scheme::sr()), 1);
     let (sg, x_sg) = run(
         FpFormat::BFLOAT16,
-        StepSchemes { grad: Rounding::Sr, mul: Rounding::Sr, sub: Rounding::SignedSrEps(0.4) },
+        PolicyMap::sites(Scheme::sr(), Scheme::sr(), Scheme::signed_sr_eps(0.4)),
         1,
     );
 

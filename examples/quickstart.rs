@@ -6,8 +6,8 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use lpgd::fp::{expected_round, FpFormat, Rng, Rounding};
-use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::fp::{expected_round, FpFormat, Rng, Rounding, Scheme};
+use lpgd::gd::engine::{GdConfig, GdEngine, PolicyMap};
 use lpgd::problems::Quadratic;
 
 fn main() {
@@ -33,11 +33,11 @@ fn main() {
     let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
     println!("\nGD on f(x)=(x-1024)^2 in binary8, 120 steps from x0=1:");
     for (name, schemes) in [
-        ("RN", StepSchemes::uniform(Rounding::RoundNearestEven)),
-        ("SR", StepSchemes::uniform(Rounding::Sr)),
+        ("RN", PolicyMap::uniform(Scheme::rn())),
+        ("SR", PolicyMap::uniform(Scheme::sr())),
         (
             "SR + signed-SR_eps(0.25) for (8c)",
-            StepSchemes { grad: Rounding::Sr, mul: Rounding::Sr, sub: Rounding::SignedSrEps(0.25) },
+            PolicyMap::sites(Scheme::sr(), Scheme::sr(), Scheme::signed_sr_eps(0.25)),
         ),
     ] {
         let mut cfg = GdConfig::new(fmt, schemes, 0.05, 120);

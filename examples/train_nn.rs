@@ -5,8 +5,8 @@
 //! Run: `cargo run --release --example train_nn -- [epochs]`
 
 use lpgd::data::load_or_synth;
-use lpgd::fp::{FpFormat, Rounding};
-use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::fp::{FpFormat, Scheme};
+use lpgd::gd::engine::{GdConfig, GdEngine, PolicyMap};
 use lpgd::problems::TwoLayerNn;
 use lpgd::util::stats::first_at_or_below;
 use lpgd::util::table::sparkline;
@@ -22,7 +22,7 @@ fn main() {
     let x0 = nn.init_params(0);
     let t = 0.09375; // paper §5.3
 
-    let curve = |fmt: FpFormat, schemes: StepSchemes| -> Vec<f64> {
+    let curve = |fmt: FpFormat, schemes: PolicyMap| -> Vec<f64> {
         let mut cfg = GdConfig::new(fmt, schemes, t, epochs);
         cfg.seed = 3;
         let mut e = GdEngine::new(cfg, &nn, &x0);
@@ -30,13 +30,13 @@ fn main() {
         e.run(Some(&metric)).metric_series()
     };
 
-    let sr = Rounding::Sr;
+    let sr = Scheme::sr();
     let runs = [
-        ("binary32 (baseline)", FpFormat::BINARY32, StepSchemes::uniform(Rounding::RoundNearestEven)),
-        ("binary8 RN", FpFormat::BINARY8, StepSchemes::uniform(Rounding::RoundNearestEven)),
-        ("binary8 SR", FpFormat::BINARY8, StepSchemes::uniform(sr)),
+        ("binary32 (baseline)", FpFormat::BINARY32, PolicyMap::uniform(Scheme::rn())),
+        ("binary8 RN", FpFormat::BINARY8, PolicyMap::uniform(Scheme::rn())),
+        ("binary8 SR", FpFormat::BINARY8, PolicyMap::uniform(sr)),
         ("binary8 SR|signed(0.1)", FpFormat::BINARY8,
-         StepSchemes { grad: sr, mul: sr, sub: Rounding::SignedSrEps(0.1) }),
+         PolicyMap::sites(sr, sr, Scheme::signed_sr_eps(0.1))),
     ];
     let mut curves = Vec::new();
     for (name, fmt, sch) in runs {

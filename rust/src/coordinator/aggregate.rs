@@ -284,14 +284,13 @@ mod tests {
     fn lane_sweep_is_width_invariant_and_resumes_across_widths() {
         use crate::coordinator::journal::Journal;
         use crate::fp::{FpFormat, Rng, Rounding};
-        use crate::gd::engine::{GdConfig, GdEngine, StepSchemes};
+        use crate::gd::engine::{GdConfig, GdEngine};
         use crate::gd::lanes::run_lane_batch;
         use crate::problems::Quadratic;
         use std::sync::atomic::{AtomicUsize, Ordering};
 
         let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
-        let cfg =
-            GdConfig::new(FpFormat::BINARY8, StepSchemes::uniform(Rounding::Sr), 0.05, 30);
+        let cfg = GdConfig::new(FpFormat::BINARY8, Rounding::Sr, 0.05, 30);
         let select = |t: &Trace| t.objective_series();
         let scalar_runner = |s: u64| {
             let mut c = cfg.clone();

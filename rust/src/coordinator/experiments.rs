@@ -19,7 +19,8 @@ use crate::coordinator::registry;
 use crate::coordinator::scheduler::run_indexed;
 use crate::data::{load_or_synth, Dataset};
 use crate::fp::{FixedPoint, FpFormat, Grid, RoundPlan, Scheme};
-use crate::gd::engine::{GdConfig, GdEngine, GradModel, SchemePolicy};
+use crate::gd::engine::{GdConfig, GdEngine, GradModel, PolicyMap, TensorPolicy};
+use crate::gd::optimizer::OptimizerSpec;
 use crate::gd::theory;
 use crate::gd::trace::Trace;
 use crate::problems::{Mlr, Problem, Quadratic, TwoLayerNn};
@@ -282,7 +283,7 @@ pub(crate) fn fig2() -> Table {
     let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
     let mut cfg = GdConfig::new(
         FpFormat::BINARY8,
-        SchemePolicy::uniform(Scheme::rn()),
+        PolicyMap::uniform(Scheme::rn()),
         0.05,
         40,
     );
@@ -356,7 +357,7 @@ pub(crate) fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
         crate::fp::linalg::exact::norm2(&d)
     };
 
-    let run = |fmt: FpFormat, schemes: SchemePolicy, seed: u64| -> Trace {
+    let run = |fmt: FpFormat, schemes: PolicyMap, seed: u64| -> Trace {
         let mut cfg = GdConfig::new(fmt, schemes, t_step, steps);
         cfg.seed = seed;
         cfg.escape = ctx.escape;
@@ -365,7 +366,7 @@ pub(crate) fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
     // Lane batch runner: the seed repetitions of one scheme family execute
     // as interleaved lanes over a shared data pass, each lane on the legacy
     // seed-keyed root — bit-identical to `run` per seed at every `--lanes`.
-    let run_batch = |fmt: FpFormat, schemes: SchemePolicy, seeds: &[u64]| -> Vec<Trace> {
+    let run_batch = |fmt: FpFormat, schemes: PolicyMap, seeds: &[u64]| -> Vec<Trace> {
         let mut cfg = GdConfig::new(fmt, schemes, t_step, steps);
         cfg.escape = ctx.escape;
         let roots: Vec<crate::fp::Rng> =
@@ -375,13 +376,13 @@ pub(crate) fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
 
     let id = if dense { "fig3b" } else { "fig3a" };
     // binary32 + RN baseline ("exact" reference), deterministic.
-    let base = run(FpFormat::BINARY32, SchemePolicy::uniform(Scheme::rn()), 0);
+    let base = run(FpFormat::BINARY32, PolicyMap::uniform(Scheme::rn()), 0);
     // bfloat16: (8a)+(8b) SR with (8c) ∈ {SR, signed-SRε(0.4)}; the seed
     // repetitions fan out across the worker pool through the fault-aware
     // journaled sweep (labels keep the two scheme families' cell identities
     // apart in the journal), `--lanes` at a time as lane batches.
     let faults = ctx.faults();
-    let sr_schemes = SchemePolicy::uniform(Scheme::sr());
+    let sr_schemes = PolicyMap::uniform(Scheme::sr());
     let (sr, sr_notes) = expectation_sweep_lanes(
         id,
         "bf16_SR",
@@ -392,7 +393,7 @@ pub(crate) fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
         &|t| t.objective_series(),
     );
     let sg_schemes =
-        SchemePolicy { grad: Scheme::sr(), mul: Scheme::sr(), sub: Scheme::signed_sr_eps(0.4) };
+        PolicyMap::sites(Scheme::sr(), Scheme::sr(), Scheme::signed_sr_eps(0.4));
     let (signed, sg_notes) = expectation_sweep_lanes(
         id,
         "bf16_signed_SReps0.4",
@@ -445,7 +446,7 @@ pub(crate) fn fig3(ctx: &ExpCtx, dense: bool) -> Table {
     // Paper's §5.1 closing metric for Setting II: relative error at k=4000.
     // One cell per seed; the ordered merge fixes the summation order so the
     // average is identical for every jobs count.
-    let rel_err = |schemes: SchemePolicy| -> f64 {
+    let rel_err = |schemes: PolicyMap| -> f64 {
         let errs = run_indexed(ctx.jobs, ctx.seeds, |s| {
             let mut cfg = GdConfig::new(FpFormat::BFLOAT16, schemes, t_step, steps);
             cfg.seed = s as u64;
@@ -491,7 +492,7 @@ fn mlr_setup(ctx: &ExpCtx) -> LearnSetup {
 
 /// How many expectation seeds a scheme combination needs: stochastic
 /// schemes average over `seeds`, fully deterministic ones run once.
-fn seeds_for(schemes: &SchemePolicy, seeds: usize) -> usize {
+fn seeds_for(schemes: &PolicyMap, seeds: usize) -> usize {
     if schemes.is_stochastic() {
         seeds
     } else {
@@ -584,7 +585,7 @@ fn curves_flat(
 fn mlr_cell(
     setup: &LearnSetup,
     grid: Grid,
-    schemes: SchemePolicy,
+    schemes: PolicyMap,
     gm: GradModel,
     t_step: f64,
     epochs: usize,
@@ -608,12 +609,12 @@ pub(crate) fn fig4a(ctx: &ExpCtx) -> Table {
     let t_step = 0.5;
     let b8: Grid = FpFormat::BINARY8.into();
     let sr = Scheme::sr();
-    let cfgs: Vec<(String, Grid, SchemePolicy)> = vec![
-        ("binary32".into(), FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn())),
-        ("RN".into(), b8, SchemePolicy { grad: Scheme::rn(), mul: Scheme::rn(), sub: sr }),
-        ("SR".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }),
-        ("SR_eps(0.2)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.2), mul: Scheme::sr_eps(0.2), sub: sr }),
-        ("SR_eps(0.4)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.4), mul: Scheme::sr_eps(0.4), sub: sr }),
+    let cfgs: Vec<(String, Grid, PolicyMap)> = vec![
+        ("binary32".into(), FpFormat::BINARY32.into(), PolicyMap::uniform(Scheme::rn())),
+        ("RN".into(), b8, PolicyMap::sites(Scheme::rn(), Scheme::rn(), sr)),
+        ("SR".into(), b8, PolicyMap::sites(sr, sr, sr)),
+        ("SR_eps(0.2)".into(), b8, PolicyMap::sites(Scheme::sr_eps(0.2), Scheme::sr_eps(0.2), sr)),
+        ("SR_eps(0.4)".into(), b8, PolicyMap::sites(Scheme::sr_eps(0.4), Scheme::sr_eps(0.4), sr)),
     ];
     learning_table(
         "fig4a",
@@ -632,12 +633,12 @@ pub(crate) fn fig4b(ctx: &ExpCtx) -> Table {
     let t_step = 0.5;
     let b8: Grid = FpFormat::BINARY8.into();
     let sr = Scheme::sr();
-    let cfgs: Vec<(String, Grid, SchemePolicy)> = vec![
-        ("binary32".into(), FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn())),
-        ("SR|SR".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }),
-        ("SR_eps(0.1)|signed(0.1)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.1), mul: Scheme::sr_eps(0.1), sub: Scheme::signed_sr_eps(0.1) }),
-        ("SR|signed(0.1)".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: Scheme::signed_sr_eps(0.1) }),
-        ("SR|signed(0.2)".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: Scheme::signed_sr_eps(0.2) }),
+    let cfgs: Vec<(String, Grid, PolicyMap)> = vec![
+        ("binary32".into(), FpFormat::BINARY32.into(), PolicyMap::uniform(Scheme::rn())),
+        ("SR|SR".into(), b8, PolicyMap::sites(sr, sr, sr)),
+        ("SR_eps(0.1)|signed(0.1)".into(), b8, PolicyMap::sites(Scheme::sr_eps(0.1), Scheme::sr_eps(0.1), Scheme::signed_sr_eps(0.1))),
+        ("SR|signed(0.1)".into(), b8, PolicyMap::sites(sr, sr, Scheme::signed_sr_eps(0.1))),
+        ("SR|signed(0.2)".into(), b8, PolicyMap::sites(sr, sr, Scheme::signed_sr_eps(0.2))),
     ];
     let mut t = learning_table(
         "fig4b",
@@ -664,11 +665,11 @@ pub(crate) fn fig4a_acc(ctx: &ExpCtx) -> Table {
     let b8: Grid = FpFormat::BINARY8.into();
     let sr = Scheme::sr();
     let epochs = ctx.mlr_epochs.min(60); // the separation is clear early
-    let cfgs: Vec<(String, Grid, SchemePolicy, GradModel)> = vec![
-        ("binary32".into(), FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn()), GradModel::Exact),
-        ("RN_acc".into(), b8, SchemePolicy { grad: Scheme::rn(), mul: Scheme::rn(), sub: sr }, GradModel::PerOp),
-        ("SR_acc".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }, GradModel::PerOp),
-        ("RN_chop".into(), b8, SchemePolicy { grad: Scheme::rn(), mul: Scheme::rn(), sub: sr }, GradModel::RoundAfterOp),
+    let cfgs: Vec<(String, Grid, PolicyMap, GradModel)> = vec![
+        ("binary32".into(), FpFormat::BINARY32.into(), PolicyMap::uniform(Scheme::rn()), GradModel::Exact),
+        ("RN_acc".into(), b8, PolicyMap::sites(Scheme::rn(), Scheme::rn(), sr), GradModel::PerOp),
+        ("SR_acc".into(), b8, PolicyMap::sites(sr, sr, sr), GradModel::PerOp),
+        ("RN_chop".into(), b8, PolicyMap::sites(Scheme::rn(), Scheme::rn(), sr), GradModel::RoundAfterOp),
     ];
     let mut cols = vec!["epoch".to_string()];
     cols.extend(cfgs.iter().map(|(n, _, _, _)| n.clone()));
@@ -719,13 +720,9 @@ pub(crate) fn fig5(ctx: &ExpCtx, biased: bool) -> Table {
     let setup = mlr_setup(ctx);
     let b8: Grid = FpFormat::BINARY8.into();
     let schemes = if biased {
-        SchemePolicy {
-            grad: Scheme::sr_eps(0.1),
-            mul: Scheme::signed_sr_eps(0.1),
-            sub: Scheme::signed_sr_eps(0.1),
-        }
+        PolicyMap::sites(Scheme::sr_eps(0.1), Scheme::signed_sr_eps(0.1), Scheme::signed_sr_eps(0.1))
     } else {
-        SchemePolicy::uniform(Scheme::sr())
+        PolicyMap::uniform(Scheme::sr())
     };
     let id = if biased { "fig5b" } else { "fig5a" };
     let title = if biased {
@@ -745,8 +742,8 @@ pub(crate) fn fig5(ctx: &ExpCtx, biased: bool) -> Table {
     // One flattened batch: the binary32 baseline (t = 1.25) followed by the
     // (stepsize × seed) grid — so the deterministic baseline doesn't hold a
     // core alone while the rest of the pool idles.
-    let mut grid: Vec<(Grid, SchemePolicy, f64)> =
-        vec![(FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn()), 1.25)];
+    let mut grid: Vec<(Grid, PolicyMap, f64)> =
+        vec![(FpFormat::BINARY32.into(), PolicyMap::uniform(Scheme::rn()), 1.25)];
     for &t_ in &ts {
         grid.push((b8, schemes, t_));
     }
@@ -826,12 +823,12 @@ fn nn_setup(ctx: &ExpCtx) -> NnSetup {
 fn nn_curves(
     exp: &str,
     setup: &NnSetup,
-    cfgs: &[(String, Grid, SchemePolicy)],
+    cfgs: &[(String, Grid, PolicyMap)],
     t_step: f64,
     epochs: usize,
     ctx: &ExpCtx,
 ) -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<String>) {
-    let nn_run = |grid: Grid, sch: SchemePolicy, s: u64| {
+    let nn_run = |grid: Grid, sch: PolicyMap, s: u64| {
         let mut cfg = GdConfig::new(grid, sch, t_step, epochs);
         cfg.seed = s;
         cfg.escape = ctx.escape;
@@ -843,7 +840,7 @@ fn nn_curves(
     let seeds_per: Vec<usize> =
         cfgs.iter().map(|(_, _, sch)| seeds_for(sch, ctx.seeds)).collect();
     let master = |_ci: usize, s: u64| {
-        nn_run(FpFormat::BINARY64.into(), SchemePolicy::uniform(Scheme::rn()), s)
+        nn_run(FpFormat::BINARY64.into(), PolicyMap::uniform(Scheme::rn()), s)
     };
     curves_flat(
         exp,
@@ -865,12 +862,12 @@ pub(crate) fn fig6a(ctx: &ExpCtx) -> Table {
     let t_step = 0.09375;
     let b8: Grid = FpFormat::BINARY8.into();
     let sr = Scheme::sr();
-    let cfgs: Vec<(String, Grid, SchemePolicy)> = vec![
-        ("binary32".into(), FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn())),
-        ("RN".into(), b8, SchemePolicy::uniform(Scheme::rn())),
-        ("SR".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }),
-        ("SR_eps(0.2)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.2), mul: Scheme::sr_eps(0.2), sub: sr }),
-        ("SR_eps(0.4)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.4), mul: Scheme::sr_eps(0.4), sub: sr }),
+    let cfgs: Vec<(String, Grid, PolicyMap)> = vec![
+        ("binary32".into(), FpFormat::BINARY32.into(), PolicyMap::uniform(Scheme::rn())),
+        ("RN".into(), b8, PolicyMap::uniform(Scheme::rn())),
+        ("SR".into(), b8, PolicyMap::sites(sr, sr, sr)),
+        ("SR_eps(0.2)".into(), b8, PolicyMap::sites(Scheme::sr_eps(0.2), Scheme::sr_eps(0.2), sr)),
+        ("SR_eps(0.4)".into(), b8, PolicyMap::sites(Scheme::sr_eps(0.4), Scheme::sr_eps(0.4), sr)),
     ];
     let mut t = Table::new(
         "fig6a",
@@ -903,12 +900,12 @@ pub(crate) fn fig6b(ctx: &ExpCtx) -> Table {
     let t_step = 0.09375;
     let b8: Grid = FpFormat::BINARY8.into();
     let sr = Scheme::sr();
-    let cfgs: Vec<(String, Grid, SchemePolicy)> = vec![
-        ("binary32".into(), FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn())),
-        ("SR|SR".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: sr }),
-        ("SR_eps(0.1)|signed(0.05)".into(), b8, SchemePolicy { grad: Scheme::sr_eps(0.1), mul: Scheme::sr_eps(0.1), sub: Scheme::signed_sr_eps(0.05) }),
-        ("SR|signed(0.1)".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: Scheme::signed_sr_eps(0.1) }),
-        ("SR|signed(0.2)".into(), b8, SchemePolicy { grad: sr, mul: sr, sub: Scheme::signed_sr_eps(0.2) }),
+    let cfgs: Vec<(String, Grid, PolicyMap)> = vec![
+        ("binary32".into(), FpFormat::BINARY32.into(), PolicyMap::uniform(Scheme::rn())),
+        ("SR|SR".into(), b8, PolicyMap::sites(sr, sr, sr)),
+        ("SR_eps(0.1)|signed(0.05)".into(), b8, PolicyMap::sites(Scheme::sr_eps(0.1), Scheme::sr_eps(0.1), Scheme::signed_sr_eps(0.05))),
+        ("SR|signed(0.1)".into(), b8, PolicyMap::sites(sr, sr, Scheme::signed_sr_eps(0.1))),
+        ("SR|signed(0.2)".into(), b8, PolicyMap::sites(sr, sr, Scheme::signed_sr_eps(0.2))),
     ];
     let names: Vec<&str> = ["epoch", "binary32", "SR|SR", "SR_eps(0.1)|signed(0.05)", "SR|signed(0.1)", "SR|signed(0.2)"].to_vec();
     let mut t = Table::new(
@@ -977,7 +974,7 @@ pub(crate) fn table1(ctx: &ExpCtx) -> Table {
     // Lemma 4 (monotonicity, general rounding): run RN and check f decreasing
     // while the gradient gate (24) holds.
     {
-        let mut cfg = GdConfig::new(fmt, SchemePolicy::uniform(Scheme::rn()), t_step, steps);
+        let mut cfg = GdConfig::new(fmt, PolicyMap::uniform(Scheme::rn()), t_step, steps);
         cfg.seed = 0;
         let tr = GdEngine::new(cfg, &p, &x0).run(None);
         let gate = theory::lemma4_grad_gate(a, u, n, c);
@@ -1006,7 +1003,7 @@ pub(crate) fn table1(ctx: &ExpCtx) -> Table {
     // fig-3a stepsize (that regime is Scenario 2, where the bound is
     // vacuous). Verify at t = 1/(L(1+2u)²).
     let t_big = theory::t_upper_bound(lip, u);
-    let mut verify_rate = |name: &str, sch: SchemePolicy| {
+    let mut verify_rate = |name: &str, sch: PolicyMap| {
         let runner = |s: u64| {
             let mut cfg = GdConfig::new(fmt, sch, t_big, steps);
             cfg.seed = s;
@@ -1049,10 +1046,10 @@ pub(crate) fn table1(ctx: &ExpCtx) -> Table {
             (ok as i64).into(),
         ]);
     };
-    verify_rate("Theorem 6(i) (SR rate)", SchemePolicy::uniform(Scheme::sr()));
+    verify_rate("Theorem 6(i) (SR rate)", PolicyMap::uniform(Scheme::sr()));
     verify_rate(
         "Corollary 7 (SR_eps rate)",
-        SchemePolicy { grad: Scheme::sr(), mul: Scheme::sr_eps(0.4), sub: Scheme::sr() },
+        PolicyMap::sites(Scheme::sr(), Scheme::sr_eps(0.4), Scheme::sr()),
     );
 
     // Propositions 9/11 (stagnation scenario): compare the SR and signed-SRε
@@ -1061,7 +1058,7 @@ pub(crate) fn table1(ctx: &ExpCtx) -> Table {
         let p2 = Quadratic::diagonal(vec![2.0], vec![1024.0]);
         let avg_drop = |sub: Scheme| -> f64 {
             let drops = run_indexed(ctx.jobs, ctx.seeds, |s| {
-                let sch = SchemePolicy { grad: Scheme::sr(), mul: Scheme::sr(), sub };
+                let sch = PolicyMap { grad: Scheme::sr(), mul: Scheme::sr(), sub };
                 let mut cfg = GdConfig::new(FpFormat::BINARY8, sch, 0.05, 100);
                 cfg.seed = s as u64;
                 let tr = GdEngine::new(cfg, &p2, &[1.0]).run(None);
@@ -1119,13 +1116,9 @@ pub(crate) fn plfp1(ctx: &ExpCtx) -> Table {
     let gap0 = p.objective(&x0); // f(x*) = 0
     let fx = PLFP_GRID;
 
-    let rn_pol = SchemePolicy::uniform(Scheme::rn());
-    let sr_pol = SchemePolicy::uniform(Scheme::sr());
-    let sg_pol = SchemePolicy {
-        grad: Scheme::sr(),
-        mul: Scheme::sr(),
-        sub: Scheme::signed_sr_eps(0.25),
-    };
+    let rn_pol = PolicyMap::uniform(Scheme::rn());
+    let sr_pol = PolicyMap::uniform(Scheme::sr());
+    let sg_pol = PolicyMap::sites(Scheme::sr(), Scheme::sr(), Scheme::signed_sr_eps(0.25));
     let cfgs = [rn_pol, sr_pol, sg_pol];
     let labels: Vec<String> =
         ["Q3.8_RN", "Q3.8_SR", "Q3.8_SR|signed(0.25)"].map(String::from).to_vec();
@@ -1190,14 +1183,14 @@ pub(crate) fn plfp2(ctx: &ExpCtx) -> Table {
     let t_step = 0.5;
     let q: Grid = FixedPoint::q(4, 8).into();
     let sr = Scheme::sr();
-    let cfgs: Vec<(String, Grid, SchemePolicy)> = vec![
-        ("binary32".into(), FpFormat::BINARY32.into(), SchemePolicy::uniform(Scheme::rn())),
-        ("Q4.8_RN".into(), q, SchemePolicy::uniform(Scheme::rn())),
-        ("Q4.8_SR".into(), q, SchemePolicy { grad: sr, mul: sr, sub: sr }),
+    let cfgs: Vec<(String, Grid, PolicyMap)> = vec![
+        ("binary32".into(), FpFormat::BINARY32.into(), PolicyMap::uniform(Scheme::rn())),
+        ("Q4.8_RN".into(), q, PolicyMap::uniform(Scheme::rn())),
+        ("Q4.8_SR".into(), q, PolicyMap::sites(sr, sr, sr)),
         (
             "Q4.8_SR|signed(0.1)".into(),
             q,
-            SchemePolicy { grad: sr, mul: sr, sub: Scheme::signed_sr_eps(0.1) },
+            PolicyMap::sites(sr, sr, Scheme::signed_sr_eps(0.1)),
         ),
     ];
     let mut t = learning_table(
@@ -1228,9 +1221,9 @@ pub(crate) fn plfp3(ctx: &ExpCtx) -> Table {
     let fracs: &[u32] = &[4, 6, 8, 10];
 
     // One flattened batch over (frac_bits × {RN, SR-seed}) cells.
-    let rn_pol = SchemePolicy::uniform(Scheme::rn());
-    let sr_pol = SchemePolicy::uniform(Scheme::sr());
-    let mut grids: Vec<(FixedPoint, SchemePolicy)> = Vec::new();
+    let rn_pol = PolicyMap::uniform(Scheme::rn());
+    let sr_pol = PolicyMap::uniform(Scheme::sr());
+    let mut grids: Vec<(FixedPoint, PolicyMap)> = Vec::new();
     for &f in fracs {
         grids.push((FixedPoint::q(3, f), rn_pol));
         grids.push((FixedPoint::q(3, f), sr_pol));
@@ -1304,6 +1297,185 @@ pub(crate) fn plfp3(ctx: &ExpCtx) -> Table {
     t
 }
 
+// ------------------------------------------------------------------ opt --
+
+/// The optimizer-zoo quadratic: diagonal spectrum on [0.02, 0.2] with the
+/// optimum at `x* = 1100·1` — deliberately *off-grid* for bfloat16 and
+/// binary8 (their spacing in [1024, 2048) is 8 and 256) — and the start
+/// `x0 = 1280·1` exactly representable on every grid the family sweeps.
+/// In this regime every RN lane stagnates far from the optimum from step
+/// zero (each proposed update is below the half-ulp), while SR keeps the
+/// iterate and the optimizer state moving in expectation.
+fn opt_quadratic(n: usize) -> (Quadratic, Vec<f64>) {
+    let n = n.max(2);
+    let diag: Vec<f64> = (0..n).map(|i| 0.02 + 0.18 * i as f64 / (n - 1) as f64).collect();
+    (Quadratic::diagonal(diag, vec![1100.0; n]), vec![1280.0; n])
+}
+
+/// Shared builder for the `opt1`–`opt3` tables: one stateful optimizer and
+/// a list of (label, grid, policy) lanes, fanned out through
+/// [`curves_flat`] (journal resume, retries and `--jobs` sharding for
+/// free). The last deterministic lane is re-run locally to surface its
+/// optimizer-state [`crate::fp::RunHealth`] counters as a table note.
+fn opt_family(
+    id: &str,
+    title: &str,
+    optimizer: OptimizerSpec,
+    t_step: f64,
+    cfgs: Vec<(String, Grid, PolicyMap)>,
+    ctx: &ExpCtx,
+) -> Table {
+    let n = ctx.quad_n.min(50);
+    let steps = ctx.quad_steps.min(500);
+    let (p, x0) = opt_quadratic(n);
+    let labels: Vec<String> = cfgs.iter().map(|(l, _, _)| l.clone()).collect();
+    let seeds_per: Vec<usize> =
+        cfgs.iter().map(|(_, _, sch)| seeds_for(sch, ctx.seeds)).collect();
+    let (curves, sems, notes) = curves_flat(
+        id,
+        &labels,
+        &seeds_per,
+        steps,
+        ctx,
+        &|ci, s| {
+            let (_, grid, sch) = &cfgs[ci];
+            let mut cfg = GdConfig::new(*grid, *sch, t_step, steps);
+            cfg.seed = s;
+            cfg.escape = ctx.escape;
+            cfg.optimizer = optimizer;
+            GdEngine::new(cfg, &p, &x0).run(None).objective_series()
+        },
+        None,
+    );
+    let mut cols = vec!["k".to_string()];
+    cols.extend(labels.iter().cloned());
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(id, title, &col_refs);
+    let stride = (steps / 200).max(1);
+    for k in (0..steps).step_by(stride) {
+        let mut row: Vec<Cell> = vec![k.into()];
+        for c in &curves {
+            row.push(c[k].into());
+        }
+        t.row(row);
+    }
+    for (i, label) in labels.iter().enumerate() {
+        if seeds_per[i] > 1 {
+            let strided: Vec<f64> = (0..steps).step_by(stride).map(|k| sems[i][k]).collect();
+            t.band(label.clone(), strided);
+        }
+    }
+    // Optimizer-state health of the last deterministic lane: the same
+    // counters every scheduled cell accumulates, re-derived locally (an RN
+    // lane is seed-free, so this costs one deterministic pass).
+    if let Some((label, grid, sch)) = cfgs.iter().rev().find(|(_, _, sch)| !sch.is_stochastic()) {
+        let mut cfg = GdConfig::new(*grid, *sch, t_step, steps);
+        cfg.escape = ctx.escape;
+        cfg.optimizer = optimizer;
+        let mut e = GdEngine::new(cfg, &p, &x0);
+        e.run(None);
+        t.note(format!("{label} health: {}", e.health.summary()));
+    }
+    for note in notes {
+        t.note(note);
+    }
+    t.note(format!(
+        "optimizer={}, n={n}, steps={steps}, seeds={}",
+        optimizer.canon(),
+        ctx.seeds
+    ));
+    t
+}
+
+/// `opt1` — heavy-ball momentum(0.9) on bfloat16: the stagnation-vs-scheme
+/// comparison of Figure 2 re-run with a state-carrying optimizer, where
+/// the momentum buffer `m` is a second rounding site (the
+/// "stochastic rounding 2.0" regime, arXiv:2410.10517). binary32 + RN is
+/// the convergent baseline; on bfloat16 RN freezes both `x` and `m` while
+/// SR (and SR with signed-SRε on the (8c) subtraction) escape.
+pub(crate) fn opt1(ctx: &ExpCtx) -> Table {
+    let sr = Scheme::sr();
+    let bf: Grid = FpFormat::BFLOAT16.into();
+    let cfgs: Vec<(String, Grid, PolicyMap)> = vec![
+        ("binary32_RN".into(), FpFormat::BINARY32.into(), PolicyMap::uniform(Scheme::rn())),
+        ("bf16_RN".into(), bf, PolicyMap::uniform(Scheme::rn())),
+        ("bf16_SR".into(), bf, PolicyMap::uniform(sr)),
+        (
+            "bf16_SR|signed(0.25)".into(),
+            bf,
+            PolicyMap::sites(sr, sr, Scheme::signed_sr_eps(0.25)),
+        ),
+    ];
+    opt_family(
+        "opt1",
+        "Momentum(0.9) on bfloat16: stagnation vs rounding scheme with a rounded state tensor m",
+        OptimizerSpec::Momentum { beta: 0.9 },
+        0.05,
+        cfgs,
+        ctx,
+    )
+}
+
+/// `opt2` — Adam on bfloat16, same lanes as `opt1`. Adam adds a second
+/// failure mode: the `(1-β₂)·ĝ²` increment to the second moment `v` sits
+/// below bfloat16's half-ulp in relative terms (0.001 < u/2 ≈ 0.002), so
+/// RN freezes `v` outright while SR keeps it unbiased.
+pub(crate) fn opt2(ctx: &ExpCtx) -> Table {
+    let sr = Scheme::sr();
+    let bf: Grid = FpFormat::BFLOAT16.into();
+    let cfgs: Vec<(String, Grid, PolicyMap)> = vec![
+        ("binary32_RN".into(), FpFormat::BINARY32.into(), PolicyMap::uniform(Scheme::rn())),
+        ("bf16_RN".into(), bf, PolicyMap::uniform(Scheme::rn())),
+        ("bf16_SR".into(), bf, PolicyMap::uniform(sr)),
+        (
+            "bf16_SR|signed(0.25)".into(),
+            bf,
+            PolicyMap::sites(sr, sr, Scheme::signed_sr_eps(0.25)),
+        ),
+    ];
+    opt_family(
+        "opt2",
+        "Adam on bfloat16: stagnation vs rounding scheme with rounded state tensors m and v",
+        OptimizerSpec::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        1.0,
+        cfgs,
+        ctx,
+    )
+}
+
+/// `opt3` — master-weights ablation on binary8 momentum(0.9): the same
+/// stagnating run under four [`PolicyMap`] bindings — uniform RN, uniform
+/// SR, SR with the weights bound to an RN @ binary64 master copy (mixed
+/// precision's classic fix: updates land exactly, only the working grid is
+/// coarse), and SR with the momentum buffer bound to RN @ binary32.
+pub(crate) fn opt3(ctx: &ExpCtx) -> Table {
+    let sr = Scheme::sr();
+    let b8: Grid = FpFormat::BINARY8.into();
+    let cfgs: Vec<(String, Grid, PolicyMap)> = vec![
+        ("b8_RN".into(), b8, PolicyMap::uniform(Scheme::rn())),
+        ("b8_SR".into(), b8, PolicyMap::uniform(sr)),
+        (
+            "b8_SR+w=rn@binary64".into(),
+            b8,
+            PolicyMap::uniform(sr)
+                .with_weights(TensorPolicy::new(Scheme::rn()).on(FpFormat::BINARY64)),
+        ),
+        (
+            "b8_SR+m=rn@binary32".into(),
+            b8,
+            PolicyMap::uniform(sr).with_m(TensorPolicy::new(Scheme::rn()).on(FpFormat::BINARY32)),
+        ),
+    ];
+    opt_family(
+        "opt3",
+        "Master weights vs fully-low-precision on binary8 momentum(0.9): per-tensor policy bindings",
+        OptimizerSpec::Momentum { beta: 0.9 },
+        0.05,
+        cfgs,
+        ctx,
+    )
+}
+
 /// Shared learning-figure table builder (named-config × epochs grid),
 /// fanned out through [`curves_flat`]. The degrade fault policy falls a
 /// failed cell back to the binary64 + RN master (exact-arithmetic
@@ -1313,7 +1485,7 @@ fn learning_table(
     id: &str,
     title: &str,
     setup: &LearnSetup,
-    cfgs: Vec<(String, Grid, SchemePolicy)>,
+    cfgs: Vec<(String, Grid, PolicyMap)>,
     t_step: f64,
     epochs: usize,
     ctx: &ExpCtx,
@@ -1327,7 +1499,7 @@ fn learning_table(
         cfgs.iter().map(|(_, _, sch)| seeds_for(sch, ctx.seeds)).collect();
     let master = |_ci: usize, s: u64| {
         let exact: Grid = FpFormat::BINARY64.into();
-        let rn = SchemePolicy::uniform(Scheme::rn());
+        let rn = PolicyMap::uniform(Scheme::rn());
         mlr_cell(setup, exact, rn, GradModel::RoundAfterOp, t_step, epochs, s, ctx.escape)
     };
     let (curves, sems, notes) = curves_flat(
@@ -1489,6 +1661,44 @@ mod tests {
         let l0 = num(&t.rows[0], 4);
         let l1 = num(&t.rows[1], 4);
         assert!((l0 / l1 - 16.0).abs() < 1e-6, "{l0} vs {l1}");
+    }
+
+    /// opt1/opt2 at smoke scale: with a state-carrying optimizer on
+    /// bfloat16, RN stagnates far above the SR lane (the optimizer state is
+    /// a second stagnation site) and the RN lane's health note records the
+    /// stalled steps.
+    #[test]
+    fn quick_opt_momentum_and_adam_stagnate_under_rn() {
+        let ctx = ExpCtx::quick();
+        for t in [opt1(&ctx), opt2(&ctx)] {
+            let last = t.rows.last().unwrap();
+            let get = |i: usize| match last[i] {
+                Cell::Num(v) => v,
+                _ => f64::NAN,
+            };
+            let (rn, sr) = (get(2), get(3));
+            assert!(rn.is_finite() && sr.is_finite(), "{}", t.id);
+            assert!(rn > sr, "{}: rn={rn} sr={sr}", t.id);
+            assert!(t.notes.iter().any(|n| n.contains("stalled")), "{:?}", t.notes);
+        }
+    }
+
+    /// opt3 at smoke scale: the RN lane stagnates above uniform SR, and the
+    /// binary64 master-weights binding settles far below the fully-binary8
+    /// SR lane (its updates land exactly; only the working grid is coarse).
+    #[test]
+    fn quick_opt3_master_weights_rescue_binary8() {
+        let ctx = ExpCtx::quick();
+        let t = opt3(&ctx);
+        let last = t.rows.last().unwrap();
+        let get = |i: usize| match last[i] {
+            Cell::Num(v) => v,
+            _ => f64::NAN,
+        };
+        let (rn, sr, master) = (get(1), get(2), get(3));
+        assert!(rn.is_finite() && sr.is_finite() && master.is_finite());
+        assert!(rn > sr, "rn={rn} sr={sr}");
+        assert!(master < sr / 10.0, "master={master} sr={sr}");
     }
 
     /// `--lanes` is execution-only end to end: the fig3a table (rows, bands

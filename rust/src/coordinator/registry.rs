@@ -8,7 +8,7 @@
 //! (`benches/figures.rs`) and the integration tests — adding an experiment
 //! means adding exactly one entry here. Builders express their rounding
 //! policies through the open scheme API
-//! ([`crate::gd::SchemePolicy`] over [`crate::fp::Scheme`] handles), so an
+//! ([`crate::gd::PolicyMap`] over [`crate::fp::Scheme`] handles), so an
 //! experiment can sweep any scheme registered with
 //! [`crate::fp::SchemeRegistry`], not just the paper's built-ins.
 //!
@@ -136,6 +136,24 @@ pub const REGISTRY: &[ExperimentSpec] = &[
         paper_ref: "arXiv:2301.09511 (companion)",
         run: |ctx| vec![experiments::plfp3(ctx)],
     },
+    ExperimentSpec {
+        id: "opt1",
+        description: "Momentum(0.9) on bfloat16: stagnation vs scheme with rounded state tensor m",
+        paper_ref: "arXiv:2410.10517 (optimizer-state ablation)",
+        run: |ctx| vec![experiments::opt1(ctx)],
+    },
+    ExperimentSpec {
+        id: "opt2",
+        description: "Adam on bfloat16: stagnation vs scheme with rounded state tensors m, v",
+        paper_ref: "arXiv:2410.10517 (optimizer-state ablation)",
+        run: |ctx| vec![experiments::opt2(ctx)],
+    },
+    ExperimentSpec {
+        id: "opt3",
+        description: "Master weights vs fully-low-precision binary8 momentum (PolicyMap bindings)",
+        paper_ref: "arXiv:2410.10517 (optimizer-state ablation)",
+        run: |ctx| vec![experiments::opt3(ctx)],
+    },
 ];
 
 /// Look an experiment up by id.
@@ -152,7 +170,7 @@ mod tests {
         let ids: Vec<&str> = REGISTRY.iter().map(|s| s.id).collect();
         for required in [
             "table1", "table2", "fig1", "fig2", "fig3a", "fig3b", "fig4a", "fig4b", "fig5a",
-            "fig5b", "fig6a", "fig6b", "plfp1", "plfp2", "plfp3",
+            "fig5b", "fig6a", "fig6b", "plfp1", "plfp2", "plfp3", "opt1", "opt2", "opt3",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }

@@ -188,7 +188,7 @@ where
 mod tests {
     use super::*;
     use crate::fp::{FpFormat, Rng, Rounding};
-    use crate::gd::engine::{GdConfig, GdEngine, StepSchemes};
+    use crate::gd::engine::{GdConfig, GdEngine};
     use crate::problems::Quadratic;
 
     #[test]
@@ -244,8 +244,7 @@ mod tests {
             run_indexed(jobs, cells.len(), |k| {
                 let (m, r) = cells[k];
                 let mode = modes[m];
-                let mut cfg =
-                    GdConfig::new(FpFormat::BFLOAT16, StepSchemes::uniform(mode), 0.3, 30);
+                let mut cfg = GdConfig::new(FpFormat::BFLOAT16, mode, 0.3, 30);
                 cfg.rng =
                     Some(Rng::new(root_seed).split(cell_stream("sweep", &mode.label(), r)));
                 let mut e = GdEngine::new(cfg, &p, &x0);

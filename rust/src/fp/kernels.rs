@@ -287,6 +287,56 @@ pub fn gd_update_health(
     rng_sub: &mut Rng,
     health: &mut RunHealth,
 ) -> bool {
+    gd_update_split_health(
+        Site { plan, scheme: mul_mode },
+        Site { plan, scheme: sub_mode },
+        t,
+        x,
+        ghat,
+        mbuf,
+        vneg,
+        zbuf,
+        rng_mul,
+        rng_sub,
+        health,
+    )
+}
+
+/// One rounding site of a fused optimizer kernel: the plan (grid +
+/// `sr_bits`) and scheme that round that site's results. Built per step by
+/// the GD engine from its [`crate::gd::PolicyMap`] — per-tensor bindings
+/// resolve to sites with their own grids, which is how
+/// master-weights-in-high-precision lanes run through the same kernels as
+/// fully-low-precision ones.
+#[derive(Clone, Copy)]
+pub struct Site<'a> {
+    /// The precomputed rounding plan of this site's grid.
+    pub plan: &'a RoundPlan,
+    /// The rounding scheme applied at this site.
+    pub scheme: Scheme,
+}
+
+/// [`gd_update_health`] with independent rounding sites for the (8b) and
+/// (8c) passes. With both sites on one plan this is *the* body of
+/// [`gd_update_health`] (which delegates here): same staging, same fused
+/// slice rounders on the same intermediates, same recomputed-pre-image
+/// classify passes — bit-identical trajectories, RNG streams and health
+/// counters. A distinct `sub` site (a `weights=` policy binding) only
+/// changes where the iterate lands.
+#[allow(clippy::too_many_arguments)]
+pub fn gd_update_split_health(
+    mul: Site<'_>,
+    sub: Site<'_>,
+    t: f64,
+    x: &mut [f64],
+    ghat: &[f64],
+    mbuf: &mut [f64],
+    vneg: &mut [f64],
+    zbuf: &mut [f64],
+    rng_mul: &mut Rng,
+    rng_sub: &mut Rng,
+    health: &mut RunHealth,
+) -> bool {
     debug_assert!(
         x.len() == ghat.len()
             && x.len() == mbuf.len()
@@ -297,23 +347,235 @@ pub fn gd_update_health(
     for (m, &g) in mbuf.iter_mut().zip(ghat) {
         *m = t * g;
     }
-    if mul_mode.uses_steering() {
+    if mul.scheme.uses_steering() {
         for (v, &g) in vneg.iter_mut().zip(ghat) {
             *v = -g;
         }
     }
-    plan.round_slice_scheme_with(mul_mode, mbuf, vneg, rng_mul);
+    mul.plan.round_slice_scheme_with(mul.scheme, mbuf, vneg, rng_mul);
     for (&m, &g) in mbuf.iter().zip(ghat) {
-        plan.classify(t * g, m, health);
+        mul.plan.classify(t * g, m, health);
     }
     // (8c): x is untouched until the commit loop below, so `x̂ᵢ − mᵢ` is
     // still recomputable after the rounding pass.
     for ((z, &xi), &m) in zbuf.iter_mut().zip(x.iter()).zip(mbuf.iter()) {
         *z = xi - m;
     }
-    plan.round_slice_scheme_with(sub_mode, zbuf, ghat, rng_sub);
+    sub.plan.round_slice_scheme_with(sub.scheme, zbuf, ghat, rng_sub);
     for ((&z, &xi), &m) in zbuf.iter().zip(x.iter()).zip(mbuf.iter()) {
-        plan.classify(xi - m, z, health);
+        sub.plan.classify(xi - m, z, health);
+    }
+    let mut moved = false;
+    for (xi, &z) in x.iter_mut().zip(zbuf.iter()) {
+        if z != *xi {
+            moved = true;
+        }
+        *xi = z;
+    }
+    moved
+}
+
+/// The fused heavy-ball / Nesterov momentum step:
+///
+/// ```text
+/// m⁺ = fl_m(β·m + t·ĝ)            buffer update at the `m_site`
+/// u  = m⁺                         (heavy ball), or
+/// u  = fl₂(β·m⁺ + t·ĝ)            (Nesterov lookahead, at the `mul` site)
+/// x̂⁺ = fl₃(x̂ − u)                 landing at the `sub` site
+/// ```
+///
+/// Steering follows §4.2.2: update-shaped values (`m⁺`, `u`) steer by
+/// `−ĝ`, the landing point by `+ĝ`. Pre-rounding values are recomputed
+/// from inputs not yet overwritten (the state tensor commits only after
+/// its classify pass), so health accounting allocates nothing. Heavy ball
+/// performs no (8b) pass: the update *is* the state tensor, already
+/// resident on the `m_site` grid. Returns `true` when the iterate moved.
+#[allow(clippy::too_many_arguments)]
+pub fn momentum_update_health(
+    m_site: Site<'_>,
+    mul: Site<'_>,
+    sub: Site<'_>,
+    beta: f64,
+    nesterov: bool,
+    t: f64,
+    x: &mut [f64],
+    ghat: &[f64],
+    m: &mut [f64],
+    mbuf: &mut [f64],
+    vneg: &mut [f64],
+    zbuf: &mut [f64],
+    rng_m: &mut Rng,
+    rng_mul: &mut Rng,
+    rng_sub: &mut Rng,
+    health: &mut RunHealth,
+) -> bool {
+    debug_assert!(
+        x.len() == ghat.len()
+            && x.len() == m.len()
+            && x.len() == mbuf.len()
+            && x.len() == vneg.len()
+            && x.len() == zbuf.len()
+    );
+    // Buffer update m⁺ = fl_m(β·m + t·ĝ), staged into scratch so the old
+    // state stays recomputable for the classify pass.
+    for ((b, &mi), &g) in mbuf.iter_mut().zip(m.iter()).zip(ghat) {
+        *b = beta * mi + t * g;
+    }
+    if m_site.scheme.uses_steering() {
+        for (v, &g) in vneg.iter_mut().zip(ghat) {
+            *v = -g;
+        }
+    }
+    m_site.plan.round_slice_scheme_with(m_site.scheme, mbuf, vneg, rng_m);
+    for ((&b, &mi), &g) in mbuf.iter().zip(m.iter()).zip(ghat) {
+        m_site.plan.classify(beta * mi + t * g, b, health);
+    }
+    m.copy_from_slice(mbuf);
+    if nesterov {
+        // Lookahead blend u = fl₂(β·m⁺ + t·ĝ) at the (8b) site; `m` holds
+        // the committed m⁺ and is not overwritten, so the pre-image stays
+        // recomputable.
+        for ((b, &mi), &g) in mbuf.iter_mut().zip(m.iter()).zip(ghat) {
+            *b = beta * mi + t * g;
+        }
+        if mul.scheme.uses_steering() {
+            for (v, &g) in vneg.iter_mut().zip(ghat) {
+                *v = -g;
+            }
+        }
+        mul.plan.round_slice_scheme_with(mul.scheme, mbuf, vneg, rng_mul);
+        for ((&b, &mi), &g) in mbuf.iter().zip(m.iter()).zip(ghat) {
+            mul.plan.classify(beta * mi + t * g, b, health);
+        }
+    }
+    // Landing x̂⁺ = fl₃(x̂ − u), steering v = +ĝ; `mbuf` holds u either way.
+    for ((z, &xi), &u) in zbuf.iter_mut().zip(x.iter()).zip(mbuf.iter()) {
+        *z = xi - u;
+    }
+    sub.plan.round_slice_scheme_with(sub.scheme, zbuf, ghat, rng_sub);
+    for ((&z, &xi), &u) in zbuf.iter().zip(x.iter()).zip(mbuf.iter()) {
+        sub.plan.classify(xi - u, z, health);
+    }
+    let mut moved = false;
+    for (xi, &z) in x.iter_mut().zip(zbuf.iter()) {
+        if z != *xi {
+            moved = true;
+        }
+        *xi = z;
+    }
+    moved
+}
+
+/// Scalar parameters of one fused Adam step. The bias corrections
+/// `bc1 = 1 − β₁^{k+1}` / `bc2 = 1 − β₂^{k+1}` are computed by the caller
+/// in exact f64 — they are scalars, not tensor arithmetic, so they carry
+/// no rounding site.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamParams {
+    /// First-moment coefficient β₁.
+    pub beta1: f64,
+    /// Second-moment coefficient β₂.
+    pub beta2: f64,
+    /// Denominator offset ε.
+    pub eps: f64,
+    /// First-moment bias correction `1 − β₁^{k+1}`.
+    pub bc1: f64,
+    /// Second-moment bias correction `1 − β₂^{k+1}`.
+    pub bc2: f64,
+}
+
+/// The fused Adam step with per-tensor rounding sites:
+///
+/// ```text
+/// m⁺ = fl_m(β₁·m + (1−β₁)·ĝ)            first moment at the `m_site`
+/// v⁺ = fl_v(β₂·v + (1−β₂)·ĝ²)           second moment at the `v_site`
+/// u  = fl₂(t·(m⁺/bc1)/(√(v⁺/bc2) + ε))  update at the (8b) `mul` site
+/// x̂⁺ = fl₃(x̂ − u)                       landing at the `sub` site
+/// ```
+///
+/// Update-shaped values steer by `−ĝ`, the landing point by `+ĝ` (§4.2.2);
+/// moments commit only after their classify passes so every pre-rounding
+/// value is recomputed, not snapshotted. Returns `true` when the iterate
+/// moved.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update_health(
+    m_site: Site<'_>,
+    v_site: Site<'_>,
+    mul: Site<'_>,
+    sub: Site<'_>,
+    params: &AdamParams,
+    t: f64,
+    x: &mut [f64],
+    ghat: &[f64],
+    m: &mut [f64],
+    v: &mut [f64],
+    mbuf: &mut [f64],
+    vneg: &mut [f64],
+    zbuf: &mut [f64],
+    rng_m: &mut Rng,
+    rng_v: &mut Rng,
+    rng_mul: &mut Rng,
+    rng_sub: &mut Rng,
+    health: &mut RunHealth,
+) -> bool {
+    debug_assert!(
+        x.len() == ghat.len()
+            && x.len() == m.len()
+            && x.len() == v.len()
+            && x.len() == mbuf.len()
+            && x.len() == vneg.len()
+            && x.len() == zbuf.len()
+    );
+    let AdamParams { beta1, beta2, eps, bc1, bc2 } = *params;
+    // First moment m⁺ = fl_m(β₁·m + (1−β₁)·ĝ).
+    for ((b, &mi), &g) in mbuf.iter_mut().zip(m.iter()).zip(ghat) {
+        *b = beta1 * mi + (1.0 - beta1) * g;
+    }
+    if m_site.scheme.uses_steering() {
+        for (w, &g) in vneg.iter_mut().zip(ghat) {
+            *w = -g;
+        }
+    }
+    m_site.plan.round_slice_scheme_with(m_site.scheme, mbuf, vneg, rng_m);
+    for ((&b, &mi), &g) in mbuf.iter().zip(m.iter()).zip(ghat) {
+        m_site.plan.classify(beta1 * mi + (1.0 - beta1) * g, b, health);
+    }
+    m.copy_from_slice(mbuf);
+    // Second moment v⁺ = fl_v(β₂·v + (1−β₂)·ĝ²).
+    for ((b, &vi), &g) in mbuf.iter_mut().zip(v.iter()).zip(ghat) {
+        *b = beta2 * vi + (1.0 - beta2) * (g * g);
+    }
+    if v_site.scheme.uses_steering() {
+        for (w, &g) in vneg.iter_mut().zip(ghat) {
+            *w = -g;
+        }
+    }
+    v_site.plan.round_slice_scheme_with(v_site.scheme, mbuf, vneg, rng_v);
+    for ((&b, &vi), &g) in mbuf.iter().zip(v.iter()).zip(ghat) {
+        v_site.plan.classify(beta2 * vi + (1.0 - beta2) * (g * g), b, health);
+    }
+    v.copy_from_slice(mbuf);
+    // Update u = fl₂(t·m̂/(√v̂ + ε)); both moments are committed and no
+    // longer overwritten, so the pre-image stays recomputable.
+    for ((b, &mi), &vi) in mbuf.iter_mut().zip(m.iter()).zip(v.iter()) {
+        *b = t * (mi / bc1) / ((vi / bc2).sqrt() + eps);
+    }
+    if mul.scheme.uses_steering() {
+        for (w, &g) in vneg.iter_mut().zip(ghat) {
+            *w = -g;
+        }
+    }
+    mul.plan.round_slice_scheme_with(mul.scheme, mbuf, vneg, rng_mul);
+    for ((&b, &mi), &vi) in mbuf.iter().zip(m.iter()).zip(v.iter()) {
+        mul.plan.classify(t * (mi / bc1) / ((vi / bc2).sqrt() + eps), b, health);
+    }
+    // Landing x̂⁺ = fl₃(x̂ − u), steering v = +ĝ.
+    for ((z, &xi), &u) in zbuf.iter_mut().zip(x.iter()).zip(mbuf.iter()) {
+        *z = xi - u;
+    }
+    sub.plan.round_slice_scheme_with(sub.scheme, zbuf, ghat, rng_sub);
+    for ((&z, &xi), &u) in zbuf.iter().zip(x.iter()).zip(mbuf.iter()) {
+        sub.plan.classify(xi - u, z, health);
     }
     let mut moved = false;
     for (xi, &z) in x.iter_mut().zip(zbuf.iter()) {
@@ -684,6 +946,184 @@ mod tests {
                     assert_eq!(rsub[l].next_u64(), os.next_u64(), "lane {l} sub stream");
                 }
             }
+        }
+    }
+
+    /// With β = 0 the heavy-ball step degenerates to plain GD: the buffer
+    /// update is `fl(t·ĝ)` at the `m` site and the landing is (8c), so with
+    /// the `m` site on the (8b) plan/scheme and the `m` stream seeded like
+    /// δ₂, iterates, health and streams are bit-identical to
+    /// `gd_update_health`.
+    #[test]
+    fn momentum_beta_zero_matches_gd_update_health() {
+        let n = 47;
+        let plan = RoundPlan::new(B8);
+        let ghat = rand_vec(n, 31, 1.0);
+        let x0: Vec<f64> = {
+            let mut v = rand_vec(n, 32, 1.0);
+            plan.round_slice(Rounding::RoundNearestEven, &mut v, &mut Rng::new(0));
+            v
+        };
+        for (mul_mode, sub_mode) in [
+            (Rounding::RoundNearestEven.scheme(), Rounding::RoundNearestEven.scheme()),
+            (Rounding::Sr.scheme(), Rounding::SignedSrEps(0.25).scheme()),
+        ] {
+            let (mut mb, mut vb, mut zb) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+            let mut xa = x0.clone();
+            let (mut ra_mul, mut ra_sub) = (Rng::new(5), Rng::new(6));
+            let mut ha = RunHealth::default();
+            let moved_a = gd_update_health(
+                &plan, mul_mode, sub_mode, 0.5, &mut xa, &ghat, &mut mb, &mut vb, &mut zb,
+                &mut ra_mul, &mut ra_sub, &mut ha,
+            );
+            let mut xb = x0.clone();
+            let mut state = vec![0.0; n];
+            // β = 0 never reads the stale buffer, only overwrites it.
+            let (mut rb_m, mut rb_mul, mut rb_sub) = (Rng::new(5), Rng::new(7), Rng::new(6));
+            let mut hb = RunHealth::default();
+            let moved_b = momentum_update_health(
+                Site { plan: &plan, scheme: mul_mode },
+                Site { plan: &plan, scheme: mul_mode },
+                Site { plan: &plan, scheme: sub_mode },
+                0.0,
+                false,
+                0.5,
+                &mut xb,
+                &ghat,
+                &mut state,
+                &mut mb,
+                &mut vb,
+                &mut zb,
+                &mut rb_m,
+                &mut rb_mul,
+                &mut rb_sub,
+                &mut hb,
+            );
+            assert_eq!(xa, xb);
+            assert_eq!(moved_a, moved_b);
+            assert_eq!(ha, hb);
+            // Heavy ball has no (8b) blend pass: δ₂ is untouched.
+            assert_eq!(rb_mul.next_u64(), Rng::new(7).next_u64());
+            assert_eq!(ra_sub.next_u64(), rb_sub.next_u64());
+        }
+    }
+
+    /// A distinct `sub` site (master-weights binding) lands the iterate on
+    /// its own grid while the update still rounds on the run grid.
+    #[test]
+    fn split_sites_land_the_iterate_on_the_weights_grid() {
+        let n = 29;
+        let plan8 = RoundPlan::new(B8);
+        let plan64 = RoundPlan::new(FpFormat::BINARY64);
+        let ghat = rand_vec(n, 41, 1.0);
+        let mut x = rand_vec(n, 42, 1.0);
+        let (mut m, mut vneg, mut z) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        let mut health = RunHealth::default();
+        let moved = gd_update_split_health(
+            Site { plan: &plan8, scheme: Rounding::Sr.scheme() },
+            Site { plan: &plan64, scheme: Rounding::RoundNearestEven.scheme() },
+            0.5,
+            &mut x,
+            &ghat,
+            &mut m,
+            &mut vneg,
+            &mut z,
+            &mut Rng::new(1),
+            &mut Rng::new(2),
+            &mut health,
+        );
+        assert!(moved);
+        for i in 0..n {
+            // The update m rounded into binary8; the landing x − m exact
+            // (binary64 is the carrier, RN there is the identity).
+            assert!(B8.contains(m[i]), "m[{i}]={}", m[i]);
+            assert_eq!(x[i], z[i]);
+        }
+    }
+
+    /// Adam's moments stay resident on their bound grids while the iterate
+    /// stays on the run grid — the fully-low-precision-state lane.
+    #[test]
+    fn adam_moments_stay_on_their_site_grids() {
+        let n = 23;
+        let bf16 = FpFormat::BFLOAT16;
+        let plan_run = RoundPlan::new(B8);
+        let plan_state = RoundPlan::new(bf16);
+        let ghat = rand_vec(n, 51, 1.0);
+        let mut x: Vec<f64> = {
+            let mut v = rand_vec(n, 52, 1.0);
+            plan_run.round_slice(Rounding::RoundNearestEven, &mut v, &mut Rng::new(0));
+            v
+        };
+        let (mut m, mut v) = (vec![0.0; n], vec![0.0; n]);
+        let (mut mb, mut vb, mut zb) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        let (mut rm, mut rv, mut rmul, mut rsub) =
+            (Rng::new(1), Rng::new(2), Rng::new(3), Rng::new(4));
+        let mut health = RunHealth::default();
+        for k in 0..5 {
+            let params = AdamParams {
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                bc1: 1.0 - 0.9f64.powi(k + 1),
+                bc2: 1.0 - 0.999f64.powi(k + 1),
+            };
+            adam_update_health(
+                Site { plan: &plan_state, scheme: Rounding::Sr.scheme() },
+                Site { plan: &plan_state, scheme: Rounding::Sr.scheme() },
+                Site { plan: &plan_run, scheme: Rounding::Sr.scheme() },
+                Site { plan: &plan_run, scheme: Rounding::Sr.scheme() },
+                &params,
+                0.05,
+                &mut x,
+                &ghat,
+                &mut m,
+                &mut v,
+                &mut mb,
+                &mut vb,
+                &mut zb,
+                &mut rm,
+                &mut rv,
+                &mut rmul,
+                &mut rsub,
+                &mut health,
+            );
+            for i in 0..n {
+                assert!(bf16.contains(m[i]), "k={k} m[{i}]={}", m[i]);
+                assert!(bf16.contains(v[i]) && v[i] >= 0.0, "k={k} v[{i}]={}", v[i]);
+                assert!(B8.contains(x[i]), "k={k} x[{i}]={}", x[i]);
+            }
+        }
+        assert_eq!(health.nan_inf, 0, "{}", health.summary());
+    }
+
+    /// Deterministic schemes consume no randomness through the optimizer
+    /// kernels — same contract the GD kernels and the conformance suite
+    /// enforce elsewhere.
+    #[test]
+    fn optimizer_kernels_consume_no_randomness_when_deterministic() {
+        let n = 19;
+        let plan = RoundPlan::new(B8);
+        let rn = Rounding::RoundNearestEven.scheme();
+        let site = Site { plan: &plan, scheme: rn };
+        let ghat = rand_vec(n, 61, 1.0);
+        let mut x = rand_vec(n, 62, 1.0);
+        let (mut m, mut v) = (vec![0.0; n], vec![0.0; n]);
+        let (mut mb, mut vb, mut zb) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        let (mut r1, mut r2, mut r3, mut r4) = (Rng::new(1), Rng::new(2), Rng::new(3), Rng::new(4));
+        let mut health = RunHealth::default();
+        momentum_update_health(
+            site, site, site, 0.9, true, 0.1, &mut x, &ghat, &mut m, &mut mb, &mut vb, &mut zb,
+            &mut r1, &mut r2, &mut r3, &mut health,
+        );
+        let params =
+            AdamParams { beta1: 0.9, beta2: 0.999, eps: 1e-8, bc1: 0.1, bc2: 0.001 };
+        adam_update_health(
+            site, site, site, site, &params, 0.1, &mut x, &ghat, &mut m, &mut v, &mut mb, &mut vb,
+            &mut zb, &mut r1, &mut r2, &mut r3, &mut r4, &mut health,
+        );
+        for (rng, seed) in [(&mut r1, 1), (&mut r2, 2), (&mut r3, 3), (&mut r4, 4)] {
+            assert_eq!(rng.next_u64(), Rng::new(seed).next_u64(), "stream {seed} was consumed");
         }
     }
 }

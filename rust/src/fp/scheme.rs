@@ -109,7 +109,7 @@ pub trait RoundingScheme: Sync + Send {
 }
 
 /// A copyable handle to a registered rounding scheme — the type that flows
-/// through [`crate::gd::SchemePolicy`], [`crate::fp::LpCtx`] and the fused
+/// through [`crate::gd::PolicyMap`], [`crate::fp::LpCtx`] and the fused
 /// kernels. Obtain one from [`SchemeRegistry::lookup`], the named
 /// constructors ([`Scheme::rn`], [`Scheme::sr`], [`Scheme::sr_eps`], …) or
 /// a legacy [`Rounding`] via `From`.
@@ -446,6 +446,9 @@ pub enum SchemeError {
     NotBuiltin(String),
     /// An unknown number-format / grid spec (raised by the run builder).
     UnknownFormat(String),
+    /// A malformed optimizer / policy / LR-schedule spec; carries the full
+    /// human-readable diagnostic.
+    BadSpec(String),
 }
 
 impl fmt::Display for SchemeError {
@@ -464,6 +467,7 @@ impl fmt::Display for SchemeError {
             SchemeError::UnknownFormat(name) => {
                 write!(f, "unknown number format '{name}' (known: binary8, bfloat16, binary16, binary32, binary64, or a fixed-point spec like 'q3.8' / 'uq4.8' / 'fixed:Q3.8')")
             }
+            SchemeError::BadSpec(msg) => write!(f, "{msg}"),
         }
     }
 }

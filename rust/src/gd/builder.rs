@@ -1,6 +1,6 @@
 //! [`RunBuilder`] — the documented front door for configuring and running
 //! one low-precision GD experiment, replacing the historic sprawl of
-//! `GdConfig::new` + `StepSchemes` + free rounding functions:
+//! `GdConfig::new` + rounding-enum plumbing + free rounding functions:
 //!
 //! ```no_run
 //! use lpgd::gd::RunBuilder;
@@ -23,7 +23,9 @@
 //! println!("final f = {}", trace.final_f());
 //! ```
 //!
-//! Scheme specs go through [`crate::fp::scheme::SchemeRegistry`], so user
+//! Scheme specs go through [`crate::fp::scheme::SchemeRegistry`], policy
+//! specs through [`PolicyMap::parse`] and optimizer / LR-schedule specs
+//! through [`OptimizerSpec::parse`] / [`LrSchedule::parse`], so user
 //! schemes registered at runtime work everywhere a built-in does. Spec
 //! errors are deferred: setters never panic, and [`RunBuilder::build`]
 //! reports the first one. See `docs/api.md` for the quick-start and the
@@ -34,20 +36,23 @@ use crate::fp::grid::Grid;
 use crate::fp::rng::Rng;
 use crate::fp::round::DEFAULT_SR_BITS;
 use crate::fp::scheme::{Scheme, SchemeError, SchemeRegistry};
-use crate::gd::engine::{GdConfig, GdEngine, GradModel, SchemePolicy};
+use crate::gd::engine::{GdConfig, GdEngine, GradModel, PolicyMap};
 use crate::gd::lanes::run_lane_batch;
+use crate::gd::optimizer::{LrSchedule, OptimizerSpec};
 use crate::gd::trace::Trace;
 use crate::problems::Problem;
 
 /// Builder-style configuration of one GD run over a [`Problem`].
 ///
-/// Defaults: binary8, SR on all three steps, the chop-style
-/// `RoundAfterOp` σ₁ model, `t = 0.5`, 100 steps, seed 0, default
-/// `sr_bits`, `x0 = 0`.
+/// Defaults: binary8, SR on all three steps, no tensor bindings, plain-GD
+/// optimizer with a constant stepsize, the chop-style `RoundAfterOp` σ₁
+/// model, `t = 0.5`, 100 steps, seed 0, default `sr_bits`, `x0 = 0`.
 pub struct RunBuilder<'p> {
     problem: &'p dyn Problem,
     grid: Grid,
-    policy: SchemePolicy,
+    policy: PolicyMap,
+    optimizer: OptimizerSpec,
+    lr: LrSchedule,
     grad_model: GradModel,
     t: f64,
     steps: usize,
@@ -67,7 +72,9 @@ impl<'p> RunBuilder<'p> {
         Self {
             problem,
             grid: Grid::Float(FpFormat::BINARY8),
-            policy: SchemePolicy::uniform(Scheme::sr()),
+            policy: PolicyMap::uniform(Scheme::sr()),
+            optimizer: OptimizerSpec::Gd,
+            lr: LrSchedule::Constant,
             grad_model: GradModel::RoundAfterOp,
             t: 0.5,
             steps: 100,
@@ -107,10 +114,11 @@ impl<'p> RunBuilder<'p> {
         self.format_name(spec)
     }
 
-    /// One scheme spec for all three rounding sites (8a)/(8b)/(8c).
+    /// One scheme spec for all three rounding sites (8a)/(8b)/(8c),
+    /// clearing any tensor bindings.
     pub fn scheme(mut self, spec: &str) -> Self {
         match SchemeRegistry::lookup(spec) {
-            Ok(s) => self.policy = SchemePolicy::uniform(s),
+            Ok(s) => self.policy = PolicyMap::uniform(s),
             Err(e) => self.stash(e),
         }
         self
@@ -144,8 +152,54 @@ impl<'p> RunBuilder<'p> {
     }
 
     /// Set the whole per-tensor policy from already-resolved handles.
-    pub fn policy(mut self, policy: impl Into<SchemePolicy>) -> Self {
+    pub fn policy(mut self, policy: impl Into<PolicyMap>) -> Self {
         self.policy = policy.into();
+        self
+    }
+
+    /// Set the whole policy from a spec string — a bare scheme (`"sr"`) or
+    /// the full per-tensor grammar
+    /// (`"policy:weights=sr_eps:0.4@bf16,m=rn@fp32"`; see
+    /// [`PolicyMap::parse`]).
+    pub fn policy_spec(mut self, spec: &str) -> Self {
+        match PolicyMap::parse(spec) {
+            Ok(p) => self.policy = p,
+            Err(e) => self.stash(e),
+        }
+        self
+    }
+
+    /// The update law driving each step (plain GD, momentum, Nesterov,
+    /// Adam).
+    pub fn optimizer(mut self, opt: OptimizerSpec) -> Self {
+        self.optimizer = opt;
+        self
+    }
+
+    /// Optimizer by spec string — `"gd"`, `"momentum:0.9"`,
+    /// `"nesterov:0.9"`, `"adam:0.9:0.999:1e-8"` (see
+    /// [`OptimizerSpec::parse`]).
+    pub fn optimizer_name(mut self, spec: &str) -> Self {
+        match OptimizerSpec::parse(spec) {
+            Ok(o) => self.optimizer = o,
+            Err(e) => self.stash(e),
+        }
+        self
+    }
+
+    /// Stepsize decay schedule (constant by default).
+    pub fn lr(mut self, lr: LrSchedule) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    /// LR schedule by spec string — `"const"`, `"inv:0.1"`,
+    /// `"step:0.5:100"` (see [`LrSchedule::parse`]).
+    pub fn lr_name(mut self, spec: &str) -> Self {
+        match LrSchedule::parse(spec) {
+            Ok(l) => self.lr = l,
+            Err(e) => self.stash(e),
+        }
         self
     }
 
@@ -239,6 +293,8 @@ impl<'p> RunBuilder<'p> {
         cfg.record_tau = self.record_tau;
         cfg.sr_bits = self.sr_bits;
         cfg.escape = self.escape;
+        cfg.optimizer = self.optimizer;
+        cfg.lr = self.lr;
         let x0 = self.x0.unwrap_or_else(|| vec![0.0; self.problem.dim()]);
         Ok(GdSession { engine: GdEngine::new(cfg, self.problem, &x0) })
     }
@@ -267,6 +323,8 @@ impl<'p> RunBuilder<'p> {
         cfg.record_tau = self.record_tau;
         cfg.sr_bits = self.sr_bits;
         cfg.escape = self.escape;
+        cfg.optimizer = self.optimizer;
+        cfg.lr = self.lr;
         let x0 = self.x0.unwrap_or_else(|| vec![0.0; self.problem.dim()]);
         let roots: Vec<Rng> = (0..reps as u64)
             .map(|r| match &self.rng {
@@ -324,8 +382,6 @@ impl<'p> GdSession<'p> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fp::round::Rounding;
-    use crate::gd::engine::StepSchemes;
     use crate::problems::Quadratic;
 
     /// The builder path is bit-identical to a hand-assembled legacy
@@ -333,11 +389,8 @@ mod tests {
     #[test]
     fn builder_matches_legacy_config_bitwise() {
         let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
-        let schemes = StepSchemes {
-            grad: Rounding::Sr,
-            mul: Rounding::Sr,
-            sub: Rounding::SignedSrEps(0.25),
-        };
+        let schemes =
+            PolicyMap::sites(Scheme::sr(), Scheme::sr(), Scheme::signed_sr_eps(0.25));
         let mut cfg = GdConfig::new(FpFormat::BINARY8, schemes, 0.05, 80);
         cfg.seed = 11;
         let mut legacy = GdEngine::new(cfg, &p, &[1.0]);
@@ -475,6 +528,42 @@ mod tests {
                 .build()
                 .unwrap();
             assert_eq!(tr.objective_series(), s.run(None).objective_series(), "rep {r}");
+        }
+    }
+
+    /// The optimizer / policy / LR spec setters are bit-identical to the
+    /// typed setters, and malformed specs surface at build.
+    #[test]
+    fn builder_optimizer_and_policy_specs_match_typed_setters() {
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+        let series = |b: RunBuilder| b.build().unwrap().run(None).objective_series();
+        let base = || {
+            RunBuilder::new(&p)
+                .format_name("bfloat16")
+                .stepsize(0.02)
+                .steps(60)
+                .seed(4)
+                .start(&[1.0])
+        };
+        let typed = series(
+            base()
+                .policy(PolicyMap::uniform(Scheme::sr()))
+                .optimizer(OptimizerSpec::Momentum { beta: 0.9 })
+                .lr(LrSchedule::InvTime { rate: 0.01 }),
+        );
+        let specced =
+            series(base().policy_spec("sr").optimizer_name("momentum:0.9").lr_name("inv:0.01"));
+        assert_eq!(typed, specced);
+        // Binding specs flow through to the config.
+        let s = base().policy_spec("policy:weights=rn@binary64").build().unwrap();
+        assert!(s.config().schemes.has_bindings());
+        // Malformed specs defer to build().
+        for bad in [
+            base().optimizer_name("adamw"),
+            base().lr_name("step:2.0:5"),
+            base().policy_spec("policy:q=rn"),
+        ] {
+            assert!(matches!(bad.build().unwrap_err(), SchemeError::BadSpec(_)));
         }
     }
 

@@ -6,11 +6,17 @@
 //! (8c)  x̂⁺ = fl₃(x̂ − m)          subtraction, error δ₃
 //! ```
 //!
-//! Each step's rounding scheme is chosen independently ([`SchemePolicy`],
-//! holding any registered [`crate::fp::scheme::Scheme`]; the legacy
-//! enum-typed [`StepSchemes`] converts into it), which is exactly the
+//! Each rounding site is bound independently through the [`PolicyMap`]:
+//! the three per-step sites (8a)/(8b)/(8c) hold any registered
+//! [`crate::fp::scheme::Scheme`], and named state tensors (`weights`, the
+//! optimizer moments `m`/`v`) may additionally carry their own grid and
+//! `sr_bits` — the spec-string form is
+//! `policy:weights=sr_eps:0.4@bf16,m=rn@fp32`. That is exactly the
 //! paper's experimental protocol (e.g. Fig. 4b: SRε for (8a)+(8b),
-//! signed-SRε for (8c)). For `SignedSrEps` the steering value is
+//! signed-SRε for (8c)) extended to state-carrying optimizers, where
+//! master-weights-in-high-precision versus fully-low-precision lanes are
+//! policy spellings rather than code paths. For `SignedSrEps` the
+//! steering value is
 //!
 //! * `(8b)`: `v = −ĝᵢ` — bias `−sign(v) = +sign(ĝᵢ)` *enlarges* the step in
 //!   the gradient direction (the descent choice; with this steering the law
@@ -18,97 +24,293 @@
 //! * `(8c)`: `v = +ĝᵢ` — bias `−sign(ĝᵢ)` on the new iterate, i.e. a descent
 //!   direction, exactly as §4.2.2 prescribes ("replacing v with the
 //!   components of the gradient vector").
+//!
+//! The update law itself is pluggable: [`GdEngine::step`] is a thin
+//! driver over the [`crate::gd::optimizer::Optimizer`] trait (plain GD,
+//! momentum, Nesterov, Adam — see [`OptimizerSpec`]), with plain-`Gd`
+//! trajectories bit-identical to the pre-trait engine for every built-in
+//! scheme.
 
 use crate::fp::grid::Grid;
+use crate::fp::kernels::Site;
 use crate::fp::linalg::{exact, LpCtx};
 use crate::fp::rng::Rng;
-use crate::fp::round::{Rounding, RunHealth, DEFAULT_SR_BITS};
-use crate::fp::scheme::Scheme;
+use crate::fp::round::{RoundPlan, Rounding, RunHealth, DEFAULT_SR_BITS};
+use crate::fp::scheme::{Scheme, SchemeError, SchemeRegistry};
+use crate::gd::optimizer::{LrSchedule, Optimizer, OptimizerSpec, StepCtx};
 use crate::gd::stagnation::tau_k;
 use crate::gd::trace::{IterRecord, RunStatus, Trace};
 use crate::problems::Problem;
 
-/// Per-tensor rounding policy of one GD run: an independent open-API
+/// Rounding policy of one named state tensor: the scheme, plus an
+/// optional grid and `sr_bits` override. A binding with no grid rounds on
+/// the run's working grid; `weights=rn@binary64` is the classic
+/// master-weights lane, `m=sr@bf16` keeps a momentum buffer in bfloat16.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TensorPolicy {
+    /// Rounding scheme applied at this tensor's site.
+    pub scheme: Scheme,
+    /// Grid override; `None` uses the run's working grid.
+    pub grid: Option<Grid>,
+    /// `sr_bits` override; `None` uses the run's `sr_bits`.
+    pub sr_bits: Option<u32>,
+}
+
+impl TensorPolicy {
+    /// A binding with the given scheme on the run's grid and `sr_bits`.
+    pub fn new(scheme: Scheme) -> Self {
+        Self { scheme, grid: None, sr_bits: None }
+    }
+
+    /// Override the grid this tensor rounds (and lives) on.
+    pub fn on(mut self, grid: impl Into<Grid>) -> Self {
+        self.grid = Some(grid.into());
+        self
+    }
+
+    /// Override the random bits per stochastic slice rounding.
+    pub fn with_sr_bits(mut self, bits: u32) -> Self {
+        self.sr_bits = Some(bits);
+        self
+    }
+
+    /// The rounding plan of this site, defaulting omitted overrides to the
+    /// run's grid and `sr_bits`.
+    pub fn plan(&self, default_grid: Grid, default_sr_bits: u32) -> RoundPlan {
+        RoundPlan::new(self.grid.unwrap_or(default_grid))
+            .with_sr_bits(self.sr_bits.unwrap_or(default_sr_bits))
+    }
+
+    /// Canonical spec token, `<scheme>[@<grid>][#<bits>]` with canonical
+    /// scheme/grid names and absent overrides elided.
+    pub fn canon_token(&self) -> String {
+        let mut s = self.scheme.name();
+        if let Some(g) = self.grid {
+            s.push('@');
+            s.push_str(&g.name());
+        }
+        if let Some(b) = self.sr_bits {
+            s.push('#');
+            s.push_str(&b.to_string());
+        }
+        s
+    }
+}
+
+/// The per-tensor rounding policy of one run: an independent open-API
 /// [`Scheme`] for each of the three rounding sites of eq. (8) — the
 /// gradient evaluation (8a), the stepsize multiplication (8b) and the
-/// iterate subtraction (8c). This generalizes the legacy enum-typed
-/// [`StepSchemes`] (which converts via `From`) to any registered scheme,
-/// including user schemes added through
-/// [`crate::fp::scheme::SchemeRegistry::register`].
-#[derive(Debug, Clone, Copy)]
-pub struct SchemePolicy {
+/// iterate subtraction (8c) — plus optional [`TensorPolicy`] bindings for
+/// the named state tensors:
+///
+/// * `weights` — the (8c) landing site of the iterate itself. Binding it
+///   to a wider grid (`weights=rn@binary64`) is the master-weights lane:
+///   updates still round on the working grid, the accumulated iterate
+///   does not.
+/// * `m` / `v` — the optimizer's first/second-moment state tensors
+///   (momentum buffer, Adam moments). Unbound state rounds on the working
+///   grid with the (8b) scheme.
+///
+/// Every consumer — [`crate::gd::RunBuilder`], [`GdConfig`], the CLI
+/// `train` flags, the serve `/v1/run` spec parser and journal/registry
+/// cell identity — speaks this one policy language; [`PolicyMap::parse`]
+/// and [`PolicyMap::canon`] are the spec-string round-trip, canonicalized
+/// so spelling variants share cache keys.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PolicyMap {
     /// Scheme used *inside* the gradient evaluation (8a).
     pub grad: Scheme,
     /// Scheme for the stepsize multiplication (8b).
     pub mul: Scheme,
-    /// Scheme for the final subtraction (8c).
+    /// Scheme for the final subtraction (8c), unless `weights` is bound.
     pub sub: Scheme,
+    /// Binding of the iterate's (8c) landing site (scheme + grid +
+    /// `sr_bits`); `None` lands through `sub` on the working grid.
+    pub weights: Option<TensorPolicy>,
+    /// Binding of the optimizer's first-moment tensor `m`.
+    pub m: Option<TensorPolicy>,
+    /// Binding of the optimizer's second-moment tensor `v`.
+    pub v: Option<TensorPolicy>,
 }
 
-impl SchemePolicy {
-    /// All three steps with the same scheme.
+impl PolicyMap {
+    /// All three sites with the same scheme, no tensor bindings.
     pub fn uniform(scheme: Scheme) -> Self {
-        Self { grad: scheme, mul: scheme, sub: scheme }
+        Self::sites(scheme, scheme, scheme)
     }
 
-    /// Short per-step label, e.g. `8a=SR 8b=SR 8c=signed-SR_eps(0.1)`.
+    /// Per-site schemes for (8a)/(8b)/(8c), no tensor bindings.
+    pub fn sites(grad: Scheme, mul: Scheme, sub: Scheme) -> Self {
+        Self { grad, mul, sub, weights: None, m: None, v: None }
+    }
+
+    /// Bind the iterate's landing site (builder-style).
+    pub fn with_weights(mut self, binding: TensorPolicy) -> Self {
+        self.weights = Some(binding);
+        self
+    }
+
+    /// Bind the first-moment tensor `m` (builder-style).
+    pub fn with_m(mut self, binding: TensorPolicy) -> Self {
+        self.m = Some(binding);
+        self
+    }
+
+    /// Bind the second-moment tensor `v` (builder-style).
+    pub fn with_v(mut self, binding: TensorPolicy) -> Self {
+        self.v = Some(binding);
+        self
+    }
+
+    /// Does any state tensor carry its own binding? (The lane-batched fast
+    /// path keys on this.)
+    pub fn has_bindings(&self) -> bool {
+        self.weights.is_some() || self.m.is_some() || self.v.is_some()
+    }
+
+    /// Short label, e.g. `8a=SR 8b=SR 8c=signed-SR_eps(0.1)`, with bound
+    /// tensors appended (`weights=rn@binary64`) when present.
     pub fn label(&self) -> String {
-        format!("8a={} 8b={} 8c={}", self.grad.label(), self.mul.label(), self.sub.label())
+        let mut s =
+            format!("8a={} 8b={} 8c={}", self.grad.label(), self.mul.label(), self.sub.label());
+        for (name, b) in [("weights", self.weights), ("m", self.m), ("v", self.v)] {
+            if let Some(b) = b {
+                s.push_str(&format!(" {name}={}", b.canon_token()));
+            }
+        }
+        s
     }
 
-    /// Does any of the three steps consume randomness?
+    /// Does any site (base or bound) consume randomness?
     pub fn is_stochastic(&self) -> bool {
-        self.grad.is_stochastic() || self.mul.is_stochastic() || self.sub.is_stochastic()
+        self.grad.is_stochastic()
+            || self.mul.is_stochastic()
+            || self.sub.is_stochastic()
+            || [self.weights, self.m, self.v]
+                .iter()
+                .any(|b| b.map(|b| b.scheme.is_stochastic()).unwrap_or(false))
+    }
+
+    /// Parse a policy spec. A bare scheme spec (`"sr"`, `"sr_eps:0.4"`,
+    /// any registered name) is the uniform policy; the `policy:` form
+    /// binds sites and tensors individually:
+    ///
+    /// ```text
+    /// policy:<entry>,<entry>,...
+    /// <entry> := <tensor>=<scheme>[@<grid>][#<sr_bits>]
+    /// <tensor> := grad|8a | mul|8b | sub|8c | weights|w|x | m|momentum | v
+    /// ```
+    ///
+    /// `@grid`/`#bits` overrides are only meaningful on the state tensors
+    /// (`weights`, `m`, `v`); the base sites take bare schemes. Sites not
+    /// mentioned default to `sr` (the builder default). Grids accept
+    /// every [`Grid::parse`] spelling, `bf16`/`fp16`/`fp32` aliases
+    /// included. Case-insensitive, whitespace-trimmed.
+    pub fn parse(spec: &str) -> Result<Self, SchemeError> {
+        let trimmed = spec.trim();
+        let lower = trimmed.to_ascii_lowercase();
+        let body = match lower.strip_prefix("policy:") {
+            Some(b) => b,
+            None => return Ok(Self::uniform(SchemeRegistry::lookup(trimmed)?)),
+        };
+        let mut pm = Self::uniform(Scheme::sr());
+        for entry in body.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (name, val) = entry.split_once('=').ok_or_else(|| {
+                SchemeError::BadSpec(format!(
+                    "policy entry '{entry}' is not of the form <tensor>=<scheme>[@<grid>][#<bits>]"
+                ))
+            })?;
+            let name = name.trim();
+            let (val, bits) = match val.rsplit_once('#') {
+                Some((v, b)) => {
+                    let bits: u32 = b.trim().parse().ok().filter(|n| (1..=64).contains(n)).ok_or_else(|| {
+                        SchemeError::BadSpec(format!(
+                            "bad sr_bits '#{b}' in policy entry '{entry}' (expected an integer in 1..=64)"
+                        ))
+                    })?;
+                    (v, Some(bits))
+                }
+                None => (val, None),
+            };
+            let (scheme_spec, grid) = match val.rsplit_once('@') {
+                Some((v, g)) => {
+                    let grid = Grid::parse(g.trim())
+                        .ok_or_else(|| SchemeError::UnknownFormat(g.trim().to_string()))?;
+                    (v, Some(grid))
+                }
+                None => (val, None),
+            };
+            let scheme = SchemeRegistry::lookup(scheme_spec)?;
+            let binding = TensorPolicy { scheme, grid, sr_bits: bits };
+            match name {
+                "grad" | "8a" | "mul" | "8b" | "sub" | "8c" => {
+                    if grid.is_some() || bits.is_some() {
+                        return Err(SchemeError::BadSpec(format!(
+                            "site '{name}' takes a bare scheme; @grid/#bits bindings apply to state tensors (weights, m, v)"
+                        )));
+                    }
+                    match name {
+                        "grad" | "8a" => pm.grad = scheme,
+                        "mul" | "8b" => pm.mul = scheme,
+                        _ => pm.sub = scheme,
+                    }
+                }
+                "weights" | "w" | "x" => pm.weights = Some(binding),
+                "m" | "momentum" => pm.m = Some(binding),
+                "v" => pm.v = Some(binding),
+                _ => {
+                    return Err(SchemeError::BadSpec(format!(
+                        "unknown tensor '{name}' in policy spec (known: grad/8a, mul/8b, sub/8c, weights, m, v)"
+                    )))
+                }
+            }
+        }
+        Ok(pm)
+    }
+
+    /// Canonical spec string, re-parseable by [`PolicyMap::parse`]:
+    /// uniform unbound policies collapse to the bare canonical scheme name
+    /// (`"sr"`), everything else to the `policy:` form with default sites
+    /// (`sr`) elided, entries in fixed `grad,mul,sub,weights,m,v` order
+    /// and canonical scheme/grid tokens — so spelling variants coalesce to
+    /// one cell identity.
+    pub fn canon(&self) -> String {
+        if !self.has_bindings() && self.grad == self.mul && self.mul == self.sub {
+            return self.grad.name();
+        }
+        let default = Scheme::sr();
+        let mut parts = Vec::new();
+        if self.grad != default {
+            parts.push(format!("grad={}", self.grad.name()));
+        }
+        if self.mul != default {
+            parts.push(format!("mul={}", self.mul.name()));
+        }
+        if self.sub != default {
+            parts.push(format!("sub={}", self.sub.name()));
+        }
+        for (name, b) in [("weights", self.weights), ("m", self.m), ("v", self.v)] {
+            if let Some(b) = b {
+                parts.push(format!("{name}={}", b.canon_token()));
+            }
+        }
+        format!("policy:{}", parts.join(","))
     }
 }
 
-impl From<StepSchemes> for SchemePolicy {
-    fn from(s: StepSchemes) -> Self {
-        Self { grad: s.grad.into(), mul: s.mul.into(), sub: s.sub.into() }
-    }
-}
-
-impl From<Scheme> for SchemePolicy {
+impl From<Scheme> for PolicyMap {
     fn from(scheme: Scheme) -> Self {
         Self::uniform(scheme)
     }
 }
 
-impl From<Rounding> for SchemePolicy {
+impl From<Rounding> for PolicyMap {
     fn from(mode: Rounding) -> Self {
         Self::uniform(mode.into())
-    }
-}
-
-/// Rounding scheme per GD step, over the closed built-in enum.
-///
-/// **Deprecated shim**: kept so pre-redesign call sites keep compiling;
-/// it converts losslessly into the open [`SchemePolicy`] (which
-/// [`GdConfig::new`] and [`crate::gd::RunBuilder`] accept directly).
-#[derive(Debug, Clone, Copy)]
-pub struct StepSchemes {
-    /// Scheme used *inside* the gradient evaluation (8a).
-    pub grad: Rounding,
-    /// Scheme for the stepsize multiplication (8b).
-    pub mul: Rounding,
-    /// Scheme for the final subtraction (8c).
-    pub sub: Rounding,
-}
-
-impl StepSchemes {
-    /// All three steps with the same scheme.
-    pub fn uniform(mode: Rounding) -> Self {
-        Self { grad: mode, mul: mode, sub: mode }
-    }
-
-    /// This legacy triple as an open-API [`SchemePolicy`].
-    pub fn policy(self) -> SchemePolicy {
-        self.into()
-    }
-
-    /// Short per-step label, e.g. `8a=SR 8b=SR 8c=signed-SR_eps(0.1)`.
-    pub fn label(&self) -> String {
-        self.policy().label()
     }
 }
 
@@ -132,12 +334,12 @@ pub struct GdConfig {
     /// floating-point format or a fixed-point Qm.n grid (both convert
     /// into [`Grid`]); the engine is backend-agnostic.
     pub grid: Grid,
-    /// Rounding scheme per GD step (8a)/(8b)/(8c) — any registered
-    /// [`Scheme`] per step.
-    pub schemes: SchemePolicy,
+    /// Rounding policy: per-site schemes for (8a)/(8b)/(8c) plus optional
+    /// per-state-tensor bindings (see [`PolicyMap`]).
+    pub schemes: PolicyMap,
     /// σ₁ model for the gradient evaluation (8a).
     pub grad_model: GradModel,
-    /// Fixed stepsize t.
+    /// Fixed base stepsize t (decayed per iteration by [`GdConfig::lr`]).
     pub t: f64,
     /// Number of iterations (epochs for the learning problems).
     pub steps: usize,
@@ -166,17 +368,24 @@ pub struct GdConfig {
     /// non-finite or exceeds this threshold. `None` (the default) preserves
     /// the historic run-to-`steps` behavior and trace lengths exactly.
     pub escape: Option<f64>,
+    /// The update law driving each step (plain GD, momentum, Nesterov,
+    /// Adam — see [`OptimizerSpec`]). The default `Gd` keeps trajectories
+    /// bit-identical to the pre-trait engine.
+    pub optimizer: OptimizerSpec,
+    /// Stepsize decay schedule; the default [`LrSchedule::Constant`]
+    /// applies `t` untouched.
+    pub lr: LrSchedule,
 }
 
 impl GdConfig {
     /// A config with the default σ₁ model (`RoundAfterOp`), seed 0, derived
-    /// RNG root, default `sr_bits` and no τ_k recording. `grid` is any
-    /// backend (`FpFormat`, `FixedPoint` or `Grid`); `schemes` is a
-    /// [`SchemePolicy`] or anything converting into one ([`StepSchemes`],
-    /// a single [`Scheme`], a legacy [`Rounding`]).
+    /// RNG root, default `sr_bits`, plain-GD optimizer, constant stepsize
+    /// and no τ_k recording. `grid` is any backend (`FpFormat`,
+    /// `FixedPoint` or `Grid`); `schemes` is a [`PolicyMap`] or anything
+    /// converting into one (a single [`Scheme`], a built-in [`Rounding`]).
     pub fn new(
         grid: impl Into<Grid>,
-        schemes: impl Into<SchemePolicy>,
+        schemes: impl Into<PolicyMap>,
         t: f64,
         steps: usize,
     ) -> Self {
@@ -191,43 +400,59 @@ impl GdConfig {
             record_tau: false,
             sr_bits: DEFAULT_SR_BITS,
             escape: None,
+            optimizer: OptimizerSpec::Gd,
+            lr: LrSchedule::Constant,
         }
     }
 }
 
-/// The GD engine. Owns the iterate and the per-step rounding streams.
+/// The GD engine: owns the iterate, the optimizer state tensors and the
+/// per-site rounding streams, and drives the configured
+/// [`Optimizer`] once per step.
 pub struct GdEngine<'p, P: Problem + ?Sized> {
     /// The run configuration.
     pub cfg: GdConfig,
     /// The objective being minimized.
     pub problem: &'p P,
-    /// Current iterate x̂ (always exactly representable on `cfg.grid`).
+    /// Current iterate x̂ (always exactly representable on the (8c)
+    /// landing grid — `cfg.grid`, or the `weights` binding's grid).
     pub x: Vec<f64>,
     /// Numeric-health counters accumulated over every step taken so far
     /// (NaN/Inf productions, saturation clamps, underflows, stalled steps at
-    /// the (8b)/(8c) rounding sites — see `docs/robustness.md`). [`Self::run`]
-    /// snapshots this into the returned trace.
+    /// every rounding site — optimizer-state sites included; see
+    /// `docs/robustness.md`). [`Self::run`] snapshots this into the
+    /// returned trace.
     pub health: RunHealth,
     ctx_grad: LpCtx,
     rng_mul: Rng,
     rng_sub: Rng,
+    /// Stream of the `m` state site (untouched by plain GD).
+    rng_m: Rng,
+    /// Stream of the `v` state site (untouched by plain GD).
+    rng_v: Rng,
     ghat: Vec<f64>,
     gexact: Vec<f64>,
-    /// Scratch for the rounded update m = fl₂(t·ĝ) of step (8b).
+    /// Scratch for the staged update of step (8b).
     mbuf: Vec<f64>,
     /// Scratch for the steering vector −ĝ of step (8b).
     vneg: Vec<f64>,
     /// Scratch for the landing point z = x̂ − m of step (8c).
     zbuf: Vec<f64>,
+    /// The update law (built from `cfg.optimizer`).
+    opt: Box<dyn Optimizer>,
+    /// Optimizer state tensors, in [`Optimizer::state_names`] order.
+    state: Vec<Vec<f64>>,
 }
 
 impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
     /// Build an engine at `x0` (rounded into the working format with RN).
     ///
     /// The root RNG is `cfg.rng` when set (scheduler-split stream), else
-    /// `Rng::new(cfg.seed)`; the three per-step streams (σ₁ / δ₂ / δ₃) are
-    /// forked off it exactly as before, so legacy `seed`-keyed runs are
-    /// bit-identical to earlier releases.
+    /// `Rng::new(cfg.seed)`; the per-site streams (σ₁ / δ₂ / δ₃, plus the
+    /// optimizer-state streams `opt_m`/`opt_v`) are forked off it. The
+    /// historic forks are unchanged and the state streams are only drawn
+    /// from by state-carrying optimizers, so legacy `seed`-keyed plain-GD
+    /// runs are bit-identical to earlier releases.
     pub fn new(cfg: GdConfig, problem: &'p P, x0: &[f64]) -> Self {
         assert_eq!(x0.len(), problem.dim());
         let root = cfg.rng.clone().unwrap_or_else(|| Rng::new(cfg.seed));
@@ -239,9 +464,10 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
         // The starting point is stored on the working grid.
         let mut x = x0.to_vec();
         let mut rng0 = root.fork("x0", 0);
-        crate::fp::round::RoundPlan::new(cfg.grid)
-            .round_slice(Rounding::RoundNearestEven, &mut x, &mut rng0);
+        RoundPlan::new(cfg.grid).round_slice(Rounding::RoundNearestEven, &mut x, &mut rng0);
         let n = x.len();
+        let opt = cfg.optimizer.build();
+        let state = opt.init_state(n);
         Self {
             problem,
             x,
@@ -249,11 +475,15 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
             ctx_grad,
             rng_mul: root.fork("delta2", 0),
             rng_sub: root.fork("delta3", 0),
+            rng_m: root.fork("opt_m", 0),
+            rng_v: root.fork("opt_v", 0),
             ghat: vec![0.0; n],
             gexact: vec![0.0; n],
             mbuf: vec![0.0; n],
             vneg: vec![0.0; n],
             zbuf: vec![0.0; n],
+            opt,
+            state,
             cfg,
         }
     }
@@ -271,37 +501,66 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
         }
     }
 
-    /// One full GD iteration (8a)+(8b)+(8c). Returns true if the iterate moved.
+    /// One full iteration: the (8a) gradient, then the configured
+    /// optimizer's update law. Returns true if the iterate moved.
     ///
-    /// Steps (8b) and (8c) run through the fused
-    /// [`crate::fp::kernels::gd_update`] kernel: slice roundings over a
-    /// precomputed [`crate::fp::round::RoundPlan`] with mode/format dispatch
-    /// hoisted out of the element loop, and the stochastic draws batched
-    /// through the few-random-bits block source. δ₂ and δ₃ draw from their
-    /// own forked streams as before; deterministic modes consume no
-    /// randomness, so their trajectories are bit-identical to the historic
-    /// per-element path (see `docs/performance.md`).
+    /// This is a thin driver: it resolves the [`PolicyMap`] into concrete
+    /// rounding sites (run plan, `weights`/`m`/`v` bindings), evaluates the
+    /// LR schedule, and hands the [`Optimizer`] a [`StepCtx`] over the
+    /// engine's buffers and streams. With the plain `Gd` optimizer the
+    /// dispatch lands on exactly the historic fused
+    /// [`crate::fp::kernels::gd_update_health`] call — slice roundings over
+    /// a precomputed [`RoundPlan`] with mode/format dispatch hoisted out of
+    /// the element loop, stochastic draws batched through the
+    /// few-random-bits block source, δ₂/δ₃ on their own forked streams —
+    /// so trajectories are bit-identical to the pre-trait engine (see
+    /// `docs/performance.md`).
     pub fn step(&mut self) -> bool {
         self.eval_gradient();
         // One plan derivation per step (not per element); reading `cfg.grid`
         // here keeps the pre-refactor semantics where a caller may adjust
         // the config between steps.
-        let plan =
-            crate::fp::round::RoundPlan::new(self.cfg.grid).with_sr_bits(self.cfg.sr_bits);
-        let moved = crate::fp::kernels::gd_update_health(
-            &plan,
-            self.cfg.schemes.mul,
-            self.cfg.schemes.sub,
-            self.cfg.t,
-            &mut self.x,
-            &self.ghat,
-            &mut self.mbuf,
-            &mut self.vneg,
-            &mut self.zbuf,
-            &mut self.rng_mul,
-            &mut self.rng_sub,
-            &mut self.health,
-        );
+        let plan = RoundPlan::new(self.cfg.grid).with_sr_bits(self.cfg.sr_bits);
+        let pol = self.cfg.schemes;
+        let plan_w = pol.weights.map(|b| b.plan(self.cfg.grid, self.cfg.sr_bits));
+        let plan_m = pol.m.map(|b| b.plan(self.cfg.grid, self.cfg.sr_bits));
+        let plan_v = pol.v.map(|b| b.plan(self.cfg.grid, self.cfg.sr_bits));
+        let mul = Site { plan: &plan, scheme: pol.mul };
+        let sub = match (&plan_w, pol.weights) {
+            (Some(p), Some(b)) => Site { plan: p, scheme: b.scheme },
+            _ => Site { plan: &plan, scheme: pol.sub },
+        };
+        // Unbound state tensors round on the working grid with the (8b)
+        // scheme: state accumulation is stepsize-multiplication-shaped
+        // arithmetic.
+        let m_site = match (&plan_m, pol.m) {
+            (Some(p), Some(b)) => Site { plan: p, scheme: b.scheme },
+            _ => Site { plan: &plan, scheme: pol.mul },
+        };
+        let v_site = match (&plan_v, pol.v) {
+            (Some(p), Some(b)) => Site { plan: p, scheme: b.scheme },
+            _ => Site { plan: &plan, scheme: pol.mul },
+        };
+        let k = self.health.steps;
+        let moved = self.opt.apply_step(StepCtx {
+            mul,
+            sub,
+            m_site,
+            v_site,
+            t: self.cfg.lr.at(self.cfg.t, k),
+            k,
+            x: &mut self.x,
+            ghat: &self.ghat,
+            state: &mut self.state,
+            mbuf: &mut self.mbuf,
+            vneg: &mut self.vneg,
+            zbuf: &mut self.zbuf,
+            rng_mul: &mut self.rng_mul,
+            rng_sub: &mut self.rng_sub,
+            rng_m: &mut self.rng_m,
+            rng_v: &mut self.rng_v,
+            health: &mut self.health,
+        });
         self.health.steps += 1;
         if !moved {
             self.health.stalled_steps += 1;
@@ -313,6 +572,23 @@ impl<'p, P: Problem + ?Sized> GdEngine<'p, P> {
     /// (profiling; powers the rounds/sec report of `train_mlr_e2e`).
     pub fn grad_rounding_ops(&self) -> u64 {
         self.ctx_grad.rounding_ops
+    }
+
+    /// The configured update law.
+    pub fn optimizer(&self) -> &dyn Optimizer {
+        self.opt.as_ref()
+    }
+
+    /// Stable names of the optimizer's state tensors, in storage order.
+    pub fn state_names(&self) -> &'static [&'static str] {
+        self.opt.state_names()
+    }
+
+    /// A state tensor by its stable name (`"m"`, `"v"`), or `None` when
+    /// the optimizer carries no tensor of that name.
+    pub fn state_tensor(&self, name: &str) -> Option<&[f64]> {
+        let idx = self.opt.state_names().iter().position(|&n| n == name)?;
+        Some(&self.state[idx])
     }
 
     /// Run the configured number of steps, recording a [`Trace`].
@@ -383,8 +659,8 @@ mod tests {
     use crate::fp::grid::{FixedPoint, NumberGrid};
     use crate::problems::quadratic::Quadratic;
 
-    fn schemes_rn() -> StepSchemes {
-        StepSchemes::uniform(Rounding::RoundNearestEven)
+    fn schemes_rn() -> PolicyMap {
+        PolicyMap::uniform(Scheme::rn())
     }
 
     /// In exact arithmetic (binary64 + RN ≈ exact for these magnitudes) GD on
@@ -439,7 +715,8 @@ mod tests {
         let mut acc = 0.0;
         let nseed = 8;
         for s in 0..nseed {
-            let mut c = GdConfig::new(FpFormat::BINARY8, StepSchemes::uniform(Rounding::Sr), 0.05, 200);
+            let mut c =
+                GdConfig::new(FpFormat::BINARY8, PolicyMap::uniform(Scheme::sr()), 0.05, 200);
             c.seed = 100 + s;
             let mut esr = GdEngine::new(c, &p, &[1.0]);
             acc += esr.run(None).final_f();
@@ -460,11 +737,11 @@ mod tests {
     fn signed_sr_eps_beats_sr() {
         let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
         let steps = 120;
-        let avg_auc = |sub: Rounding| -> f64 {
+        let avg_auc = |sub: Scheme| -> f64 {
             let mut acc = 0.0;
             let nseed = 10;
             for s in 0..nseed {
-                let schemes = StepSchemes { grad: Rounding::Sr, mul: Rounding::Sr, sub };
+                let schemes = PolicyMap::sites(Scheme::sr(), Scheme::sr(), sub);
                 let mut c = GdConfig::new(FpFormat::BINARY8, schemes, 0.05, steps);
                 c.seed = 10 + s;
                 let mut e = GdEngine::new(c, &p, &[1.0]);
@@ -472,8 +749,8 @@ mod tests {
             }
             acc / nseed as f64
         };
-        let auc_sr = avg_auc(Rounding::Sr);
-        let auc_signed = avg_auc(Rounding::SignedSrEps(0.25));
+        let auc_sr = avg_auc(Scheme::sr());
+        let auc_signed = avg_auc(Scheme::signed_sr_eps(0.25));
         assert!(
             auc_signed < auc_sr,
             "signed-SRε should beat SR: signed={auc_signed} sr={auc_sr}"
@@ -487,7 +764,7 @@ mod tests {
         let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
         let mk = |rng: Option<Rng>, seed: u64| {
             let mut cfg =
-                GdConfig::new(FpFormat::BINARY8, StepSchemes::uniform(Rounding::Sr), 0.05, 60);
+                GdConfig::new(FpFormat::BINARY8, PolicyMap::uniform(Scheme::sr()), 0.05, 60);
             cfg.seed = seed;
             cfg.rng = rng;
             let mut e = GdEngine::new(cfg, &p, &[1.0]);
@@ -521,7 +798,7 @@ mod tests {
         let mut acc = 0.0;
         let nseed = 8;
         for s in 0..nseed {
-            let mut c = GdConfig::new(fx, StepSchemes::uniform(Rounding::Sr), 0.02, 120);
+            let mut c = GdConfig::new(fx, PolicyMap::uniform(Scheme::sr()), 0.02, 120);
             c.seed = 50 + s;
             let mut esr = GdEngine::new(c, &p, &[6.0]);
             acc += esr.run(None).final_f();
@@ -536,7 +813,7 @@ mod tests {
     fn iterate_stays_in_format() {
         let p = Quadratic::diagonal(vec![1.0, 3.0, 0.2], vec![0.3, -2.0, 5.0]);
         let mut cfg =
-            GdConfig::new(FpFormat::BINARY8, StepSchemes::uniform(Rounding::Sr), 0.07, 60);
+            GdConfig::new(FpFormat::BINARY8, PolicyMap::uniform(Scheme::sr()), 0.07, 60);
         cfg.seed = 5;
         let mut e = GdEngine::new(cfg, &p, &[2.0, 2.0, 2.0]);
         for _ in 0..60 {
@@ -609,5 +886,212 @@ mod tests {
         assert_eq!(tr.health.stalled_steps, stalled);
         assert_eq!(tr.health.steps, 40);
         assert_eq!(tr.health.nan_inf, 0, "{}", tr.health.summary());
+    }
+
+    /// The bit-identity contract of the refactor: with the plain `Gd`
+    /// optimizer the engine reproduces the pre-trait engine body — the
+    /// same forked streams ("sigma1"/"x0"/"delta2"/"delta3"), the same
+    /// per-step plan derivation, the same fused kernel call — bit-exactly,
+    /// for every built-in scheme.
+    #[test]
+    fn gd_path_is_bit_identical_to_direct_kernel_loop() {
+        use crate::fp::kernels;
+        let p = Quadratic::diagonal(vec![2.0, 0.7, 1.3], vec![1024.0, -3.0, 0.5]);
+        let x0 = [1.0, 2.0, -0.5];
+        let steps = 50;
+        for scheme in [
+            Scheme::rn(),
+            Scheme::rd(),
+            Scheme::ru(),
+            Scheme::rz(),
+            Scheme::sr(),
+            Scheme::sr_eps(0.25),
+            Scheme::signed_sr_eps(0.25),
+        ] {
+            let mut cfg =
+                GdConfig::new(FpFormat::BINARY8, PolicyMap::uniform(scheme), 0.05, steps);
+            cfg.seed = 7;
+            let mut e = GdEngine::new(cfg.clone(), &p, &x0);
+            for _ in 0..steps {
+                e.step();
+            }
+            // The pre-refactor engine body, inlined.
+            let root = Rng::new(cfg.seed);
+            let mut ctx =
+                LpCtx::new(cfg.grid, scheme, root.fork("sigma1", 0)).with_sr_bits(cfg.sr_bits);
+            let mut x = x0.to_vec();
+            RoundPlan::new(cfg.grid).round_slice(
+                Rounding::RoundNearestEven,
+                &mut x,
+                &mut root.fork("x0", 0),
+            );
+            let (mut rng_mul, mut rng_sub) = (root.fork("delta2", 0), root.fork("delta3", 0));
+            let n = x.len();
+            let (mut ghat, mut mbuf, mut vneg, mut zbuf) =
+                (vec![0.0; n], vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+            let mut health = RunHealth::default();
+            for _ in 0..steps {
+                p.gradient_rounded(&x, &mut ctx, &mut ghat);
+                let plan = RoundPlan::new(cfg.grid).with_sr_bits(cfg.sr_bits);
+                kernels::gd_update_health(
+                    &plan, scheme, scheme, cfg.t, &mut x, &ghat, &mut mbuf, &mut vneg,
+                    &mut zbuf, &mut rng_mul, &mut rng_sub, &mut health,
+                );
+            }
+            for (a, b) in e.x.iter().zip(&x) {
+                assert_eq!(a.to_bits(), b.to_bits(), "scheme {}", scheme.name());
+            }
+        }
+    }
+
+    /// PolicyMap spec strings parse, canonicalize with default elision, and
+    /// round-trip — so spelling variants coalesce to one identity.
+    #[test]
+    fn policy_specs_parse_and_canonicalize() {
+        // Uniform spellings collapse to the bare canonical scheme name.
+        for spec in ["sr", "SR", " sr "] {
+            assert_eq!(PolicyMap::parse(spec).unwrap().canon(), "sr");
+        }
+        assert_eq!(PolicyMap::parse("signed:0.4").unwrap().canon(), "signed_sr_eps:0.4");
+        // The headline grammar: per-tensor bindings with grid aliases.
+        let p = PolicyMap::parse("policy:weights=sr_eps:0.4@bf16,m=rn@fp32").unwrap();
+        assert_eq!(p.weights.unwrap().scheme, Scheme::sr_eps(0.4));
+        assert_eq!(p.weights.unwrap().grid, Some(Grid::from(FpFormat::BFLOAT16)));
+        assert_eq!(p.m.unwrap().grid, Some(Grid::from(FpFormat::BINARY32)));
+        assert_eq!(p.canon(), "policy:weights=sr_eps:0.4@bfloat16,m=rn@binary32");
+        assert_eq!(PolicyMap::parse(&p.canon()).unwrap(), p);
+        // Base sites take bare schemes; default (sr) sites are elided.
+        let q = PolicyMap::parse("policy:8a=sr,8b=SR,8c=signed_sr_eps:0.25").unwrap();
+        assert_eq!(q.sub, Scheme::signed_sr_eps(0.25));
+        assert_eq!(q.canon(), "policy:sub=signed_sr_eps:0.25");
+        assert_eq!(PolicyMap::parse(&q.canon()).unwrap(), q);
+        // sr_bits bindings round-trip too.
+        let r = PolicyMap::parse("policy:m=sr@bf16#8,v=sr@fp16").unwrap();
+        assert_eq!(r.m.unwrap().sr_bits, Some(8));
+        assert_eq!(r.v.unwrap().grid, Some(Grid::from(FpFormat::BINARY16)));
+        assert_eq!(PolicyMap::parse(&r.canon()).unwrap(), r);
+        // Errors: malformed entries, unknown tensors/grids/schemes, and
+        // @grid on a base site.
+        for bad in [
+            "policy:q=rn",
+            "policy:8b=rn@bf16",
+            "policy:weights=rn@nosuch",
+            "policy:weights=bogus",
+            "policy:weights",
+            "policy:m=sr@bf16#99",
+        ] {
+            assert!(PolicyMap::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    /// Momentum, Nesterov and Adam all contract on a well-conditioned
+    /// quadratic in exact arithmetic — the update laws are wired correctly.
+    #[test]
+    fn stateful_optimizers_converge_in_exact_arithmetic() {
+        let p = Quadratic::diagonal(vec![1.0, 0.5], vec![0.0, 0.0]);
+        for opt in [
+            OptimizerSpec::Momentum { beta: 0.9 },
+            OptimizerSpec::Nesterov { beta: 0.9 },
+            OptimizerSpec::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        ] {
+            let mut cfg = GdConfig::new(FpFormat::BINARY64, schemes_rn(), 0.05, 400);
+            cfg.grad_model = GradModel::Exact;
+            cfg.optimizer = opt;
+            let mut e = GdEngine::new(cfg, &p, &[1.0, -1.0]);
+            let tr = e.run(None);
+            assert!(
+                tr.final_f() < 1e-4 * tr.records[0].f,
+                "{opt:?}: f0={} fT={}",
+                tr.records[0].f,
+                tr.final_f()
+            );
+        }
+    }
+
+    /// The paper's stagnation-vs-scheme story carries over to the momentum
+    /// buffer: on bfloat16 with RN everywhere the run freezes off-optimum,
+    /// while SR state rounding keeps moving (averaged over seeds).
+    #[test]
+    fn momentum_rn_stagnates_and_sr_state_escapes_on_bf16() {
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+        let run = |policy: PolicyMap, seed: u64| {
+            let mut cfg = GdConfig::new(FpFormat::BFLOAT16, policy, 0.02, 300);
+            cfg.optimizer = OptimizerSpec::Momentum { beta: 0.9 };
+            cfg.seed = seed;
+            let mut e = GdEngine::new(cfg, &p, &[1.0]);
+            e.run(None).final_f()
+        };
+        let f_rn = run(PolicyMap::uniform(Scheme::rn()), 1);
+        let mut acc = 0.0;
+        let nseed = 6;
+        for s in 0..nseed {
+            acc += run(PolicyMap::uniform(Scheme::sr()), 100 + s);
+        }
+        let f_sr = acc / nseed as f64;
+        assert!(
+            f_sr < 0.5 * f_rn,
+            "SR should escape the momentum stagnation: sr={f_sr} rn={f_rn}"
+        );
+    }
+
+    /// A `weights=rn@binary64` binding is the master-weights lane: updates
+    /// still round on the working grid, but the iterate accumulates in high
+    /// precision and leaves the low-precision grid.
+    #[test]
+    fn master_weights_binding_accumulates_off_the_working_grid() {
+        let p = Quadratic::diagonal(vec![2.0, 0.7], vec![0.3, -1.2]);
+        let policy = PolicyMap::uniform(Scheme::sr())
+            .with_weights(TensorPolicy::new(Scheme::rn()).on(FpFormat::BINARY64));
+        let mut cfg = GdConfig::new(FpFormat::BINARY8, policy, 0.05, 60);
+        cfg.seed = 3;
+        let mut e = GdEngine::new(cfg, &p, &[2.0, 2.0]);
+        let tr = e.run(None);
+        assert!(tr.status.is_completed());
+        // The iterate escaped binary8 (sums of rounded updates are not
+        // representable in a 2-bit significand), and the run got closer to
+        // the optimum than the format could express.
+        assert!(
+            e.x.iter().any(|&xi| !FpFormat::BINARY8.contains(xi)),
+            "master weights should leave the working grid: {:?}",
+            e.x
+        );
+        assert!(tr.final_f() < tr.records[0].f);
+    }
+
+    /// LR schedules decay the effective stepsize: in exact arithmetic the
+    /// staircase schedule reproduces the hand-computed trajectory.
+    #[test]
+    fn lr_schedule_decays_effective_stepsize() {
+        let p = Quadratic::diagonal(vec![0.5], vec![0.0]); // ∇f = x
+        let mut cfg = GdConfig::new(FpFormat::BINARY64, schemes_rn(), 0.5, 4);
+        cfg.grad_model = GradModel::Exact;
+        cfg.lr = LrSchedule::Step { gamma: 0.5, period: 2 };
+        let mut e = GdEngine::new(cfg, &p, &[1.0]);
+        let mut want = 1.0f64;
+        for k in 0u64..4 {
+            e.step();
+            let tk = 0.5 * 0.5f64.powi((k / 2) as i32);
+            want -= tk * want;
+            assert_eq!(e.x[0], want, "k={k}");
+        }
+    }
+
+    /// State tensors are reachable by their stable names, and absent on
+    /// plain GD.
+    #[test]
+    fn state_tensors_are_enumerable_by_name() {
+        let p = Quadratic::diagonal(vec![2.0], vec![0.0]);
+        let mut cfg = GdConfig::new(FpFormat::BINARY64, schemes_rn(), 0.1, 10);
+        cfg.optimizer = OptimizerSpec::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let mut e = GdEngine::new(cfg, &p, &[1.0]);
+        assert_eq!(e.state_names(), &["m", "v"]);
+        e.step();
+        assert!(e.state_tensor("m").unwrap()[0] != 0.0);
+        assert!(e.state_tensor("v").unwrap()[0] != 0.0);
+        assert!(e.state_tensor("bogus").is_none());
+        let cfg_gd = GdConfig::new(FpFormat::BINARY64, schemes_rn(), 0.1, 10);
+        let e_gd = GdEngine::new(cfg_gd, &p, &[1.0]);
+        assert_eq!(e_gd.state_names(), &[] as &[&str]);
+        assert!(e_gd.state_tensor("m").is_none());
     }
 }

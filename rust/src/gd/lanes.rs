@@ -13,9 +13,12 @@
 //! and golden layers — see `docs/performance.md`).
 //!
 //! Features that are inherently per-lane-sequential — τ_k recording (an
-//! extra gradient evaluation interleaved with the σ₁ stream) and the
-//! divergence guard (early exit at different steps per lane) — fall back
-//! to per-lane scalar engines, which satisfies the identity trivially.
+//! extra gradient evaluation interleaved with the σ₁ stream), the
+//! divergence guard (early exit at different steps per lane), state-carrying
+//! optimizers and per-tensor policy bindings (their state streams and extra
+//! rounding sites have no lane kernel yet), and non-constant LR schedules —
+//! fall back to per-lane scalar engines, which satisfies the identity
+//! trivially.
 
 use crate::fp::kernels;
 use crate::fp::lanes::LaneBatch;
@@ -47,8 +50,14 @@ pub fn run_lane_batch<P: Problem + ?Sized>(
     // τ_k interleaves an extra (8a) evaluation with the per-lane σ₁ stream
     // and the escape guard ends lanes at different steps; both are
     // per-lane-sequential, so serve them with scalar engines (identical
-    // results by construction).
-    if cfg.record_tau || cfg.escape.is_some() {
+    // results by construction). State-carrying optimizers, per-tensor
+    // policy bindings and LR schedules likewise take the scalar path.
+    if cfg.record_tau
+        || cfg.escape.is_some()
+        || !cfg.optimizer.is_gd()
+        || cfg.schemes.has_bindings()
+        || !cfg.lr.is_constant()
+    {
         return roots
             .iter()
             .map(|root| {
@@ -183,7 +192,9 @@ pub fn run_lane_batch<P: Problem + ?Sized>(
 mod tests {
     use super::*;
     use crate::fp::format::FpFormat;
-    use crate::gd::engine::{SchemePolicy, StepSchemes};
+    use crate::fp::scheme::Scheme;
+    use crate::gd::engine::PolicyMap;
+    use crate::gd::optimizer::OptimizerSpec;
     use crate::problems::quadratic::Quadratic;
 
     fn scalar_oracle<P: Problem + ?Sized>(
@@ -230,17 +241,12 @@ mod tests {
     fn lane_batch_matches_scalar_engines_bitwise() {
         let diag = Quadratic::diagonal(vec![2.0, 0.7, 1.3], vec![4.0, -1.0, 0.5]);
         let (dense, _, _) = Quadratic::setting2(9, 1);
-        let policies: Vec<(&str, SchemePolicy)> = vec![
-            ("rn", StepSchemes::uniform(Rounding::RoundNearestEven).into()),
-            ("sr", StepSchemes::uniform(Rounding::Sr).into()),
+        let policies: Vec<(&str, PolicyMap)> = vec![
+            ("rn", PolicyMap::uniform(Scheme::rn())),
+            ("sr", PolicyMap::uniform(Scheme::sr())),
             (
                 "mixed",
-                StepSchemes {
-                    grad: Rounding::Sr,
-                    mul: Rounding::SrEps(0.2),
-                    sub: Rounding::SignedSrEps(0.25),
-                }
-                .into(),
+                PolicyMap::sites(Scheme::sr(), Scheme::sr_eps(0.2), Scheme::signed_sr_eps(0.25)),
             ),
         ];
         let metric: Option<&dyn Fn(&[f64]) -> f64> = Some(&|x: &[f64]| x[0] * 2.0);
@@ -274,12 +280,7 @@ mod tests {
     #[test]
     fn lane_width_does_not_change_results() {
         let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
-        let cfg = GdConfig::new(
-            FpFormat::BINARY8,
-            StepSchemes::uniform(Rounding::Sr),
-            0.05,
-            60,
-        );
+        let cfg = GdConfig::new(FpFormat::BINARY8, Scheme::sr(), 0.05, 60);
         let roots: Vec<Rng> = (0..8).map(|l| Rng::new(7).split(l)).collect();
         let wide = run_lane_batch(&cfg, &p, &[1.0], &roots, None);
         for l in 0..8 {
@@ -297,12 +298,7 @@ mod tests {
     #[test]
     fn sequential_features_fall_back_to_scalar_engines() {
         let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
-        let mut cfg = GdConfig::new(
-            FpFormat::BINARY8,
-            StepSchemes::uniform(Rounding::Sr),
-            0.05,
-            30,
-        );
+        let mut cfg = GdConfig::new(FpFormat::BINARY8, Scheme::sr(), 0.05, 30);
         cfg.record_tau = true;
         let roots: Vec<Rng> = (0..3).map(|l| Rng::new(11).split(l)).collect();
         let traces = run_lane_batch(&cfg, &p, &[1.0], &roots, None);
@@ -312,12 +308,7 @@ mod tests {
             assert_traces_bit_equal(tr, &oracle, &format!("tau lane {l}"));
         }
         // Divergence guard: an unstable stepsize trips `escape` per lane.
-        let mut cfg2 = GdConfig::new(
-            FpFormat::BINARY64,
-            StepSchemes::uniform(Rounding::RoundNearestEven),
-            1.0,
-            100,
-        );
+        let mut cfg2 = GdConfig::new(FpFormat::BINARY64, Scheme::rn(), 1.0, 100);
         cfg2.grad_model = GradModel::Exact;
         cfg2.escape = Some(1e8);
         let p2 = Quadratic::diagonal(vec![2.0], vec![0.0]);
@@ -326,6 +317,37 @@ mod tests {
             let oracle = scalar_oracle(&cfg2, &p2, &[1.0], &roots[l], None);
             assert_traces_bit_equal(tr, &oracle, &format!("escape lane {l}"));
             assert!(!tr.status.is_completed(), "lane {l} should diverge");
+        }
+    }
+
+    /// Stateful optimizers, per-tensor policy bindings and LR schedules
+    /// also fall back to scalar engines — the lane kernel knows nothing of
+    /// state streams or binding sites, so the fallback predicate must fire.
+    #[test]
+    fn optimizer_and_policy_bindings_fall_back_to_scalar_engines() {
+        use crate::gd::engine::TensorPolicy;
+        use crate::gd::optimizer::LrSchedule;
+        let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
+        let roots: Vec<Rng> = (0..3).map(|l| Rng::new(13).split(l)).collect();
+        let mut variants: Vec<(&str, GdConfig)> = Vec::new();
+        let mut c1 = GdConfig::new(FpFormat::BFLOAT16, Scheme::sr(), 0.02, 40);
+        c1.optimizer = OptimizerSpec::Momentum { beta: 0.9 };
+        variants.push(("momentum", c1));
+        let mut c2 = GdConfig::new(FpFormat::BFLOAT16, Scheme::sr(), 0.02, 40);
+        c2.optimizer = OptimizerSpec::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        variants.push(("adam", c2));
+        let bound = PolicyMap::uniform(Scheme::sr())
+            .with_weights(TensorPolicy::new(Scheme::rn()).on(FpFormat::BINARY64));
+        variants.push(("bound", GdConfig::new(FpFormat::BINARY8, bound, 0.05, 40)));
+        let mut c3 = GdConfig::new(FpFormat::BINARY8, Scheme::sr(), 0.05, 40);
+        c3.lr = LrSchedule::InvTime { rate: 0.1 };
+        variants.push(("lr", c3));
+        for (tag, cfg) in &variants {
+            let traces = run_lane_batch(cfg, &p, &[1.0], &roots, None);
+            for (l, tr) in traces.iter().enumerate() {
+                let oracle = scalar_oracle(cfg, &p, &[1.0], &roots[l], None);
+                assert_traces_bit_equal(tr, &oracle, &format!("{tag} lane {l}"));
+            }
         }
     }
 }

@@ -5,12 +5,14 @@
 pub mod builder;
 pub mod engine;
 pub mod lanes;
+pub mod optimizer;
 pub mod stagnation;
 pub mod theory;
 pub mod trace;
 
 pub use builder::{GdSession, RunBuilder};
-pub use engine::{GdConfig, GdEngine, GradModel, SchemePolicy, StepSchemes};
+pub use engine::{GdConfig, GdEngine, GradModel, PolicyMap, TensorPolicy};
 pub use lanes::run_lane_batch;
+pub use optimizer::{LrSchedule, Optimizer, OptimizerSpec, StepCtx};
 pub use stagnation::{lsb_is_even, tau_k, StagnationReport};
 pub use trace::{IterRecord, RunStatus, Trace};

@@ -1,0 +1,620 @@
+//! The optimizer zoo: the [`Optimizer`] trait, its built-in
+//! implementations (plain [`Gd`], heavy-ball [`Momentum`], [`Nesterov`],
+//! [`Adam`]) and the [`LrSchedule`] stepsize decay laws.
+//!
+//! The paper's mechanism — roundoff bias in a descent direction rescuing
+//! low-precision GD from stagnation (§4.2.2) — has a second battlefield
+//! in state-carrying optimizers: momentum buffers and Adam moments are
+//! accumulated with exactly the small-update arithmetic where RN
+//! stagnates, so *optimizer state* is a rounding site in its own right
+//! ("Stochastic Rounding 2.0", arXiv:2410.10517). The trait makes the
+//! update law pluggable while [`crate::gd::GdEngine`] stays the one
+//! driver: it owns the iterate, the gradient context, the per-site RNG
+//! streams and the state tensors, and hands an [`Optimizer`] a
+//! [`StepCtx`] view of them once per iteration.
+//!
+//! Rounding-wise each optimizer is a composition of the fused kernels in
+//! [`crate::fp::kernels`]: every state tensor has a named rounding site
+//! resolved through the engine's [`crate::gd::PolicyMap`] (scheme + grid
+//! + `sr_bits` per tensor), so master-weights-in-high-precision versus
+//! fully-low-precision-state lanes are policy spellings, not code paths.
+//! With the plain [`Gd`] optimizer the driver issues exactly the historic
+//! fused `gd_update_health` call on the historic streams — trajectories
+//! are bit-identical to the pre-trait engine for every built-in scheme.
+
+use crate::fp::kernels::{self, AdamParams, Site};
+use crate::fp::rng::Rng;
+use crate::fp::round::RunHealth;
+use crate::fp::scheme::SchemeError;
+
+/// Default momentum coefficient β for `momentum`/`nesterov` specs given
+/// without a parameter (the conventional value).
+pub const DEFAULT_BETA: f64 = 0.9;
+/// Default Adam second-moment coefficient β₂.
+pub const DEFAULT_ADAM_BETA2: f64 = 0.999;
+/// Default Adam denominator offset ε.
+pub const DEFAULT_ADAM_EPS: f64 = 1e-8;
+
+fn bad(msg: String) -> SchemeError {
+    SchemeError::BadSpec(msg)
+}
+
+// ---------------------------------------------------------- LR schedules --
+
+/// Stepsize decay schedule: the effective stepsize of iteration `k` is
+/// [`LrSchedule::at`]`(t, k)` over the configured base stepsize `t`.
+/// [`LrSchedule::Constant`] returns the base *untouched* (no arithmetic),
+/// so constant-schedule trajectories are bit-identical to pre-schedule
+/// releases.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// Fixed stepsize `t_k = t` (the paper's protocol; the default).
+    Constant,
+    /// Inverse-time decay `t_k = t / (1 + rate·k)`.
+    InvTime {
+        /// Decay rate per iteration.
+        rate: f64,
+    },
+    /// Staircase decay `t_k = t · γ^⌊k/period⌋`.
+    Step {
+        /// Multiplicative factor per stage, in `(0, 1]`.
+        gamma: f64,
+        /// Iterations per stage.
+        period: u32,
+    },
+}
+
+impl LrSchedule {
+    /// The effective stepsize at iteration `k` (0-based) for base `t`.
+    pub fn at(&self, t: f64, k: u64) -> f64 {
+        match *self {
+            LrSchedule::Constant => t,
+            LrSchedule::InvTime { rate } => t / (1.0 + rate * k as f64),
+            LrSchedule::Step { gamma, period } => t * gamma.powi((k / period as u64) as i32),
+        }
+    }
+
+    /// Is this the constant (identity) schedule?
+    pub fn is_constant(&self) -> bool {
+        matches!(self, LrSchedule::Constant)
+    }
+
+    /// Parse a schedule spec: `"const"` (aliases `constant`, `none`,
+    /// `fixed`), `"inv:<rate>"` (alias `inv_time`), `"step:<gamma>:<period>"`.
+    /// Case-insensitive, whitespace-trimmed.
+    pub fn parse(spec: &str) -> Result<Self, SchemeError> {
+        let s = spec.trim().to_ascii_lowercase();
+        let mut it = s.split(':');
+        let family = it.next().unwrap_or("");
+        let params: Vec<&str> = it.collect();
+        let want = |n: usize| -> Result<(), SchemeError> {
+            if params.len() == n {
+                Ok(())
+            } else {
+                Err(bad(format!(
+                    "lr schedule '{spec}' is malformed (known: const, inv:<rate>, step:<gamma>:<period>)"
+                )))
+            }
+        };
+        let num = |p: &str| -> Result<f64, SchemeError> {
+            p.trim()
+                .parse::<f64>()
+                .map_err(|_| bad(format!("bad number '{p}' in lr schedule '{spec}'")))
+        };
+        match family {
+            "const" | "constant" | "none" | "fixed" => {
+                want(0)?;
+                Ok(LrSchedule::Constant)
+            }
+            "inv" | "inv_time" | "invtime" => {
+                want(1)?;
+                let rate = num(params[0])?;
+                if !(rate.is_finite() && rate >= 0.0) {
+                    return Err(bad(format!("inv-time rate must be finite and >= 0, got '{}'", params[0])));
+                }
+                Ok(LrSchedule::InvTime { rate })
+            }
+            "step" => {
+                want(2)?;
+                let gamma = num(params[0])?;
+                let period: u32 = params[1].trim().parse().map_err(|_| {
+                    bad(format!("bad period '{}' in lr schedule '{spec}'", params[1]))
+                })?;
+                if !(gamma > 0.0 && gamma <= 1.0) || period == 0 {
+                    return Err(bad(format!(
+                        "step schedule needs gamma in (0,1] and period >= 1, got '{spec}'"
+                    )));
+                }
+                Ok(LrSchedule::Step { gamma, period })
+            }
+            _ => Err(bad(format!(
+                "unknown lr schedule '{spec}' (known: const, inv:<rate>, step:<gamma>:<period>)"
+            ))),
+        }
+    }
+
+    /// Canonical spec string, re-parseable by [`LrSchedule::parse`]:
+    /// `"const"`, `"inv:<rate>"`, `"step:<gamma>:<period>"`.
+    pub fn canon(&self) -> String {
+        match *self {
+            LrSchedule::Constant => "const".into(),
+            LrSchedule::InvTime { rate } => format!("inv:{rate}"),
+            LrSchedule::Step { gamma, period } => format!("step:{gamma}:{period}"),
+        }
+    }
+}
+
+impl Default for LrSchedule {
+    fn default() -> Self {
+        LrSchedule::Constant
+    }
+}
+
+// ------------------------------------------------------- optimizer specs --
+
+/// Value-level description of an optimizer: what flows through
+/// [`crate::gd::GdConfig`], CLI flags, serve specs and cell identity.
+/// [`OptimizerSpec::build`] instantiates the matching [`Optimizer`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimizerSpec {
+    /// Plain gradient descent, eq. (8) — the paper's protocol and the
+    /// default. No state tensors; trajectories bit-identical to the
+    /// pre-trait engine.
+    Gd,
+    /// Heavy-ball momentum: `m⁺ = fl(β·m + t·ĝ)`, `x⁺ = fl(x − m⁺)`.
+    Momentum {
+        /// Momentum coefficient β ∈ [0, 1).
+        beta: f64,
+    },
+    /// Nesterov momentum: `m⁺ = fl(β·m + t·ĝ)`, then the lookahead update
+    /// `u = fl(β·m⁺ + t·ĝ)`, `x⁺ = fl(x − u)`.
+    Nesterov {
+        /// Momentum coefficient β ∈ [0, 1).
+        beta: f64,
+    },
+    /// Adam (Kingma & Ba) with bias correction; moments are state tensors
+    /// `m` and `v` with their own rounding sites.
+    Adam {
+        /// First-moment coefficient β₁ ∈ [0, 1).
+        beta1: f64,
+        /// Second-moment coefficient β₂ ∈ [0, 1).
+        beta2: f64,
+        /// Denominator offset ε > 0.
+        eps: f64,
+    },
+}
+
+impl OptimizerSpec {
+    /// Is this plain GD? (The engine's lane-batched fast path and the
+    /// bit-identity guarantees key on it.)
+    pub fn is_gd(&self) -> bool {
+        matches!(self, OptimizerSpec::Gd)
+    }
+
+    /// Stable names of the state tensors this optimizer carries, in
+    /// [`Optimizer::init_state`] order — the names the
+    /// [`crate::gd::PolicyMap`] binds rounding policies to.
+    pub fn state_names(&self) -> &'static [&'static str] {
+        match self {
+            OptimizerSpec::Gd => &[],
+            OptimizerSpec::Momentum { .. } | OptimizerSpec::Nesterov { .. } => &["m"],
+            OptimizerSpec::Adam { .. } => &["m", "v"],
+        }
+    }
+
+    /// Parse an optimizer spec: `"gd"` (alias `sgd`), `"momentum[:β]"`
+    /// (aliases `heavy_ball`, `polyak`), `"nesterov[:β]"` (alias `nag`),
+    /// `"adam[:β₁[:β₂[:ε]]]"`. Omitted parameters take the conventional
+    /// defaults ([`DEFAULT_BETA`], [`DEFAULT_ADAM_BETA2`],
+    /// [`DEFAULT_ADAM_EPS`]). Case-insensitive, whitespace-trimmed.
+    pub fn parse(spec: &str) -> Result<Self, SchemeError> {
+        let s = spec.trim().to_ascii_lowercase();
+        let mut it = s.split(':');
+        let family = it.next().unwrap_or("");
+        let params: Vec<&str> = it.collect();
+        let num = |p: &str| -> Result<f64, SchemeError> {
+            p.trim()
+                .parse::<f64>()
+                .map_err(|_| bad(format!("bad parameter '{p}' in optimizer spec '{spec}'")))
+        };
+        let beta_ok = |b: f64| b.is_finite() && (0.0..1.0).contains(&b);
+        match family {
+            "gd" | "sgd" => {
+                if !params.is_empty() {
+                    return Err(bad(format!("optimizer 'gd' takes no parameters, got '{spec}'")));
+                }
+                Ok(OptimizerSpec::Gd)
+            }
+            "momentum" | "heavy_ball" | "heavyball" | "polyak" | "nesterov" | "nag" => {
+                if params.len() > 1 {
+                    return Err(bad(format!(
+                        "momentum optimizers take at most one ':<beta>' parameter, got '{spec}'"
+                    )));
+                }
+                let beta = params.first().map(|p| num(p)).transpose()?.unwrap_or(DEFAULT_BETA);
+                if !beta_ok(beta) {
+                    return Err(bad(format!("momentum beta must be in [0, 1), got {beta}")));
+                }
+                if matches!(family, "nesterov" | "nag") {
+                    Ok(OptimizerSpec::Nesterov { beta })
+                } else {
+                    Ok(OptimizerSpec::Momentum { beta })
+                }
+            }
+            "adam" => {
+                if params.len() > 3 {
+                    return Err(bad(format!(
+                        "adam takes at most ':<beta1>:<beta2>:<eps>', got '{spec}'"
+                    )));
+                }
+                let beta1 = params.first().map(|p| num(p)).transpose()?.unwrap_or(DEFAULT_BETA);
+                let beta2 =
+                    params.get(1).map(|p| num(p)).transpose()?.unwrap_or(DEFAULT_ADAM_BETA2);
+                let eps = params.get(2).map(|p| num(p)).transpose()?.unwrap_or(DEFAULT_ADAM_EPS);
+                if !beta_ok(beta1) || !beta_ok(beta2) {
+                    return Err(bad(format!("adam betas must be in [0, 1), got '{spec}'")));
+                }
+                if !(eps.is_finite() && eps > 0.0) {
+                    return Err(bad(format!("adam eps must be finite and > 0, got '{spec}'")));
+                }
+                Ok(OptimizerSpec::Adam { beta1, beta2, eps })
+            }
+            _ => Err(bad(format!(
+                "unknown optimizer '{spec}' (known: gd, momentum[:beta], nesterov[:beta], adam[:b1[:b2[:eps]]])"
+            ))),
+        }
+    }
+
+    /// Canonical spec string, re-parseable by [`OptimizerSpec::parse`],
+    /// with default parameters elided (`"momentum"` not `"momentum:0.9"`)
+    /// so spelling variants share one cell identity.
+    pub fn canon(&self) -> String {
+        match *self {
+            OptimizerSpec::Gd => "gd".into(),
+            OptimizerSpec::Momentum { beta } => {
+                if beta == DEFAULT_BETA {
+                    "momentum".into()
+                } else {
+                    format!("momentum:{beta}")
+                }
+            }
+            OptimizerSpec::Nesterov { beta } => {
+                if beta == DEFAULT_BETA {
+                    "nesterov".into()
+                } else {
+                    format!("nesterov:{beta}")
+                }
+            }
+            OptimizerSpec::Adam { beta1, beta2, eps } => {
+                let with_eps = eps != DEFAULT_ADAM_EPS;
+                let with_b2 = with_eps || beta2 != DEFAULT_ADAM_BETA2;
+                let with_b1 = with_b2 || beta1 != DEFAULT_BETA;
+                let mut s = String::from("adam");
+                if with_b1 {
+                    s.push_str(&format!(":{beta1}"));
+                }
+                if with_b2 {
+                    s.push_str(&format!(":{beta2}"));
+                }
+                if with_eps {
+                    s.push_str(&format!(":{eps}"));
+                }
+                s
+            }
+        }
+    }
+
+    /// Instantiate the matching [`Optimizer`] implementation.
+    pub fn build(&self) -> Box<dyn Optimizer> {
+        match *self {
+            OptimizerSpec::Gd => Box::new(Gd),
+            OptimizerSpec::Momentum { beta } => Box::new(Momentum { beta }),
+            OptimizerSpec::Nesterov { beta } => Box::new(Nesterov { beta }),
+            OptimizerSpec::Adam { beta1, beta2, eps } => Box::new(Adam { beta1, beta2, eps }),
+        }
+    }
+}
+
+impl Default for OptimizerSpec {
+    fn default() -> Self {
+        OptimizerSpec::Gd
+    }
+}
+
+// --------------------------------------------------------- the step view --
+
+/// Everything an [`Optimizer`] sees for one iteration: the resolved
+/// rounding sites, the effective stepsize, the iterate and gradient, the
+/// optimizer's state tensors, the engine's scratch buffers and the
+/// per-site RNG streams. Built by [`crate::gd::GdEngine::step`]; the
+/// borrows are disjoint fields of the engine.
+///
+/// Site resolution (engine-side): `mul` is the run plan with the (8b)
+/// scheme; `sub` is the `weights` binding when the policy has one, else
+/// the run plan with the (8c) scheme; `m_site`/`v_site` are the `m`/`v`
+/// bindings, defaulting to the run plan with the (8b) scheme (state
+/// accumulation is stepsize-multiplication-shaped arithmetic).
+pub struct StepCtx<'a> {
+    /// The (8b) update-staging site (run grid + `mul` scheme).
+    pub mul: Site<'a>,
+    /// The (8c) iterate-landing site (`weights` binding or run grid +
+    /// `sub` scheme).
+    pub sub: Site<'a>,
+    /// Rounding site of the first-moment / momentum state tensor `m`.
+    pub m_site: Site<'a>,
+    /// Rounding site of the second-moment state tensor `v`.
+    pub v_site: Site<'a>,
+    /// Effective stepsize `t_k` (base stepsize through the LR schedule).
+    pub t: f64,
+    /// 0-based iteration index (drives Adam's bias correction).
+    pub k: u64,
+    /// The iterate x̂ (updated in place).
+    pub x: &'a mut [f64],
+    /// The low-precision gradient ĝ of step (8a).
+    pub ghat: &'a [f64],
+    /// State tensors in [`Optimizer::state_names`] order.
+    pub state: &'a mut [Vec<f64>],
+    /// Scratch: staged update values.
+    pub mbuf: &'a mut [f64],
+    /// Scratch: steering vector −ĝ for steered schemes.
+    pub vneg: &'a mut [f64],
+    /// Scratch: landing point x̂ − u.
+    pub zbuf: &'a mut [f64],
+    /// δ₂ stream of the (8b) site.
+    pub rng_mul: &'a mut Rng,
+    /// δ₃ stream of the (8c) site.
+    pub rng_sub: &'a mut Rng,
+    /// Stream of the `m` state site (fork `"opt_m"`; untouched by plain GD).
+    pub rng_m: &'a mut Rng,
+    /// Stream of the `v` state site (fork `"opt_v"`; untouched by plain GD).
+    pub rng_v: &'a mut Rng,
+    /// Run-wide numeric-health counters; every rounding site classifies
+    /// into it, so optimizer-state stalls/saturations surface in
+    /// [`crate::gd::Trace::health`] like the (8b)/(8c) sites always have.
+    pub health: &'a mut RunHealth,
+}
+
+/// One optimizer update law, driven by [`crate::gd::GdEngine::step`].
+///
+/// # Contract
+///
+/// * [`Optimizer::apply_step`] must round every value it commits (iterate
+///   and state tensors) through the sites in the [`StepCtx`], draw
+///   randomness only from the matching streams, and return whether the
+///   iterate moved.
+/// * State tensors are enumerated by [`Optimizer::state_names`] with
+///   stable names — the names [`crate::gd::PolicyMap`] bindings and
+///   [`crate::gd::GdEngine::state_tensor`] resolve.
+/// * Implementations must not consume randomness for deterministic
+///   schemes (the kernels guarantee this; the conformance suite checks).
+pub trait Optimizer {
+    /// The value-level spec this optimizer was built from.
+    fn spec(&self) -> OptimizerSpec;
+
+    /// Canonical spec string (see [`OptimizerSpec::canon`]).
+    fn name(&self) -> String {
+        self.spec().canon()
+    }
+
+    /// Stable names of the state tensors, in `init_state` order.
+    fn state_names(&self) -> &'static [&'static str] {
+        self.spec().state_names()
+    }
+
+    /// Allocate the zero-initialized state tensors for dimension `dim`.
+    fn init_state(&self, dim: usize) -> Vec<Vec<f64>> {
+        self.state_names().iter().map(|_| vec![0.0; dim]).collect()
+    }
+
+    /// Apply one update to `ctx.x` (and the state tensors). Returns `true`
+    /// when any coordinate of the iterate moved.
+    fn apply_step(&self, ctx: StepCtx<'_>) -> bool;
+}
+
+// ------------------------------------------------------- implementations --
+
+/// Plain gradient descent — eq. (8) exactly, via the same fused kernel
+/// call (and the same RNG streams) as the pre-trait engine.
+pub struct Gd;
+
+impl Optimizer for Gd {
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::Gd
+    }
+
+    fn apply_step(&self, ctx: StepCtx<'_>) -> bool {
+        kernels::gd_update_split_health(
+            ctx.mul, ctx.sub, ctx.t, ctx.x, ctx.ghat, ctx.mbuf, ctx.vneg, ctx.zbuf,
+            ctx.rng_mul, ctx.rng_sub, ctx.health,
+        )
+    }
+}
+
+/// Heavy-ball momentum. The buffer update `m⁺ = fl(β·m + t·ĝ)` rounds at
+/// the `m` state site (steering −ĝ, the descent choice of §4.2.2); the
+/// iterate lands through the (8c)/`weights` site.
+pub struct Momentum {
+    /// Momentum coefficient β.
+    pub beta: f64,
+}
+
+impl Optimizer for Momentum {
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::Momentum { beta: self.beta }
+    }
+
+    fn apply_step(&self, ctx: StepCtx<'_>) -> bool {
+        let m = &mut ctx.state[0];
+        kernels::momentum_update_health(
+            ctx.m_site, ctx.mul, ctx.sub, self.beta, false, ctx.t, ctx.x, ctx.ghat, m,
+            ctx.mbuf, ctx.vneg, ctx.zbuf, ctx.rng_m, ctx.rng_mul, ctx.rng_sub, ctx.health,
+        )
+    }
+}
+
+/// Nesterov momentum: same buffer update as [`Momentum`], plus the
+/// lookahead blend `u = fl(β·m⁺ + t·ĝ)` rounded at the (8b) site before
+/// the iterate lands.
+pub struct Nesterov {
+    /// Momentum coefficient β.
+    pub beta: f64,
+}
+
+impl Optimizer for Nesterov {
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::Nesterov { beta: self.beta }
+    }
+
+    fn apply_step(&self, ctx: StepCtx<'_>) -> bool {
+        let m = &mut ctx.state[0];
+        kernels::momentum_update_health(
+            ctx.m_site, ctx.mul, ctx.sub, self.beta, true, ctx.t, ctx.x, ctx.ghat, m,
+            ctx.mbuf, ctx.vneg, ctx.zbuf, ctx.rng_m, ctx.rng_mul, ctx.rng_sub, ctx.health,
+        )
+    }
+}
+
+/// Adam with bias correction. Moments round at their `m`/`v` state sites;
+/// the assembled update `u = fl(t·m̂/(√v̂ + ε))` rounds at the (8b) site
+/// and the iterate lands through the (8c)/`weights` site. Bias
+/// corrections are computed exactly in f64 (they are scalars, not tensor
+/// arithmetic).
+pub struct Adam {
+    /// First-moment coefficient β₁.
+    pub beta1: f64,
+    /// Second-moment coefficient β₂.
+    pub beta2: f64,
+    /// Denominator offset ε.
+    pub eps: f64,
+}
+
+impl Optimizer for Adam {
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::Adam { beta1: self.beta1, beta2: self.beta2, eps: self.eps }
+    }
+
+    fn apply_step(&self, ctx: StepCtx<'_>) -> bool {
+        let (m, rest) = ctx.state.split_first_mut().expect("adam carries m and v");
+        let v = &mut rest[0];
+        let step1 = (ctx.k + 1).min(i32::MAX as u64) as i32;
+        let params = AdamParams {
+            beta1: self.beta1,
+            beta2: self.beta2,
+            eps: self.eps,
+            bc1: 1.0 - self.beta1.powi(step1),
+            bc2: 1.0 - self.beta2.powi(step1),
+        };
+        kernels::adam_update_health(
+            ctx.m_site, ctx.v_site, ctx.mul, ctx.sub, &params, ctx.t, ctx.x, ctx.ghat, m, v,
+            ctx.mbuf, ctx.vneg, ctx.zbuf, ctx.rng_m, ctx.rng_v, ctx.rng_mul, ctx.rng_sub,
+            ctx.health,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimizer_specs_parse_and_canonicalize() {
+        for (spec, want) in [
+            ("gd", OptimizerSpec::Gd),
+            ("SGD", OptimizerSpec::Gd),
+            ("momentum", OptimizerSpec::Momentum { beta: DEFAULT_BETA }),
+            ("Momentum:0.9", OptimizerSpec::Momentum { beta: 0.9 }),
+            ("heavy_ball:0.8", OptimizerSpec::Momentum { beta: 0.8 }),
+            ("nesterov", OptimizerSpec::Nesterov { beta: DEFAULT_BETA }),
+            ("nag:0.95", OptimizerSpec::Nesterov { beta: 0.95 }),
+            (
+                "adam",
+                OptimizerSpec::Adam {
+                    beta1: DEFAULT_BETA,
+                    beta2: DEFAULT_ADAM_BETA2,
+                    eps: DEFAULT_ADAM_EPS,
+                },
+            ),
+            (
+                " ADAM:0.9:0.999:0.00000001 ",
+                OptimizerSpec::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            ),
+            (
+                "adam:0.8:0.99",
+                OptimizerSpec::Adam { beta1: 0.8, beta2: 0.99, eps: DEFAULT_ADAM_EPS },
+            ),
+        ] {
+            let got = OptimizerSpec::parse(spec).unwrap();
+            assert_eq!(got, want, "{spec}");
+            // Canon round-trips and is idempotent.
+            let canon = got.canon();
+            assert_eq!(OptimizerSpec::parse(&canon).unwrap(), got, "{spec} -> {canon}");
+            assert_eq!(OptimizerSpec::parse(&canon).unwrap().canon(), canon);
+        }
+        // Spelling variants of the defaults coalesce to one canonical form.
+        assert_eq!(OptimizerSpec::parse("momentum:0.9").unwrap().canon(), "momentum");
+        assert_eq!(OptimizerSpec::parse("ADAM:0.9:0.999").unwrap().canon(), "adam");
+        assert_eq!(OptimizerSpec::parse("adam:0.9:0.999:0.00000001").unwrap().canon(), "adam");
+    }
+
+    #[test]
+    fn optimizer_spec_errors_are_descriptive() {
+        for spec in ["bogus", "momentum:1.5", "momentum:x", "adam:0.9:0.999:0", "gd:0.1", "momentum:0.1:0.2"] {
+            let err = OptimizerSpec::parse(spec).unwrap_err();
+            assert!(matches!(err, SchemeError::BadSpec(_)), "{spec}: {err:?}");
+        }
+        let msg = OptimizerSpec::parse("bogus").unwrap_err().to_string();
+        assert!(msg.contains("bogus") && msg.contains("momentum"), "{msg}");
+    }
+
+    #[test]
+    fn state_names_are_stable() {
+        assert_eq!(OptimizerSpec::Gd.state_names(), &[] as &[&str]);
+        assert_eq!(OptimizerSpec::Momentum { beta: 0.9 }.state_names(), &["m"]);
+        assert_eq!(OptimizerSpec::Nesterov { beta: 0.9 }.state_names(), &["m"]);
+        assert_eq!(
+            OptimizerSpec::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }.state_names(),
+            &["m", "v"]
+        );
+        // The built optimizers agree with their specs, and init_state
+        // allocates one zeroed tensor per name.
+        for spec in [
+            OptimizerSpec::Gd,
+            OptimizerSpec::Momentum { beta: 0.9 },
+            OptimizerSpec::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        ] {
+            let opt = spec.build();
+            assert_eq!(opt.spec(), spec);
+            assert_eq!(opt.state_names(), spec.state_names());
+            let state = opt.init_state(7);
+            assert_eq!(state.len(), spec.state_names().len());
+            assert!(state.iter().all(|t| t.len() == 7 && t.iter().all(|&x| x == 0.0)));
+        }
+    }
+
+    #[test]
+    fn lr_schedules_parse_evaluate_and_canonicalize() {
+        assert_eq!(LrSchedule::parse("const").unwrap(), LrSchedule::Constant);
+        assert_eq!(LrSchedule::parse("NONE").unwrap(), LrSchedule::Constant);
+        assert_eq!(LrSchedule::parse("inv:0.5").unwrap(), LrSchedule::InvTime { rate: 0.5 });
+        assert_eq!(
+            LrSchedule::parse("step:0.5:10").unwrap(),
+            LrSchedule::Step { gamma: 0.5, period: 10 }
+        );
+        for bad in ["inv", "step:0.5", "step:2.0:10", "step:0.5:0", "warmup:3"] {
+            assert!(LrSchedule::parse(bad).is_err(), "{bad}");
+        }
+        // Constant returns the base bit-identically.
+        let t = 0.1f64;
+        assert_eq!(LrSchedule::Constant.at(t, 12).to_bits(), t.to_bits());
+        // Inverse-time halves at k = 1/rate; staircase steps at the period.
+        let inv = LrSchedule::InvTime { rate: 0.5 };
+        assert!((inv.at(1.0, 2) - 0.5).abs() < 1e-15);
+        let st = LrSchedule::Step { gamma: 0.5, period: 10 };
+        assert_eq!(st.at(1.0, 9), 1.0);
+        assert_eq!(st.at(1.0, 10), 0.5);
+        assert_eq!(st.at(1.0, 25), 0.25);
+        for s in [LrSchedule::Constant, inv, st] {
+            assert_eq!(LrSchedule::parse(&s.canon()).unwrap(), s);
+        }
+    }
+}

@@ -12,8 +12,10 @@
 //!   [`fp::scheme::RoundingScheme`] trait and [`fp::scheme::SchemeRegistry`]
 //!   for registering new schemes (see `docs/api.md`);
 //! * [`gd`] — the three-step GD iteration (8a)/(8b)/(8c) with per-tensor
-//!   rounding control ([`gd::SchemePolicy`]), the [`gd::RunBuilder`] front
-//!   door, stagnation analysis (τ_k) and the paper's convergence bounds;
+//!   rounding control ([`gd::PolicyMap`]), the optimizer zoo
+//!   ([`gd::Optimizer`]: plain GD, momentum, Nesterov, Adam with LR-decay
+//!   schedules), the [`gd::RunBuilder`] front door, stagnation analysis
+//!   (τ_k) and the paper's convergence bounds;
 //! * [`problems`] — quadratics (Settings I/II), multinomial logistic
 //!   regression and a two-layer NN;
 //! * [`data`] — dataset substrate (procedural digits + IDX loader);

@@ -36,6 +36,11 @@
 //!     --t 0.5 --epochs 50 --seed 0
 //!     --scheme sr_eps:0.2    any registered scheme, all three steps
 //!     --s8a sr --s8b sr --s8c signed:0.1   per-step overrides
+//!     --policy policy:weights=sr_eps:0.4@bf16,m=rn@fp32   the full
+//!                    per-tensor policy grammar (conflicts with --scheme
+//!                    and the --s8* overrides)
+//!     --optimizer gd | momentum:0.9 | nesterov:0.9 | adam:0.9:0.999:1e-8
+//!     --lr-decay const | inv:0.1 | step:0.5:100
 //!     --sr-bits N    few-random-bits knob for the stochastic kernels
 //! lpgd round <value> [opts]             inspect rounding of one value
 //!     --fmt binary8 --mode sr_eps:0.25 --samples 10000
@@ -62,7 +67,7 @@ use lpgd::fp::{
     set_backend, Grid, NumberGrid, Rng, RoundPlan, Scheme, SchemeRegistry, SimdChoice,
     DEFAULT_SR_BITS,
 };
-use lpgd::gd::{RunBuilder, SchemePolicy};
+use lpgd::gd::{GdConfig, PolicyMap, RunBuilder};
 use lpgd::problems::{Mlr, TwoLayerNn};
 use lpgd::registry::ResultStore;
 use lpgd::serve::{Catalog, ExperimentService, Server};
@@ -191,6 +196,8 @@ fn print_help() {
     println!("                              caching: --registry D serves already-computed cells and writes");
     println!("                              fresh ones back (shared with `lpgd serve`; docs/service.md)");
     println!("  train <mlr|nn> [opts]       one training run (--backend/--fmt, --t, --epochs, --seed, --scheme, --s8a/--s8b/--s8c, --sr-bits)");
+    println!("                              optimizer zoo: --optimizer gd|momentum:b|nesterov:b|adam:b1:b2:eps,");
+    println!("                              --lr-decay const|inv:r|step:g:p, --policy policy:weights=rn@binary64,m=sr@bf16");
     println!("  round <value> [opts]        inspect rounding of one value (--fmt, --mode, --samples, --seed)");
     println!("  goldens <extract|check>     golden-figure harness (--dir, --report, --require, --stream-change)");
     println!("  pjrt-info [--artifacts D]   PJRT platform + artifact check");
@@ -262,17 +269,33 @@ fn run() -> Result<()> {
             let mut known = CTX_OPTS.to_vec();
             known.extend([
                 "backend", "fmt", "t", "epochs", "seed", "scheme", "s8a", "s8b", "s8c", "sr-bits",
+                "policy", "optimizer", "lr-decay",
             ]);
             reject_unknown(&a, &known)?;
             let which = a.positional.get(1).map(|s| s.as_str()).unwrap_or("mlr");
             let ctx = ctx_from_args(&a)?;
-            // --scheme sets all three steps; --s8a/--s8b/--s8c override.
-            let base = scheme_arg(&a, "scheme", Scheme::sr())?;
-            let policy = SchemePolicy {
-                grad: scheme_arg(&a, "s8a", base)?,
-                mul: scheme_arg(&a, "s8b", base)?,
-                sub: scheme_arg(&a, "s8c", base)?,
+            // --policy is the whole per-tensor grammar; otherwise --scheme
+            // sets all three steps and --s8a/--s8b/--s8c override.
+            let policy = match a.get("policy") {
+                Some(spec) => {
+                    for k in ["scheme", "s8a", "s8b", "s8c"] {
+                        if a.get(k).is_some() {
+                            bail!("--policy sets the whole rounding policy; it conflicts with --{k}");
+                        }
+                    }
+                    PolicyMap::parse(spec)?
+                }
+                None => {
+                    let base = scheme_arg(&a, "scheme", Scheme::sr())?;
+                    PolicyMap::sites(
+                        scheme_arg(&a, "s8a", base)?,
+                        scheme_arg(&a, "s8b", base)?,
+                        scheme_arg(&a, "s8c", base)?,
+                    )
+                }
             };
+            let optimizer = a.get("optimizer").unwrap_or("gd");
+            let lr_decay = a.get("lr-decay").unwrap_or("const");
             // --backend is the grid spec (float name or fixed:Qm.n);
             // --fmt is the legacy spelling, kept as an alias.
             let fmt = a.get("backend").or_else(|| a.get("fmt")).unwrap_or("binary8");
@@ -293,6 +316,8 @@ fn run() -> Result<()> {
                     let mut session = RunBuilder::new(&p)
                         .format_name(fmt)
                         .policy(policy)
+                        .optimizer_name(optimizer)
+                        .lr_name(lr_decay)
                         .stepsize(t_step)
                         .steps(epochs)
                         .seed(seed)
@@ -300,7 +325,7 @@ fn run() -> Result<()> {
                         .build()?;
                     let metric = |x: &[f64]| p.test_error(x, &splits.test);
                     let tr = session.run(Some(&metric));
-                    print_training("MLR", session.config().grid, &policy, t_step, &tr.metric_series());
+                    print_training("MLR", session.config(), &tr.metric_series());
                 }
                 "nn" => {
                     let splits = load_or_synth(
@@ -319,6 +344,8 @@ fn run() -> Result<()> {
                     let mut session = RunBuilder::new(&p)
                         .format_name(fmt)
                         .policy(policy)
+                        .optimizer_name(optimizer)
+                        .lr_name(lr_decay)
                         .stepsize(t_step)
                         .steps(epochs)
                         .seed(seed)
@@ -327,13 +354,7 @@ fn run() -> Result<()> {
                         .build()?;
                     let metric = |x: &[f64]| p.test_error(x, &test);
                     let tr = session.run(Some(&metric));
-                    print_training(
-                        "NN(3v8)",
-                        session.config().grid,
-                        &policy,
-                        t_step,
-                        &tr.metric_series(),
-                    );
+                    print_training("NN(3v8)", session.config(), &tr.metric_series());
                 }
                 other => bail!("unknown model '{other}' (mlr|nn)"),
             }
@@ -439,11 +460,14 @@ fn run() -> Result<()> {
     Ok(())
 }
 
-fn print_training(name: &str, grid: Grid, policy: &SchemePolicy, t: f64, err: &[f64]) {
+fn print_training(name: &str, cfg: &GdConfig, err: &[f64]) {
     println!(
-        "{name} backend={} {} t={t}: final test error {:.4}",
-        grid.label(),
-        policy.label(),
+        "{name} backend={} {} opt={} lr={} t={}: final test error {:.4}",
+        cfg.grid.label(),
+        cfg.schemes.label(),
+        cfg.optimizer.canon(),
+        cfg.lr.canon(),
+        cfg.t,
         err.last().unwrap_or(&f64::NAN)
     );
     println!("test-error curve: {}", sparkline(err, 60));

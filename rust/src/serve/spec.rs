@@ -4,11 +4,17 @@
 //!
 //! * **builder-shaped cells** — a `"problem"` object plus the
 //!   [`crate::gd::RunBuilder`] knobs (`grid`, `scheme`, `stepsize`,
-//!   `steps`, `seed`, `sr_bits`, `reps`). Each repetition is one
-//!   content-addressed cell: the key is derived from a *canonical spec
-//!   string* (resolved scheme labels, normalized grid spelling, stepsize
-//!   as raw bits), so equivalent spellings of the same run — `"SR"` vs
-//!   `"sr"`, `"fixed:Q3.8"` vs `"q3.8"` — share registry entries.
+//!   `steps`, `seed`, `sr_bits`, `reps`, and the optimizer-zoo knobs
+//!   `optimizer`, `lr` and `policy` — the [`PolicyMap`] spec language,
+//!   mutually exclusive with the per-site `*_scheme` fields). Each
+//!   repetition is one content-addressed cell: the key is derived from a
+//!   *canonical spec string* (resolved scheme labels, normalized grid
+//!   spelling, stepsize as raw bits, optimizer/policy/LR specs
+//!   re-canonicalized with defaults elided), so equivalent spellings of
+//!   the same run — `"SR"` vs `"sr"`, `"fixed:Q3.8"` vs `"q3.8"`,
+//!   `"ADAM"` vs `"adam:0.9:0.999:0.00000001"` — share registry entries,
+//!   and a spec that leaves the optimizer at plain GD keys exactly as it
+//!   did before the optimizer surface existed.
 //! * **whole experiments** — an `"experiment"` id plus the `ExpCtx` knobs
 //!   the CLI exposes. The service threads its registry into the context,
 //!   so experiment cells share the store with `reproduce --registry`.
@@ -19,8 +25,9 @@
 use crate::coordinator::experiments::ExpCtx;
 use crate::coordinator::registry as experiments;
 use crate::fp::{Grid, SchemeRegistry};
+use crate::gd::optimizer::{LrSchedule, OptimizerSpec};
 use crate::gd::trace::Trace;
-use crate::gd::RunBuilder;
+use crate::gd::{PolicyMap, RunBuilder};
 use crate::problems::Quadratic;
 use crate::registry::{CellRecord, Provenance};
 use crate::util::hash::{cell_stream, fnv1a, registry_key, Fnv1a};
@@ -88,6 +95,9 @@ pub struct CellSpec {
     mul: String,
     sub: String,
     scheme_label: String,
+    policy: Option<PolicyMap>,
+    optimizer: OptimizerSpec,
+    lr: LrSchedule,
     stepsize: f64,
     steps: usize,
     seed: u64,
@@ -123,13 +133,16 @@ impl CellSpec {
         let (p, x0, _) = self.problem.build();
         let mut b = RunBuilder::new(&p)
             .format_name(&self.grid)
-            .grad_scheme(&self.grad)
-            .mul_scheme(&self.mul)
-            .sub_scheme(&self.sub)
+            .optimizer(self.optimizer)
+            .lr(self.lr)
             .stepsize(self.stepsize)
             .steps(self.steps)
             .seed(self.seed.wrapping_add(rep))
             .start(&x0);
+        b = match self.policy {
+            Some(pol) => b.policy(pol),
+            None => b.grad_scheme(&self.grad).mul_scheme(&self.mul).sub_scheme(&self.sub),
+        };
         if self.sr_bits != 0 {
             b = b.sr_bits(self.sr_bits);
         }
@@ -162,7 +175,7 @@ impl CellSpec {
             "spec",
             &[
                 "problem", "grid", "scheme", "grad_scheme", "mul_scheme", "sub_scheme",
-                "stepsize", "steps", "seed", "sr_bits", "reps",
+                "policy", "optimizer", "lr", "stepsize", "steps", "seed", "sr_bits", "reps",
             ],
         )?;
         let p = v.get("problem").expect("dispatched on 'problem' by RunSpec::parse");
@@ -193,6 +206,19 @@ impl CellSpec {
             }
         };
 
+        // The whole-policy spec and the per-site scheme fields are two
+        // spellings of the same surface; accepting both in one request
+        // would make the canonical identity ambiguous.
+        let policy_raw = opt_str(v, "policy")?;
+        if policy_raw.is_some() {
+            for k in ["scheme", "grad_scheme", "mul_scheme", "sub_scheme"] {
+                if v.get(k).is_some() {
+                    return Err(format!(
+                        "'policy' sets the whole rounding policy; it conflicts with '{k}'"
+                    ));
+                }
+            }
+        }
         let scheme = opt_str(v, "scheme")?.unwrap_or_else(|| "sr".to_string());
         let grad = opt_str(v, "grad_scheme")?.unwrap_or_else(|| scheme.clone());
         let mul = opt_str(v, "mul_scheme")?.unwrap_or_else(|| scheme.clone());
@@ -200,11 +226,28 @@ impl CellSpec {
         let label = |spec: &str| -> Result<String, String> {
             SchemeRegistry::lookup(spec).map(|s| s.label()).map_err(|e| e.to_string())
         };
-        let (grad_l, mul_l, sub_l) = (label(&grad)?, label(&mul)?, label(&sub)?);
+        let policy = match &policy_raw {
+            Some(s) => Some(PolicyMap::parse(s).map_err(|e| e.to_string())?),
+            None => None,
+        };
+        // Site labels come from the policy when one is given, so
+        // {"scheme":"sr"} and {"policy":"sr"} canonicalize identically.
+        let (grad_l, mul_l, sub_l) = match policy {
+            Some(pol) => (pol.grad.label(), pol.mul.label(), pol.sub.label()),
+            None => (label(&grad)?, label(&mul)?, label(&sub)?),
+        };
         let scheme_label = if grad_l == mul_l && mul_l == sub_l {
             grad_l.clone()
         } else {
             format!("{grad_l}/{mul_l}/{sub_l}")
+        };
+        let optimizer = match opt_str(v, "optimizer")? {
+            Some(s) => OptimizerSpec::parse(&s).map_err(|e| e.to_string())?,
+            None => OptimizerSpec::Gd,
+        };
+        let lr = match opt_str(v, "lr")? {
+            Some(s) => LrSchedule::parse(&s).map_err(|e| e.to_string())?,
+            None => LrSchedule::Constant,
         };
 
         let stepsize = req_f64(v, "stepsize")?;
@@ -218,8 +261,10 @@ impl CellSpec {
 
         // The canonical string is the cache identity: resolved labels and
         // raw stepsize bits, so float formatting and spelling never split
-        // or alias entries.
-        let canon = format!(
+        // or alias entries. The optimizer-zoo fragments are appended only
+        // when they deviate from the plain-GD defaults, so every pre-zoo
+        // spec keeps the digest it had before the surface existed.
+        let mut canon = format!(
             "problem={};grid={};grad={};mul={};sub={};t={:016x};steps={};seed={};sr_bits={}",
             problem.canon(),
             grid,
@@ -231,6 +276,21 @@ impl CellSpec {
             seed,
             sr_bits
         );
+        if !optimizer.is_gd() {
+            canon.push_str(&format!(";opt={}", optimizer.canon()));
+        }
+        if !lr.is_constant() {
+            canon.push_str(&format!(";lr={}", lr.canon()));
+        }
+        if let Some(pol) = policy {
+            if pol.has_bindings() {
+                let toks: Vec<String> = [("w", pol.weights), ("m", pol.m), ("v", pol.v)]
+                    .iter()
+                    .filter_map(|(name, b)| b.map(|b| format!("{name}={}", b.canon_token())))
+                    .collect();
+                canon.push_str(&format!(";bind={}", toks.join(",")));
+            }
+        }
         let digest = fnv1a(canon.as_bytes());
         Ok(CellSpec {
             problem,
@@ -239,6 +299,9 @@ impl CellSpec {
             mul,
             sub,
             scheme_label,
+            policy,
+            optimizer,
+            lr,
             stepsize,
             steps,
             seed,
@@ -484,6 +547,87 @@ mod tests {
         );
         assert_ne!(a.digest(), c.digest());
         assert_ne!(a.plan()[0].key, c.plan()[0].key);
+    }
+
+    /// Optimizer / policy / LR spellings canonicalize before FNV-1a
+    /// keying: every variant of the same run coalesces to one registry
+    /// record, explicit defaults elide entirely, and plain-GD specs keep
+    /// the digest they had before the optimizer surface existed.
+    #[test]
+    fn optimizer_and_policy_spellings_coalesce() {
+        let with = |extra: &str| {
+            cells(&format!(
+                r#"{{"problem":{{"kind":"quadratic1","dim":16}},"grid":"bfloat16",
+                    "stepsize":0.05,"steps":20{extra}}}"#
+            ))
+        };
+        let base = cells(MINIMAL);
+        // Explicit plain-GD defaults are elided from the canonical string.
+        let explicit = with(r#","optimizer":"gd","lr":"const""#);
+        assert_eq!(base.digest(), explicit.digest());
+        assert_eq!(base.plan(), explicit.plan());
+        // {"policy":"SR"} is the default {"scheme":"sr"} run, spelled big.
+        assert_eq!(base.digest(), with(r#","policy":"SR""#).digest());
+        // Adam spelled four ways: case, full and partial explicit defaults,
+        // momentum-family aliases — one record each way.
+        let a = with(r#","optimizer":"ADAM""#);
+        assert_eq!(a.digest(), with(r#","optimizer":"adam:0.9:0.999:0.00000001""#).digest());
+        assert_eq!(a.digest(), with(r#","optimizer":"adam:0.9""#).digest());
+        assert_eq!(a.plan(), with(r#","optimizer":"adam""#).plan());
+        assert_ne!(a.digest(), base.digest());
+        assert_ne!(a.digest(), with(r#","optimizer":"adam:0.8""#).digest());
+        let m = with(r#","optimizer":"momentum:0.90""#);
+        assert_eq!(m.digest(), with(r#","optimizer":"heavy_ball:0.9""#).digest());
+        assert_ne!(m.digest(), a.digest());
+        // LR schedules key canonically too, and non-defaults split.
+        let lr = with(r#","lr":"inv:0.01""#);
+        assert_eq!(lr.digest(), with(r#","lr":"inv_time:0.01""#).digest());
+        assert_ne!(lr.digest(), base.digest());
+        // Policy bindings: grid aliases, case and sr-site default elision
+        // normalize into one identity; a different binding splits.
+        let b1 = with(r#","policy":"policy:grad=sr,mul=sr,sub=sr,weights=rn@binary64""#);
+        let b2 = with(r#","policy":"policy:w=RN@FP64""#);
+        assert_eq!(b1.digest(), b2.digest());
+        assert_eq!(b1.plan(), b2.plan());
+        assert_ne!(b1.digest(), base.digest());
+        assert_ne!(b1.digest(), with(r#","policy":"policy:m=rn@fp64""#).digest());
+        // The whole-policy field refuses to mix with per-site fields.
+        let e = parse(
+            r#"{"problem":{"kind":"quadratic1","dim":16},"grid":"bfloat16",
+                "stepsize":0.05,"steps":20,"policy":"sr","scheme":"rn"}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("conflicts with 'scheme'"), "{e}");
+        // Malformed optimizer specs read back as complete sentences.
+        let e = parse(
+            r#"{"problem":{"kind":"quadratic1","dim":16},"grid":"bfloat16",
+                "stepsize":0.05,"steps":20,"optimizer":"adamw"}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("adamw"), "{e}");
+    }
+
+    /// A stateful-optimizer cell computes through the same RunBuilder
+    /// surface the public API exposes, bit for bit.
+    #[test]
+    fn optimizer_cells_compute_matches_run_builder() {
+        let spec = cells(
+            r#"{"problem":{"kind":"quadratic1","dim":8},"grid":"bfloat16",
+                "stepsize":0.05,"steps":12,"seed":3,
+                "optimizer":"momentum:0.9","policy":"policy:w=rn@binary64"}"#,
+        );
+        let (p, x0, _) = Quadratic::setting1(8);
+        let mut direct = RunBuilder::new(&p)
+            .format_name("bfloat16")
+            .optimizer_name("momentum:0.9")
+            .policy_spec("policy:w=rn@binary64")
+            .stepsize(0.05)
+            .steps(12)
+            .seed(3)
+            .start(&x0)
+            .build()
+            .unwrap();
+        assert_eq!(spec.compute(0).objective_series(), direct.run(None).objective_series());
     }
 
     #[test]

@@ -3,8 +3,8 @@
 
 use lpgd::coordinator::experiments::{run_experiment, ExpCtx};
 use lpgd::data::load_or_synth;
-use lpgd::fp::{FpFormat, Rounding};
-use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::fp::{FpFormat, Rounding, Scheme};
+use lpgd::gd::engine::{GdConfig, GdEngine, PolicyMap};
 use lpgd::problems::{Mlr, Problem, Quadratic};
 
 fn quick_ctx(tag: &str) -> ExpCtx {
@@ -22,8 +22,9 @@ fn all_experiments_run_and_write_csvs() {
     let tables = run_experiment("all", &ctx).expect("pipeline failed");
     assert_eq!(
         tables.len(),
-        16,
-        "12 paper artifacts + the fig4a-acc ablation + the plfp1-3 fixed-point family"
+        19,
+        "12 paper artifacts + the fig4a-acc ablation + the plfp1-3 fixed-point family \
+         + the opt1-3 optimizer-zoo family"
     );
     for t in &tables {
         let p = std::path::Path::new(&ctx.out_dir).join(format!("{}.csv", t.id));
@@ -37,10 +38,12 @@ fn all_experiments_run_and_write_csvs() {
 /// `--jobs 8`, for the quadratic (expectation over seeds) and learning
 /// (flattened config × seed grid) fan-out paths — and for the fixed-point
 /// `plfp1` family (the PR-4 acceptance criterion:
-/// `lpgd reproduce plfp1 --jobs 8` ≡ `--jobs 1`).
+/// `lpgd reproduce plfp1 --jobs 8` ≡ `--jobs 1`) — and for the
+/// optimizer-zoo family `opt1`–`opt3` (stateful optimizers and per-tensor
+/// policy bindings must not perturb the scheduler's determinism).
 #[test]
 fn experiments_are_bit_identical_across_job_counts() {
-    for id in ["fig3a", "fig4b", "plfp1", "plfp3"] {
+    for id in ["fig3a", "fig4b", "plfp1", "plfp3", "opt1", "opt2", "opt3"] {
         let mut c1 = quick_ctx(&format!("{id}_jobs1"));
         c1.jobs = 1;
         let mut c8 = quick_ctx(&format!("{id}_jobs8"));
@@ -63,8 +66,7 @@ fn engine_is_deterministic_per_seed() {
     let (p, x0, _) = Quadratic::setting1(50);
     let t = 0.3;
     let mk = |seed| {
-        let mut cfg =
-            GdConfig::new(FpFormat::BFLOAT16, StepSchemes::uniform(Rounding::Sr), t, 40);
+        let mut cfg = GdConfig::new(FpFormat::BFLOAT16, Rounding::Sr, t, 40);
         cfg.seed = seed;
         let mut e = GdEngine::new(cfg, &p, &x0);
         let tr = e.run(None);
@@ -89,7 +91,7 @@ fn paper_shape_claims_hold_end_to_end() {
     let x0 = vec![0.0; mlr.dim()];
     let epochs = 15;
 
-    let run = |schemes: StepSchemes, fmt: FpFormat, seed: u64| -> Vec<f64> {
+    let run = |schemes: PolicyMap, fmt: FpFormat, seed: u64| -> Vec<f64> {
         let mut cfg = GdConfig::new(fmt, schemes, 0.5, epochs);
         cfg.seed = seed;
         let mut e = GdEngine::new(cfg, &mlr, &x0);
@@ -97,16 +99,12 @@ fn paper_shape_claims_hold_end_to_end() {
         e.run(Some(&metric)).metric_series()
     };
 
-    let sr = Rounding::Sr;
-    let baseline = run(StepSchemes::uniform(Rounding::RoundNearestEven), FpFormat::BINARY32, 0);
-    let rn8 = run(
-        StepSchemes { grad: Rounding::RoundNearestEven, mul: Rounding::RoundNearestEven, sub: sr },
-        FpFormat::BINARY8,
-        0,
-    );
-    let sr8 = run(StepSchemes::uniform(sr), FpFormat::BINARY8, 1);
+    let sr = Scheme::sr();
+    let baseline = run(PolicyMap::uniform(Scheme::rn()), FpFormat::BINARY32, 0);
+    let rn8 = run(PolicyMap::sites(Scheme::rn(), Scheme::rn(), sr), FpFormat::BINARY8, 0);
+    let sr8 = run(PolicyMap::uniform(sr), FpFormat::BINARY8, 1);
     let sg8 = run(
-        StepSchemes { grad: sr, mul: sr, sub: Rounding::SignedSrEps(0.1) },
+        PolicyMap::sites(sr, sr, Scheme::signed_sr_eps(0.1)),
         FpFormat::BINARY8,
         1,
     );
@@ -133,7 +131,7 @@ fn tau_threshold_is_necessary_and_sufficient_on_fig2() {
     use lpgd::gd::stagnation::tau_k;
     let p = Quadratic::diagonal(vec![2.0], vec![1024.0]);
     let fmt = FpFormat::BINARY8;
-    let mut cfg = GdConfig::new(fmt, StepSchemes::uniform(Rounding::RoundNearestEven), 0.05, 1);
+    let mut cfg = GdConfig::new(fmt, Rounding::RoundNearestEven, 0.05, 1);
     cfg.seed = 0;
     let mut e = GdEngine::new(cfg, &p, &[1.0]);
     for _ in 0..40 {

@@ -509,7 +509,7 @@ fn prop_nan_propagates_through_every_registered_scheme() {
 fn prop_gd_iterate_always_in_format() {
     // Random diagonal quadratics, random schemes: the engine's iterate is
     // exactly representable after every step.
-    use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+    use lpgd::gd::engine::{GdConfig, GdEngine};
     use lpgd::problems::Quadratic;
     let mut rng = Rng::new(15);
     for trial in 0..12 {
@@ -520,7 +520,7 @@ fn prop_gd_iterate_always_in_format() {
         let p = Quadratic::diagonal(diag, xstar);
         let mode = MODES[trial % MODES.len()];
         let fmt = FORMATS[trial % 3];
-        let mut cfg = GdConfig::new(fmt, StepSchemes::uniform(mode), 0.05, 25);
+        let mut cfg = GdConfig::new(fmt, mode, 0.05, 25);
         cfg.seed = trial as u64;
         let mut e = GdEngine::new(cfg, &p, &x0);
         for _ in 0..25 {

@@ -18,7 +18,8 @@ use lpgd::fp::{
     FixedPoint, FpFormat, Grid, NumberGrid, Rng, RoundPlan, Rounding, RoundingScheme, Scheme,
     SchemeRegistry,
 };
-use lpgd::gd::engine::{GdConfig, GdEngine, StepSchemes};
+use lpgd::gd::engine::{GdConfig, GdEngine, PolicyMap, TensorPolicy};
+use lpgd::gd::optimizer::OptimizerSpec;
 use lpgd::gd::RunBuilder;
 use lpgd::problems::Quadratic;
 
@@ -330,14 +331,14 @@ fn run_health_saturations_match_the_exhaustive_q23_oracle() {
 // ------------------------------------- bit-equality vs the pre-redesign --
 
 /// The registry + `RunBuilder` path produces bit-identical GD trajectories
-/// to the legacy enum path (`Rounding::parse` + `StepSchemes` +
-/// `GdConfig::new`) for every built-in scheme.
+/// to the legacy enum path (`Rounding::parse` + `From<Rounding> for
+/// PolicyMap` + `GdConfig::new`) for every built-in scheme.
 #[test]
 fn builder_trajectories_bit_identical_to_enum_path() {
     let p = Quadratic::diagonal(vec![1.0], vec![100.0]);
     for spec in builtin_specs() {
         let mode = Rounding::parse(spec).unwrap();
-        let mut cfg = GdConfig::new(B8, StepSchemes::uniform(mode), 0.1, 60);
+        let mut cfg = GdConfig::new(B8, mode, 0.1, 60);
         cfg.seed = 3;
         let mut legacy = GdEngine::new(cfg, &p, &[1.0]);
         let legacy_series = legacy.run(None).objective_series();
@@ -395,6 +396,60 @@ fn custom_scheme_runs_gd_end_to_end() {
     };
     assert_eq!(run(4), run(4), "custom scheme must be a pure function of the stream");
     assert_ne!(run(4), run(5), "distinct seeds must decorrelate the custom law");
+}
+
+// --------------------------------------------- optimizer-state tensors --
+
+/// Optimizer-state conformance: every registered scheme — the built-ins at
+/// several parameterizations plus the in-test custom CoinFlip — drives the
+/// momentum and Adam state tensors on the bfloat16 and binary16 grids.
+/// The state must stay resident on its grid, be enumerable by stable name
+/// through [`GdEngine::state_names`] / [`GdEngine::state_tensor`], and a
+/// [`TensorPolicy`] binding must move it to the bound grid.
+#[test]
+fn every_scheme_rounds_optimizer_state_on_half_precision_grids() {
+    let p = Quadratic::diagonal(vec![1.0, 0.25], vec![6.0, -3.0]);
+    let opts =
+        [OptimizerSpec::Momentum { beta: 0.9 }, OptimizerSpec::Adam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }];
+    for fmt in [FpFormat::BFLOAT16, FpFormat::BINARY16] {
+        for scheme in all_schemes() {
+            for opt in opts {
+                let mut cfg = GdConfig::new(fmt, PolicyMap::uniform(scheme), 0.1, 30);
+                cfg.seed = 11;
+                cfg.optimizer = opt;
+                let mut e = GdEngine::new(cfg, &p, &[0.5, 0.5]);
+                let tr = e.run(None);
+                assert!(tr.final_f().is_finite(), "{} {opt:?} on {fmt:?}", scheme.name());
+                assert_eq!(e.state_names(), opt.state_names(), "{}", scheme.name());
+                for name in opt.state_names() {
+                    let s = e.state_tensor(name).expect("named state tensor must resolve");
+                    assert!(
+                        s.iter().all(|&v| fmt.contains(v)),
+                        "{}: state '{name}' left {fmt:?} under {opt:?}",
+                        scheme.name()
+                    );
+                }
+                assert!(e.state_tensor("nope").is_none());
+                assert!(e.health.nan_inf == 0, "{}: state produced non-finites", scheme.name());
+            }
+        }
+    }
+    // A state binding moves the tensor to the bound grid: `m` accumulates
+    // on binary32 while the iterate stays bfloat16-resident.
+    let pol = PolicyMap::uniform(Scheme::sr())
+        .with_m(TensorPolicy::new(Scheme::rn()).on(FpFormat::BINARY32));
+    let mut cfg = GdConfig::new(FpFormat::BFLOAT16, pol, 0.1, 30);
+    cfg.seed = 4;
+    cfg.optimizer = OptimizerSpec::Momentum { beta: 0.9 };
+    let mut e = GdEngine::new(cfg, &p, &[0.5, 0.5]);
+    e.run(None);
+    assert!(e.x.iter().all(|&v| FpFormat::BFLOAT16.contains(v)), "iterate left bfloat16");
+    let m = e.state_tensor("m").expect("momentum buffer");
+    assert!(m.iter().all(|&v| FpFormat::BINARY32.contains(v)), "bound m left binary32");
 }
 
 /// `Rounding::parse` (the deprecated shim) reports registered customs with

@@ -14,7 +14,7 @@ cd "$(dirname "$0")/.."
 
 benches=("$@")
 if [ ${#benches[@]} -eq 0 ]; then
-    benches=(rounding gd_step sweep serve)
+    benches=(rounding gd_step opt_step sweep serve)
 fi
 
 # Staleness guard: checked-in artifacts carrying the literal SEED ESTIMATE
